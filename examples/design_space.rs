@@ -1,0 +1,112 @@
+//! Design-space explorer (paper §III-C / Fig 6 interactive companion):
+//! sweep NBW × precision × batch and report cycle counts, the optimal NBW
+//! per (precision, batch) point, the C-SRAM fit constraint
+//! (bit_width_max = ⌊R/2^NBW⌋), and the offline-LUT model-size tradeoff.
+//!
+//! Run: `cargo run --release --example design_space [--model 7b] [--threads 16]`
+
+use sail::csram::lut::Lut;
+use sail::csram::CSramGeometry;
+use sail::lutgemv::GemvCycleModel;
+use sail::model::ModelConfig;
+use sail::quant::QuantLevel;
+use sail::sim::SailPerfModel;
+use sail::util::cli::Args;
+use sail::util::table::{commas, f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args::parse(std::env::args().skip(1));
+    let model_name = args.opt_str("model", "7b");
+    let threads: u32 = args.opt("threads", 16);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let geom = CSramGeometry::default();
+    println!("C-SRAM geometry: {}x{} bits; capacity rule bit_width_max = ⌊R/2^NBW⌋:", geom.rows, geom.cols);
+    for nbw in 1..=5u32 {
+        println!(
+            "  NBW={nbw}: max weight precision {} bits  (LUT entries: {})",
+            geom.max_bit_width(nbw),
+            1u64 << nbw
+        );
+    }
+
+    // --- per-tile cycle sweep (Fig 6's quantities) -----------------------
+    println!();
+    let batches = [1usize, 2, 4, 8, 16, 24, 32];
+    for level in [QuantLevel::Q2, QuantLevel::Q4, QuantLevel::Q8] {
+        let mut t = Table::new(
+            &format!("{level}: tile cycles per batch item (1024x1024 GEMV)"),
+            &["NBW", "b=1", "b=2", "b=4", "b=8", "b=16", "b=24", "b=32", "fits?"],
+        );
+        for nbw in 1..=4u32 {
+            let m = GemvCycleModel::prototype(level, nbw);
+            let mut row = vec![format!("{nbw}")];
+            for &b in &batches {
+                row.push(commas(m.cycles_per_item(1024, 1024, b) as u64));
+            }
+            let fits = geom.lut_fits(nbw, level.bits(), 24);
+            row.push(if fits { "yes".into() } else { "NO".into() });
+            t.row(&row);
+        }
+        t.print();
+        // Optimal NBW per batch point.
+        let best: Vec<String> = batches
+            .iter()
+            .map(|&b| {
+                let (nbw, _) = (1..=4u32)
+                    .map(|n| (n, GemvCycleModel::prototype(level, n).cycles_per_item(1024, 1024, b)))
+                    .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                    .unwrap();
+                format!("b{b}→NBW{nbw}")
+            })
+            .collect();
+        println!("optimal: {}\n", best.join("  "));
+    }
+
+    // --- offline vs online LUT construction (§III-C) ----------------------
+    println!("== Offline-LUT model-size expansion (paper: up to 3.75x at Q4/NBW=4) ==");
+    for (level, nbw) in [(QuantLevel::Q4, 4u32), (QuantLevel::Q2, 2), (QuantLevel::Q8, 4)] {
+        let entry_bits = Lut::entry_bits(level.bits(), nbw) as f64;
+        let stored_bits = (1u64 << nbw) as f64 * entry_bits / nbw as f64; // per weight
+        let expansion = stored_bits / level.bits() as f64;
+        println!(
+            "  {level} NBW={nbw}: {:.2} bits/weight stored offline vs {} quantized → {:.2}x model size",
+            stored_bits,
+            level.bits(),
+            expansion
+        );
+    }
+
+    // --- end-to-end view: which (NBW) wins for a full model ---------------
+    let model = match model_name.as_str() {
+        "13b" => ModelConfig::llama2_13b(),
+        "248m" => ModelConfig::tinymistral_248m(),
+        _ => ModelConfig::llama2_7b(),
+    };
+    println!("\n== End-to-end tokens/s for {} at {threads} threads ==", model.name);
+    let mut t = Table::new("model-level NBW choice", &["quant", "NBW=2", "NBW=3", "NBW=4", "best"]);
+    for level in QuantLevel::ALL {
+        let mut rates = Vec::new();
+        for nbw in [2u32, 3, 4] {
+            let mut s = SailPerfModel::paper_config(level, threads);
+            s.nbw = nbw;
+            rates.push(s.tokens_per_sec(&model, 8));
+        }
+        let best = [2u32, 3, 4][rates
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        t.row(&[
+            level.to_string(),
+            f(rates[0], 1),
+            f(rates[1], 1),
+            f(rates[2], 1),
+            format!("NBW={best}"),
+        ]);
+    }
+    t.print();
+    println!("\n(batch 8; SAIL jointly optimizes NBW × bit-width × batch — §III-C)");
+    Ok(())
+}

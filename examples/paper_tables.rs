@@ -1,0 +1,35 @@
+//! Regenerate every paper table/figure in one run (the bench targets print
+//! the same tables individually; this binary is the one-shot version used
+//! to populate EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+fn main() {
+    sail::report::fig1_lut_vs_bitserial().print();
+    println!();
+    for t in sail::report::fig6_design_space() {
+        t.print();
+        println!();
+    }
+    sail::report::fig9_quant_speedup().print();
+    println!();
+    sail::report::fig10_batch_platforms().print();
+    println!();
+    sail::report::fig11_latest_cpus().print();
+    println!();
+    sail::report::fig12_breakdown().print();
+    println!();
+    for t in sail::report::fig13_tokens_per_dollar() {
+        t.print();
+        println!();
+    }
+    for t in sail::report::table2_cpu_throughput() {
+        t.print();
+        println!();
+    }
+    sail::report::table3_gpu_comparison().print();
+    println!();
+    sail::report::table4_costs().print();
+    println!();
+    sail::report::table5_overhead().print();
+}

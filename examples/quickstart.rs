@@ -1,0 +1,91 @@
+//! Quickstart: the three-layer stack in one file.
+//!
+//! 1. Quantize a weight matrix (Q4, group-32) and an activation vector.
+//! 2. Run the Rust LUT-GEMV engine and check it against the naive
+//!    reference — the paper's core algorithm, exactly.
+//! 3. Emit the `lutmm_1k` instruction stream the coordinator would issue.
+//! 4. Estimate C-SRAM cycles for the tile and convert to time at 3 GHz.
+//! 5. If `artifacts/` is built, execute the same GEMV through the
+//!    AOT-compiled Pallas kernel on PJRT and compare.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sail::isa::{emit_gemv, TILE_DIM};
+use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
+use sail::lutgemv::GemvCycleModel;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let mut prng = Prng::new(7);
+    let (k, n) = (TILE_DIM, TILE_DIM);
+
+    // -- 1. quantize ------------------------------------------------------
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, QuantLevel::Q4, 32);
+    let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+    let qx = QuantizedVector::quantize(&x);
+    println!(
+        "quantized [{k}x{n}] to Q4: {} KB ({}x smaller than f32)",
+        wt.nbytes() / 1024,
+        (n * k * 4) / wt.nbytes()
+    );
+
+    // -- 2. LUT-GEMV vs naive reference ------------------------------------
+    let eng = LutGemvEngine::new(wt, 4);
+    let (out, stats) = eng.gemv_batch(std::slice::from_ref(&qx));
+    let want = reference_gemv(eng.weights(), &qx);
+    assert_eq!(out[0], want, "LUT-GEMV must be bit-exact vs reference");
+    println!(
+        "LUT-GEMV exact ✓  ({} LUTs built, {} lookups; y[0..4] = {:?})",
+        stats.luts_built,
+        stats.lut_reads,
+        &out[0][..4]
+    );
+
+    // -- 3. the ISA view ----------------------------------------------------
+    let insts = emit_gemv(n, QuantLevel::Q4, 1, 2, 3)?;
+    for i in &insts {
+        println!("emit: {i}   (word = {:#010x})", i.encode());
+    }
+
+    // -- 4. cycle estimate --------------------------------------------------
+    let model = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+    for batch in [1usize, 8] {
+        let c = model.tile(k, n, batch);
+        println!(
+            "tile cycles @batch={batch}: build={} stream={} typeconv={} total={} ({:.1} µs @3GHz)",
+            c.build,
+            c.stream,
+            c.typeconv,
+            c.total(),
+            c.total() as f64 / 3e3
+        );
+    }
+
+    // -- 5. cross-check against the compiled Pallas kernel ------------------
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("gemv_q4_1k.hlo.txt").exists() {
+        println!("\nloading AOT artifact …");
+        let client = xla::PjRtClient::cpu()?;
+        let tile = sail::runtime::GemvTile::load(&client, dir)?;
+        let w_codes: Vec<i8> = (0..n)
+            .flat_map(|r| (0..k).map(move |c| (r, c)))
+            .map(|(r, c)| eng.weights().q(r, c) as i8)
+            .collect();
+        let w_scales: Vec<f32> = (0..n)
+            .flat_map(|r| (0..k / 32).map(move |g| (r, g)))
+            .map(|(r, g)| eng.weights().scale(r, g * 32))
+            .collect();
+        let pjrt = tile.run(&qx.q, &w_codes, &w_scales, qx.scale)?;
+        let max_rel = out[0]
+            .iter()
+            .zip(&pjrt)
+            .map(|(a, b)| ((a - b).abs() / a.abs().max(1e-3)) as f64)
+            .fold(0.0, f64::max);
+        println!("compiled Pallas kernel agrees to {max_rel:.2e} ✓");
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` to include the PJRT check)");
+    }
+    Ok(())
+}

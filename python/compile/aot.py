@@ -1,0 +1,151 @@
+"""AOT compilation: lower the L2/L1 stack to HLO text artifacts.
+
+Emits (under --out-dir, default ../artifacts):
+  model.hlo.txt        decode step, batch 4   (the Makefile's anchor target)
+  decode_b1.hlo.txt    decode step, batch 1
+  gemv_q4_1k.hlo.txt   standalone [1,1024]×[1024,1024] Q4 LUT-GEMV tile —
+                       the lutmm_1k instruction's computation
+  typeconv_n16.hlo.txt standalone Algorithm-1 int16→f32 conversion kernel
+  weights.bin          flattened weight arrays (runtime inputs)
+  manifest.json        argument order/shapes/dtypes + model config
+
+Interchange format is HLO **text** (see /opt/xla-example/README.md): jax
+≥ 0.5 serialized protos use 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids.  Lowering goes through
+stablehlo → XlaComputation with return_tuple=True; the Rust side unwraps
+with to_tuple().
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.lut_gemv import lut_gemv
+from .kernels.typeconv import int_to_f32_bits
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+DTYPE_CODES = {"float32": 0, "int8": 1, "int32": 2, "uint32": 3}
+
+
+def write_weights_bin(path, arrays, names):
+    """Simple container: header count, then per array: name, dtype code,
+    rank, dims, raw little-endian bytes."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<I", len(arrays)))
+        for a, name in zip(arrays, names):
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", DTYPE_CODES[str(a.dtype)]))
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(a).tobytes())
+
+
+def lower_decode(cfg: M.TinyConfig, batch: int, arrays):
+    fn = M.make_decode_fn(cfg)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(M.kv_shape(cfg, batch), jnp.float32)
+    wspecs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    return fn.lower(tok, pos, kv, *wspecs)
+
+
+def lower_gemv_tile():
+    """The lutmm_1k tile: [1,1024]×[1024,1024] at Q4, NBW=4."""
+    x = jax.ShapeDtypeStruct((1, 1024), jnp.int8)
+    w = jax.ShapeDtypeStruct((1024, 1024), jnp.int8)
+    ws = jax.ShapeDtypeStruct((1024, 32), jnp.float32)
+    xs = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return jax.jit(
+        lambda xc_, wc, wsc, xsc: lut_gemv(xc_, wc, wsc, xsc)
+    ).lower(x, w, ws, xs)
+
+
+def lower_typeconv():
+    a = jax.ShapeDtypeStruct((1024,), jnp.int32)
+    return jax.jit(lambda v: int_to_f32_bits(v, nbits=16)).lower(a)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="path for model.hlo.txt")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or (
+        os.path.dirname(args.out) if args.out else "../artifacts"
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.TinyConfig()
+    weights = M.init_weights(cfg, seed=args.seed)
+    arrays, names = M.flatten_weights(weights)
+
+    emitted = {}
+
+    def emit(name, lowered):
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        emitted[name] = len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    emit("model.hlo.txt", lower_decode(cfg, args.batch, arrays))
+    emit("decode_b1.hlo.txt", lower_decode(cfg, 1, arrays))
+    emit("gemv_q4_1k.hlo.txt", lower_gemv_tile())
+    emit("typeconv_n16.hlo.txt", lower_typeconv())
+
+    write_weights_bin(os.path.join(out_dir, "weights.bin"), arrays, names)
+    manifest = {
+        "config": {
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "ffn": cfg.ffn,
+            "vocab": cfg.vocab,
+            "max_context": cfg.max_context,
+            "wbits": cfg.wbits,
+            "group": cfg.group,
+            "params": cfg.params(),
+        },
+        "batch": args.batch,
+        "seed": args.seed,
+        "weight_order": names,
+        "weights": [
+            {"name": n, "dtype": str(a.dtype), "shape": list(a.shape)}
+            for a, n in zip(arrays, names)
+        ],
+        "artifacts": emitted,
+        "decode_args": ["token_ids[i32,B]", "pos[i32,B]", "kv[f32,L×2×B×CTX×H]"]
+        + names,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json and weights.bin "
+          f"({sum(a.nbytes for a in arrays)} weight bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Layer-1 Pallas kernel: LUT-based GEMV (paper Fig 2 / §II-C).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the C-SRAM's bitline
+LUT becomes a `[2^NBW, tile]` tensor of subset sums living in VMEM; the
+bit-serial activation scan becomes a static loop over the 8 activation
+bit-planes, each plane indexing the LUT via a one-hot matmul (the TPU-
+friendly form of a gather) and shift-adding into an integer accumulator.
+The BlockSpec grid tiles N (outputs) and K (reduction) so the LUT for each
+weight block fits on-chip, mirroring how the address hasher pins each
+weight shard next to its C-SRAM.
+
+Semantics (must match `rust/src/lutgemv/engine.rs` and `ref.py`):
+  out[b, n] = sum_g  w_scale[n, g] * x_scale[b] *
+              sum_{k in group g} w_codes[n, k] * x_codes[b, k]
+
+The integer accumulators are exact (int32); only the final per-group
+float reduction introduces rounding.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same kernel runs
+inside the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default paper configuration.
+NBW = 4
+GROUP = 32
+ACT_BITS = 8
+
+
+def _subset_matrix(nbw: int) -> jnp.ndarray:
+    """[2^nbw, nbw] binary matrix: row p selects the basis weights of
+    pattern p.  Bit (nbw-1-j) of p selects basis weight j — the Fig 2
+    convention where the first activation of a chunk is the pattern MSB."""
+    p = jnp.arange(1 << nbw, dtype=jnp.int32)[:, None]
+    j = jnp.arange(nbw, dtype=jnp.int32)[None, :]
+    return ((p >> (nbw - 1 - j)) & 1).astype(jnp.int32)
+
+
+def _plane_weights(act_bits: int) -> jnp.ndarray:
+    """Per-bit-plane weights for two's-complement activations:
+    +2^b for b < act_bits-1, −2^(act_bits-1) for the sign plane."""
+    b = jnp.arange(act_bits, dtype=jnp.int32)
+    w = jnp.left_shift(jnp.int32(1), b)
+    return jnp.where(b == act_bits - 1, -w, w)
+
+
+def _lut_gemv_kernel(x_ref, w_ref, ws_ref, xs_ref, o_ref, *, nbw, group, act_bits):
+    """One (n-tile, k-tile) grid step.
+
+    x_ref:  [B, TK]  int8   activation codes
+    w_ref:  [TN, TK] int8   weight codes
+    ws_ref: [TN, TK//group] f32 weight scales
+    xs_ref: [B, 1]   f32    activation scales
+    o_ref:  [B, TN]  f32    output (accumulated across k-tiles)
+    """
+    kt = pl.program_id(1)
+
+    x = x_ref[...].astype(jnp.int32)  # [B, TK]
+    w = w_ref[...].astype(jnp.int32)  # [TN, TK]
+    b, tk = x.shape
+    tn = w.shape[0]
+    chunks = tk // nbw
+    gchunks = group // nbw  # chunks per scale group
+
+    # --- LUT construction (the C-SRAM build phase) ---------------------
+    # basis: [TN, chunks, nbw]; LUT: [TN, chunks, 2^nbw] subset sums.
+    basis = w.reshape(tn, chunks, nbw)
+    subsets = _subset_matrix(nbw)  # [P, nbw]
+    lut = jnp.einsum("pj,ncj->ncp", subsets, basis)  # int32
+
+    # --- bit-serial pattern extraction (the DFM broadcast) -------------
+    # pattern[b, plane, c] = sum_j bit_plane(x[c*nbw+j]) << (nbw-1-j)
+    xc = x.reshape(b, chunks, nbw)
+    planes = jnp.arange(act_bits, dtype=jnp.int32)
+    bits = (xc[:, None, :, :] >> planes[None, :, None, None]) & 1  # [B,P,C,nbw]
+    shifts = (nbw - 1 - jnp.arange(nbw, dtype=jnp.int32))[None, None, None, :]
+    patterns = jnp.sum(bits << shifts, axis=3)  # [B, planes, C]
+
+    # --- LUT lookup via pattern-collapsed counts (the streaming phase) --
+    # Identical planes index the same LUT entry, so the shift-add over
+    # planes collapses to one weighted count per pattern value:
+    #   Σ_p ±2^p · LUT[pattern_p]  =  Σ_q count_q · LUT[q],
+    #   count_q = Σ_p ±2^p · [pattern_p == q].
+    # This is the kernel-level form of §III-D's pattern reuse (the DFM
+    # adder tree merging repeated patterns), and it shrinks the LUT
+    # contraction by the act_bits/2^nbw ratio — §Perf: 2.7× on this path.
+    pw = _plane_weights(act_bits)  # [planes]
+    qvals = jnp.arange(1 << nbw, dtype=jnp.int32)
+    onehot = patterns[None, :, :, :] == qvals[:, None, None, None]  # [P,B,planes,C]
+    counts = jnp.sum(jnp.where(onehot, pw[None, None, :, None], 0), axis=2)  # [P,B,C]
+    acc_chunks = jnp.einsum("qbc,ncq->bcn", counts, lut)  # [B, C, TN] int32, exact
+
+    # --- per-scale-group reduction + dequantization (CPU vector stage) --
+    acc_groups = acc_chunks.reshape(b, chunks // gchunks, gchunks, tn).sum(axis=2)
+    ws = ws_ref[...].astype(jnp.float32)  # [TN, G_tile]
+    partial = jnp.einsum("bgn,ng->bn", acc_groups.astype(jnp.float32), ws)
+    partial = partial * xs_ref[...]  # [B, TN] × [B, 1]
+
+    @pl.when(kt == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nbw", "group", "act_bits", "tile_n", "tile_k"),
+)
+def lut_gemv(
+    x_codes,
+    w_codes,
+    w_scales,
+    x_scales,
+    *,
+    nbw: int = NBW,
+    group: int = GROUP,
+    act_bits: int = ACT_BITS,
+    tile_n: int = 128,
+    tile_k: int = 256,
+):
+    """Batched LUT-GEMV: returns f32 [B, N].
+
+    x_codes:  int8 [B, K]
+    w_codes:  int8 [N, K]
+    w_scales: f32  [N, K//group]
+    x_scales: f32  [B]
+    """
+    b, k = x_codes.shape
+    n, k2 = w_codes.shape
+    assert k == k2, (k, k2)
+    assert k % group == 0 and group % nbw == 0
+    tile_k = min(tile_k, k)
+    tile_n = min(tile_n, n)
+    assert k % tile_k == 0 and n % tile_n == 0
+    assert tile_k % group == 0
+    gpt = tile_k // group  # scale groups per k-tile
+
+    grid = (n // tile_n, k // tile_k)
+    return pl.pallas_call(
+        functools.partial(
+            _lut_gemv_kernel, nbw=nbw, group=group, act_bits=act_bits
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, tile_k), lambda nt, kt: (0, kt)),
+            pl.BlockSpec((tile_n, tile_k), lambda nt, kt: (nt, kt)),
+            pl.BlockSpec((tile_n, gpt), lambda nt, kt: (nt, kt)),
+            pl.BlockSpec((b, 1), lambda nt, kt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tile_n), lambda nt, kt: (0, nt)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x_codes, w_codes, w_scales, x_scales.reshape(b, 1))
+
+
+def lut_gemv_f32(
+    x,
+    w_codes,
+    w_scales,
+    *,
+    nbw: int = NBW,
+    group: int = GROUP,
+    **kw,
+):
+    """Float-in/float-out convenience wrapper: quantizes activations to
+    int8 on the fly (the CPU vector engine's job in SAIL) then runs the
+    LUT kernel.  x: f32 [B, K] → f32 [B, N]."""
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    x_scales = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    x_codes = jnp.clip(
+        jnp.round(x / x_scales[:, None]), -127, 127
+    ).astype(jnp.int8)
+    return lut_gemv(x_codes, w_codes, w_scales, x_scales, nbw=nbw, group=group, **kw)

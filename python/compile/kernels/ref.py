@@ -1,0 +1,76 @@
+"""Pure-jnp/numpy oracles for the LUT-GEMV kernel and quantization helpers.
+
+This module is the Python-side ground truth: the Pallas kernel
+(`lut_gemv.py`) must agree with `ref_gemv` to float tolerance, and the
+integer accumulators must agree exactly.  The quantization functions mirror
+`rust/src/quant/` (group-wise symmetric weights, per-vector int8
+activations) so the Rust engine, the Pallas kernel, and the AOT artifacts
+all describe the same computation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def quantize_weights(w: np.ndarray, bits: int, group: int):
+    """Group-wise symmetric quantization of a [N, K] weight matrix.
+
+    Groups run along K (the reduction axis).  Returns (codes int8 [N, K],
+    scales f32 [N, K//group]).  Mirrors `QuantizedMatrix::quantize`.
+    """
+    n, k = w.shape
+    assert k % group == 0, "group must divide K"
+    max_q = (1 << (bits - 1)) - 1
+    g = w.reshape(n, k // group, group)
+    amax = np.abs(g).max(axis=2)
+    scales = np.where(amax == 0.0, 1.0, amax / max_q).astype(np.float32)
+    codes = np.clip(
+        np.round(g / scales[:, :, None]), -max_q, max_q
+    ).astype(np.int8)
+    return codes.reshape(n, k), scales
+
+
+def quantize_acts(x: np.ndarray):
+    """Symmetric int8 activation quantization with one scale per vector.
+
+    x: [..., K] float; returns (codes int8 [..., K], scales f32 [...]).
+    Mirrors `QuantizedVector::quantize`.
+    """
+    amax = np.abs(x).max(axis=-1)
+    scales = np.where(amax == 0.0, 1.0, amax / 127.0).astype(np.float32)
+    codes = np.clip(
+        np.round(x / scales[..., None]), -127, 127
+    ).astype(np.int8)
+    return codes, scales
+
+
+def ref_gemv_int(w_codes: np.ndarray, x_codes: np.ndarray, group: int):
+    """Exact per-group integer accumulators.
+
+    w_codes: int8 [N, K]; x_codes: int8 [B, K].
+    Returns int32 [B, N, K//group] — the quantity the LUT path must
+    reproduce bit-exactly.
+    """
+    n, k = w_codes.shape
+    b = x_codes.shape[0]
+    wg = w_codes.astype(np.int32).reshape(n, k // group, group)
+    xg = x_codes.astype(np.int32).reshape(b, k // group, group)
+    return np.einsum("ngk,bgk->bng", wg, xg, dtype=np.int64).astype(np.int32)
+
+
+def ref_gemv(w_codes, w_scales, x_codes, x_scales, group: int):
+    """Dequantized GEMV: f32 [B, N] = sum_g acc[b,n,g]·w_scale[n,g]·x_scale[b]."""
+    acc = ref_gemv_int(w_codes, x_codes, group).astype(np.float64)
+    out = (acc * w_scales[None, :, :].astype(np.float64)).sum(axis=2)
+    return (out * x_scales[:, None].astype(np.float64)).astype(np.float32)
+
+
+def ref_int_to_f32_bits(a: np.ndarray, nbits: int) -> np.ndarray:
+    """IEEE-754 bit patterns of n-bit signed ints, the typeconv oracle."""
+    assert 2 <= nbits <= 25
+    lo, hi = -(1 << (nbits - 1)), (1 << (nbits - 1)) - 1
+    assert ((a >= lo) & (a <= hi)).all()
+    # The in-memory algorithm saturates the unrepresentable |INT_MIN|.
+    clipped = np.clip(a, lo + 1, hi)
+    return clipped.astype(np.float32).view(np.uint32)

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: in-memory type conversion (paper Algorithm 1).
+
+Converts n-bit signed integers to IEEE-754 f32 using only the logical
+operations the bitline SRAM offers — the same line-by-line structure as
+`rust/src/typeconv/`.  On TPU this is an elementwise VPU kernel; the
+bit-serial loops become static unrolled integer ops over a whole block of
+elements at once, which is exactly the "one wave converts a full row of
+elements" parallelism `typeconv::batch_cycles` models.
+
+The kernel returns the raw IEEE bit patterns as uint32 so tests can check
+bit-exactness (f32 equality would hide mantissa bugs in NaN/rounding
+corners).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _typeconv_kernel(a_ref, o_ref, *, nbits):
+    a = a_ref[...].astype(jnp.int32)
+
+    # Sign-magnitude fold (RCU pre-step). |INT_MIN| saturates.
+    sign = (a < 0).astype(jnp.uint32)
+    mag_max = (1 << (nbits - 1)) - 1
+    mag = jnp.clip(jnp.abs(a), 0, mag_max).astype(jnp.uint32)
+
+    # Lines 1–4: leading-one scan — C has ones from the leading 1 down.
+    c = jnp.zeros_like(mag)
+    d = jnp.zeros_like(mag)
+    for i in range(nbits - 2, -1, -1):
+        a_i = (mag >> i) & 1
+        d = d | a_i
+        c = c | (d << i)
+
+    # Lines 5–11: exponent = popcount(C) + 126 (0 handled by zero gate).
+    s = jnp.zeros_like(mag)
+    for i in range(nbits - 1):
+        s = s + ((c >> i) & 1)
+    exponent = s + 126
+
+    # Line 16–17: align mantissa — k leading zeros, multiply by 2^k.
+    # popcount(C) = p+1 where p is the leading-one position, so
+    # k = (nbits-2) - p = (nbits-1) - popcount(C).
+    k = (nbits - 1) - s
+    aligned = mag << k
+
+    # Lines 18–20: drop hidden one, left-justify into the 23-bit field.
+    frac = aligned & ((1 << (nbits - 2)) - 1) if nbits > 2 else jnp.zeros_like(mag)
+    shift = 23 - (nbits - 2)
+    mant = (frac << shift) if shift >= 0 else (frac >> (-shift))
+
+    r = (sign << 31) | (exponent << 23) | mant
+    # Zero gate (wired-NOR): all-zero magnitude → ±0.0.
+    r = jnp.where(mag == 0, sign << 31, r)
+    o_ref[...] = r
+
+
+@functools.partial(jax.jit, static_argnames=("nbits",))
+def int_to_f32_bits(a, *, nbits: int):
+    """Convert int32 values (representable in `nbits` bits) to IEEE-754
+    f32 bit patterns (uint32), via the in-memory algorithm."""
+    assert 2 <= nbits <= 25
+    return pl.pallas_call(
+        functools.partial(_typeconv_kernel, nbits=nbits),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.uint32),
+        interpret=True,
+    )(a)
+
+
+def int_to_f32(a, *, nbits: int):
+    """f32 view of the converted bits."""
+    return jax.lax.bitcast_convert_type(int_to_f32_bits(a, nbits=nbits), jnp.float32)

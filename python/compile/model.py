@@ -1,0 +1,291 @@
+"""Layer-2 JAX model: a quantized llama-style decoder whose projections run
+through the Layer-1 LUT-GEMV Pallas kernel.
+
+Architecture (matches `rust/src/model/ModelConfig::tiny_e2e` by default):
+RMSNorm → {Q,K,V} projections → RoPE → causal attention over a KV cache →
+O projection → RMSNorm → SwiGLU MLP, with a quantized LM head.  Every
+projection is a `lut_gemv_f32` call, so the whole decode step lowers into
+one HLO module with the LUT dataflow inlined — Python never runs at
+serving time.
+
+The decode step is purely functional: (token_ids, pos, kv_cache, *weights)
+→ (logits, new_kv_cache).  `flatten_weights` defines the argument order
+the Rust runtime must honour; `aot.py` writes that order into the
+artifact manifest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.lut_gemv import lut_gemv_f32
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Model hyperparameters (defaults = tiny_e2e, the E2E demo model)."""
+
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    ffn: int = 1024
+    vocab: int = 2048
+    max_context: int = 256
+    wbits: int = 4
+    group: int = 32
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def params(self) -> int:
+        per_layer = 4 * self.hidden * self.hidden + 3 * self.hidden * self.ffn
+        return self.layers * per_layer + 2 * self.vocab * self.hidden
+
+
+# Projection names, in argument order, per layer.
+LAYER_TENSORS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def init_weights(cfg: TinyConfig, seed: int = 0):
+    """Deterministic synthetic weights, quantized per `cfg`.
+
+    Returns a dict:
+      embed: f32 [vocab, hidden]
+      final_norm: f32 [hidden]
+      layers: list of dicts with per-tensor (codes int8 [N,K], scales f32),
+              plus attn_norm / mlp_norm f32 [hidden]
+      lm_head: (codes, scales)
+    """
+    rng = np.random.default_rng(seed)
+    h, f = cfg.hidden, cfg.ffn
+
+    def quant(shape_out, shape_in, std):
+        w = rng.normal(0.0, std, size=(shape_out, shape_in)).astype(np.float32)
+        return ref.quantize_weights(w, cfg.wbits, cfg.group)
+
+    std = 1.0 / np.sqrt(h)
+    layers = []
+    for _ in range(cfg.layers):
+        layers.append(
+            {
+                "wq": quant(h, h, std),
+                "wk": quant(h, h, std),
+                "wv": quant(h, h, std),
+                "wo": quant(h, h, std),
+                "w_gate": quant(f, h, std),
+                "w_up": quant(f, h, std),
+                "w_down": quant(h, f, 1.0 / np.sqrt(f)),
+                "attn_norm": np.ones(h, np.float32),
+                "mlp_norm": np.ones(h, np.float32),
+            }
+        )
+    return {
+        "embed": rng.normal(0.0, 1.0, size=(cfg.vocab, h)).astype(np.float32),
+        "final_norm": np.ones(h, np.float32),
+        "layers": layers,
+        "lm_head": quant(cfg.vocab, h, std),
+    }
+
+
+def flatten_weights(weights):
+    """Flatten to the canonical argument list (the runtime ABI).
+
+    Order: embed, final_norm, lm_head codes, lm_head scales, then per layer:
+    attn_norm, mlp_norm, then for each tensor in LAYER_TENSORS its codes
+    then scales.  Returns (arrays, names).
+    """
+    arrays, names = [], []
+
+    def push(name, a):
+        arrays.append(np.asarray(a))
+        names.append(name)
+
+    push("embed", weights["embed"])
+    push("final_norm", weights["final_norm"])
+    push("lm_head.codes", weights["lm_head"][0])
+    push("lm_head.scales", weights["lm_head"][1])
+    for i, layer in enumerate(weights["layers"]):
+        push(f"layers.{i}.attn_norm", layer["attn_norm"])
+        push(f"layers.{i}.mlp_norm", layer["mlp_norm"])
+        for t in LAYER_TENSORS:
+            push(f"layers.{i}.{t}.codes", layer[t][0])
+            push(f"layers.{i}.{t}.scales", layer[t][1])
+    return arrays, names
+
+
+def unflatten_weights(cfg: TinyConfig, arrays):
+    """Inverse of `flatten_weights` (used inside the jitted step)."""
+    it = iter(arrays)
+    w = {"embed": next(it), "final_norm": next(it)}
+    lm_codes, lm_scales = next(it), next(it)
+    w["lm_head"] = (lm_codes, lm_scales)
+    layers = []
+    for _ in range(cfg.layers):
+        layer = {"attn_norm": next(it), "mlp_norm": next(it)}
+        for t in LAYER_TENSORS:
+            c, s = next(it), next(it)
+            layer[t] = (c, s)
+        layers.append(layer)
+    w["layers"] = layers
+    return w
+
+
+def rms_norm(x, gamma, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def rope(x, pos, head_dim):
+    """Rotary position embedding with per-sequence positions.
+
+    x: [B, H, D]; pos: int32 [B] — each batch slot has its own position
+    (the coordinator runs iteration-level continuous batching, so slots
+    are at different depths of their sequences)."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angle = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [B, half]
+    cos = jnp.cos(angle)[:, None, :]  # [B, 1, half]
+    sin = jnp.sin(angle)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _proj(x, tensor, cfg: TinyConfig):
+    """One quantized projection through the Pallas LUT-GEMV kernel."""
+    codes, scales = tensor
+    return lut_gemv_f32(x, codes, scales, group=cfg.group)
+
+
+def decode_step(cfg: TinyConfig, token_ids, pos, kv_cache, *weight_arrays):
+    """One token-generation step for a batch of sequences.
+
+    token_ids: int32 [B]    — last generated token per sequence slot
+    pos:       int32 [B]    — per-slot position (continuous batching:
+                              slots sit at different sequence depths)
+    kv_cache:  f32 [L, 2, B, CTX, H] — running K/V cache
+    weight_arrays: flattened per `flatten_weights`
+
+    Returns (logits f32 [B, vocab], new_kv_cache).
+    """
+    w = unflatten_weights(cfg, weight_arrays)
+    b = token_ids.shape[0]
+    hd, nh = cfg.head_dim, cfg.heads
+
+    x = w["embed"][token_ids]  # [B, H]
+    new_kv = kv_cache
+    t = jnp.arange(cfg.max_context)
+    # Per-slot causal mask and write-position one-hot: [B, CTX].
+    live = t[None, :] <= pos[:, None]
+    at_pos = t[None, :] == pos[:, None]
+
+    for li, layer in enumerate(w["layers"]):
+        h_in = rms_norm(x, layer["attn_norm"])
+        q = _proj(h_in, layer["wq"], cfg).reshape(b, nh, hd)
+        k = _proj(h_in, layer["wk"], cfg).reshape(b, nh, hd)
+        v = _proj(h_in, layer["wv"], cfg).reshape(b, nh, hd)
+        q = rope(q, pos, hd)
+        k = rope(k, pos, hd)
+
+        # Write K/V at each slot's own position (masked blend — the
+        # vectorized form of per-slot dynamic_update_slice).
+        kf = k.reshape(b, nh * hd)
+        vf = v.reshape(b, nh * hd)
+        kc_old = new_kv[li, 0]  # [B, CTX, H]
+        vc_old = new_kv[li, 1]
+        kc = jnp.where(at_pos[:, :, None], kf[:, None, :], kc_old)
+        vc = jnp.where(at_pos[:, :, None], vf[:, None, :], vc_old)
+        new_kv = new_kv.at[li, 0].set(kc)
+        new_kv = new_kv.at[li, 1].set(vc)
+
+        # Attention over the cache (single query token per slot).
+        kch = kc.reshape(b, cfg.max_context, nh, hd)
+        vch = vc.reshape(b, cfg.max_context, nh, hd)
+        logits = jnp.einsum("bhd,bthd->bht", q, kch) / np.sqrt(hd)
+        logits = jnp.where(live[:, None, :], logits, -1e30)
+        attn = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bht,bthd->bhd", attn, vch).reshape(b, nh * hd)
+        x = x + _proj(ctx, layer["wo"], cfg)
+
+        # SwiGLU MLP.
+        h_mlp = rms_norm(x, layer["mlp_norm"])
+        gate = _proj(h_mlp, layer["w_gate"], cfg)
+        up = _proj(h_mlp, layer["w_up"], cfg)
+        x = x + _proj(jax.nn.silu(gate) * up, layer["w_down"], cfg)
+
+    x = rms_norm(x, w["final_norm"])
+    logits = _proj(x, w["lm_head"], cfg)
+    return logits, new_kv
+
+
+def make_decode_fn(cfg: TinyConfig):
+    """The jitted decode step with cfg baked in."""
+    return jax.jit(functools.partial(decode_step, cfg))
+
+
+def kv_shape(cfg: TinyConfig, batch: int):
+    return (cfg.layers, 2, batch, cfg.max_context, cfg.hidden)
+
+
+def reference_decode_step(cfg: TinyConfig, weights, token_ids, pos, kv_np):
+    """Numpy reference for the decode step, with projections done by
+    `ref.ref_gemv` (dequantize-exact) instead of the Pallas kernel — the
+    model-level oracle for pytest. `pos` is int [B] per slot."""
+    arrays, _ = flatten_weights(weights)
+
+    def proj_ref(x, tensor):
+        codes, scales = tensor
+        xc, xs = ref.quantize_acts(np.asarray(x))
+        return ref.ref_gemv(codes, scales, xc, xs, cfg.group)
+
+    w = unflatten_weights(cfg, arrays)
+    b = token_ids.shape[0]
+    pos = np.asarray(pos, np.int64)
+    hd, nh = cfg.head_dim, cfg.heads
+    x = w["embed"][token_ids]
+    kv = kv_np.copy()
+    live = np.arange(cfg.max_context)[None, :] <= pos[:, None]
+
+    def rms(x, g):
+        return x / np.sqrt((x**2).mean(-1, keepdims=True) + 1e-5) * g
+
+    def rope_np(x, pos):
+        half = hd // 2
+        freqs = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float32) / half))
+        ang = pos.astype(np.float32)[:, None] * freqs[None, :]  # [B, half]
+        c = np.cos(ang)[:, None, :]
+        s = np.sin(ang)[:, None, :]
+        x1, x2 = x[..., :half], x[..., half:]
+        return np.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+    for li, layer in enumerate(w["layers"]):
+        h_in = rms(x, layer["attn_norm"])
+        q = proj_ref(h_in, layer["wq"]).reshape(b, nh, hd)
+        k = proj_ref(h_in, layer["wk"]).reshape(b, nh, hd)
+        v = proj_ref(h_in, layer["wv"]).reshape(b, nh, hd)
+        q, k = rope_np(q, pos), rope_np(k, pos)
+        for bi in range(b):
+            kv[li, 0, bi, pos[bi], :] = k[bi].reshape(nh * hd)
+            kv[li, 1, bi, pos[bi], :] = v[bi].reshape(nh * hd)
+        kc = kv[li, 0].reshape(b, cfg.max_context, nh, hd)
+        vc = kv[li, 1].reshape(b, cfg.max_context, nh, hd)
+        logits = np.einsum("bhd,bthd->bht", q, kc) / np.sqrt(hd)
+        logits = np.where(live[:, None, :], logits, -1e30)
+        e = np.exp(logits - logits.max(-1, keepdims=True))
+        attn = e / e.sum(-1, keepdims=True)
+        ctx = np.einsum("bht,bthd->bhd", attn, vc).reshape(b, nh * hd)
+        x = x + proj_ref(ctx, layer["wo"])
+        h_mlp = rms(x, layer["mlp_norm"])
+        gate = proj_ref(h_mlp, layer["w_gate"])
+        up = proj_ref(h_mlp, layer["w_up"])
+        silu = gate / (1.0 + np.exp(-gate))
+        x = x + proj_ref(silu * up, layer["w_down"])
+
+    x = rms(x, w["final_norm"])
+    return proj_ref(x, w["lm_head"]), kv

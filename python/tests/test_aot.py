@@ -1,0 +1,85 @@
+"""AOT path: HLO text emission and the weights.bin container format."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile import model as M
+
+
+def test_gemv_tile_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_gemv_tile())
+    assert text.startswith("HloModule"), text[:80]
+    # The LUT dataflow must be present as real ops, not a custom-call
+    # (interpret=True lowers pallas to plain HLO).
+    assert "custom-call" not in text or "Sharding" in text
+    assert "f32[1,1024]" in text  # output shape
+
+
+def test_typeconv_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_typeconv())
+    assert text.startswith("HloModule")
+    assert "u32[1024]" in text
+
+
+def test_weights_bin_roundtrip(tmp_path):
+    cfg = M.TinyConfig(layers=1, hidden=64, heads=2, ffn=128, vocab=96,
+                       max_context=16)
+    weights = M.init_weights(cfg, seed=3)
+    arrays, names = M.flatten_weights(weights)
+    path = tmp_path / "w.bin"
+    aot.write_weights_bin(path, arrays, names)
+
+    # Independent reader (mirrors the Rust runtime's loader).
+    inv_dtype = {v: k for k, v in aot.DTYPE_CODES.items()}
+    with open(path, "rb") as f:
+        (count,) = struct.unpack("<I", f.read(4))
+        assert count == len(arrays)
+        for a, n in zip(arrays, names):
+            (nl,) = struct.unpack("<I", f.read(4))
+            assert f.read(nl).decode() == n
+            (dc,) = struct.unpack("<I", f.read(4))
+            assert inv_dtype[dc] == str(a.dtype)
+            (rank,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{rank}I", f.read(4 * rank))
+            assert list(dims) == list(a.shape)
+            raw = f.read(a.nbytes)
+            np.testing.assert_array_equal(
+                np.frombuffer(raw, a.dtype).reshape(a.shape), a
+            )
+        assert f.read() == b""
+
+
+def test_decode_lowering_small_config():
+    cfg = M.TinyConfig(layers=1, hidden=64, heads=2, ffn=128, vocab=96,
+                       max_context=16)
+    weights = M.init_weights(cfg, seed=0)
+    arrays, _ = M.flatten_weights(weights)
+    fn = M.make_decode_fn(cfg)
+    tok = jax.ShapeDtypeStruct((2,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((2,), jnp.int32)
+    kv = jax.ShapeDtypeStruct(M.kv_shape(cfg, 2), jnp.float32)
+    wspecs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]
+    text = aot.to_hlo_text(fn.lower(tok, pos, kv, *wspecs))
+    assert text.startswith("HloModule")
+    # Tuple of (logits, kv) as root.
+    assert "f32[2,96]" in text
+
+
+def test_manifest_exists_after_make_artifacts():
+    """If the repo's artifacts have been built, the manifest must be
+    self-consistent (argument order == weights.bin order)."""
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    if not os.path.exists(path):
+        import pytest
+
+        pytest.skip("artifacts not built yet")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["weight_order"] == [w["name"] for w in man["weights"]]
+    assert man["config"]["hidden"] == 256

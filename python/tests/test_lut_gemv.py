@@ -1,0 +1,123 @@
+"""L1 kernel correctness: Pallas LUT-GEMV vs the pure-numpy oracle.
+
+The kernel↔oracle agreement is the core correctness signal of the build
+path (DESIGN.md invariant 1): the Rust engine mirrors the same contract on
+the serving side.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.lut_gemv import lut_gemv, lut_gemv_f32
+
+
+def run_case(rng, b, n, k, bits, nbw, group=32, tile_n=64, tile_k=None):
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    x = rng.normal(size=(b, k)).astype(np.float32)
+    wc, ws = ref.quantize_weights(w, bits, group)
+    xc, xs = ref.quantize_acts(x)
+    got = np.asarray(
+        lut_gemv(
+            xc, wc, ws, xs,
+            nbw=nbw, group=group,
+            tile_n=min(tile_n, n), tile_k=tile_k or min(256, k),
+        )
+    )
+    want = ref.ref_gemv(wc, ws, xc, xs, group)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    return got
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+def test_all_quant_levels(bits):
+    rng = np.random.default_rng(bits)
+    run_case(rng, b=2, n=64, k=128, bits=bits, nbw=4)
+
+
+@pytest.mark.parametrize("nbw", [1, 2, 4, 8])
+def test_all_nbw(nbw):
+    rng = np.random.default_rng(nbw + 10)
+    run_case(rng, b=3, n=32, k=128, bits=4, nbw=nbw)
+
+
+def test_multi_tile_grid():
+    rng = np.random.default_rng(42)
+    # 4 n-tiles × 4 k-tiles exercises the k-accumulation path.
+    run_case(rng, b=2, n=256, k=1024, bits=4, nbw=4, tile_n=64, tile_k=256)
+
+
+def test_batch_sizes():
+    rng = np.random.default_rng(7)
+    for b in [1, 2, 5, 8]:
+        run_case(rng, b=b, n=32, k=64, bits=4, nbw=4)
+
+
+def test_extreme_activations_exact_ints():
+    """Sign-plane handling: ±127 activations, extreme weights."""
+    n, k, group = 16, 64, 32
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(n, k)).astype(np.float32) * 100
+    wc, ws = ref.quantize_weights(w, 8, group)
+    xc = np.zeros((2, k), np.int8)
+    xc[0, :] = 127
+    xc[1, :] = -127
+    xc[:, ::3] = -1
+    xs = np.ones(2, np.float32)
+    got = np.asarray(lut_gemv(xc, wc, ws, xs, tile_n=16, tile_k=64))
+    want = ref.ref_gemv(wc, ws, xc, xs, group)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_f32_wrapper_quantizes_consistently():
+    rng = np.random.default_rng(11)
+    n, k = 32, 64
+    w = rng.normal(size=(n, k)).astype(np.float32)
+    x = rng.normal(size=(2, k)).astype(np.float32)
+    wc, ws = ref.quantize_weights(w, 4, 32)
+    got = np.asarray(lut_gemv_f32(x, wc, ws, tile_n=32, tile_k=64))
+    xc, xs = ref.quantize_acts(x)
+    want = ref.ref_gemv(wc, ws, xc, xs, 32)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_activations_give_zero():
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(32, 64)).astype(np.float32)
+    wc, ws = ref.quantize_weights(w, 4, 32)
+    xc = np.zeros((2, 64), np.int8)
+    xs = np.ones(2, np.float32)
+    got = np.asarray(lut_gemv(xc, wc, ws, xs, tile_n=32, tile_k=64))
+    assert (got == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 5, 6, 8]),
+    nbw=st.sampled_from([1, 2, 4]),
+    b=st.integers(1, 4),
+    n_tiles=st.integers(1, 3),
+    k_groups=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_sweep(bits, nbw, b, n_tiles, k_groups, seed):
+    """Property: kernel == oracle over random shapes/precisions/batches."""
+    rng = np.random.default_rng(seed)
+    n = 16 * n_tiles
+    k = 32 * k_groups
+    run_case(rng, b=b, n=n, k=k, bits=bits, nbw=nbw, tile_n=16, tile_k=k)
+
+
+def test_integer_accumulators_exact():
+    """The per-group int path must be exact: scales forced to 1 lets the
+    f32 output expose the raw integer accumulator sums."""
+    rng = np.random.default_rng(17)
+    n, k, group = 8, 64, 32
+    wc = rng.integers(-7, 8, size=(n, k)).astype(np.int8)
+    ws = np.ones((n, k // group), np.float32)
+    xc = rng.integers(-127, 128, size=(3, k)).astype(np.int8)
+    xs = np.ones(3, np.float32)
+    got = np.asarray(lut_gemv(xc, wc, ws, xs, tile_n=8, tile_k=64))
+    want = wc.astype(np.int64) @ xc.astype(np.int64).T  # [N, B]
+    np.testing.assert_array_equal(got.astype(np.int64), want.T)

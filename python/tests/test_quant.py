@@ -1,0 +1,55 @@
+"""Quantization helpers: roundtrip bounds and symmetry (mirrors the Rust
+quant module's invariants so both sides stay in lockstep)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 5, 6, 8])
+def test_weight_roundtrip_error_bound(bits):
+    rng = np.random.default_rng(bits)
+    w = rng.normal(size=(16, 64)).astype(np.float32)
+    codes, scales = ref.quantize_weights(w, bits, 32)
+    deq = codes.reshape(16, 2, 32).astype(np.float32) * scales[:, :, None]
+    err = np.abs(deq.reshape(16, 64) - w)
+    bound = scales.max() * 0.5000001
+    assert (err <= bound).all(), (err.max(), bound)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 5, 6, 8]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_codes_symmetric_range(bits, seed, scale):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(4, 32)) * scale).astype(np.float32)
+    codes, scales = ref.quantize_weights(w, bits, 32)
+    max_q = (1 << (bits - 1)) - 1
+    assert codes.max() <= max_q and codes.min() >= -max_q
+    assert (scales > 0).all()
+
+
+def test_zero_weights_stable():
+    codes, scales = ref.quantize_weights(np.zeros((2, 32), np.float32), 4, 32)
+    assert (codes == 0).all() and (scales == 1.0).all()
+
+
+def test_act_quant_roundtrip():
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(5, 128)).astype(np.float32)
+    codes, scales = ref.quantize_acts(x)
+    deq = codes.astype(np.float32) * scales[:, None]
+    assert np.abs(deq - x).max() <= scales.max() * 0.5000001
+    assert codes.max() <= 127 and codes.min() >= -127
+
+
+def test_group_scales_are_local():
+    w = np.full((1, 64), 0.01, np.float32)
+    w[0, 32:] = 100.0
+    codes, scales = ref.quantize_weights(w, 4, 32)
+    assert scales[0, 0] < scales[0, 1] / 100

@@ -1,0 +1,48 @@
+"""Algorithm 1 (in-memory type conversion) kernel: bit-exactness vs IEEE."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.typeconv import int_to_f32, int_to_f32_bits
+
+
+@pytest.mark.parametrize("nbits", list(range(2, 17)))
+def test_exhaustive_small_widths(nbits):
+    lo, hi = -(1 << (nbits - 1)) + 1, (1 << (nbits - 1)) - 1
+    a = np.arange(lo, hi + 1, dtype=np.int32)
+    got = np.asarray(int_to_f32_bits(a, nbits=nbits))
+    want = ref.ref_int_to_f32_bits(a, nbits)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nbits=st.integers(17, 25),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_wide_widths_random(nbits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = -(1 << (nbits - 1)) + 1, (1 << (nbits - 1)) - 1
+    a = rng.integers(lo, hi + 1, size=512, dtype=np.int32)
+    got = np.asarray(int_to_f32_bits(a, nbits=nbits))
+    np.testing.assert_array_equal(got, ref.ref_int_to_f32_bits(a, nbits))
+
+
+def test_zero_is_positive_zero():
+    bits = np.asarray(int_to_f32_bits(np.zeros(4, np.int32), nbits=8))
+    assert (bits == 0).all()
+
+
+def test_int_min_saturates():
+    # -2^(n-1) has no sign-magnitude form; hardware saturates.
+    a = np.array([-128], np.int32)
+    v = np.asarray(int_to_f32(a, nbits=8))
+    assert v[0] == -127.0
+
+
+def test_values_roundtrip_as_floats():
+    a = np.array([1, -1, 2, -2, 100, -100, 8191, -8191], np.int32)
+    v = np.asarray(int_to_f32(a, nbits=14))
+    np.testing.assert_array_equal(v, a.astype(np.float32))

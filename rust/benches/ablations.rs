@@ -1,0 +1,79 @@
+//! Ablation study over SAIL's design choices (DESIGN.md calls these out):
+//! tensor-level scheduling, ping-pong overlap, the Pattern Reuse Table,
+//! in-memory type conversion, and the NBW choice — each toggled
+//! independently at the paper's operating point (7B, 16 threads).
+//!
+//! Run: cargo bench --bench ablations
+
+use sail::model::ModelConfig;
+use sail::quant::QuantLevel;
+use sail::sim::events::{self, EventSimOpts};
+use sail::sim::SailPerfModel;
+use sail::util::table::{f, Table};
+
+fn main() {
+    let m = ModelConfig::llama2_7b();
+    for (level, batch) in [(QuantLevel::Q4, 8usize), (QuantLevel::Q2, 8)] {
+        let base = SailPerfModel::paper_config(level, 16);
+        let full = events::tokens_per_sec(&base, &m, batch, EventSimOpts::default());
+
+        let mut t = Table::new(
+            &format!("Ablations — 7B {level}, batch {batch}, 16T (event-driven sim)"),
+            &["configuration", "tokens/s", "vs full"],
+        );
+        let mut push = |name: &str, tps: f64| {
+            t.row(&[name.into(), f(tps, 2), format!("{:+.1}%", (tps / full - 1.0) * 100.0)]);
+        };
+        push("full SAIL", full);
+
+        // No tensor-level scheduling: weights stream once per user.
+        push(
+            "− tensor-level scheduling",
+            events::tokens_per_sec(
+                &base,
+                &m,
+                batch,
+                EventSimOpts { overlap: true, buffer_depth: 2, tls: false },
+            ),
+        );
+
+        // No ping-pong overlap: transfer and compute serialized.
+        push(
+            "− ping-pong overlap",
+            events::tokens_per_sec(
+                &base,
+                &m,
+                batch,
+                EventSimOpts { overlap: false, buffer_depth: 2, tls: true },
+            ),
+        );
+
+        // No PRT.
+        let mut no_prt = base.clone();
+        no_prt.use_prt = false;
+        push("− pattern-reuse table", events::tokens_per_sec(&no_prt, &m, batch, EventSimOpts::default()));
+
+        // Type conversion on the CPU instead of in-memory: charge the
+        // vector-engine conversion of every per-group sum.
+        let mut no_tc = base.clone();
+        no_tc.in_memory_typeconv = false;
+        let tc_cpu = (m.params() as f64 / 32.0) * 4.0 / (16.0 * 3.0e9) * batch as f64;
+        let r = events::simulate_iteration(&no_tc, &m, batch, EventSimOpts::default());
+        let iter = r.makespan * 1.05 + tc_cpu;
+        push("− in-memory type conversion", batch as f64 / iter);
+
+        // NBW=2 instead of 4.
+        let mut nbw2 = base.clone();
+        nbw2.nbw = 2;
+        push("NBW=2 (vs 4)", events::tokens_per_sec(&nbw2, &m, batch, EventSimOpts::default()));
+
+        // Half the C-SRAM threads.
+        let t8 = SailPerfModel::paper_config(level, 8);
+        push("8 threads (vs 16)", events::tokens_per_sec(&t8, &m, batch, EventSimOpts::default()));
+
+        t.print();
+        println!();
+    }
+    println!("(every '−' row should lose throughput; the deltas quantify each");
+    println!(" §III contribution at the paper's operating point)");
+}

@@ -1,0 +1,7 @@
+//! Regenerates paper Fig 10: token generation speed per platform × batch.
+//! Run: cargo bench --bench fig10_batch_platforms
+fn main() {
+    sail::report::fig10_batch_platforms().print();
+    println!("(paper: 7B-Q4 SAIL 13.2x over AMX and 3.42x over A100 at batch 8;");
+    println!(" CPUs gain little from batching, SAIL gains the most)");
+}

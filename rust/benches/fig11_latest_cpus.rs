@@ -1,0 +1,6 @@
+//! Regenerates paper Fig 11: ARM / Non-AMX / AMX / SAIL comparison.
+//! Run: cargo bench --bench fig11_latest_cpus
+fn main() {
+    sail::report::fig11_latest_cpus().print();
+    println!("(paper: 81.63 tok/s at 7B-Q2 vs ~25 for AMX and Non-AMX)");
+}

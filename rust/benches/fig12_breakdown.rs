@@ -1,0 +1,7 @@
+//! Regenerates paper Fig 12: Q4 GEMV latency breakdown
+//! (Baseline / Neural Cache / LUT / LUT+TC).
+//! Run: cargo bench --bench fig12_breakdown
+fn main() {
+    sail::report::fig12_breakdown().print();
+    println!("(paper: final 3.81x speedup over the ARM baseline)");
+}

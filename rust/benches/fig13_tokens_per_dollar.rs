@@ -1,0 +1,13 @@
+//! Regenerates paper Fig 13 (+ Table IV): tokens per dollar across
+//! platforms, models, quantization levels, and batch sizes.
+//! Run: cargo bench --bench fig13_tokens_per_dollar
+fn main() {
+    sail::report::table4_costs().print();
+    println!();
+    for t in sail::report::fig13_tokens_per_dollar() {
+        t.print();
+        println!();
+    }
+    println!("(paper: SAIL-1T overtakes the V100 at Q2; at batch 8 SAIL-16T leads");
+    println!(" every quant level except 13B-Q8 single-thread; headline 19.9x vs CPU)");
+}

@@ -1,0 +1,5 @@
+//! Regenerates paper Fig 1: LUT-based vs bit-serial efficiency gain.
+//! Run: cargo bench --bench fig1_lut_vs_bitserial
+fn main() {
+    sail::report::fig1_lut_vs_bitserial().print();
+}

@@ -1,0 +1,48 @@
+//! Regenerates paper Fig 6: cycle counts across batch × NBW × precision,
+//! plus the PRT section of §III-D (measured hit rates on the functional
+//! engine).
+//! Run: cargo bench --bench fig6_design_space
+use sail::lutgemv::engine::LutGemvEngine;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::util::{Prng, Table};
+
+fn main() {
+    for t in sail::report::fig6_design_space() {
+        t.print();
+        println!();
+    }
+    // §III-D: measured PRT behaviour on the functional engine.
+    let mut prng = Prng::new(11);
+    let (n, k) = (64usize, 256usize);
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, QuantLevel::Q4, 32);
+    let mut eng = LutGemvEngine::new(wt, 4);
+    eng.use_prt = true;
+    let mut t = Table::new(
+        "§III-D — Pattern Reuse Table measured hit rate (functional engine)",
+        &["batch", "lookups", "PRT hits", "hit rate", "cycle save (hits bypass row read)"],
+    );
+    for batch in [1usize, 2, 4, 8, 16] {
+        let xs: Vec<QuantizedVector> = (0..batch)
+            .map(|_| {
+                let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+                QuantizedVector::quantize(&x)
+            })
+            .collect();
+        let (_, s) = eng.gemv_batch(&xs);
+        let total = s.lut_reads + s.prt_hits;
+        let rate = s.prt_hits as f64 / total as f64;
+        // A hit bypasses the entry-bits row read (6 rows at Q4/NBW4) and
+        // the 25-cycle accumulate, paying ~5 cycles.
+        let save = rate * (1.0 - 5.0 / 31.0);
+        t.row(&[
+            batch.to_string(),
+            total.to_string(),
+            s.prt_hits.to_string(),
+            format!("{:.1}%", rate * 100.0),
+            format!("{:.1}%", save * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(paper: ~17% repetition -> 13.8% compute-cycle reduction at the evaluated mix)");
+}

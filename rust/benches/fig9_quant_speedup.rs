@@ -1,0 +1,6 @@
+//! Regenerates paper Fig 9: SAIL speedup over ARM per quantization level.
+//! Run: cargo bench --bench fig9_quant_speedup
+fn main() {
+    sail::report::fig9_quant_speedup().print();
+    println!("(paper headline: up to 10.41x on the 13B model at Q2)");
+}

@@ -1,0 +1,108 @@
+//! L3 hot-path micro-benchmarks (the §Perf measurement harness).
+//!
+//! Measures the wallclock cost of the Rust-side hot paths: the functional
+//! LUT-GEMV engine, the cycle model, the PRT, quant pack/unpack, Algorithm
+//! 1 conversion, the pipeline simulator, and the coordinator iteration
+//! loop (mock engine). Results feed EXPERIMENTS.md §Perf before/after.
+//!
+//! Run: cargo bench --bench perf_hotpath
+
+use sail::coordinator::{Batcher, BatcherConfig, MockEngine, Request};
+use sail::lutgemv::engine::LutGemvEngine;
+use sail::lutgemv::{GemvCycleModel, PatternReuseTable};
+use sail::model::ModelConfig;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::sim::SailPerfModel;
+use sail::typeconv;
+use sail::util::bench::{time_fn, time_throughput, BenchOpts};
+use sail::util::Prng;
+
+fn main() {
+    let opts = BenchOpts::default();
+    let mut results = Vec::new();
+    let mut prng = Prng::new(42);
+
+    // --- quantization ---------------------------------------------------
+    let w: Vec<f32> = (0..1024 * 1024).map(|_| prng.normal() as f32).collect();
+    results.push(time_throughput(
+        "quantize 1024x1024 Q4 (weights/s)",
+        opts,
+        (1024 * 1024) as f64,
+        || QuantizedMatrix::quantize(&w, 1024, 1024, QuantLevel::Q4, 32),
+    ));
+
+    // --- functional LUT-GEMV engine --------------------------------------
+    let wt = QuantizedMatrix::quantize(&w, 1024, 1024, QuantLevel::Q4, 32);
+    let eng = LutGemvEngine::new(wt, 4);
+    let x: Vec<f32> = (0..1024).map(|_| prng.normal() as f32).collect();
+    let qx = QuantizedVector::quantize(&x);
+    let mac_count = (1024 * 1024) as f64;
+    results.push(time_throughput(
+        "LutGemvEngine 1024x1024 b1 (MACs/s)",
+        BenchOpts { batch: 1, ..opts },
+        mac_count,
+        || eng.gemv(&qx),
+    ));
+    let xs: Vec<QuantizedVector> = (0..8).map(|_| qx.clone()).collect();
+    results.push(time_throughput(
+        "LutGemvEngine 1024x1024 b8 (MACs/s)",
+        BenchOpts { batch: 1, ..opts },
+        8.0 * mac_count,
+        || eng.gemv_batch(&xs),
+    ));
+
+    // --- cycle model (simulator inner loop) -------------------------------
+    let gm = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+    results.push(time_throughput(
+        "GemvCycleModel::tile (tiles/s)",
+        opts,
+        1.0,
+        || gm.tile(1024, 1024, 8),
+    ));
+
+    // --- PRT ---------------------------------------------------------------
+    let mut prt = PatternReuseTable::new(32);
+    let patterns: Vec<u32> = (0..4096).map(|_| prng.gen_range(16) as u32).collect();
+    results.push(time_throughput(
+        "PatternReuseTable lookup+insert (ops/s)",
+        opts,
+        patterns.len() as f64,
+        || {
+            for &p in &patterns {
+                if prt.lookup(p).is_none() {
+                    prt.insert(p, p as i64);
+                }
+            }
+        },
+    ));
+
+    // --- Algorithm 1 --------------------------------------------------------
+    let ints: Vec<i32> = (0..4096).map(|_| prng.signed_bits(16) as i32).collect();
+    results.push(time_throughput(
+        "typeconv int16->f32 (elems/s)",
+        opts,
+        ints.len() as f64,
+        || ints.iter().map(|&a| typeconv::int_to_f32_traced(a, 16).bits).sum::<u32>(),
+    ));
+
+    // --- pipeline simulator --------------------------------------------------
+    let sail = SailPerfModel::paper_config(QuantLevel::Q4, 16);
+    let m7 = ModelConfig::llama2_7b();
+    results.push(time_fn("SailPerfModel::iteration 7B (full walk)", opts, || {
+        sail.iteration(&m7, 8)
+    }));
+
+    // --- coordinator loop (mock engine) ---------------------------------------
+    results.push(time_fn("coordinator 64 reqs b8 (mock engine)", opts, || {
+        let mut b = Batcher::new(MockEngine::new(8, 2048, 256), BatcherConfig::default());
+        for id in 0..64u64 {
+            b.submit(Request::new(id, vec![1, 2, 3], 16));
+        }
+        b.run_to_completion().unwrap()
+    }));
+
+    println!("== perf_hotpath ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+}

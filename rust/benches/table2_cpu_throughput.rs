@@ -1,0 +1,10 @@
+//! Regenerates paper Table II: tokens/s across quantization levels and
+//! thread counts (ARM / AMX / SAIL), with residuals vs the published
+//! matrix.
+//! Run: cargo bench --bench table2_cpu_throughput
+fn main() {
+    for t in sail::report::table2_cpu_throughput() {
+        t.print();
+        println!();
+    }
+}

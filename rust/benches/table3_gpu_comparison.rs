@@ -1,0 +1,7 @@
+//! Regenerates paper Table III: token generation vs context length for
+//! V100 / 2xV100 / A100 / SAIL, including the VRAM-capacity "X" entries.
+//! Run: cargo bench --bench table3_gpu_comparison
+fn main() {
+    sail::report::table3_gpu_comparison().print();
+    println!("(paper: SAIL beats 1xV100 from ctx 1K up; 13B-Q8@4K does not fit 1xV100)");
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table V + §V-I overhead accounting.
+//! Run: cargo bench --bench table5_overhead
+use sail::cost::overhead::OverheadModel;
+fn main() {
+    sail::report::table5_overhead().print();
+    let o = OverheadModel::default();
+    println!(
+        "\n§V-I: C-SRAM {} KB/thread, {} KB total (16T) = {:.2}% of the 32 MB LLC;\n\
+         PRT: {:.4} mm² / {:.2} mW for 8 DFMs; system area overhead ~{:.0}%",
+        o.csram_bytes_per_thread() / 1024,
+        o.total_csram_bytes() / 1024,
+        o.capacity_overhead_pct(),
+        o.prt_total_area_mm2(),
+        o.prt_total_power_mw(),
+        o.system_area_overhead_pct()
+    );
+}

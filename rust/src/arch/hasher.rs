@@ -1,0 +1,127 @@
+//! Address hasher (paper §IV-C).
+//!
+//! SAIL requires weights evenly distributed across cache slices so every
+//! C-SRAM builds LUTs from its *nearest* data slice. Following the hasher
+//! of US-7290116 cited by the paper: the lowest 9 bits of the address are
+//! retained (512 B contiguity granularity) while the remaining bits are
+//! scrambled into the slice index. The scramble is an XOR-fold of the
+//! upper address bits — deterministic, invertible within a set, and
+//! uniform for both sequential and strided streams.
+
+/// Slice-interleaving address hasher.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressHasher {
+    /// log2(number of slices).
+    slice_bits: u32,
+    /// Contiguity granularity (paper: 512 B → 9 bits kept).
+    pub granularity_bits: u32,
+}
+
+impl AddressHasher {
+    /// `slices` must be a power of two (32 in the evaluated system).
+    pub fn new(slices: u32) -> Self {
+        assert!(slices.is_power_of_two(), "slice count must be a power of two");
+        AddressHasher { slice_bits: slices.trailing_zeros(), granularity_bits: 9 }
+    }
+
+    pub fn slices(&self) -> u32 {
+        1 << self.slice_bits
+    }
+
+    /// Map a physical address to a slice index. Bits [8:0] never affect
+    /// the result (512 B blocks stay whole); all higher bits are XOR-folded
+    /// so any stride ≥ 512 B distributes uniformly.
+    pub fn slice_of(&self, addr: u64) -> u32 {
+        if self.slice_bits == 0 {
+            return 0;
+        }
+        let mut x = addr >> self.granularity_bits;
+        // xor-fold the block number down to slice_bits, mixing with a
+        // multiplicative scramble first so low-entropy strides spread.
+        x = x.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut folded = 0u64;
+        let mut v = x;
+        while v != 0 {
+            folded ^= v & ((1 << self.slice_bits) - 1);
+            v >>= self.slice_bits;
+        }
+        folded as u32
+    }
+
+    /// Distribute a contiguous buffer `[base, base+len)` into per-slice
+    /// byte counts — used by the simulator to check even weight spread.
+    pub fn distribution(&self, base: u64, len: u64) -> Vec<u64> {
+        let g = 1u64 << self.granularity_bits;
+        let mut counts = vec![0u64; self.slices() as usize];
+        let mut addr = base;
+        let end = base + len;
+        while addr < end {
+            let block_end = (addr | (g - 1)) + 1;
+            let take = block_end.min(end) - addr;
+            counts[self.slice_of(addr) as usize] += take;
+            addr = block_end;
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn granularity_preserved() {
+        let h = AddressHasher::new(32);
+        let mut p = Prng::new(13);
+        for _ in 0..1000 {
+            let base = p.next_u64() & !0x1FF;
+            let s = h.slice_of(base);
+            for off in [0u64, 1, 63, 255, 511] {
+                assert_eq!(h.slice_of(base + off), s, "offset {off} changed slice");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_stream_is_uniform() {
+        let h = AddressHasher::new(32);
+        // An 8 MiB weight tensor: 16384 512-B blocks over 32 slices.
+        let counts = h.distribution(0x4000_0000, 8 << 20);
+        let expect = (8 << 20) / 32;
+        for (s, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect as f64).abs() / expect as f64;
+            assert!(dev < 0.15, "slice {s}: {c} vs {expect} ({dev:.2})");
+        }
+    }
+
+    #[test]
+    fn large_stride_still_uniform() {
+        // Row-strided access (stride 16 KiB) must not alias to few slices.
+        let h = AddressHasher::new(32);
+        let mut counts = vec![0u64; 32];
+        for i in 0..4096u64 {
+            counts[h.slice_of(0x1000_0000 + i * 16384) as usize] += 1;
+        }
+        let expect = 4096 / 32;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect as f64 * 0.5 && (c as f64) < expect as f64 * 1.6,
+                "slice {s}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn distribution_conserves_bytes() {
+        let h = AddressHasher::new(8);
+        let counts = h.distribution(12345, 1_000_000);
+        assert_eq!(counts.iter().sum::<u64>(), 1_000_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn pow2_enforced() {
+        AddressHasher::new(12);
+    }
+}

@@ -1,0 +1,78 @@
+//! Memory-system architecture models (paper Table I).
+//!
+//! The evaluated system: 32 OOO cores at 3 GHz, a 32 MB shared LLC split
+//! into 32 slices of 1 MB on an 8×8 mesh NoC (32 B/cycle links at 2 GHz),
+//! and 8 channels of DDR4-3200. One C-SRAM array sits beside each slice.
+//!
+//! These models provide the *transfer-time* half of the pipeline simulator;
+//! the compute half lives in `csram`/`lutgemv`.
+
+pub mod cache;
+pub mod dram;
+pub mod hasher;
+pub mod noc;
+
+pub use cache::LlcConfig;
+pub use dram::DramConfig;
+pub use hasher::AddressHasher;
+pub use noc::NocConfig;
+
+/// Full system architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub cores: u32,
+    pub clock_ghz: f64,
+    pub llc: LlcConfig,
+    pub noc: NocConfig,
+    pub dram: DramConfig,
+    /// C-SRAM arrays (Near-Data Processors), one per LLC slice.
+    pub ndp_count: u32,
+}
+
+impl Default for SystemConfig {
+    /// The paper's Table I configuration.
+    fn default() -> Self {
+        SystemConfig {
+            cores: 32,
+            clock_ghz: 3.0,
+            llc: LlcConfig::default(),
+            noc: NocConfig::default(),
+            dram: DramConfig::default(),
+            ndp_count: 32,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Convert a cycle count at the system clock to seconds.
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e9)
+    }
+
+    /// Convert seconds to system-clock cycles (rounding to nearest).
+    pub fn secs_to_cycles(&self, secs: f64) -> u64 {
+        (secs * self.clock_ghz * 1e9).round() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let s = SystemConfig::default();
+        assert_eq!(s.cores, 32);
+        assert_eq!(s.llc.total_bytes(), 32 * 1024 * 1024);
+        assert_eq!(s.llc.slices, 32);
+        assert_eq!(s.ndp_count, 32);
+    }
+
+    #[test]
+    fn cycle_second_roundtrip() {
+        let s = SystemConfig::default();
+        assert_eq!(s.secs_to_cycles(1.0), 3_000_000_000);
+        assert!((s.cycles_to_secs(3_000_000_000) - 1.0).abs() < 1e-12);
+        assert_eq!(s.secs_to_cycles(s.cycles_to_secs(12345)), 12345);
+    }
+}

@@ -1,0 +1,130 @@
+//! Network-on-Chip model (Table I: 32 B links, 1-cycle hop, 8×8 mesh at
+//! 2 GHz — the ARM CMN-600 configuration).
+//!
+//! The NoC carries (a) DRAM→slice weight fills, (b) DFM input broadcasts to
+//! C-SRAMs, and (c) result vectors back to the requesting core. SAIL's key
+//! bandwidth argument (Fig 3) is that only `[1,N]` result vectors cross the
+//! NoC instead of `[N,N]` weight tensors.
+
+/// Mesh NoC configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NocConfig {
+    pub mesh_x: u32,
+    pub mesh_y: u32,
+    /// Link (flit) width in bytes.
+    pub flit_bytes: u32,
+    /// Router traversal latency per hop, in NoC cycles.
+    pub hop_cycles: u64,
+    /// NoC clock (GHz) — 2 GHz vs the 3 GHz core clock.
+    pub clock_ghz: f64,
+}
+
+impl Default for NocConfig {
+    fn default() -> Self {
+        NocConfig { mesh_x: 8, mesh_y: 8, flit_bytes: 32, hop_cycles: 1, clock_ghz: 2.0 }
+    }
+}
+
+/// Node coordinate on the mesh.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Node {
+    pub x: u32,
+    pub y: u32,
+}
+
+impl NocConfig {
+    pub fn nodes(&self) -> u32 {
+        self.mesh_x * self.mesh_y
+    }
+
+    /// Position of node index i (row-major).
+    pub fn node(&self, i: u32) -> Node {
+        assert!(i < self.nodes());
+        Node { x: i % self.mesh_x, y: i / self.mesh_x }
+    }
+
+    /// Manhattan hop count between two node indices (XY routing).
+    pub fn hops(&self, a: u32, b: u32) -> u32 {
+        let (pa, pb) = (self.node(a), self.node(b));
+        pa.x.abs_diff(pb.x) + pa.y.abs_diff(pb.y)
+    }
+
+    /// NoC cycles for a unicast message of `bytes` between nodes `a` and
+    /// `b`: head latency (hops) + serialization (flits), wormhole-routed.
+    pub fn unicast_cycles(&self, a: u32, b: u32, bytes: u64) -> u64 {
+        let flits = (bytes + self.flit_bytes as u64 - 1) / self.flit_bytes as u64;
+        self.hops(a, b) as u64 * self.hop_cycles + flits.max(1)
+    }
+
+    /// NoC cycles for a broadcast of `bytes` from node `src` to all slices
+    /// (the DFM input broadcast). Tree broadcast: head latency is the max
+    /// hop distance, serialization paid once per link (flits).
+    pub fn broadcast_cycles(&self, src: u32, bytes: u64) -> u64 {
+        let max_hops = (0..self.nodes()).map(|n| self.hops(src, n)).max().unwrap_or(0);
+        let flits = (bytes + self.flit_bytes as u64 - 1) / self.flit_bytes as u64;
+        max_hops as u64 * self.hop_cycles + flits.max(1)
+    }
+
+    /// Convert NoC cycles to seconds.
+    pub fn cycles_to_secs(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_ghz * 1e9)
+    }
+
+    /// Bisection bandwidth in bytes/sec — the aggregate ceiling the
+    /// pipeline simulator enforces on simultaneous fills.
+    pub fn bisection_bytes_per_sec(&self) -> f64 {
+        // 8 links across the bisection × 32 B/cycle × 2 GHz.
+        self.mesh_y as f64 * self.flit_bytes as f64 * self.clock_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_geometry() {
+        let n = NocConfig::default();
+        assert_eq!(n.nodes(), 64);
+        assert_eq!(n.node(0), Node { x: 0, y: 0 });
+        assert_eq!(n.node(63), Node { x: 7, y: 7 });
+        assert_eq!(n.hops(0, 63), 14);
+        assert_eq!(n.hops(7, 56), 14);
+        assert_eq!(n.hops(5, 5), 0);
+    }
+
+    #[test]
+    fn unicast_latency_components() {
+        let n = NocConfig::default();
+        // 64 B = 2 flits, 1 hop → 3 cycles.
+        assert_eq!(n.unicast_cycles(0, 1, 64), 3);
+        // zero-byte message still costs a head flit.
+        assert_eq!(n.unicast_cycles(0, 1, 0), 2);
+    }
+
+    #[test]
+    fn broadcast_bounded_by_diameter() {
+        let n = NocConfig::default();
+        // From a corner: diameter 14 hops + serialization.
+        let c = n.broadcast_cycles(0, 1024);
+        assert_eq!(c, 14 + 32);
+        // From the center the head latency shrinks.
+        assert!(n.broadcast_cycles(27, 1024) < c);
+    }
+
+    #[test]
+    fn result_vs_weight_traffic_asymmetry() {
+        // Fig 3's argument: moving a [1,4096] f32 result (16 KB) is ~3
+        // orders cheaper than a [4096,4096] Q4 weight tile (8 MB).
+        let n = NocConfig::default();
+        let result = n.unicast_cycles(0, 63, 16 * 1024);
+        let weights = n.unicast_cycles(0, 63, 8 * 1024 * 1024);
+        assert!(weights > result * 400, "{weights} vs {result}");
+    }
+
+    #[test]
+    fn bisection_bandwidth() {
+        let n = NocConfig::default();
+        assert!((n.bisection_bytes_per_sec() - 8.0 * 32.0 * 2e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! CPU baseline models: ARM Neoverse-N1, Intel AMX, Non-AMX x86.
+//!
+//! Token generation on a CPU is the interplay of two limits:
+//!
+//! - **compute**: every weight must be unpacked/dequantized and multiplied
+//!   on the vector units — `params × cycles_per_weight(level)` cycles,
+//!   spread over `threads` with a contention droop;
+//! - **bandwidth**: the weight bytes must cross the memory bus once per
+//!   batch iteration.
+//!
+//! `iter_time = max(batch × compute_time, bytes / bw)` — which reproduces
+//! the paper's observations that (a) ARM gains little from quantization
+//! below 8 bits (compute-bound on unpack), (b) batching barely helps CPUs
+//! (bandwidth already saturated), and (c) Q8 at 16 threads is bandwidth-
+//! bound (the 54%-per-thread scaling collapse).
+
+use super::calib;
+use crate::model::ModelConfig;
+use crate::quant::QuantLevel;
+
+/// Which fitted CPU this model instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CpuKind {
+    ArmN1,
+    Amx,
+    NonAmx,
+}
+
+/// An analytical CPU decode model.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuModel {
+    pub kind: CpuKind,
+    pub clock_hz: f64,
+    pub mem_bw: f64,
+    /// Quantization group size for byte accounting.
+    pub group: usize,
+}
+
+impl CpuModel {
+    pub fn arm_n1() -> Self {
+        CpuModel {
+            kind: CpuKind::ArmN1,
+            clock_hz: calib::FIT_CLOCK_HZ,
+            mem_bw: calib::ARM_MEM_BW,
+            group: 32,
+        }
+    }
+
+    pub fn amx() -> Self {
+        CpuModel {
+            kind: CpuKind::Amx,
+            clock_hz: calib::FIT_CLOCK_HZ,
+            mem_bw: calib::AMX_MEM_BW,
+            group: 32,
+        }
+    }
+
+    pub fn non_amx() -> Self {
+        CpuModel {
+            kind: CpuKind::NonAmx,
+            clock_hz: calib::FIT_CLOCK_HZ,
+            mem_bw: calib::AMX_MEM_BW,
+            group: 32,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            CpuKind::ArmN1 => "ARM",
+            CpuKind::Amx => "AMX",
+            CpuKind::NonAmx => "Non-AMX",
+        }
+    }
+
+    fn cycles_per_weight(&self, level: QuantLevel) -> f64 {
+        match self.kind {
+            CpuKind::ArmN1 => calib::arm_cycles_per_weight(level),
+            CpuKind::Amx => calib::amx_cycles_per_weight(level),
+            CpuKind::NonAmx => calib::nonamx_cycles_per_weight(level),
+        }
+    }
+
+    /// Seconds of vector-unit work for one token of one sequence.
+    pub fn compute_secs_per_token(&self, m: &ModelConfig, level: QuantLevel, threads: u32) -> f64 {
+        let cycles = m.params() as f64 * self.cycles_per_weight(level);
+        cycles / (self.clock_hz * threads as f64 * calib::parallel_efficiency(threads))
+    }
+
+    /// Seconds to stream the weights once.
+    pub fn transfer_secs(&self, m: &ModelConfig, level: QuantLevel) -> f64 {
+        m.weight_bytes(level, self.group) as f64 / self.mem_bw
+    }
+
+    /// Steady-state decode throughput for `batch` co-scheduled sequences.
+    pub fn tokens_per_sec(
+        &self,
+        m: &ModelConfig,
+        level: QuantLevel,
+        threads: u32,
+        batch: usize,
+    ) -> f64 {
+        assert!(threads >= 1 && batch >= 1);
+        let compute = batch as f64 * self.compute_secs_per_token(m, level, threads);
+        let transfer = self.transfer_secs(m, level);
+        batch as f64 / compute.max(transfer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Assert a modeled rate is within `tol_pct` of the paper's number.
+    fn near(model: f64, paper: f64, tol_pct: f64, what: &str) {
+        let err = (model - paper).abs() / paper * 100.0;
+        assert!(err <= tol_pct, "{what}: model {model:.2} vs paper {paper:.2} ({err:.0}% off)");
+    }
+
+    #[test]
+    fn table2_arm_7b_selected_cells() {
+        let arm = CpuModel::arm_n1();
+        let m = ModelConfig::llama2_7b();
+        near(arm.tokens_per_sec(&m, QuantLevel::Q2, 1, 1), 0.68, 10.0, "ARM 7B-Q2 1T");
+        near(arm.tokens_per_sec(&m, QuantLevel::Q2, 16, 1), 9.30, 20.0, "ARM 7B-Q2 16T");
+        near(arm.tokens_per_sec(&m, QuantLevel::Q8, 16, 1), 5.54, 20.0, "ARM 7B-Q8 16T");
+        near(arm.tokens_per_sec(&m, QuantLevel::Q4, 8, 1), 5.15, 20.0, "ARM 7B-Q4 8T");
+    }
+
+    #[test]
+    fn table2_arm_13b_generalization() {
+        // The 7B-fitted constants must transfer to 13B (per-weight model).
+        let arm = CpuModel::arm_n1();
+        let m = ModelConfig::llama2_13b();
+        near(arm.tokens_per_sec(&m, QuantLevel::Q2, 1, 1), 0.35, 12.0, "ARM 13B-Q2 1T");
+        near(arm.tokens_per_sec(&m, QuantLevel::Q2, 16, 1), 5.05, 20.0, "ARM 13B-Q2 16T");
+        // Note: the paper's own 13B-Q8 16T cell (4.80 tok/s ⇒ 66 GB/s of
+        // weight traffic) is inconsistent with its 7B-Q8 cell (5.54 ⇒
+        // 40 GB/s) under any single bandwidth; we keep the 7B-consistent
+        // model and accept the wider error here.
+        near(arm.tokens_per_sec(&m, QuantLevel::Q8, 16, 1), 4.80, 45.0, "ARM 13B-Q8 16T");
+    }
+
+    #[test]
+    fn table2_amx_selected_cells() {
+        let amx = CpuModel::amx();
+        let m = ModelConfig::llama2_7b();
+        near(amx.tokens_per_sec(&m, QuantLevel::Q4, 1, 1), 3.45, 10.0, "AMX 7B-Q4 1T");
+        near(amx.tokens_per_sec(&m, QuantLevel::Q4, 16, 1), 33.55, 20.0, "AMX 7B-Q4 16T");
+        near(amx.tokens_per_sec(&m, QuantLevel::Q8, 16, 1), 18.39, 20.0, "AMX 7B-Q8 16T");
+        near(amx.tokens_per_sec(&m, QuantLevel::Q2, 16, 1), 24.96, 20.0, "AMX 7B-Q2 16T");
+    }
+
+    #[test]
+    fn q8_scaling_collapse() {
+        // §V-B: ARM Q8 16-thread per-thread perf ≈ 54% of 1-thread
+        // (bandwidth saturation).
+        let arm = CpuModel::arm_n1();
+        let m = ModelConfig::llama2_7b();
+        let r1 = arm.tokens_per_sec(&m, QuantLevel::Q8, 1, 1);
+        let r16 = arm.tokens_per_sec(&m, QuantLevel::Q8, 16, 1);
+        let per_thread = r16 / 16.0 / r1;
+        assert!((0.40..=0.70).contains(&per_thread), "per-thread {per_thread}");
+    }
+
+    #[test]
+    fn batching_gains_are_minimal() {
+        // Fig 10: CPUs see little benefit from batching.
+        let arm = CpuModel::arm_n1();
+        let m = ModelConfig::llama2_7b();
+        let b1 = arm.tokens_per_sec(&m, QuantLevel::Q4, 16, 1);
+        let b8 = arm.tokens_per_sec(&m, QuantLevel::Q4, 16, 8);
+        assert!(b8 / b1 < 1.3, "CPU batch-8 speedup {}", b8 / b1);
+    }
+
+    #[test]
+    fn amx_advantage_vanishes_at_q2() {
+        // Fig 11: Non-AMX ≈ AMX at Q2; AMX ahead at Q4/Q8.
+        let m = ModelConfig::llama2_7b();
+        let amx = CpuModel::amx();
+        let non = CpuModel::non_amx();
+        let q2r = amx.tokens_per_sec(&m, QuantLevel::Q2, 16, 1)
+            / non.tokens_per_sec(&m, QuantLevel::Q2, 16, 1);
+        assert!((q2r - 1.0).abs() < 0.05, "Q2 ratio {q2r}");
+        let q4r = amx.tokens_per_sec(&m, QuantLevel::Q4, 16, 1)
+            / non.tokens_per_sec(&m, QuantLevel::Q4, 16, 1);
+        assert!(q4r > 1.2, "Q4 ratio {q4r}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline performance models: ARM Neoverse-N1, Non-AMX x86, Intel AMX,
+//! NVIDIA V100/A100, and the Neural Cache PIM.
+//!
+//! ## Calibration methodology (DESIGN.md §Calibration)
+//!
+//! The paper calibrated its gem5 ARM model against GCP hardware (≤5.4%
+//! error) and measured AMX/GPU on real machines. Without that hardware we
+//! invert the process: each baseline is an analytical model whose physical
+//! parameters (bandwidths, frequencies, VRAM) come from public specs, and
+//! whose per-quantization-level efficiency constants are fitted once
+//! against the paper's *published measurements* (Table II single-thread
+//! columns for the CPUs, Table III for the GPUs). Constants live in
+//! [`calib`] with per-value provenance. SAIL's own numbers are NOT fitted
+//! — they come from the first-principles cycle model in [`crate::sim`].
+
+pub mod calib;
+pub mod cpu;
+pub mod gpu;
+pub mod neural_cache;
+
+pub use cpu::CpuModel;
+pub use gpu::GpuModel;
+pub use neural_cache::NeuralCacheModel;

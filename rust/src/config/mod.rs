@@ -1,0 +1,191 @@
+//! Deployment configuration: everything a `sail` run needs, loadable from
+//! a TOML file (`configs/*.toml`) with CLI overrides on top.
+//!
+//! Sections:
+//! - `[model]`    — which model + quantization to serve/simulate,
+//! - `[sail]`     — accelerator parameters (threads, NBW, PRT, in-memory
+//!                  TC, KV precision),
+//! - `[serving]`  — batch slots, workload shape,
+//! - `[arch.dram]`— memory-system overrides.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use crate::arch::{DramConfig, SystemConfig};
+use crate::model::{KvCacheSpec, ModelConfig};
+use crate::quant::QuantLevel;
+use crate::sim::SailPerfModel;
+use crate::util::toml::TomlDoc;
+
+/// A complete run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub level: QuantLevel,
+    pub threads: u32,
+    pub nbw: u32,
+    pub use_prt: bool,
+    pub in_memory_typeconv: bool,
+    pub kv_bits: u32,
+    pub batch: usize,
+    pub requests: usize,
+    pub rate_per_sec: f64,
+    pub dram_mt_per_sec: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: ModelConfig::llama2_7b(),
+            level: QuantLevel::Q4,
+            threads: 16,
+            nbw: 4,
+            use_prt: true,
+            in_memory_typeconv: true,
+            kv_bits: 8,
+            batch: 8,
+            requests: 16,
+            rate_per_sec: 4.0,
+            dram_mt_per_sec: 6400,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file; unknown model/quant names are errors,
+    /// missing keys fall back to defaults.
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let doc = TomlDoc::load(path).map_err(|e| anyhow!(e))?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<RunConfig> {
+        let d = RunConfig::default();
+        let model = match doc.str_or("model.name", "7b").to_lowercase().as_str() {
+            "7b" | "llama2-7b" => ModelConfig::llama2_7b(),
+            "13b" | "llama2-13b" => ModelConfig::llama2_13b(),
+            "248m" | "tinymistral" => ModelConfig::tinymistral_248m(),
+            "tiny" | "tiny-e2e" => ModelConfig::tiny_e2e(),
+            other => return Err(anyhow!("unknown model.name '{other}'")),
+        };
+        let quant = doc.str_or("model.quant", "q4");
+        let level =
+            QuantLevel::parse(&quant).ok_or_else(|| anyhow!("bad model.quant '{quant}'"))?;
+        let nbw = doc.usize_or("sail.nbw", d.nbw as usize) as u32;
+        if !(1..=8).contains(&nbw) {
+            return Err(anyhow!("sail.nbw must be 1..=8"));
+        }
+        Ok(RunConfig {
+            model,
+            level,
+            threads: doc.usize_or("sail.threads", d.threads as usize) as u32,
+            nbw,
+            use_prt: doc.bool_or("sail.prt", d.use_prt),
+            in_memory_typeconv: doc.bool_or("sail.in_memory_typeconv", d.in_memory_typeconv),
+            kv_bits: doc.usize_or("sail.kv_bits", d.kv_bits as usize) as u32,
+            batch: doc.usize_or("serving.batch", d.batch),
+            requests: doc.usize_or("serving.requests", d.requests),
+            rate_per_sec: doc.f64_or("serving.rate", d.rate_per_sec),
+            dram_mt_per_sec: doc.usize_or("arch.dram.mt_per_sec", d.dram_mt_per_sec as usize)
+                as u64,
+        })
+    }
+
+    /// Build the performance model this config describes.
+    pub fn perf_model(&self) -> SailPerfModel {
+        let mut system = SystemConfig::default();
+        system.dram = DramConfig { mt_per_sec: self.dram_mt_per_sec, ..DramConfig::default() };
+        SailPerfModel {
+            system,
+            level: self.level,
+            nbw: self.nbw,
+            group: 32,
+            threads: self.threads,
+            kv: if self.kv_bits <= 8 { KvCacheSpec::q8() } else { KvCacheSpec::fp16() },
+            use_prt: self.use_prt,
+            in_memory_typeconv: self.in_memory_typeconv,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml::TomlDoc;
+
+    #[test]
+    fn defaults_match_paper_config() {
+        let c = RunConfig::default();
+        let m = c.perf_model();
+        assert_eq!(m.threads, 16);
+        assert_eq!(m.nbw, 4);
+        assert!(m.use_prt && m.in_memory_typeconv);
+        assert_eq!(m.system.dram.mt_per_sec, 6400);
+    }
+
+    #[test]
+    fn full_file_roundtrip() {
+        let doc = TomlDoc::parse(
+            r#"
+[model]
+name = "13b"
+quant = "q2"
+
+[sail]
+threads = 8
+nbw = 2
+prt = false
+kv_bits = 16
+
+[serving]
+batch = 4
+rate = 9.5
+
+[arch.dram]
+mt_per_sec = 3200
+"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(c.model.name, "Llama-2-13B");
+        assert_eq!(c.level, QuantLevel::Q2);
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.nbw, 2);
+        assert!(!c.use_prt);
+        assert_eq!(c.kv_bits, 16);
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.rate_per_sec, 9.5);
+        let pm = c.perf_model();
+        assert_eq!(pm.system.dram.mt_per_sec, 3200);
+        assert_eq!(pm.kv.bits, 16);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        for bad in [
+            "[model]\nname = \"70b\"",
+            "[model]\nquant = \"q7\"",
+            "[sail]\nnbw = 9",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(RunConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn repo_config_files_parse() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs");
+        if !dir.exists() {
+            return;
+        }
+        let mut n = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().map(|e| e == "toml").unwrap_or(false) {
+                RunConfig::load(&p).unwrap_or_else(|e| panic!("{p:?}: {e}"));
+                n += 1;
+            }
+        }
+        assert!(n >= 3, "expected example configs, found {n}");
+    }
+}

@@ -1,0 +1,161 @@
+//! The decode-engine abstraction the batcher drives.
+//!
+//! Production uses [`PjrtEngine`] (the AOT-compiled model through PJRT);
+//! coordinator tests use [`MockEngine`], a deterministic token automaton
+//! with the same slot/KV semantics, so batching invariants can be property-
+//! tested without artifacts.
+
+use anyhow::Result;
+
+/// One decode iteration over all batch slots.
+///
+/// `tokens[s]`/`positions[s]` are only meaningful where `active[s]`;
+/// inactive slots still occupy compute (the fixed-batch artifact) but
+/// their outputs are ignored. Implementations must keep per-slot KV state
+/// keyed by slot index and clear it on `reset_slot`.
+pub trait DecodeEngine {
+    fn batch(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn max_context(&self) -> usize;
+    /// Returns the next token per slot (greedy).
+    fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>>;
+    /// Clear slot state before admitting a new request.
+    fn reset_slot(&mut self, slot: usize) -> Result<()>;
+}
+
+/// PJRT-backed engine over the AOT decode artifact.
+pub struct PjrtEngine {
+    model: crate::runtime::DecodeModel,
+}
+
+// SAFETY: the xla crate's client/executable/literal types hold raw C
+// pointers and an `Rc` to the client, making them !Send. A `PjrtEngine`
+// is constructed with its *own* client (`PjrtEngine::load`), holds the
+// only references to it, and is then moved wholesale into a single worker
+// thread (`Server::spawn`) — it is never aliased across threads, so
+// transferring ownership is sound. Do not clone the inner client out.
+unsafe impl Send for PjrtEngine {}
+
+impl PjrtEngine {
+    pub fn new(model: crate::runtime::DecodeModel) -> Self {
+        PjrtEngine { model }
+    }
+
+    pub fn load(dir: &std::path::Path, batch: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtEngine { model: crate::runtime::DecodeModel::load(&client, dir, batch)? })
+    }
+
+    pub fn steps_executed(&self) -> u64 {
+        self.model.steps_executed()
+    }
+}
+
+impl DecodeEngine for PjrtEngine {
+    fn batch(&self) -> usize {
+        self.model.batch
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.manifest.config.vocab
+    }
+
+    fn max_context(&self) -> usize {
+        self.model.manifest.config.max_context
+    }
+
+    fn step(&mut self, tokens: &[i32], positions: &[i32], _active: &[bool]) -> Result<Vec<i32>> {
+        let logits = self.model.step(tokens, positions)?;
+        Ok(self.model.argmax(&logits))
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        self.model.reset_kv(Some(&[slot]))
+    }
+}
+
+/// Deterministic mock: next token = hash(slot history) — context-sensitive
+/// (like a real LM, the output depends on everything fed so far), which
+/// lets tests detect KV-state leakage across requests.
+pub struct MockEngine {
+    batch: usize,
+    vocab: usize,
+    max_context: usize,
+    /// Per-slot rolling history hash (the "KV cache").
+    state: Vec<u64>,
+    pub steps: u64,
+}
+
+impl MockEngine {
+    pub fn new(batch: usize, vocab: usize, max_context: usize) -> Self {
+        MockEngine { batch, vocab, max_context, state: vec![0; batch], steps: 0 }
+    }
+}
+
+impl DecodeEngine for MockEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        assert_eq!(tokens.len(), self.batch);
+        self.steps += 1;
+        Ok((0..self.batch)
+            .map(|s| {
+                if !active[s] {
+                    return 0;
+                }
+                let mix = self.state[s]
+                    .wrapping_mul(0x100000001B3)
+                    .wrapping_add(tokens[s] as u64)
+                    .wrapping_add((positions[s] as u64) << 32);
+                self.state[s] = mix;
+                // Never emit token 0 (reserved as EOS in tests) unless the
+                // hash lands there; tests pick eos handling explicitly.
+                (mix % self.vocab as u64) as i32
+            })
+            .collect())
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        self.state[slot] = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic_and_context_sensitive() {
+        let mut e1 = MockEngine::new(2, 100, 64);
+        let mut e2 = MockEngine::new(2, 100, 64);
+        let a1 = e1.step(&[3, 4], &[0, 0], &[true, true]).unwrap();
+        let a2 = e2.step(&[3, 4], &[0, 0], &[true, true]).unwrap();
+        assert_eq!(a1, a2);
+        // Different history ⇒ different next token (with these inputs).
+        let b1 = e1.step(&[5, 5], &[1, 1], &[true, true]).unwrap();
+        e2.reset_slot(0).unwrap();
+        let b2 = e2.step(&[5, 5], &[1, 1], &[true, true]).unwrap();
+        assert_ne!(b1[0], b2[0], "reset must change slot-0 trajectory");
+        assert_eq!(b1[1], b2[1], "slot 1 unaffected by slot-0 reset");
+    }
+
+    #[test]
+    fn inactive_slots_are_inert() {
+        let mut e = MockEngine::new(2, 100, 64);
+        let out = e.step(&[1, 9], &[0, 0], &[true, false]).unwrap();
+        assert_eq!(out[1], 0);
+        // Slot 1 state untouched.
+        assert_eq!(e.state[1], 0);
+    }
+}

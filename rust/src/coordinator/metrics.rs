@@ -1,0 +1,105 @@
+//! Serving metrics: throughput, latency percentiles, utilization.
+
+use std::time::{Duration, Instant};
+
+use super::request::Response;
+use crate::util::stats::{Percentiles, Summary};
+
+/// Aggregated serving metrics over a run.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    started: Instant,
+    pub completed: u64,
+    pub tokens_generated: u64,
+    pub latency: Percentiles,
+    pub ttft: Percentiles,
+    pub tokens_per_req: Summary,
+    finished_at: Option<Instant>,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            started: Instant::now(),
+            completed: 0,
+            tokens_generated: 0,
+            latency: Percentiles::new(),
+            ttft: Percentiles::new(),
+            tokens_per_req: Summary::new(),
+            finished_at: None,
+        }
+    }
+
+    pub fn record(&mut self, r: &Response) {
+        self.completed += 1;
+        self.tokens_generated += r.tokens.len() as u64;
+        self.latency.push(r.latency.as_secs_f64() * 1e3);
+        self.ttft.push(r.ttft.as_secs_f64() * 1e3);
+        self.tokens_per_req.push(r.tokens.len() as f64);
+        self.finished_at = Some(Instant::now());
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.finished_at.unwrap_or_else(Instant::now) - self.started
+    }
+
+    /// Aggregate decode throughput (generated tokens per second).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / secs
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} elapsed={:.2}s throughput={:.2} tok/s\n\
+             latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms   \
+             ttft p50/p95 = {:.1}/{:.1} ms   mean tokens/req = {:.1}",
+            self.completed,
+            self.tokens_generated,
+            self.elapsed().as_secs_f64(),
+            self.tokens_per_sec(),
+            self.latency.p50(),
+            self.latency.p95(),
+            self.latency.p99(),
+            self.ttft.p50(),
+            self.ttft.p95(),
+            self.tokens_per_req.mean(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::FinishReason;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServingMetrics::new();
+        for i in 0..10u64 {
+            m.record(&Response {
+                id: i,
+                tokens: vec![1; 5],
+                ttft: Duration::from_millis(10 + i),
+                latency: Duration::from_millis(50 + i),
+                finish: FinishReason::MaxTokens,
+            });
+        }
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.tokens_generated, 50);
+        assert!(m.latency.p50() >= 50.0 && m.latency.p50() <= 60.0);
+        let rep = m.report();
+        assert!(rep.contains("requests=10"));
+        assert!(m.tokens_per_sec() > 0.0);
+    }
+}

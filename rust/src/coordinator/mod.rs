@@ -1,0 +1,32 @@
+//! The serving coordinator — SAIL's system layer in Rust.
+//!
+//! Multi-user, iteration-level batched serving (paper §III-A: "inference
+//! serving systems operate on an iteration-based principle when serving
+//! multiple users"): a fixed set of batch slots advances one token per
+//! iteration; free slots are refilled from the FIFO queue (continuous
+//! batching at iteration granularity). Tensor-level scheduling happens
+//! *inside* the engine: every iteration runs the whole model once for all
+//! active slots, so each weight is read exactly once per iteration.
+//!
+//! - [`request`]: request/response types + the synthetic workload
+//!   generator (Poisson arrivals, geometric lengths);
+//! - [`engine`]: the `DecodeEngine` abstraction — the PJRT-backed
+//!   [`crate::runtime::DecodeModel`] in production, a deterministic mock
+//!   for coordinator tests;
+//! - [`batcher`]: slot management and the iteration loop;
+//! - [`metrics`]: latency/throughput accounting;
+//! - [`server`]: the threaded front-end (submission queue + worker).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod policy;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{DecodeEngine, MockEngine, PjrtEngine};
+pub use metrics::ServingMetrics;
+pub use policy::{AdmissionPolicy, AdmissionQueue};
+pub use request::{Request, RequestId, Response, WorkloadGen};
+pub use server::Server;

@@ -1,0 +1,127 @@
+//! Request/response types and the synthetic multi-user workload generator.
+
+use crate::util::Prng;
+use std::time::Instant;
+
+/// Monotonically increasing request identifier.
+pub type RequestId = u64;
+
+/// An inference request from one user.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt token ids (already tokenized — the paper's serving scenario
+    /// receives pre-batched queries from Triton/RayLLM-style frontends).
+    pub prompt: Vec<i32>,
+    /// Generation budget.
+    pub max_new_tokens: usize,
+    /// Optional stop token.
+    pub eos: Option<i32>,
+    /// Arrival timestamp (set by the server).
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        Request { id, prompt, max_new_tokens, eos: None, arrival: Instant::now() }
+    }
+}
+
+/// A completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<i32>,
+    /// Time from arrival to first generated token.
+    pub ttft: std::time::Duration,
+    /// Time from arrival to completion.
+    pub latency: std::time::Duration,
+    /// Why generation stopped.
+    pub finish: FinishReason,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    Eos,
+    ContextFull,
+}
+
+/// Synthetic workload generator: Poisson arrivals, uniform prompt lengths,
+/// geometric-ish output lengths — the multi-user serving mix of §V-A.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    prng: Prng,
+    pub vocab: usize,
+    pub prompt_len: (usize, usize),
+    pub max_new: (usize, usize),
+    pub rate_per_sec: f64,
+    next_id: RequestId,
+}
+
+impl WorkloadGen {
+    pub fn new(seed: u64, vocab: usize) -> Self {
+        WorkloadGen {
+            prng: Prng::new(seed),
+            vocab,
+            prompt_len: (4, 16),
+            max_new: (8, 32),
+            rate_per_sec: 50.0,
+            next_id: 0,
+        }
+    }
+
+    /// Next request plus the inter-arrival gap preceding it.
+    pub fn next_request(&mut self) -> (Request, std::time::Duration) {
+        let gap = self.prng.exp(self.rate_per_sec);
+        let plen = self.prng.usize_in(self.prompt_len.0, self.prompt_len.1 + 1);
+        let prompt: Vec<i32> = (0..plen)
+            .map(|_| self.prng.usize_in(1, self.vocab) as i32)
+            .collect();
+        let max_new = self.prng.usize_in(self.max_new.0, self.max_new.1 + 1);
+        let id = self.next_id;
+        self.next_id += 1;
+        (Request::new(id, prompt, max_new), std::time::Duration::from_secs_f64(gap))
+    }
+
+    /// A batch of requests all arriving now.
+    pub fn burst(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request().0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_and_in_range() {
+        let mut a = WorkloadGen::new(9, 100);
+        let mut b = WorkloadGen::new(9, 100);
+        for _ in 0..50 {
+            let (ra, ga) = a.next_request();
+            let (rb, gb) = b.next_request();
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ga, gb);
+            assert!(ra.prompt.iter().all(|&t| t >= 1 && (t as usize) < 100));
+            assert!(ra.prompt.len() >= 4 && ra.prompt.len() <= 16);
+            assert!(ra.max_new_tokens >= 8 && ra.max_new_tokens <= 32);
+        }
+    }
+
+    #[test]
+    fn ids_are_unique_and_increasing() {
+        let mut g = WorkloadGen::new(1, 100);
+        let reqs = g.burst(20);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty prompt")]
+    fn empty_prompt_rejected() {
+        Request::new(0, vec![], 4);
+    }
+}

@@ -1,0 +1,177 @@
+//! Threaded serving front-end.
+//!
+//! A `Server` owns the batcher on a worker thread; clients submit requests
+//! through a channel and receive responses on another. Rust std threads +
+//! mpsc (no async runtime offline) — the event loop is the iteration loop
+//! itself, which is exactly the iteration-based serving principle the
+//! paper assumes.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::DecodeEngine;
+use super::metrics::ServingMetrics;
+use super::request::{Request, Response};
+
+enum Msg {
+    Submit(Request),
+    Drain,
+}
+
+/// A cloneable, thread-safe submission handle.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: Sender<Msg>,
+}
+
+impl Submitter {
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(Msg::Submit(req))
+            .map_err(|_| anyhow::anyhow!("server worker terminated"))
+    }
+}
+
+/// Handle to a running serving worker.
+pub struct Server {
+    tx: Sender<Msg>,
+    rx_done: Receiver<Response>,
+    worker: Option<JoinHandle<ServingMetrics>>,
+}
+
+impl Server {
+    /// Spawn the worker thread around an engine.
+    pub fn spawn<E: DecodeEngine + Send + 'static>(engine: E, cfg: BatcherConfig) -> Server {
+        let (tx, rx) = channel::<Msg>();
+        let (tx_done, rx_done) = channel::<Response>();
+        let worker = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(engine, cfg);
+            let mut metrics = ServingMetrics::new();
+            let mut draining = false;
+            loop {
+                // Pull everything available without blocking; block only
+                // when fully idle (nothing to compute).
+                loop {
+                    let msg = if batcher.is_idle() && !draining {
+                        match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => return metrics, // all senders gone
+                        }
+                    } else {
+                        match rx.try_recv() {
+                            Ok(m) => m,
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                draining = true;
+                                break;
+                            }
+                        }
+                    };
+                    match msg {
+                        Msg::Submit(r) => batcher.submit(r),
+                        Msg::Drain => draining = true,
+                    }
+                }
+                if batcher.is_idle() {
+                    if draining {
+                        return metrics;
+                    }
+                    continue;
+                }
+                for resp in batcher.run_iteration().expect("engine failure") {
+                    metrics.record(&resp);
+                    // Receiver may have hung up during shutdown; ignore.
+                    let _ = tx_done.send(resp);
+                }
+            }
+        });
+        Server { tx, rx_done, worker: Some(worker) }
+    }
+
+    /// Submit a request (non-blocking).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(Msg::Submit(req))
+            .map_err(|_| anyhow::anyhow!("server worker terminated"))
+    }
+
+    /// A cloneable, thread-safe submission handle for open-loop workload
+    /// threads.
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.tx.clone() }
+    }
+
+    /// Receive the next completed response, blocking.
+    pub fn recv(&self) -> Result<Response> {
+        self.rx_done
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker terminated"))
+    }
+
+    /// Signal no-more-requests and join, returning final metrics.
+    pub fn shutdown(mut self) -> ServingMetrics {
+        let _ = self.tx.send(Msg::Drain);
+        let worker = self.worker.take().expect("double shutdown");
+        worker.join().expect("worker panicked")
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Drain);
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::request::WorkloadGen;
+
+    #[test]
+    fn serves_a_burst_end_to_end() {
+        let server = Server::spawn(MockEngine::new(4, 97, 64), BatcherConfig::default());
+        let mut gen = WorkloadGen::new(3, 97);
+        let reqs = gen.burst(12);
+        let n = reqs.len();
+        for r in reqs {
+            server.submit(r).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..n {
+            got.push(server.recv().unwrap());
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed as usize, n);
+        assert!(metrics.tokens_generated > 0);
+        let mut ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shutdown_with_no_requests_is_clean() {
+        let server = Server::spawn(MockEngine::new(2, 97, 64), BatcherConfig::default());
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed, 0);
+    }
+
+    #[test]
+    fn staggered_submission_all_complete() {
+        let server = Server::spawn(MockEngine::new(2, 97, 64), BatcherConfig::default());
+        let mut gen = WorkloadGen::new(8, 97);
+        for _ in 0..3 {
+            let (r, _) = gen.next_request();
+            server.submit(r).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed, 3);
+    }
+}

@@ -1,0 +1,107 @@
+//! Cost-efficiency and hardware-overhead models (paper §V-H, §V-I, §V-J).
+//!
+//! - [`Platform`] carries Table IV's GCP monthly prices;
+//! - [`tokens_per_dollar`] computes the TPD metric:
+//!   `TPD = tokens/s × 30 days / monthly price`;
+//! - [`overhead`] reproduces Table V and the §V-I overhead accounting
+//!   (C-SRAM capacity, area, power).
+
+pub mod energy;
+pub mod overhead;
+
+/// A priced deployment platform (Table IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Platform {
+    pub name: &'static str,
+    pub monthly_usd: f64,
+}
+
+impl Platform {
+    /// 5-core CPU w/ 32 GB DRAM — $292.31/month.
+    pub fn cpu_5core() -> Self {
+        Platform { name: "5-core CPU", monthly_usd: 292.31 }
+    }
+
+    /// 16-core CPU w/ 32 GB DRAM — $665.45/month.
+    pub fn cpu_16core() -> Self {
+        Platform { name: "16-core CPU", monthly_usd: 665.45 }
+    }
+
+    /// 2-core CPU + 1×V100 (16 GB VRAM) — $1861.50/month.
+    pub fn gpu_1xv100() -> Self {
+        Platform { name: "1xV100", monthly_usd: 1861.5 }
+    }
+
+    /// 2-core CPU + 4×V100 — $7446.00/month.
+    pub fn gpu_4xv100() -> Self {
+        Platform { name: "4xV100", monthly_usd: 7446.0 }
+    }
+
+    /// SAIL deploys on the 16-core CPU node; the added silicon is ~2% of
+    /// the SoC (§V-J), which we surface as a 2% price uplift to keep the
+    /// comparison conservative.
+    pub fn sail_16core() -> Self {
+        Platform { name: "SAIL (16-core)", monthly_usd: 665.45 * 1.02 }
+    }
+
+    /// Single-thread SAIL on the small node (Fig 13's SAIL-1T).
+    pub fn sail_5core() -> Self {
+        Platform { name: "SAIL-1T (5-core)", monthly_usd: 292.31 * 1.02 }
+    }
+}
+
+/// Tokens per dollar: tokens/s sustained for 30 days per monthly dollar.
+pub fn tokens_per_dollar(tokens_per_sec: f64, platform: Platform) -> f64 {
+    let tokens_per_month = tokens_per_sec * 30.0 * 24.0 * 3600.0;
+    tokens_per_month / platform.monthly_usd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_prices() {
+        assert_eq!(Platform::cpu_5core().monthly_usd, 292.31);
+        assert_eq!(Platform::cpu_16core().monthly_usd, 665.45);
+        assert_eq!(Platform::gpu_1xv100().monthly_usd, 1861.5);
+        assert_eq!(Platform::gpu_4xv100().monthly_usd, 7446.0);
+    }
+
+    #[test]
+    fn tpd_arithmetic() {
+        // 1 tok/s on the 16-core node: 2.592M tokens / $665.45.
+        let tpd = tokens_per_dollar(1.0, Platform::cpu_16core());
+        assert!((tpd - 2_592_000.0 / 665.45).abs() < 1.0);
+    }
+
+    #[test]
+    fn headline_cost_ratios() {
+        // §I: SAIL up to 19.9× tokens/dollar vs the ARM CPU baseline and
+        // up to 7.04× vs V100 — check our models land in that regime for
+        // the favourable configuration (7B-Q2, batch 8).
+        use crate::baselines::{CpuModel, GpuModel};
+        use crate::model::ModelConfig;
+        use crate::quant::QuantLevel;
+        use crate::sim::SailPerfModel;
+        let m = ModelConfig::llama2_7b();
+        let q = QuantLevel::Q2;
+        let sail = SailPerfModel::paper_config(q, 16).tokens_per_sec(&m, 8);
+        let arm = CpuModel::arm_n1().tokens_per_sec(&m, q, 16, 8);
+        let sail_tpd = tokens_per_dollar(sail, Platform::sail_16core());
+        let arm_tpd = tokens_per_dollar(arm, Platform::cpu_16core());
+        let ratio = sail_tpd / arm_tpd;
+        assert!((5.0..=35.0).contains(&ratio), "SAIL/ARM TPD ratio {ratio}");
+
+        // vs V100 at Q2 (GPU quant kernels don't speed up below Q4; use Q4
+        // bytes as the GPU's effective floor, favouring the GPU).
+        let gpu = GpuModel::v100();
+        if let Some((gr, _)) = gpu.best_tokens_per_sec(&m, QuantLevel::Q4, 2048) {
+            let gpu_tpd = tokens_per_dollar(gr, Platform::gpu_1xv100());
+            let gratio = sail_tpd / gpu_tpd;
+            assert!((1.5..=15.0).contains(&gratio), "SAIL/V100 TPD ratio {gratio}");
+        } else {
+            panic!("V100 7B-Q4@2K must fit");
+        }
+    }
+}

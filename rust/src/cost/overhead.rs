@@ -1,0 +1,144 @@
+//! Hardware-overhead accounting (paper §III-D, §V-I, Table V).
+//!
+//! All constants are the paper's published synthesis results (FreePDK-45,
+//! PyMTL3 + OpenRAM, Synopsys DC + Cadence Innovus); this module
+//! reproduces the derived percentages and the Table V comparison rows.
+
+use crate::csram::CSramGeometry;
+
+/// Per-PRT synthesis figures (§III-D).
+pub const PRT_AREA_MM2: f64 = 0.0012;
+pub const PRT_POWER_MW: f64 = 0.25;
+/// DFM count in the evaluated system.
+pub const DFM_COUNT: u32 = 8;
+
+/// §V-I accounting for the evaluated SAIL configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadModel {
+    pub geom: CSramGeometry,
+    /// Hardware threads (each controls two C-SRAM blocks).
+    pub threads: u32,
+    /// LLC capacity in bytes (32 MB).
+    pub llc_bytes: u64,
+}
+
+impl Default for OverheadModel {
+    fn default() -> Self {
+        OverheadModel {
+            geom: CSramGeometry::default(),
+            threads: 16,
+            llc_bytes: 32 * 1024 * 1024,
+        }
+    }
+}
+
+impl OverheadModel {
+    /// C-SRAM bytes per thread: two 256×512-bit blocks = 32 KB (§V-I).
+    pub fn csram_bytes_per_thread(&self) -> u64 {
+        2 * self.geom.capacity_bytes()
+    }
+
+    /// Total added C-SRAM capacity.
+    pub fn total_csram_bytes(&self) -> u64 {
+        self.threads as u64 * self.csram_bytes_per_thread()
+    }
+
+    /// Capacity overhead relative to the LLC (§V-I: "only about 1.6%").
+    pub fn capacity_overhead_pct(&self) -> f64 {
+        self.total_csram_bytes() as f64 / self.llc_bytes as f64 * 100.0
+    }
+
+    /// PRT aggregate area (mm²) — "<0.01 mm²" for eight DFMs.
+    pub fn prt_total_area_mm2(&self) -> f64 {
+        DFM_COUNT as f64 * PRT_AREA_MM2
+    }
+
+    /// PRT aggregate power (mW) — "under 2 mW".
+    pub fn prt_total_power_mw(&self) -> f64 {
+        DFM_COUNT as f64 * PRT_POWER_MW
+    }
+
+    /// System-level area overhead (Table V: "~2%"): the C-SRAM arrays are
+    /// ~10% extra area *at the SRAM level* (per [9]); amortized over a die
+    /// where the LLC is ~20% of area, the system-level figure is ~2%.
+    pub fn system_area_overhead_pct(&self) -> f64 {
+        let sram_level = 10.0;
+        let llc_die_share = 0.20;
+        sram_level * llc_die_share
+    }
+
+    /// SRAM-level energy overhead (per [9], §V-I).
+    pub fn sram_energy_overhead_pct(&self) -> f64 {
+        20.0
+    }
+}
+
+/// One row of Table V.
+#[derive(Debug, Clone)]
+pub struct OverheadRow {
+    pub approach: &'static str,
+    pub hw_overhead: &'static str,
+    pub sys_overhead: &'static str,
+}
+
+/// Table V's comparison rows, verbatim.
+pub fn table5_rows() -> Vec<OverheadRow> {
+    vec![
+        OverheadRow {
+            approach: "Large-scale ASICs (TPU)",
+            hw_overhead: "Large buffers and dedicated logics",
+            sys_overhead: "Limited memory scalability",
+        },
+        OverheadRow {
+            approach: "Small-scale ASICs (AMX)",
+            hw_overhead: "Extra accelerator for tile-based MM",
+            sys_overhead: "Special instructions and compiler",
+        },
+        OverheadRow {
+            approach: "PIMs (EVE)",
+            hw_overhead: "Compute peripherals (~10% area)",
+            sys_overhead: "New instructions & OS modifications",
+        },
+        OverheadRow {
+            approach: "SAIL",
+            hw_overhead: "Minimal CPU and cache modifications (~2% area)",
+            sys_overhead: "Only one instruction; standard memory hierarchy",
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_overhead_matches_paper() {
+        let o = OverheadModel::default();
+        assert_eq!(o.csram_bytes_per_thread(), 32 * 1024);
+        assert_eq!(o.total_csram_bytes(), 512 * 1024);
+        // §V-I: "only about 1.6% compared with our 32MB LLC".
+        assert!((o.capacity_overhead_pct() - 1.5625).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prt_aggregates_match_paper() {
+        let o = OverheadModel::default();
+        assert!(o.prt_total_area_mm2() < 0.01);
+        assert!(o.prt_total_power_mw() <= 2.0);
+    }
+
+    #[test]
+    fn system_area_is_about_2pct() {
+        let o = OverheadModel::default();
+        assert!((o.system_area_overhead_pct() - 2.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn table5_has_sail_with_single_instruction() {
+        let rows = table5_rows();
+        assert_eq!(rows.len(), 4);
+        let sail = rows.last().unwrap();
+        assert_eq!(sail.approach, "SAIL");
+        assert!(sail.sys_overhead.to_lowercase().contains("one instruction"));
+    }
+}

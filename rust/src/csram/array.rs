@@ -1,0 +1,174 @@
+//! Array-level geometry, capacity rules, and physical constants.
+//!
+//! Prototype parameters from the paper (Table I and §V-I): each C-SRAM
+//! array is 256×512 bits (16 KB), estimated at 0.828 mm² and 37.076 mW in
+//! FreePDK-45, operating at the 3 GHz system clock. Each hardware thread
+//! drives two arrays (32 KB), and the evaluated system has 32 arrays — one
+//! per LLC slice.
+
+use super::lut::Lut;
+
+/// Geometry and physical constants of one C-SRAM array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CSramGeometry {
+    /// Word-line count (rows of bit-cells).
+    pub rows: u32,
+    /// Bit-line count (columns, elements processed in parallel).
+    pub cols: u32,
+    /// Estimated area (mm², FreePDK-45).
+    pub area_mm2: f64,
+    /// Estimated power (mW).
+    pub power_mw: f64,
+    /// Clock (GHz) — matches the system clock per the OpenRAM timing.
+    pub clock_ghz: f64,
+}
+
+impl Default for CSramGeometry {
+    fn default() -> Self {
+        CSramGeometry {
+            rows: 256,
+            cols: 512,
+            area_mm2: 0.828,
+            power_mw: 37.076,
+            clock_ghz: 3.0,
+        }
+    }
+}
+
+impl CSramGeometry {
+    /// Capacity in bytes when idling as plain LLC storage.
+    pub const fn capacity_bytes(&self) -> u64 {
+        (self.rows as u64 * self.cols as u64) / 8
+    }
+
+    /// Paper §III-C: maximum weight precision storable per column for a
+    /// given NBW: `bit_width_max = ⌊R / 2^NBW⌋` (the 2^NBW LUT entries are
+    /// stacked vertically in the column).
+    pub const fn max_bit_width(&self, nbw: u32) -> u32 {
+        self.rows / (1u32 << nbw)
+    }
+
+    /// Does (nbw, entry_bits) fit the row budget? The LUT needs
+    /// `2^NBW × entry_bits` rows plus an accumulator region.
+    pub fn lut_fits(&self, nbw: u32, w_bits: u32, acc_bits: u32) -> bool {
+        let entry_bits = Lut::entry_bits(w_bits, nbw);
+        let lut_rows = (1u64 << nbw) * entry_bits as u64;
+        lut_rows + acc_bits as u64 <= self.rows as u64
+    }
+
+    /// Read latency for one full 512-bit row (paper: "rapid retrieval of a
+    /// full cache block in a single cycle").
+    pub const fn row_read_cycles(&self) -> u64 {
+        1
+    }
+}
+
+/// A C-SRAM array instance: geometry plus its dual-mode state. The
+/// functional compute paths live in [`super::bitline`] and
+/// [`super::lut`]; this type tracks *occupancy* so the simulator can
+/// enforce capacity and account for the storage-mode capacity bonus.
+#[derive(Debug, Clone)]
+pub struct CSramArray {
+    pub geom: CSramGeometry,
+    /// Rows currently reserved for LUT + accumulator during compute mode.
+    reserved_rows: u32,
+    /// Whether the array is lent to the LLC as storage (idle mode).
+    storage_mode: bool,
+}
+
+impl CSramArray {
+    pub fn new(geom: CSramGeometry) -> Self {
+        CSramArray { geom, reserved_rows: 0, storage_mode: true }
+    }
+
+    /// Enter compute mode for a LUT-GEMV with the given parameters.
+    /// Returns the rows reserved, or `None` if the configuration does not
+    /// fit (caller must lower NBW or precision).
+    pub fn enter_compute(&mut self, nbw: u32, w_bits: u32, acc_bits: u32) -> Option<u32> {
+        if !self.geom.lut_fits(nbw, w_bits, acc_bits) {
+            return None;
+        }
+        let entry_bits = Lut::entry_bits(w_bits, nbw);
+        let rows = (1u32 << nbw) * entry_bits + acc_bits;
+        self.reserved_rows = rows;
+        self.storage_mode = false;
+        Some(rows)
+    }
+
+    /// Leave compute mode; the array reverts to LLC storage.
+    pub fn exit_compute(&mut self) {
+        self.reserved_rows = 0;
+        self.storage_mode = true;
+    }
+
+    pub fn in_storage_mode(&self) -> bool {
+        self.storage_mode
+    }
+
+    /// Bytes available to the LLC right now.
+    pub fn storage_bytes(&self) -> u64 {
+        if self.storage_mode {
+            self.geom.capacity_bytes()
+        } else {
+            let free_rows = self.geom.rows - self.reserved_rows;
+            free_rows as u64 * self.geom.cols as u64 / 8
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_geometry_matches_paper() {
+        let g = CSramGeometry::default();
+        assert_eq!(g.capacity_bytes(), 16 * 1024);
+        assert!((g.area_mm2 - 0.828).abs() < 1e-9);
+        assert!((g.power_mw - 37.076).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_bit_width_formula() {
+        let g = CSramGeometry::default();
+        // Paper §III-C: "With NBW=2, we can theoretically support up to
+        // 64-bit weights."
+        assert_eq!(g.max_bit_width(2), 64);
+        assert_eq!(g.max_bit_width(3), 32);
+        assert_eq!(g.max_bit_width(4), 16);
+        assert_eq!(g.max_bit_width(1), 128);
+    }
+
+    #[test]
+    fn lut_fit_boundaries() {
+        let g = CSramGeometry::default();
+        // NBW=4, Q8: entries are 10-bit → 160 rows + acc fits.
+        assert!(g.lut_fits(4, 8, 32));
+        // NBW=5, Q8: 32 entries × 11 bits = 352 rows > 256 → no fit.
+        assert!(!g.lut_fits(5, 8, 32));
+        // NBW=4, Q4 fits easily.
+        assert!(g.lut_fits(4, 4, 32));
+    }
+
+    #[test]
+    fn compute_storage_duality() {
+        let mut a = CSramArray::new(CSramGeometry::default());
+        assert!(a.in_storage_mode());
+        assert_eq!(a.storage_bytes(), 16 * 1024);
+        let rows = a.enter_compute(3, 4, 24).unwrap();
+        assert!(!a.in_storage_mode());
+        // 8 entries × 6 bits + 24 acc = 72 rows reserved.
+        assert_eq!(rows, 72);
+        assert_eq!(a.storage_bytes(), (256 - 72) as u64 * 512 / 8);
+        a.exit_compute();
+        assert!(a.in_storage_mode());
+        assert_eq!(a.storage_bytes(), 16 * 1024);
+    }
+
+    #[test]
+    fn oversize_config_rejected() {
+        let mut a = CSramArray::new(CSramGeometry::default());
+        assert!(a.enter_compute(6, 8, 32).is_none());
+        assert!(a.in_storage_mode(), "failed reservation must not change mode");
+    }
+}

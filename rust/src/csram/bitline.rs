@@ -1,0 +1,238 @@
+//! Bitline-computing primitives (paper §IV-B d).
+//!
+//! The BC-SRAM activates two wordlines at once; single-ended sense
+//! amplifiers read the wire-AND of the two cells on each bitline, and a
+//! lightweight logic stage derives NOR/XOR, giving a full adder one bit at
+//! a time. Data is stored *vertically* (bit i of every element in row i),
+//! so one bit-serial step operates on all 512 columns in parallel.
+//!
+//! Published costs (paper §IV-B): an n-bit add completes in **n + 1**
+//! cycles and an n-bit multiply in **n² + 5n − 2** cycles.
+//!
+//! The functional model below actually computes bit-serially over column
+//! vectors and counts cycles, so tests can check both the arithmetic and
+//! the cycle formulas simultaneously.
+
+/// Cycles for an n-bit bit-serial addition (all columns in parallel).
+pub const fn add_cycles(n: u32) -> u64 {
+    n as u64 + 1
+}
+
+/// Cycles for an n-bit bit-serial multiplication.
+pub const fn mult_cycles(n: u32) -> u64 {
+    let n = n as u64;
+    n * n + 5 * n - 2
+}
+
+/// A vertical register file: `bits[i]` is a 512-wide bit-plane stored in one
+/// SRAM row; column c of the array holds element c. Elements are
+/// two's-complement with `width` bits.
+#[derive(Debug, Clone)]
+pub struct VerticalSlice {
+    /// bit-planes, LSB first; each u64 vector packs 512 column bits.
+    planes: Vec<[u64; 8]>,
+    width: u32,
+}
+
+pub const COLUMNS: usize = 512;
+
+impl VerticalSlice {
+    /// Store `values` (≤ 512 of them) vertically at `width` bits.
+    pub fn from_values(values: &[i64], width: u32) -> Self {
+        assert!(values.len() <= COLUMNS, "more elements than columns");
+        assert!((1..=63).contains(&width));
+        let mut planes = vec![[0u64; 8]; width as usize];
+        for (c, &v) in values.iter().enumerate() {
+            let lo = -(1i64 << (width - 1));
+            let hi = (1i64 << (width - 1)) - 1;
+            assert!(v >= lo && v <= hi, "{v} not representable in {width} bits");
+            let u = (v as u64) & ((1u64 << width) - 1);
+            for b in 0..width {
+                if (u >> b) & 1 == 1 {
+                    planes[b as usize][c / 64] |= 1u64 << (c % 64);
+                }
+            }
+        }
+        VerticalSlice { planes, width }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Read element `c` back (sign-extended).
+    pub fn get(&self, c: usize) -> i64 {
+        let mut u: u64 = 0;
+        for b in 0..self.width {
+            let bit = (self.planes[b as usize][c / 64] >> (c % 64)) & 1;
+            u |= bit << b;
+        }
+        let sign = 1u64 << (self.width - 1);
+        ((u ^ sign) as i64).wrapping_sub(sign as i64)
+    }
+
+    /// Sign-extend in place to a wider representation (replicates the sign
+    /// plane; free in hardware — the RCU just re-reads the top row).
+    pub fn sign_extend(&mut self, new_width: u32) {
+        assert!(new_width >= self.width);
+        let sign_plane = self.planes[self.width as usize - 1];
+        while (self.planes.len() as u32) < new_width {
+            self.planes.push(sign_plane);
+        }
+        self.width = new_width;
+    }
+
+    /// Bit-serial elementwise add: `self += other`, both sign-extended to
+    /// `out_width` first. Returns cycles consumed, which must equal
+    /// `add_cycles(out_width)`.
+    pub fn add_assign(&mut self, other: &VerticalSlice, out_width: u32) -> u64 {
+        self.sign_extend(out_width);
+        let mut o = other.clone();
+        o.sign_extend(out_width);
+        let mut carry = [0u64; 8];
+        let mut cycles: u64 = 0;
+        for b in 0..out_width as usize {
+            // One cycle: read two planes (dual wordline), write sum plane.
+            let a = self.planes[b];
+            let x = o.planes[b];
+            for w in 0..8 {
+                let s = a[w] ^ x[w] ^ carry[w];
+                let c = (a[w] & x[w]) | (carry[w] & (a[w] ^ x[w]));
+                self.planes[b][w] = s;
+                carry[w] = c;
+            }
+            cycles += 1;
+        }
+        cycles += 1; // final carry settle / status cycle (the "+1")
+        debug_assert_eq!(cycles, add_cycles(out_width));
+        cycles
+    }
+
+    /// Bit-serial left shift by `k` (toward MSB), dropping overflow planes.
+    /// One cycle per plane move in hardware; returns cycles.
+    pub fn shl(&mut self, k: u32) -> u64 {
+        for _ in 0..k {
+            self.planes.insert(0, [0u64; 8]);
+            self.planes.pop();
+        }
+        k as u64
+    }
+
+    /// Bit-serial multiply of every column by the same small unsigned
+    /// constant (shift-add). Used by Algorithm 1's mantissa alignment.
+    /// Returns cycles; bounded by `mult_cycles(width)`.
+    pub fn mul_const(&mut self, m: u64, out_width: u32) -> u64 {
+        self.sign_extend(out_width);
+        let orig = self.clone();
+        // zero self
+        for p in self.planes.iter_mut() {
+            *p = [0u64; 8];
+        }
+        let mut cycles = 0;
+        let mut first = true;
+        for b in 0..out_width {
+            if (m >> b) & 1 == 1 {
+                let mut shifted = orig.clone();
+                cycles += shifted.shl(b);
+                if first {
+                    self.planes = shifted.planes.clone();
+                    first = false;
+                    cycles += 1;
+                } else {
+                    cycles += self.add_assign(&shifted, out_width);
+                }
+            }
+        }
+        debug_assert!(cycles <= mult_cycles(out_width));
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    #[test]
+    fn cycle_formulas_match_paper() {
+        assert_eq!(add_cycles(8), 9);
+        assert_eq!(add_cycles(16), 17);
+        assert_eq!(mult_cycles(8), 64 + 40 - 2);
+        assert_eq!(mult_cycles(4), 16 + 20 - 2);
+    }
+
+    #[test]
+    fn vertical_roundtrip() {
+        let vals: Vec<i64> = vec![0, 1, -1, 127, -128, 55, -56];
+        let v = VerticalSlice::from_values(&vals, 8);
+        for (c, &want) in vals.iter().enumerate() {
+            assert_eq!(v.get(c), want, "col {c}");
+        }
+    }
+
+    #[test]
+    fn add_matches_scalar_and_cycles() {
+        propcheck::check(
+            "bitline-add",
+            propcheck::Config { cases: 100, seed: 31 },
+            |p, _| {
+                let w = p.usize_in(2, 12) as u32;
+                let n = p.usize_in(1, 64);
+                let a: Vec<i64> = (0..n).map(|_| p.signed_bits(w)).collect();
+                let b: Vec<i64> = (0..n).map(|_| p.signed_bits(w)).collect();
+                (w, a, b)
+            },
+            |(w, a, b)| {
+                let out_w = w + 1;
+                let mut va = VerticalSlice::from_values(a, *w);
+                let vb = VerticalSlice::from_values(b, *w);
+                let cycles = va.add_assign(&vb, out_w);
+                if cycles != add_cycles(out_w) {
+                    return Err(format!("cycles {cycles} != {}", add_cycles(out_w)));
+                }
+                for c in 0..a.len() {
+                    if va.get(c) != a[c] + b[c] {
+                        return Err(format!("col {c}: {} != {}", va.get(c), a[c] + b[c]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shl_is_multiply_by_pow2() {
+        let vals: Vec<i64> = vec![3, -5, 7];
+        let mut v = VerticalSlice::from_values(&vals, 8);
+        v.sign_extend(16);
+        v.shl(3);
+        for (c, &x) in vals.iter().enumerate() {
+            assert_eq!(v.get(c), x * 8);
+        }
+    }
+
+    #[test]
+    fn mul_const_matches_scalar() {
+        let mut prng = Prng::new(77);
+        for _ in 0..50 {
+            let w = 6u32;
+            let out_w = 16u32;
+            let vals: Vec<i64> = (0..32).map(|_| prng.signed_bits(w)).collect();
+            let m = prng.gen_range(200) + 1;
+            let mut v = VerticalSlice::from_values(&vals, w);
+            let cycles = v.mul_const(m, out_w);
+            assert!(cycles <= mult_cycles(out_w));
+            for (c, &x) in vals.iter().enumerate() {
+                let want = (x * m as i64) & ((1 << out_w) - 1);
+                let got = v.get(c) & ((1 << out_w) - 1);
+                assert_eq!(got, want, "col {c} x={x} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "more elements than columns")]
+    fn column_capacity_enforced() {
+        VerticalSlice::from_values(&vec![0; 513], 4);
+    }
+}

@@ -1,0 +1,178 @@
+//! LUT construction and storage inside a C-SRAM array (paper §II-C, Fig 2).
+//!
+//! For a group of `NBW` basis weights `w_0..w_{NBW-1}`, the LUT holds all
+//! `2^NBW` subset sums: entry `p` = Σ w_k over set bits of `p`, where bit
+//! `NBW-1-k` of `p` corresponds to weight `w_k` (Fig 2: pattern `001`
+//! fetches `W_2`, `100` fetches `W_0`). The table is built once per weight
+//! group and reused across every activation bit-plane and every request in
+//! the batch — that reuse is the entire LUT-GEMV advantage.
+//!
+//! Construction uses the bitline adder: each new entry with more than one
+//! set bit is (entry with lowest set bit cleared) + (that one weight), so
+//! exactly `2^NBW − NBW − 1` adds build the table after the `NBW`
+//! single-weight entries are copied in.
+
+use super::bitline::add_cycles;
+
+/// A functional LUT for one weight group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lut {
+    entries: Vec<i64>,
+    nbw: u32,
+}
+
+impl Lut {
+    /// Build from basis weights. `weights.len()` must equal `nbw` and be
+    /// in 1..=8 (the PRT hashes NBW-bit patterns; the C-SRAM row budget
+    /// caps practical NBW at ~4 anyway — see `CSramGeometry::max_bit_width`).
+    pub fn build(weights: &[i64], nbw: u32) -> Self {
+        let mut entries = vec![0i64; 1usize << nbw];
+        Self::build_into(weights, nbw, &mut entries);
+        Lut { entries, nbw }
+    }
+
+    /// Allocation-free build into a caller buffer of length `2^nbw` —
+    /// the engine's hot loop rebuilds thousands of LUTs per GEMV.
+    #[inline]
+    pub fn build_into(weights: &[i64], nbw: u32, entries: &mut [i64]) {
+        assert_eq!(weights.len(), nbw as usize);
+        assert!((1..=8).contains(&nbw), "NBW out of supported range");
+        let n = 1usize << nbw;
+        assert_eq!(entries.len(), n);
+        entries[0] = 0;
+        for p in 1..n {
+            // bit (nbw-1-k) of p selects weights[k]
+            let low = p & p.wrapping_neg(); // lowest set bit
+            let k = nbw as usize - 1 - low.trailing_zeros() as usize;
+            entries[p] = entries[p & (p - 1)] + weights[k];
+        }
+    }
+
+    /// Entry count (2^NBW).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn nbw(&self) -> u32 {
+        self.nbw
+    }
+
+    /// Look up the subset sum for an activation bit pattern.
+    #[inline]
+    pub fn get(&self, pattern: u32) -> i64 {
+        self.entries[pattern as usize]
+    }
+
+    /// Number of bitline adds to build the table (after copying the NBW
+    /// single-weight rows): `2^NBW − NBW − 1`.
+    pub const fn build_adds(nbw: u32) -> u64 {
+        (1u64 << nbw) - nbw as u64 - 1
+    }
+
+    /// Cycles to build the LUT in-array for entries `entry_bits` wide:
+    /// NBW row copies (1 cycle each, full-row width) + the subset-sum adds.
+    pub const fn build_cycles(nbw: u32, entry_bits: u32) -> u64 {
+        nbw as u64 + Self::build_adds(nbw) * add_cycles(entry_bits)
+    }
+
+    /// Bit width needed for an entry: sums of up to NBW `w_bits`-bit signed
+    /// values need `w_bits + ceil(log2(NBW))` bits (NBW=1 needs no growth).
+    pub const fn entry_bits(w_bits: u32, nbw: u32) -> u32 {
+        let extra = if nbw <= 1 {
+            0
+        } else if nbw <= 2 {
+            1
+        } else if nbw <= 4 {
+            2
+        } else {
+            3
+        };
+        w_bits + extra
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    #[test]
+    fn fig2_example() {
+        // Fig 2: weights [W0, W1, W2]; pattern 001 -> W2, 100 -> W0,
+        // 111 -> W0+W1+W2.
+        let lut = Lut::build(&[10, 20, 40], 3);
+        assert_eq!(lut.get(0b000), 0);
+        assert_eq!(lut.get(0b001), 40);
+        assert_eq!(lut.get(0b010), 20);
+        assert_eq!(lut.get(0b100), 10);
+        assert_eq!(lut.get(0b011), 60);
+        assert_eq!(lut.get(0b111), 70);
+    }
+
+    #[test]
+    fn all_subset_sums_property() {
+        propcheck::check(
+            "lut-subset-sums",
+            propcheck::Config { cases: 120, seed: 41 },
+            |p, _| {
+                let nbw = p.usize_in(1, 6) as u32;
+                let ws: Vec<i64> = (0..nbw).map(|_| p.signed_bits(8)).collect();
+                (nbw, ws)
+            },
+            |(nbw, ws)| {
+                let lut = Lut::build(ws, *nbw);
+                for pat in 0..(1usize << nbw) {
+                    let want: i64 = (0..*nbw)
+                        .filter(|k| (pat >> (nbw - 1 - k)) & 1 == 1)
+                        .map(|k| ws[k as usize])
+                        .sum();
+                    if lut.get(pat as u32) != want {
+                        return Err(format!("pattern {pat:#b}: {} != {want}", lut.get(pat as u32)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn build_cost_formula() {
+        assert_eq!(Lut::build_adds(1), 0);
+        assert_eq!(Lut::build_adds(2), 1);
+        assert_eq!(Lut::build_adds(3), 4);
+        assert_eq!(Lut::build_adds(4), 11);
+        // NBW=3, 4-bit weights → 6-bit entries → 4 adds × 7 cycles + 3 copies.
+        assert_eq!(Lut::build_cycles(3, 6), 3 + 4 * 7);
+    }
+
+    #[test]
+    fn entry_bits_growth() {
+        assert_eq!(Lut::entry_bits(4, 1), 4);
+        assert_eq!(Lut::entry_bits(4, 2), 5);
+        assert_eq!(Lut::entry_bits(4, 3), 6);
+        assert_eq!(Lut::entry_bits(4, 4), 6);
+        assert_eq!(Lut::entry_bits(8, 4), 10);
+    }
+
+    #[test]
+    fn entries_never_overflow_entry_bits() {
+        let mut p = Prng::new(3);
+        for _ in 0..200 {
+            let nbw = p.usize_in(1, 5) as u32;
+            let w_bits = [2u32, 3, 4, 5, 6, 8][p.usize_in(0, 6)];
+            let ws: Vec<i64> = (0..nbw).map(|_| p.signed_bits(w_bits)).collect();
+            let lut = Lut::build(&ws, nbw);
+            let eb = Lut::entry_bits(w_bits, nbw);
+            let hi = (1i64 << (eb - 1)) - 1;
+            let lo = -(1i64 << (eb - 1));
+            for pat in 0..(1u32 << nbw) {
+                let v = lut.get(pat);
+                assert!(v >= lo && v <= hi, "entry {v} overflows {eb} bits (nbw={nbw}, w_bits={w_bits})");
+            }
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! C-SRAM: the compute-capable SRAM array attached to each LLC slice
+//! (paper §IV-B, Fig 7b–e).
+//!
+//! A C-SRAM is a 256×512-bit Bitline-Computing SRAM (BC-SRAM) with two row
+//! decoders (simultaneous two-wordline activation for wire-AND), modified
+//! single-ended sense amplifiers with a lightweight logic stage, a transpose
+//! unit (horizontal↔vertical layout for bit-serial arithmetic), and a
+//! Reconfigurable Control Unit. When no AI kernel is active it serves as
+//! extra LLC capacity (dual compute/storage functionality).
+//!
+//! Submodules:
+//! - [`bitline`]: the bit-serial compute primitives and their published
+//!   cycle costs (n-bit add = n+1 cycles, n-bit mult = n²+5n−2 cycles),
+//!   plus a functional bit-level simulation used to validate them;
+//! - [`lut`]: LUT construction and storage layout inside the array;
+//! - [`array`]: the array-level geometry, capacity rules
+//!   (bit_width_max = ⌊R/2^NBW⌋), and area/power constants;
+//! - [`transpose`]: the transposer's layout conversion + cycle model.
+
+pub mod array;
+pub mod bitline;
+pub mod datapath;
+pub mod lut;
+pub mod transpose;
+
+pub use array::{CSramArray, CSramGeometry};
+pub use lut::Lut;

@@ -1,0 +1,119 @@
+//! The transpose unit (paper §IV-B e, adapted from Neural Cache).
+//!
+//! Cache lines arrive *horizontal* (one element's bits contiguous in a row);
+//! bit-serial arithmetic needs them *vertical* (bit i of every element in
+//! row i). The transposer converts an h-layout tile to v-layout as it is
+//! written into the BC-SRAM, one 512-bit row per cycle, with the RCU
+//! adjusting the walk for the data's quantization level.
+
+use crate::util::ceil_div;
+
+/// Transpose an element-per-row horizontal tile into bit-plane-major
+/// vertical layout. `data[e]` is element e's two's-complement value,
+/// `bits` its width. Returns `planes[b][w]` bit-packed planes (LSB plane
+/// first), exactly the layout `bitline::VerticalSlice` consumes.
+pub fn h_to_v(data: &[i64], bits: u32) -> Vec<Vec<u64>> {
+    let words = ceil_div(data.len().max(1), 64);
+    let mut planes = vec![vec![0u64; words]; bits as usize];
+    for (e, &v) in data.iter().enumerate() {
+        let u = (v as u64) & if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        for b in 0..bits as usize {
+            if (u >> b) & 1 == 1 {
+                planes[b][e / 64] |= 1u64 << (e % 64);
+            }
+        }
+    }
+    planes
+}
+
+/// Inverse transform (used when results leave the array for the NoC).
+pub fn v_to_h(planes: &[Vec<u64>], count: usize) -> Vec<i64> {
+    let bits = planes.len() as u32;
+    (0..count)
+        .map(|e| {
+            let mut u: u64 = 0;
+            for (b, plane) in planes.iter().enumerate() {
+                u |= ((plane[e / 64] >> (e % 64)) & 1) << b;
+            }
+            let sign = 1u64 << (bits - 1);
+            ((u ^ sign) as i64).wrapping_sub(sign as i64)
+        })
+        .collect()
+}
+
+/// Cycles to stream a tile of `elems` elements of `bits` width through the
+/// transposer: one 512-bit row enters per cycle, and the unit emits one
+/// bit-plane row per cycle on the far side — the walk is fully pipelined,
+/// so cost is max(input rows, output planes) + 1 fill cycle per tile of
+/// 512 elements.
+pub fn transpose_cycles(elems: usize, bits: u32) -> u64 {
+    let tiles = ceil_div(elems.max(1), 512);
+    let input_rows_per_tile = ceil_div(512 * bits as usize, 512) as u64; // = bits
+    let output_planes = bits as u64;
+    tiles as u64 * (input_rows_per_tile.max(output_planes) + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    #[test]
+    fn roundtrip_property() {
+        propcheck::check(
+            "transpose-roundtrip",
+            propcheck::Config { cases: 100, seed: 51 },
+            |p, i| {
+                let bits = p.usize_in(2, 16) as u32;
+                let n = p.usize_in(1, 70 + i);
+                let vals: Vec<i64> = (0..n).map(|_| p.signed_bits(bits)).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let planes = h_to_v(vals, *bits);
+                let back = v_to_h(&planes, vals.len());
+                if back == *vals {
+                    Ok(())
+                } else {
+                    Err("transpose roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn plane_layout_is_lsb_first() {
+        let planes = h_to_v(&[0b101, 0b010], 3);
+        assert_eq!(planes[0][0] & 0b11, 0b01); // LSBs: elem0=1, elem1=0
+        assert_eq!(planes[1][0] & 0b11, 0b10);
+        assert_eq!(planes[2][0] & 0b11, 0b01);
+    }
+
+    #[test]
+    fn cycle_model_scales_with_tiles() {
+        assert_eq!(transpose_cycles(512, 8), 9);
+        assert_eq!(transpose_cycles(1024, 8), 18);
+        assert_eq!(transpose_cycles(1, 4), 5);
+        // cost grows with precision (more planes to emit)
+        assert!(transpose_cycles(512, 8) > transpose_cycles(512, 2));
+    }
+
+    #[test]
+    fn matches_vertical_slice_layout() {
+        use crate::csram::bitline::VerticalSlice;
+        let mut p = Prng::new(9);
+        let vals: Vec<i64> = (0..100).map(|_| p.signed_bits(6)).collect();
+        let planes = h_to_v(&vals, 6);
+        let vs = VerticalSlice::from_values(&vals, 6);
+        for (c, &v) in vals.iter().enumerate() {
+            assert_eq!(vs.get(c), v);
+            let mut u = 0u64;
+            for (b, plane) in planes.iter().enumerate() {
+                u |= ((plane[c / 64] >> (c % 64)) & 1) << b;
+            }
+            let sign = 1u64 << 5;
+            let signed = ((u ^ sign) as i64).wrapping_sub(sign as i64);
+            assert_eq!(signed, v);
+        }
+    }
+}

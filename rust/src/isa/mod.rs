@@ -1,0 +1,201 @@
+//! The `lutmm_1k` RISC-V ISA extension (paper Fig 8).
+//!
+//! A single new instruction drives the whole accelerator: a tiled
+//! `[1,1024]×[1024,1024]` LUT-GEMV. Bit layout (Fig 8):
+//!
+//! ```text
+//! [31:27] [26:25] [24:20] [19:15] [14:12] [11:7] [6:0]
+//!   loc     sc      rw      ri      ql      rd   opcode
+//! ```
+//!
+//! - `loc`  (5b): which 1024-wide tile of the full GEMV this is,
+//! - `sc`   (2b): log2 scale factor — full matrix width = 1024 × 2^sc,
+//! - `rw`   (5b): register holding the weight-tile base address,
+//! - `ri`   (5b): register holding the input-vector base address,
+//! - `ql`   (3b): quantization level (Q2/3/4/5/6/8),
+//! - `rd`   (5b): register holding the result base address,
+//! - `opcode` (7b): custom-0 (0x0B), the RISC-V custom opcode space.
+//!
+//! The coordinator emits streams of these; the simulator decodes and
+//! executes them (see `sim::`). Encode∘decode is bit-exact and tested
+//! exhaustively over field ranges.
+
+use crate::quant::QuantLevel;
+
+/// The custom-0 RISC-V opcode used by `lutmm_1k`.
+pub const LUTMM_OPCODE: u32 = 0x0B;
+
+/// Tile dimension the instruction contracts to (paper §IV-A).
+pub const TILE_DIM: usize = 1024;
+
+/// Decoded `lutmm_1k` instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LutMm1k {
+    /// Tile index within the full GEMV (column-tile position).
+    pub loc: u8,
+    /// log2(width/1024): full weight width = 1024 << sc.
+    pub sc: u8,
+    /// Weight base-address register index.
+    pub rw: u8,
+    /// Input base-address register index.
+    pub ri: u8,
+    /// Quantization level.
+    pub ql: QuantLevel,
+    /// Result base-address register index.
+    pub rd: u8,
+}
+
+/// Errors from decoding a 32-bit word that is not a valid `lutmm_1k`.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum IsaError {
+    #[error("opcode {0:#x} is not lutmm_1k ({LUTMM_OPCODE:#x})")]
+    BadOpcode(u32),
+    #[error("ql field {0} does not name a quantization level")]
+    BadQl(u8),
+    #[error("loc {loc} out of range for sc {sc} (width {width})")]
+    LocOutOfRange { loc: u8, sc: u8, width: usize },
+}
+
+impl LutMm1k {
+    /// Construct, validating that `loc` addresses a tile inside the matrix
+    /// width implied by `sc`.
+    pub fn new(loc: u8, sc: u8, rw: u8, ri: u8, ql: QuantLevel, rd: u8) -> Result<Self, IsaError> {
+        assert!(loc < 32 && sc < 4 && rw < 32 && ri < 32 && rd < 32, "field width overflow");
+        let tiles = 1usize << sc;
+        if (loc as usize) >= tiles {
+            return Err(IsaError::LocOutOfRange { loc, sc, width: TILE_DIM << sc });
+        }
+        Ok(LutMm1k { loc, sc, rw, ri, ql, rd })
+    }
+
+    /// Full weight-matrix width implied by `sc` (paper example: sc=3 →
+    /// width 8192).
+    pub fn full_width(&self) -> usize {
+        TILE_DIM << self.sc
+    }
+
+    /// Column range `[start, end)` of the tile this instruction computes
+    /// (paper example: loc=5 → columns 5120..6144).
+    pub fn tile_columns(&self) -> (usize, usize) {
+        let start = self.loc as usize * TILE_DIM;
+        (start, start + TILE_DIM)
+    }
+
+    /// Encode to the 32-bit instruction word.
+    pub fn encode(&self) -> u32 {
+        ((self.loc as u32) << 27)
+            | ((self.sc as u32) << 25)
+            | ((self.rw as u32) << 20)
+            | ((self.ri as u32) << 15)
+            | ((self.ql.ql_code() as u32) << 12)
+            | ((self.rd as u32) << 7)
+            | LUTMM_OPCODE
+    }
+
+    /// Decode a 32-bit instruction word.
+    pub fn decode(word: u32) -> Result<Self, IsaError> {
+        let opcode = word & 0x7F;
+        if opcode != LUTMM_OPCODE {
+            return Err(IsaError::BadOpcode(opcode));
+        }
+        let ql_code = ((word >> 12) & 0x7) as u8;
+        let ql = QuantLevel::from_ql_code(ql_code).ok_or(IsaError::BadQl(ql_code))?;
+        LutMm1k::new(
+            ((word >> 27) & 0x1F) as u8,
+            ((word >> 25) & 0x3) as u8,
+            ((word >> 20) & 0x1F) as u8,
+            ((word >> 15) & 0x1F) as u8,
+            ql,
+            ((word >> 7) & 0x1F) as u8,
+        )
+    }
+}
+
+impl std::fmt::Display for LutMm1k {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "lutmm_1k loc={} sc={} rw=x{} ri=x{} ql={} rd=x{}",
+            self.loc, self.sc, self.rw, self.ri, self.ql, self.rd
+        )
+    }
+}
+
+/// Emit the instruction sequence for a full `[1,K]×[K,N]` GEMV as tiles of
+/// `lutmm_1k` (K, N multiples of 1024; paper: "larger GEMV operations can
+/// be realized by repeating the lutmm_1k instruction").
+pub fn emit_gemv(n_cols: usize, ql: QuantLevel, rw: u8, ri: u8, rd: u8) -> Result<Vec<LutMm1k>, IsaError> {
+    assert!(n_cols % TILE_DIM == 0, "GEMV width must be a multiple of 1024");
+    let tiles = n_cols / TILE_DIM;
+    let sc = (tiles as f64).log2().ceil() as u8;
+    assert!(sc < 4, "sc field supports widths up to 8192; wider GEMVs need multiple base addrs");
+    (0..tiles)
+        .map(|t| LutMm1k::new(t as u8, sc, rw, ri, ql, rd))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_exhaustive_fields() {
+        for loc in 0..8u8 {
+            for sc in 0..4u8 {
+                if loc as usize >= (1 << sc) {
+                    continue;
+                }
+                for &ql in &QuantLevel::ALL {
+                    let i = LutMm1k::new(loc, sc, 31, 0, ql, 17).unwrap();
+                    assert_eq!(LutMm1k::decode(i.encode()).unwrap(), i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_sc3_loc5() {
+        // §IV-A: sc=3 → width 8192; loc=5 → columns 5120..6144.
+        let i = LutMm1k::new(5, 3, 1, 2, QuantLevel::Q4, 3).unwrap();
+        assert_eq!(i.full_width(), 8192);
+        assert_eq!(i.tile_columns(), (5120, 6144));
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        assert_eq!(LutMm1k::decode(0x33), Err(IsaError::BadOpcode(0x33)));
+    }
+
+    #[test]
+    fn bad_ql_rejected() {
+        // Craft a word with ql=7.
+        let w = (7u32 << 12) | LUTMM_OPCODE;
+        assert_eq!(LutMm1k::decode(w), Err(IsaError::BadQl(7)));
+    }
+
+    #[test]
+    fn loc_range_enforced() {
+        // sc=0 → single tile, loc=1 invalid.
+        assert!(matches!(
+            LutMm1k::new(1, 0, 0, 0, QuantLevel::Q2, 0),
+            Err(IsaError::LocOutOfRange { .. })
+        ));
+    }
+
+    #[test]
+    fn emit_gemv_covers_all_tiles() {
+        let insts = emit_gemv(4096, QuantLevel::Q4, 1, 2, 3).unwrap();
+        assert_eq!(insts.len(), 4);
+        for (t, i) in insts.iter().enumerate() {
+            assert_eq!(i.loc as usize, t);
+            assert_eq!(i.full_width(), 4096);
+            assert_eq!(i.tile_columns(), (t * 1024, (t + 1) * 1024));
+        }
+    }
+
+    #[test]
+    fn display_readable() {
+        let i = LutMm1k::new(0, 0, 1, 2, QuantLevel::Q8, 3).unwrap();
+        assert_eq!(i.to_string(), "lutmm_1k loc=0 sc=0 rw=x1 ri=x2 ql=Q8 rd=x3");
+    }
+}

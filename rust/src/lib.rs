@@ -1,0 +1,33 @@
+//! # SAIL — SRAM-Accelerated LLM Inference with LUT-based GEMV
+//!
+//! A full-system reproduction of the SAIL paper (Zhang, Park, Lee,
+//! Sadredini; CS.AR 2025): a near-cache processing-in-memory architecture
+//! for quantized LLM inference, built as a three-layer Rust + JAX/Pallas
+//! stack.
+//!
+//! Layer map (see DESIGN.md):
+//! - **Substrates**: [`quant`], [`isa`], [`csram`], [`typeconv`], [`arch`]
+//! - **Core contribution**: [`lutgemv`] (LUT-based GEMV + Pattern Reuse
+//!   Table), [`sim`] (tensor-level scheduling + ping-pong pipeline)
+//! - **Evaluation substrate**: [`baselines`] (ARM / AMX / GPU / Neural
+//!   Cache models), [`model`] (transformer shape inventory), [`cost`]
+//!   (tokens-per-dollar and overhead accounting)
+//! - **Serving system**: [`coordinator`] (multi-user batched serving),
+//!   [`runtime`] (PJRT execution of the AOT-compiled JAX/Pallas model)
+//! - **Support**: [`util`]
+
+pub mod arch;
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod csram;
+pub mod isa;
+pub mod lutgemv;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod typeconv;
+pub mod util;

@@ -1,0 +1,130 @@
+//! Bit-serial in-SRAM GEMV — the Neural Cache baseline (paper [21]/[22],
+//! evaluated as "NC" in Figs 1 and 12).
+//!
+//! Neural Cache computes each multiply-accumulate bit-serially in the SRAM
+//! array: an n-bit multiply costs `n² + 5n − 2` cycles and an add `n + 1`
+//! (identical peripheral assumptions as SAIL's C-SRAM — the comparison
+//! isolates LUT-GEMV vs bit-serial *algorithms*, matching the paper's
+//! "Neural Cache architecture is based on the same design as SAIL, with
+//! LUT-GEMV replaced by the bit-serial computing method … and the
+//! in-memory type conversion algorithm excluded").
+//!
+//! Key structural differences from LUT-GEMV:
+//! - no per-batch reuse: every (item, element) multiply is paid in full;
+//! - cost scales with the *product* structure of operand widths (the
+//!   quadratic multiply), not with table reads;
+//! - type conversion must round-trip to the CPU vector units.
+
+use crate::csram::bitline::{add_cycles, mult_cycles};
+use crate::quant::QuantLevel;
+use crate::util::ceil_div;
+
+/// Cycle model for bit-serial (Neural-Cache-style) GEMV.
+#[derive(Debug, Clone, Copy)]
+pub struct BitSerialModel {
+    pub level: QuantLevel,
+    pub act_bits: u32,
+    pub arrays: u32,
+    pub cols_per_array: u32,
+    /// LLC slice access latency for streaming weight rows in.
+    pub llc_access_cycles: u64,
+}
+
+impl BitSerialModel {
+    pub fn prototype(level: QuantLevel) -> Self {
+        BitSerialModel {
+            level,
+            act_bits: 8,
+            arrays: 2,
+            cols_per_array: 512,
+            llc_access_cycles: 58,
+        }
+    }
+
+    /// Bit-serial multiply operand width: the array multiplies the w-bit
+    /// weight by the a-bit activation; the serial cost is governed by the
+    /// wider operand (the narrower is zero-extended in the array).
+    fn mul_bits(&self) -> u32 {
+        self.level.bits().max(self.act_bits)
+    }
+
+    fn acc_bits(&self) -> u32 {
+        24
+    }
+
+    /// Total cycles for a `[1,K]×[K,N]` GEMV over batch `b`.
+    ///
+    /// Each array computes its 512 output columns in parallel; the K
+    /// reduction is sequential: per element, stream the weight row in
+    /// (amortized across columns), multiply, accumulate. Nothing amortizes
+    /// across the batch.
+    pub fn tile_cycles(&self, k: usize, n: usize, b: usize) -> u64 {
+        assert!(b >= 1);
+        let passes = ceil_div(n, (self.arrays * self.cols_per_array) as usize) as u64;
+        let per_mac = mult_cycles(self.mul_bits()) + add_cycles(self.acc_bits());
+        // Weight loading: one slice access per chunk of rows; the weights
+        // for one k-index across 512 columns arrive as level.bits() planes.
+        let load_per_k = self.level.bits() as u64 + self.llc_access_cycles / 64;
+        passes * (k as u64) * (load_per_k + b as u64 * per_mac)
+    }
+
+    /// Cycles per batch item.
+    pub fn cycles_per_item(&self, k: usize, n: usize, b: usize) -> f64 {
+        self.tile_cycles(k, n, b) as f64 / b as f64
+    }
+}
+
+/// Fig 1's headline quantity: efficiency gain of LUT-based over bit-serial
+/// computing at a given precision and batch size (same array substrate).
+pub fn lut_vs_bitserial_gain(level: QuantLevel, nbw: u32, batch: usize) -> f64 {
+    let lut = super::cycles::GemvCycleModel {
+        in_memory_typeconv: false, // isolate the GEMV algorithms
+        ..super::cycles::GemvCycleModel::prototype(level, nbw)
+    };
+    let bs = BitSerialModel::prototype(level);
+    bs.cycles_per_item(1024, 1024, batch) / lut.cycles_per_item(1024, 1024, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_batch_amortization() {
+        let m = BitSerialModel::prototype(QuantLevel::Q4);
+        let c1 = m.cycles_per_item(1024, 1024, 1);
+        let c8 = m.cycles_per_item(1024, 1024, 8);
+        // Per-item cost is (nearly) flat: only weight loading amortizes.
+        assert!((c8 - c1).abs() / c1 < 0.20, "c1={c1} c8={c8}");
+    }
+
+    #[test]
+    fn lut_wins_and_gain_grows_with_batch() {
+        // Fig 1: LUT-based computing beats bit-serial, more so at batch.
+        for level in [QuantLevel::Q2, QuantLevel::Q3, QuantLevel::Q4] {
+            let g1 = lut_vs_bitserial_gain(level, 4, 1);
+            let g8 = lut_vs_bitserial_gain(level, 4, 8);
+            let g32 = lut_vs_bitserial_gain(level, 4, 32);
+            assert!(g8 > 1.0, "{level}: LUT must win at batch 8 (gain {g8})");
+            assert!(g8 > g1, "{level}: gain must grow 1→8 ({g1} → {g8})");
+            assert!(g32 >= g8 * 0.95, "{level}: gain must not collapse at 32");
+        }
+    }
+
+    #[test]
+    fn gain_larger_at_lower_precision() {
+        // Fig 1: the dashed lines order 2-bit > 3-bit > 4-bit.
+        let g2 = lut_vs_bitserial_gain(QuantLevel::Q2, 4, 8);
+        let g3 = lut_vs_bitserial_gain(QuantLevel::Q3, 4, 8);
+        let g4 = lut_vs_bitserial_gain(QuantLevel::Q4, 4, 8);
+        assert!(g2 > g3 && g3 > g4, "g2={g2} g3={g3} g4={g4}");
+    }
+
+    #[test]
+    fn quadratic_multiply_dominates() {
+        let m = BitSerialModel::prototype(QuantLevel::Q8);
+        // One MAC at 8 bits: 102 + 25 cycles; K=1024 of them.
+        let c = m.tile_cycles(1024, 1024, 1);
+        assert!(c >= 1024 * (102 + 25), "c={c}");
+    }
+}

@@ -1,0 +1,300 @@
+//! Cycle model for LUT-GEMV on the C-SRAM substrate.
+//!
+//! This is the reproduction of the paper's hardcoded NDP timing model
+//! (§V-A: "characterizing the cycle counts for key operations … these cycle
+//! numbers … are then hardcoded into the NDP model"). All costs derive from
+//! the published primitives:
+//!
+//! - bitline add: `n+1` cycles; LUT build: `2^NBW − NBW − 1` adds
+//!   ([`crate::csram`]),
+//! - one full-row C-SRAM read per cycle,
+//! - LLC slice access latency 58 cycles (Table I),
+//! - in-memory type conversion `3n²/2 + 39(n−1)` ([`crate::typeconv`]).
+//!
+//! Mapping (Fig 5, §V-I): a `[1,1024]×[1024,1024]` tile occupies two
+//! 256×512 C-SRAM arrays — each array owns 512 output columns; for the
+//! current activation chunk, every column holds that chunk's LUT for its
+//! output, built in parallel and reused across (a) all activation
+//! bit-planes and (b) every request in the batch.
+
+use crate::csram::bitline::add_cycles;
+use crate::csram::lut::Lut;
+use crate::csram::transpose;
+use crate::quant::QuantLevel;
+use crate::typeconv;
+use crate::util::ceil_div;
+
+/// Per-phase cycle breakdown for one tile GEMV over a batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GemvCycles {
+    /// LUT construction (once per weight tile, amortized over the batch).
+    pub build: u64,
+    /// Bit-serial activation streaming + accumulate (scales with batch).
+    pub stream: u64,
+    /// Cross-array partial-sum aggregation through the DFM adder tree.
+    pub aggregate: u64,
+    /// In-memory int→f32 conversion of the outputs.
+    pub typeconv: u64,
+}
+
+impl GemvCycles {
+    pub fn total(&self) -> u64 {
+        self.build + self.stream + self.aggregate + self.typeconv
+    }
+}
+
+/// Configuration of the cycle model.
+#[derive(Debug, Clone, Copy)]
+pub struct GemvCycleModel {
+    pub nbw: u32,
+    pub level: QuantLevel,
+    /// Activation bit width streamed by the DFM (8 for int8 activations).
+    pub act_bits: u32,
+    /// Quantization scale-group size along K.
+    pub group_size: usize,
+    /// C-SRAM arrays cooperating on the tile.
+    pub arrays: u32,
+    /// Columns per array (512 in the prototype).
+    pub cols_per_array: u32,
+    /// LLC slice access latency for basis-weight fetches (Table I).
+    pub llc_access_cycles: u64,
+    /// Pattern Reuse Table enabled (§III-D)?
+    pub use_prt: bool,
+    /// Apply in-memory type conversion (vs shipping ints to the CPU)?
+    pub in_memory_typeconv: bool,
+}
+
+impl GemvCycleModel {
+    /// The paper's prototype configuration for one `lutmm_1k` tile.
+    pub fn prototype(level: QuantLevel, nbw: u32) -> Self {
+        GemvCycleModel {
+            nbw,
+            level,
+            act_bits: 8,
+            group_size: 32,
+            arrays: 2,
+            cols_per_array: 512,
+            llc_access_cycles: 58,
+            use_prt: false,
+            in_memory_typeconv: true,
+        }
+    }
+
+    /// Integer accumulator width: LUT entries grow by the in-group
+    /// reduction (log2 of chunks/group · planes) — 24 bits covers every
+    /// supported configuration (≤ 2^19 magnitude, see engine docs).
+    pub fn acc_bits(&self) -> u32 {
+        24
+    }
+
+    /// Number of NBW chunks for a K-length reduction.
+    pub fn chunks(&self, k: usize) -> u64 {
+        let per_group = ceil_div(self.group_size, self.nbw as usize);
+        (ceil_div(k, self.group_size) * per_group) as u64
+    }
+
+    /// Cycles for one weight-tile LUT build phase (parallel across all
+    /// columns of all arrays): per chunk, fetch basis rows from the slice,
+    /// transpose in, then subset-sum adds.
+    fn build_per_chunk(&self) -> u64 {
+        let eb = Lut::entry_bits(self.level.bits(), self.nbw);
+        self.llc_access_cycles
+            + transpose::transpose_cycles(self.cols_per_array as usize, self.level.bits())
+            + Lut::build_cycles(self.nbw, eb)
+    }
+
+    /// Streaming cost of one chunk for one batch item: `act_bits`
+    /// bit-planes, each a LUT row-range read (`entry_bits` rows) plus a
+    /// shift-add into the accumulator. PRT hits bypass the row read.
+    fn stream_per_chunk_item(&self) -> u64 {
+        let eb = Lut::entry_bits(self.level.bits(), self.nbw) as u64;
+        let add = add_cycles(self.acc_bits());
+        let lookups = self.act_bits as u64;
+        if self.use_prt {
+            // Within one LUT lifetime at most 2^NBW distinct patterns miss;
+            // the expected hit fraction over `lookups` accesses follows the
+            // measured ~17% pattern repetition (§III-D). A hit bypasses the
+            // C-SRAM row read *and* the bit-serial accumulate: the PRT's own
+            // 16-bit adder tree merges the stored result in ~5 cycles
+            // (1 CAM match + 4 pipelined tree stages). 17% repetition ×
+            // (1 − 5/31) ≈ the paper's 13.8% cycle reduction.
+            const PRT_HIT_CYCLES: u64 = 5;
+            let hit_rate = prt_expected_hit_rate(self.nbw, self.act_bits);
+            let hits = (lookups as f64 * hit_rate).round() as u64;
+            let misses = lookups - hits;
+            misses * (eb + add) + hits * PRT_HIT_CYCLES
+        } else {
+            lookups * (eb + add)
+        }
+    }
+
+    /// Column passes needed when N exceeds the parallel column capacity.
+    pub fn passes(&self, n: usize) -> u64 {
+        ceil_div(n, (self.arrays * self.cols_per_array) as usize) as u64
+    }
+
+    /// Full cycle breakdown for a `[1,K]×[K,N]` GEMV over batch `b`.
+    pub fn tile(&self, k: usize, n: usize, b: usize) -> GemvCycles {
+        assert!(b >= 1);
+        let chunks = self.chunks(k);
+        let passes = self.passes(n);
+        let build = passes * chunks * self.build_per_chunk();
+        let stream = passes * chunks * b as u64 * self.stream_per_chunk_item();
+        // Partial-sum aggregation across cooperating arrays (binary adder
+        // tree in the DFM), once per batch item per pass.
+        let agg_levels = (self.arrays as f64).log2().ceil() as u64;
+        let aggregate = passes * b as u64 * agg_levels * add_cycles(self.acc_bits());
+        let typeconv = if self.in_memory_typeconv {
+            // Convert N outputs per batch item; all arrays' columns work
+            // in parallel.
+            let per_item = typeconv::batch_cycles(
+                self.acc_bits(),
+                n,
+                self.cols_per_array as usize,
+                self.arrays as usize,
+            );
+            b as u64 * per_item
+        } else {
+            0
+        };
+        GemvCycles { build, stream, aggregate, typeconv }
+    }
+
+    /// Throughput-style summary: cycles per batch item for the tile.
+    pub fn cycles_per_item(&self, k: usize, n: usize, b: usize) -> f64 {
+        self.tile(k, n, b).total() as f64 / b as f64
+    }
+}
+
+/// Expected PRT hit rate for an NBW-bit pattern stream.
+///
+/// Calibrated to the paper's measurement: "approximately 17% of input
+/// activation patterns repeat within computation batches", yielding a
+/// 13.8% cycle reduction. Narrow patterns repeat more (fewer distinct
+/// values); the 17% anchor is NBW=4 at 8 activation bits.
+pub fn prt_expected_hit_rate(nbw: u32, act_bits: u32) -> f64 {
+    let base = 0.17f64;
+    // Halving NBW squares the collision probability's complement roughly;
+    // simple saturating model anchored at (4, 8).
+    let nbw_factor = (4.0 / nbw as f64).sqrt();
+    let bits_factor = (act_bits as f64 / 8.0).sqrt();
+    (base * nbw_factor * bits_factor).min(0.95)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_counting() {
+        let m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        // K=1024, group 32, NBW 4 → 32 groups × 8 chunks.
+        assert_eq!(m.chunks(1024), 256);
+        let m3 = GemvCycleModel::prototype(QuantLevel::Q4, 3);
+        // group 32 / NBW 3 → 11 chunks per group (padded tail).
+        assert_eq!(m3.chunks(1024), 32 * 11);
+    }
+
+    #[test]
+    fn passes_scale_with_n() {
+        let m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        assert_eq!(m.passes(1024), 1);
+        assert_eq!(m.passes(1025), 2);
+        assert_eq!(m.passes(4096), 4);
+    }
+
+    #[test]
+    fn build_amortizes_with_batch() {
+        let m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        let c1 = m.tile(1024, 1024, 1);
+        let c8 = m.tile(1024, 1024, 8);
+        assert_eq!(c1.build, c8.build, "build must not scale with batch");
+        assert_eq!(c8.stream, 8 * c1.stream, "stream scales linearly");
+        // Per-item cost strictly decreases with batch.
+        assert!(m.cycles_per_item(1024, 1024, 8) < m.cycles_per_item(1024, 1024, 1));
+        assert!(m.cycles_per_item(1024, 1024, 32) < m.cycles_per_item(1024, 1024, 8));
+    }
+
+    #[test]
+    fn per_item_cost_plateaus_at_large_batch() {
+        // Fig 6: "the cycle count drops substantially but plateaus beyond
+        // about 7". Marginal improvement from 16→32 must be much smaller
+        // than from 1→2.
+        let m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        let d_small =
+            m.cycles_per_item(1024, 1024, 1) - m.cycles_per_item(1024, 1024, 2);
+        let d_large =
+            m.cycles_per_item(1024, 1024, 16) - m.cycles_per_item(1024, 1024, 32);
+        assert!(d_small > 10.0 * d_large, "{d_small} vs {d_large}");
+    }
+
+    #[test]
+    fn small_nbw_rebuild_overhead_at_low_precision() {
+        // §III-C: at 2-bit, NBW=2 suffers LUT-rebuild overhead vs NBW=4.
+        let m2 = GemvCycleModel::prototype(QuantLevel::Q2, 2);
+        let m4 = GemvCycleModel::prototype(QuantLevel::Q2, 4);
+        let b = 24;
+        assert!(
+            m2.tile(1024, 1024, b).total() > m4.tile(1024, 1024, b).total(),
+            "NBW=2 must be slower than NBW=4 at Q2 batch 24"
+        );
+    }
+
+    #[test]
+    fn lower_precision_is_faster_at_fixed_nbw() {
+        // §III-C: batch 24, NBW=4: Q2 3.00M < Q4 4.87M cycles.
+        let q2 = GemvCycleModel::prototype(QuantLevel::Q2, 4).tile(1024, 1024, 24);
+        let q4 = GemvCycleModel::prototype(QuantLevel::Q4, 4).tile(1024, 1024, 24);
+        assert!(q2.total() < q4.total());
+    }
+
+    #[test]
+    fn large_nbw_hurts_small_batch() {
+        // Fig 6: at batch 1–2 the LUT-creation overhead of a large NBW is
+        // not amortized; a smaller NBW should win or tie.
+        let small = GemvCycleModel::prototype(QuantLevel::Q8, 1);
+        let large = GemvCycleModel::prototype(QuantLevel::Q8, 4);
+        let c_small = small.tile(1024, 1024, 1).build;
+        let c_large = large.tile(1024, 1024, 1).build;
+        // Build cost per chunk is exponentially larger for NBW=4, but there
+        // are 4x fewer chunks; net build must still be larger for NBW=4.
+        assert!(c_large > c_small / 4, "{c_large} vs {c_small}");
+    }
+
+    #[test]
+    fn prt_reduces_stream_cycles() {
+        let mut m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        let plain = m.tile(1024, 1024, 8);
+        m.use_prt = true;
+        let prt = m.tile(1024, 1024, 8);
+        assert!(prt.stream < plain.stream);
+        assert_eq!(prt.build, plain.build);
+        // §III-D: "reduces computation cycles by 13.8%" — the compute
+        // (stream) reduction should be in that neighbourhood (10–20%).
+        let reduction = 1.0 - prt.stream as f64 / plain.stream as f64;
+        assert!((0.08..=0.25).contains(&reduction), "reduction={reduction}");
+    }
+
+    #[test]
+    fn typeconv_in_memory_vs_off() {
+        let mut m = GemvCycleModel::prototype(QuantLevel::Q4, 4);
+        let with_tc = m.tile(1024, 1024, 4);
+        m.in_memory_typeconv = false;
+        let without = m.tile(1024, 1024, 4);
+        assert!(with_tc.typeconv > 0);
+        assert_eq!(without.typeconv, 0);
+        assert_eq!(with_tc.stream, without.stream);
+    }
+
+    #[test]
+    fn hit_rate_anchored_and_bounded() {
+        assert!((prt_expected_hit_rate(4, 8) - 0.17).abs() < 1e-9);
+        assert!(prt_expected_hit_rate(2, 8) > prt_expected_hit_rate(4, 8));
+        for nbw in 1..=8 {
+            for ab in [2, 4, 8] {
+                let r = prt_expected_hit_rate(nbw, ab);
+                assert!((0.0..=0.95).contains(&r));
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! LUT-based GEMV — the paper's core computational contribution (§II-C,
+//! §III).
+//!
+//! A `[1,K]×[K,N]` GEMV over group-quantized weights is computed as:
+//! activations are chunked into groups of NBW consecutive elements *within
+//! each quantization scale group* (LUT entries are integer subset sums, so
+//! every basis weight in one LUT must share a scale); for each (chunk,
+//! output-column) pair the C-SRAM holds the 2^NBW subset sums of the chunk's
+//! weights; activation bits stream LSB→MSB and each bit-plane's NBW-bit
+//! pattern indexes the LUT, with the fetched entry shift-added into a
+//! per-scale-group integer accumulator. Group sums are then dequantized
+//! (weight scale × activation scale) and reduced into the f32 output.
+//!
+//! - [`engine`]: the exact functional implementation (bit-exact against the
+//!   naive integer dot product — the repository's core correctness anchor,
+//!   mirrored by the Pallas kernel on the Python side);
+//! - [`pattern`]: the Pattern Reuse Table (§III-D) that short-circuits
+//!   repeated activation bit patterns;
+//! - [`cycles`]: the C-SRAM cycle model for a tile GEMV, the quantity the
+//!   pipeline simulator and the design-space benches consume;
+//! - [`bitserial`]: the Neural-Cache-style bit-serial GEMV cycle model used
+//!   as the PIM baseline (Fig 1, Fig 12).
+
+pub mod bitserial;
+pub mod cycles;
+pub mod engine;
+pub mod pattern;
+
+pub use cycles::{GemvCycleModel, GemvCycles};
+pub use engine::LutGemvEngine;
+pub use pattern::PatternReuseTable;

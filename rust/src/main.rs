@@ -1,0 +1,252 @@
+//! `sail` — CLI for the SAIL reproduction.
+//!
+//! Subcommands:
+//!   simulate    SAIL + baseline throughput for a model/quant/threads/batch
+//!   serve       end-to-end serving demo over the AOT artifacts (PJRT)
+//!   crosscheck  compiled Pallas GEMV tile vs the Rust LUT-GEMV engine
+//!   overhead    hardware-overhead accounting (Table V / §V-I)
+//!
+//! The paper-table regenerators live in `cargo bench` targets (one per
+//! table/figure) and the `examples/` binaries.
+
+use anyhow::{bail, Result};
+
+use sail::baselines::{CpuModel, GpuModel, NeuralCacheModel};
+use sail::coordinator::{BatcherConfig, MockEngine, PjrtEngine, Server, WorkloadGen};
+use sail::cost::{overhead::OverheadModel, tokens_per_dollar, Platform};
+use sail::model::ModelConfig;
+use sail::quant::QuantLevel;
+use sail::util::cli::Args;
+use sail::util::table::{f, Table};
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    match args.subcommand().as_deref() {
+        Some("simulate") => simulate(args),
+        Some("serve") => serve(args),
+        Some("crosscheck") => crosscheck(args),
+        Some("overhead") => overhead(args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try: sail help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "sail — SRAM-Accelerated LLM Inference (paper reproduction)\n\n\
+         USAGE: sail <subcommand> [options]\n\n\
+         SUBCOMMANDS:\n\
+         \x20 simulate   [--config FILE] --model 7b|13b|248m --quant q2..q8 --threads N --batch N\n\
+         \x20 serve      --artifacts DIR --batch N --requests N [--mock]\n\
+         \x20 crosscheck --artifacts DIR [--seed N]\n\
+         \x20 overhead\n\
+         \x20 help\n\n\
+         Paper tables/figures: cargo bench --bench <table2_cpu_throughput|fig9_quant_speedup|…>"
+    );
+}
+
+fn parse_model(name: &str) -> Result<ModelConfig> {
+    Ok(match name.to_lowercase().as_str() {
+        "7b" | "llama2-7b" => ModelConfig::llama2_7b(),
+        "13b" | "llama2-13b" => ModelConfig::llama2_13b(),
+        "248m" | "tinymistral" => ModelConfig::tinymistral_248m(),
+        "tiny" | "tiny-e2e" => ModelConfig::tiny_e2e(),
+        other => bail!("unknown model '{other}' (7b, 13b, 248m, tiny)"),
+    })
+}
+
+fn simulate(mut args: Args) -> Result<()> {
+    // Base config: --config FILE (configs/*.toml), then CLI overrides.
+    let base = match args.opt_str_opt("config") {
+        Some(path) => sail::config::RunConfig::load(std::path::Path::new(&path))?,
+        None => sail::config::RunConfig::default(),
+    };
+    let model = match args.opt_str_opt("model") {
+        Some(name) => parse_model(&name)?,
+        None => base.model.clone(),
+    };
+    let level = match args.opt_str_opt("quant") {
+        Some(q) => QuantLevel::parse(&q).ok_or_else(|| anyhow::anyhow!("bad --quant '{q}'"))?,
+        None => base.level,
+    };
+    let threads: u32 = args.opt("threads", base.threads);
+    let batch: usize = args.opt("batch", base.batch);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut sail = base.perf_model();
+    sail.level = level;
+    sail.threads = threads;
+        let report = sail.iteration(&model, batch);
+    let arm = CpuModel::arm_n1();
+    let amx = CpuModel::amx();
+    let nc = NeuralCacheModel::paper_config(level, threads);
+
+    println!(
+        "model={} params={:.2}B quant={level} threads={threads} batch={batch}\n",
+        model.name,
+        model.params() as f64 / 1e9
+    );
+    let mut t = Table::new(
+        "Simulated decode throughput",
+        &["platform", "tokens/s", "tokens/$/month"],
+    );
+    let rows: Vec<(String, f64, Platform)> = vec![
+        (
+            "ARM Neoverse-N1".into(),
+            arm.tokens_per_sec(&model, level, threads, batch),
+            Platform::cpu_16core(),
+        ),
+        (
+            "Intel AMX".into(),
+            amx.tokens_per_sec(&model, level, threads, batch),
+            Platform::cpu_16core(),
+        ),
+        ("Neural Cache".into(), nc.tokens_per_sec(&model, batch), Platform::cpu_16core()),
+        ("SAIL".into(), report.tokens_per_sec(), Platform::sail_16core()),
+    ];
+    for (name, tps, platform) in rows {
+        t.row(&[name, f(tps, 2), f(tokens_per_dollar(tps, platform), 0)]);
+    }
+    if let Some((gr, gb)) = GpuModel::v100().best_tokens_per_sec(&model, level, 2048) {
+        t.row(&[
+            format!("1xV100 (ctx 2K, b{gb})"),
+            f(gr, 2),
+            f(tokens_per_dollar(gr, Platform::gpu_1xv100()), 0),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npipeline: compute {:.1} ms, transfer {:.1} ms, {} of {} stages transfer-bound",
+        report.compute_secs * 1e3,
+        report.transfer_secs * 1e3,
+        report.transfer_bound_stages,
+        report.stages
+    );
+    Ok(())
+}
+
+fn serve(mut args: Args) -> Result<()> {
+    let dir = args.opt_str("artifacts", "artifacts");
+    let batch: usize = args.opt("batch", 4usize);
+    let n_requests: usize = args.opt("requests", 16usize);
+    let seed: u64 = args.opt("seed", 42u64);
+    let mock = args.flag("mock");
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    println!("spawning server (batch={batch}, requests={n_requests}, mock={mock})");
+    let metrics = if mock {
+        let server = Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default());
+        drive(server, n_requests, seed)?
+    } else {
+        let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
+        println!("loaded artifacts from {dir}");
+        let server = Server::spawn(engine, BatcherConfig::default());
+        drive(server, n_requests, seed)?
+    };
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn drive(
+    server: Server,
+    n_requests: usize,
+    seed: u64,
+) -> Result<sail::coordinator::ServingMetrics> {
+    let mut gen = WorkloadGen::new(seed, 2048);
+    for r in gen.burst(n_requests) {
+        server.submit(r)?;
+    }
+    for i in 0..n_requests {
+        let resp = server.recv()?;
+        if i < 3 {
+            println!(
+                "  req {} -> {} tokens ({:?}), latency {:.1} ms",
+                resp.id,
+                resp.tokens.len(),
+                resp.finish,
+                resp.latency.as_secs_f64() * 1e3
+            );
+        }
+    }
+    Ok(server.shutdown())
+}
+
+fn crosscheck(mut args: Args) -> Result<()> {
+    let dir = args.opt_str("artifacts", "artifacts");
+    let seed: u64 = args.opt("seed", 1u64);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
+    use sail::quant::{QuantizedMatrix, QuantizedVector};
+    use sail::util::Prng;
+
+    println!("loading PJRT client + gemv_q4_1k.hlo.txt from {dir} …");
+    let client = xla::PjRtClient::cpu()?;
+    let tile = sail::runtime::GemvTile::load(&client, std::path::Path::new(&dir))?;
+
+    let mut prng = Prng::new(seed);
+    let k = 1024usize;
+    let n = 1024usize;
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, QuantLevel::Q4, 32);
+    let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+    let qx = QuantizedVector::quantize(&x);
+
+    // Rust engine result (itself checked against the naive reference).
+    let eng = LutGemvEngine::new(wt, 4);
+    let rust_out = eng.gemv(&qx);
+    let ref_out = reference_gemv(eng.weights(), &qx);
+    assert_eq!(rust_out, ref_out, "rust engine vs naive reference");
+
+    // Compiled Pallas kernel result.
+    let w_codes: Vec<i8> = (0..n)
+        .flat_map(|r| (0..k).map(move |c| (r, c)))
+        .map(|(r, c)| eng.weights().q(r, c) as i8)
+        .collect();
+    let w_scales: Vec<f32> = (0..n)
+        .flat_map(|r| (0..k / 32).map(move |g| (r, g)))
+        .map(|(r, g)| eng.weights().scale(r, g * 32))
+        .collect();
+    let x_codes: Vec<i8> = qx.q.clone();
+    let pjrt_out = tile.run(&x_codes, &w_codes, &w_scales, qx.scale)?;
+
+    let mut max_rel = 0.0f64;
+    for (a, b) in rust_out.iter().zip(pjrt_out.iter()) {
+        let rel = ((a - b).abs() / (a.abs().max(1e-3))) as f64;
+        max_rel = max_rel.max(rel);
+    }
+    println!(
+        "crosscheck over {n} outputs: max relative deviation rust-engine vs compiled-pallas = {max_rel:.2e}"
+    );
+    if max_rel > 5e-4 {
+        bail!("cross-check FAILED (max rel {max_rel:.2e})");
+    }
+    println!("crosscheck OK — three implementations agree (naive, LUT engine, Pallas/PJRT)");
+    Ok(())
+}
+
+fn overhead(args: Args) -> Result<()> {
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let o = OverheadModel::default();
+    let mut t = Table::new("SAIL hardware overhead (§V-I)", &["quantity", "value"]);
+    t.row(&["C-SRAM per thread".into(), format!("{} KB", o.csram_bytes_per_thread() / 1024)]);
+    t.row(&["C-SRAM total (16T)".into(), format!("{} KB", o.total_csram_bytes() / 1024)]);
+    t.row(&["LLC capacity overhead".into(), format!("{:.2}%", o.capacity_overhead_pct())]);
+    t.row(&["PRT area (8 DFMs)".into(), format!("{:.4} mm²", o.prt_total_area_mm2())]);
+    t.row(&["PRT power (8 DFMs)".into(), format!("{:.2} mW", o.prt_total_power_mw())]);
+    t.row(&["System area overhead".into(), format!("~{:.0}%", o.system_area_overhead_pct())]);
+    t.print();
+    println!();
+    let mut t5 = Table::new(
+        "Table V — overhead comparison",
+        &["approach", "HW overhead", "system overhead"],
+    );
+    for row in sail::cost::overhead::table5_rows() {
+        t5.row(&[row.approach.into(), row.hw_overhead.into(), row.sys_overhead.into()]);
+    }
+    t5.print();
+    Ok(())
+}

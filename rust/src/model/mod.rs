@@ -1,0 +1,233 @@
+//! Transformer model shape inventory.
+//!
+//! The timing models need exact tensor shapes, parameter counts, byte
+//! sizes per quantization level, and KV-cache growth — all derivable from
+//! the public architecture configs of the benchmarked models (Llama-2-7B,
+//! Llama-2-13B, TinyMistral-248M) plus the tiny llama-style model we
+//! execute end-to-end through the JAX→HLO→PJRT path.
+
+pub mod kv;
+
+pub use kv::KvCacheSpec;
+
+use crate::quant::QuantLevel;
+use crate::util::ceil_div;
+
+/// Decoder-only transformer configuration (llama-style: RMSNorm, RoPE,
+/// SwiGLU MLP; MHA or GQA).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    /// KV heads (== heads for MHA; < heads for GQA).
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_context: usize,
+}
+
+impl ModelConfig {
+    /// Llama-2-7B (Touvron et al. 2023).
+    pub fn llama2_7b() -> Self {
+        ModelConfig {
+            name: "Llama-2-7B".into(),
+            hidden: 4096,
+            layers: 32,
+            heads: 32,
+            kv_heads: 32,
+            ffn: 11008,
+            vocab: 32000,
+            max_context: 4096,
+        }
+    }
+
+    /// Llama-2-13B.
+    pub fn llama2_13b() -> Self {
+        ModelConfig {
+            name: "Llama-2-13B".into(),
+            hidden: 5120,
+            layers: 40,
+            heads: 40,
+            kv_heads: 40,
+            ffn: 13824,
+            vocab: 32000,
+            max_context: 4096,
+        }
+    }
+
+    /// TinyMistral-248M (Locutusque), the small benchmark model.
+    pub fn tinymistral_248m() -> Self {
+        ModelConfig {
+            name: "TinyMistral-248M".into(),
+            hidden: 1024,
+            layers: 12,
+            heads: 32,
+            kv_heads: 8,
+            ffn: 4096,
+            vocab: 32005,
+            max_context: 2048,
+        }
+    }
+
+    /// The tiny llama-style model executed for real through PJRT in the
+    /// end-to-end example (shapes chosen so every projection is a multiple
+    /// of the quant group and small enough for interpret-mode Pallas).
+    pub fn tiny_e2e() -> Self {
+        ModelConfig {
+            name: "tiny-e2e-13M".into(),
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            kv_heads: 8,
+            ffn: 1024,
+            vocab: 2048,
+            max_context: 256,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Per-layer weight-matrix shapes `[K, N]` in GEMV orientation
+    /// (y[1,N] = x[1,K]·W): Q/K/V/O projections + SwiGLU gate/up/down.
+    pub fn layer_matrices(&self) -> Vec<(usize, usize)> {
+        let h = self.hidden;
+        let kvh = self.kv_heads * self.head_dim();
+        vec![
+            (h, h),        // Wq
+            (h, kvh),      // Wk
+            (h, kvh),      // Wv
+            (h, h),        // Wo
+            (h, self.ffn), // W_gate
+            (h, self.ffn), // W_up
+            (self.ffn, h), // W_down
+        ]
+    }
+
+    /// Parameters in the repeated decoder stack.
+    pub fn layer_params(&self) -> u64 {
+        self.layer_matrices().iter().map(|&(k, n)| (k * n) as u64).sum::<u64>()
+            * self.layers as u64
+    }
+
+    /// Embedding + LM head parameters.
+    pub fn embed_params(&self) -> u64 {
+        2 * (self.vocab * self.hidden) as u64
+    }
+
+    /// Total parameter count (norms are negligible and omitted, as in the
+    /// usual "7B" accounting).
+    pub fn params(&self) -> u64 {
+        self.layer_params() + self.embed_params()
+    }
+
+    /// Weight bytes at a quantization level (codes + f16 group scales).
+    pub fn weight_bytes(&self, level: QuantLevel, group: usize) -> u64 {
+        (self.params() as f64 * level.bits_per_weight(group) / 8.0).ceil() as u64
+    }
+
+    /// Bytes of one decoder layer's weights (the tensor-level scheduling
+    /// staging unit).
+    pub fn layer_bytes(&self, level: QuantLevel, group: usize) -> u64 {
+        let p: u64 = self.layer_matrices().iter().map(|&(k, n)| (k * n) as u64).sum();
+        (p as f64 * level.bits_per_weight(group) / 8.0).ceil() as u64
+    }
+
+    /// `lutmm_1k` tiles (1024×1024) needed for one full token's GEMVs:
+    /// every layer matrix plus the LM head, padded up to tile boundaries.
+    pub fn tiles_per_token(&self) -> u64 {
+        let tile = crate::isa::TILE_DIM;
+        let mut tiles: u64 = 0;
+        for &(k, n) in &self.layer_matrices() {
+            tiles += (ceil_div(k, tile) * ceil_div(n, tile)) as u64;
+        }
+        tiles *= self.layers as u64;
+        tiles += (ceil_div(self.hidden, tile) * ceil_div(self.vocab, tile)) as u64;
+        tiles
+    }
+
+    /// Dense FLOPs per generated token (2 per weight).
+    pub fn flops_per_token(&self) -> u64 {
+        2 * self.params()
+    }
+
+    /// KV-cache bytes appended per generated token at `kv_bits` precision.
+    pub fn kv_bytes_per_token(&self, kv_bits: u32) -> u64 {
+        let kvh = self.kv_heads * self.head_dim();
+        (2 * self.layers * kvh) as u64 * kv_bits as u64 / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published_sizes() {
+        let m7 = ModelConfig::llama2_7b();
+        let p7 = m7.params() as f64 / 1e9;
+        assert!((6.4..=7.0).contains(&p7), "7B params {p7}");
+        let m13 = ModelConfig::llama2_13b();
+        let p13 = m13.params() as f64 / 1e9;
+        assert!((12.7..=13.3).contains(&p13), "13B params {p13}");
+        let tm = ModelConfig::tinymistral_248m();
+        let ptm = tm.params() as f64 / 1e6;
+        assert!((200.0..=280.0).contains(&ptm), "248M params {ptm}");
+    }
+
+    #[test]
+    fn weight_bytes_q4_7b() {
+        // ~6.6G params × 4.5 bits ≈ 3.7 GB.
+        let m = ModelConfig::llama2_7b();
+        let gb = m.weight_bytes(QuantLevel::Q4, 32) as f64 / 1e9;
+        assert!((3.4..=4.1).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn kv_cache_llama7b_fp16() {
+        // Known figure: Llama-2-7B fp16 KV = 512 KB/token
+        // (2 × 32 layers × 4096 × 2 bytes).
+        let m = ModelConfig::llama2_7b();
+        assert_eq!(m.kv_bytes_per_token(16), 524_288);
+        // At context 4096 that is 2 GB — same order as Q2 weights,
+        // the paper's §II-A observation.
+        let ctx_bytes = m.kv_bytes_per_token(16) * 4096;
+        assert!(ctx_bytes > m.weight_bytes(QuantLevel::Q2, 32) / 2);
+    }
+
+    #[test]
+    fn tiles_per_token_7b() {
+        let m = ModelConfig::llama2_7b();
+        // Per layer: Wq/Wk/Wv/Wo = 4×(4×4) = 64 tiles; gate/up = 2×(4×11)=88;
+        // down = 11×4 = 44 → 196; ×32 = 6272; lm_head 4×32=128 → 6400.
+        assert_eq!(m.tiles_per_token(), 6400);
+    }
+
+    #[test]
+    fn layer_exceeds_llc_but_tile_column_fits() {
+        // A 7B layer (~120 MB at Q4) exceeds the whole 32 MB LLC — which
+        // is why the schedule stages sub-tensor shards: a single tile
+        // column (K×1024) of the widest tensor fits the 16 MB ping-pong
+        // half at every quantization level.
+        let m = ModelConfig::llama2_7b();
+        assert!(m.layer_bytes(QuantLevel::Q4, 32) > 32 * 1024 * 1024);
+        for level in QuantLevel::ALL {
+            let col_bytes =
+                (m.ffn as f64 * 1024.0 * level.bits_per_weight(32) / 8.0) as u64;
+            assert!(col_bytes < 16 * 1024 * 1024, "{level}: {col_bytes}");
+        }
+    }
+
+    #[test]
+    fn tiny_model_shapes_are_group_aligned() {
+        let m = ModelConfig::tiny_e2e();
+        for (k, n) in m.layer_matrices() {
+            assert_eq!(k % 32, 0, "K {k} not group-aligned");
+            assert_eq!(n % 32, 0, "N {n} not group-aligned");
+        }
+        assert_eq!(m.head_dim(), 32);
+    }
+}

@@ -1,0 +1,121 @@
+//! Activation quantization.
+//!
+//! The LUT-GEMV datapath consumes integer activations bit-serially (Fig 2
+//! streams activation bits LSB→MSB). Activations are quantized to int8 with
+//! one f32 scale per vector — the llama.cpp Q8 activation scheme the paper's
+//! benchmarks inherit. The CPU vector engine performs the float-side
+//! scaling during de-/re-quantization (paper §III-B).
+
+/// An int8-quantized activation vector with a single scale.
+#[derive(Debug, Clone)]
+pub struct QuantizedVector {
+    pub q: Vec<i8>,
+    pub scale: f32,
+    /// Bit-width the DFM streams (8 for int8 activations).
+    pub bits: u32,
+}
+
+impl QuantizedVector {
+    /// Symmetric int8 quantization: `x ≈ scale * q`, q in [-127, 127].
+    pub fn quantize(x: &[f32]) -> Self {
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+        let q = x
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantizedVector { q, scale, bits: 8 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Dequantize back to f32.
+    pub fn dequant(&self) -> Vec<f32> {
+        self.q.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Two's-complement bit `plane` of element `i` (0 = LSB). The DFM
+    /// broadcasts one plane of NBW consecutive elements per cycle.
+    #[inline]
+    pub fn bit(&self, i: usize, plane: u32) -> u8 {
+        debug_assert!(plane < self.bits);
+        ((self.q[i] as u8) >> plane) & 1
+    }
+
+    /// The NBW-bit pattern formed by elements `[start, start+nbw)` at bit
+    /// `plane` — the LUT index for one lookup (and the PRT hash input).
+    /// Element `start` contributes the MSB of the pattern, matching Fig 2
+    /// where activation A (the first input) maps to LUT address bit 2.
+    #[inline]
+    pub fn pattern(&self, start: usize, nbw: u32, plane: u32) -> u32 {
+        let mut p = 0u32;
+        for k in 0..nbw as usize {
+            let b = if start + k < self.q.len() {
+                self.bit(start + k, plane) as u32
+            } else {
+                0 // zero-padding beyond the vector end
+            };
+            p = (p << 1) | b;
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let mut prng = Prng::new(3);
+        let x: Vec<f32> = (0..256).map(|_| prng.normal() as f32).collect();
+        let qv = QuantizedVector::quantize(&x);
+        let d = qv.dequant();
+        for (a, b) in x.iter().zip(d.iter()) {
+            assert!((a - b).abs() <= qv.scale * 0.50001);
+        }
+    }
+
+    #[test]
+    fn zero_vector_stable() {
+        let qv = QuantizedVector::quantize(&[0.0; 8]);
+        assert!(qv.q.iter().all(|&v| v == 0));
+        assert!(qv.scale > 0.0);
+    }
+
+    #[test]
+    fn bits_reconstruct_two_complement() {
+        let qv = QuantizedVector { q: vec![-3, 5, 127, -128i8 + 1], scale: 1.0, bits: 8 };
+        for (i, &v) in qv.q.iter().enumerate() {
+            let mut rec = 0u8;
+            for plane in 0..8 {
+                rec |= qv.bit(i, plane) << plane;
+            }
+            assert_eq!(rec as i8, v);
+        }
+    }
+
+    #[test]
+    fn pattern_matches_fig2_convention() {
+        // Fig 2: inputs [A, B, C]; pattern 001 -> W2 means C (last element)
+        // is the LSB of the LUT address.
+        let qv = QuantizedVector { q: vec![0, 0, 1], scale: 1.0, bits: 8 };
+        assert_eq!(qv.pattern(0, 3, 0), 0b001);
+        let qv = QuantizedVector { q: vec![1, 0, 0], scale: 1.0, bits: 8 };
+        assert_eq!(qv.pattern(0, 3, 0), 0b100);
+    }
+
+    #[test]
+    fn pattern_pads_past_end_with_zeros() {
+        let qv = QuantizedVector { q: vec![1], scale: 1.0, bits: 8 };
+        assert_eq!(qv.pattern(0, 3, 0), 0b100);
+        assert_eq!(qv.pattern(1, 3, 0), 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Group-wise symmetric weight quantization.
+//!
+//! Each row of a weight matrix is split into groups of `group_size`
+//! consecutive elements sharing one f32 scale (llama.cpp block quantization,
+//! the format the paper benchmarks). Integer codes are stored bit-packed;
+//! `w[r][c] ≈ scale(r,c) * q(r,c)` with `q` in the symmetric range
+//! `[-max_q, max_q]`.
+
+use super::pack::BitPacked;
+use super::QuantLevel;
+
+/// A group-wise quantized row-major matrix.
+#[derive(Debug, Clone)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub level: QuantLevel,
+    pub group_size: usize,
+    /// Packed integer codes, row-major.
+    data: BitPacked,
+    /// One scale per (row, group): `scales[r * groups_per_row + g]`.
+    scales: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize a row-major f32 matrix. `group_size` must divide `cols`.
+    pub fn quantize(
+        w: &[f32],
+        rows: usize,
+        cols: usize,
+        level: QuantLevel,
+        group_size: usize,
+    ) -> Self {
+        assert_eq!(w.len(), rows * cols, "matrix shape mismatch");
+        assert!(group_size > 0 && cols % group_size == 0, "group_size must divide cols");
+        let max_q = level.max_q() as f32;
+        let groups_per_row = cols / group_size;
+        let mut scales = Vec::with_capacity(rows * groups_per_row);
+        let mut codes = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for g in 0..groups_per_row {
+                let base = r * cols + g * group_size;
+                let grp = &w[base..base + group_size];
+                let amax = grp.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let scale = if amax == 0.0 { 1.0 } else { amax / max_q };
+                scales.push(scale);
+                for &x in grp {
+                    let q = (x / scale).round().clamp(-max_q, max_q) as i32;
+                    codes.push(q);
+                }
+            }
+        }
+        QuantizedMatrix {
+            rows,
+            cols,
+            level,
+            group_size,
+            data: BitPacked::pack(&codes, level.bits()),
+            scales,
+        }
+    }
+
+    /// Integer code at (r, c).
+    #[inline]
+    pub fn q(&self, r: usize, c: usize) -> i32 {
+        self.data.get(r * self.cols + c)
+    }
+
+    /// Scale applying to (r, c).
+    #[inline]
+    pub fn scale(&self, r: usize, c: usize) -> f32 {
+        let groups_per_row = self.cols / self.group_size;
+        self.scales[r * groups_per_row + c / self.group_size]
+    }
+
+    /// Dequantized value at (r, c).
+    #[inline]
+    pub fn dequant(&self, r: usize, c: usize) -> f32 {
+        self.q(r, c) as f32 * self.scale(r, c)
+    }
+
+    /// Full dequantized matrix (row-major).
+    pub fn dequant_all(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.dequant(r, c));
+            }
+        }
+        out
+    }
+
+    /// A whole row of integer codes (used by the LUT engine's tile loader).
+    pub fn q_row(&self, r: usize) -> Vec<i32> {
+        (0..self.cols).map(|c| self.q(r, c)).collect()
+    }
+
+    /// Storage bytes: packed codes + f16 scales (2 bytes each), the figure
+    /// the memory-traffic model charges for weight movement.
+    pub fn nbytes(&self) -> usize {
+        self.data.nbytes() + self.scales.len() * 2
+    }
+
+    /// Number of scale groups per row.
+    pub fn groups_per_row(&self) -> usize {
+        self.cols / self.group_size
+    }
+
+    /// Access to the raw packed stream (for cache-layout simulation).
+    pub fn packed(&self) -> &BitPacked {
+        &self.data
+    }
+
+    /// Worst-case absolute quantization error bound: scale/2 per element.
+    pub fn max_abs_error(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |m, &s| m.max(s)) * 0.5
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    fn random_matrix(prng: &mut Prng, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| prng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn reconstruction_error_bounded() {
+        let mut prng = Prng::new(1);
+        for level in QuantLevel::ALL {
+            let (rows, cols, group) = (16, 64, 32);
+            let w = random_matrix(&mut prng, rows, cols);
+            let qm = QuantizedMatrix::quantize(&w, rows, cols, level, group);
+            let deq = qm.dequant_all();
+            let bound = qm.max_abs_error() * 1.0001;
+            for (i, (&a, &b)) in w.iter().zip(deq.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "{level}: elem {i}: |{a} - {b}| > {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codes_in_symmetric_range() {
+        propcheck::check(
+            "codes-in-range",
+            propcheck::Config { cases: 60, seed: 2 },
+            |p, _| {
+                let level = QuantLevel::ALL[p.usize_in(0, 6)];
+                let rows = p.usize_in(1, 8);
+                let group = 8;
+                let cols = group * p.usize_in(1, 6);
+                let w: Vec<f32> = (0..rows * cols).map(|_| p.normal() as f32 * 3.0).collect();
+                (level, rows, cols, group, w)
+            },
+            |(level, rows, cols, group, w)| {
+                let qm = QuantizedMatrix::quantize(w, *rows, *cols, *level, *group);
+                let mq = level.max_q();
+                for r in 0..*rows {
+                    for c in 0..*cols {
+                        let q = qm.q(r, c);
+                        if q < -mq || q > mq {
+                            return Err(format!("code {q} outside ±{mq} at ({r},{c})"));
+                        }
+                        if qm.scale(r, c) <= 0.0 {
+                            return Err("non-positive scale".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_matrix_is_stable() {
+        let w = vec![0.0f32; 4 * 32];
+        let qm = QuantizedMatrix::quantize(&w, 4, 32, QuantLevel::Q4, 32);
+        assert!(qm.dequant_all().iter().all(|&x| x == 0.0));
+        assert!(qm.scale(0, 0) > 0.0);
+    }
+
+    #[test]
+    fn group_scales_are_local() {
+        // Two groups with very different magnitudes must get different scales.
+        let mut w = vec![0.01f32; 64];
+        for x in w.iter_mut().skip(32) {
+            *x = 100.0;
+        }
+        let qm = QuantizedMatrix::quantize(&w, 1, 64, QuantLevel::Q4, 32);
+        assert!(qm.scale(0, 0) < qm.scale(0, 32) / 100.0);
+        // Small group still reconstructs to within its own scale.
+        assert!((qm.dequant(0, 0) - 0.01).abs() < qm.scale(0, 0));
+    }
+
+    #[test]
+    fn nbytes_accounting() {
+        let w = vec![1.0f32; 1024 * 1024];
+        let qm = QuantizedMatrix::quantize(&w, 1024, 1024, QuantLevel::Q4, 32);
+        // 4 bits/weight = 512KiB codes + 32K groups * 2B = 64KiB scales.
+        assert_eq!(qm.nbytes(), 512 * 1024 + 64 * 1024);
+    }
+
+    #[test]
+    #[should_panic(expected = "group_size must divide cols")]
+    fn group_divides_cols() {
+        QuantizedMatrix::quantize(&[0.0; 10], 1, 10, QuantLevel::Q4, 3);
+    }
+}

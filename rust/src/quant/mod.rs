@@ -1,0 +1,147 @@
+//! Quantization substrate.
+//!
+//! SAIL serves llama.cpp-style group-wise quantized models at 2/3/4/5/6/8
+//! bits (the paper's Q2..Q8 levels). This module provides:
+//!
+//! - [`QuantLevel`]: the supported precision levels and their metadata,
+//! - [`pack`]: a dense bitstream packer/unpacker for sub-byte integers,
+//! - [`groupwise`]: group-wise symmetric weight quantization producing the
+//!   integer weights + scales consumed by the LUT-GEMV engine, and
+//! - [`act`]: int8 activation quantization with a per-vector scale.
+//!
+//! The functional contract that the rest of the system relies on (and that
+//! the tests pin down): `dequant(quantize(W))` equals the integer weights
+//! times the group scale, *bit-exactly* — all downstream GEMV paths
+//! (naive reference, LUT engine, bit-serial baseline, and the Pallas
+//! kernel on the Python side) must agree on these integers.
+
+pub mod act;
+pub mod groupwise;
+pub mod pack;
+
+pub use act::QuantizedVector;
+pub use groupwise::QuantizedMatrix;
+
+/// Weight precision levels supported by the `lutmm_1k` instruction's `ql`
+/// field (paper §IV-A: "all common quantization levels (2/3/4/5/6/8-bit)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QuantLevel {
+    Q2,
+    Q3,
+    Q4,
+    Q5,
+    Q6,
+    Q8,
+}
+
+impl QuantLevel {
+    /// All levels in ascending bit order.
+    pub const ALL: [QuantLevel; 6] = [
+        QuantLevel::Q2,
+        QuantLevel::Q3,
+        QuantLevel::Q4,
+        QuantLevel::Q5,
+        QuantLevel::Q6,
+        QuantLevel::Q8,
+    ];
+
+    /// Weight bit-width.
+    pub const fn bits(self) -> u32 {
+        match self {
+            QuantLevel::Q2 => 2,
+            QuantLevel::Q3 => 3,
+            QuantLevel::Q4 => 4,
+            QuantLevel::Q5 => 5,
+            QuantLevel::Q6 => 6,
+            QuantLevel::Q8 => 8,
+        }
+    }
+
+    /// Encoding used in the `lutmm_1k` instruction `ql` field (3 bits).
+    pub const fn ql_code(self) -> u8 {
+        match self {
+            QuantLevel::Q2 => 0,
+            QuantLevel::Q3 => 1,
+            QuantLevel::Q4 => 2,
+            QuantLevel::Q5 => 3,
+            QuantLevel::Q6 => 4,
+            QuantLevel::Q8 => 5,
+        }
+    }
+
+    /// Decode the `ql` field.
+    pub fn from_ql_code(code: u8) -> Option<QuantLevel> {
+        Some(match code {
+            0 => QuantLevel::Q2,
+            1 => QuantLevel::Q3,
+            2 => QuantLevel::Q4,
+            3 => QuantLevel::Q5,
+            4 => QuantLevel::Q6,
+            5 => QuantLevel::Q8,
+            _ => return None,
+        })
+    }
+
+    /// Parse "2"/"Q2"/"q2" style names.
+    pub fn parse(s: &str) -> Option<QuantLevel> {
+        let t = s.trim().trim_start_matches(['q', 'Q']);
+        Some(match t {
+            "2" => QuantLevel::Q2,
+            "3" => QuantLevel::Q3,
+            "4" => QuantLevel::Q4,
+            "5" => QuantLevel::Q5,
+            "6" => QuantLevel::Q6,
+            "8" => QuantLevel::Q8,
+            _ => return None,
+        })
+    }
+
+    /// Largest representable magnitude for symmetric quantization:
+    /// values live in `[-2^(b-1)+1, 2^(b-1)-1]` (we sacrifice the most
+    /// negative code to keep the range symmetric, as llama.cpp does).
+    pub const fn max_q(self) -> i32 {
+        (1 << (self.bits() - 1)) - 1
+    }
+
+    /// Effective bits per weight including the per-group f16 scale
+    /// amortized over a group of `group` weights (model-size accounting).
+    pub fn bits_per_weight(self, group: usize) -> f64 {
+        self.bits() as f64 + 16.0 / group as f64
+    }
+}
+
+impl std::fmt::Display for QuantLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Q{}", self.bits())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_codes_roundtrip() {
+        for q in QuantLevel::ALL {
+            assert_eq!(QuantLevel::from_ql_code(q.ql_code()), Some(q));
+            assert_eq!(QuantLevel::parse(&q.to_string()), Some(q));
+            assert_eq!(QuantLevel::parse(&q.bits().to_string()), Some(q));
+        }
+        assert_eq!(QuantLevel::from_ql_code(7), None);
+        assert_eq!(QuantLevel::parse("Q7"), None);
+    }
+
+    #[test]
+    fn max_q_symmetric() {
+        assert_eq!(QuantLevel::Q2.max_q(), 1);
+        assert_eq!(QuantLevel::Q3.max_q(), 3);
+        assert_eq!(QuantLevel::Q4.max_q(), 7);
+        assert_eq!(QuantLevel::Q8.max_q(), 127);
+    }
+
+    #[test]
+    fn bits_per_weight_includes_scale() {
+        let b = QuantLevel::Q4.bits_per_weight(32);
+        assert!((b - 4.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,202 @@
+//! Dense bitstream packing for sub-byte integers.
+//!
+//! Weights quantized to b bits are stored b-bit-aligned (no padding to byte
+//! boundaries), matching how SAIL lays weights out in cache lines: a 512-bit
+//! C-SRAM row holds `512/b` b-bit weights. Values are two's-complement,
+//! packed LSB-first into little-endian u64 words.
+
+/// A packed stream of fixed-width two's-complement integers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPacked {
+    words: Vec<u64>,
+    bits: u32,
+    len: usize,
+}
+
+impl BitPacked {
+    /// Pack `values` at `bits` width. Panics if any value is out of range
+    /// for a `bits`-bit two's-complement integer.
+    pub fn pack(values: &[i32], bits: u32) -> Self {
+        assert!((1..=32).contains(&bits), "bits must be in 1..=32");
+        let lo = -(1i64 << (bits - 1));
+        let hi = (1i64 << (bits - 1)) - 1;
+        let total_bits = values.len() * bits as usize;
+        let mut words = vec![0u64; (total_bits + 63) / 64];
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        for (i, &v) in values.iter().enumerate() {
+            assert!(
+                (v as i64) >= lo && (v as i64) <= hi,
+                "value {v} out of range for {bits}-bit"
+            );
+            let u = (v as u64) & mask;
+            let bitpos = i * bits as usize;
+            let word = bitpos / 64;
+            let off = bitpos % 64;
+            words[word] |= u << off;
+            if off + bits as usize > 64 {
+                words[word + 1] |= u >> (64 - off);
+            }
+        }
+        BitPacked { words, bits, len: values.len() }
+    }
+
+    /// Number of packed values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bit width per value.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Storage size in bytes (the quantity the memory-traffic model uses).
+    pub fn nbytes(&self) -> usize {
+        (self.len * self.bits as usize + 7) / 8
+    }
+
+    /// Get value `i` (sign-extended).
+    #[inline]
+    pub fn get(&self, i: usize) -> i32 {
+        debug_assert!(i < self.len, "index {i} out of bounds (len {})", self.len);
+        let bits = self.bits as usize;
+        let bitpos = i * bits;
+        let word = bitpos / 64;
+        let off = bitpos % 64;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let mut u = self.words[word] >> off;
+        if off + bits > 64 {
+            u |= self.words[word + 1] << (64 - off);
+        }
+        u &= mask;
+        // Sign-extend.
+        let sign = 1u64 << (bits - 1);
+        ((u ^ sign).wrapping_sub(sign)) as i64 as i32
+    }
+
+    /// Unpack all values.
+    pub fn unpack(&self) -> Vec<i32> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Unpack the range `[start, start+out.len())` into a caller buffer —
+    /// the allocation-free fast path the GEMV engine's column loop uses.
+    pub fn unpack_range_into(&self, start: usize, out: &mut [i32]) {
+        assert!(start + out.len() <= self.len);
+        let bits = self.bits as usize;
+        let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+        let sign = 1u64 << (bits - 1);
+        let mut bitpos = start * bits;
+        for o in out.iter_mut() {
+            let word = bitpos / 64;
+            let off = bitpos % 64;
+            let mut u = self.words[word] >> off;
+            if off + bits > 64 {
+                u |= self.words[word + 1] << (64 - off);
+            }
+            u &= mask;
+            *o = ((u ^ sign).wrapping_sub(sign)) as i64 as i32;
+            bitpos += bits;
+        }
+    }
+
+    /// Extract bit-plane `plane` (0 = LSB) of values `[start, start+n)` as a
+    /// u64-packed bit vector — this is what the DFM broadcasts to C-SRAMs
+    /// during bit-serial streaming.
+    pub fn bit_plane(&self, plane: u32, start: usize, n: usize) -> Vec<u64> {
+        assert!(plane < self.bits);
+        assert!(start + n <= self.len);
+        let mut out = vec![0u64; (n + 63) / 64];
+        for i in 0..n {
+            let v = self.get(start + i) as u32;
+            if (v >> plane) & 1 == 1 {
+                out[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    #[test]
+    fn roundtrip_simple() {
+        for bits in [2u32, 3, 4, 5, 6, 8, 12, 16] {
+            let hi = (1i32 << (bits - 1)) - 1;
+            let lo = -(1i32 << (bits - 1));
+            let vals: Vec<i32> = vec![0, 1, -1, hi, lo, hi / 2, lo / 2];
+            let p = BitPacked::pack(&vals, bits);
+            assert_eq!(p.unpack(), vals, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        propcheck::check(
+            "pack-unpack-roundtrip",
+            propcheck::Config { cases: 200, seed: 11 },
+            |p, i| {
+                let bits = [2u32, 3, 4, 5, 6, 8][p.usize_in(0, 6)];
+                let n = p.usize_in(0, 3 + i);
+                let vals: Vec<i32> =
+                    (0..n).map(|_| p.signed_bits(bits) as i32).collect();
+                (bits, vals)
+            },
+            |(bits, vals)| {
+                let p = BitPacked::pack(vals, *bits);
+                if p.unpack() == *vals {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nbytes_dense() {
+        // 1024 3-bit values = 3072 bits = 384 bytes (no per-value padding).
+        let vals = vec![1i32; 1024];
+        assert_eq!(BitPacked::pack(&vals, 3).nbytes(), 384);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn range_checked() {
+        BitPacked::pack(&[8], 4); // 4-bit max is 7
+    }
+
+    #[test]
+    fn bit_planes_reconstruct_values() {
+        let mut prng = Prng::new(123);
+        let bits = 4u32;
+        let vals: Vec<i32> = (0..100).map(|_| prng.signed_bits(bits) as i32).collect();
+        let p = BitPacked::pack(&vals, bits);
+        for (i, &v) in vals.iter().enumerate() {
+            let mut rec = 0u32;
+            for plane in 0..bits {
+                let bp = p.bit_plane(plane, 0, vals.len());
+                let bit = (bp[i / 64] >> (i % 64)) & 1;
+                rec |= (bit as u32) << plane;
+            }
+            let sign = 1u32 << (bits - 1);
+            let signed = ((rec ^ sign).wrapping_sub(sign)) as i32;
+            assert_eq!(signed, v, "i={i}");
+        }
+    }
+
+    #[test]
+    fn crossing_word_boundaries() {
+        // 3-bit values: value 21 starts at bit 63, crossing into word 1.
+        let vals: Vec<i32> = (0..64).map(|i| (i % 7) - 3).collect();
+        let p = BitPacked::pack(&vals, 3);
+        assert_eq!(p.unpack(), vals);
+    }
+}

@@ -1,0 +1,467 @@
+//! Paper table/figure regenerators.
+//!
+//! One function per evaluation artifact (Figs 1, 6, 9–13; Tables II–V),
+//! shared by the `cargo bench` targets and `examples/paper_tables.rs`.
+//! Where the paper published absolute numbers (Table II), the published
+//! matrix is embedded as `PAPER_TABLE2_*` and residuals are reported —
+//! the calibration contract is "who wins, by roughly what factor", see
+//! EXPERIMENTS.md.
+
+pub mod paper_data;
+
+use crate::baselines::{CpuModel, GpuModel};
+use crate::cost::{tokens_per_dollar, Platform};
+use crate::lutgemv::bitserial::{lut_vs_bitserial_gain, BitSerialModel};
+use crate::lutgemv::GemvCycleModel;
+use crate::model::ModelConfig;
+use crate::quant::QuantLevel;
+use crate::sim::SailPerfModel;
+use crate::util::table::{commas, f, Table};
+
+const BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Fig 1: LUT vs bit-serial efficiency gain across batch sizes for
+/// 2/3/4-bit quantization.
+pub fn fig1_lut_vs_bitserial() -> Table {
+    let mut t = Table::new(
+        "Fig 1 — LUT-based over bit-serial efficiency gain (same C-SRAM substrate)",
+        &["batch", "2-bit", "3-bit", "4-bit"],
+    );
+    for &b in &BATCHES {
+        t.row(&[
+            b.to_string(),
+            f(lut_vs_bitserial_gain(QuantLevel::Q2, 4, b), 2),
+            f(lut_vs_bitserial_gain(QuantLevel::Q3, 4, b), 2),
+            f(lut_vs_bitserial_gain(QuantLevel::Q4, 4, b), 2),
+        ]);
+    }
+    t
+}
+
+/// Fig 6: cycle counts across batch × NBW × precision.
+pub fn fig6_design_space() -> Vec<Table> {
+    let mut out = Vec::new();
+    for level in [QuantLevel::Q2, QuantLevel::Q3, QuantLevel::Q4, QuantLevel::Q6, QuantLevel::Q8] {
+        let mut t = Table::new(
+            &format!("Fig 6 — tile cycles per batch item, {level} (1024×1024 GEMV)"),
+            &["NBW", "b=1", "b=2", "b=4", "b=8", "b=16", "b=32"],
+        );
+        for nbw in 1..=4u32 {
+            let m = GemvCycleModel::prototype(level, nbw);
+            let mut row = vec![format!("NBW={nbw}")];
+            for &b in &BATCHES {
+                row.push(commas(m.cycles_per_item(1024, 1024, b) as u64));
+            }
+            t.row(&row);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 9: SAIL speedup over the ARM baseline per quantization level.
+pub fn fig9_quant_speedup() -> Table {
+    let mut t = Table::new(
+        "Fig 9 — SAIL speedup over ARM (16 threads, batch 1)",
+        &["quant", "7B SAIL t/s", "7B ARM t/s", "7B speedup", "13B speedup"],
+    );
+    let m7 = ModelConfig::llama2_7b();
+    let m13 = ModelConfig::llama2_13b();
+    let arm = CpuModel::arm_n1();
+    for level in QuantLevel::ALL {
+        let s7 = SailPerfModel::paper_config(level, 16).tokens_per_sec(&m7, 1);
+        let a7 = arm.tokens_per_sec(&m7, level, 16, 1);
+        let s13 = SailPerfModel::paper_config(level, 16).tokens_per_sec(&m13, 1);
+        let a13 = arm.tokens_per_sec(&m13, level, 16, 1);
+        t.row(&[
+            level.to_string(),
+            f(s7, 2),
+            f(a7, 2),
+            format!("{:.2}x", s7 / a7),
+            format!("{:.2}x", s13 / a13),
+        ]);
+    }
+    t
+}
+
+/// Fig 10: token generation speed per platform × batch (7B/13B, Q4/Q8).
+pub fn fig10_batch_platforms() -> Table {
+    let mut t = Table::new(
+        "Fig 10 — tokens/s vs batch (16 threads; A100 at ctx 512)",
+        &["config", "b=1", "b=2", "b=4", "b=8"],
+    );
+    let arm = CpuModel::arm_n1();
+    let amx = CpuModel::amx();
+    let a100 = GpuModel::a100_80g();
+    for (m, level) in [
+        (ModelConfig::llama2_7b(), QuantLevel::Q4),
+        (ModelConfig::llama2_7b(), QuantLevel::Q8),
+        (ModelConfig::llama2_13b(), QuantLevel::Q4),
+        (ModelConfig::llama2_13b(), QuantLevel::Q8),
+    ] {
+        let tag = |p: &str| format!("{} {level} {p}", short(&m));
+        let sail = SailPerfModel::paper_config(level, 16);
+        let row4 = |g: &dyn Fn(usize) -> f64| -> Vec<String> {
+            [1usize, 2, 4, 8].iter().map(|&b| f(g(b), 1)).collect()
+        };
+        let mut push = |name: String, vals: Vec<String>| {
+            let mut row = vec![name];
+            row.extend(vals);
+            t.row(&row);
+        };
+        push(tag("ARM"), row4(&|b| arm.tokens_per_sec(&m, level, 16, b)));
+        push(tag("AMX"), row4(&|b| amx.tokens_per_sec(&m, level, 16, b)));
+        push(tag("A100"), row4(&|b| a100.tokens_per_sec_at(&m, level, 512, b)));
+        push(tag("SAIL"), row4(&|b| sail.tokens_per_sec(&m, b)));
+    }
+    t
+}
+
+fn short(m: &ModelConfig) -> String {
+    if m.name.contains("7B") {
+        "7B".into()
+    } else if m.name.contains("13B") {
+        "13B".into()
+    } else {
+        m.name.clone()
+    }
+}
+
+/// Fig 11: ARM vs Non-AMX vs AMX vs SAIL at Q2/Q4/Q8.
+pub fn fig11_latest_cpus() -> Table {
+    let mut t = Table::new(
+        "Fig 11 — CPU-family comparison (16 threads, batch 1, tokens/s)",
+        &["config", "ARM", "Non-AMX", "AMX", "SAIL"],
+    );
+    for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+        for level in [QuantLevel::Q2, QuantLevel::Q4, QuantLevel::Q8] {
+            t.row(&[
+                format!("{} {level}", short(&m)),
+                f(CpuModel::arm_n1().tokens_per_sec(&m, level, 16, 1), 2),
+                f(CpuModel::non_amx().tokens_per_sec(&m, level, 16, 1), 2),
+                f(CpuModel::amx().tokens_per_sec(&m, level, 16, 1), 2),
+                f(SailPerfModel::paper_config(level, 16).tokens_per_sec(&m, 1), 2),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig 12: Q4 GEMV kernel latency breakdown — Baseline / NC / LUT / LUT+TC.
+///
+/// Kernel: one [1,4096]×[4096,4096] Q4 projection, 16 threads. The CPU
+/// type-conversion term is the per-group float conversion NC and plain
+/// LUT must bounce to the vector engine (§II-B: de-/quantization ≈ half
+/// the QLLM work); LUT+TC runs it in-memory (Algorithm 1).
+pub fn fig12_breakdown() -> Table {
+    let (k, n) = (4096usize, 4096usize);
+    let threads = 16u32;
+    let clock = 3.0e9;
+    let level = QuantLevel::Q4;
+
+    // CPU-side type conversion for per-group sums.
+    let conversions = (k * n / 32) as f64;
+    let cpu_tc = conversions * 4.0 / (threads as f64 * clock);
+
+    // A cold single kernel: the PIM configurations must also stream the
+    // weight tile DRAM→LLC with no ping-pong to hide behind.
+    let bytes = (k * n) as f64 * 0.5625;
+    let dram = crate::arch::DramConfig::sail_6400();
+    let pim_transfer = dram.stream_secs(bytes as u64);
+
+    // Baseline: ARM vector-unit GEMV kernel (compute-bound at Q4; its own
+    // memory traffic is folded into the 40 GB/s effective bandwidth).
+    let base_compute = (k * n) as f64 * 0.636 / (clock * threads as f64 * 0.85);
+    let base_bw = bytes / 40.0e9;
+    let baseline = base_compute.max(base_bw);
+
+    // NC: bit-serial in-SRAM compute (16 tiles over 16 thread-pipelines)
+    // + CPU type conversion.
+    let bs = BitSerialModel::prototype(level);
+    let nc_compute = bs.tile_cycles(1024, 1024, 1) as f64 * (16.0 / threads as f64) / clock;
+
+    // LUT: LUT-GEMV compute + CPU type conversion.
+    let mut gm = GemvCycleModel::prototype(level, 4);
+    gm.use_prt = true;
+    gm.in_memory_typeconv = false;
+    let lut_compute = gm.tile(1024, 1024, 1).total() as f64 * (16.0 / threads as f64) / clock;
+
+    // LUT+TC: full SAIL — in-memory conversion replaces the CPU term.
+    gm.in_memory_typeconv = true;
+    let lut_tc = gm.tile(1024, 1024, 1).total() as f64 * (16.0 / threads as f64) / clock;
+
+    let mut t = Table::new(
+        "Fig 12 — Q4 GEMV kernel latency breakdown ([1,4096]×[4096,4096], 16T, cold)",
+        &["config", "compute ms", "transfer ms", "cpu-typeconv ms", "total ms", "speedup"],
+    );
+    let mut push = |name: &str, compute: f64, transfer: f64, tc: f64| {
+        let total = compute + transfer + tc;
+        t.row(&[
+            name.into(),
+            f(compute * 1e3, 3),
+            f(transfer * 1e3, 3),
+            f(tc * 1e3, 3),
+            f(total * 1e3, 3),
+            format!("{:.2}x", baseline / total),
+        ]);
+    };
+    push("Baseline (ARM)", baseline, 0.0, 0.0);
+    push("NC (bit-serial)", nc_compute, pim_transfer, cpu_tc);
+    push("LUT (SAIL w/o in-mem TC)", lut_compute, pim_transfer, cpu_tc);
+    push("LUT+TC (full SAIL)", lut_tc, pim_transfer, 0.0);
+    t
+}
+
+/// Fig 13 + Table IV: tokens per dollar across platforms.
+pub fn fig13_tokens_per_dollar() -> Vec<Table> {
+    let mut out = Vec::new();
+    for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+        for batch in [1usize, 8] {
+            let mut t = Table::new(
+                &format!("Fig 13 — tokens per dollar, {} (batch {batch})", m.name),
+                &["quant", "CPU-5c", "CPU-16c", "1xV100", "SAIL-1T", "SAIL-16T"],
+            );
+            for level in [QuantLevel::Q8, QuantLevel::Q6, QuantLevel::Q4, QuantLevel::Q3, QuantLevel::Q2] {
+                let arm = CpuModel::arm_n1();
+                let cpu5 = arm.tokens_per_sec(&m, level, 5, batch);
+                let cpu16 = arm.tokens_per_sec(&m, level, 16, batch);
+                // GPU runs fp-path quant kernels; below Q4 it gains nothing
+                // (use the Q4 bytes as its floor — favours the GPU).
+                let gpu_level = if level.bits() < 4 { QuantLevel::Q4 } else { level };
+                let gpu = GpuModel::v100()
+                    .best_tokens_per_sec(&m, gpu_level, 2048)
+                    .map(|(r, _)| r);
+                let sail1 = SailPerfModel::paper_config(level, 1).tokens_per_sec(&m, batch);
+                let sail16 = SailPerfModel::paper_config(level, 16).tokens_per_sec(&m, batch);
+                t.row(&[
+                    level.to_string(),
+                    f(tokens_per_dollar(cpu5, Platform::cpu_5core()), 0),
+                    f(tokens_per_dollar(cpu16, Platform::cpu_16core()), 0),
+                    gpu.map(|g| f(tokens_per_dollar(g, Platform::gpu_1xv100()), 0))
+                        .unwrap_or_else(|| "X".into()),
+                    f(tokens_per_dollar(sail1, Platform::sail_5core()), 0),
+                    f(tokens_per_dollar(sail16, Platform::sail_16core()), 0),
+                ]);
+            }
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Table II: CPU throughput across quantization levels and thread counts,
+/// with paper residuals.
+pub fn table2_cpu_throughput() -> Vec<Table> {
+    let threads = [1u32, 2, 4, 8, 16];
+    let mut main = Table::new(
+        "Table II — tokens/s across quantization and threads (model values)",
+        &[
+            "config", "ARM 1T", "AMX 1T", "SAIL 1T", "ARM 4T", "AMX 4T", "SAIL 4T", "ARM 16T",
+            "AMX 16T", "SAIL 16T",
+        ],
+    );
+    let arm = CpuModel::arm_n1();
+    let amx = CpuModel::amx();
+    let mut geo: Vec<Vec<f64>> = vec![Vec::new(); 9];
+    for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+        for level in QuantLevel::ALL {
+            let mut row = vec![format!("{}-{level}", short(&m))];
+            let mut col = 0;
+            for &t in &[1u32, 4, 16] {
+                for sys in 0..3 {
+                    let v = match sys {
+                        0 => arm.tokens_per_sec(&m, level, t, 1),
+                        1 => amx.tokens_per_sec(&m, level, t, 1),
+                        _ => SailPerfModel::paper_config(level, t).tokens_per_sec(&m, 1),
+                    };
+                    geo[col].push(v);
+                    col += 1;
+                    row.push(f(v, 2));
+                }
+            }
+            main.row(&row);
+        }
+    }
+    let mut geo_row = vec!["GEO-MEAN".to_string()];
+    for col in &geo {
+        geo_row.push(f(crate::util::geomean(col), 2));
+    }
+    main.row(&geo_row);
+
+    // Residuals vs the published matrix.
+    let mut resid = Table::new(
+        "Table II residuals — model / paper ratio (1.00 = exact)",
+        &["config", "sys", "1T", "2T", "4T", "8T", "16T"],
+    );
+    for block in paper_data::TABLE2.iter() {
+        let m = if block.model == "7B" {
+            ModelConfig::llama2_7b()
+        } else {
+            ModelConfig::llama2_13b()
+        };
+        let level = QuantLevel::parse(block.level).unwrap();
+        for (sys_idx, sys_name) in ["ARM", "AMX", "SAIL"].iter().enumerate() {
+            let mut row = vec![format!("{}-{level}", block.model), sys_name.to_string()];
+            for (ti, &t) in threads.iter().enumerate() {
+                let model_v = match sys_idx {
+                    0 => arm.tokens_per_sec(&m, level, t, 1),
+                    1 => amx.tokens_per_sec(&m, level, t, 1),
+                    _ => SailPerfModel::paper_config(level, t).tokens_per_sec(&m, 1),
+                };
+                let paper_v = block.rows[sys_idx][ti];
+                row.push(f(model_v / paper_v, 2));
+            }
+            resid.row(&row);
+        }
+    }
+    vec![main, resid]
+}
+
+/// Table III: GPU vs SAIL token generation across context lengths.
+pub fn table3_gpu_comparison() -> Table {
+    let mut t = Table::new(
+        "Table III — tokens/s / best-batch vs context length",
+        &["platform", "model", "quant", "ctx 512", "ctx 1K", "ctx 2K", "ctx 4K"],
+    );
+    let ctxs = [512usize, 1024, 2048, 4096];
+    let gpus = [GpuModel::v100(), GpuModel::v100x2(), GpuModel::a100_80g()];
+    for g in &gpus {
+        for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+            for level in [QuantLevel::Q4, QuantLevel::Q8] {
+                let mut row = vec![g.name.to_string(), short(&m), level.to_string()];
+                for &ctx in &ctxs {
+                    row.push(match g.best_tokens_per_sec(&m, level, ctx) {
+                        Some((r, b)) => format!("{:.1}/{b}", r),
+                        None => "X".into(),
+                    });
+                }
+                t.row(&row);
+            }
+        }
+    }
+    // SAIL: context-independent (§V-G).
+    for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+        for level in [QuantLevel::Q4, QuantLevel::Q8] {
+            let r = SailPerfModel::paper_config(level, 16).tokens_per_sec(&m, 8);
+            let cell = format!("{:.1}/8", r);
+            t.row(&[
+                "SAIL-16T".into(),
+                short(&m),
+                level.to_string(),
+                cell.clone(),
+                cell.clone(),
+                cell.clone(),
+                cell,
+            ]);
+        }
+    }
+    t
+}
+
+/// Table IV: platform cost inputs.
+pub fn table4_costs() -> Table {
+    let mut t = Table::new("Table IV — GCP monthly cost", &["system", "$/month"]);
+    for p in [
+        Platform::cpu_5core(),
+        Platform::cpu_16core(),
+        Platform::gpu_1xv100(),
+        Platform::gpu_4xv100(),
+        Platform::sail_16core(),
+    ] {
+        t.row(&[p.name.to_string(), f(p.monthly_usd, 2)]);
+    }
+    t
+}
+
+/// Table V: overhead comparison.
+pub fn table5_overhead() -> Table {
+    let mut t = Table::new(
+        "Table V — overhead comparison",
+        &["approach", "HW overhead", "system overhead"],
+    );
+    for row in crate::cost::overhead::table5_rows() {
+        t.row(&[row.approach.into(), row.hw_overhead.into(), row.sys_overhead.into()]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        assert!(fig1_lut_vs_bitserial().render().contains("Fig 1"));
+        assert_eq!(fig6_design_space().len(), 5);
+        assert!(fig9_quant_speedup().render().contains("speedup"));
+        assert!(fig10_batch_platforms().render().contains("SAIL"));
+        assert!(fig11_latest_cpus().render().contains("Non-AMX"));
+        assert!(fig12_breakdown().render().contains("LUT+TC"));
+        assert_eq!(fig13_tokens_per_dollar().len(), 4);
+        assert_eq!(table2_cpu_throughput().len(), 2);
+        assert!(table3_gpu_comparison().render().contains("X"));
+        assert!(table4_costs().render().contains("665.45"));
+        assert!(table5_overhead().render().contains("SAIL"));
+    }
+
+    #[test]
+    fn fig12_final_speedup_near_paper() {
+        // Paper: "achieving a final 3.81× speedup over the Baseline".
+        let r = fig12_breakdown().render();
+        let last = r.lines().last().unwrap();
+        let speedup: f64 = last
+            .split_whitespace()
+            .last()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap();
+        assert!((2.2..=6.0).contains(&speedup), "LUT+TC speedup {speedup}");
+    }
+
+    #[test]
+    fn fig12_ordering_matches_paper() {
+        // Baseline < NC < LUT < LUT+TC in speedup.
+        let r = fig12_breakdown().render();
+        let speedups: Vec<f64> = r
+            .lines()
+            .skip(3)
+            .map(|l| {
+                l.split_whitespace()
+                    .last()
+                    .unwrap()
+                    .trim_end_matches('x')
+                    .parse()
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(speedups.len(), 4);
+        assert!(speedups.windows(2).all(|w| w[0] < w[1]), "{speedups:?}");
+    }
+
+    #[test]
+    fn table2_residuals_are_bounded() {
+        // Every residual cell must be within [0.4, 2.5]; the bulk within
+        // [0.7, 1.4] (see EXPERIMENTS.md for the per-cell discussion).
+        let tables = table2_cpu_throughput();
+        let resid = tables[1].render();
+        let mut cells = Vec::new();
+        for line in resid.lines().skip(3) {
+            for tok in line.split_whitespace().skip(2) {
+                if let Ok(v) = tok.parse::<f64>() {
+                    cells.push(v);
+                }
+            }
+        }
+        assert!(cells.len() >= 150, "expected full residual matrix, got {}", cells.len());
+        for &c in &cells {
+            assert!((0.4..=2.5).contains(&c), "residual {c} out of band");
+        }
+        let close = cells.iter().filter(|&&c| (0.7..=1.4).contains(&c)).count();
+        assert!(
+            close * 10 >= cells.len() * 6,
+            "only {close}/{} residuals within 30%",
+            cells.len()
+        );
+    }
+}

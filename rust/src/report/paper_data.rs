@@ -1,0 +1,162 @@
+//! Published measurement matrices from the paper, used as calibration /
+//! residual targets (never as model inputs — see DESIGN.md §Calibration;
+//! the one exception is the per-weight CPU constants in
+//! `baselines::calib`, which are fitted from the single-thread columns
+//! below and cross-validated against the rest).
+
+/// One (model, quant) block of the paper's Table II: ARM / AMX / SAIL
+/// tokens/s at 1, 2, 4, 8, 16 threads.
+pub struct Table2Block {
+    pub model: &'static str,
+    pub level: &'static str,
+    /// rows[0] = ARM, rows[1] = AMX, rows[2] = SAIL; columns = threads
+    /// 1, 2, 4, 8, 16.
+    pub rows: [[f64; 5]; 3],
+}
+
+/// The full published Table II.
+pub const TABLE2: [Table2Block; 12] = [
+    Table2Block {
+        model: "7B",
+        level: "Q2",
+        rows: [
+            [0.68, 1.34, 2.63, 4.97, 9.30],
+            [2.06, 4.02, 7.65, 14.25, 24.96],
+            [6.42, 12.62, 24.00, 43.50, 81.63],
+        ],
+    },
+    Table2Block {
+        model: "7B",
+        level: "Q3",
+        rows: [
+            [0.70, 1.38, 2.71, 5.11, 9.62],
+            [2.02, 3.93, 7.47, 13.69, 24.50],
+            [5.53, 10.93, 20.87, 38.40, 73.75],
+        ],
+    },
+    Table2Block {
+        model: "7B",
+        level: "Q4",
+        rows: [
+            [0.70, 1.37, 2.67, 5.15, 9.85],
+            [3.45, 6.72, 11.51, 21.13, 33.55],
+            [4.82, 9.61, 18.67, 35.17, 72.10],
+        ],
+    },
+    Table2Block {
+        model: "7B",
+        level: "Q5",
+        rows: [
+            [0.60, 1.17, 2.32, 4.48, 8.49],
+            [1.30, 2.56, 4.84, 9.17, 16.48],
+            [3.98, 7.96, 15.52, 29.62, 61.84],
+        ],
+    },
+    Table2Block {
+        model: "7B",
+        level: "Q6",
+        rows: [
+            [0.79, 1.20, 2.36, 4.52, 8.31],
+            [1.20, 2.33, 4.47, 8.10, 14.62],
+            [3.34, 6.67, 12.97, 24.60, 50.63],
+        ],
+    },
+    Table2Block {
+        model: "7B",
+        level: "Q8",
+        rows: [
+            [0.66, 1.28, 2.51, 4.69, 5.54],
+            [2.30, 4.51, 7.50, 13.55, 18.39],
+            [2.60, 5.22, 10.28, 19.86, 43.27],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q2",
+        rows: [
+            [0.35, 0.70, 1.38, 2.68, 5.05],
+            [1.06, 2.06, 3.91, 7.28, 12.75],
+            [3.77, 7.44, 14.34, 26.63, 52.55],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q3",
+        rows: [
+            [0.35, 0.69, 1.36, 2.63, 5.01],
+            [1.02, 2.01, 3.82, 7.00, 12.62],
+            [3.67, 7.33, 13.84, 25.70, 51.10],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q4",
+        rows: [
+            [0.36, 0.72, 1.41, 2.75, 5.27],
+            [1.82, 3.53, 5.79, 10.95, 17.42],
+            [2.81, 5.62, 11.00, 21.06, 45.07],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q5",
+        rows: [
+            [0.31, 0.61, 1.20, 2.34, 4.44],
+            [0.67, 1.32, 2.52, 4.78, 8.56],
+            [2.32, 4.64, 9.10, 17.60, 38.24],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q6",
+        rows: [
+            [0.32, 0.62, 1.23, 2.40, 4.52],
+            [0.62, 1.18, 2.17, 4.14, 7.25],
+            [1.94, 3.88, 7.60, 14.61, 31.32],
+        ],
+    },
+    Table2Block {
+        model: "13B",
+        level: "Q8",
+        rows: [
+            [0.34, 0.68, 1.29, 2.46, 4.80],
+            [1.15, 2.20, 3.89, 7.19, 10.07],
+            [1.51, 3.03, 5.98, 10.75, 26.25],
+        ],
+    },
+];
+
+/// Table III highlights: SAIL-16T-8B reported rows.
+pub const TABLE3_SAIL: [(&str, &str, f64); 3] = [
+    ("7B", "Q4", 134.22),
+    ("7B", "Q8", 113.84),
+    ("13B", "Q4", 73.93),
+];
+
+/// Headline claims (§I / abstract).
+pub const HEADLINE_SPEEDUP_MAX: f64 = 10.7;
+pub const HEADLINE_TPD_VS_CPU: f64 = 19.9;
+pub const HEADLINE_TPD_VS_V100: f64 = 7.04;
+pub const PRT_CYCLE_REDUCTION: f64 = 0.138;
+pub const PATTERN_REPEAT_RATE: f64 = 0.17;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matrix_is_complete_and_monotone_in_threads() {
+        assert_eq!(TABLE2.len(), 12);
+        for b in &TABLE2 {
+            for sys in &b.rows {
+                for w in sys.windows(2) {
+                    assert!(w[1] > w[0], "{}-{} not monotone: {sys:?}", b.model, b.level);
+                }
+            }
+            // SAIL beats ARM everywhere in the published data.
+            for t in 0..5 {
+                assert!(b.rows[2][t] > b.rows[0][t]);
+            }
+        }
+    }
+}

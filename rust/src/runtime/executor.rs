@@ -1,0 +1,194 @@
+//! PJRT execution of the AOT artifacts.
+//!
+//! Compile once at startup (`DecodeModel::load`), then every serving
+//! iteration is a single `execute` of the decode-step HLO with the current
+//! (tokens, positions, kv, weights…) inputs. Weight literals are built
+//! once and reused across iterations; the KV cache round-trips host-side
+//! (the CPU PJRT plugin shares host memory, so this is a copy, not a
+//! transfer).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+use super::manifest::Manifest;
+use super::weights::{DType, WeightsFile};
+
+fn dtype_to_elem(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I8 => xla::ElementType::S8,
+        DType::I32 => xla::ElementType::S32,
+        DType::U32 => xla::ElementType::U32,
+    }
+}
+
+fn literal_from_bytes(d: DType, shape: &[usize], data: &[u8]) -> xla::Literal {
+    xla::Literal::create_from_shape_and_untyped_data(dtype_to_elem(d), shape, data)
+        .expect("shape/data mismatch")
+}
+
+/// Compile an HLO-text artifact on a PJRT client.
+fn compile_artifact(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+}
+
+/// The decode-step engine: one `step()` call = one token per active slot.
+pub struct DecodeModel {
+    exe: xla::PjRtLoadedExecutable,
+    weight_literals: Vec<xla::Literal>,
+    /// Current KV cache (host copy, fed back each step).
+    kv: xla::Literal,
+    pub manifest: Manifest,
+    pub batch: usize,
+    steps_executed: u64,
+}
+
+impl DecodeModel {
+    /// Load + compile the decode artifact for the manifest's batch size
+    /// (`model.hlo.txt`) or batch 1 (`decode_b1.hlo.txt`).
+    pub fn load(client: &xla::PjRtClient, dir: &Path, batch: usize) -> Result<DecodeModel> {
+        let manifest = Manifest::load(dir)?;
+        let artifact = if batch == manifest.batch {
+            manifest.artifact("model.hlo.txt")
+        } else if batch == 1 {
+            manifest.artifact("decode_b1.hlo.txt")
+        } else {
+            bail!(
+                "no artifact for batch {batch} (available: {} and 1)",
+                manifest.batch
+            );
+        };
+        let exe = compile_artifact(client, &artifact)?;
+
+        let wf = WeightsFile::load(&manifest.artifact("weights.bin"))?;
+        // Literals in manifest order — the runtime ABI.
+        let mut weight_literals = Vec::with_capacity(manifest.weight_order.len());
+        for name in &manifest.weight_order {
+            let a = wf
+                .by_name(name)
+                .ok_or_else(|| anyhow!("weights.bin missing {name}"))?;
+            weight_literals.push(literal_from_bytes(a.dtype, &a.shape, &a.data));
+        }
+
+        let kv_shape = manifest.kv_shape(batch);
+        let kv_elems: usize = kv_shape.iter().product();
+        let kv = literal_from_bytes(DType::F32, &kv_shape, &vec![0u8; kv_elems * 4]);
+        Ok(DecodeModel { exe, weight_literals, kv, manifest, batch, steps_executed: 0 })
+    }
+
+    /// Reset the KV cache for slot reuse across requests. `slots` lists
+    /// the batch slots to clear (None = all).
+    pub fn reset_kv(&mut self, slots: Option<&[usize]>) -> Result<()> {
+        let shape = self.manifest.kv_shape(self.batch);
+        match slots {
+            None => {
+                let elems: usize = shape.iter().product();
+                self.kv = literal_from_bytes(DType::F32, &shape, &vec![0u8; elems * 4]);
+            }
+            Some(slots) => {
+                // Zero the slot's stripes in the host copy.
+                let mut data = self.kv.to_vec::<f32>()?;
+                let (l, two, b, ctx, h) = (shape[0], shape[1], shape[2], shape[3], shape[4]);
+                for &slot in slots {
+                    assert!(slot < b);
+                    for li in 0..l {
+                        for kvi in 0..two {
+                            let base = ((li * two + kvi) * b + slot) * ctx * h;
+                            data[base..base + ctx * h].fill(0.0);
+                        }
+                    }
+                }
+                let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+                self.kv = literal_from_bytes(DType::F32, &shape, &bytes);
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step: feed last tokens + per-slot positions, get logits
+    /// `[batch * vocab]` back; the KV cache advances internally.
+    pub fn step(&mut self, tokens: &[i32], positions: &[i32]) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), self.batch);
+        assert_eq!(positions.len(), self.batch);
+        let tok_bytes: Vec<u8> = tokens.iter().flat_map(|t| t.to_le_bytes()).collect();
+        let pos_bytes: Vec<u8> = positions.iter().flat_map(|p| p.to_le_bytes()).collect();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.weight_literals.len());
+        let tok_lit = literal_from_bytes(DType::I32, &[self.batch], &tok_bytes);
+        let pos_lit = literal_from_bytes(DType::I32, &[self.batch], &pos_bytes);
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        args.push(&self.kv);
+        for w in &self.weight_literals {
+            args.push(w);
+        }
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, new_kv) = result.to_tuple2()?;
+        self.kv = new_kv;
+        self.steps_executed += 1;
+        Ok(logits.to_vec::<f32>()?)
+    }
+
+    /// Greedy next-token selection from a step's logits.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<i32> {
+        let vocab = self.manifest.config.vocab;
+        assert_eq!(logits.len(), self.batch * vocab);
+        (0..self.batch)
+            .map(|b| {
+                let row = &logits[b * vocab..(b + 1) * vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+}
+
+/// The standalone `lutmm_1k` tile artifact: a [1,1024]×[1024,1024] Q4
+/// LUT-GEMV — used by the quickstart example and the runtime cross-check
+/// tests (Rust engine vs compiled Pallas kernel).
+pub struct GemvTile {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl GemvTile {
+    pub fn load(client: &xla::PjRtClient, dir: &Path) -> Result<GemvTile> {
+        Ok(GemvTile { exe: compile_artifact(client, &dir.join("gemv_q4_1k.hlo.txt"))? })
+    }
+
+    /// Execute: x_codes i8[1,1024], w_codes i8[1024,1024] (row = output
+    /// column's basis weights), w_scales f32[1024,32], x_scale f32 → f32[1024].
+    pub fn run(
+        &self,
+        x_codes: &[i8],
+        w_codes: &[i8],
+        w_scales: &[f32],
+        x_scale: f32,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(x_codes.len(), 1024);
+        assert_eq!(w_codes.len(), 1024 * 1024);
+        assert_eq!(w_scales.len(), 1024 * 32);
+        let xb: Vec<u8> = x_codes.iter().map(|&v| v as u8).collect();
+        let wb: Vec<u8> = w_codes.iter().map(|&v| v as u8).collect();
+        let wsb: Vec<u8> = w_scales.iter().flat_map(|f| f.to_le_bytes()).collect();
+        let xsb: Vec<u8> = x_scale.to_le_bytes().to_vec();
+        let x = literal_from_bytes(DType::I8, &[1, 1024], &xb);
+        let w = literal_from_bytes(DType::I8, &[1024, 1024], &wb);
+        let ws = literal_from_bytes(DType::F32, &[1024, 32], &wsb);
+        let xs = literal_from_bytes(DType::F32, &[1], &xsb);
+        let result = self.exe.execute::<xla::Literal>(&[x, w, ws, xs])?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple1()?.to_vec::<f32>()?)
+    }
+}

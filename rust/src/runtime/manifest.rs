@@ -1,0 +1,105 @@
+//! `manifest.json` — artifact metadata emitted by `aot.py`.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Model configuration recorded in the manifest (mirrors `TinyConfig`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestConfig {
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_context: usize,
+    pub wbits: usize,
+    pub group: usize,
+    pub params: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ManifestConfig,
+    pub batch: usize,
+    pub weight_order: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let f = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("config missing {k}"))
+        };
+        let weight_order = j
+            .get("weight_order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing weight_order"))?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config: ManifestConfig {
+                hidden: f("hidden")?,
+                layers: f("layers")?,
+                heads: f("heads")?,
+                ffn: f("ffn")?,
+                vocab: f("vocab")?,
+                max_context: f("max_context")?,
+                wbits: f("wbits")?,
+                group: f("group")?,
+                params: f("params")?,
+            },
+            batch: j
+                .get("batch")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing batch"))?,
+            weight_order,
+        })
+    }
+
+    /// Path to an artifact file within the directory.
+    pub fn artifact(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// KV-cache shape for a given batch: [L, 2, B, CTX, H].
+    pub fn kv_shape(&self, batch: usize) -> [usize; 5] {
+        [self.config.layers, 2, batch, self.config.max_context, self.config.hidden]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.hidden, 256);
+        assert_eq!(m.config.layers, 4);
+        assert_eq!(m.config.vocab, 2048);
+        assert!(m.weight_order.len() > 4);
+        assert_eq!(m.weight_order[0], "embed");
+        assert_eq!(m.kv_shape(4), [4, 2, 4, 256, 256]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent-sail")).is_err());
+    }
+}

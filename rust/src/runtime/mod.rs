@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the serving hot path. Python never runs here — the HLO text
+//! in `artifacts/` is the entire model.
+//!
+//! - [`weights`]: reader for the `weights.bin` container emitted by
+//!   `python/compile/aot.py`;
+//! - [`manifest`]: the `manifest.json` metadata (argument order, shapes,
+//!   model config);
+//! - [`executor`]: PJRT client wrapper — compile once, execute per
+//!   iteration ([`executor::DecodeModel`] is the decode-step engine the
+//!   coordinator drives).
+
+pub mod executor;
+pub mod manifest;
+pub mod weights;
+
+pub use executor::{DecodeModel, GemvTile};
+pub use manifest::Manifest;
+pub use weights::{DType, WeightArray, WeightsFile};

@@ -1,0 +1,195 @@
+//! Reader for the `weights.bin` container written by `aot.py`.
+//!
+//! Format (little-endian): `u32 count`, then per array:
+//! `u32 name_len, name bytes, u32 dtype_code, u32 rank, u32 dims[rank],
+//! raw data bytes`.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a stored array (codes match `aot.DTYPE_CODES`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn from_code(c: u32) -> Result<DType> {
+        Ok(match c {
+            0 => DType::F32,
+            1 => DType::I8,
+            2 => DType::I32,
+            3 => DType::U32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// One named array from the container.
+#[derive(Debug, Clone)]
+pub struct WeightArray {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl WeightArray {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as f32 (panics on dtype mismatch — caller bug).
+    pub fn as_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, DType::F32, "{} is not f32", self.name);
+        self.data
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+
+    pub fn as_i8(&self) -> &[u8] {
+        assert_eq!(self.dtype, DType::I8, "{} is not i8", self.name);
+        &self.data
+    }
+}
+
+/// The parsed container.
+#[derive(Debug)]
+pub struct WeightsFile {
+    pub arrays: Vec<WeightArray>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &std::path::Path) -> Result<WeightsFile> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightsFile> {
+        let mut off = 0usize;
+        let u32_at = |off: &mut usize| -> Result<u32> {
+            if *off + 4 > bytes.len() {
+                bail!("truncated header at {off}");
+            }
+            let v = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+            *off += 4;
+            Ok(v)
+        };
+        let count = u32_at(&mut off)? as usize;
+        let mut arrays = Vec::with_capacity(count);
+        for i in 0..count {
+            let name_len = u32_at(&mut off)? as usize;
+            if off + name_len > bytes.len() {
+                bail!("truncated name in array {i}");
+            }
+            let name = String::from_utf8(bytes[off..off + name_len].to_vec())
+                .with_context(|| format!("bad name in array {i}"))?;
+            off += name_len;
+            let dtype = DType::from_code(u32_at(&mut off)?)?;
+            let rank = u32_at(&mut off)? as usize;
+            if rank > 8 {
+                bail!("implausible rank {rank} for {name}");
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(u32_at(&mut off)? as usize);
+            }
+            let nbytes = shape.iter().product::<usize>() * dtype.elem_bytes();
+            if off + nbytes > bytes.len() {
+                bail!("truncated data for {name}: need {nbytes}");
+            }
+            arrays.push(WeightArray {
+                name,
+                dtype,
+                shape,
+                data: bytes[off..off + nbytes].to_vec(),
+            });
+            off += nbytes;
+        }
+        if off != bytes.len() {
+            bail!("{} trailing bytes after {count} arrays", bytes.len() - off);
+        }
+        Ok(WeightsFile { arrays })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.arrays.iter().map(|a| a.data.len()).sum()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&WeightArray> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<u8> {
+        // count=2: "a" f32 [2] = [1.0, 2.0]; "b" i8 [3] = [1, 255, 3]
+        let mut v = Vec::new();
+        v.extend(2u32.to_le_bytes());
+        v.extend(1u32.to_le_bytes());
+        v.extend(b"a");
+        v.extend(0u32.to_le_bytes()); // f32
+        v.extend(1u32.to_le_bytes()); // rank 1
+        v.extend(2u32.to_le_bytes());
+        v.extend(1.0f32.to_le_bytes());
+        v.extend(2.0f32.to_le_bytes());
+        v.extend(1u32.to_le_bytes());
+        v.extend(b"b");
+        v.extend(1u32.to_le_bytes()); // i8
+        v.extend(1u32.to_le_bytes());
+        v.extend(3u32.to_le_bytes());
+        v.extend([1u8, 255, 3]);
+        v
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let w = WeightsFile::parse(&sample()).unwrap();
+        assert_eq!(w.arrays.len(), 2);
+        assert_eq!(w.by_name("a").unwrap().as_f32(), vec![1.0, 2.0]);
+        assert_eq!(w.by_name("b").unwrap().as_i8(), &[1, 255, 3]);
+        assert_eq!(w.total_bytes(), 8 + 3);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let good = sample();
+        for cut in [3, 7, 12, good.len() - 1] {
+            assert!(WeightsFile::parse(&good[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut bad = sample();
+        bad.push(0);
+        assert!(WeightsFile::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_artifact_if_present() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let w = WeightsFile::load(&path).unwrap();
+        assert!(w.by_name("embed").is_some());
+        assert!(w.by_name("lm_head.codes").is_some());
+        let embed = w.by_name("embed").unwrap();
+        assert_eq!(embed.dtype, DType::F32);
+        assert_eq!(embed.shape, vec![2048, 256]);
+    }
+}

@@ -1,0 +1,22 @@
+//! SAIL system simulator: tensor-level scheduling + ping-pong pipelining.
+//!
+//! Reproduces the paper's evaluation methodology (§V-A): the C-SRAM compute
+//! cycles come from the characterized cycle model ([`crate::lutgemv`]),
+//! the transfer times from the memory-system models ([`crate::arch`]), and
+//! this module composes them into per-iteration and per-token figures the
+//! way the modified gem5's NDP integration did.
+//!
+//! - [`schedule`]: tensor-level scheduling — the per-iteration staging
+//!   order of layer tensors that loads each weight exactly once per
+//!   multi-user batch iteration (§III-A);
+//! - [`pipeline`]: the ping-pong-buffered DRAM→LLC→C-SRAM pipeline and the
+//!   end-to-end SAIL performance model.
+
+pub mod events;
+pub mod kvpath;
+pub mod pipeline;
+pub mod schedule;
+
+pub use events::{simulate_iteration, EventSimOpts, EventSimResult};
+pub use pipeline::{PipelineReport, SailPerfModel};
+pub use schedule::{ScheduleEntry, TensorSchedule};

@@ -1,0 +1,207 @@
+//! Tensor-level scheduling (paper §III-A).
+//!
+//! Iteration-based serving recomputes the whole model per user; caches
+//! cannot hold a full LLM, so SAIL stages *one layer's tensor at a time*
+//! into the LLC and runs **all** users' computations against it before
+//! moving on. Each weight then crosses the DRAM→LLC boundary exactly once
+//! per batch iteration — the temporal-locality property this module
+//! constructs and its tests enforce.
+
+use crate::model::ModelConfig;
+use crate::quant::QuantLevel;
+use crate::util::ceil_div;
+
+/// One staged unit in the per-iteration schedule: a tensor, or a
+/// column-tile shard of a tensor too large for the ping-pong half (a 7B
+/// layer is ~120 MB at Q4 — far beyond the 16 MB half, so staging happens
+/// at sub-tensor granularity while preserving the load-once property).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduleEntry {
+    pub layer: usize,
+    /// Tensor name within the layer ("wq", "wk", …, or "lm_head").
+    pub tensor: &'static str,
+    /// Shard index within the tensor (0 for unsharded tensors).
+    pub shard: usize,
+    /// GEMV shape `[K, N]` of this shard.
+    pub k: usize,
+    pub n: usize,
+    /// Staged bytes (quantized codes + scales).
+    pub bytes: u64,
+    /// `lutmm_1k` tiles this shard decomposes into.
+    pub tiles: u64,
+}
+
+/// The full per-iteration schedule for a model at a quantization level.
+#[derive(Debug, Clone)]
+pub struct TensorSchedule {
+    pub entries: Vec<ScheduleEntry>,
+    pub level: QuantLevel,
+    pub group: usize,
+}
+
+const TENSOR_NAMES: [&str; 7] = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Append a tensor to the schedule, sharding along output-tile columns so
+/// that every shard fits `max_stage_bytes`.
+fn push_sharded(
+    entries: &mut Vec<ScheduleEntry>,
+    layer: usize,
+    tensor: &'static str,
+    k: usize,
+    n: usize,
+    bits_per_weight: f64,
+    max_stage_bytes: u64,
+) {
+    let tile = crate::isa::TILE_DIM;
+    let tiles_k = ceil_div(k, tile);
+    let tiles_n = ceil_div(n, tile);
+    // Widest shard (in tile columns) whose bytes fit the budget; a shard
+    // is never narrower than one tile column (K is not split).
+    let col_bytes = (k * tile) as f64 * bits_per_weight / 8.0;
+    let cols_per_shard = ((max_stage_bytes as f64 / col_bytes) as usize).clamp(1, tiles_n);
+    let mut col = 0usize;
+    let mut shard = 0usize;
+    while col < tiles_n {
+        let cols = cols_per_shard.min(tiles_n - col);
+        let n_shard = (cols * tile).min(n - col * tile);
+        entries.push(ScheduleEntry {
+            layer,
+            tensor,
+            shard,
+            k,
+            n: n_shard,
+            bytes: ((k * n_shard) as f64 * bits_per_weight / 8.0).ceil() as u64,
+            tiles: (tiles_k * cols) as u64,
+        });
+        col += cols;
+        shard += 1;
+    }
+}
+
+impl TensorSchedule {
+    /// Build the schedule: layers in order, tensors within a layer in
+    /// dataflow order, LM head last; tensors wider than
+    /// `max_stage_bytes` are sharded along output-tile columns. Every
+    /// weight appears in exactly one entry — the "load each weight once
+    /// per iteration" contract.
+    pub fn build(m: &ModelConfig, level: QuantLevel, group: usize) -> Self {
+        // Default staging budget: one LLC ping-pong half.
+        Self::build_with_budget(m, level, group, crate::arch::LlcConfig::default().half_bytes())
+    }
+
+    /// Build with an explicit staging-unit byte budget.
+    pub fn build_with_budget(
+        m: &ModelConfig,
+        level: QuantLevel,
+        group: usize,
+        max_stage_bytes: u64,
+    ) -> Self {
+        let mut entries = Vec::new();
+        let bpw = level.bits_per_weight(group);
+        let mut push = |layer: usize, tensor: &'static str, k: usize, n: usize| {
+            push_sharded(&mut entries, layer, tensor, k, n, bpw, max_stage_bytes);
+        };
+        for layer in 0..m.layers {
+            for (i, &(k, n)) in m.layer_matrices().iter().enumerate() {
+                push(layer, TENSOR_NAMES[i], k, n);
+            }
+        }
+        push(m.layers, "lm_head", m.hidden, m.vocab);
+        TensorSchedule { entries, level, group }
+    }
+
+    /// Total staged bytes per iteration (== the DRAM traffic per batch).
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Total `lutmm_1k` tiles per iteration.
+    pub fn total_tiles(&self) -> u64 {
+        self.entries.iter().map(|e| e.tiles).sum()
+    }
+
+    /// Largest single staged tensor (must fit a ping-pong half).
+    pub fn max_entry_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).max().unwrap_or(0)
+    }
+
+    /// DRAM traffic *without* tensor-level scheduling: with per-user
+    /// iteration order (user-major), every user re-streams every weight —
+    /// the waste §III-A eliminates.
+    pub fn bytes_without_tls(&self, batch: usize) -> u64 {
+        self.total_bytes() * batch as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn each_shard_staged_exactly_once_and_covers_tensor() {
+        let m = ModelConfig::llama2_7b();
+        let s = TensorSchedule::build(&m, QuantLevel::Q4, 32);
+        // At least 7 tensors × 32 layers + lm_head (more with sharding).
+        assert!(s.entries.len() >= 7 * 32 + 1);
+        let mut seen = std::collections::HashSet::new();
+        let mut n_cover: std::collections::HashMap<(usize, &str), usize> =
+            std::collections::HashMap::new();
+        for e in &s.entries {
+            assert!(seen.insert((e.layer, e.tensor, e.shard)), "duplicate stage {e:?}");
+            *n_cover.entry((e.layer, e.tensor)).or_default() += e.n;
+        }
+        // Shards of each tensor cover its full width exactly once.
+        for (i, &(_, n)) in m.layer_matrices().iter().enumerate() {
+            assert_eq!(n_cover[&(0, TENSOR_NAMES[i])], n, "{}", TENSOR_NAMES[i]);
+        }
+        assert_eq!(n_cover[&(m.layers, "lm_head")], m.vocab);
+    }
+
+    #[test]
+    fn layers_in_order_dataflow_within() {
+        let m = ModelConfig::llama2_13b();
+        let s = TensorSchedule::build(&m, QuantLevel::Q2, 32);
+        let mut last_layer = 0;
+        for e in &s.entries {
+            assert!(e.layer >= last_layer, "layer order violated");
+            last_layer = e.layer;
+        }
+        assert_eq!(s.entries.last().unwrap().tensor, "lm_head");
+    }
+
+    #[test]
+    fn totals_match_model_accounting() {
+        let m = ModelConfig::llama2_7b();
+        let s = TensorSchedule::build(&m, QuantLevel::Q4, 32);
+        assert_eq!(s.total_tiles(), m.tiles_per_token());
+        let wb = m.weight_bytes(QuantLevel::Q4, 32);
+        // Schedule excludes the input embedding (not a GEMV); allow that
+        // one-tensor difference.
+        let embed = (m.vocab * m.hidden) as f64 * QuantLevel::Q4.bits_per_weight(32) / 8.0;
+        let diff = wb as i64 - s.total_bytes() as i64;
+        assert!((diff as f64 - embed).abs() / embed < 0.01, "diff {diff} vs embed {embed}");
+    }
+
+    #[test]
+    fn every_entry_fits_pingpong_half() {
+        let llc = crate::arch::LlcConfig::default();
+        for m in [ModelConfig::llama2_7b(), ModelConfig::llama2_13b()] {
+            for level in QuantLevel::ALL {
+                let s = TensorSchedule::build(&m, level, 32);
+                assert!(
+                    s.max_entry_bytes() <= llc.half_bytes(),
+                    "{} {level}: {} > half",
+                    m.name,
+                    s.max_entry_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tls_saves_batch_factor_of_traffic() {
+        let m = ModelConfig::llama2_7b();
+        let s = TensorSchedule::build(&m, QuantLevel::Q4, 32);
+        assert_eq!(s.bytes_without_tls(8), 8 * s.total_bytes());
+    }
+}

@@ -1,0 +1,317 @@
+//! In-memory parallel type conversion (paper Algorithm 1, §III-E).
+//!
+//! Converts an n-bit signed integer (n ≤ 25) to an IEEE-754 single-precision
+//! float using only the logical operations available to bitline in-SRAM
+//! computing — the simulation here mirrors the algorithm line by line and
+//! counts logical ops, so the cycle model can charge the paper's published
+//! cost of `3n²/2 + 39(n−1)` cycles (`O(n²/2 + 13(n−1))` logical ops).
+//!
+//! The algorithm operates on a sign bit plus an (n−1)-bit magnitude
+//! (line 12 copies `a_{n-1}` straight into the IEEE sign bit, and the
+//! mantissa path multiplies the remaining bits as an unsigned value), i.e.
+//! sign-magnitude. [`int_to_f32`] accepts a two's-complement integer and
+//! performs the sign-magnitude fold first, as the RCU would when loading.
+//! Exceptional cases (zero) are detected with a wired-NOR zero flag — the
+//! paper's algorithm leaves zero implicit; hardware gates the result to
+//! +0.0. NaN/subnormals cannot arise from integer inputs.
+//!
+//! Because the C-SRAM computes bit-serially *across* a 512-bit row, one
+//! invocation converts one element per column: a whole row of elements
+//! converts in the same `3n²/2 + 39(n−1)` cycles. [`batch_cycles`] exposes
+//! that parallelism to the pipeline simulator.
+
+/// Maximum supported input width (paper: n ≤ 25; at n = 25 the n−2 = 23
+/// magnitude bits exactly fill the f32 mantissa).
+pub const MAX_BITS: u32 = 25;
+
+/// Result of a conversion, including the logical-op count the in-SRAM
+/// execution would incur (used to validate the cycle formula).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvResult {
+    /// IEEE-754 bit pattern of the converted value.
+    pub bits: u32,
+    /// Logical (AND/OR/XOR/shift-step) operations executed.
+    pub logic_ops: u64,
+}
+
+/// Cycles for one in-SRAM conversion wave (paper §III-E):
+/// `3n²/2 + 39(n−1)`. Every column of the wave converts in parallel.
+pub const fn cycle_cost(n: u32) -> u64 {
+    let n = n as u64;
+    (3 * n * n) / 2 + 39 * (n - 1)
+}
+
+/// Upper bound on logical ops for *this* implementation.
+///
+/// The paper states `O(n²/2 + 13(n−1))`; its Algorithm 1 listing keeps a
+/// 5-bit exponent accumulator and writes only `r[27:23]`, which cannot
+/// represent the biased exponent 127+p ≥ 126 — a known inconsistency in the
+/// published pseudocode. Bit-exact IEEE-754 output needs the full 8-bit
+/// exponent path, which raises the linear constant (8-bit ripple adds in
+/// the popcount loop) but not the quadratic term. Our bound:
+/// `n²/2 + 29(n−1) + 18`. The *cycle* model charged by the simulator stays
+/// the paper's published `3n²/2 + 39(n−1)` (see [`cycle_cost`]).
+pub const fn op_bound(n: u32) -> u64 {
+    let n = n as u64;
+    (n * n) / 2 + 29 * (n - 1) + 18
+}
+
+/// Cycles to convert `count` elements with `columns` bit-serial columns
+/// available per C-SRAM array and `arrays` arrays operating in parallel.
+pub fn batch_cycles(n: u32, count: usize, columns: usize, arrays: usize) -> u64 {
+    assert!(columns > 0 && arrays > 0);
+    let per_wave = columns * arrays;
+    let waves = (count + per_wave - 1) / per_wave;
+    waves as u64 * cycle_cost(n)
+}
+
+/// Convert a two's-complement `n`-bit signed integer to f32, simulating
+/// Algorithm 1 bit-by-bit. Returns the IEEE bits and the logical-op count.
+///
+/// Panics if `a` is not representable in `n` bits or `n` is out of range.
+pub fn int_to_f32_traced(a: i32, n: u32) -> ConvResult {
+    assert!((2..=MAX_BITS).contains(&n), "n must be in 2..=25");
+    let lo = -(1i64 << (n - 1));
+    let hi = (1i64 << (n - 1)) - 1;
+    assert!((a as i64) >= lo && (a as i64) <= hi, "{a} not representable in {n} bits");
+
+    let mut ops: u64 = 0;
+
+    // Sign-magnitude fold (RCU pre-step): sign bit + (n−1)-bit magnitude.
+    // Cost: one conditional bit-serial negate, ~n ops — charged below.
+    let sign = (a < 0) as u32;
+    let mag = a.unsigned_abs(); // fits in n−1 bits except a == lo (|lo| = 2^(n−1))
+    ops += n as u64; // bit-serial negate / pass-through
+    if mag >> (n - 1) != 0 {
+        // |INT_MIN| of the n-bit domain: magnitude needs n bits. The paper's
+        // sign-magnitude datapath cannot represent it; hardware saturates to
+        // the largest magnitude, and so do we.
+        let sat_mag = (1u32 << (n - 1)) - 1;
+        return saturate_result(sign, sat_mag, n, ops);
+    }
+
+    // Zero detect (wired-NOR over the magnitude bits, 1 cycle).
+    ops += 1;
+    if mag == 0 {
+        return ConvResult { bits: (sign << 31), logic_ops: ops };
+    }
+
+    // Lines 1–4: leading-one scan. D := D | a_i; c_i := c_i | D for
+    // i = n−2 .. 0. After the loop C has ones from the leading-1 position
+    // downward.
+    let mut c: u32 = 0;
+    let mut d: u32 = 0;
+    for i in (0..n - 1).rev() {
+        let a_i = (mag >> i) & 1;
+        d |= a_i;
+        c |= d << i;
+        ops += 2;
+    }
+
+    // Lines 5–11: popcount(C) via a 5-bit ripple accumulator (Sum), then
+    // Sum += 126 to bias. (n−1) iterations × 5-bit inner loop, 3 ops each.
+    let mut sum: u32 = 0;
+    for i in 0..n - 1 {
+        let mut carry = (c >> i) & 1;
+        // 8-bit accumulator: the paper's listing uses 5 bits (s_4..s_0),
+        // but biased exponents up to 150 need 8 — see `op_bound` docs.
+        for j in 0..8 {
+            let s_j = (sum >> j) & 1;
+            let c1 = s_j & carry;
+            let s_new = s_j ^ carry;
+            sum = (sum & !(1 << j)) | (s_new << j);
+            carry = c1;
+            ops += 3;
+        }
+    }
+    sum += 126; // line 11 — bit-serial add of a constant, ~8 ops
+    ops += 8;
+
+    // Line 12: sign bit.
+    let mut r: u32 = sign << 31;
+    ops += 1;
+
+    // Lines 13–15: biased exponent into r[30:23]. (The paper writes
+    // r_23..r_27 for its 5-bit Sum; a full f32 exponent is 8 bits.)
+    r |= (sum & 0xFF) << 23;
+    ops += 8;
+
+    // Line 16: C := BitReverse(C+1) << 1 — builds 2^k where k is the number
+    // of leading zeros of the magnitude (bit-serial: increment + reverse).
+    let p = 31 - mag.leading_zeros(); // leading-one position (< n−1)
+    let k = (n - 2) - p; // leading zeros in the (n−1)-bit magnitude field
+    let c_rev = 1u32 << k;
+    ops += (n - 1) as u64; // increment + routed reverse
+
+    // Line 17: A := A * C — align mantissa. Bit-serial multiply is the
+    // quadratic term of the cycle cost. Here C is a power of two, so the
+    // product is exact and fits in n−1 bits of fraction + hidden one.
+    let aligned = mag << k;
+    debug_assert_eq!(aligned >> (n - 2), 1, "hidden one must land at bit n−2");
+    ops += ((n as u64) * (n as u64)) / 2; // bit-serial shift-add multiply
+    let _ = c_rev;
+
+    // Lines 18–20: drop the hidden one, left-justify the remaining n−2
+    // magnitude bits at the top of the 23-bit mantissa field.
+    let frac = aligned & ((1 << (n - 2)) - 1); // remove hidden 1
+    let mant = if n - 2 <= 23 { frac << (23 - (n - 2)) } else { frac >> ((n - 2) - 23) };
+    r |= mant;
+    ops += (n - 2) as u64;
+
+    ConvResult { bits: r, logic_ops: ops }
+}
+
+fn saturate_result(sign: u32, mag: u32, n: u32, ops: u64) -> ConvResult {
+    let v = mag as f32;
+    let bits = v.to_bits() | (sign << 31);
+    let _ = n;
+    ConvResult { bits, logic_ops: ops }
+}
+
+/// Convenience wrapper returning the f32 value.
+pub fn int_to_f32(a: i32, n: u32) -> f32 {
+    f32::from_bits(int_to_f32_traced(a, n).bits)
+}
+
+/// The reverse direction (paper footnote: "straightforward"): f32 → n-bit
+/// signed integer with round-to-nearest-even, saturating. This is what the
+/// C-SRAM applies when the CPU hands re-quantized activations back.
+pub fn f32_to_int(x: f32, n: u32) -> i32 {
+    assert!((2..=MAX_BITS).contains(&n));
+    let hi = ((1i64 << (n - 1)) - 1) as f32;
+    let lo = -(1i64 << (n - 1)) as f32;
+    let r = x.clamp(lo, hi);
+    // round half to even, like the vector engine's FCVT.
+    let f = r.floor();
+    let d = r - f;
+    let q = if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    };
+    q as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{propcheck, Prng};
+
+    #[test]
+    fn exhaustive_small_widths() {
+        // Bit-exact against hardware `as f32` for every representable value
+        // at n ≤ 16 (excluding the unsaturatable INT_MIN case, checked
+        // separately).
+        for n in 2..=16u32 {
+            let lo = -(1i32 << (n - 1)) + 1;
+            let hi = (1i32 << (n - 1)) - 1;
+            for a in lo..=hi {
+                let got = int_to_f32_traced(a, n);
+                let want = (a as f32).to_bits();
+                assert_eq!(
+                    got.bits, want,
+                    "n={n} a={a}: got {:#010x} want {want:#010x}",
+                    got.bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_wide_widths() {
+        propcheck::check(
+            "typeconv-wide",
+            propcheck::Config { cases: 400, seed: 21 },
+            |p, _| {
+                let n = p.usize_in(17, 26) as u32;
+                let a = p.signed_bits(n - 1) as i32; // avoid INT_MIN saturation
+                (n, a)
+            },
+            |&(n, a)| {
+                let got = int_to_f32_traced(a, n).bits;
+                let want = (a as f32).to_bits();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("n={n} a={a}: {got:#010x} != {want:#010x}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn n25_is_exact_because_mantissa_fits() {
+        // n = 25 → 23 magnitude bits below the hidden one: still exact.
+        for a in [(1 << 24) - 1, 1 << 23, 0xAAAAAA, -((1 << 24) - 1)] {
+            assert_eq!(int_to_f32_traced(a, 25).bits, (a as f32).to_bits(), "a={a}");
+        }
+    }
+
+    #[test]
+    fn zero_and_signs() {
+        assert_eq!(int_to_f32(0, 8), 0.0);
+        assert_eq!(int_to_f32_traced(0, 8).bits, 0); // +0.0 exactly
+        assert_eq!(int_to_f32(-1, 8), -1.0);
+        assert_eq!(int_to_f32(1, 2), 1.0);
+        assert_eq!(int_to_f32(-1, 2), -1.0);
+    }
+
+    #[test]
+    fn int_min_saturates() {
+        // -2^(n-1) has no sign-magnitude representation in n bits; the
+        // datapath saturates to -(2^(n-1)-1).
+        let r = int_to_f32(-128, 8);
+        assert_eq!(r, -127.0);
+    }
+
+    #[test]
+    fn op_count_within_published_bound() {
+        for n in 2..=25u32 {
+            let worst = (1i32 << (n - 1)) - 1;
+            let r = int_to_f32_traced(worst, n);
+            assert!(
+                r.logic_ops <= op_bound(n),
+                "n={n}: ops {} exceeds bound {}",
+                r.logic_ops,
+                op_bound(n)
+            );
+        }
+    }
+
+    #[test]
+    fn cycle_formula_matches_paper() {
+        assert_eq!(cycle_cost(8), 3 * 64 / 2 + 39 * 7);
+        assert_eq!(cycle_cost(25), 3 * 625 / 2 + 39 * 24);
+    }
+
+    #[test]
+    fn batch_parallelism() {
+        // 512 columns × 2 arrays = 1024 elements per wave.
+        assert_eq!(batch_cycles(8, 1024, 512, 2), cycle_cost(8));
+        assert_eq!(batch_cycles(8, 1025, 512, 2), 2 * cycle_cost(8));
+        assert_eq!(batch_cycles(8, 1, 512, 2), cycle_cost(8));
+    }
+
+    #[test]
+    fn f32_to_int_roundtrip() {
+        let mut p = Prng::new(5);
+        for _ in 0..1000 {
+            let n = p.usize_in(2, 26) as u32;
+            let a = p.signed_bits(n - 1) as i32;
+            assert_eq!(f32_to_int(int_to_f32(a, n), n), a, "n={n} a={a}");
+        }
+    }
+
+    #[test]
+    fn f32_to_int_saturates_and_rounds_to_even() {
+        assert_eq!(f32_to_int(1e9, 8), 127);
+        assert_eq!(f32_to_int(-1e9, 8), -128);
+        assert_eq!(f32_to_int(2.5, 8), 2); // ties to even
+        assert_eq!(f32_to_int(3.5, 8), 4);
+        assert_eq!(f32_to_int(-2.5, 8), -2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `time_fn` warms up, then runs timed iterations until a wall-clock budget
+//! or iteration cap is reached and reports ns/iter with stddev. Used by the
+//! `perf_hotpath` bench target and by the §Perf iteration log.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Result of a timed run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+    pub stddev_ns: f64,
+    /// Optional throughput denominator (items processed per iteration).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Items per second implied by the measurement.
+    pub fn items_per_sec(&self) -> f64 {
+        if self.ns_per_iter == 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.ns_per_iter
+    }
+
+    pub fn report(&self) -> String {
+        if self.items_per_iter > 1.0 {
+            format!(
+                "{:<44} {:>12.1} ns/iter (±{:>8.1})  {:>14.3e} items/s",
+                self.name,
+                self.ns_per_iter,
+                self.stddev_ns,
+                self.items_per_sec()
+            )
+        } else {
+            format!(
+                "{:<44} {:>12.1} ns/iter (±{:>8.1})",
+                self.name, self.ns_per_iter, self.stddev_ns
+            )
+        }
+    }
+}
+
+/// Options controlling a timed run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: u64,
+    /// Iterations folded into one timing sample (amortizes clock overhead
+    /// for very fast bodies).
+    pub batch: u64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(700),
+            max_samples: 10_000,
+            batch: 1,
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a value (stable-rust black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time `f`, returning ns/iter statistics.
+pub fn time_fn<T>(name: &str, opts: BenchOpts, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < opts.warmup {
+        black_box(f());
+    }
+    // Timed samples.
+    let mut s = Summary::new();
+    let start = Instant::now();
+    while start.elapsed() < opts.budget && s.count() < opts.max_samples {
+        let t0 = Instant::now();
+        for _ in 0..opts.batch {
+            black_box(f());
+        }
+        s.push(t0.elapsed().as_nanos() as f64 / opts.batch as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.count() * opts.batch,
+        ns_per_iter: s.mean(),
+        stddev_ns: s.stddev(),
+        items_per_iter: 1.0,
+    }
+}
+
+/// Time `f` where each call processes `items` items (reports items/s too).
+pub fn time_throughput<T>(
+    name: &str,
+    opts: BenchOpts,
+    items: f64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = time_fn(name, opts, f);
+    r.items_per_iter = items;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_sane() {
+        let opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(30),
+            max_samples: 1000,
+            batch: 10,
+        };
+        let r = time_fn("noop-ish", opts, || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters > 0);
+        assert!(r.ns_per_iter > 0.0);
+        // 100 multiply-adds should take well under 100µs per iteration.
+        assert!(r.ns_per_iter < 100_000.0, "ns/iter = {}", r.ns_per_iter);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            ns_per_iter: 1000.0,
+            stddev_ns: 0.0,
+            items_per_iter: 500.0,
+        };
+        assert!((r.items_per_sec() - 5e8).abs() < 1.0);
+    }
+}

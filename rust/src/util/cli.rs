@@ -1,0 +1,180 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options by querying an `Args` instance; unknown
+//! options are reported at the end via `finish()`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — first element is NOT
+    /// skipped here; use `from_env` for real argv.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    /// Parse process argv (skipping the binary name).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional argument (subcommand), if any.
+    pub fn subcommand(&mut self) -> Option<String> {
+        if self.positional.is_empty() {
+            None
+        } else {
+            Some(self.positional.remove(0))
+        }
+    }
+
+    /// Remaining positional args.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Boolean flag. A bare `--name` followed by a non-option token is
+    /// initially parsed as `--name <value>`; querying it as a flag
+    /// reclassifies it, returning the token to the positional list.
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.push(name.to_string());
+        if self.flags.iter().any(|f| f == name) {
+            return true;
+        }
+        if let Some(v) = self.opts.remove(name) {
+            self.positional.push(v);
+            return true;
+        }
+        false
+    }
+
+    /// String option with default.
+    pub fn opt_str(&mut self, name: &str, default: &str) -> String {
+        self.consumed.push(name.to_string());
+        self.opts.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str_opt(&mut self, name: &str) -> Option<String> {
+        self.consumed.push(name.to_string());
+        self.opts.get(name).cloned()
+    }
+
+    /// Parsed numeric option with default; panics with a clear message on a
+    /// malformed value (user error, not a bug).
+    pub fn opt<T: std::str::FromStr>(&mut self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.push(name.to_string());
+        match self.opts.get(name) {
+            None => default,
+            Some(v) => v
+                .parse::<T>()
+                .unwrap_or_else(|e| panic!("invalid value for --{name}: '{v}' ({e})")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--quant 2,4,8`.
+    pub fn opt_list<T: std::str::FromStr>(&mut self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        self.consumed.push(name.to_string());
+        match self.opts.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse::<T>()
+                        .unwrap_or_else(|e| panic!("invalid item in --{name}: '{s}' ({e})"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error on any option the binary never asked about (catches typos).
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown options: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parse_kinds() {
+        let mut a = argv("serve --batch 8 --quant=4 --verbose pos1");
+        assert_eq!(a.subcommand().as_deref(), Some("serve"));
+        assert_eq!(a.opt::<usize>("batch", 1), 8);
+        assert_eq!(a.opt::<u32>("quant", 2), 4);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let mut a = argv("--levels 2,3,4");
+        assert_eq!(a.opt_list::<u32>("levels", &[8]), vec![2, 3, 4]);
+        assert_eq!(a.opt_list::<u32>("other", &[7]), vec![7]);
+        assert_eq!(a.opt::<f64>("rate", 1.5), 1.5);
+    }
+
+    #[test]
+    fn unknown_options_caught() {
+        let mut a = argv("--oops 1");
+        let _ = a.opt::<u32>("known", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --n")]
+    fn bad_numeric_panics() {
+        let mut a = argv("--n abc");
+        let _ = a.opt::<u32>("n", 0);
+    }
+}

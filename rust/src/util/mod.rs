@@ -1,0 +1,55 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and only the crates vendored for
+//! the `xla` bridge are available, so the usual ecosystem helpers (rand,
+//! proptest, criterion, prettytable, …) are re-implemented here in minimal
+//! form: a xorshift PRNG, a table printer for the paper-style benchmark
+//! output, a tiny property-testing driver, and a micro-bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod toml;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;
+pub use table::Table;
+
+/// Geometric mean of a slice of positive values (used by Table II's GEO-MEAN
+/// row). Returns 0.0 for an empty slice.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|x| x.max(f64::MIN_POSITIVE).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+/// Ceiling division for unsigned integers.
+pub const fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(1024, 3), 342);
+    }
+}

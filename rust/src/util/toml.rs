@@ -1,0 +1,229 @@
+//! Minimal TOML-subset parser for configuration files.
+//!
+//! Supports: `[table]` and `[table.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans, and flat arrays, plus `#`
+//! comments. Values are exposed through dotted-path lookup
+//! (`get("serving.batch")`). This covers everything `configs/*.toml`
+//! needs without an external crate.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed TOML document with dotted-path access.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated table header", ln + 1))?;
+                if h.is_empty() || h.split('.').any(|p| p.trim().is_empty()) {
+                    return Err(format!("line {}: bad table name '{h}'", ln + 1));
+                }
+                prefix = h.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", ln + 1));
+            }
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", ln + 1))?;
+            if doc.values.insert(full.clone(), value).is_some() {
+                return Err(format!("line {}: duplicate key '{full}'", ln + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.values.get(path)
+    }
+
+    /// Typed getters with defaults.
+    pub fn str_or(&self, path: &str, default: &str) -> String {
+        self.get(path).and_then(TomlValue::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(TomlValue::as_usize).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if !v.contains('.') && !v.contains('e') && !v.contains('E') {
+        if let Ok(i) = v.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# serving configuration
+name = "sail-demo"
+
+[serving]
+batch = 8
+rate = 4.5            # requests/sec
+mock = false
+quants = [2, 4, 8]
+
+[arch.dram]
+mt_per_sec = 6400
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let d = TomlDoc::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("name", ""), "sail-demo");
+        assert_eq!(d.usize_or("serving.batch", 0), 8);
+        assert_eq!(d.f64_or("serving.rate", 0.0), 4.5);
+        assert!(!d.bool_or("serving.mock", true));
+        assert_eq!(d.usize_or("arch.dram.mt_per_sec", 0), 6400);
+        match d.get("serving.quants").unwrap() {
+            TomlValue::Array(a) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let d = TomlDoc::parse("").unwrap();
+        assert_eq!(d.usize_or("anything", 7), 7);
+        assert_eq!(d.str_or("x", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(TomlDoc::parse("[unterminated").unwrap_err().contains("line 1"));
+        assert!(TomlDoc::parse("novalue").unwrap_err().contains("key = value"));
+        assert!(TomlDoc::parse("a = 1\na = 2").unwrap_err().contains("duplicate"));
+        assert!(TomlDoc::parse("a = \"open").unwrap_err().contains("unterminated"));
+    }
+
+    #[test]
+    fn comments_and_strings_interact() {
+        let d = TomlDoc::parse(r##"s = "a # not comment" # real comment"##).unwrap();
+        assert_eq!(d.str_or("s", ""), "a # not comment");
+    }
+}

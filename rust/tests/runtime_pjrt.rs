@@ -1,0 +1,139 @@
+//! Integration tests over the PJRT runtime and the AOT artifacts.
+//!
+//! All tests skip (pass vacuously) when `artifacts/` has not been built —
+//! `make artifacts && cargo test` runs them for real. Each test creates
+//! its own CPU PJRT client.
+
+use std::path::{Path, PathBuf};
+
+use sail::coordinator::{Batcher, BatcherConfig, DecodeEngine, PjrtEngine, Request};
+use sail::lutgemv::engine::LutGemvEngine;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::{DecodeModel, GemvTile, Manifest};
+use sail::util::Prng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ not built; skipping PJRT test");
+        None
+    }
+}
+
+#[test]
+fn gemv_tile_matches_rust_engine() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let tile = GemvTile::load(&client, &dir).unwrap();
+
+    let mut prng = Prng::new(3);
+    let (n, k) = (1024usize, 1024usize);
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, QuantLevel::Q4, 32);
+    let eng = LutGemvEngine::new(wt, 4);
+    let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+    let qx = QuantizedVector::quantize(&x);
+    let rust_out = eng.gemv(&qx);
+
+    let w_codes: Vec<i8> = (0..n)
+        .flat_map(|r| (0..k).map(move |c| (r, c)))
+        .map(|(r, c)| eng.weights().q(r, c) as i8)
+        .collect();
+    let w_scales: Vec<f32> = (0..n)
+        .flat_map(|r| (0..k / 32).map(move |g| (r, g)))
+        .map(|(r, g)| eng.weights().scale(r, g * 32))
+        .collect();
+    let pjrt_out = tile.run(&qx.q, &w_codes, &w_scales, qx.scale).unwrap();
+
+    for (i, (a, b)) in rust_out.iter().zip(&pjrt_out).enumerate() {
+        let rel = (a - b).abs() / a.abs().max(1e-3);
+        assert!(rel < 5e-4, "output {i}: rust {a} vs pjrt {b} (rel {rel})");
+    }
+}
+
+#[test]
+fn decode_model_is_deterministic_and_context_sensitive() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let mut m1 = DecodeModel::load(&client, &dir, 1).unwrap();
+    let mut m2 = DecodeModel::load(&client, &dir, 1).unwrap();
+
+    // Same inputs → identical logits.
+    let l1 = m1.step(&[7], &[0]).unwrap();
+    let l2 = m2.step(&[7], &[0]).unwrap();
+    assert_eq!(l1, l2, "decode must be deterministic");
+
+    // Different history → different logits at the next step.
+    let _ = m2.reset_kv(None).unwrap();
+    let _ = m2.step(&[900], &[0]).unwrap();
+    let a = m1.step(&[3], &[1]).unwrap();
+    let b = m2.step(&[3], &[1]).unwrap();
+    assert_ne!(a, b, "KV cache must influence the next step");
+}
+
+#[test]
+fn decode_argmax_in_vocab_and_stable() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut m = DecodeModel::load(&client, &dir, 1).unwrap();
+    let mut tok = 11i32;
+    for pos in 0..4 {
+        let logits = m.step(&[tok], &[pos]).unwrap();
+        assert_eq!(logits.len(), manifest.config.vocab);
+        let next = m.argmax(&logits)[0];
+        assert!((0..manifest.config.vocab as i32).contains(&next));
+        tok = next;
+    }
+    assert_eq!(m.steps_executed(), 4);
+}
+
+#[test]
+fn batched_decode_slots_are_isolated() {
+    let Some(dir) = artifacts() else { return };
+    let client = xla::PjRtClient::cpu().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let b = manifest.batch;
+    let mut model = DecodeModel::load(&client, &dir, b).unwrap();
+
+    // Slot 0 runs sequence A; other slots run unrelated tokens. Slot 0's
+    // logits must match a batch-1 run of the same sequence.
+    let mut single = DecodeModel::load(&client, &dir, 1).unwrap();
+    let seq = [5i32, 9, 13];
+    let mut batch_logits = Vec::new();
+    let mut single_logits = Vec::new();
+    for (pos, &t) in seq.iter().enumerate() {
+        let mut toks = vec![(100 + pos as i32); b];
+        toks[0] = t;
+        let poss = vec![pos as i32; b];
+        let lb = model.step(&toks, &poss).unwrap();
+        batch_logits.push(lb[..manifest.config.vocab].to_vec());
+        let ls = single.step(&[t], &[pos as i32]).unwrap();
+        single_logits.push(ls);
+    }
+    for (pos, (a, b_)) in single_logits.iter().zip(&batch_logits).enumerate() {
+        let max_rel = a
+            .iter()
+            .zip(b_)
+            .map(|(x, y)| (x - y).abs() / x.abs().max(1e-3))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 2e-3, "slot isolation violated at pos {pos}: {max_rel}");
+    }
+}
+
+#[test]
+fn pjrt_engine_through_batcher_generates() {
+    let Some(dir) = artifacts() else { return };
+    let engine = PjrtEngine::load(&dir, 1).unwrap();
+    let vocab = engine.vocab();
+    let mut batcher = Batcher::new(engine, BatcherConfig::default());
+    batcher.submit(Request::new(0, vec![3, 5], 4));
+    let done = batcher.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].tokens.len(), 4);
+    for &t in &done[0].tokens {
+        assert!((0..vocab as i32).contains(&t));
+    }
+}
