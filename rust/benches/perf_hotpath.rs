@@ -1,20 +1,27 @@
 //! L3 hot-path micro-benchmarks (the §Perf measurement harness).
 //!
 //! Measures the wallclock cost of the Rust-side hot paths: the functional
-//! LUT-GEMV engine, the cycle model, the PRT, quant pack/unpack, Algorithm
-//! 1 conversion, the pipeline simulator, and the coordinator iteration
-//! loop (mock engine). Results feed EXPERIMENTS.md §Perf before/after.
+//! LUT-GEMV engine (scalar and tiled/threaded backend at batch 1/8/32),
+//! the cycle model, the PRT, quant pack/unpack, Algorithm 1 conversion,
+//! the pipeline simulator, and the coordinator iteration loop (mock and
+//! LUT-GEMV engines). Results feed EXPERIMENTS.md §Perf before/after and
+//! are persisted to BENCH_hotpath.json next to Cargo.toml for the perf
+//! trajectory.
 //!
 //! Run: cargo bench --bench perf_hotpath
 
-use sail::coordinator::{Batcher, BatcherConfig, MockEngine, Request};
-use sail::lutgemv::engine::LutGemvEngine;
-use sail::lutgemv::{GemvCycleModel, PatternReuseTable};
+use std::collections::BTreeMap;
+
+use sail::coordinator::{Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request};
+use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
+use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
 use sail::model::ModelConfig;
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::WorkerPool;
 use sail::sim::SailPerfModel;
 use sail::typeconv;
-use sail::util::bench::{time_fn, time_throughput, BenchOpts};
+use sail::util::bench::{time_fn, time_throughput, BenchOpts, BenchResult};
+use sail::util::json::Json;
 use sail::util::Prng;
 
 fn main() {
@@ -31,25 +38,63 @@ fn main() {
         || QuantizedMatrix::quantize(&w, 1024, 1024, QuantLevel::Q4, 32),
     ));
 
-    // --- functional LUT-GEMV engine --------------------------------------
+    // --- packed-weight unpack (per-column cost of the tile kernel) -------
     let wt = QuantizedMatrix::quantize(&w, 1024, 1024, QuantLevel::Q4, 32);
+    {
+        let mut wrow = vec![0i32; 1024];
+        let mut col = 0usize;
+        results.push(time_throughput(
+            "BitPacked::unpack_range_into 1024xQ4 (vals/s)",
+            BenchOpts { batch: 64, ..opts },
+            1024.0,
+            || {
+                wt.packed().unpack_range_into(col * 1024, &mut wrow);
+                col = (col + 1) % 1024;
+                wrow[0]
+            },
+        ));
+    }
+
+    // --- functional LUT-GEMV engine: scalar vs tiled backend --------------
     let eng = LutGemvEngine::new(wt, 4);
     let x: Vec<f32> = (0..1024).map(|_| prng.normal() as f32).collect();
     let qx = QuantizedVector::quantize(&x);
     let mac_count = (1024 * 1024) as f64;
-    results.push(time_throughput(
-        "LutGemvEngine 1024x1024 b1 (MACs/s)",
-        BenchOpts { batch: 1, ..opts },
-        mac_count,
-        || eng.gemv(&qx),
-    ));
-    let xs: Vec<QuantizedVector> = (0..8).map(|_| qx.clone()).collect();
-    results.push(time_throughput(
-        "LutGemvEngine 1024x1024 b8 (MACs/s)",
-        BenchOpts { batch: 1, ..opts },
-        8.0 * mac_count,
-        || eng.gemv_batch(&xs),
-    ));
+    let serial = WorkerPool::serial();
+    let pool = WorkerPool::auto();
+    let mut out = GemvOutput::new();
+    let mut scalar_macs = BTreeMap::new();
+    let mut tiled_macs = BTreeMap::new();
+    for batch in [1usize, 8, 32] {
+        let xs: Vec<QuantizedVector> = (0..batch).map(|_| qx.clone()).collect();
+        let r = time_throughput(
+            &format!("LutGemvEngine 1024x1024 b{batch} scalar (MACs/s)"),
+            BenchOpts { batch: 1, ..opts },
+            batch as f64 * mac_count,
+            || eng.gemv_batch_into(&xs, &serial, &mut out),
+        );
+        scalar_macs.insert(batch, r.items_per_sec());
+        results.push(r);
+        let r = time_throughput(
+            &format!("LutGemvEngine 1024x1024 b{batch} tiled x{}T (MACs/s)", pool.threads()),
+            BenchOpts { batch: 1, ..opts },
+            batch as f64 * mac_count,
+            || eng.gemv_batch_into(&xs, &pool, &mut out),
+        );
+        tiled_macs.insert(batch, r.items_per_sec());
+        results.push(r);
+    }
+
+    // Bit-exactness of the tiled path vs scalar vs the naive reference, at
+    // the acceptance shape (1024×1024 Q4, batch 8).
+    let xs8: Vec<QuantizedVector> = (0..8).map(|_| qx.clone()).collect();
+    let (scalar_out, _) = eng.gemv_batch(&xs8);
+    let mut pooled_out = GemvOutput::new();
+    eng.gemv_batch_into(&xs8, &pool, &mut pooled_out);
+    let mut bit_exact = pooled_out == scalar_out;
+    let want = reference_gemv(eng.weights(), &qx);
+    bit_exact &= scalar_out.row(0) == want.as_slice();
+    assert!(bit_exact, "tiled backend diverged from scalar/reference");
 
     // --- cycle model (simulator inner loop) -------------------------------
     let gm = GemvCycleModel::prototype(QuantLevel::Q4, 4);
@@ -71,6 +116,22 @@ fn main() {
             for &p in &patterns {
                 if prt.lookup(p).is_none() {
                     prt.insert(p, p as i64);
+                }
+            }
+        },
+    ));
+    // Flush-per-LUT pattern (generation counter: O(1) per flush).
+    results.push(time_throughput(
+        "PatternReuseTable flush+8 lookups (luts/s)",
+        BenchOpts { batch: 16, ..opts },
+        512.0,
+        || {
+            for chunk in 0..512u32 {
+                prt.flush();
+                for p in 0..8u32 {
+                    if prt.lookup(p).is_none() {
+                        prt.insert(p, (chunk + p) as i64);
+                    }
                 }
             }
         },
@@ -101,8 +162,66 @@ fn main() {
         b.run_to_completion().unwrap()
     }));
 
+    // --- coordinator loop on the real LUT-GEMV decode path ---------------------
+    results.push(time_fn(
+        &format!("coordinator 16 reqs b4 (lut-gemv x{}T)", pool.threads()),
+        opts,
+        || {
+            let engine = LutGemvServeEngine::random(
+                9, 256, 128, QuantLevel::Q4, 32, 4, 4, 256, pool,
+            );
+            let mut b = Batcher::new(engine, BatcherConfig::default());
+            for id in 0..16u64 {
+                b.submit(Request::new(id, vec![1 + id as i32], 8));
+            }
+            b.run_to_completion().unwrap()
+        },
+    ));
+
     println!("== perf_hotpath ==");
     for r in &results {
         println!("{}", r.report());
     }
+    let speedup_b8 = tiled_macs[&8] / scalar_macs[&8];
+    println!(
+        "\ntiled backend speedup over scalar (1024x1024 Q4, b8, {} threads): {:.2}x, bit-exact: {}",
+        pool.threads(),
+        speedup_b8,
+        bit_exact
+    );
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
+    std::fs::write(path, render_json(&results, pool.threads(), speedup_b8, bit_exact))
+        .expect("writing BENCH_hotpath.json");
+    println!("persisted {} results to {path}", results.len());
+}
+
+fn render_json(
+    results: &[BenchResult],
+    threads: usize,
+    speedup_b8: f64,
+    bit_exact: bool,
+) -> String {
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
+    root.insert("threads".to_string(), Json::Num(threads as f64));
+    root.insert("speedup_b8_tiled_vs_scalar".to_string(), Json::Num(speedup_b8));
+    root.insert("bit_exact_vs_reference".to_string(), Json::Bool(bit_exact));
+    root.insert(
+        "results".to_string(),
+        Json::Arr(
+            results
+                .iter()
+                .map(|r| {
+                    let mut m = BTreeMap::new();
+                    m.insert("name".to_string(), Json::Str(r.name.clone()));
+                    m.insert("ns_per_iter".to_string(), Json::Num(r.ns_per_iter));
+                    m.insert("stddev_ns".to_string(), Json::Num(r.stddev_ns));
+                    m.insert("items_per_sec".to_string(), Json::Num(r.items_per_sec()));
+                    Json::Obj(m)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(root).dump()
 }

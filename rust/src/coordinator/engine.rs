@@ -1,11 +1,22 @@
 //! The decode-engine abstraction the batcher drives.
 //!
-//! Production uses [`PjrtEngine`] (the AOT-compiled model through PJRT);
-//! coordinator tests use [`MockEngine`], a deterministic token automaton
-//! with the same slot/KV semantics, so batching invariants can be property-
-//! tested without artifacts.
+//! Three execution engines implement it:
+//! - [`PjrtEngine`] — the AOT-compiled model through PJRT (production when
+//!   artifacts are present);
+//! - [`LutGemvServeEngine`] — the tiled multi-threaded LUT-GEMV backend on
+//!   the decode hot path: every `step` quantizes per-slot hidden state and
+//!   runs one batched LUT-GEMV over the tied output projection, so the
+//!   batcher serves tokens through the paper's actual kernel;
+//! - [`MockEngine`] — a deterministic token automaton with the same
+//!   slot/KV semantics, for property-testing batching invariants without
+//!   any compute.
 
 use anyhow::Result;
+
+use crate::lutgemv::engine::GemvStats;
+use crate::lutgemv::{GemvOutput, LutGemvEngine};
+use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use crate::runtime::WorkerPool;
 
 /// One decode iteration over all batch slots.
 ///
@@ -71,6 +82,144 @@ impl DecodeEngine for PjrtEngine {
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
         self.model.reset_kv(Some(&[slot]))
+    }
+}
+
+/// The LUT-GEMV serving backend: decode steps run on the real tiled,
+/// thread-parallel LUT-GEMV path instead of a mock.
+///
+/// The "model" is a deterministic single-layer recurrent LM built to put
+/// all of its compute where SAIL's is — the quantized output projection:
+/// each step mixes the incoming token into a per-slot f32 hidden state
+/// (the engine-side KV analogue; reset on slot reuse), quantizes it to
+/// int8, and computes logits for all slots with **one batched LUT-GEMV**
+/// over the `[vocab, hidden]` weight matrix, exactly the iteration-level
+/// tensor scheduling of §III-A. Greedy argmax picks the next token.
+///
+/// Because the tiled backend is bit-exact at every thread count, token
+/// streams are reproducible across pool sizes — property-tested below.
+pub struct LutGemvServeEngine {
+    gemv: LutGemvEngine,
+    pool: WorkerPool,
+    /// Reused flat logits buffer (no allocation per iteration).
+    logits: GemvOutput,
+    /// Per-slot hidden state, `[batch * hidden]` (the slot-keyed state the
+    /// `DecodeEngine` contract requires).
+    hidden: Vec<f32>,
+    batch: usize,
+    max_context: usize,
+    /// Accumulated kernel counters across all steps (observability).
+    pub gemv_stats: GemvStats,
+    pub steps: u64,
+}
+
+impl LutGemvServeEngine {
+    /// Wrap a LUT-GEMV engine whose weights are `[vocab, hidden]`
+    /// (transposed layout, as `LutGemvEngine` stores them).
+    pub fn new(gemv: LutGemvEngine, batch: usize, max_context: usize, pool: WorkerPool) -> Self {
+        assert!(batch > 0);
+        let hidden = vec![0.0f32; batch * gemv.k()];
+        LutGemvServeEngine {
+            gemv,
+            pool,
+            logits: GemvOutput::new(),
+            hidden,
+            batch,
+            max_context,
+            gemv_stats: GemvStats::default(),
+            steps: 0,
+        }
+    }
+
+    /// Convenience constructor with seeded random quantized weights —
+    /// the same seed gives the same model at any batch size / pool width.
+    #[allow(clippy::too_many_arguments)]
+    pub fn random(
+        seed: u64,
+        vocab: usize,
+        hidden: usize,
+        level: QuantLevel,
+        group: usize,
+        nbw: u32,
+        batch: usize,
+        max_context: usize,
+        pool: WorkerPool,
+    ) -> Self {
+        let mut prng = crate::util::Prng::new(seed);
+        let w: Vec<f32> = (0..vocab * hidden).map(|_| prng.normal() as f32).collect();
+        let wt = QuantizedMatrix::quantize(&w, vocab, hidden, level, group);
+        LutGemvServeEngine::new(LutGemvEngine::new(wt, nbw), batch, max_context, pool)
+    }
+
+    /// Deterministic token/position embedding component `i` in `[-1, 1)`
+    /// (SplitMix64-style finalizer; no PRNG state, so it is the same on
+    /// every thread and at every batch size).
+    fn embed(token: i32, position: i32, i: usize) -> f32 {
+        let mut z = (token as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((position as u64) << 32)
+            .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+    }
+
+    fn argmax(row: &[f32]) -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+impl DecodeEngine for LutGemvServeEngine {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn vocab(&self) -> usize {
+        self.gemv.n()
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        assert_eq!(tokens.len(), self.batch);
+        assert_eq!(positions.len(), self.batch);
+        let k = self.gemv.k();
+        // Recurrent state update for active slots (inactive slots keep
+        // their state untouched — the fixed-batch artifact still computes
+        // them, but their outputs are ignored).
+        for s in 0..self.batch {
+            if !active[s] {
+                continue;
+            }
+            let h = &mut self.hidden[s * k..(s + 1) * k];
+            for (i, hi) in h.iter_mut().enumerate() {
+                *hi = 0.5 * *hi + Self::embed(tokens[s], positions[s], i);
+            }
+        }
+        let xs: Vec<QuantizedVector> = (0..self.batch)
+            .map(|s| QuantizedVector::quantize(&self.hidden[s * k..(s + 1) * k]))
+            .collect();
+        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits);
+        self.gemv_stats += stats;
+        self.steps += 1;
+        Ok((0..self.batch)
+            .map(|s| if active[s] { Self::argmax(self.logits.row(s)) } else { 0 })
+            .collect())
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        let k = self.gemv.k();
+        self.hidden[slot * k..(slot + 1) * k].fill(0.0);
+        Ok(())
     }
 }
 
@@ -157,5 +306,105 @@ mod tests {
         assert_eq!(out[1], 0);
         // Slot 1 state untouched.
         assert_eq!(e.state[1], 0);
+    }
+
+    fn lut_engine(batch: usize, threads: usize) -> LutGemvServeEngine {
+        LutGemvServeEngine::random(
+            7,
+            64,               // vocab
+            32,               // hidden
+            QuantLevel::Q4,
+            16,               // group
+            4,                // nbw
+            batch,
+            64,               // max context
+            WorkerPool::new(threads),
+        )
+    }
+
+    #[test]
+    fn lut_serve_engine_token_streams_identical_across_thread_counts() {
+        // The tiled backend is bit-exact at every pool width, so the decode
+        // trajectory must be too.
+        let mut streams = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut e = lut_engine(2, threads);
+            let mut toks = vec![3, 11];
+            let mut got = Vec::new();
+            for pos in 0..12 {
+                toks = e.step(&toks, &[pos, pos], &[true, true]).unwrap();
+                got.push(toks.clone());
+            }
+            streams.push(got);
+        }
+        assert_eq!(streams[0], streams[1], "1 vs 2 threads diverged");
+        assert_eq!(streams[0], streams[2], "1 vs 4 threads diverged");
+    }
+
+    #[test]
+    fn lut_serve_engine_is_context_sensitive_and_resettable() {
+        let mut e1 = lut_engine(2, 1);
+        let mut e2 = lut_engine(2, 1);
+        let a1 = e1.step(&[3, 4], &[0, 0], &[true, true]).unwrap();
+        let a2 = e2.step(&[3, 4], &[0, 0], &[true, true]).unwrap();
+        assert_eq!(a1, a2, "same seed must give the same model");
+        // Diverge the histories: reset slot 0 on e2 only, then walk both
+        // engines in lockstep. Slot 1 must stay bit-identical; slot 0's
+        // trajectory must differ somewhere.
+        e2.reset_slot(0).unwrap();
+        let mut slot0_diverged = false;
+        for pos in 1..8 {
+            let b1 = e1.step(&[5, 5], &[pos, pos], &[true, true]).unwrap();
+            let b2 = e2.step(&[5, 5], &[pos, pos], &[true, true]).unwrap();
+            assert_eq!(b1[1], b2[1], "slot 1 affected by slot-0 reset at pos {pos}");
+            slot0_diverged |= b1[0] != b2[0];
+        }
+        assert!(slot0_diverged, "reset did not change slot-0 trajectory");
+        assert!(e1.gemv_stats.luts_built > 0, "decode did not run the LUT path");
+    }
+
+    #[test]
+    fn batcher_serves_requests_on_the_lut_gemv_path() {
+        use crate::coordinator::batcher::{Batcher, BatcherConfig};
+        use crate::coordinator::request::Request;
+        let mut b = Batcher::new(lut_engine(3, 2), BatcherConfig::default());
+        for id in 0..7u64 {
+            b.submit(Request::new(id, vec![1 + id as i32, 2], 4));
+        }
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), 7);
+        for r in &done {
+            assert_eq!(r.tokens.len(), 4);
+            for &t in &r.tokens {
+                assert!((0..64).contains(&t), "token {t} outside vocab");
+            }
+        }
+        let engine = b.engine();
+        assert!(engine.steps > 0);
+        assert!(engine.gemv_stats.lut_reads > 0, "no LUT reads on the serving path");
+    }
+
+    #[test]
+    fn batched_lut_decode_matches_isolated_decode() {
+        // Same isolation invariant the mock pins down, now on the real
+        // kernel: co-scheduling must not change any request's tokens.
+        use crate::coordinator::batcher::{Batcher, BatcherConfig};
+        use crate::coordinator::request::Request;
+        let reqs: Vec<Request> =
+            (0..4).map(|id| Request::new(id, vec![2 + id as i32], 3)).collect();
+        let mut isolated = std::collections::HashMap::new();
+        for r in &reqs {
+            let mut b = Batcher::new(lut_engine(1, 1), BatcherConfig::default());
+            b.submit(r.clone());
+            let done = b.run_to_completion().unwrap();
+            isolated.insert(done[0].id, done[0].tokens.clone());
+        }
+        let mut b = Batcher::new(lut_engine(2, 2), BatcherConfig::default());
+        for r in &reqs {
+            b.submit(r.clone());
+        }
+        for resp in b.run_to_completion().unwrap() {
+            assert_eq!(&resp.tokens, &isolated[&resp.id], "request {} diverged", resp.id);
+        }
     }
 }

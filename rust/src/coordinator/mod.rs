@@ -11,8 +11,9 @@
 //! - [`request`]: request/response types + the synthetic workload
 //!   generator (Poisson arrivals, geometric lengths);
 //! - [`engine`]: the `DecodeEngine` abstraction — the PJRT-backed
-//!   [`crate::runtime::DecodeModel`] in production, a deterministic mock
-//!   for coordinator tests;
+//!   [`crate::runtime::DecodeModel`], the tiled LUT-GEMV serving backend
+//!   ([`LutGemvServeEngine`], decode on the paper's actual kernel), and a
+//!   deterministic mock for coordinator tests;
 //! - [`batcher`]: slot management and the iteration loop;
 //! - [`metrics`]: latency/throughput accounting;
 //! - [`server`]: the threaded front-end (submission queue + worker).
@@ -25,7 +26,7 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{DecodeEngine, MockEngine, PjrtEngine};
+pub use engine::{DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine};
 pub use metrics::ServingMetrics;
 pub use policy::{AdmissionPolicy, AdmissionQueue};
 pub use request::{Request, RequestId, Response, WorkloadGen};

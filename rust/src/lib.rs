@@ -8,7 +8,9 @@
 //! Layer map (see DESIGN.md):
 //! - **Substrates**: [`quant`], [`isa`], [`csram`], [`typeconv`], [`arch`]
 //! - **Core contribution**: [`lutgemv`] (LUT-based GEMV + Pattern Reuse
-//!   Table), [`sim`] (tensor-level scheduling + ping-pong pipeline)
+//!   Table, executed by a tiled thread-parallel backend over
+//!   [`runtime::WorkerPool`] with bit-exact outputs at every thread
+//!   count), [`sim`] (tensor-level scheduling + ping-pong pipeline)
 //! - **Evaluation substrate**: [`baselines`] (ARM / AMX / GPU / Neural
 //!   Cache models), [`model`] (transformer shape inventory), [`cost`]
 //!   (tokens-per-dollar and overhead accounting)

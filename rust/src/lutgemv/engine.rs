@@ -1,4 +1,5 @@
-//! Exact functional LUT-GEMV engine.
+//! Exact functional LUT-GEMV engine — tiled, thread-parallel execution
+//! backend.
 //!
 //! This is the numerical ground truth for the whole repository: the Pallas
 //! kernel (python/compile/kernels/lut_gemv.py), the runtime artifacts, and
@@ -7,12 +8,22 @@
 //! because both reduce the same integers in the same per-group order and
 //! only then apply float scales.
 //!
+//! Execution model (§III-C, 16 thread-pipelines in the paper's figures):
+//! the N output columns are cut into [`LutGemvEngine::tile_cols`]-wide
+//! tiles; each tile runs the allocation-free kernel in
+//! [`super::tile`] with private scratch, fanned out across a
+//! [`crate::runtime::WorkerPool`]. Because every column's integer
+//! accumulation order is fixed and float scaling happens per column,
+//! outputs and [`GemvStats`] are bit-identical at every thread count —
+//! parallelism is an execution detail, not a numerics change.
+//!
 //! Two's-complement bit-serial handling: for 8-bit activations the bit-plane
 //! weight of plane b is `2^b` for b < 7 and `−2^7` for the sign plane, so
 //! the engine adds the low planes' lookups and subtracts the sign plane's.
 
+use super::tile::{run_tile, GemvOutput, TileArgs, TileScratch};
 use crate::quant::{QuantizedMatrix, QuantizedVector};
-use crate::csram::lut::Lut;
+use crate::runtime::WorkerPool;
 
 /// Counters the engine reports so cycle models and the PRT can be validated
 /// against the functional execution.
@@ -24,6 +35,14 @@ pub struct GemvStats {
     pub lut_reads: u64,
     /// LUT reads avoided by the Pattern Reuse Table.
     pub prt_hits: u64,
+}
+
+impl std::ops::AddAssign for GemvStats {
+    fn add_assign(&mut self, rhs: GemvStats) {
+        self.luts_built += rhs.luts_built;
+        self.lut_reads += rhs.lut_reads;
+        self.prt_hits += rhs.prt_hits;
+    }
 }
 
 /// The LUT-GEMV engine for one weight matrix.
@@ -40,7 +59,15 @@ pub struct LutGemvEngine {
     nbw: u32,
     /// Enable the Pattern Reuse Table (§III-D).
     pub use_prt: bool,
+    /// Output columns per tile handed to one worker. The default (64)
+    /// keeps a tile's scratch (K×i32 weight row + LUT + accumulators)
+    /// L1-resident while giving the pool enough tiles to balance; tests
+    /// shrink it to force multi-tile execution on tiny matrices.
+    pub tile_cols: usize,
 }
+
+/// Default column-tile width (see [`LutGemvEngine::tile_cols`]).
+pub const DEFAULT_TILE_COLS: usize = 64;
 
 impl LutGemvEngine {
     /// Build from a transposed quantized matrix (`wt` is `[N, K]`).
@@ -53,7 +80,7 @@ impl LutGemvEngine {
             nbw,
             wt.group_size
         );
-        LutGemvEngine { wt, nbw, use_prt: false }
+        LutGemvEngine { wt, nbw, use_prt: false, tile_cols: DEFAULT_TILE_COLS }
     }
 
     pub fn n(&self) -> usize {
@@ -72,122 +99,117 @@ impl LutGemvEngine {
         &self.wt
     }
 
-    /// Compute `y = x · W` for a batch of activation vectors, exactly.
-    /// Returns (outputs, stats). LUTs are built once per (column, chunk)
-    /// and reused across the whole batch — the amortization that makes
-    /// batching effective (§III-C).
+    /// Compute `y = x · W` for a batch of activation vectors, exactly,
+    /// into a caller-owned [`GemvOutput`] (reused across calls: the serving
+    /// loop never reallocates the logits buffer). Column tiles fan out
+    /// across `pool`; outputs and stats are bit-identical at every thread
+    /// count (each column's accumulation order is fixed, tile results are
+    /// scattered in tile order, and stats are commutatively summed u64s).
+    ///
+    /// LUTs are built once per (column, chunk) and reused across the whole
+    /// batch — the amortization that makes batching effective (§III-C).
     ///
     /// Hot-path notes (§Perf): activation bit patterns depend only on
     /// (chunk, plane, batch item) — *not* on the output column — so they
-    /// are extracted once up front instead of N times; the column loop
-    /// unpacks weight codes and builds LUT entries into reusable buffers
-    /// (no allocation inside the N×chunks loop). This took the engine
-    /// from ~2.1e7 to >1e8 MACs/s.
-    pub fn gemv_batch(&self, xs: &[QuantizedVector]) -> (Vec<Vec<f32>>, GemvStats) {
+    /// are extracted once up front instead of N times; each tile's kernel
+    /// ([`run_tile`]) unpacks weight codes word-at-a-time and builds LUT
+    /// entries into per-tile scratch, so the N×chunks loop is
+    /// allocation-free. The serial kernel reaches >1e8 MACs/s (from
+    /// ~2.1e7 pre-optimization); the tiled backend scales that by the
+    /// worker count (see `benches/perf_hotpath.rs` / BENCH_hotpath.json).
+    pub fn gemv_batch_into(
+        &self,
+        xs: &[QuantizedVector],
+        pool: &WorkerPool,
+        out: &mut GemvOutput,
+    ) -> GemvStats {
         let k = self.k();
         let n = self.n();
+        let batch = xs.len();
+        out.reset(batch, n);
+        if batch == 0 {
+            // Nothing to compute: do not walk columns or build LUTs for
+            // zero activations.
+            return GemvStats::default();
+        }
         for x in xs {
             assert_eq!(x.len(), k, "activation length mismatch");
         }
-        let mut stats = GemvStats::default();
+        let act_bits = xs[0].bits as usize;
+        for x in xs {
+            assert_eq!(x.bits as usize, act_bits, "mixed activation widths in one batch");
+        }
+
         let nbw = self.nbw as usize;
         let group = self.wt.group_size;
-        let chunks_per_group = (group + nbw - 1) / nbw;
+        let chunks_per_group = group.div_ceil(nbw);
         let groups = k / group;
         let n_chunks = groups * chunks_per_group;
-        let act_bits = xs.first().map(|x| x.bits as usize).unwrap_or(8);
 
         // Pattern table: patterns[(chunk * act_bits + plane) * batch + bi].
-        let batch = xs.len();
         let mut patterns = vec![0u32; n_chunks * act_bits * batch];
-        for (ci, chunk) in (0..n_chunks).enumerate() {
+        for chunk in 0..n_chunks {
             let g = chunk / chunks_per_group;
             let c = chunk % chunks_per_group;
             let start = g * group + c * nbw;
             for plane in 0..act_bits {
                 for (bi, x) in xs.iter().enumerate() {
-                    patterns[(ci * act_bits + plane) * batch + bi] =
+                    patterns[(chunk * act_bits + plane) * batch + bi] =
                         x.pattern(start, self.nbw, plane as u32);
                 }
             }
         }
+        let x_scales: Vec<f32> = xs.iter().map(|x| x.scale).collect();
 
-        let mut out = vec![vec![0.0f32; n]; batch];
-        let mut wrow = vec![0i32; k];
-        let mut basis = vec![0i64; nbw];
-        let mut entries = vec![0i64; 1usize << nbw];
-        let mut acc = vec![0i64; batch];
-        let mut prt = super::pattern::PatternReuseTable::new(32);
+        let tile_cols = self.tile_cols.max(1);
+        let n_tiles = n.div_ceil(tile_cols);
+        let tiles = pool.run(n_tiles, |t| {
+            let col_start = t * tile_cols;
+            let col_end = (col_start + tile_cols).min(n);
+            let mut scratch = TileScratch::new(k, self.nbw, batch, col_end - col_start);
+            let args = TileArgs {
+                wt: &self.wt,
+                nbw: self.nbw,
+                use_prt: self.use_prt,
+                patterns: &patterns,
+                act_bits,
+                batch,
+                x_scales: &x_scales,
+                col_start,
+                col_end,
+            };
+            let stats = run_tile(&args, &mut scratch);
+            (col_start, col_end, scratch.into_out(), stats)
+        });
 
-        for col in 0..n {
-            // wt row `col` holds the K basis weights for output column col.
-            self.wt.packed().unpack_range_into(col * k, &mut wrow);
-            for g in 0..groups {
-                let scale_w = self.wt.scale(col, g * group);
-                acc.iter_mut().for_each(|a| *a = 0);
-                for c in 0..chunks_per_group {
-                    let start = g * group + c * nbw;
-                    let end = (start + nbw).min((g + 1) * group);
-                    // Basis weights (zero-padded to NBW at the group tail).
-                    basis.iter_mut().for_each(|b| *b = 0);
-                    for (i, kk) in (start..end).enumerate() {
-                        basis[i] = wrow[kk] as i64;
-                    }
-                    Lut::build_into(&basis, self.nbw, &mut entries);
-                    stats.luts_built += 1;
-                    let chunk = g * chunks_per_group + c;
-                    let pat_base = chunk * act_bits * batch;
-                    if self.use_prt {
-                        prt.flush(); // new LUT ⇒ stored results are stale
-                        for plane in 0..act_bits {
-                            for bi in 0..batch {
-                                let pat = patterns[pat_base + plane * batch + bi];
-                                let v = match prt.lookup(pat) {
-                                    Some(hit) => {
-                                        stats.prt_hits += 1;
-                                        hit
-                                    }
-                                    None => {
-                                        let v = entries[pat as usize];
-                                        stats.lut_reads += 1;
-                                        prt.insert(pat, v);
-                                        v
-                                    }
-                                };
-                                if plane == act_bits - 1 {
-                                    acc[bi] -= v << plane;
-                                } else {
-                                    acc[bi] += v << plane;
-                                }
-                            }
-                        }
-                    } else {
-                        for plane in 0..act_bits {
-                            let neg = plane == act_bits - 1;
-                            for bi in 0..batch {
-                                let pat = patterns[pat_base + plane * batch + bi];
-                                let v = entries[pat as usize];
-                                if neg {
-                                    acc[bi] -= v << plane;
-                                } else {
-                                    acc[bi] += v << plane;
-                                }
-                            }
-                        }
-                        stats.lut_reads += (act_bits * batch) as u64;
-                    }
-                }
-                for (bi, x) in xs.iter().enumerate() {
-                    out[bi][col] += acc[bi] as f32 * scale_w * x.scale;
-                }
+        // Scatter tile outputs into the flat buffer and sum stats, in tile
+        // order (deterministic; the sums are order-independent anyway).
+        let mut stats = GemvStats::default();
+        let data = out.data_mut();
+        for (col_start, col_end, tile_out, tile_stats) in tiles {
+            stats += tile_stats;
+            let width = col_end - col_start;
+            for bi in 0..batch {
+                data[bi * n + col_start..bi * n + col_end]
+                    .copy_from_slice(&tile_out[bi * width..(bi + 1) * width]);
             }
         }
+        stats
+    }
+
+    /// Serial convenience wrapper: allocate a fresh output and run on the
+    /// caller's thread. This is the scalar reference the tiled/threaded
+    /// path is property-tested against.
+    pub fn gemv_batch(&self, xs: &[QuantizedVector]) -> (GemvOutput, GemvStats) {
+        let mut out = GemvOutput::new();
+        let stats = self.gemv_batch_into(xs, &WorkerPool::serial(), &mut out);
         (out, stats)
     }
 
     /// Single-vector convenience wrapper.
     pub fn gemv(&self, x: &QuantizedVector) -> Vec<f32> {
-        self.gemv_batch(std::slice::from_ref(x)).0.remove(0)
+        let (out, _) = self.gemv_batch(std::slice::from_ref(x));
+        out.row(0).to_vec()
     }
 }
 
@@ -246,9 +268,9 @@ mod tests {
                 let (wt, xs) = random_setup(&mut prng, 8, 64, level, 32);
                 let eng = LutGemvEngine::new(wt, nbw);
                 let (ys, _) = eng.gemv_batch(&xs);
-                for (x, y) in xs.iter().zip(ys.iter()) {
+                for (bi, x) in xs.iter().enumerate() {
                     let want = reference_gemv(eng.weights(), x);
-                    assert_eq!(y, &want, "level={level} nbw={nbw}");
+                    assert_eq!(ys.row(bi), want.as_slice(), "level={level} nbw={nbw}");
                 }
             }
         }
@@ -273,9 +295,9 @@ mod tests {
                 let (wt, xs) = random_setup(&mut prng, n, k, level, group);
                 let eng = LutGemvEngine::new(wt, nbw);
                 let (ys, _) = eng.gemv_batch(&xs);
-                for (x, y) in xs.iter().zip(ys.iter()) {
+                for (bi, x) in xs.iter().enumerate() {
                     let want = reference_gemv(eng.weights(), x);
-                    if y != &want {
+                    if ys.row(bi) != want.as_slice() {
                         return Err(format!("mismatch at level={level} nbw={nbw}"));
                     }
                 }
@@ -330,8 +352,8 @@ mod tests {
         let (wt, xs) = random_setup(&mut prng, 5, 96, QuantLevel::Q5, 32);
         let eng = LutGemvEngine::new(wt, 3);
         let (ys, _) = eng.gemv_batch(&xs);
-        for (x, y) in xs.iter().zip(ys.iter()) {
-            assert_eq!(y, &reference_gemv(eng.weights(), x));
+        for (bi, x) in xs.iter().enumerate() {
+            assert_eq!(ys.row(bi), reference_gemv(eng.weights(), x).as_slice());
         }
     }
 
@@ -349,6 +371,52 @@ mod tests {
         q[3] = 1;
         let x = QuantizedVector { q, scale: 0.33, bits: 8 };
         assert_eq!(eng.gemv(&x), reference_gemv(eng.weights(), &x));
+    }
+
+    #[test]
+    fn empty_batch_early_returns() {
+        let mut prng = Prng::new(111);
+        let (wt, _) = random_setup(&mut prng, 16, 64, QuantLevel::Q4, 32);
+        let eng = LutGemvEngine::new(wt, 4);
+        let (out, stats) = eng.gemv_batch(&[]);
+        assert_eq!(out.batch(), 0);
+        assert!(out.as_slice().is_empty());
+        // No columns walked, no LUTs built for zero activations.
+        assert_eq!(stats, GemvStats::default());
+    }
+
+    #[test]
+    fn output_buffer_is_reusable_across_calls() {
+        let mut prng = Prng::new(113);
+        let (wt, xs) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let (wt2, xs2) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let eng = LutGemvEngine::new(wt, 4);
+        let eng2 = LutGemvEngine::new(wt2, 4);
+        let pool = WorkerPool::serial();
+        let mut out = GemvOutput::new();
+        eng.gemv_batch_into(&xs, &pool, &mut out);
+        let first = out.clone();
+        // A second call with different shapes must fully overwrite.
+        eng2.gemv_batch_into(&xs2, &pool, &mut out);
+        assert_eq!(out.batch(), xs2.len());
+        eng.gemv_batch_into(&xs, &pool, &mut out);
+        assert_eq!(out, first, "stale data leaked through buffer reuse");
+    }
+
+    #[test]
+    fn tiled_threaded_matches_serial_bit_exactly() {
+        let mut prng = Prng::new(115);
+        let (wt, xs) = random_setup(&mut prng, 37, 96, QuantLevel::Q4, 32);
+        let mut eng = LutGemvEngine::new(wt, 4);
+        eng.tile_cols = 5; // force ragged multi-tile execution
+        let (serial, serial_stats) = eng.gemv_batch(&xs);
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut out = GemvOutput::new();
+            let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+            assert_eq!(out, serial, "threads={threads}");
+            assert_eq!(stats, serial_stats, "stats drift at threads={threads}");
+        }
     }
 
     #[test]

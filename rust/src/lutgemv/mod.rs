@@ -13,9 +13,14 @@
 //!
 //! - [`engine`]: the exact functional implementation (bit-exact against the
 //!   naive integer dot product — the repository's core correctness anchor,
-//!   mirrored by the Pallas kernel on the Python side);
+//!   mirrored by the Pallas kernel on the Python side). Execution is tiled
+//!   and thread-parallel: column tiles fan out over the
+//!   [`crate::runtime::WorkerPool`], with outputs/stats bit-identical at
+//!   every thread count;
+//! - [`tile`]: the per-tile kernel and scratch ([`tile::GemvOutput`] is the
+//!   flat row-major batch-output buffer the serving loop reuses);
 //! - [`pattern`]: the Pattern Reuse Table (§III-D) that short-circuits
-//!   repeated activation bit patterns;
+//!   repeated activation bit patterns (O(1) generation-counter flush);
 //! - [`cycles`]: the C-SRAM cycle model for a tile GEMV, the quantity the
 //!   pipeline simulator and the design-space benches consume;
 //! - [`bitserial`]: the Neural-Cache-style bit-serial GEMV cycle model used
@@ -25,7 +30,9 @@ pub mod bitserial;
 pub mod cycles;
 pub mod engine;
 pub mod pattern;
+pub mod tile;
 
 pub use cycles::{GemvCycleModel, GemvCycles};
-pub use engine::LutGemvEngine;
+pub use engine::{GemvStats, LutGemvEngine};
 pub use pattern::PatternReuseTable;
+pub use tile::GemvOutput;

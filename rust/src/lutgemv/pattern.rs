@@ -33,13 +33,22 @@ struct PrtEntry {
     value: i64,
     /// LRU timestamp.
     stamp: u64,
+    /// Generation the entry was written in; entries from an older
+    /// generation are invalid (flushed) without having been cleared.
+    generation: u64,
 }
 
 /// 32-entry fully-associative LRU table.
+///
+/// Flush is O(1): a generation counter is bumped and stale entries are
+/// lazily treated as empty. The engine flushes on *every* LUT switch
+/// (thousands per GEMV), so an O(capacity) wipe per flush would cost more
+/// than the lookups it serves.
 #[derive(Debug, Clone)]
 pub struct PatternReuseTable {
     entries: Vec<Option<PrtEntry>>,
     clock: u64,
+    generation: u64,
     hits: u64,
     misses: u64,
     flushes: u64,
@@ -52,6 +61,7 @@ impl PatternReuseTable {
         PatternReuseTable {
             entries: vec![None; capacity],
             clock: 0,
+            generation: 0,
             hits: 0,
             misses: 0,
             flushes: 0,
@@ -63,14 +73,25 @@ impl PatternReuseTable {
     }
 
     /// Look up a pattern; `Some(result)` bypasses the C-SRAM access.
+    ///
+    /// Stale (pre-flush) entries encountered during the scan are reclaimed
+    /// to `None` on the spot, so post-flush scans degrade to cheap
+    /// discriminant checks instead of paying a tag compare per dead slot —
+    /// the flush stays O(1) without pessimizing the lookups it serves.
     pub fn lookup(&mut self, pattern: u32) -> Option<i64> {
         self.clock += 1;
         let tag = pattern_hash(pattern);
-        for e in self.entries.iter_mut().flatten() {
-            if e.tag == tag {
-                e.stamp = self.clock;
-                self.hits += 1;
-                return Some(e.value);
+        for slot in self.entries.iter_mut() {
+            if matches!(slot, Some(e) if e.generation != self.generation) {
+                *slot = None; // lazy reclaim of a flushed entry
+                continue;
+            }
+            if let Some(e) = slot {
+                if e.tag == tag {
+                    e.stamp = self.clock;
+                    self.hits += 1;
+                    return Some(e.value);
+                }
             }
         }
         self.misses += 1;
@@ -81,19 +102,23 @@ impl PatternReuseTable {
     pub fn insert(&mut self, pattern: u32, value: i64) {
         self.clock += 1;
         let tag = pattern_hash(pattern);
-        // Update in place if present.
+        // Update in place if present (and live this generation).
         for e in self.entries.iter_mut().flatten() {
-            if e.tag == tag {
+            if e.generation == self.generation && e.tag == tag {
                 e.value = value;
                 e.stamp = self.clock;
                 return;
             }
         }
-        // Free slot, else LRU victim.
+        // Never-used or stale (pre-flush) slot, else LRU victim among live
+        // entries.
         let victim = self
             .entries
             .iter()
-            .position(|e| e.is_none())
+            .position(|e| match e {
+                None => true,
+                Some(entry) => entry.generation != self.generation,
+            })
             .unwrap_or_else(|| {
                 self.entries
                     .iter()
@@ -102,14 +127,15 @@ impl PatternReuseTable {
                     .map(|(i, _)| i)
                     .unwrap()
             });
-        self.entries[victim] = Some(PrtEntry { tag, value, stamp: self.clock });
+        self.entries[victim] =
+            Some(PrtEntry { tag, value, stamp: self.clock, generation: self.generation });
     }
 
-    /// Invalidate everything — required on every LUT switch.
+    /// Invalidate everything — required on every LUT switch. O(1): bumps
+    /// the generation counter; stale entries are reclaimed lazily by
+    /// `insert`.
     pub fn flush(&mut self) {
-        for e in self.entries.iter_mut() {
-            *e = None;
-        }
+        self.generation += 1;
         self.flushes += 1;
     }
 
@@ -183,6 +209,42 @@ mod tests {
         }
         for pat in 0u32..32 {
             assert_eq!(prt.lookup(pat), Some(pat as i64 * 3), "pattern {pat} evicted");
+        }
+    }
+
+    #[test]
+    fn flush_is_generational_not_destructive() {
+        // A flushed entry must behave exactly like an empty slot: miss on
+        // lookup, and be reclaimed by insert *before* any live entry is
+        // LRU-evicted.
+        let mut prt = PatternReuseTable::new(2);
+        prt.insert(1, 10);
+        prt.insert(2, 20);
+        prt.flush();
+        assert_eq!(prt.lookup(1), None);
+        assert_eq!(prt.lookup(2), None);
+        // Both slots are stale; two inserts must fit without evicting each
+        // other.
+        prt.insert(3, 30);
+        prt.insert(4, 40);
+        assert_eq!(prt.lookup(3), Some(30));
+        assert_eq!(prt.lookup(4), Some(40));
+    }
+
+    #[test]
+    fn repeated_flushes_stay_consistent() {
+        // The engine flushes once per LUT (thousands per GEMV); hammer the
+        // generation path and check per-generation behaviour every time.
+        let mut prt = PatternReuseTable::new(4);
+        for gen in 0u32..1000 {
+            prt.flush();
+            for pat in 0..4u32 {
+                assert_eq!(prt.lookup(pat), None, "gen {gen}: stale value survived flush");
+                prt.insert(pat, (gen * 10 + pat) as i64);
+            }
+            for pat in 0..4u32 {
+                assert_eq!(prt.lookup(pat), Some((gen * 10 + pat) as i64), "gen {gen}");
+            }
         }
     }
 

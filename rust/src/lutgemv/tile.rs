@@ -1,0 +1,226 @@
+//! Column-tile kernel for the LUT-GEMV execution backend.
+//!
+//! The engine splits the N output columns into contiguous tiles; each tile
+//! is computed by [`run_tile`] with all of its mutable state in a
+//! [`TileScratch`], so the hot `columns × groups × chunks × planes × batch`
+//! loop is allocation-free and tiles can run concurrently on the
+//! [`crate::runtime::WorkerPool`] with nothing shared but read-only inputs.
+//!
+//! Determinism: a column's result depends only on the weights, the
+//! precomputed activation bit patterns, and the per-column accumulation
+//! order — all of which are identical no matter which worker executes the
+//! tile — so tiled/threaded outputs are bit-identical to the serial ones
+//! (property-tested in `tests/tiled_parity.rs`).
+
+use super::engine::GemvStats;
+use super::pattern::PatternReuseTable;
+use crate::csram::lut::Lut;
+use crate::quant::QuantizedMatrix;
+
+/// Flat row-major batch output: `value(bi, col) = data[bi * n + col]`.
+///
+/// Replaces the old `Vec<Vec<f32>>` shape: one allocation, reusable across
+/// calls (`reset` keeps capacity), and contiguous per-request rows for the
+/// serving layer to argmax over.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GemvOutput {
+    data: Vec<f32>,
+    batch: usize,
+    n: usize,
+}
+
+impl GemvOutput {
+    /// An empty output; the first `gemv_batch_into` sizes it.
+    pub fn new() -> Self {
+        GemvOutput::default()
+    }
+
+    /// Resize to `batch × n`, reusing the allocation. Contents are
+    /// unspecified until the engine's tile scatter overwrites every
+    /// element (which `gemv_batch_into` always does) — skipping the
+    /// zero-fill keeps the per-iteration serving cost at exactly one
+    /// logits-buffer write instead of two.
+    pub fn reset(&mut self, batch: usize, n: usize) {
+        self.batch = batch;
+        self.n = n;
+        self.data.resize(batch * n, 0.0);
+    }
+
+    /// Batch rows held.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Output width (N).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Output row for batch item `bi`.
+    pub fn row(&self, bi: usize) -> &[f32] {
+        &self.data[bi * self.n..(bi + 1) * self.n]
+    }
+
+    /// The whole flat buffer, row-major.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub(crate) fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Copy out as the legacy nested shape (tests / diagnostics only).
+    pub fn to_vecs(&self) -> Vec<Vec<f32>> {
+        (0..self.batch).map(|bi| self.row(bi).to_vec()).collect()
+    }
+}
+
+/// Read-only inputs shared by every tile of one `gemv_batch` call.
+pub(crate) struct TileArgs<'a> {
+    /// Transposed quantized weights (`[N, K]` row-major).
+    pub wt: &'a QuantizedMatrix,
+    pub nbw: u32,
+    pub use_prt: bool,
+    /// `patterns[(chunk * act_bits + plane) * batch + bi]`, precomputed
+    /// once per call — patterns do not depend on the output column.
+    pub patterns: &'a [u32],
+    pub act_bits: usize,
+    pub batch: usize,
+    /// Per-batch-item activation scales.
+    pub x_scales: &'a [f32],
+    /// Column range `[col_start, col_end)` this tile owns.
+    pub col_start: usize,
+    pub col_end: usize,
+}
+
+/// Per-tile mutable state: one allocation set per tile, none inside the
+/// kernel loops.
+pub(crate) struct TileScratch {
+    /// Unpacked basis weights of the current column (K values).
+    wrow: Vec<i32>,
+    /// Zero-padded basis for the current chunk (NBW values).
+    basis: Vec<i64>,
+    /// LUT entries for the current chunk (2^NBW subset sums).
+    entries: Vec<i64>,
+    /// Per-batch-item integer accumulator for the current scale group.
+    acc: Vec<i64>,
+    /// Tile output, `[batch, width]` row-major.
+    out: Vec<f32>,
+    /// This tile's Pattern Reuse Table (one per DFM in hardware; flushed on
+    /// every LUT switch, so per-tile instances behave identically to a
+    /// global one).
+    prt: PatternReuseTable,
+}
+
+impl TileScratch {
+    pub fn new(k: usize, nbw: u32, batch: usize, width: usize) -> Self {
+        TileScratch {
+            wrow: vec![0i32; k],
+            basis: vec![0i64; nbw as usize],
+            entries: vec![0i64; 1usize << nbw],
+            acc: vec![0i64; batch],
+            out: vec![0.0f32; batch * width],
+            prt: PatternReuseTable::new(32),
+        }
+    }
+
+    /// Surrender the tile output buffer.
+    pub fn into_out(self) -> Vec<f32> {
+        self.out
+    }
+}
+
+/// Compute output columns `[col_start, col_end)` for the whole batch.
+///
+/// This is the former `LutGemvEngine::gemv_batch` column loop, restricted
+/// to a tile: per column it unpacks the K basis weights once, then per
+/// scale group builds each chunk's LUT and streams every activation
+/// bit-plane of every batch item through it (the §III-C reuse that makes
+/// batching effective). Results land in `scratch.out` (`[batch, width]`).
+pub(crate) fn run_tile(args: &TileArgs<'_>, scratch: &mut TileScratch) -> GemvStats {
+    let wt = args.wt;
+    let k = wt.cols;
+    let nbw = args.nbw as usize;
+    let group = wt.group_size;
+    let chunks_per_group = group.div_ceil(nbw);
+    let groups = k / group;
+    let batch = args.batch;
+    let act_bits = args.act_bits;
+    let width = args.col_end - args.col_start;
+    debug_assert_eq!(scratch.out.len(), batch * width);
+    debug_assert_eq!(scratch.wrow.len(), k);
+
+    let mut stats = GemvStats::default();
+    scratch.out.fill(0.0);
+
+    for (j, col) in (args.col_start..args.col_end).enumerate() {
+        // wt row `col` holds the K basis weights for output column `col`.
+        wt.packed().unpack_range_into(col * k, &mut scratch.wrow);
+        for g in 0..groups {
+            let scale_w = wt.scale(col, g * group);
+            scratch.acc.iter_mut().for_each(|a| *a = 0);
+            for c in 0..chunks_per_group {
+                let start = g * group + c * nbw;
+                let end = (start + nbw).min((g + 1) * group);
+                // Basis weights (zero-padded to NBW at the group tail).
+                scratch.basis.iter_mut().for_each(|b| *b = 0);
+                for (i, kk) in (start..end).enumerate() {
+                    scratch.basis[i] = scratch.wrow[kk] as i64;
+                }
+                Lut::build_into(&scratch.basis, args.nbw, &mut scratch.entries);
+                stats.luts_built += 1;
+                let chunk = g * chunks_per_group + c;
+                let pat_base = chunk * act_bits * batch;
+                if args.use_prt {
+                    scratch.prt.flush(); // new LUT ⇒ stored results are stale
+                    for plane in 0..act_bits {
+                        for bi in 0..batch {
+                            let pat = args.patterns[pat_base + plane * batch + bi];
+                            let v = match scratch.prt.lookup(pat) {
+                                Some(hit) => {
+                                    stats.prt_hits += 1;
+                                    hit
+                                }
+                                None => {
+                                    let v = scratch.entries[pat as usize];
+                                    stats.lut_reads += 1;
+                                    scratch.prt.insert(pat, v);
+                                    v
+                                }
+                            };
+                            if plane == act_bits - 1 {
+                                scratch.acc[bi] -= v << plane;
+                            } else {
+                                scratch.acc[bi] += v << plane;
+                            }
+                        }
+                    }
+                } else {
+                    for plane in 0..act_bits {
+                        let neg = plane == act_bits - 1;
+                        for bi in 0..batch {
+                            let pat = args.patterns[pat_base + plane * batch + bi];
+                            let v = scratch.entries[pat as usize];
+                            if neg {
+                                scratch.acc[bi] -= v << plane;
+                            } else {
+                                scratch.acc[bi] += v << plane;
+                            }
+                        }
+                    }
+                    stats.lut_reads += (act_bits * batch) as u64;
+                }
+            }
+            for bi in 0..batch {
+                scratch.out[bi * width + j] +=
+                    scratch.acc[bi] as f32 * scale_w * args.x_scales[bi];
+            }
+        }
+    }
+    stats
+}

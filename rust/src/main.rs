@@ -79,7 +79,7 @@ fn simulate(mut args: Args) -> Result<()> {
     let mut sail = base.perf_model();
     sail.level = level;
     sail.threads = threads;
-        let report = sail.iteration(&model, batch);
+    let report = sail.iteration(&model, batch);
     let arm = CpuModel::arm_n1();
     let amx = CpuModel::amx();
     let nc = NeuralCacheModel::paper_config(level, threads);

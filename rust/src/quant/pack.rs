@@ -80,27 +80,52 @@ impl BitPacked {
 
     /// Unpack all values.
     pub fn unpack(&self) -> Vec<i32> {
-        (0..self.len).map(|i| self.get(i)).collect()
+        let mut out = vec![0i32; self.len];
+        self.unpack_range_into(0, &mut out);
+        out
     }
 
     /// Unpack the range `[start, start+out.len())` into a caller buffer —
-    /// the allocation-free fast path the GEMV engine's column loop uses.
+    /// the allocation-free fast path the GEMV engine's column-tile kernel
+    /// uses (every column visit pays K of these).
+    ///
+    /// Word-at-a-time extraction: a running bit buffer is refilled from the
+    /// packed words sequentially, so each value costs one shift+mask (plus
+    /// one word load every `64/bits` values) instead of the div/mod address
+    /// arithmetic and two-word gather the naive per-element path pays.
     pub fn unpack_range_into(&self, start: usize, out: &mut [i32]) {
         assert!(start + out.len() <= self.len);
+        if out.is_empty() {
+            return;
+        }
         let bits = self.bits as usize;
         let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
         let sign = 1u64 << (bits - 1);
-        let mut bitpos = start * bits;
+        let bitpos = start * bits;
+        let mut word = bitpos / 64;
+        let off = bitpos % 64;
+        // `buf` holds the next `avail` not-yet-consumed bits in its low end.
+        let mut buf = self.words[word] >> off;
+        let mut avail = 64 - off;
         for o in out.iter_mut() {
-            let word = bitpos / 64;
-            let off = bitpos % 64;
-            let mut u = self.words[word] >> off;
-            if off + bits > 64 {
-                u |= self.words[word + 1] << (64 - off);
-            }
-            u &= mask;
+            let u = if avail < bits {
+                // Value straddles into the next word (or `buf` is drained):
+                // splice the remainder from the next word's low bits.
+                word += 1;
+                let next = self.words[word];
+                let u = (buf | (next << avail)) & mask;
+                let used_of_next = bits - avail;
+                buf = next >> used_of_next;
+                avail = 64 - used_of_next;
+                u
+            } else {
+                let u = buf & mask;
+                buf >>= bits;
+                avail -= bits;
+                u
+            };
+            // Sign-extend from `bits` wide.
             *o = ((u ^ sign).wrapping_sub(sign)) as i64 as i32;
-            bitpos += bits;
         }
     }
 
@@ -198,5 +223,51 @@ mod tests {
         let vals: Vec<i32> = (0..64).map(|i| (i % 7) - 3).collect();
         let p = BitPacked::pack(&vals, 3);
         assert_eq!(p.unpack(), vals);
+    }
+
+    #[test]
+    fn range_unpack_matches_get_property() {
+        // The word-at-a-time fast path must agree with the per-element
+        // `get` for every width, start offset, and length — including
+        // ranges whose first value starts mid-word and whose last value
+        // ends exactly on a word boundary.
+        propcheck::check(
+            "unpack-range-vs-get",
+            propcheck::Config { cases: 300, seed: 17 },
+            |p, i| {
+                let bits = [2u32, 3, 4, 5, 6, 8, 12, 16, 32][p.usize_in(0, 9)];
+                let n = p.usize_in(1, 8 + 2 * i);
+                let vals: Vec<i32> = (0..n).map(|_| p.signed_bits(bits) as i32).collect();
+                let start = p.usize_in(0, n);
+                let len = p.usize_in(0, n - start + 1);
+                (bits, vals, start, len)
+            },
+            |&(bits, ref vals, start, len)| {
+                let p = BitPacked::pack(vals, bits);
+                let mut out = vec![0i32; len];
+                p.unpack_range_into(start, &mut out);
+                for (j, &o) in out.iter().enumerate() {
+                    if o != p.get(start + j) {
+                        return Err(format!(
+                            "bits={bits} start={start} len={len} elem {j}: {} != {}",
+                            o,
+                            p.get(start + j)
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn range_unpack_empty_and_tail() {
+        let vals: Vec<i32> = (0..100).map(|i| (i % 15) - 7).collect();
+        let p = BitPacked::pack(&vals, 5);
+        let mut empty: [i32; 0] = [];
+        p.unpack_range_into(100, &mut empty); // start == len, zero-length
+        let mut tail = vec![0i32; 3];
+        p.unpack_range_into(97, &mut tail);
+        assert_eq!(tail, &vals[97..]);
     }
 }

@@ -8,12 +8,17 @@
 //!   model config);
 //! - [`executor`]: PJRT client wrapper — compile once, execute per
 //!   iteration ([`executor::DecodeModel`] is the decode-step engine the
-//!   coordinator drives).
+//!   coordinator drives);
+//! - [`pool`]: the scoped-thread worker pool the tiled LUT-GEMV backend
+//!   fans column tiles out on (the software analogue of the paper's 16
+//!   thread-pipelines).
 
 pub mod executor;
 pub mod manifest;
+pub mod pool;
 pub mod weights;
 
 pub use executor::{DecodeModel, GemvTile};
 pub use manifest::Manifest;
+pub use pool::WorkerPool;
 pub use weights::{DType, WeightArray, WeightsFile};

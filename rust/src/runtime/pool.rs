@@ -1,0 +1,135 @@
+//! Scoped-thread worker pool for tile fan-out.
+//!
+//! The paper's SAIL configuration spreads a GEMV's column tiles across 16
+//! thread-pipelines (§III-C, all evaluation figures); this pool is the
+//! software analogue that the tiled LUT-GEMV backend uses to fan column
+//! tiles out across host cores. Design constraints, in order:
+//!
+//! 1. **Determinism** — results are returned indexed by item, and callers
+//!    combine them in item order, so output (and any f32 reduction a caller
+//!    performs) is bit-identical at every thread count.
+//! 2. **No dependencies** — built on `std::thread::scope`; no rayon/
+//!    crossbeam offline.
+//! 3. **No unsafe** — workers receive disjoint `chunks_mut` slices of the
+//!    result vector, so the borrow checker proves the writes race-free.
+//!
+//! Work is split into `threads` contiguous index ranges (tiles are uniform
+//! cost, so static partitioning balances within one tile of ideal and
+//! avoids atomic work-stealing traffic on the hot path).
+
+/// A fixed-width fork-join pool. Cheap to construct (threads are spawned
+/// per [`run`](WorkerPool::run) call and scope-joined — the OS reuses the
+/// stacks, and one spawn per ~1 ms GEMV is noise).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        WorkerPool { threads: threads.max(1) }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        WorkerPool::new(threads)
+    }
+
+    /// A single-threaded pool: `run` degenerates to a plain map on the
+    /// caller's thread (the scalar reference path).
+    pub fn serial() -> Self {
+        WorkerPool::new(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Evaluate `f(0..n_items)` across the pool, returning results in item
+    /// order. `f` must be pure per item (it runs concurrently and its
+    /// assignment to workers is an implementation detail).
+    pub fn run<T, F>(&self, n_items: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if self.threads == 1 || n_items <= 1 {
+            return (0..n_items).map(f).collect();
+        }
+        let workers = self.threads.min(n_items);
+        let per_worker = n_items.div_ceil(workers);
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n_items);
+        results.resize_with(n_items, || None);
+        std::thread::scope(|scope| {
+            for (w, chunk) in results.chunks_mut(per_worker).enumerate() {
+                let f = &f;
+                scope.spawn(move || {
+                    let base = w * per_worker;
+                    for (i, slot) in chunk.iter_mut().enumerate() {
+                        *slot = Some(f(base + i));
+                    }
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("pool invariant: every item is assigned to exactly one worker"))
+            .collect()
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_item_order_all_thread_counts() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let pool = WorkerPool::new(threads);
+            let got = pool.run(37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let counters: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let pool = WorkerPool::new(4);
+        pool.run(100, |i| counters[i].fetch_add(1, Ordering::Relaxed));
+        for (i, c) in counters.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "item {i}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let pool = WorkerPool::new(8);
+        assert_eq!(pool.run(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.run(1, |i| i + 1), vec![1]);
+        // More threads than items.
+        assert_eq!(pool.run(3, |i| i), vec![0, 1, 2]);
+        // Zero requested threads clamps to one.
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn actually_runs_concurrently() {
+        // With 4 workers and 4 items that each wait for all 4 to arrive,
+        // completion proves the items ran on distinct threads.
+        let barrier = std::sync::Barrier::new(4);
+        let pool = WorkerPool::new(4);
+        pool.run(4, |_| {
+            barrier.wait();
+        });
+    }
+}

@@ -61,6 +61,72 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize to compact JSON text (the writer half the bench emitters
+    /// use for BENCH_*.json artifacts). `parse(dump(x)) == x` for every
+    /// value with finite numbers; non-finite numbers serialize as `null`.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if *n == n.trunc() && n.abs() < 9.0e15 {
+                    // Integral values print without an exponent/fraction so
+                    // downstream tools can read counts as integers.
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
 }
 
 struct Parser {
@@ -241,5 +307,24 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let src = r#"{"config": {"hidden": 256, "neg": -1.5e3},
+                      "list": [1, 2.25, true, null, "a\"b\\c\nd"],
+                      "empty_a": [], "empty_o": {}}"#;
+        let j = Json::parse(src).unwrap();
+        let dumped = j.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), j);
+        // Integral floats come out as integers.
+        assert!(dumped.contains("\"hidden\":256"), "{dumped}");
+    }
+
+    #[test]
+    fn dump_handles_non_finite() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(2.5).dump(), "2.5");
     }
 }

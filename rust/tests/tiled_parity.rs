@@ -1,0 +1,154 @@
+//! Parity suite for the tiled multi-threaded LUT-GEMV execution backend.
+//!
+//! The acceptance bar for the backend is *bit-exactness*: at every thread
+//! count, for every quant level / NBW / group size / tile width, the tiled
+//! path must produce outputs identical to the scalar engine and to the
+//! naive integer-dot-product reference, and its `GemvStats` must not
+//! depend on how work was partitioned.
+
+use sail::lutgemv::engine::{reference_gemv, GemvStats, LutGemvEngine};
+use sail::lutgemv::GemvOutput;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::WorkerPool;
+use sail::util::{propcheck, Prng};
+
+fn random_setup(
+    prng: &mut Prng,
+    n: usize,
+    k: usize,
+    level: QuantLevel,
+    group: usize,
+    batch: usize,
+) -> (QuantizedMatrix, Vec<QuantizedVector>) {
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, level, group);
+    let xs = (0..batch)
+        .map(|_| {
+            let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+            QuantizedVector::quantize(&x)
+        })
+        .collect();
+    (wt, xs)
+}
+
+#[test]
+fn tiled_backend_bit_identical_property() {
+    propcheck::check(
+        "tiled-gemv-parity",
+        propcheck::Config { cases: 50, seed: 2024 },
+        |p, _| {
+            let level = QuantLevel::ALL[p.usize_in(0, 6)];
+            let nbw = p.usize_in(1, 6) as u32;
+            let group = [8usize, 16, 32][p.usize_in(0, 3)];
+            let k = group * p.usize_in(1, 4);
+            let n = p.usize_in(1, 40);
+            let batch = p.usize_in(1, 6);
+            let tile_cols = p.usize_in(1, 9);
+            let seed = p.next_u64();
+            (level, nbw, group, k, n, batch, tile_cols, seed)
+        },
+        |&(level, nbw, group, k, n, batch, tile_cols, seed)| {
+            let mut prng = Prng::new(seed);
+            let (wt, xs) = random_setup(&mut prng, n, k, level, group, batch);
+            let mut eng = LutGemvEngine::new(wt, nbw);
+            eng.tile_cols = tile_cols;
+            let (serial, serial_stats) = eng.gemv_batch(&xs);
+            // Scalar engine vs naive reference, bit-for-bit.
+            for (bi, x) in xs.iter().enumerate() {
+                let want = reference_gemv(eng.weights(), x);
+                if serial.row(bi) != want.as_slice() {
+                    return Err(format!("scalar vs reference mismatch at level={level} nbw={nbw}"));
+                }
+            }
+            // Threaded backend vs scalar, at several pool widths.
+            for threads in [1usize, 2, 8] {
+                let pool = WorkerPool::new(threads);
+                let mut out = GemvOutput::new();
+                let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                if out != serial {
+                    return Err(format!("output drift at threads={threads} tile_cols={tile_cols}"));
+                }
+                if stats != serial_stats {
+                    return Err(format!("stats drift at threads={threads}: {stats:?} vs {serial_stats:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tiled_backend_bit_identical_with_prt() {
+    propcheck::check(
+        "tiled-gemv-parity-prt",
+        propcheck::Config { cases: 25, seed: 2025 },
+        |p, _| {
+            let nbw = p.usize_in(1, 5) as u32;
+            let n = p.usize_in(1, 24);
+            let batch = p.usize_in(1, 5);
+            let tile_cols = p.usize_in(1, 7);
+            let seed = p.next_u64();
+            (nbw, n, batch, tile_cols, seed)
+        },
+        |&(nbw, n, batch, tile_cols, seed)| {
+            let mut prng = Prng::new(seed);
+            let (wt, xs) = random_setup(&mut prng, n, 64, QuantLevel::Q4, 32, batch);
+            let mut eng = LutGemvEngine::new(wt, nbw);
+            eng.use_prt = true;
+            eng.tile_cols = tile_cols;
+            let (serial, serial_stats) = eng.gemv_batch(&xs);
+            for threads in [2usize, 8] {
+                let pool = WorkerPool::new(threads);
+                let mut out = GemvOutput::new();
+                let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                if out != serial {
+                    return Err(format!("PRT output drift at threads={threads}"));
+                }
+                if stats != serial_stats {
+                    return Err(format!(
+                        "PRT stats drift at threads={threads}: {stats:?} vs {serial_stats:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn stats_invariant_across_thread_counts_fixed_shape() {
+    // The §Perf acceptance shape, shrunk: stats must be a function of the
+    // problem, not of the execution schedule.
+    let mut prng = Prng::new(88);
+    let (wt, xs) = random_setup(&mut prng, 128, 128, QuantLevel::Q4, 32, 8);
+    let eng = LutGemvEngine::new(wt, 4);
+    let mut all_stats: Vec<GemvStats> = Vec::new();
+    for threads in [1usize, 2, 4, 8, 16] {
+        let pool = WorkerPool::new(threads);
+        let mut out = GemvOutput::new();
+        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out));
+    }
+    for (i, s) in all_stats.iter().enumerate().skip(1) {
+        assert_eq!(*s, all_stats[0], "stats at pool #{i} differ");
+    }
+    // Sanity: the counters describe the work actually done.
+    // chunks/column = (128/32 groups × 32/4 chunks) = 32; columns = 128.
+    assert_eq!(all_stats[0].luts_built, 32 * 128);
+    assert_eq!(all_stats[0].lut_reads, 32 * 128 * 8 * 8); // ×planes ×batch
+}
+
+#[test]
+fn flat_output_layout_matches_rows() {
+    let mut prng = Prng::new(99);
+    let (wt, xs) = random_setup(&mut prng, 10, 32, QuantLevel::Q8, 32, 3);
+    let eng = LutGemvEngine::new(wt, 4);
+    let (out, _) = eng.gemv_batch(&xs);
+    assert_eq!(out.batch(), 3);
+    assert_eq!(out.n(), 10);
+    assert_eq!(out.as_slice().len(), 30);
+    let vecs = out.to_vecs();
+    for bi in 0..3 {
+        assert_eq!(vecs[bi].as_slice(), out.row(bi));
+        assert_eq!(&out.as_slice()[bi * 10..(bi + 1) * 10], out.row(bi));
+    }
+}

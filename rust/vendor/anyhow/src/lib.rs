@@ -1,0 +1,186 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so the real `anyhow` cannot
+//! be fetched; this shim provides the (small) API surface the SAIL crate
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait, and the
+//! `anyhow!` / `bail!` macros. Semantics mirror upstream where it matters:
+//!
+//! - `Error` is constructible from any `std::error::Error + Send + Sync`
+//!   (and therefore works with `?`), but deliberately does **not** implement
+//!   `std::error::Error` itself — exactly like upstream, which is what makes
+//!   the blanket `From` impl coherent;
+//! - `Display` shows the outermost message, `Debug` shows the full
+//!   "Caused by" chain;
+//! - `.context(..)` / `.with_context(..)` prepend a message, preserving the
+//!   underlying chain.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with an overridable error type, as upstream.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error: `chain[0]` is the outermost context, the last
+/// element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (upstream `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (outermost-first).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The message chain, outermost context first, root cause last.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context extension for `Result` and `Option` (upstream `anyhow::Context`).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `if !cond { bail!(..) }` — provided for completeness.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err()).with_context(|| "loading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        assert_eq!(e.root_cause(), "missing file");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "nope 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<String> {
+            let s = String::from_utf8(vec![0xFF])?;
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+}

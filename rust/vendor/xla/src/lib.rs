@@ -1,0 +1,234 @@
+//! Offline stub of the `xla` PJRT bridge.
+//!
+//! The real crate wraps the PJRT C API; that shared library is not present
+//! in this environment, so this stub keeps the same types and signatures the
+//! SAIL runtime uses while making the runtime's behaviour explicit:
+//!
+//! - [`Literal`] is fully functional (host-side typed buffers) — the
+//!   runtime builds weight/KV literals before ever touching PJRT;
+//! - HLO parsing, compilation and execution return a descriptive
+//!   [`Error`], so `sail serve` / `sail crosscheck` fail cleanly with
+//!   "PJRT unavailable" instead of crashing, and the PJRT integration
+//!   tests (which skip when `artifacts/` is absent) remain compilable.
+//!
+//! Swapping the real bridge back in is a one-line Cargo change; no SAIL
+//! source changes are required.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: carries a message; implements `std::error::Error` so it
+/// converts into `anyhow::Error` via `?`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT runtime unavailable (vendored xla stub — the real \
+             PJRT bridge is not present in this offline build)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the SAIL runtime materializes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S8,
+    S32,
+    U32,
+}
+
+impl ElementType {
+    pub const fn byte_size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::S8 => 1,
+        }
+    }
+}
+
+/// Types a [`Literal`] can be read back as.
+pub trait NativeType: Sized + Copy {
+    const ELEMENT: ElementType;
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT: ElementType = ElementType::F32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT: ElementType = ElementType::S32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for u32 {
+    const ELEMENT: ElementType = ElementType::U32;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl NativeType for i8 {
+    const ELEMENT: ElementType = ElementType::S8;
+    fn from_le_bytes(b: &[u8]) -> Self {
+        b[0] as i8
+    }
+}
+
+/// A host-side typed buffer; functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    element_type: ElementType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        shape: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = shape.iter().product();
+        let want = elems * element_type.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data size {} does not match shape {shape:?} of {element_type:?} \
+                 (expected {want} bytes)",
+                data.len()
+            )));
+        }
+        Ok(Literal { element_type, shape: shape.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.element_type != T::ELEMENT {
+            return Err(Error(format!(
+                "literal is {:?}, requested {:?}",
+                self.element_type,
+                T::ELEMENT
+            )));
+        }
+        let size = self.element_type.byte_size();
+        Ok(self.data.chunks_exact(size).map(T::from_le_bytes).collect())
+    }
+
+    /// Tuple destructuring is only produced by real PJRT executions, which
+    /// the stub cannot perform.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+}
+
+/// Parsed HLO module (never constructible in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parsing HLO text {path:?}")))
+    }
+}
+
+/// An XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Result buffer handle from an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.5f32, -2.0, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert_eq!(lit.shape(), &[3]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 7]).is_err()
+        );
+    }
+
+    #[test]
+    fn pjrt_entry_points_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("PJRT runtime unavailable"), "{e}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
