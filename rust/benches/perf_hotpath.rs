@@ -1,7 +1,9 @@
 //! L3 hot-path micro-benchmarks (the §Perf measurement harness).
 //!
 //! Measures the wallclock cost of the Rust-side hot paths: the functional
-//! LUT-GEMV engine (scalar and tiled/threaded backend at batch 1/8/32),
+//! LUT-GEMV engine at batch 1/8/32 in four variants (scalar-i64 vs
+//! lane-i32 accumulation × serial vs persistent-pool execution), the
+//! worker-pool dispatch itself (cold spawn vs warm persistent workers),
 //! the cycle model, the PRT, quant pack/unpack, Algorithm 1 conversion,
 //! the pipeline simulator, and the coordinator iteration loop (mock and
 //! LUT-GEMV engines). Results feed EXPERIMENTS.md §Perf before/after and
@@ -11,6 +13,7 @@
 //! Run: cargo bench --bench perf_hotpath
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use sail::coordinator::{Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request};
 use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
@@ -55,46 +58,71 @@ fn main() {
         ));
     }
 
-    // --- functional LUT-GEMV engine: scalar vs tiled backend --------------
-    let eng = LutGemvEngine::new(wt, 4);
+    // --- worker pool dispatch: cold spawn vs warm persistent workers -----
+    let pool = Arc::new(WorkerPool::auto());
+    let threads = pool.threads();
+    results.push(time_fn(
+        &format!("WorkerPool cold spawn+dispatch x{threads}T"),
+        opts,
+        || {
+            let p = WorkerPool::new(threads);
+            p.run(threads, |i| i)
+        },
+    ));
+    results.push(time_fn(
+        &format!("WorkerPool warm dispatch x{threads}T"),
+        BenchOpts { batch: 16, ..opts },
+        || pool.run(threads, |i| i),
+    ));
+
+    // --- functional LUT-GEMV engine -----------------------------------------
+    // Four variants per batch size: {scalar-i64, lane-i32} accumulation ×
+    // {serial, persistent pool} execution. The scalar×serial row is the
+    // PR-1 kernel; lane×pool is the full PR-2 hot path.
+    let mut eng = LutGemvEngine::new(wt, 4);
     let x: Vec<f32> = (0..1024).map(|_| prng.normal() as f32).collect();
     let qx = QuantizedVector::quantize(&x);
     let mac_count = (1024 * 1024) as f64;
     let serial = WorkerPool::serial();
-    let pool = WorkerPool::auto();
     let mut out = GemvOutput::new();
-    let mut scalar_macs = BTreeMap::new();
-    let mut tiled_macs = BTreeMap::new();
+    let mut variant_macs: BTreeMap<(usize, &str), f64> = BTreeMap::new();
     for batch in [1usize, 8, 32] {
         let xs: Vec<QuantizedVector> = (0..batch).map(|_| qx.clone()).collect();
-        let r = time_throughput(
-            &format!("LutGemvEngine 1024x1024 b{batch} scalar (MACs/s)"),
-            BenchOpts { batch: 1, ..opts },
-            batch as f64 * mac_count,
-            || eng.gemv_batch_into(&xs, &serial, &mut out),
-        );
-        scalar_macs.insert(batch, r.items_per_sec());
-        results.push(r);
-        let r = time_throughput(
-            &format!("LutGemvEngine 1024x1024 b{batch} tiled x{}T (MACs/s)", pool.threads()),
-            BenchOpts { batch: 1, ..opts },
-            batch as f64 * mac_count,
-            || eng.gemv_batch_into(&xs, &pool, &mut out),
-        );
-        tiled_macs.insert(batch, r.items_per_sec());
-        results.push(r);
+        for (label, force_scalar, threaded) in [
+            ("scalar-i64 serial", true, false),
+            ("lane-i32 serial", false, false),
+            ("scalar-i64 pool", true, true),
+            ("lane-i32 pool", false, true),
+        ] {
+            eng.force_scalar_accum = force_scalar;
+            let run_pool: &WorkerPool = if threaded { &pool } else { &serial };
+            let suffix = if threaded { format!(" x{threads}T") } else { String::new() };
+            let r = time_throughput(
+                &format!("LutGemvEngine 1024x1024 b{batch} {label}{suffix} (MACs/s)"),
+                BenchOpts { batch: 1, ..opts },
+                batch as f64 * mac_count,
+                || eng.gemv_batch_into(&xs, run_pool, &mut out),
+            );
+            variant_macs.insert((batch, label), r.items_per_sec());
+            results.push(r);
+        }
     }
+    eng.force_scalar_accum = false;
 
-    // Bit-exactness of the tiled path vs scalar vs the naive reference, at
-    // the acceptance shape (1024×1024 Q4, batch 8).
+    // Bit-exactness of every path vs the scalar reference, at the
+    // acceptance shape (1024×1024 Q4, batch 8).
     let xs8: Vec<QuantizedVector> = (0..8).map(|_| qx.clone()).collect();
-    let (scalar_out, _) = eng.gemv_batch(&xs8);
+    eng.force_scalar_accum = true;
+    let (scalar_out, scalar_stats) = eng.gemv_batch(&xs8);
+    eng.force_scalar_accum = false;
+    let (lane_out, lane_stats) = eng.gemv_batch(&xs8);
     let mut pooled_out = GemvOutput::new();
-    eng.gemv_batch_into(&xs8, &pool, &mut pooled_out);
-    let mut bit_exact = pooled_out == scalar_out;
+    let pooled_stats = eng.gemv_batch_into(&xs8, &pool, &mut pooled_out);
+    let mut bit_exact = lane_out == scalar_out && lane_stats == scalar_stats;
+    bit_exact &= pooled_out == lane_out && pooled_stats == lane_stats;
     let want = reference_gemv(eng.weights(), &qx);
     bit_exact &= scalar_out.row(0) == want.as_slice();
-    assert!(bit_exact, "tiled backend diverged from scalar/reference");
+    assert!(bit_exact, "lane/pooled backend diverged from scalar/reference");
 
     // --- cycle model (simulator inner loop) -------------------------------
     let gm = GemvCycleModel::prototype(QuantLevel::Q4, 4);
@@ -163,12 +191,13 @@ fn main() {
     }));
 
     // --- coordinator loop on the real LUT-GEMV decode path ---------------------
+    // One persistent shared pool serves every per-iteration engine.
     results.push(time_fn(
-        &format!("coordinator 16 reqs b4 (lut-gemv x{}T)", pool.threads()),
+        &format!("coordinator 16 reqs b4 (lut-gemv x{threads}T)"),
         opts,
         || {
             let engine = LutGemvServeEngine::random(
-                9, 256, 128, QuantLevel::Q4, 32, 4, 4, 256, pool,
+                9, 256, 128, QuantLevel::Q4, 32, 4, 4, 256, Arc::clone(&pool),
             );
             let mut b = Batcher::new(engine, BatcherConfig::default());
             for id in 0..16u64 {
@@ -182,17 +211,27 @@ fn main() {
     for r in &results {
         println!("{}", r.report());
     }
-    let speedup_b8 = tiled_macs[&8] / scalar_macs[&8];
+    let speedup_lane_b8 =
+        variant_macs[&(8, "lane-i32 serial")] / variant_macs[&(8, "scalar-i64 serial")];
+    let speedup_lane_b32 =
+        variant_macs[&(32, "lane-i32 serial")] / variant_macs[&(32, "scalar-i64 serial")];
+    let speedup_b8 =
+        variant_macs[&(8, "lane-i32 pool")] / variant_macs[&(8, "scalar-i64 serial")];
     println!(
-        "\ntiled backend speedup over scalar (1024x1024 Q4, b8, {} threads): {:.2}x, bit-exact: {}",
-        pool.threads(),
-        speedup_b8,
-        bit_exact
+        "\nlane-i32 over scalar-i64 (serial, 1024x1024 Q4): {speedup_lane_b8:.2}x @ b8, \
+         {speedup_lane_b32:.2}x @ b32"
+    );
+    println!(
+        "lane-i32 pool over scalar-i64 serial (b8, {threads} threads): {speedup_b8:.2}x, \
+         bit-exact: {bit_exact}"
     );
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
-    std::fs::write(path, render_json(&results, pool.threads(), speedup_b8, bit_exact))
-        .expect("writing BENCH_hotpath.json");
+    std::fs::write(
+        path,
+        render_json(&results, threads, speedup_b8, speedup_lane_b8, speedup_lane_b32, bit_exact),
+    )
+    .expect("writing BENCH_hotpath.json");
     println!("persisted {} results to {path}", results.len());
 }
 
@@ -200,12 +239,16 @@ fn render_json(
     results: &[BenchResult],
     threads: usize,
     speedup_b8: f64,
+    speedup_lane_b8: f64,
+    speedup_lane_b32: f64,
     bit_exact: bool,
 ) -> String {
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
     root.insert("speedup_b8_tiled_vs_scalar".to_string(), Json::Num(speedup_b8));
+    root.insert("speedup_b8_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b8));
+    root.insert("speedup_b32_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b32));
     root.insert("bit_exact_vs_reference".to_string(), Json::Bool(bit_exact));
     root.insert(
         "results".to_string(),

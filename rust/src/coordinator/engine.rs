@@ -11,6 +11,8 @@
 //!   slot/KV semantics, for property-testing batching invariants without
 //!   any compute.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::lutgemv::engine::GemvStats;
@@ -98,9 +100,14 @@ impl DecodeEngine for PjrtEngine {
 ///
 /// Because the tiled backend is bit-exact at every thread count, token
 /// streams are reproducible across pool sizes — property-tested below.
+///
+/// The pool is `Arc`-shared: several engines (several models, or several
+/// shards of one model) can serve concurrently off one process-wide set of
+/// persistent workers instead of each spawning its own
+/// (`tests/shared_pool_serving.rs` pins down isolation and determinism).
 pub struct LutGemvServeEngine {
     gemv: LutGemvEngine,
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
     /// Reused flat logits buffer (no allocation per iteration).
     logits: GemvOutput,
     /// Per-slot hidden state, `[batch * hidden]` (the slot-keyed state the
@@ -115,8 +122,14 @@ pub struct LutGemvServeEngine {
 
 impl LutGemvServeEngine {
     /// Wrap a LUT-GEMV engine whose weights are `[vocab, hidden]`
-    /// (transposed layout, as `LutGemvEngine` stores them).
-    pub fn new(gemv: LutGemvEngine, batch: usize, max_context: usize, pool: WorkerPool) -> Self {
+    /// (transposed layout, as `LutGemvEngine` stores them). `pool` may be
+    /// shared with other engines.
+    pub fn new(
+        gemv: LutGemvEngine,
+        batch: usize,
+        max_context: usize,
+        pool: Arc<WorkerPool>,
+    ) -> Self {
         assert!(batch > 0);
         let hidden = vec![0.0f32; batch * gemv.k()];
         LutGemvServeEngine {
@@ -143,7 +156,7 @@ impl LutGemvServeEngine {
         nbw: u32,
         batch: usize,
         max_context: usize,
-        pool: WorkerPool,
+        pool: Arc<WorkerPool>,
     ) -> Self {
         let mut prng = crate::util::Prng::new(seed);
         let w: Vec<f32> = (0..vocab * hidden).map(|_| prng.normal() as f32).collect();
@@ -163,6 +176,12 @@ impl LutGemvServeEngine {
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
         z ^= z >> 31;
         ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+    }
+
+    /// The worker pool this engine dispatches on (shareable with other
+    /// engines via `Arc::clone`).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     fn argmax(row: &[f32]) -> i32 {
@@ -318,7 +337,7 @@ mod tests {
             4,                // nbw
             batch,
             64,               // max context
-            WorkerPool::new(threads),
+            WorkerPool::shared(threads),
         )
     }
 

@@ -8,9 +8,10 @@
 //! Layer map (see DESIGN.md):
 //! - **Substrates**: [`quant`], [`isa`], [`csram`], [`typeconv`], [`arch`]
 //! - **Core contribution**: [`lutgemv`] (LUT-based GEMV + Pattern Reuse
-//!   Table, executed by a tiled thread-parallel backend over
-//!   [`runtime::WorkerPool`] with bit-exact outputs at every thread
-//!   count), [`sim`] (tensor-level scheduling + ping-pong pipeline)
+//!   Table, executed by a tiled backend with lane-parallel i32 plane
+//!   accumulation over the persistent shared [`runtime::WorkerPool`],
+//!   bit-exact at every thread count), [`sim`] (tensor-level scheduling +
+//!   ping-pong pipeline)
 //! - **Evaluation substrate**: [`baselines`] (ARM / AMX / GPU / Neural
 //!   Cache models), [`model`] (transformer shape inventory), [`cost`]
 //!   (tokens-per-dollar and overhead accounting)

@@ -11,17 +11,25 @@
 //! Execution model (§III-C, 16 thread-pipelines in the paper's figures):
 //! the N output columns are cut into [`LutGemvEngine::tile_cols`]-wide
 //! tiles; each tile runs the allocation-free kernel in
-//! [`super::tile`] with private scratch, fanned out across a
-//! [`crate::runtime::WorkerPool`]. Because every column's integer
-//! accumulation order is fixed and float scaling happens per column,
-//! outputs and [`GemvStats`] are bit-identical at every thread count —
-//! parallelism is an execution detail, not a numerics change.
+//! [`super::tile`] with arena-recycled scratch, fanned out across a
+//! persistent [`crate::runtime::WorkerPool`]. Because every column's
+//! integer accumulation order is fixed and float scaling happens per
+//! column, outputs and [`GemvStats`] are bit-identical at every thread
+//! count — parallelism is an execution detail, not a numerics change.
+//! Within each scale group the kernel accumulates on the lane-parallel
+//! `i32` path of [`super::planes`] whenever the per-group range proof
+//! holds (it always does for realistic shapes), falling back to `i64`
+//! otherwise — also invisible in the output, by construction and by the
+//! conformance suite (`tests/plane_conformance.rs`).
 //!
 //! Two's-complement bit-serial handling: for 8-bit activations the bit-plane
 //! weight of plane b is `2^b` for b < 7 and `−2^7` for the sign plane, so
 //! the engine adds the low planes' lookups and subtracts the sign plane's.
 
-use super::tile::{run_tile, GemvOutput, TileArgs, TileScratch};
+use std::sync::{Arc, Mutex};
+
+use super::planes;
+use super::tile::{run_tile, GemvOutput, ScratchArena, TileArgs};
 use crate::quant::{QuantizedMatrix, QuantizedVector};
 use crate::runtime::WorkerPool;
 
@@ -54,20 +62,108 @@ impl std::ops::AddAssign for GemvStats {
 pub struct LutGemvEngine {
     /// Quantized weights, stored transposed (`[N, K]` row-major) so that an
     /// output column's basis weights are contiguous — the layout the
-    /// address hasher stripes across cache slices.
-    wt: QuantizedMatrix,
+    /// address hasher stripes across cache slices. `Arc`-held because tile
+    /// jobs on persistent pool workers share it without borrowing.
+    wt: Arc<QuantizedMatrix>,
     nbw: u32,
     /// Enable the Pattern Reuse Table (§III-D).
     pub use_prt: bool,
+    /// PRT entries per DFM (paper: 32). Tunable so DFM sizing experiments
+    /// — and the generational-reclaim tests at capacity 1–2 — run on the
+    /// real engine path.
+    pub prt_capacity: usize,
+    /// Disable the lane-parallel i32 accumulation and force the i64
+    /// scalar path everywhere — the reference side of the conformance
+    /// suite and the "before" side of the §Perf lane benches.
+    pub force_scalar_accum: bool,
     /// Output columns per tile handed to one worker. The default (64)
     /// keeps a tile's scratch (K×i32 weight row + LUT + accumulators)
     /// L1-resident while giving the pool enough tiles to balance; tests
     /// shrink it to force multi-tile execution on tiny matrices.
     pub tile_cols: usize,
+    /// Per-(column, scale-group) `Σ|w|` — the range-proof input — indexed
+    /// `[col * groups_per_row + g]`. Depends only on the immutable
+    /// weights, so it is computed once here instead of on every call
+    /// inside the hot column loop.
+    group_abs_sums: Arc<Vec<u64>>,
+    /// Recycled per-tile scratch + tile output buffers (see
+    /// [`ScratchArena`]); steady-state GEMV never allocates these.
+    arena: Arc<ScratchArena>,
+    /// Recycled per-call pattern/scale buffers, recovered from the call
+    /// context after every dispatch. A small stack (not a single slot) so
+    /// concurrent `gemv_batch_into` calls on one shared engine each get a
+    /// reusable set instead of racing for one and dropping the loser's.
+    call_buffers: Mutex<Vec<CallBuffers>>,
+}
+
+#[derive(Default)]
+struct CallBuffers {
+    patterns: Vec<u32>,
+    x_scales: Vec<f32>,
 }
 
 /// Default column-tile width (see [`LutGemvEngine::tile_cols`]).
 pub const DEFAULT_TILE_COLS: usize = 64;
+
+/// Default Pattern Reuse Table capacity (paper §III-D: 32 entries per DFM).
+pub const DEFAULT_PRT_CAPACITY: usize = 32;
+
+/// Everything one `gemv_batch_into` call shares with its tile jobs. Owned
+/// (`'static`) so jobs can run on persistent pool workers without
+/// borrowing from the caller; the big buffers inside are recycled — the
+/// engine recovers them via `Arc::try_unwrap` once every tile reported.
+struct GemvCall {
+    wt: Arc<QuantizedMatrix>,
+    group_abs_sums: Arc<Vec<u64>>,
+    arena: Arc<ScratchArena>,
+    nbw: u32,
+    use_prt: bool,
+    prt_capacity: usize,
+    force_scalar_accum: bool,
+    patterns: Vec<u32>,
+    x_scales: Vec<f32>,
+    act_bits: usize,
+    batch: usize,
+    tile_cols: usize,
+    n: usize,
+    k: usize,
+}
+
+/// One tile's report back to the dispatcher. The output buffer returns to
+/// the arena after the engine scatters it.
+struct TileReport {
+    col_start: usize,
+    col_end: usize,
+    out: Vec<f32>,
+    stats: GemvStats,
+}
+
+/// The per-tile job body (stateless; all inputs come through the call
+/// context, as the persistent pool requires).
+fn tile_job(call: &GemvCall, t: usize) -> TileReport {
+    let col_start = t * call.tile_cols;
+    let col_end = (col_start + call.tile_cols).min(call.n);
+    let width = col_end - col_start;
+    let mut scratch =
+        call.arena.checkout_scratch(call.k, call.nbw, call.batch, call.prt_capacity);
+    let mut out = call.arena.checkout_out(call.batch * width);
+    let args = TileArgs {
+        wt: &call.wt,
+        group_abs_sums: &call.group_abs_sums,
+        nbw: call.nbw,
+        use_prt: call.use_prt,
+        force_scalar_accum: call.force_scalar_accum,
+        patterns: &call.patterns,
+        act_bits: call.act_bits,
+        batch: call.batch,
+        x_scales: &call.x_scales,
+        col_start,
+        col_end,
+    };
+    let stats = run_tile(&args, &mut scratch, &mut out);
+    call.arena.checkin_scratch(scratch);
+    TileReport { col_start, col_end, out, stats }
+}
 
 impl LutGemvEngine {
     /// Build from a transposed quantized matrix (`wt` is `[N, K]`).
@@ -80,7 +176,29 @@ impl LutGemvEngine {
             nbw,
             wt.group_size
         );
-        LutGemvEngine { wt, nbw, use_prt: false, tile_cols: DEFAULT_TILE_COLS }
+        // One O(N·K) pass at construction: per-(col, group) Σ|w| for the
+        // lane range proof, so the hot loop only compares against it.
+        let groups_per_row = wt.cols / wt.group_size;
+        let mut group_abs_sums = vec![0u64; wt.rows * groups_per_row];
+        let mut row = vec![0i32; wt.cols];
+        for r in 0..wt.rows {
+            wt.packed().unpack_range_into(r * wt.cols, &mut row);
+            for g in 0..groups_per_row {
+                group_abs_sums[r * groups_per_row + g] =
+                    planes::abs_weight_sum(&row[g * wt.group_size..(g + 1) * wt.group_size]);
+            }
+        }
+        LutGemvEngine {
+            wt: Arc::new(wt),
+            group_abs_sums: Arc::new(group_abs_sums),
+            nbw,
+            use_prt: false,
+            prt_capacity: DEFAULT_PRT_CAPACITY,
+            force_scalar_accum: false,
+            tile_cols: DEFAULT_TILE_COLS,
+            arena: Arc::new(ScratchArena::new()),
+            call_buffers: Mutex::new(Vec::new()),
+        }
     }
 
     pub fn n(&self) -> usize {
@@ -99,6 +217,12 @@ impl LutGemvEngine {
         &self.wt
     }
 
+    /// The scratch/output recycling arena (tests assert steady-state
+    /// buffer reuse through its counters).
+    pub fn scratch_arena(&self) -> &ScratchArena {
+        &self.arena
+    }
+
     /// Compute `y = x · W` for a batch of activation vectors, exactly,
     /// into a caller-owned [`GemvOutput`] (reused across calls: the serving
     /// loop never reallocates the logits buffer). Column tiles fan out
@@ -111,12 +235,12 @@ impl LutGemvEngine {
     ///
     /// Hot-path notes (§Perf): activation bit patterns depend only on
     /// (chunk, plane, batch item) — *not* on the output column — so they
-    /// are extracted once up front instead of N times; each tile's kernel
-    /// ([`run_tile`]) unpacks weight codes word-at-a-time and builds LUT
-    /// entries into per-tile scratch, so the N×chunks loop is
-    /// allocation-free. The serial kernel reaches >1e8 MACs/s (from
-    /// ~2.1e7 pre-optimization); the tiled backend scales that by the
-    /// worker count (see `benches/perf_hotpath.rs` / BENCH_hotpath.json).
+    /// are extracted once up front instead of N times; each group
+    /// accumulates on the i32 lane kernels when its range proof holds
+    /// (`super::planes`); tile scratch and tile outputs are recycled
+    /// through the engine's [`ScratchArena`], and the pattern/scale
+    /// buffers are recovered from the call context after every dispatch —
+    /// so a steady-state call reuses every large buffer it touches.
     pub fn gemv_batch_into(
         &self,
         xs: &[QuantizedVector],
@@ -136,6 +260,10 @@ impl LutGemvEngine {
             assert_eq!(x.len(), k, "activation length mismatch");
         }
         let act_bits = xs[0].bits as usize;
+        assert!(
+            (1..=8).contains(&act_bits),
+            "activation width {act_bits} outside the bit-serial range"
+        );
         for x in xs {
             assert_eq!(x.bits as usize, act_bits, "mixed activation widths in one batch");
         }
@@ -147,7 +275,10 @@ impl LutGemvEngine {
         let n_chunks = groups * chunks_per_group;
 
         // Pattern table: patterns[(chunk * act_bits + plane) * batch + bi].
-        let mut patterns = vec![0u32; n_chunks * act_bits * batch];
+        // The buffers come from (and return to) the recycled call storage.
+        let CallBuffers { mut patterns, mut x_scales } =
+            self.call_buffers.lock().unwrap().pop().unwrap_or_default();
+        patterns.resize(n_chunks * act_bits * batch, 0);
         for chunk in 0..n_chunks {
             let g = chunk / chunks_per_group;
             let c = chunk % chunks_per_group;
@@ -159,46 +290,56 @@ impl LutGemvEngine {
                 }
             }
         }
-        let x_scales: Vec<f32> = xs.iter().map(|x| x.scale).collect();
+        x_scales.clear();
+        x_scales.extend(xs.iter().map(|x| x.scale));
 
         let tile_cols = self.tile_cols.max(1);
         let n_tiles = n.div_ceil(tile_cols);
-        let tiles = pool.run(n_tiles, |t| {
-            let col_start = t * tile_cols;
-            let col_end = (col_start + tile_cols).min(n);
-            let mut scratch = TileScratch::new(k, self.nbw, batch, col_end - col_start);
-            let args = TileArgs {
-                wt: &self.wt,
-                nbw: self.nbw,
-                use_prt: self.use_prt,
-                patterns: &patterns,
-                act_bits,
-                batch,
-                x_scales: &x_scales,
-                col_start,
-                col_end,
-            };
-            let stats = run_tile(&args, &mut scratch);
-            (col_start, col_end, scratch.into_out(), stats)
+        let ctx = Arc::new(GemvCall {
+            wt: Arc::clone(&self.wt),
+            group_abs_sums: Arc::clone(&self.group_abs_sums),
+            arena: Arc::clone(&self.arena),
+            nbw: self.nbw,
+            use_prt: self.use_prt,
+            prt_capacity: self.prt_capacity.max(1),
+            force_scalar_accum: self.force_scalar_accum,
+            patterns,
+            x_scales,
+            act_bits,
+            batch,
+            tile_cols,
+            n,
+            k,
         });
+        let tiles = pool.run_ctx(&ctx, n_tiles, tile_job);
 
         // Scatter tile outputs into the flat buffer and sum stats, in tile
-        // order (deterministic; the sums are order-independent anyway).
+        // order (deterministic; the sums are order-independent anyway),
+        // returning each tile buffer to the arena once copied.
         let mut stats = GemvStats::default();
         let data = out.data_mut();
-        for (col_start, col_end, tile_out, tile_stats) in tiles {
-            stats += tile_stats;
-            let width = col_end - col_start;
+        for report in tiles {
+            stats += report.stats;
+            let width = report.col_end - report.col_start;
             for bi in 0..batch {
-                data[bi * n + col_start..bi * n + col_end]
-                    .copy_from_slice(&tile_out[bi * width..(bi + 1) * width]);
+                data[bi * n + report.col_start..bi * n + report.col_end]
+                    .copy_from_slice(&report.out[bi * width..(bi + 1) * width]);
             }
+            self.arena.checkin_out(report.out);
+        }
+
+        // Every tile job dropped its context clone before reporting, so
+        // the unwrap is deterministic and the call buffers are recovered
+        // for the next dispatch.
+        if let Ok(call) = Arc::try_unwrap(ctx) {
+            let bufs = CallBuffers { patterns: call.patterns, x_scales: call.x_scales };
+            self.call_buffers.lock().unwrap().push(bufs);
         }
         stats
     }
 
     /// Serial convenience wrapper: allocate a fresh output and run on the
-    /// caller's thread. This is the scalar reference the tiled/threaded
+    /// caller's thread. This is the serial reference the tiled/threaded
     /// path is property-tested against.
     pub fn gemv_batch(&self, xs: &[QuantizedVector]) -> (GemvOutput, GemvStats) {
         let mut out = GemvOutput::new();
@@ -322,6 +463,28 @@ mod tests {
     }
 
     #[test]
+    fn tiny_prt_capacities_stay_exact_and_consistent() {
+        // DFM sizing is tunable; capacities 1 and 2 exercise LRU eviction
+        // and generational reclaim on the real engine path (a 1-entry PRT
+        // evicts on every distinct pattern and reclaims on every flush).
+        let mut prng = Prng::new(117);
+        let (wt, xs) = random_setup(&mut prng, 6, 64, QuantLevel::Q4, 32);
+        let mut eng = LutGemvEngine::new(wt, 3);
+        let (plain, s0) = eng.gemv_batch(&xs);
+        eng.use_prt = true;
+        let mut hit_counts = Vec::new();
+        for capacity in [1usize, 2, 32] {
+            eng.prt_capacity = capacity;
+            let (ys, s) = eng.gemv_batch(&xs);
+            assert_eq!(ys, plain, "capacity={capacity} changed results");
+            assert_eq!(s.lut_reads + s.prt_hits, s0.lut_reads, "capacity={capacity} lost");
+            hit_counts.push(s.prt_hits);
+        }
+        // A larger table can only hit more (same access stream, LRU).
+        assert!(hit_counts[0] <= hit_counts[2], "hits: {hit_counts:?}");
+    }
+
+    #[test]
     fn lut_build_count_amortized_over_batch() {
         let mut prng = Prng::new(107);
         let k = 64;
@@ -416,6 +579,51 @@ mod tests {
             let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
             assert_eq!(out, serial, "threads={threads}");
             assert_eq!(stats, serial_stats, "stats drift at threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scratch_arena_reuses_buffers_after_warmup() {
+        // Steady-state GEMV must not create new scratch or tile-output
+        // buffers. On the serial pool checkout order is deterministic, so
+        // the creation counters are exact: one scratch (checked out and
+        // back in per tile) and one output buffer per tile (all live until
+        // the final scatter). On a threaded pool the scratch count is
+        // bounded by the number of chunk jobs.
+        let mut prng = Prng::new(119);
+        let (wt, xs) = random_setup(&mut prng, 40, 64, QuantLevel::Q4, 32);
+        let mut eng = LutGemvEngine::new(wt, 4);
+        eng.tile_cols = 8; // 5 tiles per call
+        let serial = WorkerPool::serial();
+        let mut out = GemvOutput::new();
+        let baseline = eng.gemv_batch_into(&xs, &serial, &mut out);
+        assert_eq!(eng.scratch_arena().scratches_created(), 1);
+        assert_eq!(eng.scratch_arena().out_bufs_created(), 5);
+        for _ in 0..10 {
+            let stats = eng.gemv_batch_into(&xs, &serial, &mut out);
+            assert_eq!(stats, baseline);
+        }
+        assert_eq!(
+            (eng.scratch_arena().scratches_created(), eng.scratch_arena().out_bufs_created()),
+            (1, 5),
+            "steady-state serial GEMV allocated fresh scratch"
+        );
+        // Threaded calls borrow from the same arena; at most one extra
+        // scratch per concurrent chunk job (5 tiles / 4 workers → ≤ 3
+        // chunks) and no new output buffers (5 are already pooled). After
+        // every call each buffer is back in the arena.
+        let pool = WorkerPool::new(4);
+        for _ in 0..10 {
+            let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+            assert_eq!(stats, baseline);
+            let created = (
+                eng.scratch_arena().scratches_created(),
+                eng.scratch_arena().out_bufs_created(),
+            );
+            assert!(created.0 <= 3, "scratches over chunk-job bound: {created:?}");
+            assert_eq!(created.1, 5, "threaded call allocated output buffers");
+            let (scratches, outs) = eng.scratch_arena().pooled();
+            assert_eq!((scratches as u64, outs as u64), created, "buffers leaked in flight");
         }
     }
 

@@ -14,11 +14,14 @@
 //! - [`engine`]: the exact functional implementation (bit-exact against the
 //!   naive integer dot product — the repository's core correctness anchor,
 //!   mirrored by the Pallas kernel on the Python side). Execution is tiled
-//!   and thread-parallel: column tiles fan out over the
+//!   and thread-parallel: column tiles fan out over the persistent
 //!   [`crate::runtime::WorkerPool`], with outputs/stats bit-identical at
 //!   every thread count;
-//! - [`tile`]: the per-tile kernel and scratch ([`tile::GemvOutput`] is the
-//!   flat row-major batch-output buffer the serving loop reuses);
+//! - [`tile`]: the per-tile kernel, its arena-recycled scratch
+//!   ([`tile::ScratchArena`]), and the flat row-major batch-output buffer
+//!   ([`tile::GemvOutput`]) the serving loop reuses;
+//! - [`planes`]: the lane-parallel i32 plane-accumulation kernels and the
+//!   per-group range proof that makes narrowing from i64 provably exact;
 //! - [`pattern`]: the Pattern Reuse Table (§III-D) that short-circuits
 //!   repeated activation bit patterns (O(1) generation-counter flush);
 //! - [`cycles`]: the C-SRAM cycle model for a tile GEMV, the quantity the
@@ -30,9 +33,10 @@ pub mod bitserial;
 pub mod cycles;
 pub mod engine;
 pub mod pattern;
+pub mod planes;
 pub mod tile;
 
 pub use cycles::{GemvCycleModel, GemvCycles};
 pub use engine::{GemvStats, LutGemvEngine};
 pub use pattern::PatternReuseTable;
-pub use tile::GemvOutput;
+pub use tile::{GemvOutput, ScratchArena};

@@ -249,6 +249,50 @@ mod tests {
     }
 
     #[test]
+    fn capacity_one_evicts_and_reclaims_generationally() {
+        // A 1-entry DFM: every distinct pattern evicts the previous one,
+        // and after a flush the single stale slot must be reclaimed by
+        // insert rather than treated as live.
+        let mut prt = PatternReuseTable::new(1);
+        assert_eq!(prt.capacity(), 1);
+        prt.insert(1, 10);
+        assert_eq!(prt.lookup(1), Some(10));
+        prt.insert(2, 20); // evicts 1 (only slot)
+        assert_eq!(prt.lookup(1), None);
+        assert_eq!(prt.lookup(2), Some(20));
+        for gen in 0..100i64 {
+            prt.flush();
+            // Generational reclaim triggers on every round: the slot holds
+            // a stale entry from the previous generation.
+            assert_eq!(prt.lookup(7), None, "gen {gen}: stale value survived");
+            prt.insert(7, gen);
+            assert_eq!(prt.lookup(7), Some(gen), "gen {gen}");
+        }
+    }
+
+    #[test]
+    fn capacity_two_mixes_eviction_and_generational_reclaim() {
+        let mut prt = PatternReuseTable::new(2);
+        prt.insert(1, 10);
+        prt.insert(2, 20);
+        prt.flush();
+        // One insert reclaims a stale slot; the other stale slot must
+        // still read as empty, not as entry 1 or 2.
+        prt.insert(3, 30);
+        assert_eq!(prt.lookup(1), None);
+        assert_eq!(prt.lookup(2), None);
+        assert_eq!(prt.lookup(3), Some(30));
+        // Fill the second (lazily reclaimed) slot, then force LRU among
+        // the two live entries of this generation.
+        prt.insert(4, 40);
+        let _ = prt.lookup(3); // 3 most-recent
+        prt.insert(5, 50); // evicts 4
+        assert_eq!(prt.lookup(3), Some(30));
+        assert_eq!(prt.lookup(4), None);
+        assert_eq!(prt.lookup(5), Some(50));
+    }
+
+    #[test]
     fn insert_updates_in_place() {
         let mut prt = PatternReuseTable::new(4);
         prt.insert(7, 1);

@@ -1,0 +1,221 @@
+//! Lane-parallel plane accumulation for the LUT-GEMV tile kernel.
+//!
+//! The `planes × batch` inner loop of [`super::tile::run_tile`] spends its
+//! time doing `acc[bi] ± (lut_entry << plane)` integer adds. The paper's
+//! §III-C batching argument assumes this loop runs at vector-unit speed;
+//! with `i64` accumulators the compiler emits at most 2-wide SIMD, so this
+//! module provides the same accumulation over **`i32` accumulators in
+//! fixed-width lanes** ([`LANES`]) — a shape LLVM auto-vectorizes to
+//! 4/8/16-wide integer adds on SSE/AVX/NEON — plus the i64 scalar kernels
+//! the engine falls back to when narrowing is not provably safe.
+//!
+//! # Range proof
+//!
+//! Narrowing to `i32` is only sound if no intermediate accumulator value
+//! can leave the `i32` range. The engine proves this **per scale group**
+//! from the actual weights before entering the kernel:
+//!
+//! * every LUT entry is a subset sum of one chunk's basis weights, so
+//!   `|entry| ≤ Σ|w|` over that chunk;
+//! * each plane contributes `±(entry << plane)` with `plane < act_bits`,
+//!   so one chunk's total contribution is bounded by
+//!   `Σ|w|_chunk × (2^act_bits − 1)`;
+//! * summing over a group's chunks, every partial sum of the group
+//!   accumulator is bounded by `Σ|w|_group × (2^act_bits − 1)`.
+//!
+//! [`group_fits_i32`] checks that bound against `i32::MAX`. When it holds,
+//! every intermediate value fits `i32`, so the i32 and i64 accumulations
+//! compute the *same integer* and the final `acc as f32 × scales` output is
+//! bit-identical — property-tested against the forced-i64 path in
+//! `tests/plane_conformance.rs`, including shapes that sit exactly on the
+//! bound. When it fails (it takes a ~66K-element Q8 scale group at 8-bit
+//! activations to get there), the engine silently uses the i64 kernels.
+
+/// Accumulator lane width. Eight `i32` lanes fill one AVX2 register (or two
+/// NEON/SSE registers); the kernels below are written as fixed-`LANES`
+/// blocks over slices so the autovectorizer can prove the trip count.
+pub const LANES: usize = 8;
+
+/// Largest per-group `Σ|w|` for which i32 accumulation is provably safe at
+/// `act_bits`-bit activations (see the module docs for the derivation).
+#[inline]
+pub fn i32_safe_abs_weight_sum(act_bits: u32) -> u64 {
+    debug_assert!((1..=8).contains(&act_bits));
+    i32::MAX as u64 / ((1u64 << act_bits) - 1)
+}
+
+/// The per-group range proof: `true` iff a scale group whose basis weights
+/// have absolute sum `abs_weight_sum` can be accumulated in `i32` without
+/// any intermediate overflow, for `act_bits`-bit activations.
+#[inline]
+pub fn group_fits_i32(abs_weight_sum: u64, act_bits: u32) -> bool {
+    abs_weight_sum <= i32_safe_abs_weight_sum(act_bits)
+}
+
+/// Absolute sum of a group's basis weights — the quantity the range proof
+/// consumes, computed from the unpacked weight row.
+#[inline]
+pub fn abs_weight_sum(group: &[i32]) -> u64 {
+    group.iter().map(|&w| w.unsigned_abs() as u64).sum()
+}
+
+/// One definition for both accumulator widths — the lane blocking, sign
+/// handling, and tail logic live in exactly one place, so the i32 and i64
+/// paths cannot drift apart (the bit-identity contract depends on them
+/// reducing identically).
+macro_rules! lane_kernels {
+    ($pat_fn:ident, $val_fn:ident, $ty:ty) => {
+        #[doc = concat!(
+            "`acc[bi] ± (entries[patterns[bi]] << shift)` across the batch, `",
+            stringify!($ty),
+            "` lanes. `negate` selects the sign plane (two's-complement MSB weight)."
+        )]
+        #[inline]
+        pub(crate) fn $pat_fn(
+            entries: &[$ty],
+            patterns: &[u32],
+            shift: u32,
+            negate: bool,
+            acc: &mut [$ty],
+        ) {
+            debug_assert_eq!(patterns.len(), acc.len());
+            let sign: $ty = if negate { -1 } else { 1 };
+            let main = acc.len() - acc.len() % LANES;
+            let (acc_main, acc_tail) = acc.split_at_mut(main);
+            let (pat_main, pat_tail) = patterns.split_at(main);
+            for (a, p) in acc_main.chunks_exact_mut(LANES).zip(pat_main.chunks_exact(LANES)) {
+                for (ai, &pi) in a.iter_mut().zip(p) {
+                    *ai += sign * (entries[pi as usize] << shift);
+                }
+            }
+            for (ai, &pi) in acc_tail.iter_mut().zip(pat_tail) {
+                *ai += sign * (entries[pi as usize] << shift);
+            }
+        }
+
+        #[doc = concat!(
+            "`acc[bi] ± (values[bi] << shift)` across the batch, `",
+            stringify!($ty),
+            "` lanes — the plane kernel for values already resolved through the PRT."
+        )]
+        #[inline]
+        pub(crate) fn $val_fn(values: &[$ty], shift: u32, negate: bool, acc: &mut [$ty]) {
+            debug_assert_eq!(values.len(), acc.len());
+            let sign: $ty = if negate { -1 } else { 1 };
+            let main = acc.len() - acc.len() % LANES;
+            let (acc_main, acc_tail) = acc.split_at_mut(main);
+            let (val_main, val_tail) = values.split_at(main);
+            for (a, v) in acc_main.chunks_exact_mut(LANES).zip(val_main.chunks_exact(LANES)) {
+                for (ai, &vi) in a.iter_mut().zip(v) {
+                    *ai += sign * (vi << shift);
+                }
+            }
+            for (ai, &vi) in acc_tail.iter_mut().zip(val_tail) {
+                *ai += sign * (vi << shift);
+            }
+        }
+    };
+}
+
+lane_kernels!(accum_patterns_i32, accum_values_i32, i32);
+lane_kernels!(accum_patterns_i64, accum_values_i64, i64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn naive_patterns_i64(
+        entries: &[i64],
+        patterns: &[u32],
+        shift: u32,
+        negate: bool,
+        acc: &mut [i64],
+    ) {
+        for (a, &p) in acc.iter_mut().zip(patterns) {
+            let v = entries[p as usize] << shift;
+            if negate {
+                *a -= v;
+            } else {
+                *a += v;
+            }
+        }
+    }
+
+    #[test]
+    fn lane_kernels_match_naive_all_batch_sizes() {
+        let mut prng = Prng::new(17);
+        let nbw = 4u32;
+        for batch in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 32, 33] {
+            let entries64: Vec<i64> = (0..1 << nbw).map(|_| prng.signed_bits(12)).collect();
+            let entries32: Vec<i32> = entries64.iter().map(|&e| e as i32).collect();
+            let patterns: Vec<u32> =
+                (0..batch).map(|_| prng.gen_range(1 << nbw) as u32).collect();
+            let init: Vec<i64> = (0..batch).map(|_| prng.signed_bits(16)).collect();
+            // Value-kernel inputs: the same entries, pre-resolved.
+            let vals64: Vec<i64> = patterns.iter().map(|&p| entries64[p as usize]).collect();
+            let vals32: Vec<i32> = vals64.iter().map(|&v| v as i32).collect();
+            for shift in [0u32, 3, 7] {
+                for negate in [false, true] {
+                    let mut want: Vec<i64> = init.clone();
+                    naive_patterns_i64(&entries64, &patterns, shift, negate, &mut want);
+
+                    let mut got64: Vec<i64> = init.clone();
+                    accum_patterns_i64(&entries64, &patterns, shift, negate, &mut got64);
+                    assert_eq!(got64, want, "i64 patterns b{batch} s{shift} n{negate}");
+
+                    let mut got32: Vec<i32> = init.iter().map(|&a| a as i32).collect();
+                    accum_patterns_i32(&entries32, &patterns, shift, negate, &mut got32);
+                    let got32w: Vec<i64> = got32.iter().map(|&a| a as i64).collect();
+                    assert_eq!(got32w, want, "i32 patterns b{batch} s{shift} n{negate}");
+
+                    let mut gv64: Vec<i64> = init.clone();
+                    accum_values_i64(&vals64, shift, negate, &mut gv64);
+                    assert_eq!(gv64, want, "i64 values b{batch}");
+                    let mut gv32: Vec<i32> = init.iter().map(|&a| a as i32).collect();
+                    accum_values_i32(&vals32, shift, negate, &mut gv32);
+                    let gv32w: Vec<i64> = gv32.iter().map(|&a| a as i64).collect();
+                    assert_eq!(gv32w, want, "i32 values b{batch}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn range_proof_boundary_is_exact() {
+        for act_bits in [1u32, 2, 4, 8] {
+            let limit = i32_safe_abs_weight_sum(act_bits);
+            // The limit itself is safe, one past it is not.
+            assert!(group_fits_i32(limit, act_bits), "act_bits={act_bits}");
+            assert!(!group_fits_i32(limit + 1, act_bits), "act_bits={act_bits}");
+            // The proof bound really does keep the worst case inside i32.
+            assert!(limit * ((1u64 << act_bits) - 1) <= i32::MAX as u64);
+            assert!((limit + 1) * ((1u64 << act_bits) - 1) > i32::MAX as u64);
+        }
+        // 8-bit activations: (2^31 - 1) / 255.
+        assert_eq!(i32_safe_abs_weight_sum(8), 8_421_504);
+    }
+
+    #[test]
+    fn abs_weight_sum_handles_i32_min() {
+        assert_eq!(abs_weight_sum(&[i32::MIN, -1, 2]), (1u64 << 31) + 3);
+        assert_eq!(abs_weight_sum(&[]), 0);
+    }
+
+    #[test]
+    fn accumulation_at_proof_boundary_does_not_overflow_i32() {
+        // One chunk whose entries reach Σ|w| = limit, all 8 planes additive
+        // except the sign plane: the running i32 accumulator touches the
+        // proof bound without wrapping.
+        let act_bits = 8u32;
+        let limit = i32_safe_abs_weight_sum(act_bits) as i32;
+        let entries32 = vec![0i32, limit];
+        let patterns = vec![1u32; 4];
+        let mut acc = vec![0i32; 4];
+        for plane in 0..act_bits {
+            accum_patterns_i32(&entries32, &patterns, plane, plane == act_bits - 1, &mut acc);
+        }
+        // Σ_{p<7} limit·2^p − limit·2^7 = limit·(127 − 128) = −limit.
+        assert!(acc.iter().all(|&a| a == -limit));
+    }
+}

@@ -5,6 +5,16 @@
 //! [`TileScratch`], so the hot `columns × groups × chunks × planes × batch`
 //! loop is allocation-free and tiles can run concurrently on the
 //! [`crate::runtime::WorkerPool`] with nothing shared but read-only inputs.
+//! Scratch (and the tile output buffers) live in a per-engine
+//! [`ScratchArena`] and are recycled across calls, so steady-state GEMV
+//! reuses every large buffer instead of reallocating per tile.
+//!
+//! Per scale group the kernel picks one of two accumulation paths:
+//! the lane-parallel `i32` kernels in [`super::planes`] when the per-group
+//! range proof ([`super::planes::group_fits_i32`]) shows no intermediate
+//! sum can leave `i32`, else the full-width `i64` kernels. Both reduce the
+//! same integers in the same order, so the choice is invisible in the
+//! output — pinned down by `tests/plane_conformance.rs`.
 //!
 //! Determinism: a column's result depends only on the weights, the
 //! precomputed activation bit patterns, and the per-column accumulation
@@ -12,8 +22,12 @@
 //! tile — so tiled/threaded outputs are bit-identical to the serial ones
 //! (property-tested in `tests/tiled_parity.rs`).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
 use super::engine::GemvStats;
 use super::pattern::PatternReuseTable;
+use super::planes;
 use crate::csram::lut::Lut;
 use crate::quant::QuantizedMatrix;
 
@@ -84,8 +98,13 @@ impl GemvOutput {
 pub(crate) struct TileArgs<'a> {
     /// Transposed quantized weights (`[N, K]` row-major).
     pub wt: &'a QuantizedMatrix,
+    /// Per-(column, scale-group) `Σ|w|`, `[col * groups_per_row + g]` —
+    /// precomputed at engine construction for the lane range proof.
+    pub group_abs_sums: &'a [u64],
     pub nbw: u32,
     pub use_prt: bool,
+    /// Disable the i32 lane path (reference/conformance knob).
+    pub force_scalar_accum: bool,
     /// `patterns[(chunk * act_bits + plane) * batch + bi]`, precomputed
     /// once per call — patterns do not depend on the output column.
     pub patterns: &'a [u32],
@@ -98,8 +117,10 @@ pub(crate) struct TileArgs<'a> {
     pub col_end: usize,
 }
 
-/// Per-tile mutable state: one allocation set per tile, none inside the
-/// kernel loops.
+/// Per-tile mutable state: one buffer set per concurrently-running tile,
+/// recycled through the [`ScratchArena`] — nothing is allocated inside the
+/// kernel loops, and nothing is allocated at all once the arena is warm.
+#[derive(Debug)]
 pub(crate) struct TileScratch {
     /// Unpacked basis weights of the current column (K values).
     wrow: Vec<i32>,
@@ -107,10 +128,17 @@ pub(crate) struct TileScratch {
     basis: Vec<i64>,
     /// LUT entries for the current chunk (2^NBW subset sums).
     entries: Vec<i64>,
-    /// Per-batch-item integer accumulator for the current scale group.
+    /// The same entries narrowed to i32 for the lane path (valid only when
+    /// the group's range proof holds).
+    entries32: Vec<i32>,
+    /// Per-batch-item i64 accumulator for the current scale group.
     acc: Vec<i64>,
-    /// Tile output, `[batch, width]` row-major.
-    out: Vec<f32>,
+    /// Per-batch-item i32 accumulator (lane path).
+    acc32: Vec<i32>,
+    /// PRT-resolved values for one plane (i64 path).
+    vals: Vec<i64>,
+    /// PRT-resolved values for one plane (lane path).
+    vals32: Vec<i32>,
     /// This tile's Pattern Reuse Table (one per DFM in hardware; flushed on
     /// every LUT switch, so per-tile instances behave identically to a
     /// global one).
@@ -118,31 +146,132 @@ pub(crate) struct TileScratch {
 }
 
 impl TileScratch {
-    pub fn new(k: usize, nbw: u32, batch: usize, width: usize) -> Self {
-        TileScratch {
-            wrow: vec![0i32; k],
-            basis: vec![0i64; nbw as usize],
-            entries: vec![0i64; 1usize << nbw],
-            acc: vec![0i64; batch],
-            out: vec![0.0f32; batch * width],
-            prt: PatternReuseTable::new(32),
-        }
+    pub fn new(k: usize, nbw: u32, batch: usize, prt_capacity: usize) -> Self {
+        let mut s = TileScratch {
+            wrow: Vec::new(),
+            basis: Vec::new(),
+            entries: Vec::new(),
+            entries32: Vec::new(),
+            acc: Vec::new(),
+            acc32: Vec::new(),
+            vals: Vec::new(),
+            vals32: Vec::new(),
+            prt: PatternReuseTable::new(prt_capacity),
+        };
+        s.ensure(k, nbw, batch, prt_capacity);
+        s
     }
 
-    /// Surrender the tile output buffer.
-    pub fn into_out(self) -> Vec<f32> {
-        self.out
+    /// Resize every buffer for the given call shape, reusing capacity.
+    /// The PRT is rebuilt only if the configured DFM capacity changed.
+    pub fn ensure(&mut self, k: usize, nbw: u32, batch: usize, prt_capacity: usize) {
+        let n_entries = 1usize << nbw;
+        self.wrow.resize(k, 0);
+        self.basis.resize(nbw as usize, 0);
+        self.entries.resize(n_entries, 0);
+        self.entries32.resize(n_entries, 0);
+        self.acc.resize(batch, 0);
+        self.acc32.resize(batch, 0);
+        self.vals.resize(batch, 0);
+        self.vals32.resize(batch, 0);
+        if self.prt.capacity() != prt_capacity {
+            self.prt = PatternReuseTable::new(prt_capacity);
+        }
     }
 }
 
-/// Compute output columns `[col_start, col_end)` for the whole batch.
+/// Recycling pool for [`TileScratch`] and tile output buffers.
+///
+/// One arena per engine: tile jobs check a scratch out, run, and check it
+/// back in; tile outputs are checked out by jobs and returned by the
+/// engine after scattering into the caller's [`GemvOutput`]. The arena
+/// grows to the peak number of concurrently-live buffers (≈ worker count
+/// for scratches, tiles-per-call for outputs) and then stops allocating —
+/// the `*_created` counters let tests assert steady-state reuse.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    scratches: Mutex<Vec<TileScratch>>,
+    out_bufs: Mutex<Vec<Vec<f32>>>,
+    scratches_created: AtomicU64,
+    out_bufs_created: AtomicU64,
+}
+
+impl ScratchArena {
+    pub fn new() -> Self {
+        ScratchArena::default()
+    }
+
+    /// Total `TileScratch` instances ever created (not currently pooled —
+    /// ever). Flat across calls ⇒ steady-state scratch reuse.
+    pub fn scratches_created(&self) -> u64 {
+        self.scratches_created.load(Ordering::Relaxed)
+    }
+
+    /// Total tile output buffers ever created.
+    pub fn out_bufs_created(&self) -> u64 {
+        self.out_bufs_created.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently checked in (scratches, out_bufs) — equals the
+    /// created totals whenever no GEMV is in flight.
+    pub fn pooled(&self) -> (usize, usize) {
+        (self.scratches.lock().unwrap().len(), self.out_bufs.lock().unwrap().len())
+    }
+
+    pub(crate) fn checkout_scratch(
+        &self,
+        k: usize,
+        nbw: u32,
+        batch: usize,
+        prt_capacity: usize,
+    ) -> TileScratch {
+        let popped = self.scratches.lock().unwrap().pop();
+        match popped {
+            Some(mut s) => {
+                s.ensure(k, nbw, batch, prt_capacity);
+                s
+            }
+            None => {
+                self.scratches_created.fetch_add(1, Ordering::Relaxed);
+                TileScratch::new(k, nbw, batch, prt_capacity)
+            }
+        }
+    }
+
+    pub(crate) fn checkin_scratch(&self, s: TileScratch) {
+        self.scratches.lock().unwrap().push(s);
+    }
+
+    pub(crate) fn checkout_out(&self, len: usize) -> Vec<f32> {
+        let popped = self.out_bufs.lock().unwrap().pop();
+        let mut buf = popped.unwrap_or_else(|| {
+            self.out_bufs_created.fetch_add(1, Ordering::Relaxed);
+            Vec::new()
+        });
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    pub(crate) fn checkin_out(&self, buf: Vec<f32>) {
+        self.out_bufs.lock().unwrap().push(buf);
+    }
+}
+
+/// Compute output columns `[col_start, col_end)` for the whole batch into
+/// `out` (`[batch, width]` row-major).
 ///
 /// This is the former `LutGemvEngine::gemv_batch` column loop, restricted
 /// to a tile: per column it unpacks the K basis weights once, then per
 /// scale group builds each chunk's LUT and streams every activation
 /// bit-plane of every batch item through it (the §III-C reuse that makes
-/// batching effective). Results land in `scratch.out` (`[batch, width]`).
-pub(crate) fn run_tile(args: &TileArgs<'_>, scratch: &mut TileScratch) -> GemvStats {
+/// batching effective). Each group's accumulation runs on the i32 lane
+/// kernels when the range proof holds, else on the i64 kernels — same
+/// integers, same order, bit-identical output either way.
+pub(crate) fn run_tile(
+    args: &TileArgs<'_>,
+    scratch: &mut TileScratch,
+    out: &mut [f32],
+) -> GemvStats {
     let wt = args.wt;
     let k = wt.cols;
     let nbw = args.nbw as usize;
@@ -152,35 +281,89 @@ pub(crate) fn run_tile(args: &TileArgs<'_>, scratch: &mut TileScratch) -> GemvSt
     let batch = args.batch;
     let act_bits = args.act_bits;
     let width = args.col_end - args.col_start;
-    debug_assert_eq!(scratch.out.len(), batch * width);
+    debug_assert_eq!(out.len(), batch * width);
     debug_assert_eq!(scratch.wrow.len(), k);
 
     let mut stats = GemvStats::default();
-    scratch.out.fill(0.0);
+    out.fill(0.0);
 
     for (j, col) in (args.col_start..args.col_end).enumerate() {
         // wt row `col` holds the K basis weights for output column `col`.
         wt.packed().unpack_range_into(col * k, &mut scratch.wrow);
         for g in 0..groups {
             let scale_w = wt.scale(col, g * group);
-            scratch.acc.iter_mut().for_each(|a| *a = 0);
+            let abs_sum = args.group_abs_sums[col * groups + g];
+            let lane =
+                !args.force_scalar_accum && planes::group_fits_i32(abs_sum, act_bits as u32);
+            if lane {
+                accumulate_group_i32(args, scratch, g, chunks_per_group, &mut stats);
+                for (bi, (&a, &xs)) in scratch.acc32.iter().zip(args.x_scales).enumerate() {
+                    out[bi * width + j] += a as f32 * scale_w * xs;
+                }
+            } else {
+                accumulate_group_i64(args, scratch, g, chunks_per_group, &mut stats);
+                for (bi, (&a, &xs)) in scratch.acc.iter().zip(args.x_scales).enumerate() {
+                    out[bi * width + j] += a as f32 * scale_w * xs;
+                }
+            }
+        }
+    }
+    stats
+}
+
+/// Build the current chunk's LUT into `scratch.entries` from the unpacked
+/// weight row (zero-padded to NBW at the group tail).
+#[inline]
+fn build_chunk_lut(scratch: &mut TileScratch, start: usize, end: usize, nbw: u32) {
+    scratch.basis.fill(0);
+    for (i, kk) in (start..end).enumerate() {
+        scratch.basis[i] = scratch.wrow[kk] as i64;
+    }
+    Lut::build_into(&scratch.basis, nbw, &mut scratch.entries);
+}
+
+/// One definition for both accumulation paths: the i32 arm narrows each
+/// freshly-built LUT into `entries32` (sound under the range proof) and
+/// runs the lane kernels on i32 scratch; the i64 arm runs the same logic
+/// full-width. A single body keeps the PRT bookkeeping and plane
+/// sign-handling — the bit-identity contract — in exactly one place.
+macro_rules! accumulate_group {
+    ($name:ident, $ty:ty, $entries:ident, $vals:ident, $acc:ident,
+     $accum_patterns:path, $accum_values:path, narrow = $narrow:literal, $doc:literal) => {
+        #[doc = $doc]
+        #[allow(clippy::unnecessary_cast)] // `v as i64` in the i64 expansion
+        fn $name(
+            args: &TileArgs<'_>,
+            scratch: &mut TileScratch,
+            g: usize,
+            chunks_per_group: usize,
+            stats: &mut GemvStats,
+        ) {
+            let nbw = args.nbw as usize;
+            let group = args.wt.group_size;
+            let batch = args.batch;
+            let act_bits = args.act_bits;
+            scratch.$acc.fill(0);
             for c in 0..chunks_per_group {
                 let start = g * group + c * nbw;
                 let end = (start + nbw).min((g + 1) * group);
-                // Basis weights (zero-padded to NBW at the group tail).
-                scratch.basis.iter_mut().for_each(|b| *b = 0);
-                for (i, kk) in (start..end).enumerate() {
-                    scratch.basis[i] = scratch.wrow[kk] as i64;
-                }
-                Lut::build_into(&scratch.basis, args.nbw, &mut scratch.entries);
+                build_chunk_lut(scratch, start, end, args.nbw);
                 stats.luts_built += 1;
+                if $narrow {
+                    // Narrow the entries once per LUT; the range proof
+                    // guarantees they fit (|entry| ≤ Σ|w| over the chunk).
+                    for (e32, &e) in scratch.entries32.iter_mut().zip(&scratch.entries) {
+                        *e32 = e as i32;
+                    }
+                }
                 let chunk = g * chunks_per_group + c;
                 let pat_base = chunk * act_bits * batch;
                 if args.use_prt {
                     scratch.prt.flush(); // new LUT ⇒ stored results are stale
                     for plane in 0..act_bits {
-                        for bi in 0..batch {
-                            let pat = args.patterns[pat_base + plane * batch + bi];
+                        let pats = &args.patterns
+                            [pat_base + plane * batch..pat_base + (plane + 1) * batch];
+                        for (slot, &pat) in scratch.$vals.iter_mut().zip(pats) {
                             let v = match scratch.prt.lookup(pat) {
                                 Some(hit) => {
                                     stats.prt_hits += 1;
@@ -193,34 +376,44 @@ pub(crate) fn run_tile(args: &TileArgs<'_>, scratch: &mut TileScratch) -> GemvSt
                                     v
                                 }
                             };
-                            if plane == act_bits - 1 {
-                                scratch.acc[bi] -= v << plane;
-                            } else {
-                                scratch.acc[bi] += v << plane;
-                            }
+                            *slot = v as $ty;
                         }
+                        $accum_values(
+                            &scratch.$vals,
+                            plane as u32,
+                            plane == act_bits - 1,
+                            &mut scratch.$acc,
+                        );
                     }
                 } else {
                     for plane in 0..act_bits {
-                        let neg = plane == act_bits - 1;
-                        for bi in 0..batch {
-                            let pat = args.patterns[pat_base + plane * batch + bi];
-                            let v = scratch.entries[pat as usize];
-                            if neg {
-                                scratch.acc[bi] -= v << plane;
-                            } else {
-                                scratch.acc[bi] += v << plane;
-                            }
-                        }
+                        let pats = &args.patterns
+                            [pat_base + plane * batch..pat_base + (plane + 1) * batch];
+                        $accum_patterns(
+                            &scratch.$entries,
+                            pats,
+                            plane as u32,
+                            plane == act_bits - 1,
+                            &mut scratch.$acc,
+                        );
                     }
                     stats.lut_reads += (act_bits * batch) as u64;
                 }
             }
-            for bi in 0..batch {
-                scratch.out[bi * width + j] +=
-                    scratch.acc[bi] as f32 * scale_w * args.x_scales[bi];
-            }
         }
-    }
-    stats
+    };
 }
+
+accumulate_group!(
+    accumulate_group_i32, i32, entries32, vals32, acc32,
+    planes::accum_patterns_i32, planes::accum_values_i32, narrow = true,
+    "Accumulate one scale group on the i32 lane path. Caller has proven \
+     (via `planes::group_fits_i32`) that no intermediate sum can leave `i32`."
+);
+
+accumulate_group!(
+    accumulate_group_i64, i64, entries, vals, acc,
+    planes::accum_patterns_i64, planes::accum_values_i64, narrow = false,
+    "Accumulate one scale group on the full-width i64 path (range-proof \
+     fallback and the `force_scalar_accum` reference)."
+);

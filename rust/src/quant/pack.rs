@@ -21,7 +21,7 @@ impl BitPacked {
         let lo = -(1i64 << (bits - 1));
         let hi = (1i64 << (bits - 1)) - 1;
         let total_bits = values.len() * bits as usize;
-        let mut words = vec![0u64; (total_bits + 63) / 64];
+        let mut words = vec![0u64; total_bits.div_ceil(64)];
         let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
         for (i, &v) in values.iter().enumerate() {
             assert!(
@@ -56,7 +56,7 @@ impl BitPacked {
 
     /// Storage size in bytes (the quantity the memory-traffic model uses).
     pub fn nbytes(&self) -> usize {
-        (self.len * self.bits as usize + 7) / 8
+        (self.len * self.bits as usize).div_ceil(8)
     }
 
     /// Get value `i` (sign-extended).
@@ -135,7 +135,7 @@ impl BitPacked {
     pub fn bit_plane(&self, plane: u32, start: usize, n: usize) -> Vec<u64> {
         assert!(plane < self.bits);
         assert!(start + n <= self.len);
-        let mut out = vec![0u64; (n + 63) / 64];
+        let mut out = vec![0u64; n.div_ceil(64)];
         for i in 0..n {
             let v = self.get(start + i) as u32;
             if (v >> plane) & 1 == 1 {

@@ -1,4 +1,4 @@
-//! Scoped-thread worker pool for tile fan-out.
+//! Persistent shared worker pool for tile fan-out.
 //!
 //! The paper's SAIL configuration spreads a GEMV's column tiles across 16
 //! thread-pipelines (§III-C, all evaluation figures); this pool is the
@@ -8,32 +8,101 @@
 //! 1. **Determinism** — results are returned indexed by item, and callers
 //!    combine them in item order, so output (and any f32 reduction a caller
 //!    performs) is bit-identical at every thread count.
-//! 2. **No dependencies** — built on `std::thread::scope`; no rayon/
-//!    crossbeam offline.
-//! 3. **No unsafe** — workers receive disjoint `chunks_mut` slices of the
-//!    result vector, so the borrow checker proves the writes race-free.
+//! 2. **No dependencies** — built on `std::thread` + `std::sync::mpsc`; no
+//!    rayon/crossbeam offline.
+//! 3. **No unsafe** — jobs are `'static` boxed closures over `Arc`-shared
+//!    context, so nothing is lifetime-laundered across threads.
 //!
-//! Work is split into `threads` contiguous index ranges (tiles are uniform
-//! cost, so static partitioning balances within one tile of ideal and
-//! avoids atomic work-stealing traffic on the hot path).
+//! Unlike the PR-1 pool (which spawned scoped threads on every call), the
+//! workers here are **long-lived**: they are spawned once, block on a
+//! shared job channel, and serve every dispatch until the pool is dropped
+//! — one `LutGemvServeEngine` per model can share a single process-wide
+//! `Arc<WorkerPool>`, and per-GEMV dispatch cost drops from N thread
+//! spawns to N channel sends.
+//!
+//! Each [`run_ctx`](WorkerPool::run_ctx) call is one *generation*: the
+//! items are split into `min(threads, n_items)` contiguous chunks (tiles
+//! are uniform cost, so static partitioning balances within one tile of
+//! ideal), one job per chunk is enqueued, and the caller blocks on a
+//! per-generation results channel until every chunk has reported — that
+//! results channel is the generation barrier, so overlapping dispatches
+//! from different callers can never steal each other's results. Jobs are
+//! pure compute and never block on the pool, so enqueueing more jobs than
+//! workers only queues them (saturation-tested in
+//! `tests/shared_pool_serving.rs`); do **not** dispatch onto the pool from
+//! inside a job, as nested dispatch can idle-wait every worker.
 
-/// A fixed-width fork-join pool. Cheap to construct (threads are spawned
-/// per [`run`](WorkerPool::run) call and scope-joined — the OS reuses the
-/// stacks, and one spawn per ~1 ms GEMV is noise).
-#[derive(Debug, Clone, Copy)]
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// The long-lived half of a threaded pool: the job queue feeding the
+/// workers, and the workers themselves (joined when the pool drops).
+struct Shared {
+    jobs: Mutex<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    generations: AtomicU64,
+}
+
+/// A fixed-width pool of persistent workers. `threads == 1` is the serial
+/// degenerate case: no workers are spawned and every dispatch runs inline
+/// on the caller's thread (the scalar reference path).
+///
+/// The pool is `Send + Sync`; wrap it in an [`Arc`] (see
+/// [`WorkerPool::shared`]) to serve several engines — or several caller
+/// threads — off one set of workers.
 pub struct WorkerPool {
     threads: usize,
+    shared: Option<Shared>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("persistent", &self.shared.is_some())
+            .finish()
+    }
 }
 
 impl WorkerPool {
-    /// A pool of exactly `threads` workers (clamped to ≥ 1).
+    /// A pool of exactly `threads` workers (clamped to ≥ 1). For
+    /// `threads > 1` the workers are spawned immediately and live until
+    /// the pool is dropped.
     pub fn new(threads: usize) -> Self {
-        WorkerPool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool { threads, shared: None };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("sail-pool-{w}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        let shared = Shared { jobs: Mutex::new(tx), workers, generations: AtomicU64::new(0) };
+        WorkerPool { threads, shared: Some(shared) }
     }
 
-    /// One worker per available core.
+    /// One worker per available core, overridable with the
+    /// `SAIL_POOL_THREADS` environment variable (the CI thread matrix and
+    /// perf runs pin pool width through it).
     pub fn auto() -> Self {
-        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let threads = std::env::var("SAIL_POOL_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
         WorkerPool::new(threads)
     }
 
@@ -43,40 +112,125 @@ impl WorkerPool {
         WorkerPool::new(1)
     }
 
+    /// Convenience: a pool of exactly `threads` workers wrapped in an
+    /// [`Arc`], ready to share across engines (use
+    /// `Arc::new(WorkerPool::auto())` for env/core-count sizing).
+    pub fn shared(threads: usize) -> Arc<Self> {
+        Arc::new(WorkerPool::new(threads))
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Number of dispatch generations served so far (0 for serial pools —
+    /// inline runs never touch the queue). Observability for the warm-pool
+    /// benches and the saturation tests.
+    pub fn generations(&self) -> u64 {
+        self.shared.as_ref().map(|s| s.generations.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Evaluate `g(ctx, 0..n_items)` across the pool, returning results in
+    /// item order. All shared state must travel through `ctx` (cloned into
+    /// each chunk job as an `Arc`); `g` itself must be stateless —
+    /// `Copy + 'static` admits function pointers and non-capturing
+    /// closures, and is what lets the jobs cross to persistent workers
+    /// without `unsafe`. `g` must be pure per item (items run concurrently
+    /// and their assignment to workers is an implementation detail).
+    ///
+    /// Every job drops its `Arc` clone *before* reporting its chunk, so
+    /// when `run_ctx` returns the caller's `Arc` is the only survivor and
+    /// `Arc::try_unwrap` deterministically recovers the context (the
+    /// engine uses this to recycle per-call buffers).
+    ///
+    /// # Panics
+    ///
+    /// If a job panics its worker survives (the panic is caught), but the
+    /// dispatching `run_ctx` call panics — a lost chunk can never be
+    /// silently dropped from the results.
+    pub fn run_ctx<C, T, G>(&self, ctx: &Arc<C>, n_items: usize, g: G) -> Vec<T>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+    {
+        let shared = match &self.shared {
+            Some(s) if n_items > 1 => s,
+            _ => return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect(),
+        };
+        let chunks = self.threads.min(n_items);
+        let per_chunk = n_items.div_ceil(chunks);
+        let n_chunks = n_items.div_ceil(per_chunk);
+        let (tx, rx) = channel::<(usize, Vec<T>)>();
+        // Lock only long enough to clone the sender — boxing and sending
+        // the chunk jobs happens lock-free, so concurrent dispatchers on a
+        // shared pool don't serialize their enqueue phases.
+        let jobs = shared.jobs.lock().unwrap().clone();
+        for c in 0..n_chunks {
+            let start = c * per_chunk;
+            let end = ((c + 1) * per_chunk).min(n_items);
+            let ctx = Arc::clone(ctx);
+            let tx = tx.clone();
+            jobs.send(Box::new(move || {
+                let out: Vec<T> = (start..end).map(|i| g(ctx.as_ref(), i)).collect();
+                // Release the context before reporting: once the caller
+                // has every chunk, its Arc is provably the last one.
+                drop(ctx);
+                let _ = tx.send((c, out));
+            }))
+            .expect("worker pool has shut down");
+        }
+        shared.generations.fetch_add(1, Ordering::Relaxed);
+        // The caller's sender must die so a lost chunk surfaces as a
+        // disconnect instead of a hang.
+        drop(tx);
+        let mut slots: Vec<Option<Vec<T>>> = Vec::with_capacity(n_chunks);
+        slots.resize_with(n_chunks, || None);
+        for _ in 0..n_chunks {
+            match rx.recv() {
+                Ok((c, out)) => slots[c] = Some(out),
+                Err(_) => panic!("pool worker dropped a chunk (job panicked?)"),
+            }
+        }
+        slots.into_iter().flat_map(|s| s.expect("every chunk reports exactly once")).collect()
+    }
+
     /// Evaluate `f(0..n_items)` across the pool, returning results in item
-    /// order. `f` must be pure per item (it runs concurrently and its
-    /// assignment to workers is an implementation detail).
+    /// order — the context-free convenience over [`run_ctx`]: the closure
+    /// itself is the shared context.
     pub fn run<T, F>(&self, n_items: usize, f: F) -> Vec<T>
     where
-        T: Send,
-        F: Fn(usize) -> T + Sync,
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
     {
-        if self.threads == 1 || n_items <= 1 {
-            return (0..n_items).map(f).collect();
-        }
-        let workers = self.threads.min(n_items);
-        let per_worker = n_items.div_ceil(workers);
-        let mut results: Vec<Option<T>> = Vec::with_capacity(n_items);
-        results.resize_with(n_items, || None);
-        std::thread::scope(|scope| {
-            for (w, chunk) in results.chunks_mut(per_worker).enumerate() {
-                let f = &f;
-                scope.spawn(move || {
-                    let base = w * per_worker;
-                    for (i, slot) in chunk.iter_mut().enumerate() {
-                        *slot = Some(f(base + i));
-                    }
-                });
+        self.run_ctx(&Arc::new(f), n_items, |f, i| f(i))
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only while dequeueing; a closed channel ends the
+        // worker (the pool dropped its sender).
+        let job = match rx.lock().unwrap().recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        // A panicking job must not kill the worker — the pool would
+        // silently lose width for every later dispatch. The dispatcher
+        // notices the lost chunk and panics on its own thread.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.take() {
+            // Closing the channel ends every worker_loop.
+            drop(shared.jobs);
+            for w in shared.workers {
+                let _ = w.join();
             }
-        });
-        results
-            .into_iter()
-            .map(|r| r.expect("pool invariant: every item is assigned to exactly one worker"))
-            .collect()
+        }
     }
 }
 
@@ -103,9 +257,11 @@ mod tests {
 
     #[test]
     fn every_item_runs_exactly_once() {
-        let counters: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        let counters: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..100).map(|_| AtomicUsize::new(0)).collect());
         let pool = WorkerPool::new(4);
-        pool.run(100, |i| counters[i].fetch_add(1, Ordering::Relaxed));
+        let c = Arc::clone(&counters);
+        pool.run(100, move |i| c[i].fetch_add(1, Ordering::Relaxed));
         for (i, c) in counters.iter().enumerate() {
             assert_eq!(c.load(Ordering::Relaxed), 1, "item {i}");
         }
@@ -126,10 +282,84 @@ mod tests {
     fn actually_runs_concurrently() {
         // With 4 workers and 4 items that each wait for all 4 to arrive,
         // completion proves the items ran on distinct threads.
-        let barrier = std::sync::Barrier::new(4);
+        let barrier = Arc::new(std::sync::Barrier::new(4));
         let pool = WorkerPool::new(4);
-        pool.run(4, |_| {
+        pool.run(4, move |_| {
             barrier.wait();
         });
+    }
+
+    #[test]
+    fn auto_pool_honors_env_width_and_dispatches() {
+        // The CI matrix pins SAIL_POOL_THREADS to 1/2/8, so this test (and
+        // every other auto-pool user) genuinely runs at those widths.
+        let pool = WorkerPool::auto();
+        assert!(pool.threads() >= 1);
+        if let Some(w) =
+            std::env::var("SAIL_POOL_THREADS").ok().and_then(|s| s.trim().parse::<usize>().ok())
+        {
+            if w > 0 {
+                assert_eq!(pool.threads(), w, "auto() ignored SAIL_POOL_THREADS");
+            }
+        }
+        let got = pool.run(23, |i| 3 * i + 1);
+        assert_eq!(got, (0..23).map(|i| 3 * i + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workers_persist_across_dispatches() {
+        let pool = WorkerPool::new(3);
+        for round in 0..50usize {
+            let got = pool.run(7, move |i| round * 100 + i);
+            let want: Vec<usize> = (0..7).map(|i| round * 100 + i).collect();
+            assert_eq!(got, want, "round {round}");
+        }
+        assert_eq!(pool.generations(), 50);
+    }
+
+    #[test]
+    fn run_ctx_recovers_context_deterministically() {
+        let pool = WorkerPool::new(4);
+        let ctx = Arc::new(vec![3usize, 1, 4, 1, 5, 9, 2, 6]);
+        for _ in 0..20 {
+            let got = pool.run_ctx(&ctx, 8, |data, i| data[i] * 2);
+            assert_eq!(got, vec![6, 2, 8, 2, 10, 18, 4, 12]);
+            // Jobs drop their clones before reporting, so after the
+            // barrier the caller's Arc is always the only one left.
+            assert_eq!(Arc::strong_count(&ctx), 1);
+        }
+    }
+
+    #[test]
+    fn shared_pool_serves_concurrent_callers() {
+        let pool = WorkerPool::shared(4);
+        std::thread::scope(|scope| {
+            for t in 0..8usize {
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || {
+                    for round in 0..10usize {
+                        let base = t * 1000 + round;
+                        let got = pool.run(16, move |i| base + i);
+                        let want: Vec<usize> = (0..16).map(|i| base + i).collect();
+                        assert_eq!(got, want, "caller {t} round {round}");
+                    }
+                });
+            }
+        });
+        assert_eq!(pool.generations(), 80);
+    }
+
+    #[test]
+    fn job_panic_fails_dispatch_but_not_pool() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(4, |i| {
+                assert!(i != 2, "poisoned item");
+                i
+            })
+        }));
+        assert!(result.is_err(), "lost chunk must fail the dispatch");
+        // The workers caught the panic and still serve later dispatches.
+        assert_eq!(pool.run(4, |i| i), vec![0, 1, 2, 3]);
     }
 }

@@ -1,0 +1,207 @@
+//! Cross-path conformance suite for the lane-parallel plane accumulation.
+//!
+//! The engine picks, per scale group, between the i32 lane kernels
+//! (`lutgemv::planes`) and the i64 scalar path, based on a range proof
+//! computed from the built LUT's basis weights. The acceptance bar is
+//! *bit-identity*: for every adversarial shape — max-magnitude weights
+//! sitting exactly on the range-proof boundary, NBW 1..4, activation
+//! widths 2/4/8, group tails not divisible by NBW, batch 1/7/32 — the
+//! auto path must produce `GemvOutput` and `GemvStats` identical to the
+//! forced-i64 reference at 1/2/8 threads, with and without the PRT, at
+//! every DFM (PRT) capacity.
+
+use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
+use sail::lutgemv::{planes, GemvOutput};
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::WorkerPool;
+use sail::util::{propcheck, Prng};
+
+/// A quantized activation vector of an arbitrary bit width `act_bits`
+/// (2/4/8): codes uniform over the full two's-complement range so sign
+/// planes and extreme magnitudes are always exercised.
+fn random_activation(prng: &mut Prng, k: usize, act_bits: u32) -> QuantizedVector {
+    let q: Vec<i8> = (0..k).map(|_| prng.signed_bits(act_bits) as i8).collect();
+    let scale = 0.05 + prng.f64() as f32;
+    QuantizedVector { q, scale, bits: act_bits }
+}
+
+/// Run one shape through the forced-scalar engine (serial) and the auto
+/// lane engine (serial + 1/2/8-thread pools), asserting bit-identical
+/// outputs and stats everywhere, and agreement with the naive reference.
+#[allow(clippy::too_many_arguments)]
+fn assert_conformance(
+    wt: &QuantizedMatrix,
+    xs: &[QuantizedVector],
+    nbw: u32,
+    tile_cols: usize,
+    use_prt: bool,
+    prt_capacity: usize,
+    check_reference: bool,
+    label: &str,
+) -> Result<(), String> {
+    let mut scalar_eng = LutGemvEngine::new(wt.clone(), nbw);
+    scalar_eng.force_scalar_accum = true;
+    scalar_eng.tile_cols = tile_cols;
+    scalar_eng.use_prt = use_prt;
+    scalar_eng.prt_capacity = prt_capacity;
+    let (want, want_stats) = scalar_eng.gemv_batch(xs);
+
+    if check_reference && !use_prt {
+        for (bi, x) in xs.iter().enumerate() {
+            let r = reference_gemv(wt, x);
+            if want.row(bi) != r.as_slice() {
+                return Err(format!("{label}: scalar-i64 vs naive reference, row {bi}"));
+            }
+        }
+    }
+
+    let mut lane_eng = LutGemvEngine::new(wt.clone(), nbw);
+    lane_eng.tile_cols = tile_cols;
+    lane_eng.use_prt = use_prt;
+    lane_eng.prt_capacity = prt_capacity;
+    let (got, got_stats) = lane_eng.gemv_batch(xs);
+    if got != want {
+        return Err(format!("{label}: lane-i32 output != scalar-i64 output"));
+    }
+    if got_stats != want_stats {
+        return Err(format!("{label}: lane stats {got_stats:?} != scalar {want_stats:?}"));
+    }
+
+    for threads in [1usize, 2, 8] {
+        let pool = WorkerPool::new(threads);
+        let mut out = GemvOutput::new();
+        let stats = lane_eng.gemv_batch_into(xs, &pool, &mut out);
+        if out != want {
+            return Err(format!("{label}: output drift at threads={threads}"));
+        }
+        if stats != want_stats {
+            return Err(format!("{label}: stats drift at threads={threads}"));
+        }
+    }
+    // And at the ambient width (SAIL_POOL_THREADS in the CI matrix).
+    let auto = WorkerPool::auto();
+    let mut out = GemvOutput::new();
+    let stats = lane_eng.gemv_batch_into(xs, &auto, &mut out);
+    if out != want || stats != want_stats {
+        return Err(format!("{label}: drift on auto pool ({} threads)", auto.threads()));
+    }
+    Ok(())
+}
+
+#[test]
+fn lane_path_bit_identical_adversarial_shapes() {
+    propcheck::check(
+        "plane-conformance",
+        propcheck::Config { cases: 36, seed: 7001 },
+        |p, _| {
+            let level = QuantLevel::ALL[p.usize_in(0, 6)];
+            let nbw = p.usize_in(1, 5) as u32; // NBW ∈ 1..4
+            // Groups deliberately include sizes with NBW-ragged tails
+            // (e.g. 8/3, 24/5).
+            let group = [8usize, 16, 24, 32][p.usize_in(0, 4)];
+            let k = group * p.usize_in(1, 4);
+            let n = p.usize_in(1, 20);
+            let batch = [1usize, 7, 32][p.usize_in(0, 3)];
+            let act_bits = [2u32, 4, 8][p.usize_in(0, 3)];
+            let tile_cols = p.usize_in(1, 8);
+            let use_prt = p.usize_in(0, 2) == 1;
+            let prt_capacity = [1usize, 2, 32][p.usize_in(0, 3)];
+            let seed = p.next_u64();
+            (level, nbw, group, k, n, batch, act_bits, tile_cols, use_prt, prt_capacity, seed)
+        },
+        |&(level, nbw, group, k, n, batch, act_bits, tile_cols, use_prt, prt_capacity, seed)| {
+            if nbw as usize > group {
+                return Ok(()); // engine rejects this combination by design
+            }
+            let mut prng = Prng::new(seed);
+            let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+            let wt = QuantizedMatrix::quantize(&w, n, k, level, group);
+            let xs: Vec<QuantizedVector> =
+                (0..batch).map(|_| random_activation(&mut prng, k, act_bits)).collect();
+            assert_conformance(
+                &wt,
+                &xs,
+                nbw,
+                tile_cols,
+                use_prt,
+                prt_capacity,
+                true,
+                &format!("level={level} nbw={nbw} group={group} act={act_bits} b={batch}"),
+            )
+        },
+    );
+}
+
+/// Weights at the symmetric quantization maximum (`±max_q`) quantize to
+/// exact integer codes when fed as integral floats — the knob that lets
+/// the tests place `Σ|w|` exactly against the range-proof limit.
+fn max_magnitude_matrix(n: usize, group: usize) -> QuantizedMatrix {
+    let w = vec![127.0f32; n * group];
+    let wt = QuantizedMatrix::quantize(&w, n, group, QuantLevel::Q8, group);
+    // Sanity: the codes really are ±max_q (scale is exactly 1.0).
+    assert_eq!(wt.q(0, 0), 127);
+    assert_eq!(wt.q(n - 1, group - 1), 127);
+    wt
+}
+
+#[test]
+fn range_proof_boundary_shapes_stay_bit_identical() {
+    // Σ|w| = 127 × group against the 8-bit-activation limit
+    // (⌊(2³¹−1)/255⌋ = 8 421 504): the largest group that passes the
+    // proof runs the lane path at its extreme; one element more and the
+    // engine must fall back to i64. Both sides must be bit-identical to
+    // the forced-scalar reference — that *is* the boundary case the
+    // narrowing argument lives or dies on.
+    let limit = planes::i32_safe_abs_weight_sum(8);
+    let group_ok = (limit / 127) as usize; // 66 311: 127·g ≤ limit
+    let group_over = group_ok + 1; //          66 312: 127·g > limit
+    assert!(planes::group_fits_i32(127 * group_ok as u64, 8));
+    assert!(!planes::group_fits_i32(127 * group_over as u64, 8));
+
+    let mut prng = Prng::new(7002);
+    for (group, side) in [(group_ok, "at-limit"), (group_over, "over-limit")] {
+        let wt = max_magnitude_matrix(2, group);
+        // Max-magnitude activations too: every LUT read returns the
+        // largest entry, so the accumulator actually walks to the bound.
+        let extreme = QuantizedVector { q: vec![127i8; group], scale: 1.0, bits: 8 };
+        let mixed = random_activation(&mut prng, group, 8);
+        let xs = vec![extreme, mixed];
+        assert_conformance(&wt, &xs, 4, 1, false, 32, true, side).unwrap();
+    }
+}
+
+#[test]
+fn range_proof_boundary_with_prt_and_tails() {
+    // The over-limit fallback with a ragged NBW tail (66 312 % 5 ≠ 0) and
+    // the PRT enabled: the i64 path's PRT bookkeeping must match the
+    // forced-scalar engine access for access.
+    let limit = planes::i32_safe_abs_weight_sum(8);
+    let group = (limit / 127) as usize + 1;
+    let wt = max_magnitude_matrix(1, group);
+    let mut prng = Prng::new(7003);
+    let xs = vec![
+        QuantizedVector { q: vec![127i8; group], scale: 0.25, bits: 8 },
+        random_activation(&mut prng, group, 8),
+    ];
+    assert_conformance(&wt, &xs, 5, 1, true, 32, false, "over-limit-prt").unwrap();
+}
+
+#[test]
+fn small_groups_always_take_the_lane_path_exactly() {
+    // Realistic llama.cpp-style groups (32 × Q4) sit far below the proof
+    // limit — Σ|w| ≤ 32·7 = 224 — so the auto engine is the lane kernel
+    // in production. Pin the proof down and the numerics with it.
+    assert!(planes::group_fits_i32(224, 8));
+    let mut prng = Prng::new(7004);
+    let w: Vec<f32> = (0..8 * 128).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, 8, 128, QuantLevel::Q4, 32);
+    for batch in [1usize, 7, 32] {
+        let xs: Vec<QuantizedVector> = (0..batch)
+            .map(|_| {
+                let x: Vec<f32> = (0..128).map(|_| prng.normal() as f32).collect();
+                QuantizedVector::quantize(&x)
+            })
+            .collect();
+        assert_conformance(&wt, &xs, 4, 3, false, 32, true, &format!("b{batch}")).unwrap();
+    }
+}

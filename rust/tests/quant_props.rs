@@ -1,0 +1,179 @@
+//! Direct property tests for the quantization substrate — the layers the
+//! GEMV conformance suites exercise only indirectly: group-wise
+//! quantize→dequantize error bounds, activation sign-plane invariants, and
+//! the packed-stream word-boundary edges of `unpack_range_into`.
+
+use sail::quant::pack::BitPacked;
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::util::{propcheck, Prng};
+
+#[test]
+fn groupwise_roundtrip_error_bounded_per_element() {
+    // |w − q·scale| ≤ scale/2 for the element's *own* group scale — the
+    // bound symmetric round-to-nearest guarantees (clamping never bites:
+    // |x|/scale ≤ max_q by construction of scale).
+    propcheck::check(
+        "groupwise-roundtrip-bound",
+        propcheck::Config { cases: 80, seed: 501 },
+        |p, _| {
+            let level = QuantLevel::ALL[p.usize_in(0, 6)];
+            let rows = p.usize_in(1, 8);
+            let group = [8usize, 16, 32][p.usize_in(0, 3)];
+            let cols = group * p.usize_in(1, 5);
+            let seed = p.next_u64();
+            (level, rows, cols, group, seed)
+        },
+        |&(level, rows, cols, group, seed)| {
+            let mut prng = Prng::new(seed);
+            let w: Vec<f32> = (0..rows * cols).map(|_| (prng.normal() * 2.5) as f32).collect();
+            let qm = QuantizedMatrix::quantize(&w, rows, cols, level, group);
+            for r in 0..rows {
+                for c in 0..cols {
+                    let err = (w[r * cols + c] - qm.dequant(r, c)).abs();
+                    let bound = qm.scale(r, c) * 0.500001;
+                    if err > bound {
+                        return Err(format!("{level} ({r},{c}): err {err} > scale/2 {bound}"));
+                    }
+                    if qm.q(r, c).abs() > level.max_q() {
+                        return Err(format!("code outside ±max_q at ({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn activation_sign_plane_invariants() {
+    // The bit-serial contract the engine's plane loop relies on: planes
+    // 0..bits−2 carry weight +2^p, the top plane carries −2^(bits−1), and
+    // reassembling them recovers the exact int8 code. Quantization is
+    // symmetric, so the unpaired −2^(bits−1) code never occurs.
+    propcheck::check(
+        "act-sign-planes",
+        propcheck::Config { cases: 120, seed: 503 },
+        |p, i| {
+            let k = p.usize_in(1, 8 + 2 * i);
+            let x: Vec<f32> = (0..k).map(|_| (p.normal() * 3.0) as f32).collect();
+            x
+        },
+        |x| {
+            let qv = QuantizedVector::quantize(x);
+            if qv.scale <= 0.0 {
+                return Err("non-positive activation scale".into());
+            }
+            for (i, &q) in qv.q.iter().enumerate() {
+                if q == i8::MIN {
+                    return Err(format!("asymmetric code -128 at {i}"));
+                }
+                let mut rec: i32 = 0;
+                for plane in 0..qv.bits {
+                    let w = 1i32 << plane;
+                    let bit = qv.bit(i, plane) as i32;
+                    if plane == qv.bits - 1 {
+                        rec -= bit * w; // sign plane subtracts
+                    } else {
+                        rec += bit * w;
+                    }
+                }
+                if rec != q as i32 {
+                    return Err(format!("plane reassembly {rec} != code {q} at {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn activation_patterns_follow_msb_first_convention() {
+    // `pattern(start, nbw, plane)` maps element `start+j` to LUT address
+    // bit `nbw−1−j` (Fig 2) and zero-pads past the end of the vector —
+    // the exact indexing the engine's pattern table precomputation uses.
+    let mut prng = Prng::new(505);
+    for _ in 0..200 {
+        let k = prng.usize_in(1, 40);
+        let q: Vec<i8> = (0..k).map(|_| prng.signed_bits(8) as i8).collect();
+        let qv = QuantizedVector { q, scale: 1.0, bits: 8 };
+        let nbw = prng.usize_in(1, 9) as u32;
+        let start = prng.usize_in(0, k + 4); // may run past the end
+        let plane = prng.usize_in(0, 8) as u32;
+        let pat = qv.pattern(start, nbw, plane);
+        assert!(pat < (1 << nbw));
+        for j in 0..nbw as usize {
+            let want = if start + j < k { qv.bit(start + j, plane) as u32 } else { 0 };
+            let got = (pat >> (nbw as usize - 1 - j)) & 1;
+            assert_eq!(got, want, "k={k} start={start} nbw={nbw} plane={plane} j={j}");
+        }
+    }
+}
+
+#[test]
+fn unpack_range_word_boundary_sweep() {
+    // Every start offset at widths 1..=8 over a stream long enough that
+    // ranges begin mid-word, straddle u64 boundaries, and end exactly on
+    // them. `unpack_range_into` must agree with the per-element `get` at
+    // every single alignment.
+    let mut prng = Prng::new(507);
+    for bits in 1u32..=8 {
+        let n = 300usize; // up to 2400 bits ⇒ tens of word crossings
+        let vals: Vec<i32> = (0..n).map(|_| prng.signed_bits(bits) as i32).collect();
+        let packed = BitPacked::pack(&vals, bits);
+        for start in 0..n {
+            let len = (n - start).min(17);
+            let mut out = vec![0i32; len];
+            packed.unpack_range_into(start, &mut out);
+            for (j, &o) in out.iter().enumerate() {
+                assert_eq!(o, packed.get(start + j), "bits={bits} start={start} j={j}");
+                assert_eq!(o, vals[start + j], "bits={bits} start={start} j={j} (vs input)");
+            }
+        }
+        // Full-stream unpack as one range.
+        let mut all = vec![0i32; n];
+        packed.unpack_range_into(0, &mut all);
+        assert_eq!(all, vals, "bits={bits} full range");
+    }
+}
+
+#[test]
+fn unpack_range_exact_word_edges() {
+    // Deterministic corners: a value beginning at bit 63 (straddles into
+    // word 1), a range whose last value ends exactly at a word boundary,
+    // and a range starting exactly on one.
+    for bits in [3u32, 5, 6, 7] {
+        let per_word = 64usize.div_ceil(bits as usize) + 1;
+        let n = per_word * 4;
+        let vals: Vec<i32> =
+            (0..n).map(|i| ((i as i32) % (1 << (bits - 1))) - (1 << (bits - 2))).collect();
+        let packed = BitPacked::pack(&vals, bits);
+        // First value that straddles a 64-bit boundary.
+        let straddle = (0..n)
+            .find(|i| {
+                let lo = i * bits as usize;
+                lo % 64 + bits as usize > 64
+            })
+            .unwrap();
+        for start in [straddle.saturating_sub(1), straddle, straddle + 1] {
+            let mut out = vec![0i32; 3.min(n - start)];
+            packed.unpack_range_into(start, &mut out);
+            for (j, &o) in out.iter().enumerate() {
+                assert_eq!(o, vals[start + j], "bits={bits} start={start} j={j}");
+            }
+        }
+        // A range ending exactly at bit 64·m: 64 and bits share gcd
+        // structure; lcm(64,bits)/bits values end on a word edge.
+        let lcm_vals = {
+            let mut v = 1usize;
+            while (v * bits as usize) % 64 != 0 {
+                v += 1;
+            }
+            v
+        };
+        if lcm_vals <= n {
+            let mut out = vec![0i32; lcm_vals];
+            packed.unpack_range_into(0, &mut out);
+            assert_eq!(&out, &vals[..lcm_vals], "bits={bits} word-aligned end");
+        }
+    }
+}

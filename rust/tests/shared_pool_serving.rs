@@ -1,0 +1,143 @@
+//! Serving tests for the persistent shared worker pool: several
+//! `LutGemvServeEngine`s (several models) decode off one `Arc<WorkerPool>`
+//! with bit-identical results to each engine running alone on a serial
+//! pool (isolation + determinism), and saturating the pool with far more
+//! jobs than workers never deadlocks.
+
+use std::sync::Arc;
+
+use sail::coordinator::{Batcher, BatcherConfig, DecodeEngine, LutGemvServeEngine, Request};
+use sail::lutgemv::{GemvOutput, LutGemvEngine};
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::WorkerPool;
+use sail::util::Prng;
+
+fn engine(seed: u64, batch: usize, pool: Arc<WorkerPool>) -> LutGemvServeEngine {
+    // vocab 160 → 3 column tiles at the default tile width, so every
+    // decode step genuinely dispatches multi-tile work onto the pool.
+    LutGemvServeEngine::random(seed, 160, 32, QuantLevel::Q4, 16, 4, batch, 64, pool)
+}
+
+/// Greedy-decode `steps` positions from fixed seeds, returning the token
+/// stream (one Vec per step).
+fn decode_stream(e: &mut LutGemvServeEngine, steps: i32) -> Vec<Vec<i32>> {
+    let mut toks = vec![3, 11];
+    let mut got = Vec::new();
+    for pos in 0..steps {
+        toks = e.step(&toks, &[pos, pos], &[true, true]).unwrap();
+        got.push(toks.clone());
+    }
+    got
+}
+
+#[test]
+fn two_engines_interleaved_on_one_pool_match_isolated_serial() {
+    // Baselines: each model alone on a serial pool.
+    let mut a_alone = engine(7, 2, WorkerPool::shared(1));
+    let mut b_alone = engine(21, 2, WorkerPool::shared(1));
+    let want_a = decode_stream(&mut a_alone, 12);
+    let want_b = decode_stream(&mut b_alone, 12);
+    assert_ne!(want_a, want_b, "distinct seeds must give distinct models");
+
+    // Two models, one shared persistent pool, steps interleaved.
+    let pool = WorkerPool::shared(4);
+    let mut a = engine(7, 2, Arc::clone(&pool));
+    let mut b = engine(21, 2, Arc::clone(&pool));
+    let (mut toks_a, mut toks_b) = (vec![3, 11], vec![3, 11]);
+    let (mut got_a, mut got_b) = (Vec::new(), Vec::new());
+    for pos in 0..12 {
+        toks_a = a.step(&toks_a, &[pos, pos], &[true, true]).unwrap();
+        got_a.push(toks_a.clone());
+        toks_b = b.step(&toks_b, &[pos, pos], &[true, true]).unwrap();
+        got_b.push(toks_b.clone());
+    }
+    assert_eq!(got_a, want_a, "engine A drifted on the shared pool");
+    assert_eq!(got_b, want_b, "engine B drifted on the shared pool");
+    assert!(pool.generations() > 0, "shared pool never dispatched");
+}
+
+#[test]
+fn concurrent_engines_on_one_pool_stay_isolated() {
+    // The same isolation invariant under real concurrency: two OS threads
+    // drive their own engines against one pool simultaneously.
+    let mut a_alone = engine(5, 2, WorkerPool::shared(1));
+    let mut b_alone = engine(13, 2, WorkerPool::shared(1));
+    let want_a = decode_stream(&mut a_alone, 16);
+    let want_b = decode_stream(&mut b_alone, 16);
+
+    let pool = WorkerPool::shared(4);
+    let (got_a, got_b) = std::thread::scope(|scope| {
+        let pa = Arc::clone(&pool);
+        let pb = Arc::clone(&pool);
+        let ha = scope.spawn(move || decode_stream(&mut engine(5, 2, pa), 16));
+        let hb = scope.spawn(move || decode_stream(&mut engine(13, 2, pb), 16));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+    assert_eq!(got_a, want_a, "concurrent engine A diverged");
+    assert_eq!(got_b, want_b, "concurrent engine B diverged");
+}
+
+#[test]
+fn batchers_on_a_shared_pool_serve_identical_tokens() {
+    let reqs = |base: u64| -> Vec<Request> {
+        (0..5).map(|id| Request::new(base + id, vec![1 + (base + id) as i32, 2], 4)).collect()
+    };
+    let run = |e: LutGemvServeEngine, reqs: Vec<Request>| {
+        let mut b = Batcher::new(e, BatcherConfig::default());
+        for r in reqs {
+            b.submit(r);
+        }
+        let mut done = b.run_to_completion().unwrap();
+        done.sort_by_key(|r| r.id);
+        done.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>()
+    };
+    let want_a = run(engine(7, 3, WorkerPool::shared(1)), reqs(0));
+    let want_b = run(engine(21, 3, WorkerPool::shared(1)), reqs(100));
+
+    let pool = WorkerPool::shared(4);
+    let got_a = run(engine(7, 3, Arc::clone(&pool)), reqs(0));
+    let got_b = run(engine(21, 3, Arc::clone(&pool)), reqs(100));
+    assert_eq!(got_a, want_a);
+    assert_eq!(got_b, want_b);
+}
+
+#[test]
+fn saturating_the_pool_with_excess_jobs_never_deadlocks() {
+    // 2 workers, 4 caller threads, each dispatching 64-tile GEMVs (32×
+    // more jobs than workers, plus queued dispatches from the other
+    // callers). Everything must complete and stay bit-exact.
+    let pool = WorkerPool::shared(2);
+    let mut prng = Prng::new(31);
+    let w: Vec<f32> = (0..64 * 64).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, 64, 64, QuantLevel::Q4, 32);
+    let xs: Vec<QuantizedVector> = (0..4)
+        .map(|_| {
+            let x: Vec<f32> = (0..64).map(|_| prng.normal() as f32).collect();
+            QuantizedVector::quantize(&x)
+        })
+        .collect();
+    let mut ref_eng = LutGemvEngine::new(wt.clone(), 4);
+    ref_eng.tile_cols = 1;
+    let (want, want_stats) = ref_eng.gemv_batch(&xs);
+
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let pool = Arc::clone(&pool);
+            let wt = wt.clone();
+            let xs = xs.clone();
+            let want = want.clone();
+            scope.spawn(move || {
+                let mut eng = LutGemvEngine::new(wt, 4);
+                eng.tile_cols = 1; // 64 single-column tiles per dispatch
+                let mut out = GemvOutput::new();
+                for round in 0..10 {
+                    let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                    assert_eq!(out, want, "caller {t} round {round}");
+                    assert_eq!(stats, want_stats, "caller {t} round {round} stats");
+                }
+            });
+        }
+    });
+    // 4 callers × 10 rounds all dispatched through the queue.
+    assert_eq!(pool.generations(), 40);
+}

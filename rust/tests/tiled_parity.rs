@@ -128,6 +128,12 @@ fn stats_invariant_across_thread_counts_fixed_shape() {
         let mut out = GemvOutput::new();
         all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out));
     }
+    {
+        // Ambient width too (SAIL_POOL_THREADS in the CI matrix).
+        let pool = WorkerPool::auto();
+        let mut out = GemvOutput::new();
+        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out));
+    }
     for (i, s) in all_stats.iter().enumerate().skip(1) {
         assert_eq!(*s, all_stats[0], "stats at pool #{i} differ");
     }
