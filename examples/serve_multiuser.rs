@@ -1,18 +1,54 @@
 //! End-to-end driver (DESIGN.md per-experiment index, row "E2E"):
-//! serve batched multi-user requests against the real tiny model through
-//! the full stack — Rust coordinator → PJRT → AOT-compiled JAX/Pallas
-//! decode step with actual LUT-GEMV numerics — and report latency and
-//! throughput. Python is not involved at any point in this binary.
+//! serve batched multi-user requests through the full serving stack and
+//! report latency and throughput.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_multiuser`
-//! Options: --batch N --requests N --rate R --seed S --mock
+//! Engines (`--engine`):
+//! - `lut` (default): multi-layer KV-cached transformer decode on the
+//!   LUT-GEMV backend — every Q/K/V/O/FFN/head projection is a tiled,
+//!   thread-parallel LUT-GEMV on a shared worker pool, attention reads a
+//!   real q8 KV cache, and weight precision is mixed per layer;
+//! - `pjrt`: the AOT-compiled JAX/Pallas decode step through PJRT
+//!   (requires `make artifacts`);
+//! - `mock`: the deterministic token automaton (no compute).
+//!
+//! Run: `cargo run --release --example serve_multiuser`
+//! Options: --engine lut|pjrt|mock --batch N --requests N --rate R
+//!          --seed S --threads T --artifacts DIR  (--mock = --engine mock)
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use sail::coordinator::{BatcherConfig, MockEngine, PjrtEngine, Server, WorkloadGen};
+use sail::coordinator::{
+    BatcherConfig, MockEngine, PjrtEngine, Server, TransformerServeEngine, WorkloadGen,
+};
+use sail::model::{DecodeSpec, KvCacheSpec, LayerSpec};
+use sail::quant::QuantLevel;
+use sail::runtime::WorkerPool;
 use sail::util::cli::Args;
+
+/// The demo serving model: 4 decoder layers at mixed per-layer precision
+/// (the paper's "optimal bit precision varies across layers"), q8 KV.
+fn demo_spec() -> DecodeSpec {
+    DecodeSpec {
+        hidden: 64,
+        heads: 8,
+        kv_heads: 4,
+        ffn: 128,
+        vocab: 2048,
+        max_context: 256,
+        group: 16,
+        layer_specs: vec![
+            LayerSpec::new(QuantLevel::Q8, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+            LayerSpec::new(QuantLevel::Q6, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+        ],
+        head: LayerSpec::new(QuantLevel::Q4, 4),
+        kv: KvCacheSpec::q8(),
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let mut args = Args::parse(std::env::args().skip(1));
@@ -20,20 +56,47 @@ fn main() -> anyhow::Result<()> {
     let n_requests: usize = args.opt("requests", 24);
     let rate: f64 = args.opt("rate", 4.0); // requests/sec (open loop)
     let seed: u64 = args.opt("seed", 42);
+    let threads: usize = args.opt("threads", 0); // 0 = auto
     let mock = args.flag("mock");
+    let engine_kind = args.opt_str("engine", if mock { "mock" } else { "lut" });
     let dir = args.opt_str("artifacts", "artifacts");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
     println!("=== SAIL end-to-end serving demo ===");
-    println!("engine: {}", if mock { "mock".into() } else { format!("PJRT ({dir})") });
+    println!("engine: {engine_kind}");
     println!("batch slots: {batch}, requests: {n_requests}, arrival rate: {rate}/s\n");
 
-    let server = if mock {
-        Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default())
-    } else {
-        let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
-        println!("loaded decode artifact (tiny-e2e: 4 layers, hidden 256, vocab 2048, ctx 256)\n");
-        Server::spawn(engine, BatcherConfig::default())
+    let server = match engine_kind.as_str() {
+        "mock" => Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default()),
+        "pjrt" => {
+            let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
+            println!(
+                "loaded decode artifact (tiny-e2e: 4 layers, hidden 256, vocab 2048, ctx 256)\n"
+            );
+            Server::spawn(engine, BatcherConfig::default())
+        }
+        "lut" => {
+            let pool = if threads == 0 {
+                Arc::new(WorkerPool::auto())
+            } else {
+                WorkerPool::shared(threads)
+            };
+            let spec = demo_spec();
+            println!(
+                "LUT transformer: {} layers, hidden {}, vocab {}, ctx {}, q8 KV, \
+                 pool {} threads\n",
+                spec.layers(),
+                spec.hidden,
+                spec.vocab,
+                spec.max_context,
+                pool.threads()
+            );
+            Server::spawn(
+                TransformerServeEngine::random(spec, seed, batch, pool)?,
+                BatcherConfig::default(),
+            )
+        }
+        other => anyhow::bail!("unknown engine {other} (lut|pjrt|mock)"),
     };
 
     // Open-loop Poisson arrivals (the multi-user serving scenario §V-A).
@@ -79,7 +142,16 @@ fn main() -> anyhow::Result<()> {
     let mean: Duration =
         latencies.iter().sum::<Duration>() / latencies.len().max(1) as u32;
     println!("mean latency: {:.1} ms", mean.as_secs_f64() * 1e3);
-    println!("\n(every token came from the AOT-compiled LUT-GEMV decode step;");
-    println!(" see EXPERIMENTS.md §E2E for the recorded run)");
+    match engine_kind.as_str() {
+        "lut" => println!(
+            "\n(every token ran the full multi-layer KV-cached decode on the \
+             LUT-GEMV backend; see EXPERIMENTS.md §Perf for throughput rows)"
+        ),
+        "pjrt" => println!(
+            "\n(every token came from the AOT-compiled LUT-GEMV decode step;\n \
+             see EXPERIMENTS.md §E2E for the recorded run)"
+        ),
+        _ => {}
+    }
     Ok(())
 }

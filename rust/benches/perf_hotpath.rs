@@ -5,20 +5,26 @@
 //! lane-i32 accumulation × serial vs persistent-pool execution), the
 //! worker-pool dispatch itself (cold spawn vs warm persistent workers),
 //! the cycle model, the PRT, quant pack/unpack, Algorithm 1 conversion,
-//! the pipeline simulator, and the coordinator iteration loop (mock and
-//! LUT-GEMV engines). Results feed EXPERIMENTS.md §Perf before/after and
-//! are persisted to BENCH_hotpath.json next to Cargo.toml for the perf
-//! trajectory.
+//! the pipeline simulator, the coordinator iteration loop (mock and
+//! LUT-GEMV engines), and the multi-layer KV-cached transformer decode
+//! workload at batch 1/8/32 × pool width 1/2/8 (tokens/s, with a
+//! per-layer per-projection GemvStats rollup and a cross-width
+//! bit-exactness assert). Results feed EXPERIMENTS.md §Perf before/after
+//! and are persisted to BENCH_hotpath.json next to Cargo.toml for the
+//! perf trajectory.
 //!
 //! Run: cargo bench --bench perf_hotpath
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Duration;
 
-use sail::coordinator::{Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request};
+use sail::coordinator::{
+    argmax_logits, Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request,
+};
 use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
-use sail::model::ModelConfig;
+use sail::model::{DecodeItem, DecodeSpec, KvCacheSpec, LayerSpec, LutTransformer, ModelConfig};
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use sail::runtime::WorkerPool;
 use sail::sim::SailPerfModel;
@@ -207,6 +213,110 @@ fn main() {
         },
     ));
 
+    // --- multi-layer KV-cached transformer decode (tokens/s) ----------------
+    // The real serving workload: every Q/K/V/O/FFN/head projection of all
+    // 4 layers is a pooled LUT-GEMV at mixed per-layer precision, and
+    // attention reads the q8 KV cache each token. Matrix: batch 1/8/32 ×
+    // pool width 1/2/8 (explicit pools, independent of SAIL_POOL_THREADS,
+    // so the artifact rows are comparable across CI legs).
+    let decode_spec = || DecodeSpec {
+        hidden: 64,
+        heads: 8,
+        kv_heads: 4,
+        ffn: 128,
+        vocab: 256,
+        max_context: 64,
+        group: 16,
+        layer_specs: vec![
+            LayerSpec::new(QuantLevel::Q8, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+            LayerSpec::new(QuantLevel::Q6, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+        ],
+        head: LayerSpec::new(QuantLevel::Q4, 4),
+        kv: KvCacheSpec::q8(),
+    };
+    let decode_opts = BenchOpts {
+        warmup: Duration::from_millis(50),
+        budget: Duration::from_millis(250),
+        ..opts
+    };
+    let mut decode_rates: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    for width in [1usize, 2, 8] {
+        let dpool = WorkerPool::shared(width);
+        for batch in [1usize, 8, 32] {
+            let mut m =
+                LutTransformer::random(decode_spec(), 77, batch, Arc::clone(&dpool)).unwrap();
+            let max_ctx = m.spec().max_context;
+            let mut pos = 0usize;
+            let r = time_throughput(
+                &format!("decode 4L h64 q8-KV b{batch} x{width}T (tok/s)"),
+                decode_opts,
+                batch as f64,
+                || {
+                    if pos == max_ctx {
+                        for s in 0..batch {
+                            m.reset_slot(s).unwrap();
+                        }
+                        pos = 0;
+                    }
+                    let items: Vec<DecodeItem> = (0..batch)
+                        .map(|s| DecodeItem { slot: s, token: (7 + s) as i32, pos })
+                        .collect();
+                    m.step(&items).unwrap();
+                    pos += 1;
+                },
+            );
+            decode_rates.insert((batch, width), r.items_per_sec());
+            results.push(r);
+        }
+    }
+
+    // Cross-width bit-exactness + per-layer per-projection rollup: the
+    // token stream must be identical at every pool width, and every
+    // projection of every layer must actually run on the LUT path.
+    let mut decode_streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    let mut decode_layer_stats: Vec<Json> = Vec::new();
+    for width in [1usize, 2, 8] {
+        let dpool = WorkerPool::shared(width);
+        let mut m = LutTransformer::random(decode_spec(), 77, 2, dpool).unwrap();
+        let mut toks = vec![3i32, 11];
+        let mut got = Vec::new();
+        for pos in 0..16usize {
+            let items: Vec<DecodeItem> = toks
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| DecodeItem { slot: s, token: t, pos })
+                .collect();
+            m.step(&items).unwrap();
+            toks = (0..2).map(|s| argmax_logits(m.logits().row(s))).collect();
+            got.push(toks.clone());
+        }
+        decode_streams.push(got);
+        if width == 1 {
+            for (l, ls) in m.stats.layers.iter().enumerate() {
+                let mut o = BTreeMap::new();
+                o.insert("layer".to_string(), Json::Num(l as f64));
+                for (name, s) in ls.projections() {
+                    assert!(
+                        s.luts_built > 0 && s.lut_reads > 0,
+                        "layer {l} projection {name} skipped the LUT path"
+                    );
+                    o.insert(format!("{name}_lut_reads"), Json::Num(s.lut_reads as f64));
+                }
+                o.insert(
+                    "total_luts_built".to_string(),
+                    Json::Num(ls.total().luts_built as f64),
+                );
+                decode_layer_stats.push(Json::Obj(o));
+            }
+            assert!(m.stats.head.lut_reads > 0, "head projection skipped the LUT path");
+        }
+    }
+    let decode_bit_exact =
+        decode_streams[0] == decode_streams[1] && decode_streams[0] == decode_streams[2];
+    assert!(decode_bit_exact, "decode token streams diverged across pool widths");
+
     println!("== perf_hotpath ==");
     for r in &results {
         println!("{}", r.report());
@@ -225,31 +335,36 @@ fn main() {
         "lane-i32 pool over scalar-i64 serial (b8, {threads} threads): {speedup_b8:.2}x, \
          bit-exact: {bit_exact}"
     );
+    let d = |b: usize, w: usize| decode_rates[&(b, w)];
+    println!(
+        "multi-layer decode (4L h64 q8-KV) tok/s: b8 {:.0}/{:.0}/{:.0} @ 1/2/8T \
+         (x8T/x1T = {:.2}x), b32 x8T {:.0}, bit-exact across widths: {decode_bit_exact}",
+        d(8, 1),
+        d(8, 2),
+        d(8, 8),
+        d(8, 8) / d(8, 1),
+        d(32, 8)
+    );
 
+    let mut extras = BTreeMap::new();
+    extras.insert("speedup_b8_tiled_vs_scalar".to_string(), Json::Num(speedup_b8));
+    extras.insert("speedup_b8_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b8));
+    extras
+        .insert("speedup_b32_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b32));
+    extras.insert("bit_exact_vs_reference".to_string(), Json::Bool(bit_exact));
+    extras.insert("decode_bit_exact_across_widths".to_string(), Json::Bool(decode_bit_exact));
+    extras.insert("decode_speedup_b8_x8T_vs_x1T".to_string(), Json::Num(d(8, 8) / d(8, 1)));
+    extras.insert("decode_layer_stats".to_string(), Json::Arr(decode_layer_stats));
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
-    std::fs::write(
-        path,
-        render_json(&results, threads, speedup_b8, speedup_lane_b8, speedup_lane_b32, bit_exact),
-    )
-    .expect("writing BENCH_hotpath.json");
+    std::fs::write(path, render_json(&results, threads, extras))
+        .expect("writing BENCH_hotpath.json");
     println!("persisted {} results to {path}", results.len());
 }
 
-fn render_json(
-    results: &[BenchResult],
-    threads: usize,
-    speedup_b8: f64,
-    speedup_lane_b8: f64,
-    speedup_lane_b32: f64,
-    bit_exact: bool,
-) -> String {
-    let mut root = BTreeMap::new();
+fn render_json(results: &[BenchResult], threads: usize, extras: BTreeMap<String, Json>) -> String {
+    let mut root = extras;
     root.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
-    root.insert("speedup_b8_tiled_vs_scalar".to_string(), Json::Num(speedup_b8));
-    root.insert("speedup_b8_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b8));
-    root.insert("speedup_b32_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b32));
-    root.insert("bit_exact_vs_reference".to_string(), Json::Bool(bit_exact));
     root.insert(
         "results".to_string(),
         Json::Arr(

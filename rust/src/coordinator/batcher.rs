@@ -9,6 +9,11 @@
 //! Invariants (property-tested):
 //! - a slot is reset before every admission (no KV leakage),
 //! - per-slot positions increase by exactly 1 per active iteration,
+//! - no active position ever reaches `max_context` — over-long prompts
+//!   finish with `ContextFull` *during prefill*, before an out-of-window
+//!   KV write could happen,
+//! - empty prompts are answered at admission (`EmptyPrompt`, zero tokens)
+//!   instead of crashing the serving thread,
 //! - FIFO admission: requests start in arrival order,
 //! - every request eventually completes (no starvation),
 //! - outputs are identical to running each request alone (isolation).
@@ -24,8 +29,10 @@ use super::request::{FinishReason, Request, Response};
 /// Batcher configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
-    /// Emit the prompt's last token's logits as the first generated token
-    /// (standard next-token semantics).
+    /// Honour requests' `eos` stop token: when enabled, a generated token
+    /// equal to `Request::eos` finishes the request with
+    /// [`FinishReason::Eos`]; when disabled, generation runs to the token
+    /// budget (or the context limit) even through stop tokens.
     pub eos_enabled: bool,
     /// Queue discipline for admissions.
     pub policy: AdmissionPolicy,
@@ -99,24 +106,39 @@ impl<E: DecodeEngine> Batcher<E> {
     }
 
     /// Admit queued requests into free slots (FIFO), resetting slot KV.
-    fn admit(&mut self) -> Result<()> {
+    ///
+    /// Admission hardening: a request with an empty prompt cannot be
+    /// prefilled (there is no first token to feed) — it is answered
+    /// immediately with a zero-token [`FinishReason::EmptyPrompt`]
+    /// response pushed onto `done` instead of crashing the serving thread,
+    /// and the slot stays free for the next queued request.
+    fn admit(&mut self, done: &mut Vec<Response>) -> Result<()> {
         for s in 0..self.slots.len() {
-            if self.slots[s].is_none() {
-                if let Some(req) = self.queue.pop(self.iterations) {
-                    self.engine.reset_slot(s)?;
-                    self.admitted += 1;
-                    let first = req.prompt[0];
-                    self.slots[s] = Some(Slot {
-                        req,
-                        prompt_idx: 1,
-                        pos: 0,
-                        next_input: first,
-                        generated: Vec::new(),
-                        first_token_at: None,
+            while self.slots[s].is_none() {
+                let Some(req) = self.queue.pop(self.iterations) else {
+                    return Ok(());
+                };
+                if req.prompt.is_empty() {
+                    done.push(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        ttft: std::time::Duration::default(),
+                        latency: Instant::now() - req.arrival,
+                        finish: FinishReason::EmptyPrompt,
                     });
-                } else {
-                    break;
+                    continue;
                 }
+                self.engine.reset_slot(s)?;
+                self.admitted += 1;
+                let first = req.prompt[0];
+                self.slots[s] = Some(Slot {
+                    req,
+                    prompt_idx: 1,
+                    pos: 0,
+                    next_input: first,
+                    generated: Vec::new(),
+                    first_token_at: None,
+                });
             }
         }
         Ok(())
@@ -124,9 +146,10 @@ impl<E: DecodeEngine> Batcher<E> {
 
     /// One iteration: admit, step the engine once, harvest completions.
     pub fn run_iteration(&mut self) -> Result<Vec<Response>> {
-        self.admit()?;
+        let mut done = Vec::new();
+        self.admit(&mut done)?;
         if self.active_slots() == 0 {
-            return Ok(Vec::new());
+            return Ok(done);
         }
         let b = self.slots.len();
         let mut tokens = vec![0i32; b];
@@ -142,12 +165,28 @@ impl<E: DecodeEngine> Batcher<E> {
         let next = self.engine.step(&tokens, &positions, &active)?;
         self.iterations += 1;
 
-        let mut done = Vec::new();
         let max_ctx = self.engine.max_context() as i32;
         for (s, slot) in self.slots.iter_mut().enumerate() {
             let Some(sl) = slot.as_mut() else { continue };
             sl.pos += 1;
             if sl.prompt_idx < sl.req.prompt.len() {
+                if sl.pos >= max_ctx {
+                    // The KV window is exhausted with prompt tokens still
+                    // unfed: feeding another one would write KV position
+                    // `max_context` out of bounds (the check used to live
+                    // only in the generating branch, so over-long prompts
+                    // silently prefilled past the window). No logits were
+                    // ever sampled, so the response carries zero tokens.
+                    let sl = slot.take().unwrap();
+                    done.push(Response {
+                        id: sl.req.id,
+                        tokens: Vec::new(),
+                        ttft: std::time::Duration::default(),
+                        latency: Instant::now() - sl.req.arrival,
+                        finish: FinishReason::ContextFull,
+                    });
+                    continue;
+                }
                 // Still prefilling: feed the next prompt token, discard
                 // the model's prediction.
                 sl.next_input = sl.req.prompt[sl.prompt_idx];
@@ -352,6 +391,188 @@ mod tests {
         let ids: Vec<u64> = done.iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 2, 0]);
         assert_eq!(done.iter().map(|r| r.tokens.len()).sum::<usize>(), 27);
+    }
+
+    /// MockEngine wrapper recording the largest position ever fed to the
+    /// engine on an active slot — the "no KV write outside the window"
+    /// observability the admission-hardening tests assert on.
+    struct TrackingEngine {
+        inner: MockEngine,
+        max_pos_fed: i32,
+    }
+
+    impl TrackingEngine {
+        fn new(inner: MockEngine) -> Self {
+            TrackingEngine { inner, max_pos_fed: -1 }
+        }
+    }
+
+    impl DecodeEngine for TrackingEngine {
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn max_context(&self) -> usize {
+            self.inner.max_context()
+        }
+
+        fn step(
+            &mut self,
+            tokens: &[i32],
+            positions: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<i32>> {
+            for (s, &p) in positions.iter().enumerate() {
+                if active[s] {
+                    self.max_pos_fed = self.max_pos_fed.max(p);
+                }
+            }
+            self.inner.step(tokens, positions, active)
+        }
+
+        fn reset_slot(&mut self, slot: usize) -> Result<()> {
+            self.inner.reset_slot(slot)
+        }
+    }
+
+    #[test]
+    fn empty_prompt_rejected_with_response_not_panic() {
+        // Regression: pre-PR `admit` indexed `req.prompt[0]` and panicked,
+        // taking the serving thread down with it.
+        let mut b = mk_batcher(2);
+        b.submit(Request::new(0, vec![], 4));
+        b.submit(Request::new(1, vec![5], 2));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let empty = done.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(empty.finish, FinishReason::EmptyPrompt);
+        assert!(empty.tokens.is_empty());
+        let ok = done.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(ok.finish, FinishReason::MaxTokens);
+        assert_eq!(ok.tokens.len(), 2);
+    }
+
+    #[test]
+    fn empty_prompt_alone_resolves_without_engine_work() {
+        let mut b = mk_batcher(1);
+        b.submit(Request::new(0, vec![], 4));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::EmptyPrompt);
+        assert_eq!(b.iterations(), 0, "a rejected request must not step the engine");
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn prompt_longer_than_context_finishes_context_full_during_prefill() {
+        // Regression: pre-PR the ctx check ran only in the generating
+        // branch, so a 12-token prompt prefilled positions 8..11 into an
+        // 8-token KV window (out-of-bounds writes once the cache is real).
+        let mut b = Batcher::new(
+            TrackingEngine::new(MockEngine::new(1, 97, 8)),
+            BatcherConfig::default(),
+        );
+        b.submit(Request::new(0, (1..=12).collect(), 5));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::ContextFull);
+        assert!(done[0].tokens.is_empty(), "no logits were ever sampled");
+        assert!(
+            b.engine().max_pos_fed < 8,
+            "position {} fed beyond the KV window",
+            b.engine().max_pos_fed
+        );
+    }
+
+    #[test]
+    fn prompt_exactly_context_still_gets_one_token() {
+        // The last prompt token sits at position max_context-1; its logits
+        // are the one token this request can legally produce.
+        let mut b = Batcher::new(
+            TrackingEngine::new(MockEngine::new(1, 97, 8)),
+            BatcherConfig::default(),
+        );
+        b.submit(Request::new(0, (1..=8).collect(), 5));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::ContextFull);
+        assert_eq!(done[0].tokens.len(), 1);
+        assert_eq!(b.engine().max_pos_fed, 7);
+    }
+
+    #[test]
+    fn admission_hardening_property() {
+        // Random mixes of empty, short, exact-fit, and over-long prompts:
+        // every request completes with the right finish reason and token
+        // count, and no active position ever reaches max_context.
+        propcheck::check(
+            "batcher-admission-hardening",
+            propcheck::Config { cases: 60, seed: 99 },
+            |p, _| {
+                let batch = p.usize_in(1, 5);
+                let max_ctx = p.usize_in(2, 11);
+                let n_req = p.usize_in(1, 13);
+                let seed = p.next_u64();
+                (batch, max_ctx, n_req, seed)
+            },
+            |&(batch, max_ctx, n_req, seed)| {
+                let mut prng = Prng::new(seed);
+                let mut b = Batcher::new(
+                    TrackingEngine::new(MockEngine::new(batch, 97, max_ctx)),
+                    BatcherConfig::default(),
+                );
+                let mut expect = std::collections::HashMap::new();
+                for id in 0..n_req as u64 {
+                    let plen = prng.usize_in(0, max_ctx + 4);
+                    let prompt: Vec<i32> =
+                        (0..plen).map(|_| prng.usize_in(1, 97) as i32).collect();
+                    let max_new = prng.usize_in(1, 8);
+                    expect.insert(id, (plen, max_new));
+                    b.submit(Request::new(id, prompt, max_new));
+                }
+                let done = b.run_to_completion().map_err(|e| e.to_string())?;
+                if done.len() != n_req {
+                    return Err(format!("{} of {n_req} completed", done.len()));
+                }
+                for r in &done {
+                    let (plen, max_new) = expect[&r.id];
+                    let (want_finish, want_tokens) = if plen == 0 {
+                        (FinishReason::EmptyPrompt, 0)
+                    } else if plen > max_ctx {
+                        (FinishReason::ContextFull, 0)
+                    } else {
+                        let avail = max_ctx - plen + 1;
+                        if max_new <= avail {
+                            (FinishReason::MaxTokens, max_new)
+                        } else {
+                            (FinishReason::ContextFull, avail)
+                        }
+                    };
+                    if r.finish != want_finish {
+                        return Err(format!(
+                            "req {} (plen {plen}): finish {:?}, want {want_finish:?}",
+                            r.id, r.finish
+                        ));
+                    }
+                    if r.tokens.len() != want_tokens {
+                        return Err(format!(
+                            "req {} (plen {plen}): {} tokens, want {want_tokens}",
+                            r.id,
+                            r.tokens.len()
+                        ));
+                    }
+                }
+                if b.engine().max_pos_fed >= max_ctx as i32 {
+                    return Err(format!(
+                        "position {} fed beyond max_context {max_ctx}",
+                        b.engine().max_pos_fed
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

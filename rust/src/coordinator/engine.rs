@@ -1,24 +1,51 @@
 //! The decode-engine abstraction the batcher drives.
 //!
-//! Three execution engines implement it:
+//! Four execution engines implement it:
+//! - [`TransformerServeEngine`] — the default LUT serving backend: a real
+//!   multi-layer KV-cached transformer ([`LutTransformer`]) whose every
+//!   projection (Q/K/V/O, both FFN matrices, the output head) is a
+//!   LUT-GEMV on the shared worker pool, with per-token attention over a
+//!   real fp16/q8 KV cache;
 //! - [`PjrtEngine`] — the AOT-compiled model through PJRT (production when
 //!   artifacts are present);
-//! - [`LutGemvServeEngine`] — the tiled multi-threaded LUT-GEMV backend on
-//!   the decode hot path: every `step` quantizes per-slot hidden state and
-//!   runs one batched LUT-GEMV over the tied output projection, so the
-//!   batcher serves tokens through the paper's actual kernel;
+//! - [`LutGemvServeEngine`] — the single-projection recurrent toy, kept
+//!   for micro-benches where one GEMV per step isolates kernel cost from
+//!   model structure;
 //! - [`MockEngine`] — a deterministic token automaton with the same
 //!   slot/KV semantics, for property-testing batching invariants without
 //!   any compute.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
+use crate::model::{DecodeItem, DecodeSpec, DecodeStats, LutTransformer};
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use crate::runtime::WorkerPool;
+
+/// Greedy argmax over a logits row, NaN-safe.
+///
+/// Tie/edge rule (documented, pinned by tests): NaN entries are skipped;
+/// among equal maxima the **lowest index** wins; an all-NaN or empty row
+/// maps to token 0 — an explicit sentinel, not the artifact of a
+/// failed `>` comparison (the pre-fix code returned index 0 for
+/// `[NaN, …]` rows because every `v > NaN` is false, silently masking
+/// poisoned logits).
+pub fn argmax_logits(row: &[f32]) -> i32 {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &v) in row.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if v <= bv => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i as i32).unwrap_or(0)
+}
 
 /// One decode iteration over all batch slots.
 ///
@@ -87,8 +114,8 @@ impl DecodeEngine for PjrtEngine {
     }
 }
 
-/// The LUT-GEMV serving backend: decode steps run on the real tiled,
-/// thread-parallel LUT-GEMV path instead of a mock.
+/// The single-projection LUT-GEMV micro-bench backend (the *toy*; the
+/// default serving backend is [`TransformerServeEngine`]).
 ///
 /// The "model" is a deterministic single-layer recurrent LM built to put
 /// all of its compute where SAIL's is — the quantized output projection:
@@ -183,16 +210,6 @@ impl LutGemvServeEngine {
     pub fn pool(&self) -> &Arc<WorkerPool> {
         &self.pool
     }
-
-    fn argmax(row: &[f32]) -> i32 {
-        let mut best = 0usize;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = i;
-            }
-        }
-        best as i32
-    }
 }
 
 impl DecodeEngine for LutGemvServeEngine {
@@ -209,8 +226,17 @@ impl DecodeEngine for LutGemvServeEngine {
     }
 
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
-        assert_eq!(tokens.len(), self.batch);
-        assert_eq!(positions.len(), self.batch);
+        // A mis-sized call is a caller bug, but it must surface as an
+        // error the server can report, not a panic that aborts the worker.
+        let b = self.batch;
+        if tokens.len() != b || positions.len() != b || active.len() != b {
+            bail!(
+                "step arity mismatch: tokens={} positions={} active={} batch={b}",
+                tokens.len(),
+                positions.len(),
+                active.len()
+            );
+        }
         let k = self.gemv.k();
         // Recurrent state update for active slots (inactive slots keep
         // their state untouched — the fixed-batch artifact still computes
@@ -231,7 +257,7 @@ impl DecodeEngine for LutGemvServeEngine {
         self.gemv_stats += stats;
         self.steps += 1;
         Ok((0..self.batch)
-            .map(|s| if active[s] { Self::argmax(self.logits.row(s)) } else { 0 })
+            .map(|s| if active[s] { argmax_logits(self.logits.row(s)) } else { 0 })
             .collect())
     }
 
@@ -239,6 +265,95 @@ impl DecodeEngine for LutGemvServeEngine {
         let k = self.gemv.k();
         self.hidden[slot * k..(slot + 1) * k].fill(0.0);
         Ok(())
+    }
+}
+
+/// The default LUT serving backend: multi-layer KV-cached transformer
+/// decode, every projection a LUT-GEMV on the shared pool.
+///
+/// This is the generation-stage workload of the paper served end-to-end:
+/// the batcher's per-iteration `(token, position)` pairs become
+/// [`DecodeItem`]s for the **active** slots only (inactive slots cost
+/// nothing and are never touched — their KV panes are per-slot state), the
+/// model runs all layers, and the next token per slot is the NaN-safe
+/// argmax of its logits row.
+///
+/// Determinism: the model is bit-identical at every pool width and across
+/// batch compositions (`tests/decode_serving.rs`), so the serving
+/// invariants the mock pins down hold on the real multi-layer path too.
+pub struct TransformerServeEngine {
+    model: LutTransformer,
+}
+
+impl TransformerServeEngine {
+    pub fn new(model: LutTransformer) -> Self {
+        TransformerServeEngine { model }
+    }
+
+    /// Seeded-random model: the same `(spec, seed)` gives the same model
+    /// at any batch size and pool width.
+    pub fn random(
+        spec: DecodeSpec,
+        seed: u64,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+    ) -> Result<Self> {
+        Ok(TransformerServeEngine { model: LutTransformer::random(spec, seed, batch, pool)? })
+    }
+
+    pub fn model(&self) -> &LutTransformer {
+        &self.model
+    }
+
+    /// Per-layer, per-projection kernel counters (rolled up across steps).
+    pub fn stats(&self) -> &DecodeStats {
+        &self.model.stats
+    }
+}
+
+impl DecodeEngine for TransformerServeEngine {
+    fn batch(&self) -> usize {
+        self.model.batch()
+    }
+
+    fn vocab(&self) -> usize {
+        self.model.spec().vocab
+    }
+
+    fn max_context(&self) -> usize {
+        self.model.spec().max_context
+    }
+
+    fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        let b = self.model.batch();
+        if tokens.len() != b || positions.len() != b || active.len() != b {
+            bail!(
+                "step arity mismatch: tokens={} positions={} active={} batch={b}",
+                tokens.len(),
+                positions.len(),
+                active.len()
+            );
+        }
+        let mut items = Vec::with_capacity(b);
+        for s in 0..b {
+            if !active[s] {
+                continue;
+            }
+            if positions[s] < 0 {
+                bail!("negative position {} for slot {s}", positions[s]);
+            }
+            items.push(DecodeItem { slot: s, token: tokens[s], pos: positions[s] as usize });
+        }
+        self.model.step(&items)?;
+        let mut next = vec![0i32; b];
+        for (i, it) in items.iter().enumerate() {
+            next[it.slot] = argmax_logits(self.model.logits().row(i));
+        }
+        Ok(next)
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        self.model.reset_slot(slot)
     }
 }
 
@@ -401,6 +516,94 @@ mod tests {
         let engine = b.engine();
         assert!(engine.steps > 0);
         assert!(engine.gemv_stats.lut_reads > 0, "no LUT reads on the serving path");
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_with_documented_tie_rule() {
+        // Regression: the pre-fix `v > row[best]` scan returned index 0
+        // whenever row[0] was NaN (every comparison against NaN is false).
+        assert_eq!(argmax_logits(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax_logits(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax_logits(&[2.0, f32::NAN, 1.0]), 0);
+        // All-NaN and empty rows map to the token-0 sentinel.
+        assert_eq!(argmax_logits(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_logits(&[]), 0);
+        // Ties: lowest index wins.
+        assert_eq!(argmax_logits(&[3.0, 3.0, 1.0]), 0);
+        assert_eq!(argmax_logits(&[1.0, 3.0, 3.0]), 1);
+        // -inf is an ordinary (very small) value, not a sentinel.
+        assert_eq!(argmax_logits(&[f32::NEG_INFINITY, -1.0]), 1);
+        assert_eq!(argmax_logits(&[f32::NEG_INFINITY, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn mis_sized_step_is_an_error_not_a_panic() {
+        // Regression: pre-fix these were `assert_eq!`s — a bad caller
+        // aborted the server worker instead of getting an Err back.
+        let mut e = lut_engine(2, 1);
+        assert!(e.step(&[1], &[0], &[true]).is_err());
+        assert!(e.step(&[1, 2], &[0], &[true, true]).is_err());
+        assert!(e.step(&[1, 2], &[0, 0], &[true]).is_err());
+        // The engine still serves after a rejected call.
+        assert!(e.step(&[1, 2], &[0, 0], &[true, true]).is_ok());
+
+        let mut t = transformer_engine(2, 1);
+        assert!(t.step(&[1], &[0], &[true]).is_err());
+        assert!(t.step(&[1, 2], &[0, -1], &[true, true]).is_err(), "negative position");
+        assert!(t.step(&[1, 2], &[0, 0], &[true, true]).is_ok());
+    }
+
+    fn transformer_engine(batch: usize, threads: usize) -> TransformerServeEngine {
+        TransformerServeEngine::random(
+            crate::model::DecodeSpec::tiny(2, crate::model::KvCacheSpec::fp16()),
+            11,
+            batch,
+            WorkerPool::shared(threads),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn transformer_engine_serves_through_the_batcher() {
+        use crate::coordinator::batcher::{Batcher, BatcherConfig};
+        use crate::coordinator::request::Request;
+        let mut b = Batcher::new(transformer_engine(2, 2), BatcherConfig::default());
+        for id in 0..5u64 {
+            b.submit(Request::new(id, vec![1 + id as i32, 2], 3));
+        }
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5);
+        let vocab = b.engine().vocab() as i32;
+        for r in &done {
+            assert_eq!(r.tokens.len(), 3);
+            for &t in &r.tokens {
+                assert!((0..vocab).contains(&t), "token {t} outside vocab");
+            }
+        }
+        // Every projection of every layer ran on the LUT path.
+        let stats = b.engine().stats();
+        for (l, layer) in stats.layers.iter().enumerate() {
+            for (name, s) in layer.projections() {
+                assert!(s.luts_built > 0, "layer {l} {name}: no LUTs built");
+                assert!(s.lut_reads > 0, "layer {l} {name}: no LUT reads");
+            }
+        }
+        assert!(stats.head.lut_reads > 0, "head projection never ran");
+        assert!(stats.tokens > 0 && stats.steps > 0);
+    }
+
+    #[test]
+    fn transformer_engine_inactive_slots_are_inert() {
+        let mut e = transformer_engine(2, 1);
+        let out = e.step(&[3, 9], &[0, 0], &[true, false]).unwrap();
+        assert_eq!(out[1], 0, "inactive slot must report the 0 sentinel");
+        // Slot 1's KV pane was never written: stepping it later from
+        // position 0 matches a fresh engine exactly.
+        let mut fresh = transformer_engine(2, 1);
+        let a = e.step(&[5, 7], &[1, 0], &[true, true]).unwrap();
+        fresh.step(&[3, 0], &[0, 0], &[true, false]).unwrap();
+        let b = fresh.step(&[5, 7], &[1, 0], &[true, true]).unwrap();
+        assert_eq!(a[1], b[1], "slot 1 was touched while inactive");
     }
 
     #[test]

@@ -40,7 +40,12 @@ impl ServingMetrics {
         self.completed += 1;
         self.tokens_generated += r.tokens.len() as u64;
         self.latency.push(r.latency.as_secs_f64() * 1e3);
-        self.ttft.push(r.ttft.as_secs_f64() * 1e3);
+        // Zero-token responses (EmptyPrompt rejections, ContextFull during
+        // prefill) never had a first token; their placeholder ttft of 0
+        // would deflate the percentiles, so they are excluded.
+        if !r.tokens.is_empty() {
+            self.ttft.push(r.ttft.as_secs_f64() * 1e3);
+        }
         self.tokens_per_req.push(r.tokens.len() as f64);
         self.finished_at = Some(Instant::now());
     }
@@ -101,5 +106,28 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("requests=10"));
         assert!(m.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn zero_token_responses_do_not_deflate_ttft() {
+        let mut m = ServingMetrics::new();
+        m.record(&Response {
+            id: 0,
+            tokens: vec![1; 3],
+            ttft: Duration::from_millis(40),
+            latency: Duration::from_millis(80),
+            finish: FinishReason::MaxTokens,
+        });
+        // An admission rejection (or prefill ContextFull) carries ttft 0;
+        // it must not drag the percentiles toward zero.
+        m.record(&Response {
+            id: 1,
+            tokens: vec![],
+            ttft: Duration::default(),
+            latency: Duration::from_millis(1),
+            finish: FinishReason::EmptyPrompt,
+        });
+        assert_eq!(m.completed, 2);
+        assert!(m.ttft.p50() >= 40.0, "ttft p50 deflated: {}", m.ttft.p50());
     }
 }

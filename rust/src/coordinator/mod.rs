@@ -10,10 +10,12 @@
 //!
 //! - [`request`]: request/response types + the synthetic workload
 //!   generator (Poisson arrivals, geometric lengths);
-//! - [`engine`]: the `DecodeEngine` abstraction — the PJRT-backed
-//!   [`crate::runtime::DecodeModel`], the tiled LUT-GEMV serving backend
-//!   ([`LutGemvServeEngine`], decode on the paper's actual kernel), and a
-//!   deterministic mock for coordinator tests;
+//! - [`engine`]: the `DecodeEngine` abstraction — the default LUT serving
+//!   backend [`TransformerServeEngine`] (multi-layer KV-cached transformer
+//!   decode, every projection on the paper's actual kernel), the
+//!   PJRT-backed [`crate::runtime::DecodeModel`], the single-projection
+//!   toy [`LutGemvServeEngine`] for micro-benches, and a deterministic
+//!   mock for coordinator tests;
 //! - [`batcher`]: slot management and the iteration loop;
 //! - [`metrics`]: latency/throughput accounting;
 //! - [`server`]: the threaded front-end (submission queue + worker).
@@ -26,8 +28,11 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine};
+pub use engine::{
+    argmax_logits, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
+    TransformerServeEngine,
+};
 pub use metrics::ServingMetrics;
 pub use policy::{AdmissionPolicy, AdmissionQueue};
-pub use request::{Request, RequestId, Response, WorkloadGen};
+pub use request::{FinishReason, Request, RequestId, Response, WorkloadGen};
 pub use server::Server;

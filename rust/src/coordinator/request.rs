@@ -22,8 +22,10 @@ pub struct Request {
 }
 
 impl Request {
+    /// Build a request. An empty prompt is *accepted* here and rejected at
+    /// admission with [`FinishReason::EmptyPrompt`] — panicking this deep
+    /// would let one malformed client request abort the serving thread.
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        assert!(!prompt.is_empty(), "empty prompt");
         Request { id, prompt, max_new_tokens, eos: None, arrival: Instant::now() }
     }
 }
@@ -46,6 +48,10 @@ pub enum FinishReason {
     MaxTokens,
     Eos,
     ContextFull,
+    /// Rejected at admission: the prompt was empty, so there is nothing to
+    /// prefill and no logits to sample from. The response carries zero
+    /// tokens.
+    EmptyPrompt,
 }
 
 /// Synthetic workload generator: Poisson arrivals, uniform prompt lengths,
@@ -120,8 +126,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "empty prompt")]
-    fn empty_prompt_rejected() {
-        Request::new(0, vec![], 4);
+    fn empty_prompt_constructible_rejection_happens_at_admission() {
+        // Regression (pre-PR this asserted): construction must not panic —
+        // the batcher turns the request into a zero-token `EmptyPrompt`
+        // response instead (see `coordinator::batcher` tests).
+        let r = Request::new(0, vec![], 4);
+        assert!(r.prompt.is_empty());
     }
 }

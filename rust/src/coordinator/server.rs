@@ -81,10 +81,23 @@ impl Server {
                     }
                     continue;
                 }
-                for resp in batcher.run_iteration().expect("engine failure") {
-                    metrics.record(&resp);
-                    // Receiver may have hung up during shutdown; ignore.
-                    let _ = tx_done.send(resp);
+                // An engine error must not panic the worker (engines
+                // return `Err` for bad calls precisely so serving can
+                // degrade instead of abort): report it, stop the loop,
+                // and let clients observe "server worker terminated".
+                match batcher.run_iteration() {
+                    Ok(done) => {
+                        for resp in done {
+                            metrics.record(&resp);
+                            // Receiver may have hung up during shutdown;
+                            // ignore.
+                            let _ = tx_done.send(resp);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("sail server: engine failure, stopping worker: {e}");
+                        return metrics;
+                    }
                 }
             }
         });

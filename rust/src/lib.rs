@@ -13,8 +13,9 @@
 //!   bit-exact at every thread count), [`sim`] (tensor-level scheduling +
 //!   ping-pong pipeline)
 //! - **Evaluation substrate**: [`baselines`] (ARM / AMX / GPU / Neural
-//!   Cache models), [`model`] (transformer shape inventory), [`cost`]
-//!   (tokens-per-dollar and overhead accounting)
+//!   Cache models), [`model`] (transformer shape inventory — plus the
+//!   executable multi-layer KV-cached decode model every serving token
+//!   runs through), [`cost`] (tokens-per-dollar and overhead accounting)
 //! - **Serving system**: [`coordinator`] (multi-user batched serving),
 //!   [`runtime`] (PJRT execution of the AOT-compiled JAX/Pallas model)
 //! - **Support**: [`util`]

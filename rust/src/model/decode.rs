@@ -1,0 +1,708 @@
+//! Multi-layer KV-cached transformer decode on the LUT-GEMV path.
+//!
+//! This is the generation-stage workload of the paper made concrete: a
+//! deterministic llama-style decoder whose **every** weight product — the
+//! Q/K/V/O projections, both SwiGLU FFN matrices and the down projection
+//! of each layer, plus the output head — is one [`LutGemvEngine`] GEMV
+//! dispatched on the shared [`WorkerPool`], exactly the iteration-level
+//! tensor scheduling of §III-A. Per-token attention reads a real
+//! slot-indexed [`KvCache`] (fp16- or q8-backed per [`KvCacheSpec`],
+//! §III-B) whose element payload is allocated precisely as
+//! `KvCacheSpec::seq_bytes` accounts it.
+//!
+//! Weight precision is **per layer** ([`LayerSpec`]): the paper observes
+//! that the optimal bit precision varies across layers, so the spec names
+//! one `QuantLevel`/NBW pair per layer (and one for the head) instead of a
+//! single global level.
+//!
+//! Determinism contract (the repo's core invariant, extended to the
+//! multi-layer path and pinned by `tests/decode_serving.rs`):
+//!
+//! - the LUT-GEMV backend is bit-exact at every pool width, and all float
+//!   math outside the GEMVs (embedding, RMSNorm, attention softmax, SwiGLU,
+//!   residual adds) runs in a fixed sequential order per item — so token
+//!   streams are **bit-identical at every pool width**;
+//! - every per-item computation depends only on that item's slot state
+//!   (its KV pane) and inputs, so **batched decode equals isolated
+//!   decode** bit-for-bit.
+//!
+//! The token/position embedding is a stateless SplitMix64-style hash (no
+//! learned table): history enters a token's computation *only* through the
+//! KV cache, which is what makes the cache-read path load-bearing — if
+//! attention stopped reading the cache, every step would collapse to a
+//! function of (token, position) alone and the conformance tests would
+//! catch it.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::kv::{KvCache, KvCacheSpec};
+use super::ModelConfig;
+use crate::lutgemv::engine::GemvStats;
+use crate::lutgemv::{GemvOutput, LutGemvEngine};
+use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use crate::runtime::WorkerPool;
+
+/// Weight precision of one decoder layer (or of the output head): the
+/// quantization level of its matrices and the NBW the LUT streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub level: QuantLevel,
+    pub nbw: u32,
+}
+
+impl LayerSpec {
+    pub fn new(level: QuantLevel, nbw: u32) -> Self {
+        LayerSpec { level, nbw }
+    }
+}
+
+/// Shape + precision spec of a decode model. One entry of `layer_specs`
+/// per decoder layer — mixed per-layer precision is the intended use.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeSpec {
+    pub hidden: usize,
+    pub heads: usize,
+    /// KV heads (== heads for MHA, < heads for GQA; query head h attends
+    /// through KV head `h / (heads / kv_heads)`).
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_context: usize,
+    /// Scale-group size of every weight matrix (must divide `hidden` and
+    /// `ffn`, the two GEMV reduction widths).
+    pub group: usize,
+    /// Per-layer weight precision; `layer_specs.len()` is the layer count.
+    pub layer_specs: Vec<LayerSpec>,
+    /// Output-head precision.
+    pub head: LayerSpec,
+    /// KV-cache storage precision.
+    pub kv: KvCacheSpec,
+}
+
+impl DecodeSpec {
+    /// A small mixed-precision spec for tests and demos: `layers` decoder
+    /// layers cycling Q8/Q4/Q6 (NBW 4/4/2) — precision deliberately varies
+    /// across layers.
+    pub fn tiny(layers: usize, kv: KvCacheSpec) -> Self {
+        let cycle = [
+            LayerSpec::new(QuantLevel::Q8, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+            LayerSpec::new(QuantLevel::Q6, 2),
+        ];
+        DecodeSpec {
+            hidden: 32,
+            heads: 4,
+            kv_heads: 2,
+            ffn: 64,
+            vocab: 96,
+            max_context: 24,
+            group: 16,
+            layer_specs: (0..layers).map(|l| cycle[l % cycle.len()]).collect(),
+            head: LayerSpec::new(QuantLevel::Q4, 4),
+            kv,
+        }
+    }
+
+    /// Uniform precision across all layers and the head.
+    pub fn uniform(mut self, level: QuantLevel, nbw: u32) -> Self {
+        let spec = LayerSpec::new(level, nbw);
+        for l in &mut self.layer_specs {
+            *l = spec;
+        }
+        self.head = spec;
+        self
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layer_specs.len()
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// KV vector width per token: kv_heads × head_dim.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    /// The matching [`ModelConfig`], so the byte-accounting machinery
+    /// (`KvCacheSpec::seq_bytes`, `kv_bytes_per_token`) applies to this
+    /// model directly.
+    pub fn to_model_config(&self) -> ModelConfig {
+        ModelConfig {
+            name: format!("lut-decode-{}L-h{}", self.layers(), self.hidden),
+            hidden: self.hidden,
+            layers: self.layers(),
+            heads: self.heads,
+            kv_heads: self.kv_heads,
+            ffn: self.ffn,
+            vocab: self.vocab,
+            max_context: self.max_context,
+        }
+    }
+
+    /// Check internal consistency; every constructor of [`LutTransformer`]
+    /// calls this so malformed specs surface as `Err`, not panics deep in
+    /// the quantizer.
+    pub fn validate(&self) -> Result<()> {
+        if self.layer_specs.is_empty() {
+            bail!("decode spec has no layers");
+        }
+        if self.hidden == 0 || self.heads == 0 || self.hidden % self.heads != 0 {
+            bail!("hidden {} must be a positive multiple of heads {}", self.hidden, self.heads);
+        }
+        if self.kv_heads == 0 || self.heads % self.kv_heads != 0 {
+            bail!("heads {} must be a positive multiple of kv_heads {}", self.heads, self.kv_heads);
+        }
+        if self.group == 0 || self.hidden % self.group != 0 || self.ffn % self.group != 0 {
+            bail!(
+                "group {} must divide hidden {} and ffn {}",
+                self.group,
+                self.hidden,
+                self.ffn
+            );
+        }
+        if self.vocab == 0 || self.max_context == 0 {
+            bail!("vocab and max_context must be positive");
+        }
+        for (l, s) in self.layer_specs.iter().chain(std::iter::once(&self.head)).enumerate() {
+            if !(1..=8).contains(&s.nbw) || s.nbw as usize > self.group {
+                bail!("layer {l}: NBW {} outside 1..=8 or exceeds group {}", s.nbw, self.group);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One decode-iteration work item: advance `slot` by feeding `token` at
+/// KV position `pos`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DecodeItem {
+    pub slot: usize,
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// Kernel counters of one layer, split per projection — the observability
+/// that lets tests (and the perf bench) assert every projection actually
+/// ran on the LUT path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerGemvStats {
+    pub q: GemvStats,
+    pub k: GemvStats,
+    pub v: GemvStats,
+    pub o: GemvStats,
+    pub gate: GemvStats,
+    pub up: GemvStats,
+    pub down: GemvStats,
+}
+
+impl LayerGemvStats {
+    /// Named view over the seven projections, in execution order.
+    pub fn projections(&self) -> [(&'static str, GemvStats); 7] {
+        [
+            ("q", self.q),
+            ("k", self.k),
+            ("v", self.v),
+            ("o", self.o),
+            ("gate", self.gate),
+            ("up", self.up),
+            ("down", self.down),
+        ]
+    }
+
+    /// Sum over the layer's projections.
+    pub fn total(&self) -> GemvStats {
+        let mut t = GemvStats::default();
+        for (_, s) in self.projections() {
+            t += s;
+        }
+        t
+    }
+}
+
+/// Accumulated per-projection kernel counters across all steps.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    /// One entry per decoder layer.
+    pub layers: Vec<LayerGemvStats>,
+    /// The output head's counters.
+    pub head: GemvStats,
+    pub steps: u64,
+    pub tokens: u64,
+}
+
+/// One decoder layer's quantized weights, each its own LUT-GEMV engine.
+struct LayerWeights {
+    wq: LutGemvEngine,
+    wk: LutGemvEngine,
+    wv: LutGemvEngine,
+    wo: LutGemvEngine,
+    w_gate: LutGemvEngine,
+    w_up: LutGemvEngine,
+    w_down: LutGemvEngine,
+}
+
+/// The multi-layer KV-cached decode model. See the module docs for the
+/// architecture and the determinism contract.
+pub struct LutTransformer {
+    spec: DecodeSpec,
+    layers: Vec<LayerWeights>,
+    head: LutGemvEngine,
+    kv: KvCache,
+    pool: Arc<WorkerPool>,
+    batch: usize,
+    /// Per-projection kernel counters (public observability).
+    pub stats: DecodeStats,
+    // Reused scratch (steady-state step does not grow or reallocate
+    // these — including the quantized-activation buffers, whose int8 code
+    // vectors recycle through `QuantizedVector::quantize_into`).
+    x: Vec<f32>,
+    xn: Vec<f32>,
+    attn: Vec<f32>,
+    mlp: Vec<f32>,
+    scores: Vec<f32>,
+    kbuf: Vec<f32>,
+    vbuf: Vec<f32>,
+    /// Quantized activations of width `hidden` (projection inputs).
+    quant_h: Vec<QuantizedVector>,
+    /// Quantized activations of width `ffn` (down-projection inputs).
+    quant_f: Vec<QuantizedVector>,
+    out_q: GemvOutput,
+    out_k: GemvOutput,
+    out_v: GemvOutput,
+    out_g: GemvOutput,
+    out_u: GemvOutput,
+    out_m: GemvOutput,
+    logits: GemvOutput,
+}
+
+/// Deterministic token/position embedding component `i` in `[-1, 1)`
+/// (SplitMix64-style finalizer): stateless, so it is identical on every
+/// thread, at every batch size, and across pool widths.
+fn embed(token: i32, position: usize, i: usize) -> f32 {
+    let mut z = (token as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add((position as u64) << 32)
+        .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+}
+
+/// Row-wise RMS normalization (no learned gain): `y = x / rms(x)`.
+/// Sequential per row, f64 mean-square — deterministic everywhere.
+fn rmsnorm_rows(src: &[f32], dst: &mut Vec<f32>, width: usize) {
+    dst.resize(src.len(), 0.0);
+    for (srow, drow) in src.chunks_exact(width).zip(dst.chunks_exact_mut(width)) {
+        let ms = srow.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / width as f64;
+        let inv = (1.0 / (ms + 1e-6).sqrt()) as f32;
+        for (d, &s) in drow.iter_mut().zip(srow) {
+            *d = s * inv;
+        }
+    }
+}
+
+/// Re-quantize each `width`-wide row of `data` into `buf`, reusing both
+/// the outer vector and every activation's int8 code buffer (no
+/// steady-state allocation on the decode hot path).
+fn requantize_rows(buf: &mut Vec<QuantizedVector>, data: &[f32], width: usize) {
+    let n = data.len() / width;
+    buf.truncate(n);
+    while buf.len() < n {
+        buf.push(QuantizedVector { q: Vec::new(), scale: 1.0, bits: 8 });
+    }
+    for (qv, row) in buf.iter_mut().zip(data.chunks_exact(width)) {
+        qv.quantize_into(row);
+    }
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl LutTransformer {
+    /// Build a model with seeded random weights: the same `(spec, seed)`
+    /// gives the same model at any batch size and any pool width.
+    pub fn random(
+        spec: DecodeSpec,
+        seed: u64,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+    ) -> Result<Self> {
+        spec.validate()?;
+        if batch == 0 {
+            bail!("batch must be positive");
+        }
+        let h = spec.hidden;
+        let kvd = spec.kv_dim();
+        let mut prng = crate::util::Prng::new(seed);
+        let mut gen = |n: usize, k: usize, ls: LayerSpec| -> LutGemvEngine {
+            let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+            LutGemvEngine::new(QuantizedMatrix::quantize(&w, n, k, ls.level, spec.group), ls.nbw)
+        };
+        let layers: Vec<LayerWeights> = spec
+            .layer_specs
+            .iter()
+            .map(|&ls| LayerWeights {
+                wq: gen(h, h, ls),
+                wk: gen(kvd, h, ls),
+                wv: gen(kvd, h, ls),
+                wo: gen(h, h, ls),
+                w_gate: gen(spec.ffn, h, ls),
+                w_up: gen(spec.ffn, h, ls),
+                w_down: gen(h, spec.ffn, ls),
+            })
+            .collect();
+        let head = gen(spec.vocab, h, spec.head);
+        let kv = KvCache::new(spec.kv, spec.layers(), batch, spec.max_context, kvd)?;
+        let stats = DecodeStats {
+            layers: vec![LayerGemvStats::default(); spec.layers()],
+            ..DecodeStats::default()
+        };
+        Ok(LutTransformer {
+            spec,
+            layers,
+            head,
+            kv,
+            pool,
+            batch,
+            stats,
+            x: Vec::new(),
+            xn: Vec::new(),
+            attn: Vec::new(),
+            mlp: Vec::new(),
+            scores: Vec::new(),
+            kbuf: Vec::new(),
+            vbuf: Vec::new(),
+            quant_h: Vec::new(),
+            quant_f: Vec::new(),
+            out_q: GemvOutput::new(),
+            out_k: GemvOutput::new(),
+            out_v: GemvOutput::new(),
+            out_g: GemvOutput::new(),
+            out_u: GemvOutput::new(),
+            out_m: GemvOutput::new(),
+            logits: GemvOutput::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &DecodeSpec {
+        &self.spec
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn kv(&self) -> &KvCache {
+        &self.kv
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Logits of the last [`step`](Self::step): one row per item, in item
+    /// order.
+    pub fn logits(&self) -> &GemvOutput {
+        &self.logits
+    }
+
+    /// Clear one slot's KV panes (called on admission by the batcher).
+    pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot {slot} outside batch {}", self.batch);
+        }
+        self.kv.reset_slot(slot);
+        Ok(())
+    }
+
+    /// Advance every item by one token: run all layers (each projection a
+    /// pooled LUT-GEMV, attention over the slot's KV pane including the
+    /// token just written) and leave per-item logits in
+    /// [`logits`](Self::logits).
+    pub fn step(&mut self, items: &[DecodeItem]) -> Result<()> {
+        let h = self.spec.hidden;
+        let n = items.len();
+        for it in items {
+            if it.slot >= self.batch {
+                bail!("slot {} outside batch {}", it.slot, self.batch);
+            }
+            if it.pos >= self.spec.max_context {
+                bail!(
+                    "position {} outside the {}-token context window (the batcher \
+                     must finish the request with ContextFull first)",
+                    it.pos,
+                    self.spec.max_context
+                );
+            }
+        }
+        self.logits.reset(n, self.spec.vocab);
+        if n == 0 {
+            return Ok(());
+        }
+
+        // Stateless embedding: history enters only through the KV cache.
+        self.x.resize(n * h, 0.0);
+        for (row, it) in self.x.chunks_exact_mut(h).zip(items) {
+            for (i, xi) in row.iter_mut().enumerate() {
+                *xi = embed(it.token, it.pos, i);
+            }
+        }
+
+        for l in 0..self.layers.len() {
+            self.attention_block(l, items);
+            self.ffn_block(l);
+        }
+
+        // Output head.
+        rmsnorm_rows(&self.x, &mut self.xn, h);
+        requantize_rows(&mut self.quant_h, &self.xn, h);
+        self.stats.head +=
+            self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits);
+        self.stats.steps += 1;
+        self.stats.tokens += n as u64;
+        Ok(())
+    }
+
+    /// Q/K/V projections, KV-cache append, attention over the cached
+    /// window, O projection, residual add.
+    fn attention_block(&mut self, l: usize, items: &[DecodeItem]) {
+        let h = self.spec.hidden;
+        let hd = self.spec.head_dim();
+        let heads = self.spec.heads;
+        let kvd = self.spec.kv_dim();
+        let heads_per_kv = heads / self.spec.kv_heads;
+        let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
+        let n = items.len();
+
+        rmsnorm_rows(&self.x, &mut self.xn, h);
+        requantize_rows(&mut self.quant_h, &self.xn, h);
+        let lw = &self.layers[l];
+        let ls = &mut self.stats.layers[l];
+        ls.q += lw.wq.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_q);
+        ls.k += lw.wk.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_k);
+        ls.v += lw.wv.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_v);
+
+        // Append this token's K/V, then attend over positions 0..=pos —
+        // the current token's K/V pass through storage precision too, so
+        // cached and fresh history are treated identically.
+        for (i, it) in items.iter().enumerate() {
+            self.kv.write(l, it.slot, it.pos, self.out_k.row(i), self.out_v.row(i));
+        }
+
+        self.attn.resize(n * h, 0.0);
+        self.attn.fill(0.0);
+        self.kbuf.resize(kvd, 0.0);
+        self.vbuf.resize(kvd, 0.0);
+        for (i, it) in items.iter().enumerate() {
+            let ctx = it.pos + 1;
+            let q_row = self.out_q.row(i);
+            self.scores.resize(heads * ctx, 0.0);
+            // Pass 1: one K read per cached position, scores for all heads.
+            for t in 0..ctx {
+                self.kv.read_k(l, it.slot, t, &mut self.kbuf);
+                for hi in 0..heads {
+                    let kh = hi / heads_per_kv;
+                    let q_h = &q_row[hi * hd..(hi + 1) * hd];
+                    let k_h = &self.kbuf[kh * hd..(kh + 1) * hd];
+                    let dot = q_h.iter().zip(k_h).fold(0.0f32, |acc, (&a, &b)| acc + a * b);
+                    self.scores[hi * ctx + t] = dot * inv_sqrt_hd;
+                }
+            }
+            // Softmax per head (max-subtracted, sequential — deterministic).
+            for head_scores in self.scores.chunks_exact_mut(ctx) {
+                let max = head_scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                let mut sum = 0.0f32;
+                for s in head_scores.iter_mut() {
+                    *s = (*s - max).exp();
+                    sum += *s;
+                }
+                for s in head_scores.iter_mut() {
+                    *s /= sum;
+                }
+            }
+            // Pass 2: one V read per cached position, weighted accumulate.
+            let out_row = &mut self.attn[i * h..(i + 1) * h];
+            for t in 0..ctx {
+                self.kv.read_v(l, it.slot, t, &mut self.vbuf);
+                for hi in 0..heads {
+                    let kh = hi / heads_per_kv;
+                    let w = self.scores[hi * ctx + t];
+                    let v_h = &self.vbuf[kh * hd..(kh + 1) * hd];
+                    for (o, &v) in out_row[hi * hd..(hi + 1) * hd].iter_mut().zip(v_h) {
+                        *o += w * v;
+                    }
+                }
+            }
+        }
+
+        requantize_rows(&mut self.quant_h, &self.attn, h);
+        let ls = &mut self.stats.layers[l];
+        ls.o += self.layers[l].wo.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_m);
+        let orows = self.out_m.as_slice();
+        for (xrow, orow) in self.x.chunks_exact_mut(h).zip(orows.chunks_exact(h)) {
+            for (xi, &oi) in xrow.iter_mut().zip(orow) {
+                *xi += oi;
+            }
+        }
+    }
+
+    /// SwiGLU FFN: gate/up projections, `silu(gate) ⊙ up`, down
+    /// projection, residual add.
+    fn ffn_block(&mut self, l: usize) {
+        let h = self.spec.hidden;
+        let ffn = self.spec.ffn;
+        rmsnorm_rows(&self.x, &mut self.xn, h);
+        requantize_rows(&mut self.quant_h, &self.xn, h);
+        let lw = &self.layers[l];
+        let ls = &mut self.stats.layers[l];
+        ls.gate += lw.w_gate.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_g);
+        ls.up += lw.w_up.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_u);
+        self.mlp.resize(self.out_g.as_slice().len(), 0.0);
+        for ((m, &g), &u) in
+            self.mlp.iter_mut().zip(self.out_g.as_slice()).zip(self.out_u.as_slice())
+        {
+            *m = silu(g) * u;
+        }
+        requantize_rows(&mut self.quant_f, &self.mlp, ffn);
+        let ls = &mut self.stats.layers[l];
+        ls.down +=
+            self.layers[l].w_down.gemv_batch_into(&self.quant_f, &self.pool, &mut self.out_m);
+        let drows = self.out_m.as_slice();
+        for (xrow, drow) in self.x.chunks_exact_mut(h).zip(drows.chunks_exact(h)) {
+            for (xi, &di) in xrow.iter_mut().zip(drow) {
+                *xi += di;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool1() -> Arc<WorkerPool> {
+        WorkerPool::shared(1)
+    }
+
+    fn items(pairs: &[(usize, i32, usize)]) -> Vec<DecodeItem> {
+        pairs.iter().map(|&(slot, token, pos)| DecodeItem { slot, token, pos }).collect()
+    }
+
+    #[test]
+    fn spec_validation_catches_malformed_shapes() {
+        let ok = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        assert!(ok.validate().is_ok());
+        let mut bad = ok.clone();
+        bad.layer_specs.clear();
+        assert!(bad.validate().is_err(), "no layers");
+        let mut bad = ok.clone();
+        bad.heads = 5; // 32 % 5 != 0
+        assert!(bad.validate().is_err(), "hidden not divisible by heads");
+        let mut bad = ok.clone();
+        bad.kv_heads = 3; // 4 % 3 != 0
+        assert!(bad.validate().is_err(), "heads not divisible by kv_heads");
+        let mut bad = ok.clone();
+        bad.group = 24; // divides neither 32 nor 64
+        assert!(bad.validate().is_err(), "group must divide hidden and ffn");
+        let mut bad = ok.clone();
+        bad.layer_specs[0].nbw = 20;
+        assert!(bad.validate().is_err(), "nbw out of range");
+        assert!(LutTransformer::random(ok, 1, 0, pool1()).is_err(), "zero batch");
+    }
+
+    #[test]
+    fn same_seed_same_logits() {
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let mut a = LutTransformer::random(spec.clone(), 7, 2, pool1()).unwrap();
+        let mut b = LutTransformer::random(spec, 7, 2, pool1()).unwrap();
+        let its = items(&[(0, 3, 0), (1, 11, 0)]);
+        a.step(&its).unwrap();
+        b.step(&its).unwrap();
+        assert_eq!(a.logits(), b.logits());
+        assert!(a.logits().row(0) != a.logits().row(1), "different tokens, same logits");
+    }
+
+    #[test]
+    fn kv_cache_is_actually_read_by_attention() {
+        // Two models, identical weights; write *different* history at
+        // position 0, then feed the *same* token at position 1. If the
+        // attention step reads the cache, the logits must differ; if the
+        // cache were decorative (the pre-PR state of model/kv.rs) they
+        // would be identical.
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let mut a = LutTransformer::random(spec.clone(), 7, 1, pool1()).unwrap();
+        let mut b = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+        a.step(&items(&[(0, 3, 0)])).unwrap();
+        b.step(&items(&[(0, 50, 0)])).unwrap();
+        a.step(&items(&[(0, 5, 1)])).unwrap();
+        b.step(&items(&[(0, 5, 1)])).unwrap();
+        assert!(
+            a.logits().row(0) != b.logits().row(0),
+            "logits ignored the differing cached history"
+        );
+        // And resetting the slot erases that history dependence.
+        let mut c = LutTransformer::random(
+            DecodeSpec::tiny(2, KvCacheSpec::fp16()),
+            7,
+            1,
+            pool1(),
+        )
+        .unwrap();
+        c.step(&items(&[(0, 50, 0)])).unwrap();
+        c.reset_slot(0).unwrap();
+        c.step(&items(&[(0, 3, 0)])).unwrap();
+        c.step(&items(&[(0, 5, 1)])).unwrap();
+        assert_eq!(a.logits(), c.logits(), "reset_slot did not clear the pane");
+    }
+
+    #[test]
+    fn mixed_per_layer_precision_is_materialized() {
+        let spec = DecodeSpec::tiny(3, KvCacheSpec::q8());
+        // The tiny cycle really is mixed.
+        assert_ne!(spec.layer_specs[0], spec.layer_specs[1]);
+        let m = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+        assert_eq!(m.layers[0].wq.weights().level, QuantLevel::Q8);
+        assert_eq!(m.layers[1].wq.weights().level, QuantLevel::Q4);
+        assert_eq!(m.layers[2].wq.weights().level, QuantLevel::Q6);
+        assert_eq!(m.layers[2].wq.nbw(), 2);
+        assert_eq!(m.head.weights().level, QuantLevel::Q4);
+    }
+
+    #[test]
+    fn out_of_window_position_is_an_error_not_a_panic() {
+        let spec = DecodeSpec::tiny(1, KvCacheSpec::fp16());
+        let ctx = spec.max_context;
+        let mut m = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+        assert!(m.step(&items(&[(0, 1, ctx)])).is_err());
+        assert!(m.step(&items(&[(2, 1, 0)])).is_err(), "slot outside batch");
+        // The model still serves after a rejected call.
+        m.step(&items(&[(0, 1, 0)])).unwrap();
+    }
+
+    #[test]
+    fn empty_item_list_is_a_no_op() {
+        let mut m =
+            LutTransformer::random(DecodeSpec::tiny(1, KvCacheSpec::fp16()), 7, 1, pool1())
+                .unwrap();
+        m.step(&[]).unwrap();
+        assert_eq!(m.logits().batch(), 0);
+        assert_eq!(m.stats.tokens, 0);
+    }
+
+    #[test]
+    fn kv_allocation_matches_spec_accounting() {
+        for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            let spec = DecodeSpec::tiny(3, kv);
+            let cfg = spec.to_model_config();
+            let m = LutTransformer::random(spec, 7, 4, pool1()).unwrap();
+            assert_eq!(m.kv().data_bytes(), kv.batch_bytes(&cfg, cfg.max_context, 4));
+        }
+    }
+}

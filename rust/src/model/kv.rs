@@ -1,10 +1,15 @@
-//! KV-cache sizing and placement (paper §III-B).
+//! KV-cache sizing, placement, and storage (paper §III-B).
 //!
 //! SAIL supports quantized (8-bit) and non-quantized (fp16) KV caches; the
 //! KV matrices are mapped *column-wise* across C-SRAM arrays (Fig 5) so the
 //! per-token `Q × K_cacheᵀ` product streams without rebuilding large LUTs.
 //! The GPU baselines' batch capacity is governed by this module's byte
-//! accounting.
+//! accounting, and the serving-path decode model reads and writes its
+//! per-slot history through [`KvCache`] — a real store whose element
+//! payload is allocated exactly as [`KvCacheSpec::seq_bytes`] accounts it
+//! (cross-checked in tests and in `tests/decode_serving.rs`).
+
+use anyhow::{bail, Result};
 
 use super::ModelConfig;
 
@@ -54,6 +59,260 @@ impl KvCacheSpec {
     }
 }
 
+/// f32 → IEEE-754 binary16 bits, round-to-nearest-even (the storage
+/// rounding an fp16 KV cache applies to every cached K/V element).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (preserve NaN-ness with a quiet payload bit).
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero). Values below the smallest subnormal
+        // flush to signed zero.
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x0080_0000; // make the implicit bit explicit
+        let shift = (14 - e) as u32;
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let midpoint = 1u32 << (shift - 1);
+        let rounded =
+            if rem > midpoint || (rem == midpoint && half & 1 == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // Round to nearest even; a mantissa carry walks into the exponent
+    // field, which is exactly right (and yields ±inf at the top).
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && half & 1 == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE-754 binary16 bits → f32 (exact: every half is representable).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x03ff) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: man × 2⁻²⁴.
+        let v = man as f32 / 16_777_216.0;
+        return if sign != 0 { -v } else { v };
+    }
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+/// Element storage for one side (K or V) of the cache, per
+/// [`KvCacheSpec`]: fp16 elements, or int8 codes with one f32 scale per
+/// cached vector (the llama.cpp-style 8-bit KV the paper extends).
+#[derive(Debug, Clone)]
+enum KvStore {
+    F16(Vec<u16>),
+    Q8 { data: Vec<i8>, scales: Vec<f32> },
+}
+
+impl KvStore {
+    fn new(spec: KvCacheSpec, elems: usize, vectors: usize) -> Result<KvStore> {
+        Ok(match spec.bits {
+            16 => KvStore::F16(vec![0; elems]),
+            8 => KvStore::Q8 { data: vec![0; elems], scales: vec![1.0; vectors] },
+            b => bail!("unsupported KV precision: {b} bits (16 = fp16, 8 = q8)"),
+        })
+    }
+
+    /// Bytes of element payload — the quantity [`KvCacheSpec::seq_bytes`]
+    /// accounts. Q8 per-vector scales are metadata on top (see
+    /// [`KvCache::scale_bytes`]).
+    fn data_bytes(&self) -> u64 {
+        match self {
+            KvStore::F16(d) => 2 * d.len() as u64,
+            KvStore::Q8 { data, .. } => data.len() as u64,
+        }
+    }
+
+    /// Store one vector at element offset `base` (vector index
+    /// `base / len`), rounding through the storage precision.
+    fn write(&mut self, base: usize, src: &[f32]) {
+        match self {
+            KvStore::F16(d) => {
+                for (dst, &x) in d[base..base + src.len()].iter_mut().zip(src) {
+                    *dst = f32_to_f16_bits(x);
+                }
+            }
+            KvStore::Q8 { data, scales } => {
+                let amax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
+                scales[base / src.len()] = scale;
+                for (dst, &x) in data[base..base + src.len()].iter_mut().zip(src) {
+                    *dst = (x / scale).round().clamp(-127.0, 127.0) as i8;
+                }
+            }
+        }
+    }
+
+    /// Dequantize one vector at element offset `base` into `dst`.
+    fn read(&self, base: usize, dst: &mut [f32]) {
+        match self {
+            KvStore::F16(d) => {
+                for (out, &h) in dst.iter_mut().zip(&d[base..base + dst.len()]) {
+                    *out = f16_bits_to_f32(h);
+                }
+            }
+            KvStore::Q8 { data, scales } => {
+                let scale = scales[base / dst.len()];
+                for (out, &q) in dst.iter_mut().zip(&data[base..base + dst.len()]) {
+                    *out = q as f32 * scale;
+                }
+            }
+        }
+    }
+
+    fn reset_range(&mut self, base: usize, elems: usize, vec_len: usize) {
+        match self {
+            KvStore::F16(d) => d[base..base + elems].fill(0),
+            KvStore::Q8 { data, scales } => {
+                data[base..base + elems].fill(0);
+                scales[base / vec_len..(base + elems) / vec_len].fill(1.0);
+            }
+        }
+    }
+}
+
+/// The slot-indexed KV cache the decode model reads every iteration: per
+/// layer and batch slot, `max_context` cached K and V vectors of width
+/// `kv_dim` (= kv_heads × head_dim), stored through the precision the
+/// [`KvCacheSpec`] names. Element index layout is
+/// `((layer · batch + slot) · max_context + pos) · kv_dim + i`, i.e. one
+/// contiguous `[max_context, kv_dim]` pane per (layer, slot) — the
+/// column-wise streaming unit of Fig 5.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    spec: KvCacheSpec,
+    layers: usize,
+    batch: usize,
+    max_context: usize,
+    kv_dim: usize,
+    k: KvStore,
+    v: KvStore,
+}
+
+impl KvCache {
+    pub fn new(
+        spec: KvCacheSpec,
+        layers: usize,
+        batch: usize,
+        max_context: usize,
+        kv_dim: usize,
+    ) -> Result<KvCache> {
+        assert!(layers > 0 && batch > 0 && max_context > 0 && kv_dim > 0);
+        let vectors = layers * batch * max_context;
+        let elems = vectors * kv_dim;
+        Ok(KvCache {
+            spec,
+            layers,
+            batch,
+            max_context,
+            kv_dim,
+            k: KvStore::new(spec, elems, vectors)?,
+            v: KvStore::new(spec, elems, vectors)?,
+        })
+    }
+
+    pub fn spec(&self) -> KvCacheSpec {
+        self.spec
+    }
+
+    pub fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    #[inline]
+    fn base(&self, layer: usize, slot: usize, pos: usize) -> usize {
+        debug_assert!(layer < self.layers && slot < self.batch);
+        ((layer * self.batch + slot) * self.max_context + pos) * self.kv_dim
+    }
+
+    /// Cache the K and V vectors of one token. Positions at or beyond
+    /// `max_context` are a caller bug (the batcher finishes requests with
+    /// `ContextFull` before ever issuing one) — enforced here so an
+    /// admission-layer regression cannot silently corrupt a neighbouring
+    /// (layer, slot) pane.
+    pub fn write(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
+        assert!(
+            pos < self.max_context,
+            "KV write at position {pos} outside the {}-token window",
+            self.max_context
+        );
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        let base = self.base(layer, slot, pos);
+        self.k.write(base, k);
+        self.v.write(base, v);
+    }
+
+    /// Read the cached K vector of one position (dequantized to f32).
+    pub fn read_k(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        assert!(pos < self.max_context);
+        assert_eq!(dst.len(), self.kv_dim);
+        self.k.read(self.base(layer, slot, pos), dst);
+    }
+
+    /// Read the cached V vector of one position (dequantized to f32).
+    pub fn read_v(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        assert!(pos < self.max_context);
+        assert_eq!(dst.len(), self.kv_dim);
+        self.v.read(self.base(layer, slot, pos), dst);
+    }
+
+    /// Zero one slot's panes across all layers (no KV leakage into the
+    /// next admitted request — the batcher invariant).
+    pub fn reset_slot(&mut self, slot: usize) {
+        assert!(slot < self.batch);
+        let pane = self.max_context * self.kv_dim;
+        for layer in 0..self.layers {
+            let base = self.base(layer, slot, 0);
+            self.k.reset_range(base, pane, self.kv_dim);
+            self.v.reset_range(base, pane, self.kv_dim);
+        }
+    }
+
+    /// Bytes of element payload actually allocated — by construction equal
+    /// to [`KvCacheSpec::batch_bytes`] at `max_context` for the matching
+    /// [`ModelConfig`] (pinned by tests): 2 (K and V) × layers × kv_dim ×
+    /// max_context × batch elements at `spec.bits` per element.
+    pub fn data_bytes(&self) -> u64 {
+        self.k.data_bytes() + self.v.data_bytes()
+    }
+
+    /// Metadata bytes on top of the element payload (Q8 per-vector f32
+    /// scales; zero for fp16). `seq_bytes` deliberately excludes these,
+    /// matching the paper's element-payload accounting.
+    pub fn scale_bytes(&self) -> u64 {
+        match &self.k {
+            KvStore::F16(_) => 0,
+            KvStore::Q8 { scales, .. } => 2 * 4 * scales.len() as u64,
+        }
+    }
+}
+
 /// Per-token cycles the KV path adds on SAIL: the Q×K_cacheᵀ and
 /// attention×V products stream through the same C-SRAM hardware
 /// column-wise; profiling in the paper attributes ~5% of end-to-end
@@ -86,6 +345,119 @@ mod tests {
         // …but fits 2×V100 (32 GB) at batch ≥ 1.
         let b2 = KvCacheSpec::fp16().max_batch(&m, 4096, 2 * cap, w, 1_000_000_000);
         assert!(b2 >= 1, "got {b2}");
+    }
+
+    #[test]
+    fn f16_roundtrip_known_values() {
+        for (x, bits) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (0.5, 0x3800),
+            (2.0, 0x4000),
+            (65504.0, 0x7bff), // largest finite half
+            (6.103_515_6e-5, 0x0400), // smallest normal half
+        ] {
+            assert_eq!(f32_to_f16_bits(x), bits, "encoding {x}");
+            assert_eq!(f16_bits_to_f32(bits), x, "decoding {x}");
+        }
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00, "overflow must saturate to inf");
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even at the 1.0 + ulp/2 midpoint: 1 + 2^-11
+        // is exactly halfway between 0x3c00 and 0x3c01 → even (0x3c00).
+        assert_eq!(f32_to_f16_bits(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+    }
+
+    #[test]
+    fn f16_roundtrip_error_bounded() {
+        let mut prng = crate::util::Prng::new(21);
+        for _ in 0..500 {
+            let x = prng.normal() as f32;
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            // Relative error of binary16 round-to-nearest: ≤ 2⁻¹¹.
+            assert!((x - y).abs() <= x.abs() * 4.9e-4 + 1e-7, "{x} -> {y}");
+            // Idempotent: a value already on the f16 grid re-encodes to
+            // itself.
+            assert_eq!(f32_to_f16_bits(y), f32_to_f16_bits(x));
+        }
+    }
+
+    #[test]
+    fn kv_cache_roundtrip_both_precisions() {
+        let mut prng = crate::util::Prng::new(33);
+        for spec in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            let mut kv = KvCache::new(spec, 2, 3, 4, 8).unwrap();
+            let kvec: Vec<f32> = (0..8).map(|_| prng.normal() as f32).collect();
+            let vvec: Vec<f32> = (0..8).map(|_| prng.normal() as f32).collect();
+            kv.write(1, 2, 3, &kvec, &vvec);
+            let mut back = vec![0.0f32; 8];
+            kv.read_k(1, 2, 3, &mut back);
+            let amax = kvec.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let tol = if spec.bits == 16 { amax * 4.9e-4 + 1e-7 } else { amax / 254.0 + 1e-7 };
+            for (a, b) in kvec.iter().zip(&back) {
+                assert!((a - b).abs() <= tol, "{spec:?}: {a} vs {b}");
+            }
+            kv.read_v(1, 2, 3, &mut back);
+            for (a, b) in vvec.iter().zip(&back) {
+                assert!((a - b).abs() <= tol, "{spec:?}: {a} vs {b}");
+            }
+            // Neighbouring positions and slots untouched.
+            kv.read_k(1, 2, 2, &mut back);
+            assert!(back.iter().all(|&x| x == 0.0));
+            kv.read_k(1, 1, 3, &mut back);
+            assert!(back.iter().all(|&x| x == 0.0));
+            // Slot reset clears only that slot.
+            kv.reset_slot(2);
+            kv.read_k(1, 2, 3, &mut back);
+            assert!(back.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn kv_cache_allocation_matches_seq_bytes_accounting() {
+        // The cross-check the serving path relies on: the store's element
+        // payload is exactly what `KvCacheSpec::seq_bytes` accounts.
+        let m = ModelConfig {
+            name: "kv-acct".into(),
+            hidden: 64,
+            layers: 3,
+            heads: 8,
+            kv_heads: 4,
+            ffn: 128,
+            vocab: 97,
+            max_context: 40,
+        };
+        let kv_dim = m.kv_heads * m.head_dim();
+        for spec in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            for batch in [1usize, 2, 5] {
+                let kv = KvCache::new(spec, m.layers, batch, m.max_context, kv_dim).unwrap();
+                assert_eq!(
+                    kv.data_bytes(),
+                    spec.batch_bytes(&m, m.max_context, batch),
+                    "{spec:?} batch {batch}"
+                );
+            }
+        }
+        // fp16 carries no scale metadata; q8 carries one f32 per cached
+        // vector on top of the accounted payload.
+        let f = KvCache::new(KvCacheSpec::fp16(), 2, 1, 8, 16).unwrap();
+        assert_eq!(f.scale_bytes(), 0);
+        let q = KvCache::new(KvCacheSpec::q8(), 2, 1, 8, 16).unwrap();
+        assert_eq!(q.scale_bytes(), 2 * 4 * 2 * 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the 4-token window")]
+    fn kv_cache_rejects_out_of_window_write() {
+        let mut kv = KvCache::new(KvCacheSpec::fp16(), 1, 1, 4, 8).unwrap();
+        kv.write(0, 0, 4, &[0.0; 8], &[0.0; 8]);
+    }
+
+    #[test]
+    fn unsupported_precision_is_an_error() {
+        assert!(KvCache::new(KvCacheSpec { bits: 4 }, 1, 1, 4, 8).is_err());
     }
 
     #[test]

@@ -1,14 +1,20 @@
-//! Transformer model shape inventory.
+//! Transformer model shape inventory — and the executable decode model.
 //!
 //! The timing models need exact tensor shapes, parameter counts, byte
 //! sizes per quantization level, and KV-cache growth — all derivable from
 //! the public architecture configs of the benchmarked models (Llama-2-7B,
 //! Llama-2-13B, TinyMistral-248M) plus the tiny llama-style model we
 //! execute end-to-end through the JAX→HLO→PJRT path.
+//!
+//! [`decode`] turns the inventory into a running workload: a multi-layer
+//! KV-cached transformer whose every projection executes on the LUT-GEMV
+//! backend ([`LutTransformer`]), reading and writing a real [`KvCache`].
 
+pub mod decode;
 pub mod kv;
 
-pub use kv::KvCacheSpec;
+pub use decode::{DecodeItem, DecodeSpec, DecodeStats, LayerGemvStats, LayerSpec, LutTransformer};
+pub use kv::{KvCache, KvCacheSpec};
 
 use crate::quant::QuantLevel;
 use crate::util::ceil_div;

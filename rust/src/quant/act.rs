@@ -18,13 +18,22 @@ pub struct QuantizedVector {
 impl QuantizedVector {
     /// Symmetric int8 quantization: `x ≈ scale * q`, q in [-127, 127].
     pub fn quantize(x: &[f32]) -> Self {
+        let mut qv = QuantizedVector { q: Vec::new(), scale: 1.0, bits: 8 };
+        qv.quantize_into(x);
+        qv
+    }
+
+    /// Re-quantize `x` into this vector, reusing the code buffer — the
+    /// decode hot path re-quantizes activations many times per token, so
+    /// steady state must not allocate. Produces exactly the same `q`,
+    /// `scale`, and `bits` as [`quantize`](Self::quantize).
+    pub fn quantize_into(&mut self, x: &[f32]) {
         let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
-        let q = x
-            .iter()
-            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
-            .collect();
-        QuantizedVector { q, scale, bits: 8 }
+        self.scale = scale;
+        self.bits = 8;
+        self.q.clear();
+        self.q.extend(x.iter().map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8));
     }
 
     pub fn len(&self) -> usize {
@@ -88,6 +97,23 @@ mod tests {
         let qv = QuantizedVector::quantize(&[0.0; 8]);
         assert!(qv.q.iter().all(|&v| v == 0));
         assert!(qv.scale > 0.0);
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_reuses_buffer() {
+        let mut prng = Prng::new(17);
+        let mut qv = QuantizedVector::quantize(&[1.0; 64]);
+        let cap = qv.q.capacity();
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..prng.usize_in(1, 65)).map(|_| prng.normal() as f32).collect();
+            qv.quantize_into(&x);
+            let fresh = QuantizedVector::quantize(&x);
+            assert_eq!(qv.q, fresh.q);
+            assert_eq!(qv.scale, fresh.scale);
+            assert_eq!(qv.bits, fresh.bits);
+            // Shrinking-or-equal re-quantizations never reallocate.
+            assert_eq!(qv.q.capacity(), cap, "steady-state requantize reallocated");
+        }
     }
 
     #[test]

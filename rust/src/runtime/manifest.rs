@@ -1,8 +1,18 @@
 //! `manifest.json` — artifact metadata emitted by `aot.py`.
+//!
+//! Besides describing the AOT/PJRT artifacts, a manifest's model config
+//! maps directly onto the LUT-GEMV serving path:
+//! [`Manifest::decode_spec`] turns it into a
+//! [`DecodeSpec`](crate::model::DecodeSpec) for the multi-layer
+//! [`LutTransformer`](crate::model::LutTransformer) backend, honouring the
+//! optional per-layer precision (`layer_wbits`) and KV-cache precision
+//! (`kv_bits`) fields newer manifests carry.
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+use crate::model::{DecodeSpec, KvCacheSpec, LayerSpec};
+use crate::quant::QuantLevel;
 use crate::util::json::Json;
 
 /// Model configuration recorded in the manifest (mirrors `TinyConfig`).
@@ -17,6 +27,12 @@ pub struct ManifestConfig {
     pub wbits: usize,
     pub group: usize,
     pub params: usize,
+    /// Optional per-layer weight precision override (paper: "optimal bit
+    /// precision varies across layers"); length must equal `layers` when
+    /// present. Absent ⇒ `wbits` uniformly.
+    pub layer_wbits: Option<Vec<usize>>,
+    /// KV-cache element precision (16 = fp16, 8 = quantized); absent ⇒ 16.
+    pub kv_bits: u32,
 }
 
 /// Parsed manifest.
@@ -47,6 +63,35 @@ impl Manifest {
             .iter()
             .map(|v| v.as_str().unwrap_or_default().to_string())
             .collect();
+        // Strict parsing: a present-but-malformed layer_wbits must be an
+        // error, not a silent fall-back to uniform precision (the model
+        // would serve with the wrong per-layer levels and nobody would
+        // know).
+        let layer_wbits = match cfg.get("layer_wbits") {
+            None => None,
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("manifest layer_wbits must be an array"))?;
+                Some(
+                    arr.iter()
+                        .enumerate()
+                        .map(|(i, e)| {
+                            e.as_usize().ok_or_else(|| {
+                                anyhow!("manifest layer_wbits[{i}] is not an integer")
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()?,
+                )
+            }
+        };
+        let kv_bits = match cfg.get("kv_bits") {
+            None => 16,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("manifest kv_bits is not an integer"))?
+                as u32,
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -59,6 +104,8 @@ impl Manifest {
                 wbits: f("wbits")?,
                 group: f("group")?,
                 params: f("params")?,
+                layer_wbits,
+                kv_bits,
             },
             batch: j
                 .get("batch")
@@ -76,6 +123,57 @@ impl Manifest {
     /// KV-cache shape for a given batch: [L, 2, B, CTX, H].
     pub fn kv_shape(&self, batch: usize) -> [usize; 5] {
         [self.config.layers, 2, batch, self.config.max_context, self.config.hidden]
+    }
+
+    /// Map this manifest's model config onto the LUT-GEMV serving path: a
+    /// [`DecodeSpec`] for the multi-layer [`crate::model::LutTransformer`]
+    /// backend. Per-layer precision comes from `layer_wbits` when present
+    /// (one level per layer), else `wbits` uniformly; the KV cache follows
+    /// `kv_bits`. NBW is clamped to the scale group (default 4, the paper's
+    /// design point).
+    pub fn decode_spec(&self) -> Result<DecodeSpec> {
+        let c = &self.config;
+        let nbw = 4u32.min(c.group as u32);
+        let level_of = |bits: usize| -> Result<QuantLevel> {
+            QuantLevel::parse(&bits.to_string())
+                .ok_or_else(|| anyhow!("unsupported weight precision: {bits} bits"))
+        };
+        let layer_specs: Vec<LayerSpec> = match &c.layer_wbits {
+            Some(per_layer) => {
+                if per_layer.len() != c.layers {
+                    bail!(
+                        "layer_wbits has {} entries for {} layers",
+                        per_layer.len(),
+                        c.layers
+                    );
+                }
+                per_layer
+                    .iter()
+                    .map(|&b| -> Result<LayerSpec> { Ok(LayerSpec::new(level_of(b)?, nbw)) })
+                    .collect::<Result<Vec<LayerSpec>>>()?
+            }
+            None => vec![LayerSpec::new(level_of(c.wbits)?, nbw); c.layers],
+        };
+        let kv = match c.kv_bits {
+            16 => KvCacheSpec::fp16(),
+            8 => KvCacheSpec::q8(),
+            b => bail!("unsupported KV precision: {b} bits"),
+        };
+        let spec = DecodeSpec {
+            hidden: c.hidden,
+            heads: c.heads,
+            // The AOT tiny model is MHA; manifests carry no kv_heads field.
+            kv_heads: c.heads,
+            ffn: c.ffn,
+            vocab: c.vocab,
+            max_context: c.max_context,
+            group: c.group,
+            layer_specs,
+            head: LayerSpec::new(level_of(c.wbits)?, nbw),
+            kv,
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -101,5 +199,103 @@ mod tests {
     #[test]
     fn missing_dir_errors() {
         assert!(Manifest::load(Path::new("/nonexistent-sail")).is_err());
+    }
+
+    fn mk_config() -> ManifestConfig {
+        ManifestConfig {
+            hidden: 256,
+            layers: 4,
+            heads: 8,
+            ffn: 1024,
+            vocab: 2048,
+            max_context: 256,
+            wbits: 4,
+            group: 32,
+            params: 13_000_000,
+            layer_wbits: None,
+            kv_bits: 16,
+        }
+    }
+
+    fn mk_manifest(config: ManifestConfig) -> Manifest {
+        Manifest { dir: PathBuf::from("."), config, batch: 4, weight_order: vec![] }
+    }
+
+    #[test]
+    fn decode_spec_uniform_precision_defaults() {
+        let spec = mk_manifest(mk_config()).decode_spec().unwrap();
+        assert_eq!(spec.layers(), 4);
+        assert!(spec.layer_specs.iter().all(|s| s.level == crate::quant::QuantLevel::Q4));
+        assert_eq!(spec.kv, crate::model::KvCacheSpec::fp16());
+        assert_eq!(spec.kv_heads, spec.heads, "manifest models are MHA");
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn decode_spec_honours_per_layer_and_kv_precision() {
+        let mut c = mk_config();
+        c.layer_wbits = Some(vec![8, 4, 6, 4]);
+        c.kv_bits = 8;
+        let spec = mk_manifest(c).decode_spec().unwrap();
+        let bits: Vec<u32> = spec.layer_specs.iter().map(|s| s.level.bits()).collect();
+        assert_eq!(bits, vec![8, 4, 6, 4]);
+        assert_eq!(spec.kv, crate::model::KvCacheSpec::q8());
+    }
+
+    #[test]
+    fn decode_spec_rejects_malformed_precision() {
+        let mut c = mk_config();
+        c.layer_wbits = Some(vec![4, 4]); // 2 entries, 4 layers
+        assert!(mk_manifest(c).decode_spec().is_err());
+        let mut c = mk_config();
+        c.layer_wbits = Some(vec![4, 4, 7, 4]); // no Q7 level
+        assert!(mk_manifest(c).decode_spec().is_err());
+        let mut c = mk_config();
+        c.kv_bits = 4;
+        assert!(mk_manifest(c).decode_spec().is_err());
+    }
+
+    #[test]
+    fn manifest_json_optional_fields_roundtrip() {
+        // Older manifests (no kv_bits / layer_wbits) parse with defaults;
+        // newer ones surface both fields.
+        let dir = std::env::temp_dir().join(format!("sail-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.kv_bits, 16);
+        assert_eq!(m.config.layer_wbits, None);
+        let text2 = text.replace(
+            "\"params\": 100000",
+            "\"params\": 100000, \"layer_wbits\": [8, 4], \"kv_bits\": 8",
+        );
+        std::fs::write(dir.join("manifest.json"), text2).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.layer_wbits, Some(vec![8, 4]));
+        assert_eq!(m.config.kv_bits, 8);
+        let spec = m.decode_spec().unwrap();
+        assert_eq!(spec.layer_specs[0].level, crate::quant::QuantLevel::Q8);
+        // Present-but-malformed precision fields are load errors, not a
+        // silent fall-back to uniform wbits.
+        let bad = text.replace(
+            "\"params\": 100000",
+            "\"params\": 100000, \"layer_wbits\": \"8,4\"",
+        );
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err(), "string layer_wbits must not parse as absent");
+        let bad = text.replace(
+            "\"params\": 100000",
+            "\"params\": 100000, \"layer_wbits\": [8, \"4\"]",
+        );
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err(), "non-integer entry must not be dropped");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

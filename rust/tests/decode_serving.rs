@@ -1,0 +1,186 @@
+//! Conformance suite for multi-layer KV-cached decode on the LUT serving
+//! path (the repo's core invariant, extended to the real transformer
+//! workload):
+//!
+//! - token streams are **bit-identical at pool widths 1/2/8**, for both
+//!   fp16- and q8-backed KV caches;
+//! - **batched decode equals isolated decode** bit-for-bit;
+//! - every projection of every layer (Q/K/V/O/gate/up/down + head) runs
+//!   on the LUT path, visible in the per-layer `GemvStats` rollup;
+//! - the KV cache's element allocation matches `KvCacheSpec::seq_bytes`;
+//! - admission hardening holds on the real engine: over-long prompts
+//!   finish `ContextFull` during prefill (no out-of-window KV write, which
+//!   the cache would catch with a panic), and empty prompts are answered
+//!   without taking the server worker down.
+
+use std::collections::HashMap;
+
+use sail::coordinator::{
+    Batcher, BatcherConfig, FinishReason, Request, Server, TransformerServeEngine,
+};
+use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::runtime::WorkerPool;
+
+/// 3 decoder layers at mixed per-layer precision (Q8/Q4/Q6), hidden 32,
+/// GQA (4 query heads over 2 KV heads), 24-token context.
+fn spec(kv: KvCacheSpec) -> DecodeSpec {
+    DecodeSpec::tiny(3, kv)
+}
+
+fn engine(kv: KvCacheSpec, batch: usize, width: usize) -> TransformerServeEngine {
+    TransformerServeEngine::random(spec(kv), 9, batch, WorkerPool::shared(width)).unwrap()
+}
+
+fn requests() -> Vec<Request> {
+    (0..6u64)
+        .map(|id| {
+            let plen = 1 + (id as usize % 3);
+            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
+            Request::new(id, prompt, 4 + id as usize % 3)
+        })
+        .collect()
+}
+
+fn run_tokens(
+    kv: KvCacheSpec,
+    batch: usize,
+    width: usize,
+    reqs: &[Request],
+) -> HashMap<u64, Vec<i32>> {
+    let mut b = Batcher::new(engine(kv, batch, width), BatcherConfig::default());
+    for r in reqs {
+        b.submit(r.clone());
+    }
+    let done = b.run_to_completion().unwrap();
+    assert_eq!(done.len(), reqs.len());
+    done.into_iter()
+        .inspect(|r| assert!(!r.tokens.is_empty(), "request {} got no tokens", r.id))
+        .map(|r| (r.id, r.tokens))
+        .collect()
+}
+
+#[test]
+fn token_streams_bit_identical_across_pool_widths() {
+    let reqs = requests();
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        let base = run_tokens(kv, 3, 1, &reqs);
+        for width in [2usize, 8] {
+            let got = run_tokens(kv, 3, width, &reqs);
+            assert_eq!(got, base, "{kv:?}: width {width} diverged from width 1");
+        }
+    }
+}
+
+#[test]
+fn batched_decode_matches_isolated_decode() {
+    let reqs = requests();
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        // Isolated: fresh single-slot engine per request, serial pool.
+        let mut isolated = HashMap::new();
+        for r in &reqs {
+            isolated.extend(run_tokens(kv, 1, 1, std::slice::from_ref(r)));
+        }
+        // Co-scheduled: 4 slots, threaded pool, all requests at once.
+        let batched = run_tokens(kv, 4, 2, &reqs);
+        assert_eq!(batched, isolated, "{kv:?}: co-scheduling changed a token stream");
+    }
+}
+
+#[test]
+fn every_projection_ran_on_the_lut_path() {
+    let mut b = Batcher::new(engine(KvCacheSpec::q8(), 2, 2), BatcherConfig::default());
+    for r in requests() {
+        b.submit(r);
+    }
+    b.run_to_completion().unwrap();
+    let stats = b.engine().stats();
+    assert_eq!(stats.layers.len(), 3);
+    for (l, layer) in stats.layers.iter().enumerate() {
+        for (name, s) in layer.projections() {
+            assert!(s.luts_built > 0, "layer {l} projection {name} built no LUTs");
+            assert!(s.lut_reads > 0, "layer {l} projection {name} read no LUTs");
+        }
+    }
+    assert!(stats.head.lut_reads > 0, "output head never ran on the LUT path");
+    assert!(stats.tokens >= 6 * 4, "fewer decode tokens than the workload implies");
+}
+
+#[test]
+fn kv_allocation_matches_seq_bytes_accounting() {
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        for batch in [1usize, 3] {
+            let e = engine(kv, batch, 1);
+            let cfg = e.model().spec().to_model_config();
+            assert_eq!(
+                e.model().kv().data_bytes(),
+                kv.batch_bytes(&cfg, cfg.max_context, batch),
+                "{kv:?} batch {batch}: allocation disagrees with seq_bytes accounting"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlong_prompt_finishes_context_full_without_touching_the_window() {
+    // Pre-hardening, prefill walked past max_context and the now-real KV
+    // cache would abort on the out-of-window write; the batcher must stop
+    // it first.
+    let ctx = spec(KvCacheSpec::q8()).max_context;
+    let mut b = Batcher::new(engine(KvCacheSpec::q8(), 2, 2), BatcherConfig::default());
+    b.submit(Request::new(0, (0..ctx as i32 + 6).collect(), 5));
+    b.submit(Request::new(1, vec![3, 4], 3));
+    let done = b.run_to_completion().unwrap();
+    assert_eq!(done.len(), 2);
+    let long = done.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(long.finish, FinishReason::ContextFull);
+    assert!(long.tokens.is_empty(), "no logits were ever sampled for the over-long prompt");
+    let ok = done.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(ok.finish, FinishReason::MaxTokens);
+    assert_eq!(ok.tokens.len(), 3);
+}
+
+#[test]
+fn prompt_exactly_context_length_yields_one_token() {
+    let ctx = spec(KvCacheSpec::fp16()).max_context;
+    let mut b = Batcher::new(engine(KvCacheSpec::fp16(), 1, 1), BatcherConfig::default());
+    b.submit(Request::new(0, (0..ctx as i32).collect(), 5));
+    let done = b.run_to_completion().unwrap();
+    assert_eq!(done[0].finish, FinishReason::ContextFull);
+    assert_eq!(done[0].tokens.len(), 1, "the last prompt position still yields its logits");
+}
+
+#[test]
+fn empty_prompt_through_the_server_keeps_the_worker_alive() {
+    let server = Server::spawn(engine(KvCacheSpec::q8(), 2, 2), BatcherConfig::default());
+    server.submit(Request::new(0, vec![], 4)).unwrap();
+    server.submit(Request::new(1, vec![7, 8], 3)).unwrap();
+    let mut got = HashMap::new();
+    for _ in 0..2 {
+        let r = server.recv().unwrap();
+        got.insert(r.id, r);
+    }
+    assert_eq!(got[&0].finish, FinishReason::EmptyPrompt);
+    assert!(got[&0].tokens.is_empty());
+    assert_eq!(got[&1].finish, FinishReason::MaxTokens);
+    assert_eq!(got[&1].tokens.len(), 3);
+    // The worker survived the malformed request and still drains cleanly.
+    server.submit(Request::new(2, vec![5], 2)).unwrap();
+    let r = server.recv().unwrap();
+    assert_eq!(r.id, 2);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.completed, 3);
+}
+
+#[test]
+fn kv_precision_changes_the_model_but_each_is_deterministic() {
+    // fp16 and q8 KV round history differently, so the streams may
+    // legitimately differ — but each precision must be exactly
+    // reproducible run-to-run.
+    let reqs = requests();
+    let f1 = run_tokens(KvCacheSpec::fp16(), 2, 2, &reqs);
+    let f2 = run_tokens(KvCacheSpec::fp16(), 2, 2, &reqs);
+    assert_eq!(f1, f2);
+    let q1 = run_tokens(KvCacheSpec::q8(), 2, 2, &reqs);
+    let q2 = run_tokens(KvCacheSpec::q8(), 2, 2, &reqs);
+    assert_eq!(q1, q2);
+}
