@@ -1,6 +1,6 @@
-//! End-to-end driver (DESIGN.md per-experiment index, row "E2E"):
-//! serve batched multi-user requests through the full serving stack and
-//! report latency and throughput.
+//! End-to-end driver (ARCHITECTURE.md "Decode data path"): serve batched
+//! multi-user requests through the full serving stack and report latency
+//! and throughput.
 //!
 //! Engines (`--engine`):
 //! - `lut` (default): multi-layer KV-cached transformer decode on the
@@ -13,7 +13,14 @@
 //!
 //! Run: `cargo run --release --example serve_multiuser`
 //! Options: --engine lut|pjrt|mock --batch N --requests N --rate R
-//!          --seed S --threads T --artifacts DIR  (--mock = --engine mock)
+//!          --seed S --threads T --numa off|auto|MAP --artifacts DIR
+//!          (--mock = --engine mock)
+//!
+//! `--numa` selects the worker placement policy for the `lut` engine
+//! (default: the `SAIL_NUMA` env override, else auto-detect); on a
+//! multi-node host workers are pinned per node and every projection's
+//! weights are sharded so tile traffic stays socket-local. Placement
+//! never changes tokens — only latency.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -25,7 +32,7 @@ use sail::coordinator::{
 };
 use sail::model::{DecodeSpec, KvCacheSpec, LayerSpec};
 use sail::quant::QuantLevel;
-use sail::runtime::WorkerPool;
+use sail::runtime::{NumaPolicy, Topology, WorkerPool};
 use sail::util::cli::Args;
 
 /// The demo serving model: 4 decoder layers at mixed per-layer precision
@@ -60,7 +67,13 @@ fn main() -> anyhow::Result<()> {
     let mock = args.flag("mock");
     let engine_kind = args.opt_str("engine", if mock { "mock" } else { "lut" });
     let dir = args.opt_str("artifacts", "artifacts");
+    let numa = args.opt_str("numa", ""); // "" = SAIL_NUMA env, else auto
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let numa_policy = if numa.is_empty() {
+        NumaPolicy::from_env()
+    } else {
+        NumaPolicy::parse(&numa).map_err(|e| anyhow::anyhow!("--numa: {e}"))?
+    };
 
     println!("=== SAIL end-to-end serving demo ===");
     println!("engine: {engine_kind}");
@@ -76,20 +89,26 @@ fn main() -> anyhow::Result<()> {
             Server::spawn(engine, BatcherConfig::default())
         }
         "lut" => {
-            let pool = if threads == 0 {
-                Arc::new(WorkerPool::auto())
-            } else {
-                WorkerPool::shared(threads)
-            };
+            // --threads 0 keeps the auto sizing (SAIL_POOL_THREADS env,
+            // else one worker per core), same as WorkerPool::auto().
+            let width = if threads == 0 { WorkerPool::auto_width() } else { threads };
+            let pool = Arc::new(WorkerPool::with_policy(width, &numa_policy));
             let spec = demo_spec();
             println!(
                 "LUT transformer: {} layers, hidden {}, vocab {}, ctx {}, q8 KV, \
-                 pool {} threads\n",
+                 pool {} threads",
                 spec.layers(),
                 spec.hidden,
                 spec.vocab,
                 spec.max_context,
                 pool.threads()
+            );
+            println!(
+                "placement: {numa_policy} → {} node group(s), {} pinned worker(s) \
+                 [host: {}]\n",
+                pool.nodes(),
+                pool.pinned_workers(),
+                Topology::detect().summary()
             );
             Server::spawn(
                 TransformerServeEngine::random(spec, seed, batch, pool)?,

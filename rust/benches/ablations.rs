@@ -1,4 +1,4 @@
-//! Ablation study over SAIL's design choices (DESIGN.md calls these out):
+//! Ablation study over SAIL's design choices (see ARCHITECTURE.md):
 //! tensor-level scheduling, ping-pong overlap, the Pattern Reuse Table,
 //! in-memory type conversion, and the NBW choice — each toggled
 //! independently at the paper's operating point (7B, 16 threads).

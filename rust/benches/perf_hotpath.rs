@@ -7,11 +7,17 @@
 //! the cycle model, the PRT, quant pack/unpack, Algorithm 1 conversion,
 //! the pipeline simulator, the coordinator iteration loop (mock and
 //! LUT-GEMV engines), and the multi-layer KV-cached transformer decode
-//! workload at batch 1/8/32 × pool width 1/2/8 (tokens/s, with a
-//! per-layer per-projection GemvStats rollup and a cross-width
-//! bit-exactness assert). Results feed EXPERIMENTS.md §Perf before/after
-//! and are persisted to BENCH_hotpath.json next to Cargo.toml for the
-//! perf trajectory.
+//! workload as a **pinned-vs-unpinned matrix**: batch 1/8/32 × pool width
+//! 1/2/8 × NUMA placement off/auto (tokens/s, with a per-layer
+//! per-projection GemvStats rollup and a cross-width cross-placement
+//! bit-exactness assert). The host topology (node/CPU map) and pinned
+//! worker counts are recorded alongside so the artifact says *what kind
+//! of machine* produced the numbers — on a single-node runner the two
+//! placement modes are expected to coincide within noise; the off→auto
+//! delta is the headline NUMA metric on multi-socket hosts. Results feed
+//! EXPERIMENTS.md §Perf before/after and are persisted to
+//! BENCH_hotpath.json next to Cargo.toml for the perf trajectory (schema
+//! in EXPERIMENTS.md §BENCH_hotpath.json schema).
 //!
 //! Run: cargo bench --bench perf_hotpath
 
@@ -26,7 +32,7 @@ use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
 use sail::model::{DecodeItem, DecodeSpec, KvCacheSpec, LayerSpec, LutTransformer, ModelConfig};
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
-use sail::runtime::WorkerPool;
+use sail::runtime::{NumaPolicy, Topology, WorkerPool};
 use sail::sim::SailPerfModel;
 use sail::typeconv;
 use sail::util::bench::{time_fn, time_throughput, BenchOpts, BenchResult};
@@ -217,8 +223,11 @@ fn main() {
     // The real serving workload: every Q/K/V/O/FFN/head projection of all
     // 4 layers is a pooled LUT-GEMV at mixed per-layer precision, and
     // attention reads the q8 KV cache each token. Matrix: batch 1/8/32 ×
-    // pool width 1/2/8 (explicit pools, independent of SAIL_POOL_THREADS,
-    // so the artifact rows are comparable across CI legs).
+    // pool width 1/2/8 × placement off/auto (explicit pools, independent
+    // of SAIL_POOL_THREADS and SAIL_NUMA, so the artifact rows are
+    // comparable across CI legs). `off` is the unpinned unsharded
+    // baseline; `auto` pins workers per node and shards every projection's
+    // weights — on a single-node runner the modes coincide within noise.
     let decode_spec = || DecodeSpec {
         hidden: 64,
         heads: 8,
@@ -241,81 +250,102 @@ fn main() {
         budget: Duration::from_millis(250),
         ..opts
     };
-    let mut decode_rates: BTreeMap<(usize, usize), f64> = BTreeMap::new();
-    for width in [1usize, 2, 8] {
-        let dpool = WorkerPool::shared(width);
-        for batch in [1usize, 8, 32] {
-            let mut m =
-                LutTransformer::random(decode_spec(), 77, batch, Arc::clone(&dpool)).unwrap();
-            let max_ctx = m.spec().max_context;
-            let mut pos = 0usize;
-            let r = time_throughput(
-                &format!("decode 4L h64 q8-KV b{batch} x{width}T (tok/s)"),
-                decode_opts,
-                batch as f64,
-                || {
-                    if pos == max_ctx {
-                        for s in 0..batch {
-                            m.reset_slot(s).unwrap();
+    let numa_modes: [(&str, NumaPolicy); 2] =
+        [("off", NumaPolicy::Off), ("auto", NumaPolicy::Auto)];
+    let mut decode_rates: BTreeMap<(&str, usize, usize), f64> = BTreeMap::new();
+    let mut numa_pool_info: Vec<Json> = Vec::new();
+    for (mode, policy) in &numa_modes {
+        for width in [1usize, 2, 8] {
+            let dpool = Arc::new(WorkerPool::with_policy(width, policy));
+            if *mode == "auto" {
+                let mut o = BTreeMap::new();
+                o.insert("width".to_string(), Json::Num(width as f64));
+                o.insert("node_groups".to_string(), Json::Num(dpool.nodes() as f64));
+                o.insert(
+                    "pinned_workers".to_string(),
+                    Json::Num(dpool.pinned_workers() as f64),
+                );
+                numa_pool_info.push(Json::Obj(o));
+            }
+            for batch in [1usize, 8, 32] {
+                let mut m =
+                    LutTransformer::random(decode_spec(), 77, batch, Arc::clone(&dpool))
+                        .unwrap();
+                let max_ctx = m.spec().max_context;
+                let mut pos = 0usize;
+                let r = time_throughput(
+                    &format!("decode 4L h64 q8-KV b{batch} x{width}T numa-{mode} (tok/s)"),
+                    decode_opts,
+                    batch as f64,
+                    || {
+                        if pos == max_ctx {
+                            for s in 0..batch {
+                                m.reset_slot(s).unwrap();
+                            }
+                            pos = 0;
                         }
-                        pos = 0;
-                    }
-                    let items: Vec<DecodeItem> = (0..batch)
-                        .map(|s| DecodeItem { slot: s, token: (7 + s) as i32, pos })
-                        .collect();
-                    m.step(&items).unwrap();
-                    pos += 1;
-                },
-            );
-            decode_rates.insert((batch, width), r.items_per_sec());
-            results.push(r);
+                        let items: Vec<DecodeItem> = (0..batch)
+                            .map(|s| DecodeItem { slot: s, token: (7 + s) as i32, pos })
+                            .collect();
+                        m.step(&items).unwrap();
+                        pos += 1;
+                    },
+                );
+                decode_rates.insert((*mode, batch, width), r.items_per_sec());
+                results.push(r);
+            }
         }
     }
 
-    // Cross-width bit-exactness + per-layer per-projection rollup: the
-    // token stream must be identical at every pool width, and every
-    // projection of every layer must actually run on the LUT path.
+    // Cross-width *and cross-placement* bit-exactness + per-layer
+    // per-projection rollup: the token stream must be identical at every
+    // pool width under every placement mode, and every projection of
+    // every layer must actually run on the LUT path.
     let mut decode_streams: Vec<Vec<Vec<i32>>> = Vec::new();
     let mut decode_layer_stats: Vec<Json> = Vec::new();
-    for width in [1usize, 2, 8] {
-        let dpool = WorkerPool::shared(width);
-        let mut m = LutTransformer::random(decode_spec(), 77, 2, dpool).unwrap();
-        let mut toks = vec![3i32, 11];
-        let mut got = Vec::new();
-        for pos in 0..16usize {
-            let items: Vec<DecodeItem> = toks
-                .iter()
-                .enumerate()
-                .map(|(s, &t)| DecodeItem { slot: s, token: t, pos })
-                .collect();
-            m.step(&items).unwrap();
-            toks = (0..2).map(|s| argmax_logits(m.logits().row(s))).collect();
-            got.push(toks.clone());
-        }
-        decode_streams.push(got);
-        if width == 1 {
-            for (l, ls) in m.stats.layers.iter().enumerate() {
-                let mut o = BTreeMap::new();
-                o.insert("layer".to_string(), Json::Num(l as f64));
-                for (name, s) in ls.projections() {
-                    assert!(
-                        s.luts_built > 0 && s.lut_reads > 0,
-                        "layer {l} projection {name} skipped the LUT path"
-                    );
-                    o.insert(format!("{name}_lut_reads"), Json::Num(s.lut_reads as f64));
-                }
-                o.insert(
-                    "total_luts_built".to_string(),
-                    Json::Num(ls.total().luts_built as f64),
-                );
-                decode_layer_stats.push(Json::Obj(o));
+    for (mode, policy) in &numa_modes {
+        for width in [1usize, 2, 8] {
+            let dpool = Arc::new(WorkerPool::with_policy(width, policy));
+            let mut m = LutTransformer::random(decode_spec(), 77, 2, dpool).unwrap();
+            let mut toks = vec![3i32, 11];
+            let mut got = Vec::new();
+            for pos in 0..16usize {
+                let items: Vec<DecodeItem> = toks
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &t)| DecodeItem { slot: s, token: t, pos })
+                    .collect();
+                m.step(&items).unwrap();
+                toks = (0..2).map(|s| argmax_logits(m.logits().row(s))).collect();
+                got.push(toks.clone());
             }
-            assert!(m.stats.head.lut_reads > 0, "head projection skipped the LUT path");
+            decode_streams.push(got);
+            if *mode == "off" && width == 1 {
+                for (l, ls) in m.stats.layers.iter().enumerate() {
+                    let mut o = BTreeMap::new();
+                    o.insert("layer".to_string(), Json::Num(l as f64));
+                    for (name, s) in ls.projections() {
+                        assert!(
+                            s.luts_built > 0 && s.lut_reads > 0,
+                            "layer {l} projection {name} skipped the LUT path"
+                        );
+                        o.insert(format!("{name}_lut_reads"), Json::Num(s.lut_reads as f64));
+                    }
+                    o.insert(
+                        "total_luts_built".to_string(),
+                        Json::Num(ls.total().luts_built as f64),
+                    );
+                    decode_layer_stats.push(Json::Obj(o));
+                }
+                assert!(m.stats.head.lut_reads > 0, "head projection skipped the LUT path");
+            }
         }
     }
-    let decode_bit_exact =
-        decode_streams[0] == decode_streams[1] && decode_streams[0] == decode_streams[2];
-    assert!(decode_bit_exact, "decode token streams diverged across pool widths");
+    let decode_bit_exact = decode_streams.iter().all(|s| *s == decode_streams[0]);
+    assert!(
+        decode_bit_exact,
+        "decode token streams diverged across pool widths / placement modes"
+    );
 
     println!("== perf_hotpath ==");
     for r in &results {
@@ -335,15 +365,23 @@ fn main() {
         "lane-i32 pool over scalar-i64 serial (b8, {threads} threads): {speedup_b8:.2}x, \
          bit-exact: {bit_exact}"
     );
-    let d = |b: usize, w: usize| decode_rates[&(b, w)];
+    let d = |m: &'static str, b: usize, w: usize| decode_rates[&(m, b, w)];
+    let topo = Topology::detect();
     println!(
-        "multi-layer decode (4L h64 q8-KV) tok/s: b8 {:.0}/{:.0}/{:.0} @ 1/2/8T \
-         (x8T/x1T = {:.2}x), b32 x8T {:.0}, bit-exact across widths: {decode_bit_exact}",
-        d(8, 1),
-        d(8, 2),
-        d(8, 8),
-        d(8, 8) / d(8, 1),
-        d(32, 8)
+        "multi-layer decode (4L h64 q8-KV) tok/s, numa-off: b8 {:.0}/{:.0}/{:.0} @ 1/2/8T \
+         (x8T/x1T = {:.2}x), b32 x8T {:.0}",
+        d("off", 8, 1),
+        d("off", 8, 2),
+        d("off", 8, 8),
+        d("off", 8, 8) / d("off", 8, 1),
+        d("off", 32, 8)
+    );
+    println!(
+        "numa-auto vs numa-off (pinned/unpinned): b8 x8T {:.2}x, b32 x8T {:.2}x on {} — \
+         bit-exact across widths+modes: {decode_bit_exact}",
+        d("auto", 8, 8) / d("off", 8, 8),
+        d("auto", 32, 8) / d("off", 32, 8),
+        topo.summary()
     );
 
     let mut extras = BTreeMap::new();
@@ -353,8 +391,34 @@ fn main() {
         .insert("speedup_b32_lane_vs_scalar_serial".to_string(), Json::Num(speedup_lane_b32));
     extras.insert("bit_exact_vs_reference".to_string(), Json::Bool(bit_exact));
     extras.insert("decode_bit_exact_across_widths".to_string(), Json::Bool(decode_bit_exact));
-    extras.insert("decode_speedup_b8_x8T_vs_x1T".to_string(), Json::Num(d(8, 8) / d(8, 1)));
+    extras.insert(
+        "decode_speedup_b8_x8T_vs_x1T".to_string(),
+        Json::Num(d("off", 8, 8) / d("off", 8, 1)),
+    );
     extras.insert("decode_layer_stats".to_string(), Json::Arr(decode_layer_stats));
+    // The pinned-vs-unpinned matrix: one row per (mode, batch, width).
+    let numa_rows: Vec<Json> = decode_rates
+        .iter()
+        .map(|(&(mode, batch, width), &tok_s)| {
+            let mut o = BTreeMap::new();
+            o.insert("mode".to_string(), Json::Str(mode.to_string()));
+            o.insert("batch".to_string(), Json::Num(batch as f64));
+            o.insert("width".to_string(), Json::Num(width as f64));
+            o.insert("tok_per_sec".to_string(), Json::Num(tok_s));
+            Json::Obj(o)
+        })
+        .collect();
+    extras.insert("decode_numa_matrix".to_string(), Json::Arr(numa_rows));
+    extras.insert(
+        "decode_speedup_numa_auto_vs_off_b8_x8T".to_string(),
+        Json::Num(d("auto", 8, 8) / d("off", 8, 8)),
+    );
+    extras.insert("numa_topology".to_string(), Json::Str(topo.summary()));
+    extras.insert("numa_auto_pools".to_string(), Json::Arr(numa_pool_info));
+    extras.insert(
+        "numa_env".to_string(),
+        Json::Str(std::env::var("SAIL_NUMA").unwrap_or_else(|_| "<unset>".to_string())),
+    );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
     std::fs::write(path, render_json(&results, threads, extras))
         .expect("writing BENCH_hotpath.json");

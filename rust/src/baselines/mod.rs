@@ -1,7 +1,7 @@
 //! Baseline performance models: ARM Neoverse-N1, Non-AMX x86, Intel AMX,
 //! NVIDIA V100/A100, and the Neural Cache PIM.
 //!
-//! ## Calibration methodology (DESIGN.md §Calibration)
+//! ## Calibration methodology
 //!
 //! The paper calibrated its gem5 ARM model against GCP hardware (≤5.4%
 //! error) and measured AMX/GPU on real machines. Without that hardware we

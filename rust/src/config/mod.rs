@@ -4,7 +4,7 @@
 //! Sections:
 //! - `[model]`    — which model + quantization to serve/simulate,
 //! - `[sail]`     — accelerator parameters (threads, NBW, PRT, in-memory
-//!                  TC, KV precision),
+//!                  TC, KV precision, NUMA placement policy),
 //! - `[serving]`  — batch slots, workload shape,
 //! - `[arch.dram]`— memory-system overrides.
 
@@ -14,6 +14,7 @@ use std::path::Path;
 use crate::arch::{DramConfig, SystemConfig};
 use crate::model::{KvCacheSpec, ModelConfig};
 use crate::quant::QuantLevel;
+use crate::runtime::NumaPolicy;
 use crate::sim::SailPerfModel;
 use crate::util::toml::TomlDoc;
 
@@ -27,6 +28,12 @@ pub struct RunConfig {
     pub use_prt: bool,
     pub in_memory_typeconv: bool,
     pub kv_bits: u32,
+    /// Worker placement policy for the execution pool (`sail.numa`:
+    /// `"off"`, `"auto"`, or an explicit `node:cpulist;…` map — the
+    /// `SAIL_NUMA` syntax). Consumed by `sail serve --engine lut
+    /// --config FILE`, which builds the serving pool from
+    /// `threads` + `numa`.
+    pub numa: NumaPolicy,
     pub batch: usize,
     pub requests: usize,
     pub rate_per_sec: f64,
@@ -43,6 +50,7 @@ impl Default for RunConfig {
             use_prt: true,
             in_memory_typeconv: true,
             kv_bits: 8,
+            numa: NumaPolicy::Auto,
             batch: 8,
             requests: 16,
             rate_per_sec: 4.0,
@@ -75,6 +83,19 @@ impl RunConfig {
         if !(1..=8).contains(&nbw) {
             return Err(anyhow!("sail.nbw must be 1..=8"));
         }
+        // A present-but-malformed placement must be an error, not a silent
+        // fall-back to auto (the run would be unpinned and nobody would
+        // know why the NUMA numbers regressed) — including a present but
+        // non-string value, which `str_or` would silently default.
+        let numa = match doc.get("sail.numa") {
+            None => NumaPolicy::Auto,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("sail.numa must be a string (\"off\"/\"auto\"/map)"))?;
+                NumaPolicy::parse(s).map_err(|e| anyhow!("bad sail.numa: {e}"))?
+            }
+        };
         Ok(RunConfig {
             model,
             level,
@@ -83,6 +104,7 @@ impl RunConfig {
             use_prt: doc.bool_or("sail.prt", d.use_prt),
             in_memory_typeconv: doc.bool_or("sail.in_memory_typeconv", d.in_memory_typeconv),
             kv_bits: doc.usize_or("sail.kv_bits", d.kv_bits as usize) as u32,
+            numa,
             batch: doc.usize_or("serving.batch", d.batch),
             requests: doc.usize_or("serving.requests", d.requests),
             rate_per_sec: doc.f64_or("serving.rate", d.rate_per_sec),
@@ -166,9 +188,29 @@ mt_per_sec = 3200
             "[model]\nname = \"70b\"",
             "[model]\nquant = \"q7\"",
             "[sail]\nnbw = 9",
+            "[sail]\nnuma = \"1:0-3\"",
+            "[sail]\nnuma = \"sideways\"",
+            "[sail]\nnuma = 0",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(RunConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn numa_policy_parses_and_defaults() {
+        let c = RunConfig::default();
+        assert_eq!(c.numa, NumaPolicy::Auto);
+        for (text, want) in [
+            ("[sail]\nnuma = \"off\"", NumaPolicy::Off),
+            ("[sail]\nnuma = \"auto\"", NumaPolicy::Auto),
+            (
+                "[sail]\nnuma = \"0:0-1;1:2-3\"",
+                NumaPolicy::Explicit(vec![vec![0, 1], vec![2, 3]]),
+            ),
+        ] {
+            let doc = TomlDoc::parse(text).unwrap();
+            assert_eq!(RunConfig::from_doc(&doc).unwrap().numa, want, "{text}");
         }
     }
 

@@ -68,6 +68,9 @@ pub struct Batcher<E: DecodeEngine> {
 }
 
 impl<E: DecodeEngine> Batcher<E> {
+    /// Wrap `engine` with `engine.batch()` serving slots. The batcher owns
+    /// the engine; drive it with [`run_iteration`](Batcher::run_iteration)
+    /// or [`run_to_completion`](Batcher::run_to_completion).
     pub fn new(engine: E, cfg: BatcherConfig) -> Self {
         let b = engine.batch();
         Batcher {
@@ -80,27 +83,34 @@ impl<E: DecodeEngine> Batcher<E> {
         }
     }
 
+    /// The wrapped decode engine (read-only; tests and metrics use it to
+    /// inspect per-projection kernel stats).
     pub fn engine(&self) -> &E {
         &self.engine
     }
 
-    /// Enqueue a request.
+    /// Enqueue a request (admitted into a free slot, FIFO by default, at
+    /// the start of a later iteration).
     pub fn submit(&mut self, req: Request) {
         self.queue.push(req, self.iterations);
     }
 
+    /// Requests waiting in the admission queue.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
+    /// Slots currently serving a request.
     pub fn active_slots(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
+    /// Iterations run so far.
     pub fn iterations(&self) -> u64 {
         self.iterations
     }
 
+    /// True when nothing is queued and no slot is active.
     pub fn is_idle(&self) -> bool {
         self.queue.is_empty() && self.active_slots() == 0
     }

@@ -188,21 +188,18 @@ impl LutGemvServeEngine {
         let mut prng = crate::util::Prng::new(seed);
         let w: Vec<f32> = (0..vocab * hidden).map(|_| prng.normal() as f32).collect();
         let wt = QuantizedMatrix::quantize(&w, vocab, hidden, level, group);
-        LutGemvServeEngine::new(LutGemvEngine::new(wt, nbw), batch, max_context, pool)
+        // Placed for the serving pool: on a multi-node host the head
+        // weights are sharded per node (a no-op single shard otherwise).
+        let gemv = LutGemvEngine::with_pool(wt, nbw, &pool);
+        LutGemvServeEngine::new(gemv, batch, max_context, pool)
     }
 
-    /// Deterministic token/position embedding component `i` in `[-1, 1)`
-    /// (SplitMix64-style finalizer; no PRNG state, so it is the same on
-    /// every thread and at every batch size).
+    /// Deterministic token/position embedding component `i` in `[-1, 1)`:
+    /// the shared [`crate::util::splitmix_embed`] hash (no PRNG state, so
+    /// it is the same on every thread and at every batch size). Positions
+    /// here are batcher positions, always ≥ 0.
     fn embed(token: i32, position: i32, i: usize) -> f32 {
-        let mut z = (token as u64)
-            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add((position as u64) << 32)
-            .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-        z ^= z >> 31;
-        ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+        crate::util::splitmix_embed(token, position as u64, i)
     }
 
     /// The worker pool this engine dispatches on (shareable with other

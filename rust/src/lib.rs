@@ -1,24 +1,60 @@
 //! # SAIL — SRAM-Accelerated LLM Inference with LUT-based GEMV
 //!
-//! A full-system reproduction of the SAIL paper (Zhang, Park, Lee,
-//! Sadredini; CS.AR 2025): a near-cache processing-in-memory architecture
-//! for quantized LLM inference, built as a three-layer Rust + JAX/Pallas
-//! stack.
+//! A full-system reproduction of the SAIL paper (cs.AR 2025): a near-cache
+//! processing-in-memory architecture for quantized LLM inference, built as
+//! a Rust + JAX/Pallas stack that both *models* the hardware (cycle
+//! models, simulators, paper-table regenerators) and *executes* the
+//! algorithm for real (a bit-exact LUT-GEMV engine serving a multi-layer
+//! KV-cached transformer under a multi-user batching coordinator).
 //!
-//! Layer map (see DESIGN.md):
-//! - **Substrates**: [`quant`], [`isa`], [`csram`], [`typeconv`], [`arch`]
-//! - **Core contribution**: [`lutgemv`] (LUT-based GEMV + Pattern Reuse
+//! **Start here:** `README.md` (repository root) for the quick tour and
+//! build/run commands, and `ARCHITECTURE.md` for the full layer map, the
+//! decode data path from manifest to token stream, and where each of the
+//! paper's three innovations lives in the code.
+//!
+//! ## Layer map (bottom-up)
+//!
+//! - **Substrates**: [`quant`] (group-wise Q2–Q8 weights, int8
+//!   activations, dense bit-packing), [`isa`] (the `lutmm_1k`
+//!   instruction), [`csram`] (compute-SRAM geometry), [`typeconv`]
+//!   (Algorithm 1 in-memory int→fp32), [`arch`] (cache/DRAM/NoC models)
+//! - **Core contribution**: [`lutgemv`] — LUT-based GEMV + Pattern Reuse
 //!   Table, executed by a tiled backend with lane-parallel i32 plane
-//!   accumulation over the persistent shared [`runtime::WorkerPool`],
-//!   bit-exact at every thread count), [`sim`] (tensor-level scheduling +
-//!   ping-pong pipeline)
+//!   accumulation over the persistent NUMA-aware
+//!   [`runtime::WorkerPool`]; bit-exact at every thread count and
+//!   placement. [`sim`] adds tensor-level scheduling + the ping-pong
+//!   pipeline
 //! - **Evaluation substrate**: [`baselines`] (ARM / AMX / GPU / Neural
 //!   Cache models), [`model`] (transformer shape inventory — plus the
 //!   executable multi-layer KV-cached decode model every serving token
 //!   runs through), [`cost`] (tokens-per-dollar and overhead accounting)
-//! - **Serving system**: [`coordinator`] (multi-user batched serving),
-//!   [`runtime`] (PJRT execution of the AOT-compiled JAX/Pallas model)
-//! - **Support**: [`util`]
+//! - **Serving system**: [`coordinator`] (multi-user iteration-level
+//!   batched serving), [`runtime`] (worker pool + NUMA topology/placement,
+//!   and PJRT execution of the AOT-compiled JAX/Pallas model)
+//! - **Reporting**: [`report`] (paper table/figure regenerators);
+//!   **support**: [`util`]
+//!
+//! ## The invariants everything leans on
+//!
+//! - **Bit-exactness**: [`lutgemv::LutGemvEngine`] reduces the same
+//!   integers in the same per-column order as the naive quantized dot
+//!   product, then applies float scales — so LUT execution, tiling,
+//!   threading, lane-parallel i32 accumulation, and NUMA placement are
+//!   all *invisible in the output*, and the serving layer inherits
+//!   bit-identical token streams at every pool width and placement
+//!   policy.
+//! - **The i32 range proof** (`lutgemv::planes`): per scale group,
+//!   `|LUT entry| ≤ Σ|w|` and every partial sum is bounded by
+//!   `Σ|w| · (2^act_bits − 1)`; when that fits `i32`, the narrow lane
+//!   kernels compute the very same integers as the i64 reference, else
+//!   the engine falls back automatically.
+//! - **KV byte accounting**: the executable [`model::KvCache`] allocates
+//!   its element payload exactly as [`model::KvCacheSpec::seq_bytes`]
+//!   accounts it, so the capacity/cost models and the running system can
+//!   never drift apart silently.
+//! - **Determinism**: no global state, seeded PRNGs, fixed sequential
+//!   float reduction orders outside the integer kernels — the same
+//!   request stream yields the same tokens on any machine.
 
 pub mod arch;
 pub mod baselines;

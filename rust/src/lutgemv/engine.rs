@@ -16,6 +16,21 @@
 //! integer accumulation order is fixed and float scaling happens per
 //! column, outputs and [`GemvStats`] are bit-identical at every thread
 //! count — parallelism is an execution detail, not a numerics change.
+//!
+//! NUMA placement (the software analogue of the paper's premise that the
+//! win comes from keeping weight traffic next to the compute): an engine
+//! built with [`LutGemvEngine::with_pool`] splits its output columns into
+//! one contiguous *shard per node group* of the pool's placement, gives
+//! each node a first-touch copy of exactly the `[N, K]` weight rows (and
+//! range-proof sums, and scratch arena) its tiles read, and routes every
+//! tile job to the owning node's pinned workers. Shard copies are
+//! integer-identical to the master matrix and each column's computation is
+//! independent, so placement, like threading, is invisible in the output
+//! — pinned by `tests/numa_placement.rs`. Engines built with
+//! [`LutGemvEngine::new`] (or any engine on a single-node host /
+//! `SAIL_NUMA=off`) keep one shard sharing the master weights, which is
+//! exactly the pre-NUMA layout with zero copies.
+//!
 //! Within each scale group the kernel accumulates on the lane-parallel
 //! `i32` path of [`super::planes`] whenever the per-group range proof
 //! holds (it always does for realistic shapes), falling back to `i64`
@@ -63,7 +78,9 @@ pub struct LutGemvEngine {
     /// Quantized weights, stored transposed (`[N, K]` row-major) so that an
     /// output column's basis weights are contiguous — the layout the
     /// address hasher stripes across cache slices. `Arc`-held because tile
-    /// jobs on persistent pool workers share it without borrowing.
+    /// jobs on persistent pool workers share it without borrowing. This is
+    /// the *master* copy ([`weights`](LutGemvEngine::weights), the
+    /// reference oracle); the hot path reads the per-node shards.
     wt: Arc<QuantizedMatrix>,
     nbw: u32,
     /// Enable the Pattern Reuse Table (§III-D).
@@ -79,27 +96,50 @@ pub struct LutGemvEngine {
     /// Output columns per tile handed to one worker. The default (64)
     /// keeps a tile's scratch (K×i32 weight row + LUT + accumulators)
     /// L1-resident while giving the pool enough tiles to balance; tests
-    /// shrink it to force multi-tile execution on tiny matrices.
+    /// shrink it to force multi-tile execution on tiny matrices. Tiles
+    /// never straddle a shard boundary (each shard tiles independently).
     pub tile_cols: usize,
-    /// Per-(column, scale-group) `Σ|w|` — the range-proof input — indexed
-    /// `[col * groups_per_row + g]`. Depends only on the immutable
-    /// weights, so it is computed once here instead of on every call
-    /// inside the hot column loop.
-    group_abs_sums: Arc<Vec<u64>>,
-    /// Recycled per-tile scratch + tile output buffers (see
-    /// [`ScratchArena`]); steady-state GEMV never allocates these.
-    arena: Arc<ScratchArena>,
-    /// Recycled per-call pattern/scale buffers, recovered from the call
-    /// context after every dispatch. A small stack (not a single slot) so
-    /// concurrent `gemv_batch_into` calls on one shared engine each get a
-    /// reusable set instead of racing for one and dropping the loser's.
+    /// Per-node weight shards: contiguous column ranges, each with its own
+    /// weight slice, range-proof sums, and scratch arena — single entry
+    /// (sharing the master `Arc`s, no copy) for unplaced engines.
+    shards: Arc<Vec<NodeShard>>,
+    /// Recycled per-call pattern/scale/tile buffers, recovered from the
+    /// call context after every dispatch. A small stack (not a single
+    /// slot) so concurrent `gemv_batch_into` calls on one shared engine
+    /// each get a reusable set instead of racing for one and dropping the
+    /// loser's.
     call_buffers: Mutex<Vec<CallBuffers>>,
+}
+
+/// One node group's slice of the engine: the output columns
+/// `[col_start, col_end)`, their weights/range-proof sums (exact copies of
+/// the master's rows — bit-identical GEMV by construction), and a scratch
+/// arena whose buffers live on the owning node, so tile-job checkout never
+/// crosses a socket.
+struct NodeShard {
+    col_start: usize,
+    col_end: usize,
+    wt: Arc<QuantizedMatrix>,
+    /// Per-(local column, scale-group) `Σ|w|`, `[col * groups_per_row + g]`
+    /// — the lane range-proof input, precomputed at construction.
+    group_abs_sums: Arc<Vec<u64>>,
+    arena: Arc<ScratchArena>,
+}
+
+/// One tile of one call: which shard owns it and its *global* column
+/// range (`tile_job` rebases to shard-local indices).
+#[derive(Debug, Clone, Copy)]
+struct TileDesc {
+    shard: usize,
+    col_start: usize,
+    col_end: usize,
 }
 
 #[derive(Default)]
 struct CallBuffers {
     patterns: Vec<u32>,
     x_scales: Vec<f32>,
+    tiles: Vec<TileDesc>,
 }
 
 /// Default column-tile width (see [`LutGemvEngine::tile_cols`]).
@@ -113,25 +153,23 @@ pub const DEFAULT_PRT_CAPACITY: usize = 32;
 /// borrowing from the caller; the big buffers inside are recycled — the
 /// engine recovers them via `Arc::try_unwrap` once every tile reported.
 struct GemvCall {
-    wt: Arc<QuantizedMatrix>,
-    group_abs_sums: Arc<Vec<u64>>,
-    arena: Arc<ScratchArena>,
+    shards: Arc<Vec<NodeShard>>,
     nbw: u32,
     use_prt: bool,
     prt_capacity: usize,
     force_scalar_accum: bool,
     patterns: Vec<u32>,
     x_scales: Vec<f32>,
+    tiles: Vec<TileDesc>,
     act_bits: usize,
     batch: usize,
-    tile_cols: usize,
-    n: usize,
     k: usize,
 }
 
 /// One tile's report back to the dispatcher. The output buffer returns to
-/// the arena after the engine scatters it.
+/// the owning shard's arena after the engine scatters it.
 struct TileReport {
+    shard: usize,
     col_start: usize,
     col_end: usize,
     out: Vec<f32>,
@@ -139,17 +177,19 @@ struct TileReport {
 }
 
 /// The per-tile job body (stateless; all inputs come through the call
-/// context, as the persistent pool requires).
+/// context, as the persistent pool requires). Reads only the owning
+/// shard's weights and arena — on a placed engine everything this touches
+/// per iteration, except the small shared pattern table, is node-local.
 fn tile_job(call: &GemvCall, t: usize) -> TileReport {
-    let col_start = t * call.tile_cols;
-    let col_end = (col_start + call.tile_cols).min(call.n);
-    let width = col_end - col_start;
+    let desc = call.tiles[t];
+    let shard = &call.shards[desc.shard];
+    let width = desc.col_end - desc.col_start;
     let mut scratch =
-        call.arena.checkout_scratch(call.k, call.nbw, call.batch, call.prt_capacity);
-    let mut out = call.arena.checkout_out(call.batch * width);
+        shard.arena.checkout_scratch(call.k, call.nbw, call.batch, call.prt_capacity);
+    let mut out = shard.arena.checkout_out(call.batch * width);
     let args = TileArgs {
-        wt: &call.wt,
-        group_abs_sums: &call.group_abs_sums,
+        wt: &shard.wt,
+        group_abs_sums: &shard.group_abs_sums,
         nbw: call.nbw,
         use_prt: call.use_prt,
         force_scalar_accum: call.force_scalar_accum,
@@ -157,18 +197,106 @@ fn tile_job(call: &GemvCall, t: usize) -> TileReport {
         act_bits: call.act_bits,
         batch: call.batch,
         x_scales: &call.x_scales,
-        col_start,
-        col_end,
+        col_start: desc.col_start - shard.col_start,
+        col_end: desc.col_end - shard.col_start,
     };
     let stats = run_tile(&args, &mut scratch, &mut out);
-    call.arena.checkin_scratch(scratch);
-    TileReport { col_start, col_end, out, stats }
+    shard.arena.checkin_scratch(scratch);
+    TileReport { shard: desc.shard, col_start: desc.col_start, col_end: desc.col_end, out, stats }
+}
+
+/// Context of the first-touch shard build: each node builds its own slice
+/// on one of its own (pinned) workers, so the copied pages are allocated
+/// on that node under the kernel's first-touch policy.
+struct ShardBuild {
+    wt: Arc<QuantizedMatrix>,
+    group_abs_sums: Arc<Vec<u64>>,
+    ranges: Vec<(usize, usize)>,
+}
+
+fn build_shard(ctx: &ShardBuild, i: usize) -> NodeShard {
+    let (r0, r1) = ctx.ranges[i];
+    let gpr = ctx.wt.groups_per_row();
+    NodeShard {
+        col_start: r0,
+        col_end: r1,
+        wt: Arc::new(ctx.wt.slice_rows(r0, r1)),
+        group_abs_sums: Arc::new(ctx.group_abs_sums[r0 * gpr..r1 * gpr].to_vec()),
+        arena: Arc::new(ScratchArena::new()),
+    }
 }
 
 impl LutGemvEngine {
     /// Build from a transposed quantized matrix (`wt` is `[N, K]`).
     /// `nbw` must not exceed the scale group size.
+    ///
+    /// The engine has a single weight shard sharing the master matrix (no
+    /// copies) — correct on any pool, NUMA-local on none. Use
+    /// [`with_pool`](LutGemvEngine::with_pool) to place the weights for a
+    /// specific pool.
+    ///
+    /// ```
+    /// use sail::lutgemv::LutGemvEngine;
+    /// use sail::quant::{QuantLevel, QuantizedMatrix};
+    ///
+    /// let w = vec![0.5f32; 8 * 16]; // 8 output columns, K = 16
+    /// let wt = QuantizedMatrix::quantize(&w, 8, 16, QuantLevel::Q4, 16);
+    /// let eng = LutGemvEngine::new(wt, 4);
+    /// assert_eq!((eng.n(), eng.k(), eng.nbw()), (8, 16, 4));
+    /// ```
     pub fn new(wt: QuantizedMatrix, nbw: u32) -> Self {
+        Self::check_shape(&wt, nbw);
+        let wt = Arc::new(wt);
+        let group_abs_sums = Arc::new(Self::compute_abs_sums(&wt));
+        let shard = NodeShard {
+            col_start: 0,
+            col_end: wt.rows,
+            wt: Arc::clone(&wt),
+            group_abs_sums: Arc::clone(&group_abs_sums),
+            arena: Arc::new(ScratchArena::new()),
+        };
+        LutGemvEngine {
+            wt,
+            nbw,
+            use_prt: false,
+            prt_capacity: DEFAULT_PRT_CAPACITY,
+            force_scalar_accum: false,
+            tile_cols: DEFAULT_TILE_COLS,
+            shards: Arc::new(vec![shard]),
+            call_buffers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Build an engine *placed for* `pool`: output columns are split into
+    /// one contiguous shard per node group of the pool's placement
+    /// (proportional to worker counts), and each node's workers build
+    /// their own first-touch copy of exactly the weight rows they will
+    /// serve. Dispatching on `pool` then routes every tile to the node
+    /// that owns its weights.
+    ///
+    /// On a single-group pool (serial, `SAIL_NUMA=off`, or a single-node
+    /// host) this is identical to [`new`](LutGemvEngine::new): one shard,
+    /// zero copies. An engine placed for one pool may still be dispatched
+    /// on a differently-shaped pool — outputs stay bit-identical, the
+    /// dispatch just falls back to unrouted (locality-blind) fan-out.
+    pub fn with_pool(wt: QuantizedMatrix, nbw: u32, pool: &WorkerPool) -> Self {
+        let mut eng = Self::new(wt, nbw);
+        let ranges = pool.placement().shard_ranges(eng.wt.rows);
+        if ranges.len() > 1 {
+            let ctx = Arc::new(ShardBuild {
+                wt: Arc::clone(&eng.wt),
+                group_abs_sums: Arc::clone(&eng.shards[0].group_abs_sums),
+                ranges,
+            });
+            let n = ctx.ranges.len();
+            // Routed so shard i is built (first-touched) on node i.
+            let shards = pool.run_ctx_routed(&ctx, n, |_, i| i, build_shard);
+            eng.shards = Arc::new(shards);
+        }
+        eng
+    }
+
+    fn check_shape(wt: &QuantizedMatrix, nbw: u32) {
         assert!((1..=8).contains(&nbw));
         assert!(
             nbw as usize <= wt.group_size,
@@ -176,8 +304,11 @@ impl LutGemvEngine {
             nbw,
             wt.group_size
         );
-        // One O(N·K) pass at construction: per-(col, group) Σ|w| for the
-        // lane range proof, so the hot loop only compares against it.
+    }
+
+    /// One O(N·K) pass at construction: per-(col, group) `Σ|w|` for the
+    /// lane range proof, so the hot loop only compares against it.
+    fn compute_abs_sums(wt: &QuantizedMatrix) -> Vec<u64> {
         let groups_per_row = wt.cols / wt.group_size;
         let mut group_abs_sums = vec![0u64; wt.rows * groups_per_row];
         let mut row = vec![0i32; wt.cols];
@@ -188,17 +319,19 @@ impl LutGemvEngine {
                     planes::abs_weight_sum(&row[g * wt.group_size..(g + 1) * wt.group_size]);
             }
         }
-        LutGemvEngine {
-            wt: Arc::new(wt),
-            group_abs_sums: Arc::new(group_abs_sums),
-            nbw,
-            use_prt: false,
-            prt_capacity: DEFAULT_PRT_CAPACITY,
-            force_scalar_accum: false,
-            tile_cols: DEFAULT_TILE_COLS,
-            arena: Arc::new(ScratchArena::new()),
-            call_buffers: Mutex::new(Vec::new()),
-        }
+        group_abs_sums
+    }
+
+    /// Number of weight shards (node groups this engine was placed for;
+    /// 1 when unplaced).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard column boundaries, `(col_start, col_end)` per shard —
+    /// observability for placement tests and the perf bench.
+    pub fn shard_bounds(&self) -> Vec<(usize, usize)> {
+        self.shards.iter().map(|s| (s.col_start, s.col_end)).collect()
     }
 
     pub fn n(&self) -> usize {
@@ -217,10 +350,13 @@ impl LutGemvEngine {
         &self.wt
     }
 
-    /// The scratch/output recycling arena (tests assert steady-state
-    /// buffer reuse through its counters).
+    /// The scratch/output recycling arena of the *first* shard (tests
+    /// assert steady-state buffer reuse through its counters; unplaced
+    /// engines have exactly one shard, so this is *the* arena for them).
+    /// Placed engines keep one arena per node so checkout never crosses a
+    /// socket.
     pub fn scratch_arena(&self) -> &ScratchArena {
-        &self.arena
+        &self.shards[0].arena
     }
 
     /// Compute `y = x · W` for a batch of activation vectors, exactly,
@@ -238,9 +374,34 @@ impl LutGemvEngine {
     /// are extracted once up front instead of N times; each group
     /// accumulates on the i32 lane kernels when its range proof holds
     /// (`super::planes`); tile scratch and tile outputs are recycled
-    /// through the engine's [`ScratchArena`], and the pattern/scale
-    /// buffers are recovered from the call context after every dispatch —
-    /// so a steady-state call reuses every large buffer it touches.
+    /// through the engine's per-node [`ScratchArena`]s, and the
+    /// pattern/scale buffers are recovered from the call context after
+    /// every dispatch — so a steady-state call reuses every large buffer
+    /// it touches.
+    ///
+    /// ```
+    /// use sail::lutgemv::{GemvOutput, LutGemvEngine};
+    /// use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+    /// use sail::runtime::WorkerPool;
+    ///
+    /// let w: Vec<f32> = (0..8 * 16).map(|i| (i as f32 - 64.0) / 64.0).collect();
+    /// let wt = QuantizedMatrix::quantize(&w, 8, 16, QuantLevel::Q4, 16);
+    /// let eng = LutGemvEngine::new(wt, 4);
+    /// let x = QuantizedVector::quantize(&[0.5f32; 16]);
+    ///
+    /// // The same output buffer is reused across calls and pools…
+    /// let mut out = GemvOutput::new();
+    /// let serial = WorkerPool::serial();
+    /// let stats = eng.gemv_batch_into(&[x.clone(), x.clone()], &serial, &mut out);
+    /// assert_eq!((out.batch(), out.n()), (2, 8));
+    /// let first = out.row(0).to_vec();
+    ///
+    /// // …and a threaded pool produces bit-identical results and stats.
+    /// let pool = WorkerPool::new(2);
+    /// let stats2 = eng.gemv_batch_into(&[x.clone(), x], &pool, &mut out);
+    /// assert_eq!(out.row(0), first.as_slice());
+    /// assert_eq!(stats, stats2);
+    /// ```
     pub fn gemv_batch_into(
         &self,
         xs: &[QuantizedVector],
@@ -276,7 +437,7 @@ impl LutGemvEngine {
 
         // Pattern table: patterns[(chunk * act_bits + plane) * batch + bi].
         // The buffers come from (and return to) the recycled call storage.
-        let CallBuffers { mut patterns, mut x_scales } =
+        let CallBuffers { mut patterns, mut x_scales, mut tiles } =
             self.call_buffers.lock().unwrap().pop().unwrap_or_default();
         patterns.resize(n_chunks * act_bits * batch, 0);
         for chunk in 0..n_chunks {
@@ -293,46 +454,66 @@ impl LutGemvEngine {
         x_scales.clear();
         x_scales.extend(xs.iter().map(|x| x.scale));
 
+        // Cut each shard's column range into tiles (tiles never straddle a
+        // shard boundary, so every tile has exactly one home node).
         let tile_cols = self.tile_cols.max(1);
-        let n_tiles = n.div_ceil(tile_cols);
+        tiles.clear();
+        for (si, shard) in self.shards.iter().enumerate() {
+            let mut c = shard.col_start;
+            while c < shard.col_end {
+                let e = (c + tile_cols).min(shard.col_end);
+                tiles.push(TileDesc { shard: si, col_start: c, col_end: e });
+                c = e;
+            }
+        }
+        let n_tiles = tiles.len();
         let ctx = Arc::new(GemvCall {
-            wt: Arc::clone(&self.wt),
-            group_abs_sums: Arc::clone(&self.group_abs_sums),
-            arena: Arc::clone(&self.arena),
+            shards: Arc::clone(&self.shards),
             nbw: self.nbw,
             use_prt: self.use_prt,
             prt_capacity: self.prt_capacity.max(1),
             force_scalar_accum: self.force_scalar_accum,
             patterns,
             x_scales,
+            tiles,
             act_bits,
             batch,
-            tile_cols,
-            n,
             k,
         });
-        let tiles = pool.run_ctx(&ctx, n_tiles, tile_job);
+        // Route tiles to their weight shard's node when the engine was
+        // placed for this pool's shape; otherwise (unplaced engine, or a
+        // pool with a different group count) fall back to locality-blind
+        // fan-out — same results either way.
+        let reports = if self.shards.len() > 1 && self.shards.len() == pool.nodes() {
+            pool.run_ctx_routed(&ctx, n_tiles, |call, t| call.tiles[t].shard, tile_job)
+        } else {
+            pool.run_ctx(&ctx, n_tiles, tile_job)
+        };
 
         // Scatter tile outputs into the flat buffer and sum stats, in tile
         // order (deterministic; the sums are order-independent anyway),
-        // returning each tile buffer to the arena once copied.
+        // returning each tile buffer to its shard's arena once copied.
         let mut stats = GemvStats::default();
         let data = out.data_mut();
-        for report in tiles {
+        for report in reports {
             stats += report.stats;
             let width = report.col_end - report.col_start;
             for bi in 0..batch {
                 data[bi * n + report.col_start..bi * n + report.col_end]
                     .copy_from_slice(&report.out[bi * width..(bi + 1) * width]);
             }
-            self.arena.checkin_out(report.out);
+            self.shards[report.shard].arena.checkin_out(report.out);
         }
 
         // Every tile job dropped its context clone before reporting, so
         // the unwrap is deterministic and the call buffers are recovered
         // for the next dispatch.
         if let Ok(call) = Arc::try_unwrap(ctx) {
-            let bufs = CallBuffers { patterns: call.patterns, x_scales: call.x_scales };
+            let bufs = CallBuffers {
+                patterns: call.patterns,
+                x_scales: call.x_scales,
+                tiles: call.tiles,
+            };
             self.call_buffers.lock().unwrap().push(bufs);
         }
         stats
@@ -633,5 +814,51 @@ mod tests {
         let w = vec![0.0f32; 8];
         let wt = QuantizedMatrix::quantize(&w, 2, 4, QuantLevel::Q4, 4);
         let _ = LutGemvEngine::new(wt, 8);
+    }
+
+    #[test]
+    fn placed_engine_shards_match_pool_and_stay_exact() {
+        use crate::runtime::topology::NumaPolicy;
+        let mut prng = Prng::new(121);
+        let (wt, xs) = random_setup(&mut prng, 37, 96, QuantLevel::Q4, 32);
+        let reference = LutGemvEngine::new(wt.clone(), 4);
+        let (want, want_stats) = reference.gemv_batch(&xs);
+
+        // A fake 2-node pool: the engine must build 2 contiguous shards
+        // covering [0, N) and produce bit-identical output/stats whether
+        // dispatched on the placed pool, a plain pool, or serially.
+        let pool = WorkerPool::with_policy(4, &NumaPolicy::Explicit(vec![vec![0], vec![1]]));
+        let mut eng = LutGemvEngine::with_pool(wt, 4, &pool);
+        eng.tile_cols = 5;
+        assert_eq!(eng.shard_count(), 2);
+        let bounds = eng.shard_bounds();
+        assert_eq!(bounds.first().unwrap().0, 0);
+        assert_eq!(bounds.last().unwrap().1, 37);
+        assert_eq!(bounds[0].1, bounds[1].0, "shards must be contiguous");
+
+        let mut out = GemvOutput::new();
+        let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+        assert_eq!(out, want, "placed+routed dispatch drifted");
+        assert_eq!(stats, want_stats);
+        for other in [WorkerPool::serial(), WorkerPool::with_policy(3, &NumaPolicy::Off)] {
+            let stats = eng.gemv_batch_into(&xs, &other, &mut out);
+            assert_eq!(out, want, "fallback dispatch drifted");
+            assert_eq!(stats, want_stats);
+        }
+    }
+
+    #[test]
+    fn placed_engine_on_single_group_pool_makes_no_copies() {
+        let mut prng = Prng::new(123);
+        let (wt, xs) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let pool = WorkerPool::serial();
+        let eng = LutGemvEngine::with_pool(wt, 4, &pool);
+        assert_eq!(eng.shard_count(), 1);
+        // Single shard shares the master matrix Arc — no slice was built.
+        assert!(Arc::ptr_eq(&eng.wt, &eng.shards[0].wt));
+        let (ys, _) = eng.gemv_batch(&xs);
+        for (bi, x) in xs.iter().enumerate() {
+            assert_eq!(ys.row(bi), reference_gemv(eng.weights(), x).as_slice());
+        }
     }
 }

@@ -16,12 +16,20 @@
 //!   mirrored by the Pallas kernel on the Python side). Execution is tiled
 //!   and thread-parallel: column tiles fan out over the persistent
 //!   [`crate::runtime::WorkerPool`], with outputs/stats bit-identical at
-//!   every thread count;
+//!   every thread count. On NUMA hosts the engine is *placed*: each node
+//!   group owns a first-touch copy of its contiguous column shard of the
+//!   weights and tiles are routed to the owning node's pinned workers
+//!   ([`LutGemvEngine::with_pool`]) — again invisible in the output,
+//!   because a column's integer accumulation order never depends on where
+//!   it runs;
 //! - [`tile`]: the per-tile kernel, its arena-recycled scratch
-//!   ([`tile::ScratchArena`]), and the flat row-major batch-output buffer
+//!   ([`tile::ScratchArena`], one arena per node so checkout never crosses
+//!   a socket), and the flat row-major batch-output buffer
 //!   ([`tile::GemvOutput`]) the serving loop reuses;
 //! - [`planes`]: the lane-parallel i32 plane-accumulation kernels and the
-//!   per-group range proof that makes narrowing from i64 provably exact;
+//!   per-group range proof that makes narrowing from i64 provably exact
+//!   (`|entry| ≤ Σ|w|` per chunk, partial sums ≤ `Σ|w|·(2^act_bits−1)`;
+//!   i64 fallback whenever the bound does not fit `i32`);
 //! - [`pattern`]: the Pattern Reuse Table (§III-D) that short-circuits
 //!   repeated activation bit patterns (O(1) generation-counter flush);
 //! - [`cycles`]: the C-SRAM cycle model for a tile GEMV, the quantity the

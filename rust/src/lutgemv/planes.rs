@@ -1,6 +1,7 @@
 //! Lane-parallel plane accumulation for the LUT-GEMV tile kernel.
 //!
-//! The `planes × batch` inner loop of [`super::tile::run_tile`] spends its
+//! The `planes × batch` inner loop of the tile kernel (`run_tile` in
+//! [`super::tile`]) spends its
 //! time doing `acc[bi] ± (lut_entry << plane)` integer adds. The paper's
 //! §III-C batching argument assumes this loop runs at vector-unit speed;
 //! with `i64` accumulators the compiler emits at most 2-wide SIMD, so this

@@ -1,13 +1,16 @@
 //! Column-tile kernel for the LUT-GEMV execution backend.
 //!
 //! The engine splits the N output columns into contiguous tiles; each tile
-//! is computed by [`run_tile`] with all of its mutable state in a
-//! [`TileScratch`], so the hot `columns × groups × chunks × planes × batch`
-//! loop is allocation-free and tiles can run concurrently on the
-//! [`crate::runtime::WorkerPool`] with nothing shared but read-only inputs.
-//! Scratch (and the tile output buffers) live in a per-engine
-//! [`ScratchArena`] and are recycled across calls, so steady-state GEMV
-//! reuses every large buffer instead of reallocating per tile.
+//! is computed by the crate-internal `run_tile` with all of its mutable
+//! state in a private `TileScratch`, so the hot
+//! `columns × groups × chunks × planes × batch` loop is allocation-free
+//! and tiles can run concurrently on the [`crate::runtime::WorkerPool`]
+//! with nothing shared but read-only inputs. Scratch (and the tile output
+//! buffers) live in a per-node [`ScratchArena`] and are recycled across
+//! calls, so steady-state GEMV reuses every large buffer instead of
+//! reallocating per tile — and on a NUMA-placed engine a tile's scratch
+//! checkout, weight reads, and output buffer all stay on the node whose
+//! worker runs the tile.
 //!
 //! Per scale group the kernel picks one of two accumulation paths:
 //! the lane-parallel `i32` kernels in [`super::planes`] when the per-group
@@ -94,12 +97,18 @@ impl GemvOutput {
     }
 }
 
-/// Read-only inputs shared by every tile of one `gemv_batch` call.
+/// Read-only inputs shared by every tile of one `gemv_batch` call. `wt`
+/// may be the engine's full matrix or one node's weight shard; `col_start`
+/// / `col_end` (and the `group_abs_sums` index space) are always *local*
+/// to `wt`'s rows — the dispatcher rebases global column ids before the
+/// kernel ever sees them.
 pub(crate) struct TileArgs<'a> {
-    /// Transposed quantized weights (`[N, K]` row-major).
+    /// Transposed quantized weights (`[rows, K]` row-major): the full
+    /// `[N, K]` matrix, or the owning node's contiguous row slice.
     pub wt: &'a QuantizedMatrix,
-    /// Per-(column, scale-group) `Σ|w|`, `[col * groups_per_row + g]` —
-    /// precomputed at engine construction for the lane range proof.
+    /// Per-(local column, scale-group) `Σ|w|`,
+    /// `[col * groups_per_row + g]` — precomputed at engine construction
+    /// for the lane range proof.
     pub group_abs_sums: &'a [u64],
     pub nbw: u32,
     pub use_prt: bool,
@@ -180,14 +189,16 @@ impl TileScratch {
     }
 }
 
-/// Recycling pool for [`TileScratch`] and tile output buffers.
+/// Recycling pool for per-tile scratch and tile output buffers.
 ///
-/// One arena per engine: tile jobs check a scratch out, run, and check it
-/// back in; tile outputs are checked out by jobs and returned by the
-/// engine after scattering into the caller's [`GemvOutput`]. The arena
-/// grows to the peak number of concurrently-live buffers (≈ worker count
-/// for scratches, tiles-per-call for outputs) and then stops allocating —
-/// the `*_created` counters let tests assert steady-state reuse.
+/// One arena per engine *shard* (one per node group on a NUMA-placed
+/// engine, so checkout never crosses a socket): tile jobs check a scratch
+/// out, run, and check it back in; tile outputs are checked out by jobs
+/// and returned by the engine after scattering into the caller's
+/// [`GemvOutput`]. The arena grows to the peak number of concurrently-live
+/// buffers (≈ worker count for scratches, tiles-per-call for outputs) and
+/// then stops allocating — the `*_created` counters let tests assert
+/// steady-state reuse.
 #[derive(Debug, Default)]
 pub struct ScratchArena {
     scratches: Mutex<Vec<TileScratch>>,

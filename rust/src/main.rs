@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   simulate    SAIL + baseline throughput for a model/quant/threads/batch
-//!   serve       end-to-end serving demo over the AOT artifacts (PJRT)
+//!   serve       end-to-end serving demo over the AOT artifacts (PJRT,
+//!               or the manifest's model on the LUT backend with
+//!               manifest/config-driven NUMA placement via --engine lut)
 //!   crosscheck  compiled Pallas GEMV tile vs the Rust LUT-GEMV engine
 //!   overhead    hardware-overhead accounting (Table V / §V-I)
 //!
@@ -40,7 +42,7 @@ fn print_help() {
          USAGE: sail <subcommand> [options]\n\n\
          SUBCOMMANDS:\n\
          \x20 simulate   [--config FILE] --model 7b|13b|248m --quant q2..q8 --threads N --batch N\n\
-         \x20 serve      --artifacts DIR --batch N --requests N [--mock]\n\
+         \x20 serve      --artifacts DIR --batch N --requests N [--engine lut|pjrt|mock] [--config FILE] [--mock]\n\
          \x20 crosscheck --artifacts DIR [--seed N]\n\
          \x20 overhead\n\
          \x20 help\n\n\
@@ -134,17 +136,56 @@ fn serve(mut args: Args) -> Result<()> {
     let n_requests: usize = args.opt("requests", 16usize);
     let seed: u64 = args.opt("seed", 42u64);
     let mock = args.flag("mock");
+    let engine_kind = args.opt_str("engine", if mock { "mock" } else { "pjrt" });
+    let config = args.opt_str_opt("config");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
 
-    println!("spawning server (batch={batch}, requests={n_requests}, mock={mock})");
-    let metrics = if mock {
-        let server = Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default());
-        drive(server, n_requests, seed)?
-    } else {
-        let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
-        println!("loaded artifacts from {dir}");
-        let server = Server::spawn(engine, BatcherConfig::default());
-        drive(server, n_requests, seed)?
+    println!("spawning server (engine={engine_kind}, batch={batch}, requests={n_requests})");
+    let metrics = match engine_kind.as_str() {
+        "mock" => {
+            let server =
+                Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default());
+            drive(server, n_requests, seed)?
+        }
+        "pjrt" => {
+            let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
+            println!("loaded artifacts from {dir}");
+            let server = Server::spawn(engine, BatcherConfig::default());
+            drive(server, n_requests, seed)?
+        }
+        // Serve the artifact's model config on the LUT-GEMV transformer
+        // backend: shapes/precision come from the manifest, worker
+        // placement from the manifest's `placement` field — or, when
+        // --config FILE is given, from `[sail]` threads/numa there.
+        "lut" => {
+            use sail::coordinator::TransformerServeEngine;
+            use sail::runtime::{Manifest, WorkerPool};
+            let manifest = Manifest::load(std::path::Path::new(&dir))?;
+            let spec = manifest.decode_spec()?;
+            let (threads, policy) = match config {
+                Some(path) => {
+                    let c = sail::config::RunConfig::load(std::path::Path::new(&path))?;
+                    (c.threads as usize, c.numa)
+                }
+                None => (WorkerPool::auto_width(), manifest.config.placement.clone()),
+            };
+            let pool = std::sync::Arc::new(WorkerPool::with_policy(threads, &policy));
+            println!(
+                "manifest {}: {} layers, hidden {}, vocab {} — placement {policy} → \
+                 {} node group(s), {} worker(s), {} pinned",
+                dir,
+                manifest.config.layers,
+                manifest.config.hidden,
+                manifest.config.vocab,
+                pool.nodes(),
+                pool.threads(),
+                pool.pinned_workers()
+            );
+            let engine = TransformerServeEngine::random(spec, seed, batch, pool)?;
+            let server = Server::spawn(engine, BatcherConfig::default());
+            drive(server, n_requests, seed)?
+        }
+        other => bail!("unknown --engine {other} (lut|pjrt|mock)"),
     };
     println!("{}", metrics.report());
     Ok(())

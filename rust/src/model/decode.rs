@@ -32,6 +32,13 @@
 //! attention stopped reading the cache, every step would collapse to a
 //! function of (token, position) alone and the conformance tests would
 //! catch it.
+//!
+//! NUMA: every projection engine is built with
+//! [`LutGemvEngine::with_pool`], so on a multi-node pool each node owns a
+//! first-touch copy of its column shard of all 7·L+1 projection matrices
+//! and decode's per-token GEMV traffic stays socket-local. Token streams
+//! are bit-identical across placement policies (`SAIL_NUMA=off` vs `auto`
+//! vs any explicit map), pinned by `tests/numa_placement.rs`.
 
 use std::sync::Arc;
 
@@ -280,18 +287,12 @@ pub struct LutTransformer {
     logits: GemvOutput,
 }
 
-/// Deterministic token/position embedding component `i` in `[-1, 1)`
-/// (SplitMix64-style finalizer): stateless, so it is identical on every
-/// thread, at every batch size, and across pool widths.
+/// Deterministic token/position embedding component `i` in `[-1, 1)`:
+/// the shared [`crate::util::splitmix_embed`] hash (stateless, so it is
+/// identical on every thread, at every batch size, and across pool
+/// widths/placements).
 fn embed(token: i32, position: usize, i: usize) -> f32 {
-    let mut z = (token as u64)
-        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-        .wrapping_add((position as u64) << 32)
-        .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^= z >> 31;
-    ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+    crate::util::splitmix_embed(token, position as u64, i)
 }
 
 /// Row-wise RMS normalization (no learned gain): `y = x / rms(x)`.
@@ -341,9 +342,19 @@ impl LutTransformer {
         let h = spec.hidden;
         let kvd = spec.kv_dim();
         let mut prng = crate::util::Prng::new(seed);
+        // Every projection engine is *placed* for the serving pool: its
+        // weight shards are first-touch-copied onto the node groups whose
+        // pinned workers will read them, so steady-state decode never
+        // streams weights across a socket (a no-op single shard on
+        // single-node pools). Weight values depend only on (spec, seed) —
+        // placement changes where bytes live, never what they are.
         let mut gen = |n: usize, k: usize, ls: LayerSpec| -> LutGemvEngine {
             let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
-            LutGemvEngine::new(QuantizedMatrix::quantize(&w, n, k, ls.level, spec.group), ls.nbw)
+            LutGemvEngine::with_pool(
+                QuantizedMatrix::quantize(&w, n, k, ls.level, spec.group),
+                ls.nbw,
+                &pool,
+            )
         };
         let layers: Vec<LayerWeights> = spec
             .layer_specs

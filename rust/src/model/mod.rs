@@ -9,6 +9,15 @@
 //! [`decode`] turns the inventory into a running workload: a multi-layer
 //! KV-cached transformer whose every projection executes on the LUT-GEMV
 //! backend ([`LutTransformer`]), reading and writing a real [`KvCache`].
+//!
+//! Accounting contract: [`KvCacheSpec::seq_bytes`] is not an estimate —
+//! the executable cache allocates its element payload as *exactly* that
+//! many bytes (`kv_bytes_per_token × context`, fp16 or q8 codes;
+//! per-vector q8 scales are tracked separately by
+//! [`KvCache::scale_bytes`]), pinned by tests on both the cache and the
+//! serving path. The capacity planner ([`KvCacheSpec::max_batch`]) and
+//! the memory-traffic models therefore describe the same bytes the
+//! running system touches.
 
 pub mod decode;
 pub mod kv;

@@ -111,6 +111,31 @@ impl QuantizedMatrix {
         &self.data
     }
 
+    /// An exact copy of rows `[r0, r1)` as a standalone matrix (codes
+    /// repacked, scales sliced — integer-identical to the source rows, so
+    /// any GEMV over the slice matches the same rows of the original
+    /// bit-for-bit).
+    ///
+    /// This is the NUMA weight-sharding primitive: the LUT-GEMV engine
+    /// gives each node a first-touch copy of exactly the output columns
+    /// (rows of the transposed matrix) that node's workers own, and runs
+    /// the copy *on* the owning node so the pages land there.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> QuantizedMatrix {
+        assert!(r0 <= r1 && r1 <= self.rows, "row slice [{r0}, {r1}) out of bounds");
+        let cols = self.cols;
+        let mut codes = vec![0i32; (r1 - r0) * cols];
+        self.data.unpack_range_into(r0 * cols, &mut codes);
+        let gpr = self.groups_per_row();
+        QuantizedMatrix {
+            rows: r1 - r0,
+            cols,
+            level: self.level,
+            group_size: self.group_size,
+            data: BitPacked::pack(&codes, self.level.bits()),
+            scales: self.scales[r0 * gpr..r1 * gpr].to_vec(),
+        }
+    }
+
     /// Worst-case absolute quantization error bound: scale/2 per element.
     pub fn max_abs_error(&self) -> f32 {
         self.scales.iter().fold(0.0f32, |m, &s| m.max(s)) * 0.5
@@ -209,5 +234,37 @@ mod tests {
     #[should_panic(expected = "group_size must divide cols")]
     fn group_divides_cols() {
         QuantizedMatrix::quantize(&[0.0; 10], 1, 10, QuantLevel::Q4, 3);
+    }
+
+    #[test]
+    fn slice_rows_is_integer_identical() {
+        let mut prng = Prng::new(7);
+        for level in [QuantLevel::Q3, QuantLevel::Q4, QuantLevel::Q8] {
+            let (rows, cols, group) = (11, 48, 16);
+            let w = random_matrix(&mut prng, rows, cols);
+            let qm = QuantizedMatrix::quantize(&w, rows, cols, level, group);
+            for (r0, r1) in [(0, rows), (3, 9), (0, 1), (10, 11), (5, 5)] {
+                let s = qm.slice_rows(r0, r1);
+                assert_eq!(s.rows, r1 - r0);
+                assert_eq!((s.cols, s.group_size, s.level), (cols, group, level));
+                for r in r0..r1 {
+                    for c in 0..cols {
+                        assert_eq!(s.q(r - r0, c), qm.q(r, c), "{level} ({r},{c})");
+                        assert_eq!(
+                            s.scale(r - r0, c).to_bits(),
+                            qm.scale(r, c).to_bits(),
+                            "{level} scale ({r},{c})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_rows_bounds_checked() {
+        let qm = QuantizedMatrix::quantize(&[0.0; 64], 4, 16, QuantLevel::Q4, 16);
+        let _ = qm.slice_rows(2, 5);
     }
 }

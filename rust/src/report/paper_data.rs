@@ -1,5 +1,6 @@
 //! Published measurement matrices from the paper, used as calibration /
-//! residual targets (never as model inputs — see DESIGN.md §Calibration;
+//! residual targets (never as model inputs — see the calibration notes
+//! in `crate::baselines`;
 //! the one exception is the per-weight CPU constants in
 //! `baselines::calib`, which are fitted from the single-thread columns
 //! below and cross-validated against the rest).

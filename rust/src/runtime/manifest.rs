@@ -11,6 +11,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+use super::topology::NumaPolicy;
 use crate::model::{DecodeSpec, KvCacheSpec, LayerSpec};
 use crate::quant::QuantLevel;
 use crate::util::json::Json;
@@ -33,6 +34,12 @@ pub struct ManifestConfig {
     pub layer_wbits: Option<Vec<usize>>,
     /// KV-cache element precision (16 = fp16, 8 = quantized); absent ⇒ 16.
     pub kv_bits: u32,
+    /// Worker placement policy this artifact should be served with
+    /// (`placement` field: `"off"`, `"auto"`, or an explicit
+    /// `node:cpulist;…` map, the `SAIL_NUMA` syntax); absent ⇒ auto.
+    /// `sail serve --engine lut` builds the serving pool from it (unless
+    /// `--config` overrides).
+    pub placement: NumaPolicy,
 }
 
 /// Parsed manifest.
@@ -92,6 +99,17 @@ impl Manifest {
                 .ok_or_else(|| anyhow!("manifest kv_bits is not an integer"))?
                 as u32,
         };
+        // Same strictness as layer_wbits: a present-but-malformed
+        // placement is a load error, never a silent fall-back to auto.
+        let placement = match cfg.get("placement") {
+            None => NumaPolicy::Auto,
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("manifest placement must be a string"))?;
+                NumaPolicy::parse(s).map_err(|e| anyhow!("manifest placement: {e}"))?
+            }
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -106,6 +124,7 @@ impl Manifest {
                 params: f("params")?,
                 layer_wbits,
                 kv_bits,
+                placement,
             },
             batch: j
                 .get("batch")
@@ -131,6 +150,31 @@ impl Manifest {
     /// (one level per layer), else `wbits` uniformly; the KV cache follows
     /// `kv_bits`. NBW is clamped to the scale group (default 4, the paper's
     /// design point).
+    ///
+    /// ```
+    /// use std::path::PathBuf;
+    /// use sail::quant::QuantLevel;
+    /// use sail::runtime::manifest::{Manifest, ManifestConfig};
+    /// use sail::runtime::NumaPolicy;
+    ///
+    /// let m = Manifest {
+    ///     dir: PathBuf::from("."),
+    ///     config: ManifestConfig {
+    ///         hidden: 64, layers: 2, heads: 4, ffn: 128, vocab: 256,
+    ///         max_context: 32, wbits: 4, group: 16, params: 100_000,
+    ///         layer_wbits: Some(vec![8, 4]), // mixed per-layer precision
+    ///         kv_bits: 8,
+    ///         placement: NumaPolicy::Auto,
+    ///     },
+    ///     batch: 2,
+    ///     weight_order: vec![],
+    /// };
+    /// let spec = m.decode_spec().unwrap();
+    /// assert_eq!(spec.layers(), 2);
+    /// assert_eq!(spec.layer_specs[0].level, QuantLevel::Q8);
+    /// assert_eq!(spec.layer_specs[1].level, QuantLevel::Q4);
+    /// spec.validate().unwrap();
+    /// ```
     pub fn decode_spec(&self) -> Result<DecodeSpec> {
         let c = &self.config;
         let nbw = 4u32.min(c.group as u32);
@@ -214,6 +258,7 @@ mod tests {
             params: 13_000_000,
             layer_wbits: None,
             kv_bits: 16,
+            placement: NumaPolicy::Auto,
         }
     }
 
@@ -280,6 +325,7 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.config.layer_wbits, Some(vec![8, 4]));
         assert_eq!(m.config.kv_bits, 8);
+        assert_eq!(m.config.placement, NumaPolicy::Auto, "absent placement defaults to auto");
         let spec = m.decode_spec().unwrap();
         assert_eq!(spec.layer_specs[0].level, crate::quant::QuantLevel::Q8);
         // Present-but-malformed precision fields are load errors, not a
@@ -296,6 +342,43 @@ mod tests {
         );
         std::fs::write(dir.join("manifest.json"), bad).unwrap();
         assert!(Manifest::load(&dir).is_err(), "non-integer entry must not be dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_placement_field_roundtrip() {
+        let dir =
+            std::env::temp_dir().join(format!("sail-manifest-numa-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000PLACEMENT},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        for (field, want) in [
+            (r#", "placement": "off""#, Some(NumaPolicy::Off)),
+            (r#", "placement": "auto""#, Some(NumaPolicy::Auto)),
+            (
+                r#", "placement": "0:0-1;1:2-3""#,
+                Some(NumaPolicy::Explicit(vec![vec![0, 1], vec![2, 3]])),
+            ),
+            (r#", "placement": "sideways""#, None),
+            (r#", "placement": 4"#, None),
+        ] {
+            std::fs::write(dir.join("manifest.json"), base.replace("PLACEMENT", field))
+                .unwrap();
+            match want {
+                Some(p) => {
+                    assert_eq!(Manifest::load(&dir).unwrap().config.placement, p, "{field}")
+                }
+                None => assert!(
+                    Manifest::load(&dir).is_err(),
+                    "malformed placement {field} must not fall back to auto"
+                ),
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

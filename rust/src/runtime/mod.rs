@@ -1,24 +1,33 @@
-//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
-//! them from the serving hot path. Python never runs here — the HLO text
-//! in `artifacts/` is the entire model.
+//! Execution runtime: the worker pool the LUT-GEMV backend fans out on,
+//! NUMA topology/placement, and the PJRT path for the AOT-compiled
+//! JAX/Pallas artifacts.
 //!
+//! - [`pool`]: the persistent, NUMA-aware worker pool (the software
+//!   analogue of the paper's 16 thread-pipelines). Workers are spawned in
+//!   node groups, optionally pinned to their node's CPUs, with per-group
+//!   job queues so callers can route work to the node that owns its data.
+//!   Dispatch is deterministic: results come back in item order, and
+//!   outputs are bit-identical at every thread count and placement;
+//! - [`topology`]: NUMA discovery from sysfs (single-node fallback for
+//!   containers/non-Linux), the `SAIL_NUMA=off|auto|<map>` policy, and
+//!   placement planning (worker distribution + weight-shard ranges);
 //! - [`weights`]: reader for the `weights.bin` container emitted by
 //!   `python/compile/aot.py`;
 //! - [`manifest`]: the `manifest.json` metadata (argument order, shapes,
-//!   model config);
+//!   model config, placement policy);
 //! - [`executor`]: PJRT client wrapper — compile once, execute per
 //!   iteration ([`executor::DecodeModel`] is the decode-step engine the
-//!   coordinator drives);
-//! - [`pool`]: the scoped-thread worker pool the tiled LUT-GEMV backend
-//!   fans column tiles out on (the software analogue of the paper's 16
-//!   thread-pipelines).
+//!   coordinator drives). Python never runs here — the HLO text in
+//!   `artifacts/` is the entire model.
 
 pub mod executor;
 pub mod manifest;
 pub mod pool;
+pub mod topology;
 pub mod weights;
 
 pub use executor::{DecodeModel, GemvTile};
 pub use manifest::Manifest;
 pub use pool::WorkerPool;
+pub use topology::{NumaPolicy, Placement, Topology};
 pub use weights::{DType, WeightArray, WeightsFile};

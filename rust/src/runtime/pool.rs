@@ -1,4 +1,4 @@
-//! Persistent shared worker pool for tile fan-out.
+//! Persistent, NUMA-aware shared worker pool for tile fan-out.
 //!
 //! The paper's SAIL configuration spreads a GEMV's column tiles across 16
 //! thread-pipelines (§III-C, all evaluation figures); this pool is the
@@ -7,55 +7,102 @@
 //!
 //! 1. **Determinism** — results are returned indexed by item, and callers
 //!    combine them in item order, so output (and any f32 reduction a caller
-//!    performs) is bit-identical at every thread count.
+//!    performs) is bit-identical at every thread count *and every placement
+//!    policy* — where a worker runs changes when a tile finishes, never
+//!    what it computes.
 //! 2. **No dependencies** — built on `std::thread` + `std::sync::mpsc`; no
-//!    rayon/crossbeam offline.
-//! 3. **No unsafe** — jobs are `'static` boxed closures over `Arc`-shared
-//!    context, so nothing is lifetime-laundered across threads.
+//!    rayon/crossbeam offline. Thread pinning goes through the two-line
+//!    `sched_setaffinity` shim in [`super::topology`], the only `unsafe`
+//!    in the runtime layer.
+//! 3. **NUMA locality** — workers are spawned in *node groups* (one job
+//!    queue per group) resolved from the `SAIL_NUMA` policy
+//!    ([`NumaPolicy`]): on a multi-node host each group's workers are
+//!    pinned to their node's CPUs, and [`run_ctx_routed`] lets a caller
+//!    steer each item to the group that owns its data — the engine routes
+//!    every column tile to the node holding that tile's weight shard.
+//!    Single-node hosts (and `SAIL_NUMA=off`) degrade to one unpinned
+//!    group, which is exactly the pre-NUMA pool.
 //!
-//! Unlike the PR-1 pool (which spawned scoped threads on every call), the
-//! workers here are **long-lived**: they are spawned once, block on a
-//! shared job channel, and serve every dispatch until the pool is dropped
-//! — one `LutGemvServeEngine` per model can share a single process-wide
-//! `Arc<WorkerPool>`, and per-GEMV dispatch cost drops from N thread
-//! spawns to N channel sends.
+//! The workers are **long-lived**: spawned once, blocking on their group's
+//! job channel, serving every dispatch until the pool is dropped — one
+//! serving engine per model can share a single process-wide
+//! `Arc<WorkerPool>`, and per-GEMV dispatch cost is a handful of channel
+//! sends, not thread spawns.
 //!
-//! Each [`run_ctx`](WorkerPool::run_ctx) call is one *generation*: the
-//! items are split into `min(threads, n_items)` contiguous chunks (tiles
-//! are uniform cost, so static partitioning balances within one tile of
-//! ideal), one job per chunk is enqueued, and the caller blocks on a
-//! per-generation results channel until every chunk has reported — that
-//! results channel is the generation barrier, so overlapping dispatches
-//! from different callers can never steal each other's results. Jobs are
-//! pure compute and never block on the pool, so enqueueing more jobs than
-//! workers only queues them (saturation-tested in
-//! `tests/shared_pool_serving.rs`); do **not** dispatch onto the pool from
-//! inside a job, as nested dispatch can idle-wait every worker.
+//! Each [`run_ctx`](WorkerPool::run_ctx) / [`run_ctx_routed`] call is one
+//! *generation*: the items are split into contiguous chunks (tiles are
+//! uniform cost, so static partitioning balances within one tile of
+//! ideal), one job per chunk is enqueued on the owning group's queue, and
+//! the caller blocks on a per-generation results channel until every chunk
+//! has reported — that results channel is the generation barrier, so
+//! overlapping dispatches from different callers can never steal each
+//! other's results. Jobs are pure compute and never block on the pool, so
+//! enqueueing more jobs than workers only queues them (saturation-tested
+//! in `tests/shared_pool_serving.rs`); do **not** dispatch onto the pool
+//! from inside a job, as nested dispatch can idle-wait every worker.
+//!
+//! [`run_ctx_routed`]: WorkerPool::run_ctx_routed
+//! [`NumaPolicy`]: super::topology::NumaPolicy
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use super::topology::{pin_current_thread, NumaPolicy, Placement};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// The long-lived half of a threaded pool: the job queue feeding the
-/// workers, and the workers themselves (joined when the pool drops).
-struct Shared {
+/// One node group's job queue (the workers of that group are the only
+/// consumers, so a job sent here runs on that node).
+struct NodeQueue {
     jobs: Mutex<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
-    generations: AtomicU64,
+    workers: usize,
 }
 
-/// A fixed-width pool of persistent workers. `threads == 1` is the serial
-/// degenerate case: no workers are spawned and every dispatch runs inline
-/// on the caller's thread (the scalar reference path).
+/// The long-lived half of a threaded pool: per-node job queues feeding the
+/// workers, and the workers themselves (joined when the pool drops).
+struct Shared {
+    queues: Vec<NodeQueue>,
+    workers: Vec<JoinHandle<()>>,
+    generations: AtomicU64,
+    /// Workers whose `sched_setaffinity` call succeeded (observability:
+    /// the perf bench records it next to the pinned-vs-unpinned matrix).
+    /// Final by construction: every worker acks its pin attempt before
+    /// `with_placement` returns.
+    pinned_workers: usize,
+}
+
+/// A fixed-width pool of persistent workers, grouped by NUMA node.
+/// `threads == 1` is the serial degenerate case: no workers are spawned
+/// and every dispatch runs inline on the caller's thread (the scalar
+/// reference path).
 ///
 /// The pool is `Send + Sync`; wrap it in an [`Arc`] (see
 /// [`WorkerPool::shared`]) to serve several engines — or several caller
-/// threads — off one set of workers.
+/// threads — off one set of workers:
+///
+/// ```
+/// use sail::lutgemv::{GemvOutput, LutGemvEngine};
+/// use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+/// use sail::runtime::WorkerPool;
+///
+/// // One process-wide pool…
+/// let pool = WorkerPool::shared(2);
+/// // …serving two independent engines (two "models").
+/// let quantize = |w: &[f32]| QuantizedMatrix::quantize(w, 4, 16, QuantLevel::Q4, 16);
+/// let a = LutGemvEngine::new(quantize(&[0.25; 64]), 4);
+/// let b = LutGemvEngine::new(quantize(&[-0.75; 64]), 4);
+/// let x = [QuantizedVector::quantize(&[1.0; 16])];
+/// let mut out = GemvOutput::new();
+/// a.gemv_batch_into(&x, &pool, &mut out);
+/// let a0 = out.row(0)[0];
+/// b.gemv_batch_into(&x, &pool, &mut out);
+/// assert!(a0 > 0.0 && out.row(0)[0] < 0.0);
+/// ```
 pub struct WorkerPool {
     threads: usize,
+    placement: Placement,
     shared: Option<Shared>,
 }
 
@@ -63,53 +110,98 @@ impl std::fmt::Debug for WorkerPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("WorkerPool")
             .field("threads", &self.threads)
+            .field("nodes", &self.placement.nodes().len())
+            .field("pinned", &self.placement.pinned())
             .field("persistent", &self.shared.is_some())
             .finish()
     }
 }
 
 impl WorkerPool {
-    /// A pool of exactly `threads` workers (clamped to ≥ 1). For
+    /// A pool of exactly `threads` workers (clamped to ≥ 1), placed per
+    /// the process-wide `SAIL_NUMA` policy (absent ⇒ `auto`). For
     /// `threads > 1` the workers are spawned immediately and live until
     /// the pool is dropped.
     pub fn new(threads: usize) -> Self {
-        let threads = threads.max(1);
-        if threads == 1 {
-            return WorkerPool { threads, shared: None };
-        }
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..threads)
-            .map(|w| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("sail-pool-{w}"))
-                    .spawn(move || worker_loop(&rx))
-                    .expect("spawning pool worker")
-            })
-            .collect();
-        let shared = Shared { jobs: Mutex::new(tx), workers, generations: AtomicU64::new(0) };
-        WorkerPool { threads, shared: Some(shared) }
+        Self::with_policy(threads, &NumaPolicy::from_env())
     }
 
-    /// One worker per available core, overridable with the
-    /// `SAIL_POOL_THREADS` environment variable (the CI thread matrix and
-    /// perf runs pin pool width through it).
-    pub fn auto() -> Self {
-        let threads = std::env::var("SAIL_POOL_THREADS")
+    /// A pool of exactly `threads` workers under an explicit placement
+    /// policy (the env-independent constructor the NUMA parity tests and
+    /// the pinned-vs-unpinned bench matrix use).
+    pub fn with_policy(threads: usize, policy: &NumaPolicy) -> Self {
+        Self::with_placement(Placement::plan(policy, threads.max(1)))
+    }
+
+    /// A pool spawned from an already-resolved [`Placement`] (worker count
+    /// = `placement.total_workers()`). Each node group gets its own job
+    /// queue; each worker pins itself to its group's CPUs before first
+    /// dequeue when the placement says so (best-effort — a failed affinity
+    /// call costs locality, never correctness).
+    pub fn with_placement(placement: Placement) -> Self {
+        let threads = placement.total_workers().max(1);
+        if threads == 1 && !placement.pinned() {
+            return WorkerPool { threads, placement, shared: None };
+        }
+        let mut queues = Vec::with_capacity(placement.nodes().len());
+        let mut workers = Vec::with_capacity(threads);
+        // Startup handshake: every worker reports its pin result before
+        // the constructor returns, so `pinned_workers()` is exact (the
+        // bench artifact records it) rather than racing worker startup.
+        let (ack_tx, ack_rx) = channel::<bool>();
+        for (ni, node) in placement.nodes().iter().enumerate() {
+            let (tx, rx) = channel::<Job>();
+            let rx = Arc::new(Mutex::new(rx));
+            for w in 0..node.workers {
+                let rx = Arc::clone(&rx);
+                let cpus = if placement.pinned() { node.cpus.clone() } else { Vec::new() };
+                let ack = ack_tx.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("sail-pool-n{ni}-{w}"))
+                        .spawn(move || {
+                            let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
+                            let _ = ack.send(pinned);
+                            drop(ack);
+                            worker_loop(&rx)
+                        })
+                        .expect("spawning pool worker"),
+                );
+            }
+            queues.push(NodeQueue { jobs: Mutex::new(tx), workers: node.workers });
+        }
+        drop(ack_tx);
+        let pinned_workers = ack_rx.iter().filter(|&p| p).count();
+        let shared =
+            Shared { queues, workers, generations: AtomicU64::new(0), pinned_workers };
+        WorkerPool { threads, placement, shared: Some(shared) }
+    }
+
+    /// The auto pool width: `SAIL_POOL_THREADS` when set to a positive
+    /// integer, else one worker per available core. [`auto`](Self::auto)
+    /// and the serving drivers share this, so the env semantics live in
+    /// exactly one place.
+    pub fn auto_width() -> usize {
+        std::env::var("SAIL_POOL_THREADS")
             .ok()
             .and_then(|s| s.trim().parse::<usize>().ok())
             .filter(|&t| t > 0)
             .unwrap_or_else(|| {
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            });
-        WorkerPool::new(threads)
+            })
+    }
+
+    /// One worker per available core, overridable with the
+    /// `SAIL_POOL_THREADS` environment variable (the CI thread matrix and
+    /// perf runs pin pool width through it); placed per `SAIL_NUMA`.
+    pub fn auto() -> Self {
+        WorkerPool::new(Self::auto_width())
     }
 
     /// A single-threaded pool: `run` degenerates to a plain map on the
     /// caller's thread (the scalar reference path).
     pub fn serial() -> Self {
-        WorkerPool::new(1)
+        WorkerPool::with_placement(Placement::single(1))
     }
 
     /// Convenience: a pool of exactly `threads` workers wrapped in an
@@ -121,6 +213,25 @@ impl WorkerPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The resolved placement this pool was spawned with. Engines read it
+    /// to shard weights so that tile ownership matches worker placement
+    /// (see `LutGemvEngine::with_pool` in the `lutgemv` layer).
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Number of node groups (1 for serial / `off` / single-node pools).
+    pub fn nodes(&self) -> usize {
+        self.placement.nodes().len()
+    }
+
+    /// Workers whose affinity call succeeded (0 on unpinned placements and
+    /// on hosts where `sched_setaffinity` is unavailable). Exact, not
+    /// advisory: every worker acks its pin attempt during construction.
+    pub fn pinned_workers(&self) -> usize {
+        self.shared.as_ref().map(|s| s.pinned_workers).unwrap_or(0)
     }
 
     /// Number of dispatch generations served so far (0 for serial pools —
@@ -138,6 +249,11 @@ impl WorkerPool {
     /// without `unsafe`. `g` must be pure per item (items run concurrently
     /// and their assignment to workers is an implementation detail).
     ///
+    /// Items carry no placement hint here: chunks are spread over the node
+    /// groups proportionally to their worker counts. Use
+    /// [`run_ctx_routed`](WorkerPool::run_ctx_routed) when items have a
+    /// home node.
+    ///
     /// Every job drops its `Arc` clone *before* reporting its chunk, so
     /// when `run_ctx` returns the caller's `Arc` is the only survivor and
     /// `Arc::try_unwrap` deterministically recovers the context (the
@@ -154,31 +270,143 @@ impl WorkerPool {
         T: Send + 'static,
         G: Fn(&C, usize) -> T + Send + Copy + 'static,
     {
-        let shared = match &self.shared {
-            Some(s) if n_items > 1 => s,
-            _ => return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect(),
+        let Some(shared) = self.dispatchable(n_items) else {
+            return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect();
         };
+        // Split into min(threads, n_items) contiguous chunks, then assign
+        // chunk ranges to node groups proportionally to worker counts —
+        // the same largest-remainder split the engine uses for weight
+        // shards, so unrouted work also lands spread across nodes.
         let chunks = self.threads.min(n_items);
         let per_chunk = n_items.div_ceil(chunks);
         let n_chunks = n_items.div_ceil(per_chunk);
+        let chunk_ranges = self.placement.shard_ranges(n_chunks);
+        let mut plan = Vec::with_capacity(n_chunks);
+        for (node, &(c0, c1)) in chunk_ranges.iter().enumerate() {
+            for c in c0..c1 {
+                let start = c * per_chunk;
+                let end = ((c + 1) * per_chunk).min(n_items);
+                plan.push((node, start, end));
+            }
+        }
+        self.dispatch(shared, ctx, plan, g)
+    }
+
+    /// Evaluate `g(ctx, 0..n_items)` across the pool with explicit
+    /// *routing*: `route(ctx, item)` names the node group whose workers
+    /// must execute that item (the engine's tile → weight-shard owner
+    /// map). Results come back in item order, bit-identical to
+    /// [`run_ctx`](WorkerPool::run_ctx) — routing moves work between
+    /// sockets, never changes it.
+    ///
+    /// Contiguous runs of same-node items are split into at most
+    /// `workers(node)` chunks each, so a node's run is balanced across
+    /// exactly its own workers.
+    ///
+    /// # Panics
+    ///
+    /// If `route` returns a node index `≥ self.nodes()`, or if a job
+    /// panics (see [`run_ctx`](WorkerPool::run_ctx)).
+    pub fn run_ctx_routed<C, T, G, R>(
+        &self,
+        ctx: &Arc<C>,
+        n_items: usize,
+        route: R,
+        g: G,
+    ) -> Vec<T>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        R: Fn(&C, usize) -> usize,
+    {
+        let Some(shared) = self.dispatchable(n_items) else {
+            return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect();
+        };
+        // Group consecutive items by node, then split each run across the
+        // owning node's workers.
+        let mut plan: Vec<(usize, usize, usize)> = Vec::new();
+        let mut run_start = 0usize;
+        let mut run_node = route(ctx.as_ref(), 0);
+        for i in 1..=n_items {
+            let node = if i < n_items { route(ctx.as_ref(), i) } else { usize::MAX };
+            if i == n_items || node != run_node {
+                assert!(
+                    run_node < shared.queues.len(),
+                    "routed to node {run_node} but the pool has {} group(s)",
+                    shared.queues.len()
+                );
+                let len = i - run_start;
+                let parts = shared.queues[run_node].workers.min(len);
+                let per = len.div_ceil(parts);
+                let mut s = run_start;
+                while s < i {
+                    let e = (s + per).min(i);
+                    plan.push((run_node, s, e));
+                    s = e;
+                }
+                run_start = i;
+                run_node = node;
+            }
+        }
+        self.dispatch(shared, ctx, plan, g)
+    }
+
+    /// Evaluate `f(0..n_items)` across the pool, returning results in item
+    /// order — the context-free convenience over
+    /// [`run_ctx`](WorkerPool::run_ctx): the closure itself is the shared
+    /// context.
+    pub fn run<T, F>(&self, n_items: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        self.run_ctx(&Arc::new(f), n_items, |f, i| f(i))
+    }
+
+    /// The shared state, iff this dispatch should actually fan out
+    /// (`None` ⇒ run inline on the caller's thread).
+    fn dispatchable(&self, n_items: usize) -> Option<&Shared> {
+        match &self.shared {
+            Some(s) if n_items > 1 => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Enqueue one job per `(node, start, end)` chunk and barrier on the
+    /// per-generation results channel. Chunks must be in item order and
+    /// tile `[0, n)` exactly; results are flattened back in chunk order.
+    fn dispatch<C, T, G>(
+        &self,
+        shared: &Shared,
+        ctx: &Arc<C>,
+        plan: Vec<(usize, usize, usize)>,
+        g: G,
+    ) -> Vec<T>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+    {
+        let n_chunks = plan.len();
         let (tx, rx) = channel::<(usize, Vec<T>)>();
-        // Lock only long enough to clone the sender — boxing and sending
-        // the chunk jobs happens lock-free, so concurrent dispatchers on a
-        // shared pool don't serialize their enqueue phases.
-        let jobs = shared.jobs.lock().unwrap().clone();
-        for c in 0..n_chunks {
-            let start = c * per_chunk;
-            let end = ((c + 1) * per_chunk).min(n_items);
+        // Clone each referenced node's sender once (under a brief lock),
+        // then enqueue lock-free — concurrent dispatchers on a shared
+        // pool don't serialize their enqueue phases.
+        let mut senders: Vec<Option<Sender<Job>>> = vec![None; shared.queues.len()];
+        for (c, (node, start, end)) in plan.into_iter().enumerate() {
             let ctx = Arc::clone(ctx);
             let tx = tx.clone();
-            jobs.send(Box::new(move || {
+            let job: Job = Box::new(move || {
                 let out: Vec<T> = (start..end).map(|i| g(ctx.as_ref(), i)).collect();
                 // Release the context before reporting: once the caller
                 // has every chunk, its Arc is provably the last one.
                 drop(ctx);
                 let _ = tx.send((c, out));
-            }))
-            .expect("worker pool has shut down");
+            });
+            let sender = senders[node]
+                .get_or_insert_with(|| shared.queues[node].jobs.lock().unwrap().clone());
+            sender.send(job).expect("worker pool has shut down");
         }
         shared.generations.fetch_add(1, Ordering::Relaxed);
         // The caller's sender must die so a lost chunk surfaces as a
@@ -193,17 +421,6 @@ impl WorkerPool {
             }
         }
         slots.into_iter().flat_map(|s| s.expect("every chunk reports exactly once")).collect()
-    }
-
-    /// Evaluate `f(0..n_items)` across the pool, returning results in item
-    /// order — the context-free convenience over [`run_ctx`]: the closure
-    /// itself is the shared context.
-    pub fn run<T, F>(&self, n_items: usize, f: F) -> Vec<T>
-    where
-        T: Send + 'static,
-        F: Fn(usize) -> T + Send + Sync + 'static,
-    {
-        self.run_ctx(&Arc::new(f), n_items, |f, i| f(i))
     }
 }
 
@@ -225,8 +442,8 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         if let Some(shared) = self.shared.take() {
-            // Closing the channel ends every worker_loop.
-            drop(shared.jobs);
+            // Closing every queue ends every worker_loop.
+            drop(shared.queues);
             for w in shared.workers {
                 let _ = w.join();
             }
@@ -283,7 +500,7 @@ mod tests {
         // With 4 workers and 4 items that each wait for all 4 to arrive,
         // completion proves the items ran on distinct threads.
         let barrier = Arc::new(std::sync::Barrier::new(4));
-        let pool = WorkerPool::new(4);
+        let pool = WorkerPool::with_policy(4, &NumaPolicy::Off);
         pool.run(4, move |_| {
             barrier.wait();
         });
@@ -361,5 +578,79 @@ mod tests {
         assert!(result.is_err(), "lost chunk must fail the dispatch");
         // The workers caught the panic and still serve later dispatches.
         assert_eq!(pool.run(4, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    /// A fake 2-node placement that works on any host: groups are real,
+    /// pinning is requested but CPUs may overlap the whole machine — the
+    /// routing and determinism guarantees must hold regardless of whether
+    /// the affinity calls stick.
+    fn fake_two_node(threads: usize) -> WorkerPool {
+        let policy = NumaPolicy::Explicit(vec![vec![0], vec![1]]);
+        WorkerPool::with_policy(threads, &policy)
+    }
+
+    #[test]
+    fn multi_node_pool_shape_and_dispatch() {
+        let pool = fake_two_node(4);
+        assert_eq!(pool.nodes(), 2);
+        assert_eq!(pool.threads(), 4);
+        let w: Vec<usize> =
+            pool.placement().nodes().iter().map(|n| n.workers).collect();
+        assert_eq!(w.iter().sum::<usize>(), 4);
+        assert!(w.iter().all(|&x| x >= 1));
+        // Unrouted dispatch spreads across both groups and stays ordered.
+        let got = pool.run(33, |i| i * 7);
+        assert_eq!(got, (0..33).map(|i| i * 7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn routed_dispatch_returns_item_order_and_matches_unrouted() {
+        let pool = fake_two_node(4);
+        let ctx = Arc::new((0..40usize).collect::<Vec<_>>());
+        let unrouted = pool.run_ctx(&ctx, 40, |d, i| d[i] * 3);
+        // Route the first half to node 0, the rest to node 1 (the shape
+        // the engine's contiguous weight shards produce)…
+        let routed =
+            pool.run_ctx_routed(&ctx, 40, |_, i| usize::from(i >= 20), |d, i| d[i] * 3);
+        assert_eq!(routed, unrouted);
+        // …and an adversarial alternating route still reassembles in item
+        // order (runs of length 1).
+        let alternating =
+            pool.run_ctx_routed(&ctx, 40, |_, i| i % 2, |d, i| d[i] * 3);
+        assert_eq!(alternating, unrouted);
+        assert_eq!(Arc::strong_count(&ctx), 1);
+    }
+
+    #[test]
+    fn routed_dispatch_rejects_unknown_node() {
+        let pool = fake_two_node(2);
+        let ctx = Arc::new(());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_ctx_routed(&ctx, 4, |_, _| 7, |_, i| i)
+        }));
+        assert!(r.is_err(), "routing to a nonexistent group must be loud");
+    }
+
+    #[test]
+    fn pinned_worker_count_is_reported() {
+        // On this host the fake nodes' CPUs may or may not exist; the
+        // counter must be within [0, threads] and serial pools report 0.
+        let pool = fake_two_node(2);
+        assert!(pool.pinned_workers() <= pool.threads());
+        assert_eq!(WorkerPool::serial().pinned_workers(), 0);
+        // An unpinned placement never calls the shim.
+        let off = WorkerPool::with_policy(4, &NumaPolicy::Off);
+        assert_eq!(off.pinned_workers(), 0);
+    }
+
+    #[test]
+    fn single_worker_placement_with_pin_still_dispatches() {
+        // threads=1 under an explicit map spawns one pinned worker (it is
+        // not the inline serial case: pinning needs a real thread).
+        let pool = WorkerPool::with_policy(1, &NumaPolicy::Explicit(vec![vec![0]]));
+        assert_eq!(pool.threads(), 1);
+        let got = pool.run(5, |i| i + 10);
+        assert_eq!(got, vec![10, 11, 12, 13, 14]);
+        assert!(pool.generations() >= 1);
     }
 }

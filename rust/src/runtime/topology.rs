@@ -1,0 +1,666 @@
+//! NUMA topology discovery and worker-placement planning.
+//!
+//! SAIL's LUT-GEMV wins by keeping weight traffic local to the compute
+//! that consumes it (the paper's SRAM-PIM premise). The software analogue
+//! on a multi-socket host is *placement*: pin each pool worker to one NUMA
+//! node and shard the packed weight stream so a tile's `[N, K]` rows live
+//! on the node whose workers compute that tile. This module provides the
+//! three pieces the execution backend builds that on:
+//!
+//! - [`Topology`]: the host's node → CPU map, discovered from sysfs
+//!   (`/sys/devices/system/node/node*/cpulist`) with a clean single-node
+//!   fallback when sysfs is absent or partial (containers, non-Linux);
+//! - [`NumaPolicy`]: the `SAIL_NUMA=off|auto|<map>` override — `off`
+//!   disables pinning and sharding, `auto` (the default) follows the
+//!   detected topology, and an explicit map like `0:0-3;1:4-7` forces a
+//!   node → CPU assignment (useful for tests and for benchmarking a
+//!   pinning layout the kernel would not pick);
+//! - [`Placement`]: a policy resolved against a concrete worker count —
+//!   how many workers each node group gets and which CPUs they may run on.
+//!
+//! Placement is a *performance* lever only: the tiled backend's outputs
+//! and stats are bit-identical under every policy and every worker count
+//! (pinned by `tests/numa_placement.rs` and the decode serving suite),
+//! because a column's integer accumulation order never depends on which
+//! worker — or which socket — executes it.
+//!
+//! Thread pinning goes through a minimal `sched_setaffinity` FFI shim in
+//! the vendored style (no new dependencies); on non-Linux targets, or when
+//! the syscall fails (restricted sandboxes), pinning degrades to a no-op
+//! and everything still runs — just without the locality guarantee.
+
+use std::path::Path;
+
+/// One NUMA node: its kernel id and the CPUs it owns (sorted, deduplicated;
+/// may have holes when CPUs are offline).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    /// Kernel node id (the `N` in `/sys/devices/system/node/nodeN`).
+    pub id: usize,
+    /// Online CPUs on this node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// The host's NUMA layout: one entry per node that owns at least one CPU.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<NumaNode>,
+}
+
+impl Topology {
+    /// A synthetic single-node topology with `cpus` CPUs (ids `0..cpus`) —
+    /// the fallback shape when sysfs says nothing useful.
+    pub fn single_node(cpus: usize) -> Self {
+        Topology { nodes: vec![NumaNode { id: 0, cpus: (0..cpus.max(1)).collect() }] }
+    }
+
+    /// Detect the host topology from `/sys/devices/system/node`, falling
+    /// back to a single node sized by `std::thread::available_parallelism`
+    /// when the directory is absent or holds no parseable node (containers
+    /// commonly mask it; non-Linux hosts never have it).
+    pub fn detect() -> Self {
+        let fallback = || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        match Self::from_sysfs_root(Path::new("/sys/devices/system/node")) {
+            Some(t) => t,
+            None => Topology::single_node(fallback()),
+        }
+    }
+
+    /// Parse a sysfs node tree rooted at `root` (the directory that holds
+    /// `node0`, `node1`, …). Returns `None` when the root is missing or no
+    /// node directory yields a non-empty CPU list — callers fall back to
+    /// [`Topology::single_node`]. Nodes without CPUs (memory-only nodes)
+    /// and malformed `cpulist` files are skipped rather than fatal, so a
+    /// partial sysfs (offline CPUs, restricted containers) degrades
+    /// gracefully instead of breaking pool construction.
+    pub fn from_sysfs_root(root: &Path) -> Option<Self> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut nodes = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(id) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+                continue;
+            };
+            let Ok(text) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let Ok(cpus) = parse_cpu_list(&text) else {
+                continue;
+            };
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_by_key(|n| n.id);
+        Some(Topology { nodes })
+    }
+
+    /// The nodes, ascending by id. Always non-empty.
+    pub fn nodes(&self) -> &[NumaNode] {
+        &self.nodes
+    }
+
+    /// Total online CPUs across all nodes.
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// One-line human summary, e.g. `2 nodes (node0: 0-3, node1: 4-7)` —
+    /// what the benches record next to their NUMA matrices.
+    pub fn summary(&self) -> String {
+        let per_node: Vec<String> = self
+            .nodes
+            .iter()
+            .map(|n| format!("node{}: {}", n.id, format_cpu_list(&n.cpus)))
+            .collect();
+        format!("{} node(s) ({})", self.nodes.len(), per_node.join(", "))
+    }
+}
+
+/// Parse a kernel `cpulist` string: comma-separated CPU ids and inclusive
+/// ranges, e.g. `0-3,8,10-11`. Whitespace is tolerated; an empty string is
+/// an empty list. Errors on malformed numbers or inverted ranges.
+pub fn parse_cpu_list(s: &str) -> Result<Vec<usize>, String> {
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize =
+                    lo.trim().parse().map_err(|_| format!("bad cpu id '{lo}' in '{s}'"))?;
+                let hi: usize =
+                    hi.trim().parse().map_err(|_| format!("bad cpu id '{hi}' in '{s}'"))?;
+                if lo > hi {
+                    return Err(format!("inverted cpu range '{part}'"));
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => {
+                let id = part.parse().map_err(|_| format!("bad cpu id '{part}' in '{s}'"))?;
+                cpus.push(id);
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Ok(cpus)
+}
+
+/// Render a CPU list back to the kernel's compact range syntax
+/// (`0-3,8,10-11`) — the inverse of [`parse_cpu_list`] for reporting.
+pub fn format_cpu_list(cpus: &[usize]) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < cpus.len() {
+        let start = cpus[i];
+        let mut end = start;
+        while i + 1 < cpus.len() && cpus[i + 1] == end + 1 {
+            i += 1;
+            end = cpus[i];
+        }
+        parts.push(if start == end {
+            format!("{start}")
+        } else {
+            format!("{start}-{end}")
+        });
+        i += 1;
+    }
+    parts.join(",")
+}
+
+/// How the pool should place workers relative to the NUMA topology.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum NumaPolicy {
+    /// One unpinned worker group; no weight sharding. The pre-NUMA
+    /// behaviour, and the deterministic baseline the NUMA modes are
+    /// bit-compared against.
+    Off,
+    /// Follow [`Topology::detect`]: on a single-node host this degrades to
+    /// [`NumaPolicy::Off`] (no pinning, one group); on a multi-node host
+    /// workers are pinned per node and weights are sharded per node.
+    #[default]
+    Auto,
+    /// An explicit node → CPU assignment (one entry per node group, each a
+    /// non-empty CPU list). Workers of group `i` are pinned to exactly
+    /// these CPUs.
+    Explicit(Vec<Vec<usize>>),
+}
+
+impl NumaPolicy {
+    /// Parse the `SAIL_NUMA` syntax: `off`, `auto`, or an explicit map
+    /// `node:cpulist(;node:cpulist)*` such as `0:0-3;1:4-7`. Node keys
+    /// must be `0..groups` in order (they name the group, not a kernel
+    /// id); CPU lists use the kernel `cpulist` syntax and must be
+    /// non-empty and disjoint.
+    pub fn parse(s: &str) -> Result<NumaPolicy, String> {
+        let t = s.trim();
+        match t.to_ascii_lowercase().as_str() {
+            "off" | "0" | "none" => return Ok(NumaPolicy::Off),
+            "auto" | "" => return Ok(NumaPolicy::Auto),
+            _ => {}
+        }
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for entry in t.split(';') {
+            let (node, list) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("SAIL_NUMA entry '{entry}' is not node:cpulist"))?;
+            let node: usize = node
+                .trim()
+                .parse()
+                .map_err(|_| format!("SAIL_NUMA node id '{node}' is not an integer"))?;
+            if node != groups.len() {
+                return Err(format!(
+                    "SAIL_NUMA node ids must be 0..n in order, got {node} at position {}",
+                    groups.len()
+                ));
+            }
+            let cpus = parse_cpu_list(list)?;
+            if cpus.is_empty() {
+                return Err(format!("SAIL_NUMA node {node} has an empty cpu list"));
+            }
+            for &c in &cpus {
+                if !seen.insert(c) {
+                    return Err(format!("cpu {c} assigned to more than one SAIL_NUMA node"));
+                }
+            }
+            groups.push(cpus);
+        }
+        if groups.is_empty() {
+            return Err(format!("SAIL_NUMA '{s}' names no node groups"));
+        }
+        Ok(NumaPolicy::Explicit(groups))
+    }
+
+    /// The process-wide policy from the `SAIL_NUMA` environment variable
+    /// (absent ⇒ [`NumaPolicy::Auto`]).
+    ///
+    /// # Panics
+    ///
+    /// On a malformed `SAIL_NUMA` value — a misconfigured placement must
+    /// be loud, not silently unpinned.
+    pub fn from_env() -> NumaPolicy {
+        match std::env::var("SAIL_NUMA") {
+            Ok(v) => NumaPolicy::parse(&v)
+                .unwrap_or_else(|e| panic!("invalid SAIL_NUMA value: {e}")),
+            Err(_) => NumaPolicy::Auto,
+        }
+    }
+}
+
+impl std::fmt::Display for NumaPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NumaPolicy::Off => write!(f, "off"),
+            NumaPolicy::Auto => write!(f, "auto"),
+            NumaPolicy::Explicit(groups) => {
+                for (i, g) in groups.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ";")?;
+                    }
+                    write!(f, "{i}:{}", format_cpu_list(g))?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// One worker group of a resolved placement: a NUMA node (or the single
+/// anonymous group in `off`/single-node mode), the CPUs its workers are
+/// pinned to (empty ⇒ unpinned), and how many workers it runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodePlan {
+    /// Reporting id (kernel node id under `auto`, group index under an
+    /// explicit map, 0 in `off` mode).
+    pub node_id: usize,
+    /// CPUs this group's workers are restricted to; empty means no
+    /// affinity call is made.
+    pub cpus: Vec<usize>,
+    /// Workers assigned to this group (≥ 1).
+    pub workers: usize,
+}
+
+/// A [`NumaPolicy`] resolved against a concrete worker count: the node
+/// groups the pool will spawn, in order. Tile→node routing and weight
+/// sharding both key off the group order here, so a pool and the engines
+/// built for it agree on who owns what by construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    nodes: Vec<NodePlan>,
+    pinned: bool,
+}
+
+impl Placement {
+    /// The trivial placement: one unpinned group of `threads` workers.
+    pub fn single(threads: usize) -> Self {
+        Placement {
+            nodes: vec![NodePlan { node_id: 0, cpus: Vec::new(), workers: threads.max(1) }],
+            pinned: false,
+        }
+    }
+
+    /// Resolve `policy` for a pool of `threads` workers against the host
+    /// topology ([`Topology::detect`] under `auto`).
+    pub fn plan(policy: &NumaPolicy, threads: usize) -> Self {
+        let threads = threads.max(1);
+        match policy {
+            NumaPolicy::Off => Placement::single(threads),
+            NumaPolicy::Auto => Placement::plan_on(&Topology::detect(), threads),
+            NumaPolicy::Explicit(groups) => {
+                let nodes: Vec<NumaNode> = groups
+                    .iter()
+                    .enumerate()
+                    .map(|(id, cpus)| NumaNode { id, cpus: cpus.clone() })
+                    .collect();
+                Placement::distribute(&nodes, threads, true)
+            }
+        }
+    }
+
+    /// Resolve the `auto` policy against a given topology (exposed so
+    /// tests can plan against fixture topologies without touching the
+    /// host's sysfs). Single-node topologies yield the unpinned trivial
+    /// placement — on such hosts there is no remote socket to avoid, so
+    /// the scheduler keeps its freedom.
+    pub fn plan_on(topo: &Topology, threads: usize) -> Self {
+        let threads = threads.max(1);
+        if topo.nodes().len() <= 1 {
+            return Placement::single(threads);
+        }
+        Placement::distribute(topo.nodes(), threads, true)
+    }
+
+    /// Split `threads` workers across `nodes` proportionally to each
+    /// node's CPU count (largest-remainder rounding, every kept node gets
+    /// ≥ 1 worker). With fewer threads than nodes, only the first
+    /// `threads` nodes are used — a 1-thread pool on a 2-node host is one
+    /// pinned worker on node 0, not half a worker each.
+    fn distribute(nodes: &[NumaNode], threads: usize, pinned: bool) -> Self {
+        if nodes.is_empty() {
+            // A policy with no groups (possible only programmatically —
+            // parse() rejects it) degrades to the trivial placement
+            // rather than an unservable empty pool.
+            return Placement::single(threads);
+        }
+        let nodes = &nodes[..nodes.len().min(threads)];
+        let total_cpus: usize = nodes.iter().map(|n| n.cpus.len()).sum::<usize>().max(1);
+        // Floor shares first (min 1 each), then hand out the remainder by
+        // largest fractional part, index-ordered for determinism.
+        let mut shares: Vec<usize> = nodes
+            .iter()
+            .map(|n| (threads * n.cpus.len() / total_cpus).max(1))
+            .collect();
+        while shares.iter().sum::<usize>() > threads {
+            // Over-allocated via the min-1 floor: trim the largest share.
+            let i = (0..shares.len()).max_by_key(|&i| shares[i]).unwrap();
+            shares[i] -= 1;
+        }
+        let mut rema: Vec<(usize, usize)> = (0..nodes.len())
+            .map(|i| (threads * nodes[i].cpus.len() % total_cpus, i))
+            .collect();
+        rema.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut left = threads - shares.iter().sum::<usize>();
+        for &(_, i) in rema.iter().cycle().take(rema.len().max(1) * 2) {
+            if left == 0 {
+                break;
+            }
+            shares[i] += 1;
+            left -= 1;
+        }
+        let nodes = nodes
+            .iter()
+            .zip(shares)
+            .map(|(n, workers)| NodePlan { node_id: n.id, cpus: n.cpus.clone(), workers })
+            .collect();
+        Placement { nodes, pinned }
+    }
+
+    /// The worker groups, in routing order. Always non-empty; every group
+    /// has ≥ 1 worker.
+    pub fn nodes(&self) -> &[NodePlan] {
+        &self.nodes
+    }
+
+    /// Total workers across all groups.
+    pub fn total_workers(&self) -> usize {
+        self.nodes.iter().map(|n| n.workers).sum()
+    }
+
+    /// Whether workers will attempt to pin themselves to their group's
+    /// CPUs.
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// Split `n_items` contiguous items into per-node ownership ranges,
+    /// proportional to worker counts (largest-remainder, same rounding as
+    /// worker distribution). This is the contract between the pool and the
+    /// weight sharding in the engine: group `i` owns
+    /// `[ranges[i].0, ranges[i].1)`. Ranges can be empty when there are
+    /// more groups than items.
+    pub fn shard_ranges(&self, n_items: usize) -> Vec<(usize, usize)> {
+        let total: usize = self.total_workers().max(1);
+        let mut sizes: Vec<usize> =
+            self.nodes.iter().map(|n| n_items * n.workers / total).collect();
+        let mut rema: Vec<(usize, usize)> = (0..self.nodes.len())
+            .map(|i| (n_items * self.nodes[i].workers % total, i))
+            .collect();
+        rema.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut left = n_items - sizes.iter().sum::<usize>();
+        for &(_, i) in &rema {
+            if left == 0 {
+                break;
+            }
+            sizes[i] += 1;
+            left -= 1;
+        }
+        let mut ranges = Vec::with_capacity(sizes.len());
+        let mut start = 0;
+        for s in sizes {
+            ranges.push((start, start + s));
+            start += s;
+        }
+        debug_assert_eq!(start, n_items);
+        ranges
+    }
+}
+
+/// Best-effort thread pinning: restrict the *calling* thread to `cpus`.
+/// Returns whether the affinity call succeeded. CPUs ≥ 1024 are ignored
+/// (beyond the fixed mask width); an empty list is a no-op returning
+/// `false`. On non-Linux targets this is always a no-op.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    affinity::pin_current_thread(cpus)
+}
+
+#[cfg(target_os = "linux")]
+mod affinity {
+    //! Minimal `sched_setaffinity(2)` shim in the vendored style: the two
+    //! lines of libc we need, bound directly, instead of a dependency.
+
+    const MASK_WORDS: usize = 16; // 16 × 64 = 1024 CPUs, glibc's cpu_set_t
+
+    extern "C" {
+        // int sched_setaffinity(pid_t pid, size_t cpusetsize,
+        //                       const cpu_set_t *mask);
+        // pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    pub fn pin_current_thread(cpus: &[usize]) -> bool {
+        let mut mask = [0u64; MASK_WORDS];
+        let mut any = false;
+        for &c in cpus {
+            if c < MASK_WORDS * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        // SAFETY: the mask is a valid, live [u64; 16] for the duration of
+        // the call, and pid 0 targets only the calling thread.
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod affinity {
+    pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn cpu_list_parsing_roundtrip() {
+        assert_eq!(parse_cpu_list("0-3").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpu_list("0-2,4-7").unwrap(), vec![0, 1, 2, 4, 5, 6, 7]);
+        assert_eq!(parse_cpu_list(" 5 , 1-2 ").unwrap(), vec![1, 2, 5]);
+        assert_eq!(parse_cpu_list("3,3,3").unwrap(), vec![3]);
+        assert_eq!(parse_cpu_list("").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list("\n").unwrap(), Vec::<usize>::new());
+        assert!(parse_cpu_list("3-1").is_err(), "inverted range");
+        assert!(parse_cpu_list("a-3").is_err());
+        assert!(parse_cpu_list("1;2").is_err());
+        for list in ["0-3,8,10-11", "0", "0-1"] {
+            assert_eq!(format_cpu_list(&parse_cpu_list(list).unwrap()), list);
+        }
+    }
+
+    /// Build a fake sysfs node tree: one `nodeN/cpulist` file per entry.
+    fn fixture(name: &str, nodes: &[(usize, &str)]) -> PathBuf {
+        let root = std::env::temp_dir()
+            .join(format!("sail-topo-{}-{}", std::process::id(), name));
+        // Stale dirs from a previous run would pollute the fixture.
+        let _ = std::fs::remove_dir_all(&root);
+        for &(id, cpulist) in nodes {
+            let dir = root.join(format!("node{id}"));
+            std::fs::create_dir_all(&dir).unwrap();
+            std::fs::write(dir.join("cpulist"), cpulist).unwrap();
+        }
+        std::fs::create_dir_all(&root).unwrap();
+        root
+    }
+
+    #[test]
+    fn sysfs_single_node() {
+        let root = fixture("single", &[(0, "0-7\n")]);
+        let t = Topology::from_sysfs_root(&root).unwrap();
+        assert_eq!(t.nodes().len(), 1);
+        assert_eq!(t.nodes()[0].cpus, (0..8).collect::<Vec<_>>());
+        assert_eq!(t.total_cpus(), 8);
+        // Single-node auto placement degrades to the unpinned trivial plan.
+        assert_eq!(Placement::plan_on(&t, 4), Placement::single(4));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn sysfs_two_nodes_sorted_by_id() {
+        // Written out of order; detection must sort by node id.
+        let root = fixture("two", &[(1, "4-7\n"), (0, "0-3\n")]);
+        let t = Topology::from_sysfs_root(&root).unwrap();
+        assert_eq!(t.nodes().len(), 2);
+        assert_eq!(t.nodes()[0], NumaNode { id: 0, cpus: vec![0, 1, 2, 3] });
+        assert_eq!(t.nodes()[1], NumaNode { id: 1, cpus: vec![4, 5, 6, 7] });
+        assert_eq!(t.summary(), "2 node(s) (node0: 0-3, node1: 4-7)");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn sysfs_offline_cpu_holes_and_partial_nodes() {
+        // node0 has offline CPUs (holes in the list); node1's cpulist is
+        // malformed and must be skipped, not fatal; node2 is memory-only
+        // (no CPUs) and must be dropped.
+        let root =
+            fixture("holes", &[(0, "0-2,5,7\n"), (1, "garbage\n"), (2, "\n")]);
+        let t = Topology::from_sysfs_root(&root).unwrap();
+        assert_eq!(t.nodes().len(), 1);
+        assert_eq!(t.nodes()[0].cpus, vec![0, 1, 2, 5, 7]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn sysfs_absent_or_empty_falls_back() {
+        assert_eq!(
+            Topology::from_sysfs_root(Path::new("/nonexistent-sail-node-root")),
+            None
+        );
+        // A root that exists but holds no node dirs (fully masked sysfs).
+        let root = fixture("empty", &[]);
+        assert_eq!(Topology::from_sysfs_root(&root), None);
+        std::fs::remove_dir_all(&root).ok();
+        // detect() always yields at least one node with one CPU.
+        let t = Topology::detect();
+        assert!(!t.nodes().is_empty());
+        assert!(t.total_cpus() >= 1);
+    }
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(NumaPolicy::parse("off").unwrap(), NumaPolicy::Off);
+        assert_eq!(NumaPolicy::parse("OFF").unwrap(), NumaPolicy::Off);
+        assert_eq!(NumaPolicy::parse("auto").unwrap(), NumaPolicy::Auto);
+        assert_eq!(NumaPolicy::parse("").unwrap(), NumaPolicy::Auto);
+        assert_eq!(
+            NumaPolicy::parse("0:0-3;1:4-7").unwrap(),
+            NumaPolicy::Explicit(vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]])
+        );
+        assert_eq!(
+            NumaPolicy::parse("0:2").unwrap(),
+            NumaPolicy::Explicit(vec![vec![2]])
+        );
+        // Display round-trips the explicit map.
+        let p = NumaPolicy::parse("0:0-2,5;1:3-4").unwrap();
+        assert_eq!(NumaPolicy::parse(&p.to_string()).unwrap(), p);
+        // Malformed maps are errors, never silently Off.
+        for bad in ["1:0-3", "0:0-3;2:4-7", "0:", "0:4-1", "x:0", "0:0;1:0"] {
+            assert!(NumaPolicy::parse(bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn placement_distributes_workers_proportionally() {
+        let two = NumaPolicy::parse("0:0-3;1:4-7").unwrap();
+        let p = Placement::plan(&two, 8);
+        assert!(p.pinned());
+        let w: Vec<usize> = p.nodes().iter().map(|n| n.workers).collect();
+        assert_eq!(w, vec![4, 4]);
+        assert_eq!(p.total_workers(), 8);
+
+        // Asymmetric CPU counts → proportional shares (6:2 over 4 → 3:1).
+        let lop = NumaPolicy::parse("0:0-5;1:6-7").unwrap();
+        let p = Placement::plan(&lop, 4);
+        let w: Vec<usize> = p.nodes().iter().map(|n| n.workers).collect();
+        assert_eq!(w, vec![3, 1]);
+
+        // Fewer threads than nodes: only the first `threads` nodes used.
+        let p = Placement::plan(&two, 1);
+        assert_eq!(p.nodes().len(), 1);
+        assert_eq!(p.nodes()[0].workers, 1);
+        assert_eq!(p.nodes()[0].cpus, vec![0, 1, 2, 3]);
+
+        // Every group always gets at least one worker.
+        let p = Placement::plan(&lop, 2);
+        let w: Vec<usize> = p.nodes().iter().map(|n| n.workers).collect();
+        assert_eq!(w, vec![1, 1]);
+
+        // Off is the trivial unpinned single group.
+        let p = Placement::plan(&NumaPolicy::Off, 8);
+        assert_eq!(p, Placement::single(8));
+        assert!(!p.pinned());
+
+        // A group-less explicit policy (programmatic only) degrades to
+        // the trivial placement instead of an unservable empty pool.
+        assert_eq!(Placement::plan(&NumaPolicy::Explicit(vec![]), 3), Placement::single(3));
+    }
+
+    #[test]
+    fn shard_ranges_are_contiguous_and_proportional() {
+        let p = Placement::plan(&NumaPolicy::parse("0:0-3;1:4-7").unwrap(), 8);
+        assert_eq!(p.shard_ranges(100), vec![(0, 50), (50, 100)]);
+        assert_eq!(p.shard_ranges(0), vec![(0, 0), (0, 0)]);
+        assert_eq!(p.shard_ranges(1), vec![(0, 1), (1, 1)]);
+        // 3:1 worker split over 10 items.
+        let p = Placement::plan(&NumaPolicy::parse("0:0-5;1:6-7").unwrap(), 4);
+        assert_eq!(p.shard_ranges(10), vec![(0, 8), (8, 10)]);
+        // Ranges always tile [0, n) exactly, whatever the proportions.
+        for n in [0usize, 1, 7, 64, 1000] {
+            let r = p.shard_ranges(n);
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap in shard ranges at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pinning_is_best_effort_and_safe() {
+        // Whatever this host allows, the call must not crash; an empty
+        // list and out-of-mask CPUs are no-ops.
+        assert!(!pin_current_thread(&[]));
+        assert!(!pin_current_thread(&[100_000]));
+        let _ = pin_current_thread(&[0]);
+        // Restore a permissive mask so later tests in this process are
+        // not confined to CPU 0 (best-effort; failure is fine).
+        let every: Vec<usize> = (0..std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1))
+            .collect();
+        let _ = pin_current_thread(&every);
+    }
+}

@@ -33,6 +33,23 @@ pub const fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Deterministic token/position embedding component `i` in `[-1, 1)`
+/// (SplitMix64-style finalizer): stateless, so it is identical on every
+/// thread, at every batch size, and across pool widths/placements. The
+/// single definition shared by the decode models — the toy serving engine
+/// and the multi-layer transformer must embed identically or cross-engine
+/// comparisons silently desynchronize.
+pub fn splitmix_embed(token: i32, position: u64, i: usize) -> f32 {
+    let mut z = (token as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(position << 32)
+        .wrapping_add((i as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    ((z >> 40) as f32) / ((1u64 << 23) as f32) - 1.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,12 +14,13 @@
 //!   without taking the server worker down.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use sail::coordinator::{
     Batcher, BatcherConfig, FinishReason, Request, Server, TransformerServeEngine,
 };
 use sail::model::{DecodeSpec, KvCacheSpec};
-use sail::runtime::WorkerPool;
+use sail::runtime::{NumaPolicy, WorkerPool};
 
 /// 3 decoder layers at mixed per-layer precision (Q8/Q4/Q6), hidden 32,
 /// GQA (4 query heads over 2 KV heads), 24-token context.
@@ -29,6 +30,16 @@ fn spec(kv: KvCacheSpec) -> DecodeSpec {
 
 fn engine(kv: KvCacheSpec, batch: usize, width: usize) -> TransformerServeEngine {
     TransformerServeEngine::random(spec(kv), 9, batch, WorkerPool::shared(width)).unwrap()
+}
+
+fn engine_placed(
+    kv: KvCacheSpec,
+    batch: usize,
+    width: usize,
+    policy: &NumaPolicy,
+) -> TransformerServeEngine {
+    let pool = Arc::new(WorkerPool::with_policy(width, policy));
+    TransformerServeEngine::random(spec(kv), 9, batch, pool).unwrap()
 }
 
 fn requests() -> Vec<Request> {
@@ -67,6 +78,37 @@ fn token_streams_bit_identical_across_pool_widths() {
         for width in [2usize, 8] {
             let got = run_tokens(kv, 3, width, &reqs);
             assert_eq!(got, base, "{kv:?}: width {width} diverged from width 1");
+        }
+    }
+}
+
+#[test]
+fn token_streams_bit_identical_across_numa_placements() {
+    // The NUMA acceptance bar on the serving path: identical token
+    // streams whether workers are unpinned (SAIL_NUMA=off), auto-placed,
+    // or forced onto explicit fake node groups with per-node weight
+    // shards — at every pool width. Placement moves bytes, never tokens.
+    let reqs = requests();
+    let fake = NumaPolicy::Explicit(vec![vec![0], vec![1]]);
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        let run = |policy: &NumaPolicy, width: usize| {
+            let mut b =
+                Batcher::new(engine_placed(kv, 3, width, policy), BatcherConfig::default());
+            for r in &reqs {
+                b.submit(r.clone());
+            }
+            let done = b.run_to_completion().unwrap();
+            done.into_iter().map(|r| (r.id, r.tokens)).collect::<HashMap<_, _>>()
+        };
+        let base = run(&NumaPolicy::Off, 1);
+        for policy in [NumaPolicy::Off, NumaPolicy::Auto, fake.clone()] {
+            for width in [1usize, 2, 8] {
+                assert_eq!(
+                    run(&policy, width),
+                    base,
+                    "{kv:?}: policy {policy} width {width} changed the token stream"
+                );
+            }
         }
     }
 }

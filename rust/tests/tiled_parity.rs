@@ -1,15 +1,17 @@
 //! Parity suite for the tiled multi-threaded LUT-GEMV execution backend.
 //!
 //! The acceptance bar for the backend is *bit-exactness*: at every thread
-//! count, for every quant level / NBW / group size / tile width, the tiled
-//! path must produce outputs identical to the scalar engine and to the
-//! naive integer-dot-product reference, and its `GemvStats` must not
-//! depend on how work was partitioned.
+//! count, for every quant level / NBW / group size / tile width — and,
+//! since the NUMA placement layer, for every placement policy and weight
+//! sharding — the tiled path must produce outputs identical to the scalar
+//! engine and to the naive integer-dot-product reference, and its
+//! `GemvStats` must not depend on how work was partitioned or where it
+//! ran.
 
 use sail::lutgemv::engine::{reference_gemv, GemvStats, LutGemvEngine};
 use sail::lutgemv::GemvOutput;
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
-use sail::runtime::WorkerPool;
+use sail::runtime::{NumaPolicy, WorkerPool};
 use sail::util::{propcheck, Prng};
 
 fn random_setup(
@@ -141,6 +143,89 @@ fn stats_invariant_across_thread_counts_fixed_shape() {
     // chunks/column = (128/32 groups × 32/4 chunks) = 32; columns = 128.
     assert_eq!(all_stats[0].luts_built, 32 * 128);
     assert_eq!(all_stats[0].lut_reads, 32 * 128 * 8 * 8); // ×planes ×batch
+}
+
+#[test]
+fn numa_sharded_backend_bit_identical_property() {
+    // NUMA placement is a locality lever only: an engine sharded for any
+    // node-group layout, dispatched on pinned or unpinned pools of any
+    // width, must reproduce the serial single-shard engine bit-for-bit —
+    // outputs and stats. Fake explicit maps let this run (and mean
+    // something) on single-node CI hosts: routing, sharding, and the
+    // affinity calls all exercise the real code paths.
+    propcheck::check(
+        "numa-sharded-gemv-parity",
+        propcheck::Config { cases: 30, seed: 4046 },
+        |p, _| {
+            let level = QuantLevel::ALL[p.usize_in(0, 6)];
+            let nbw = p.usize_in(1, 5) as u32;
+            let group = [8usize, 16, 32][p.usize_in(0, 3)];
+            let k = group * p.usize_in(1, 4);
+            let n = p.usize_in(1, 40);
+            let batch = p.usize_in(1, 5);
+            let tile_cols = p.usize_in(1, 9);
+            let groups = p.usize_in(2, 5); // 2..4 fake node groups
+            let threads = p.usize_in(2, 9);
+            let seed = p.next_u64();
+            (level, nbw, group, k, n, batch, tile_cols, groups, threads, seed)
+        },
+        |&(level, nbw, group, k, n, batch, tile_cols, groups, threads, seed)| {
+            let mut prng = Prng::new(seed);
+            let (wt, xs) = random_setup(&mut prng, n, k, level, group, batch);
+            let reference = LutGemvEngine::new(wt.clone(), nbw);
+            let (want, want_stats) = reference.gemv_batch(&xs);
+
+            let map: Vec<Vec<usize>> = (0..groups).map(|g| vec![g]).collect();
+            let policy = NumaPolicy::Explicit(map);
+            let pool = WorkerPool::with_policy(threads, &policy);
+            let mut eng = LutGemvEngine::with_pool(wt, nbw, &pool);
+            eng.tile_cols = tile_cols;
+            if eng.shard_count() != pool.nodes() {
+                return Err(format!(
+                    "engine built {} shards for a {}-group pool",
+                    eng.shard_count(),
+                    pool.nodes()
+                ));
+            }
+            let mut out = GemvOutput::new();
+            // Routed on the placed pool, fallback on a plain one, serial.
+            let off = WorkerPool::with_policy(threads, &NumaPolicy::Off);
+            for (mode, p) in
+                [("routed", &pool), ("fallback", &off), ("serial", &WorkerPool::serial())]
+            {
+                let stats = eng.gemv_batch_into(&xs, p, &mut out);
+                if out != want {
+                    return Err(format!("{mode} output drift (groups={groups})"));
+                }
+                if stats != want_stats {
+                    return Err(format!("{mode} stats drift: {stats:?} vs {want_stats:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shard_bounds_partition_the_columns() {
+    let mut prng = Prng::new(404);
+    let (wt, _) = random_setup(&mut prng, 53, 64, QuantLevel::Q4, 32, 1);
+    let policy = NumaPolicy::Explicit(vec![vec![0, 1], vec![2], vec![3]]);
+    let pool = WorkerPool::with_policy(4, &policy);
+    let eng = LutGemvEngine::with_pool(wt, 4, &pool);
+    let bounds = eng.shard_bounds();
+    assert_eq!(bounds.len(), 3);
+    assert_eq!(bounds.first().unwrap().0, 0);
+    assert_eq!(bounds.last().unwrap().1, 53);
+    for w in bounds.windows(2) {
+        assert_eq!(w[0].1, w[1].0, "shards must tile [0, N): {bounds:?}");
+    }
+    // Sharding follows the placement's worker proportions exactly.
+    assert_eq!(
+        bounds,
+        pool.placement().shard_ranges(53),
+        "engine shard bounds disagree with the pool placement contract"
+    );
 }
 
 #[test]
