@@ -13,14 +13,21 @@
 //!
 //! Run: `cargo run --release --example serve_multiuser`
 //! Options: --engine lut|pjrt|mock --batch N --requests N --rate R
-//!          --seed S --threads T --numa off|auto|MAP --artifacts DIR
-//!          (--mock = --engine mock)
+//!          --seed S --threads T --numa off|auto|MAP
+//!          --prefill-chunk C --artifacts DIR (--mock = --engine mock)
 //!
 //! `--numa` selects the worker placement policy for the `lut` engine
 //! (default: the `SAIL_NUMA` env override, else auto-detect); on a
 //! multi-node host workers are pinned per node and every projection's
 //! weights are sharded so tile traffic stays socket-local. Placement
 //! never changes tokens — only latency.
+//!
+//! `--prefill-chunk` sets how many prompt tokens one slot consumes per
+//! batcher iteration (0 = the `SAIL_PREFILL_CHUNK` env override, else
+//! 16): chunked prefill runs every projection once per iteration at
+//! effective batch Σ rows, amortizing LUT builds across the whole chunk.
+//! Like placement, the chunk never changes tokens — only TTFT and
+//! prefill throughput.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
@@ -68,25 +75,38 @@ fn main() -> anyhow::Result<()> {
     let engine_kind = args.opt_str("engine", if mock { "mock" } else { "lut" });
     let dir = args.opt_str("artifacts", "artifacts");
     let numa = args.opt_str("numa", ""); // "" = SAIL_NUMA env, else auto
+    let prefill_chunk: usize = args.opt("prefill-chunk", 0); // 0 = env, else 16
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     let numa_policy = if numa.is_empty() {
         NumaPolicy::from_env()
     } else {
         NumaPolicy::parse(&numa).map_err(|e| anyhow::anyhow!("--numa: {e}"))?
     };
+    let chunk = if prefill_chunk == 0 {
+        sail::coordinator::prefill_chunk_from_env().unwrap_or(16)
+    } else {
+        prefill_chunk
+    };
+    // The chunk is a batcher knob, so it applies to every engine; the
+    // PJRT artifact advertises max_run = 1 and is served token-at-a-time
+    // regardless.
+    let bcfg = BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() };
 
     println!("=== SAIL end-to-end serving demo ===");
     println!("engine: {engine_kind}");
-    println!("batch slots: {batch}, requests: {n_requests}, arrival rate: {rate}/s\n");
+    println!(
+        "batch slots: {batch}, requests: {n_requests}, arrival rate: {rate}/s, \
+         prefill chunk: {chunk}\n"
+    );
 
     let server = match engine_kind.as_str() {
-        "mock" => Server::spawn(MockEngine::new(batch, 2048, 256), BatcherConfig::default()),
+        "mock" => Server::spawn(MockEngine::new(batch, 2048, 256), bcfg),
         "pjrt" => {
             let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
             println!(
                 "loaded decode artifact (tiny-e2e: 4 layers, hidden 256, vocab 2048, ctx 256)\n"
             );
-            Server::spawn(engine, BatcherConfig::default())
+            Server::spawn(engine, bcfg)
         }
         "lut" => {
             // --threads 0 keeps the auto sizing (SAIL_POOL_THREADS env,
@@ -110,10 +130,7 @@ fn main() -> anyhow::Result<()> {
                 pool.pinned_workers(),
                 Topology::detect().summary()
             );
-            Server::spawn(
-                TransformerServeEngine::random(spec, seed, batch, pool)?,
-                BatcherConfig::default(),
-            )
+            Server::spawn(TransformerServeEngine::random(spec, seed, batch, pool)?, bcfg)
         }
         other => anyhow::bail!("unknown engine {other} (lut|pjrt|mock)"),
     };

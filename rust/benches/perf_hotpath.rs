@@ -14,10 +14,19 @@
 //! worker counts are recorded alongside so the artifact says *what kind
 //! of machine* produced the numbers — on a single-node runner the two
 //! placement modes are expected to coincide within noise; the off→auto
-//! delta is the headline NUMA metric on multi-socket hosts. Results feed
-//! EXPERIMENTS.md §Perf before/after and are persisted to
-//! BENCH_hotpath.json next to Cargo.toml for the perf trajectory (schema
-//! in EXPERIMENTS.md §BENCH_hotpath.json schema).
+//! delta is the headline NUMA metric on multi-socket hosts.
+//!
+//! PR-5 adds the **chunked prefill matrix**: prompt 128/512 × chunk
+//! 1/8/32 × pool 1/8 on the transformer serving path, reporting TTFT,
+//! prefill tok/s, and `GemvStats.luts_built` per prompt token (the
+//! amortization metric — expected to fall ~1/C with the chunk), with
+//! in-run chunk-vs-chunk-1 bit-exactness asserts on both the matrix
+//! cells and a full 16-token decode stream.
+//!
+//! Results feed EXPERIMENTS.md §Perf before/after and are persisted to
+//! BENCH_hotpath.json next to Cargo.toml **and at the repo root** for
+//! the perf trajectory (schema in EXPERIMENTS.md §BENCH_hotpath.json
+//! schema).
 //!
 //! Run: cargo bench --bench perf_hotpath
 
@@ -27,6 +36,7 @@ use std::time::Duration;
 
 use sail::coordinator::{
     argmax_logits, Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request,
+    TransformerServeEngine,
 };
 use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
@@ -347,7 +357,110 @@ fn main() {
         "decode token streams diverged across pool widths / placement modes"
     );
 
-    println!("== perf_hotpath ==");
+    // --- chunked prefill matrix (PR-5) --------------------------------------
+    // Prompt 128/512 × chunk 1/8/32 × pool 1/8 through the real serving
+    // stack (Batcher + TransformerServeEngine): one request, max_new = 1,
+    // so the whole run is prefill and TTFT == total latency. Reported per
+    // cell: TTFT, prefill tok/s (prompt / TTFT), and layer LUT builds per
+    // prompt token — the amortization metric, which must fall ~1/C with
+    // the chunk because LUT construction per GEMV call is row-count-
+    // independent. The first sampled token is asserted identical across
+    // chunks per (prompt, width) cell group; a separate 16-token decode
+    // stream pins full-stream bit-exactness.
+    let prefill_spec = || DecodeSpec {
+        hidden: 64,
+        heads: 8,
+        kv_heads: 4,
+        ffn: 128,
+        vocab: 256,
+        max_context: 640,
+        group: 16,
+        layer_specs: vec![
+            LayerSpec::new(QuantLevel::Q8, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+            LayerSpec::new(QuantLevel::Q6, 4),
+            LayerSpec::new(QuantLevel::Q4, 4),
+        ],
+        head: LayerSpec::new(QuantLevel::Q4, 4),
+        kv: KvCacheSpec::q8(),
+    };
+    let prefill_batcher = |chunk: usize, width: usize| -> Batcher<TransformerServeEngine> {
+        let pool = Arc::new(WorkerPool::with_policy(width, &NumaPolicy::Off));
+        let engine = TransformerServeEngine::random(prefill_spec(), 177, 1, pool).unwrap();
+        // Explicit chunk so the matrix rows are comparable across the
+        // SAIL_PREFILL_CHUNK CI legs (same reason the pools are explicit).
+        Batcher::new(engine, BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() })
+    };
+    let mut prefill_rows: Vec<Json> = Vec::new();
+    let mut prefill_luts_per_tok: BTreeMap<(usize, usize, usize), f64> = BTreeMap::new();
+    println!("== chunked prefill matrix ==");
+    for &plen in &[128usize, 512] {
+        for &width in &[1usize, 8] {
+            let mut first_tok: Option<i32> = None;
+            for &chunk in &[1usize, 8, 32] {
+                let mut b = prefill_batcher(chunk, width);
+                let prompt: Vec<i32> = (0..plen as i32).map(|t| 1 + (t % 251)).collect();
+                b.submit(Request::new(0, prompt, 1));
+                let done = b.run_to_completion().unwrap();
+                let resp = &done[0];
+                assert_eq!(resp.tokens.len(), 1);
+                match first_tok {
+                    None => first_tok = Some(resp.tokens[0]),
+                    Some(t) => assert_eq!(
+                        t, resp.tokens[0],
+                        "prefill diverged at prompt {plen} width {width} chunk {chunk}"
+                    ),
+                }
+                let stats = b.engine().stats();
+                let layer_luts: u64 =
+                    stats.layers.iter().map(|l| l.total().luts_built).sum::<u64>();
+                let luts_per_tok = layer_luts as f64 / plen as f64;
+                let ttft_s = resp.ttft.as_secs_f64();
+                let tok_s = plen as f64 / ttft_s.max(1e-12);
+                prefill_luts_per_tok.insert((plen, width, chunk), luts_per_tok);
+                println!(
+                    "prefill p{plen} x{width}T chunk {chunk:>2}: ttft {:>8.2} ms, \
+                     {:>9.0} prompt tok/s, {:>8.1} layer LUTs built/prompt tok \
+                     ({} iterations)",
+                    ttft_s * 1e3,
+                    tok_s,
+                    luts_per_tok,
+                    b.iterations()
+                );
+                let mut o = BTreeMap::new();
+                o.insert("prompt".to_string(), Json::Num(plen as f64));
+                o.insert("width".to_string(), Json::Num(width as f64));
+                o.insert("chunk".to_string(), Json::Num(chunk as f64));
+                o.insert("ttft_ms".to_string(), Json::Num(ttft_s * 1e3));
+                o.insert("prefill_tok_per_sec".to_string(), Json::Num(tok_s));
+                o.insert("luts_built_per_prompt_token".to_string(), Json::Num(luts_per_tok));
+                o.insert("iterations".to_string(), Json::Num(b.iterations() as f64));
+                prefill_rows.push(Json::Obj(o));
+            }
+            // The amortization acceptance bar: ~1/C (exactly 1/C here,
+            // because the prompt divides every chunk size).
+            let l1 = prefill_luts_per_tok[&(plen, width, 1)];
+            let l8 = prefill_luts_per_tok[&(plen, width, 8)];
+            let l32 = prefill_luts_per_tok[&(plen, width, 32)];
+            assert!(
+                (l1 / l8 - 8.0).abs() < 1e-9 && (l1 / l32 - 32.0).abs() < 1e-9,
+                "LUT builds did not amortize 1/C at p{plen} x{width}T: {l1} / {l8} / {l32}"
+            );
+        }
+    }
+    // Full-stream bit-exactness across chunks: prefill 128, then decode
+    // 16 tokens; every chunk size must emit the same stream.
+    let mut prefill_streams: Vec<Vec<i32>> = Vec::new();
+    for &chunk in &[1usize, 8, 32] {
+        let mut b = prefill_batcher(chunk, 8);
+        let prompt: Vec<i32> = (0..128).map(|t| 1 + (t % 251)).collect();
+        b.submit(Request::new(0, prompt, 16));
+        prefill_streams.push(b.run_to_completion().unwrap().remove(0).tokens);
+    }
+    let prefill_bit_exact = prefill_streams.iter().all(|s| *s == prefill_streams[0]);
+    assert!(prefill_bit_exact, "chunked prefill decode streams diverged across chunk sizes");
+
+    println!("\n== perf_hotpath ==");
     for r in &results {
         println!("{}", r.report());
     }
@@ -419,10 +532,28 @@ fn main() {
         "numa_env".to_string(),
         Json::Str(std::env::var("SAIL_NUMA").unwrap_or_else(|_| "<unset>".to_string())),
     );
+    // The chunked prefill matrix: one row per (prompt, width, chunk).
+    extras.insert("prefill_matrix".to_string(), Json::Arr(prefill_rows));
+    extras.insert("prefill_bit_exact_across_chunks".to_string(), Json::Bool(prefill_bit_exact));
+    let pl = |plen: usize, width: usize, chunk: usize| prefill_luts_per_tok[&(plen, width, chunk)];
+    extras.insert(
+        "prefill_luts_per_token_falloff_p512".to_string(),
+        Json::Arr(
+            [1usize, 8, 32].iter().map(|&c| Json::Num(pl(512, 8, c))).collect(),
+        ),
+    );
+    extras.insert(
+        "prefill_env".to_string(),
+        Json::Str(std::env::var("SAIL_PREFILL_CHUNK").unwrap_or_else(|_| "<unset>".to_string())),
+    );
+    // Persisted next to Cargo.toml (the CI artifact) and at the repo root
+    // (the perf trajectory's pickup point).
+    let rendered = render_json(&results, threads, extras);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
-    std::fs::write(path, render_json(&results, threads, extras))
-        .expect("writing BENCH_hotpath.json");
-    println!("persisted {} results to {path}", results.len());
+    std::fs::write(path, &rendered).expect("writing BENCH_hotpath.json");
+    let root_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    std::fs::write(root_path, &rendered).expect("writing repo-root BENCH_hotpath.json");
+    println!("persisted {} results to {path} (+ copy at {root_path})", results.len());
 }
 
 fn render_json(results: &[BenchResult], threads: usize, extras: BTreeMap<String, Json>) -> String {

@@ -4,7 +4,8 @@
 //! Sections:
 //! - `[model]`    — which model + quantization to serve/simulate,
 //! - `[sail]`     — accelerator parameters (threads, NBW, PRT, in-memory
-//!                  TC, KV precision, NUMA placement policy),
+//!                  TC, KV precision, NUMA placement policy, prefill
+//!                  chunk),
 //! - `[serving]`  — batch slots, workload shape,
 //! - `[arch.dram]`— memory-system overrides.
 
@@ -34,6 +35,13 @@ pub struct RunConfig {
     /// --config FILE`, which builds the serving pool from
     /// `threads` + `numa`.
     pub numa: NumaPolicy,
+    /// Most prompt tokens one serving slot consumes per batcher iteration
+    /// (`sail.prefill_chunk`): 1 is token-at-a-time prefill-as-decode,
+    /// larger values amortize each LUT build across the chunk. Token
+    /// streams are bit-identical at every value; the `SAIL_PREFILL_CHUNK`
+    /// environment override (applied by the serving drivers) wins over
+    /// this field, mirroring `SAIL_NUMA`.
+    pub prefill_chunk: usize,
     pub batch: usize,
     pub requests: usize,
     pub rate_per_sec: f64,
@@ -51,6 +59,7 @@ impl Default for RunConfig {
             in_memory_typeconv: true,
             kv_bits: 8,
             numa: NumaPolicy::Auto,
+            prefill_chunk: 16,
             batch: 8,
             requests: 16,
             rate_per_sec: 4.0,
@@ -96,6 +105,17 @@ impl RunConfig {
                 NumaPolicy::parse(s).map_err(|e| anyhow!("bad sail.numa: {e}"))?
             }
         };
+        // Same strictness: a present-but-malformed chunk (0, or not an
+        // integer) must be an error, not a silent fall-back — the run
+        // would quietly serve unchunked and the prefill numbers would
+        // regress with no visible cause.
+        let prefill_chunk = match doc.get("sail.prefill_chunk") {
+            None => d.prefill_chunk,
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => n,
+                _ => return Err(anyhow!("sail.prefill_chunk must be an integer ≥ 1")),
+            },
+        };
         Ok(RunConfig {
             model,
             level,
@@ -105,6 +125,7 @@ impl RunConfig {
             in_memory_typeconv: doc.bool_or("sail.in_memory_typeconv", d.in_memory_typeconv),
             kv_bits: doc.usize_or("sail.kv_bits", d.kv_bits as usize) as u32,
             numa,
+            prefill_chunk,
             batch: doc.usize_or("serving.batch", d.batch),
             requests: doc.usize_or("serving.requests", d.requests),
             rate_per_sec: doc.f64_or("serving.rate", d.rate_per_sec),
@@ -191,10 +212,23 @@ mt_per_sec = 3200
             "[sail]\nnuma = \"1:0-3\"",
             "[sail]\nnuma = \"sideways\"",
             "[sail]\nnuma = 0",
+            "[sail]\nprefill_chunk = 0",
+            "[sail]\nprefill_chunk = \"wide\"",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(RunConfig::from_doc(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn prefill_chunk_parses_and_defaults() {
+        assert_eq!(RunConfig::default().prefill_chunk, 16);
+        let doc = TomlDoc::parse("[sail]\nprefill_chunk = 1").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().prefill_chunk, 1);
+        let doc = TomlDoc::parse("[sail]\nprefill_chunk = 64").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().prefill_chunk, 64);
+        let doc = TomlDoc::parse("[model]\nname = \"7b\"").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().prefill_chunk, 16, "absent ⇒ default");
     }
 
     #[test]

@@ -1,30 +1,64 @@
-//! Iteration-level batching over a fixed slot set.
+//! Iteration-level batching over a fixed slot set, with chunked prefill.
 //!
-//! Every call to [`Batcher::run_iteration`] advances all active slots by
-//! one token (prompt tokens are consumed first — prefill-as-decode, the
-//! token-at-a-time regime of the paper's generation-stage evaluation) and
-//! admits pending requests into free slots FIFO. Completed requests are
-//! returned with latency metadata.
+//! Every call to [`Batcher::run_iteration`] advances all active slots and
+//! admits pending requests into free slots FIFO. Each active slot submits
+//! one [`SlotRun`] per iteration: a **generating** slot feeds its last
+//! sampled token (one row), a **prefilling** slot feeds up to
+//! [`BatcherConfig::prefill_chunk`] prompt tokens at once — the chunked
+//! prefill that amortizes one LUT build per weight chunk across the whole
+//! `Σ rows` iteration batch (§III's high-data-reuse argument applied to
+//! the sequence axis) instead of rebuilding it per token. Prefill chunks
+//! and single-token decode rows co-schedule in the same iteration
+//! (continuous batching); [`BatcherConfig::iteration_rows`] caps the
+//! per-iteration row total so a burst of long prompts cannot starve
+//! in-flight decodes of latency. Completed requests are returned with
+//! latency metadata; TTFT is stamped at the first *sampled* token, which
+//! arrives with the run that consumes the prompt's last token.
 //!
-//! Invariants (property-tested):
+//! Invariants (property-tested, at every chunk size):
 //! - a slot is reset before every admission (no KV leakage),
-//! - per-slot positions increase by exactly 1 per active iteration,
+//! - per-slot positions advance by exactly the rows the slot submitted,
+//!   contiguously,
 //! - no active position ever reaches `max_context` — over-long prompts
 //!   finish with `ContextFull` *during prefill*, before an out-of-window
 //!   KV write could happen,
 //! - empty prompts are answered at admission (`EmptyPrompt`, zero tokens)
 //!   instead of crashing the serving thread,
 //! - FIFO admission: requests start in arrival order,
-//! - every request eventually completes (no starvation),
-//! - outputs are identical to running each request alone (isolation).
+//! - every request eventually completes (no starvation — every active
+//!   slot is guaranteed at least one row per iteration regardless of the
+//!   row budget),
+//! - outputs are identical to running each request alone (isolation), and
+//!   **bit-identical across prefill chunk sizes** — `prefill_chunk: 1`
+//!   reproduces the pre-chunking token-at-a-time batcher exactly.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use super::engine::DecodeEngine;
+use super::engine::{DecodeEngine, SlotRun};
 use super::policy::{AdmissionPolicy, AdmissionQueue};
 use super::request::{FinishReason, Request, Response};
+
+/// The `SAIL_PREFILL_CHUNK` environment override: the per-slot prefill
+/// chunk [`BatcherConfig::default`] resolves (absent ⇒ 1, the
+/// token-at-a-time regime). The CI matrix drives the whole test suite
+/// through it, the same way `SAIL_POOL_THREADS`/`SAIL_NUMA` sweep pool
+/// width and placement.
+///
+/// # Panics
+///
+/// On a malformed value — a misconfigured chunk must be loud, not a
+/// silent fall-back to unchunked prefill (same contract as `SAIL_NUMA`).
+pub fn prefill_chunk_from_env() -> Option<usize> {
+    match std::env::var("SAIL_PREFILL_CHUNK") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => Some(n),
+            _ => panic!("invalid SAIL_PREFILL_CHUNK value '{v}' (want an integer ≥ 1)"),
+        },
+        Err(_) => None,
+    }
+}
 
 /// Batcher configuration.
 #[derive(Debug, Clone, Copy)]
@@ -36,22 +70,42 @@ pub struct BatcherConfig {
     pub eos_enabled: bool,
     /// Queue discipline for admissions.
     pub policy: AdmissionPolicy,
+    /// Most prompt tokens one slot may consume per iteration. 1 is the
+    /// pre-chunking prefill-as-decode regime; larger values amortize LUT
+    /// builds across the chunk. Clamped to the engine's
+    /// [`max_run`](DecodeEngine::max_run) capability at run time, so a
+    /// single-token engine (PJRT) under a chunked config degrades to
+    /// token-at-a-time instead of erroring. Token streams are identical
+    /// at every value.
+    pub prefill_chunk: usize,
+    /// Per-iteration cap on total submitted rows across all slots.
+    /// Every active slot is always granted one row (no slot can starve);
+    /// the budget trims only the *extra* prefill rows stacked on top, so
+    /// a burst of long prompts shares the iteration with in-flight
+    /// decodes instead of monopolizing it. `usize::MAX` = uncapped.
+    pub iteration_rows: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { eos_enabled: true, policy: AdmissionPolicy::Fifo }
+        BatcherConfig {
+            eos_enabled: true,
+            policy: AdmissionPolicy::Fifo,
+            prefill_chunk: prefill_chunk_from_env().unwrap_or(1),
+            iteration_rows: usize::MAX,
+        }
     }
 }
 
 #[derive(Debug)]
 struct Slot {
     req: Request,
-    /// Next prompt token to feed (prefill cursor).
-    prompt_idx: usize,
+    /// Prompt tokens already consumed by the engine (prefill cursor).
+    fed: usize,
     /// Position of the *next* token to be written to the KV cache.
     pos: i32,
-    /// Token to feed this iteration.
+    /// Generation input: the token sampled last iteration (meaningful
+    /// once the prompt is fully consumed).
     next_input: i32,
     generated: Vec<i32>,
     first_token_at: Option<Instant>,
@@ -140,12 +194,11 @@ impl<E: DecodeEngine> Batcher<E> {
                 }
                 self.engine.reset_slot(s)?;
                 self.admitted += 1;
-                let first = req.prompt[0];
                 self.slots[s] = Some(Slot {
                     req,
-                    prompt_idx: 1,
+                    fed: 0,
                     pos: 0,
-                    next_input: first,
+                    next_input: 0,
                     generated: Vec::new(),
                     first_token_at: None,
                 });
@@ -154,98 +207,149 @@ impl<E: DecodeEngine> Batcher<E> {
         Ok(())
     }
 
-    /// One iteration: admit, step the engine once, harvest completions.
+    /// One iteration: admit, submit one [`SlotRun`] per active slot
+    /// (prefill chunks alongside single-token decode rows), harvest
+    /// completions.
     pub fn run_iteration(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
         self.admit(&mut done)?;
-        if self.active_slots() == 0 {
+        let active = self.active_slots();
+        if active == 0 {
             return Ok(done);
         }
-        let b = self.slots.len();
-        let mut tokens = vec![0i32; b];
-        let mut positions = vec![0i32; b];
-        let mut active = vec![false; b];
+        let max_ctx = self.engine.max_context();
+        // The per-slot chunk: config clamped to the engine's capability.
+        let chunk = self.cfg.prefill_chunk.max(1).min(self.engine.max_run().max(1));
+        // Every active slot is guaranteed one row; the row budget caps
+        // only the extra prefill rows, so no slot can stall.
+        let mut extra_budget = self.cfg.iteration_rows.max(active) - active;
+
+        let mut runs: Vec<SlotRun> = Vec::with_capacity(active);
         for (s, slot) in self.slots.iter().enumerate() {
-            if let Some(sl) = slot {
-                tokens[s] = sl.next_input;
-                positions[s] = sl.pos;
-                active[s] = true;
+            let Some(sl) = slot else { continue };
+            if sl.fed < sl.req.prompt.len() {
+                // Prefilling: up to `chunk` prompt tokens, clamped so the
+                // run never reaches position `max_context` (ContextFull is
+                // raised below, before any out-of-window KV write) and
+                // never overdraws the iteration row budget.
+                let remaining = sl.req.prompt.len() - sl.fed;
+                let avail = max_ctx.saturating_sub(sl.pos as usize);
+                debug_assert!(avail > 0, "prefilling slot left with a full window");
+                let extra =
+                    (chunk - 1).min(remaining - 1).min(avail.saturating_sub(1)).min(extra_budget);
+                extra_budget -= extra;
+                runs.push(SlotRun {
+                    slot: s,
+                    tokens: &sl.req.prompt[sl.fed..sl.fed + 1 + extra],
+                    start_pos: sl.pos,
+                });
+            } else {
+                // Generating: one row, feeding the last sampled token.
+                runs.push(SlotRun {
+                    slot: s,
+                    tokens: std::slice::from_ref(&sl.next_input),
+                    start_pos: sl.pos,
+                });
             }
         }
-        let next = self.engine.step(&tokens, &positions, &active)?;
+        let next = self.engine.step_runs(&runs)?;
+        let consumed: Vec<(usize, usize)> = runs.iter().map(|r| (r.slot, r.tokens.len())).collect();
+        drop(runs);
         self.iterations += 1;
 
-        let max_ctx = self.engine.max_context() as i32;
-        for (s, slot) in self.slots.iter_mut().enumerate() {
+        let max_ctx = max_ctx as i32;
+        for ((s, len), tok) in consumed.into_iter().zip(next) {
+            let slot = &mut self.slots[s];
             let Some(sl) = slot.as_mut() else { continue };
-            sl.pos += 1;
-            if sl.prompt_idx < sl.req.prompt.len() {
-                if sl.pos >= max_ctx {
-                    // The KV window is exhausted with prompt tokens still
-                    // unfed: feeding another one would write KV position
-                    // `max_context` out of bounds (the check used to live
-                    // only in the generating branch, so over-long prompts
-                    // silently prefilled past the window). No logits were
-                    // ever sampled, so the response carries zero tokens.
-                    let sl = slot.take().unwrap();
-                    done.push(Response {
-                        id: sl.req.id,
-                        tokens: Vec::new(),
-                        ttft: std::time::Duration::default(),
-                        latency: Instant::now() - sl.req.arrival,
-                        finish: FinishReason::ContextFull,
-                    });
+            sl.pos += len as i32;
+            if sl.fed < sl.req.prompt.len() {
+                sl.fed += len;
+                if sl.fed < sl.req.prompt.len() {
+                    if sl.pos >= max_ctx {
+                        // The KV window is exhausted with prompt tokens
+                        // still unfed: feeding another would write KV
+                        // position `max_context` out of bounds. No logits
+                        // were ever sampled, so the response carries zero
+                        // tokens — identical at every chunk size, because
+                        // runs are clamped to the window above.
+                        let sl = slot.take().unwrap();
+                        done.push(Response {
+                            id: sl.req.id,
+                            tokens: Vec::new(),
+                            ttft: Duration::default(),
+                            latency: Instant::now() - sl.req.arrival,
+                            finish: FinishReason::ContextFull,
+                        });
+                    }
+                    // Still prefilling: the run's prediction is discarded.
                     continue;
                 }
-                // Still prefilling: feed the next prompt token, discard
-                // the model's prediction.
-                sl.next_input = sl.req.prompt[sl.prompt_idx];
-                sl.prompt_idx += 1;
-            } else {
-                // Generating.
-                let tok = next[s];
-                if sl.first_token_at.is_none() {
-                    sl.first_token_at = Some(Instant::now());
-                }
-                sl.generated.push(tok);
-                sl.next_input = tok;
-                let eos_hit =
-                    self.cfg.eos_enabled && sl.req.eos.map(|e| e == tok).unwrap_or(false);
-                let budget_hit = sl.generated.len() >= sl.req.max_new_tokens;
-                let ctx_hit = sl.pos >= max_ctx;
-                if eos_hit || budget_hit || ctx_hit {
-                    let sl = slot.take().unwrap();
-                    let now = Instant::now();
-                    done.push(Response {
-                        id: sl.req.id,
-                        tokens: sl.generated,
-                        ttft: sl
-                            .first_token_at
-                            .map(|t| t - sl.req.arrival)
-                            .unwrap_or_default(),
-                        latency: now - sl.req.arrival,
-                        finish: if eos_hit {
-                            FinishReason::Eos
-                        } else if budget_hit {
-                            FinishReason::MaxTokens
-                        } else {
-                            FinishReason::ContextFull
-                        },
-                    });
-                }
+                // This run consumed the prompt's last token: `tok`,
+                // predicted from that final position, is the request's
+                // first sampled token — fall through to generation
+                // handling (TTFT stamps here).
+            }
+            if sl.first_token_at.is_none() {
+                sl.first_token_at = Some(Instant::now());
+            }
+            sl.generated.push(tok);
+            sl.next_input = tok;
+            let eos_hit = self.cfg.eos_enabled && sl.req.eos.map(|e| e == tok).unwrap_or(false);
+            let budget_hit = sl.generated.len() >= sl.req.max_new_tokens;
+            let ctx_hit = sl.pos >= max_ctx;
+            if eos_hit || budget_hit || ctx_hit {
+                let sl = slot.take().unwrap();
+                let now = Instant::now();
+                done.push(Response {
+                    id: sl.req.id,
+                    tokens: sl.generated,
+                    ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
+                    latency: now - sl.req.arrival,
+                    finish: if eos_hit {
+                        FinishReason::Eos
+                    } else if budget_hit {
+                        FinishReason::MaxTokens
+                    } else {
+                        FinishReason::ContextFull
+                    },
+                });
             }
         }
         Ok(done)
     }
 
     /// Drive iterations until every submitted request completes.
+    ///
+    /// Stall handling: an iteration that stepped no engine, completed no
+    /// request, and admitted nothing while requests are still queued can
+    /// never make progress (the one way to build such a batcher is an
+    /// engine with zero slots) — that used to trip a 10M-iteration
+    /// `assert!` and abort the process; both the fast no-progress check
+    /// and the deep safety-net guard now surface as `Err` so a serving
+    /// thread degrades instead of panicking.
     pub fn run_to_completion(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
         let mut guard = 0u64;
         while !self.is_idle() {
+            let before = out.len();
             out.extend(self.run_iteration()?);
+            if self.active_slots() == 0 && !self.queue.is_empty() && out.len() == before {
+                bail!(
+                    "batcher stalled: {} request(s) queued but the engine has {} slot(s) \
+                     and nothing was admitted or completed",
+                    self.queue.len(),
+                    self.slots.len()
+                );
+            }
             guard += 1;
-            assert!(guard < 10_000_000, "batcher livelock");
+            if guard >= 10_000_000 {
+                bail!(
+                    "batcher livelock: {guard} iterations without draining \
+                     ({} active, {} queued)",
+                    self.active_slots(),
+                    self.queue.len()
+                );
+            }
         }
         Ok(out)
     }
@@ -405,15 +509,17 @@ mod tests {
 
     /// MockEngine wrapper recording the largest position ever fed to the
     /// engine on an active slot — the "no KV write outside the window"
-    /// observability the admission-hardening tests assert on.
+    /// observability the admission-hardening tests assert on — plus the
+    /// row count of every `step_runs` call (the iteration-budget tests).
     struct TrackingEngine {
         inner: MockEngine,
         max_pos_fed: i32,
+        rows_per_iteration: Vec<usize>,
     }
 
     impl TrackingEngine {
         fn new(inner: MockEngine) -> Self {
-            TrackingEngine { inner, max_pos_fed: -1 }
+            TrackingEngine { inner, max_pos_fed: -1, rows_per_iteration: Vec::new() }
         }
     }
 
@@ -430,6 +536,10 @@ mod tests {
             self.inner.max_context()
         }
 
+        fn max_run(&self) -> usize {
+            self.inner.max_run()
+        }
+
         fn step(
             &mut self,
             tokens: &[i32],
@@ -442,6 +552,14 @@ mod tests {
                 }
             }
             self.inner.step(tokens, positions, active)
+        }
+
+        fn step_runs(&mut self, runs: &[crate::coordinator::engine::SlotRun]) -> Result<Vec<i32>> {
+            for r in runs {
+                self.max_pos_fed = self.max_pos_fed.max(r.start_pos + r.tokens.len() as i32 - 1);
+            }
+            self.rows_per_iteration.push(runs.iter().map(|r| r.tokens.len()).sum());
+            self.inner.step_runs(runs)
         }
 
         fn reset_slot(&mut self, slot: usize) -> Result<()> {
@@ -596,5 +714,128 @@ mod tests {
         let done = b.run_to_completion().unwrap();
         assert_eq!(done.len(), 4);
         assert_eq!(b.iterations(), 5);
+    }
+
+    fn chunked_batcher(batch: usize, chunk: usize, rows: usize) -> Batcher<TrackingEngine> {
+        Batcher::new(
+            TrackingEngine::new(MockEngine::new(batch, 97, 64)),
+            BatcherConfig {
+                prefill_chunk: chunk,
+                iteration_rows: rows,
+                ..BatcherConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn chunked_prefill_matches_token_at_a_time_property() {
+        // The tentpole invariant at the scheduling layer: for random mixes
+        // of prompt lengths, budgets, chunk sizes, and row budgets, the
+        // responses (tokens, finish reasons) are bit-identical to the
+        // chunk-1 prefill-as-decode batcher, and no position ever reaches
+        // the window.
+        propcheck::check(
+            "batcher-chunked-prefill-equivalence",
+            propcheck::Config { cases: 60, seed: 2024 },
+            |p, _| {
+                let batch = p.usize_in(1, 5);
+                let chunk = p.usize_in(2, 10);
+                let rows = p.usize_in(1, 14);
+                let n_req = p.usize_in(1, 14);
+                let seed = p.next_u64();
+                (batch, chunk, rows, n_req, seed)
+            },
+            |&(batch, chunk, rows, n_req, seed)| {
+                type Outcome = Vec<(u64, Vec<i32>, FinishReason)>;
+                fn run_case(
+                    batch: usize,
+                    chunk: usize,
+                    rows: usize,
+                    n_req: usize,
+                    seed: u64,
+                ) -> Result<Outcome, String> {
+                    let mut prng = Prng::new(seed);
+                    let mut b = chunked_batcher(batch, chunk, rows);
+                    for id in 0..n_req as u64 {
+                        let plen = prng.usize_in(1, 30);
+                        let prompt = (0..plen).map(|_| prng.usize_in(1, 97) as i32).collect();
+                        b.submit(Request::new(id, prompt, prng.usize_in(1, 8)));
+                    }
+                    let mut done = b.run_to_completion().map_err(|e| e.to_string())?;
+                    if b.engine().max_pos_fed >= 64 {
+                        return Err(format!(
+                            "position {} fed beyond the window",
+                            b.engine().max_pos_fed
+                        ));
+                    }
+                    done.sort_by_key(|r| r.id);
+                    Ok(done.into_iter().map(|r| (r.id, r.tokens, r.finish)).collect())
+                }
+                let base = run_case(batch, 1, usize::MAX, n_req, seed)?;
+                let got = run_case(batch, chunk, rows, n_req, seed)?;
+                if got != base {
+                    return Err(format!("chunk {chunk} rows {rows} diverged from chunk 1"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn iteration_row_budget_caps_rows_without_starving_decode() {
+        // Slot 0 prefills a 24-token prompt while slot 1 decodes; with
+        // chunk 8 and a 5-row budget every iteration must stay ≤ 5 rows,
+        // both requests complete, and the stream matches chunk 1.
+        let run = |chunk: usize, rows: usize| {
+            let mut b = chunked_batcher(2, chunk, rows);
+            b.submit(Request::new(0, (1..=24).collect(), 3));
+            b.submit(Request::new(1, vec![5], 6));
+            let mut done = b.run_to_completion().unwrap();
+            done.sort_by_key(|r| r.id);
+            let max_rows = b.engine().rows_per_iteration.iter().copied().max().unwrap_or(0);
+            (done.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>(), max_rows)
+        };
+        let (base, _) = run(1, usize::MAX);
+        let (got, max_rows) = run(8, 5);
+        assert_eq!(got, base, "row budget changed the token streams");
+        assert!(max_rows <= 5, "an iteration submitted {max_rows} rows past the 5-row budget");
+        // Uncapped, the same workload does stack full chunks.
+        let (got_wide, max_rows_wide) = run(8, usize::MAX);
+        assert_eq!(got_wide, base);
+        assert!(max_rows_wide > 5, "chunk 8 never stacked more than 5 rows: {max_rows_wide}");
+    }
+
+    #[test]
+    fn ttft_improves_with_chunked_prefill_in_iterations() {
+        // With a 40-token prompt and a 1-token budget, the request's
+        // whole life is prefill: iterations-to-completion is exactly
+        // ceil(40 / chunk) and therefore monotone non-increasing in the
+        // chunk size (the iteration-count proxy for TTFT, which a wall
+        // clock would measure too noisily).
+        let mut prev = u64::MAX;
+        for chunk in [1usize, 4, 16, 64] {
+            let mut b = chunked_batcher(1, chunk, usize::MAX);
+            b.submit(Request::new(0, (1..=40).collect(), 1));
+            let done = b.run_to_completion().unwrap();
+            assert_eq!(done[0].tokens.len(), 1);
+            assert_eq!(b.iterations(), 40u64.div_ceil(chunk.min(40) as u64), "chunk {chunk}");
+            assert!(b.iterations() <= prev, "chunk {chunk} regressed TTFT iterations");
+            prev = b.iterations();
+        }
+    }
+
+    #[test]
+    fn zero_slot_engine_is_an_error_not_a_livelock() {
+        // Regression: a request submitted to a batcher whose engine has
+        // zero slots can never be admitted; `run_to_completion` used to
+        // spin 10M iterations and then `assert!`-abort the process. It
+        // must return a proper Err (the server worker reports it and
+        // degrades instead of panicking).
+        let mut b = Batcher::new(MockEngine::new(0, 97, 64), BatcherConfig::default());
+        b.submit(Request::new(0, vec![1, 2], 4));
+        let err = b.run_to_completion();
+        assert!(err.is_err(), "zero-slot batcher must error, not livelock");
+        let msg = format!("{:#}", err.unwrap_err());
+        assert!(msg.contains("stalled"), "unexpected error: {msg}");
     }
 }

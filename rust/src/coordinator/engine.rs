@@ -21,7 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
-use crate::model::{DecodeItem, DecodeSpec, DecodeStats, LutTransformer};
+use crate::model::{DecodeItem, DecodeRun, DecodeSpec, DecodeStats, LutTransformer};
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use crate::runtime::WorkerPool;
 
@@ -47,18 +47,135 @@ pub fn argmax_logits(row: &[f32]) -> i32 {
     best.map(|(i, _)| i as i32).unwrap_or(0)
 }
 
+/// A run of consecutive tokens for one slot in one engine iteration:
+/// `tokens[i]` is fed at KV position `start_pos + i`. A single-token run
+/// is one decode step; a longer run is a prefill chunk. The engine
+/// returns one next-token prediction per run, sampled (greedy) from the
+/// run's **last** position — exactly the token the sequential
+/// token-at-a-time regime would have produced there, because every
+/// position in the run attends only to positions `≤` its own.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotRun<'a> {
+    pub slot: usize,
+    pub tokens: &'a [i32],
+    pub start_pos: i32,
+}
+
+/// Shared `step_runs` validation: slots in range and unique per
+/// iteration, runs non-empty, positions non-negative and inside the
+/// context window (the batcher raises `ContextFull` *before* a run could
+/// ever touch position `max_context`).
+fn validate_runs(batch: usize, max_context: usize, runs: &[SlotRun]) -> Result<()> {
+    let mut seen = vec![false; batch];
+    for r in runs {
+        if r.slot >= batch {
+            bail!("run slot {} outside batch {batch}", r.slot);
+        }
+        if seen[r.slot] {
+            bail!("slot {} appears in more than one run this iteration", r.slot);
+        }
+        seen[r.slot] = true;
+        if r.tokens.is_empty() {
+            bail!("empty token run for slot {}", r.slot);
+        }
+        if r.start_pos < 0 {
+            bail!("negative start position {} for slot {}", r.start_pos, r.slot);
+        }
+        if r.start_pos as usize + r.tokens.len() > max_context {
+            bail!(
+                "run {}..{} for slot {} outside the {max_context}-token context window \
+                 (the batcher must finish the request with ContextFull first)",
+                r.start_pos,
+                r.start_pos as usize + r.tokens.len(),
+                r.slot
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Generic adapter: decompose variable-length runs into single-token
+/// [`DecodeEngine::step`] calls (the `active` flags select the slots
+/// whose run still has tokens at each inner step). Any engine whose
+/// `step` honours `active` can implement `step_runs` with this; the
+/// result is bit-identical to a native multi-row forward by the engines'
+/// own determinism contracts — it just forgoes the batched-GEMV
+/// amortization a native implementation gets. Tests also use it as the
+/// sequential oracle the native paths are compared against.
+pub fn step_runs_via_step<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    runs: &[SlotRun],
+) -> Result<Vec<i32>> {
+    validate_runs(engine.batch(), engine.max_context(), runs)?;
+    let b = engine.batch();
+    let max_len = runs.iter().map(|r| r.tokens.len()).max().unwrap_or(0);
+    let mut out = vec![0i32; runs.len()];
+    let mut tokens = vec![0i32; b];
+    let mut positions = vec![0i32; b];
+    for j in 0..max_len {
+        let mut active = vec![false; b];
+        for r in runs {
+            if let Some(&t) = r.tokens.get(j) {
+                tokens[r.slot] = t;
+                positions[r.slot] = r.start_pos + j as i32;
+                active[r.slot] = true;
+            }
+        }
+        let next = engine.step(&tokens, &positions, &active)?;
+        for (ri, r) in runs.iter().enumerate() {
+            if j + 1 == r.tokens.len() {
+                out[ri] = next[r.slot];
+            }
+        }
+    }
+    Ok(out)
+}
+
 /// One decode iteration over all batch slots.
 ///
-/// `tokens[s]`/`positions[s]` are only meaningful where `active[s]`;
-/// inactive slots still occupy compute (the fixed-batch artifact) but
-/// their outputs are ignored. Implementations must keep per-slot KV state
-/// keyed by slot index and clear it on `reset_slot`.
+/// Two entry points:
+/// - [`step`](DecodeEngine::step): the fixed-arity token-at-a-time form —
+///   `tokens[s]`/`positions[s]` are only meaningful where `active[s]`;
+///   inactive slots may still occupy compute (the fixed-batch artifact)
+///   but their outputs are ignored.
+/// - [`step_runs`](DecodeEngine::step_runs): the variable-rows-per-slot
+///   form the batcher drives — each active slot submits a [`SlotRun`] of
+///   up to [`max_run`](DecodeEngine::max_run) consecutive tokens
+///   (chunked prefill), and the engine returns one greedy next-token per
+///   run, predicted from the run's last position. Engines with a
+///   multi-row forward execute the whole iteration at effective batch
+///   `Σ rows(run)`, amortizing every per-weight cost (LUT builds) across
+///   all rows.
+///
+/// Implementations must keep per-slot KV state keyed by slot index and
+/// clear it on `reset_slot`, and both entry points must produce
+/// bit-identical token streams for the same fed (token, position)
+/// sequence.
 pub trait DecodeEngine {
     fn batch(&self) -> usize;
     fn vocab(&self) -> usize;
     fn max_context(&self) -> usize;
+    /// Largest number of tokens one slot may submit in a single
+    /// [`step_runs`](DecodeEngine::step_runs) call (engine capability;
+    /// the batcher clamps its configured prefill chunk to this). Engines
+    /// without a multi-row forward return 1.
+    fn max_run(&self) -> usize {
+        1
+    }
     /// Returns the next token per slot (greedy).
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>>;
+    /// Variable-rows-per-slot iteration: returns one next token per run,
+    /// sampled from the run's last position.
+    ///
+    /// The provided body decomposes runs into single-token `step` calls
+    /// ([`step_runs_via_step`]) — correct for any engine whose `step`
+    /// honours `active`, with no multi-row amortization. Engines with a
+    /// real multi-row forward override it; engines whose `step` ignores
+    /// `active` (PJRT) must override it too, because the decomposition's
+    /// filler rows would write their KV.
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        step_runs_via_step(self, runs)
+    }
     /// Clear slot state before admitting a new request.
     fn reset_slot(&mut self, slot: usize) -> Result<()>;
 }
@@ -107,6 +224,25 @@ impl DecodeEngine for PjrtEngine {
     fn step(&mut self, tokens: &[i32], positions: &[i32], _active: &[bool]) -> Result<Vec<i32>> {
         let logits = self.model.step(tokens, positions)?;
         Ok(self.model.argmax(&logits))
+    }
+
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        // The AOT artifact's step signature is one token per slot; the
+        // batcher sees `max_run() == 1` and never builds longer runs, so
+        // a longer run here is a caller bug. The guard must come first:
+        // the generic decomposition below would feed absent slots the
+        // (token 0, position 0) filler on *every* inner step, and this
+        // engine's `step` ignores `active` — fine once per iteration
+        // (the dense path always did it), KV-corrupting if repeated.
+        if let Some(r) = runs.iter().find(|r| r.tokens.len() > 1) {
+            bail!(
+                "{}-token run for slot {}: the PJRT decode artifact steps one token \
+                 per slot per iteration (max_run = 1)",
+                r.tokens.len(),
+                r.slot
+            );
+        }
+        step_runs_via_step(self, runs)
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
@@ -222,6 +358,13 @@ impl DecodeEngine for LutGemvServeEngine {
         self.max_context
     }
 
+    /// The recurrent state update is per-token but the expensive part —
+    /// the output projection — only matters at the run's last position,
+    /// so a run of any length costs **one** GEMV row.
+    fn max_run(&self) -> usize {
+        usize::MAX
+    }
+
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
         // A mis-sized call is a caller bug, but it must surface as an
         // error the server can report, not a panic that aborts the worker.
@@ -256,6 +399,34 @@ impl DecodeEngine for LutGemvServeEngine {
         Ok((0..self.batch)
             .map(|s| if active[s] { argmax_logits(self.logits.row(s)) } else { 0 })
             .collect())
+    }
+
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        validate_runs(self.batch, self.max_context, runs)?;
+        let k = self.gemv.k();
+        // Fold every run's tokens into its slot's hidden state in feed
+        // order — the exact recurrence sequential single-token steps
+        // apply (the discarded mid-prefill logits never feed back into
+        // the state, so skipping them changes nothing downstream).
+        for r in runs {
+            let h = &mut self.hidden[r.slot * k..(r.slot + 1) * k];
+            for (j, &t) in r.tokens.iter().enumerate() {
+                let pos = r.start_pos + j as i32;
+                for (i, hi) in h.iter_mut().enumerate() {
+                    *hi = 0.5 * *hi + Self::embed(t, pos, i);
+                }
+            }
+        }
+        // One batched GEMV at effective batch = number of runs (only the
+        // last position of each run needs logits).
+        let xs: Vec<QuantizedVector> = runs
+            .iter()
+            .map(|r| QuantizedVector::quantize(&self.hidden[r.slot * k..(r.slot + 1) * k]))
+            .collect();
+        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits);
+        self.gemv_stats += stats;
+        self.steps += 1;
+        Ok((0..runs.len()).map(|i| argmax_logits(self.logits.row(i))).collect())
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
@@ -321,6 +492,14 @@ impl DecodeEngine for TransformerServeEngine {
         self.model.spec().max_context
     }
 
+    /// The transformer has a true multi-row forward
+    /// ([`LutTransformer::step_runs`]): every projection runs once per
+    /// iteration at effective batch `Σ rows`, so prefill chunks of any
+    /// length (the window permitting) are welcome.
+    fn max_run(&self) -> usize {
+        usize::MAX
+    }
+
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
         let b = self.model.batch();
         if tokens.len() != b || positions.len() != b || active.len() != b {
@@ -347,6 +526,16 @@ impl DecodeEngine for TransformerServeEngine {
             next[it.slot] = argmax_logits(self.model.logits().row(i));
         }
         Ok(next)
+    }
+
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        validate_runs(self.model.batch(), self.model.spec().max_context, runs)?;
+        let model_runs: Vec<DecodeRun> = runs
+            .iter()
+            .map(|r| DecodeRun { slot: r.slot, tokens: r.tokens, start_pos: r.start_pos as usize })
+            .collect();
+        self.model.step_runs(&model_runs)?;
+        Ok((0..runs.len()).map(|i| argmax_logits(self.model.logits().row(i))).collect())
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
@@ -385,6 +574,10 @@ impl DecodeEngine for MockEngine {
         self.max_context
     }
 
+    fn max_run(&self) -> usize {
+        usize::MAX
+    }
+
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
         assert_eq!(tokens.len(), self.batch);
         self.steps += 1;
@@ -400,6 +593,28 @@ impl DecodeEngine for MockEngine {
                 self.state[s] = mix;
                 // Never emit token 0 (reserved as EOS in tests) unless the
                 // hash lands there; tests pick eos handling explicitly.
+                (mix % self.vocab as u64) as i32
+            })
+            .collect())
+    }
+
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        validate_runs(self.batch, self.max_context, runs)?;
+        self.steps += 1;
+        Ok(runs
+            .iter()
+            .map(|r| {
+                // The same per-token fold `step` applies, so chunked
+                // feeding is bit-identical to token-at-a-time feeding.
+                let mut mix = self.state[r.slot];
+                for (j, &t) in r.tokens.iter().enumerate() {
+                    let pos = r.start_pos + j as i32;
+                    mix = mix
+                        .wrapping_mul(0x100000001B3)
+                        .wrapping_add(t as u64)
+                        .wrapping_add((pos as u64) << 32);
+                }
+                self.state[r.slot] = mix;
                 (mix % self.vocab as u64) as i32
             })
             .collect())
@@ -601,6 +816,136 @@ mod tests {
         fresh.step(&[3, 0], &[0, 0], &[true, false]).unwrap();
         let b = fresh.step(&[5, 7], &[1, 0], &[true, true]).unwrap();
         assert_eq!(a[1], b[1], "slot 1 was touched while inactive");
+    }
+
+    #[test]
+    fn step_runs_native_paths_match_the_sequential_oracle() {
+        // Twin engines, same seed: the native multi-row `step_runs` must
+        // produce the same outputs AND leave the same slot state as the
+        // generic decomposition into single-token `step` calls.
+        fn runs<'a>(p0: &'a [i32], p1: &'a [i32]) -> Vec<SlotRun<'a>> {
+            vec![
+                SlotRun { slot: 0, tokens: p0, start_pos: 0 },
+                SlotRun { slot: 1, tokens: p1, start_pos: 0 },
+            ]
+        }
+        let p0 = [3, 7, 11, 2, 9];
+        let p1 = [5i32];
+
+        let mut m_native = MockEngine::new(2, 97, 64);
+        let mut m_oracle = MockEngine::new(2, 97, 64);
+        let a = m_native.step_runs(&runs(&p0, &p1)).unwrap();
+        let b = step_runs_via_step(&mut m_oracle, &runs(&p0, &p1)).unwrap();
+        assert_eq!(a, b, "mock native step_runs diverged from the oracle");
+        assert_eq!(m_native.state, m_oracle.state, "mock slot state diverged");
+
+        let mut l_native = lut_engine(2, 2);
+        let mut l_oracle = lut_engine(2, 1);
+        let a = l_native.step_runs(&runs(&p0, &p1)).unwrap();
+        let b = step_runs_via_step(&mut l_oracle, &runs(&p0, &p1)).unwrap();
+        assert_eq!(a, b, "lut-toy native step_runs diverged from the oracle");
+        // Continue decoding from the post-run state: trajectories must
+        // stay locked (the hidden states are bit-identical).
+        let cont = |e: &mut LutGemvServeEngine, t0: i32, t1: i32| {
+            let toks = [t0, t1];
+            let r: Vec<SlotRun> = (0..2)
+                .map(|s| SlotRun {
+                    slot: s,
+                    tokens: std::slice::from_ref(&toks[s]),
+                    start_pos: [p0.len(), p1.len()][s] as i32,
+                })
+                .collect();
+            e.step_runs(&r).unwrap()
+        };
+        assert_eq!(cont(&mut l_native, a[0], a[1]), cont(&mut l_oracle, b[0], b[1]));
+
+        let mut t_native = transformer_engine(2, 2);
+        let mut t_oracle = transformer_engine(2, 1);
+        let a = t_native.step_runs(&runs(&p0, &p1)).unwrap();
+        let b = step_runs_via_step(&mut t_oracle, &runs(&p0, &p1)).unwrap();
+        assert_eq!(a, b, "transformer native step_runs diverged from the oracle");
+    }
+
+    #[test]
+    fn step_runs_rejects_malformed_runs() {
+        let mut e = MockEngine::new(2, 97, 8);
+        let toks = [1i32, 2, 3];
+        let ok = SlotRun { slot: 0, tokens: &toks, start_pos: 0 };
+        assert!(e.step_runs(&[ok]).is_ok());
+        // Slot outside the batch.
+        assert!(e.step_runs(&[SlotRun { slot: 2, tokens: &toks, start_pos: 0 }]).is_err());
+        // Duplicate slot in one iteration.
+        assert!(e.step_runs(&[ok, ok]).is_err());
+        // Empty run.
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &[], start_pos: 0 }]).is_err());
+        // Negative start position.
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: -1 }]).is_err());
+        // Run crossing the context window (positions 6..9, window 8).
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: 6 }]).is_err());
+        // The engine still serves after a rejected call.
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: 3 }]).is_ok());
+
+        // The transformer path reports the same class of errors.
+        let mut t = transformer_engine(2, 1);
+        let ctx = t.max_context() as i32;
+        assert!(t.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: ctx - 1 }]).is_err());
+        assert!(t.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: 0 }]).is_ok());
+    }
+
+    #[test]
+    fn pjrt_shaped_engines_cap_runs_at_one_token() {
+        // `max_run` defaults to 1 and `step_runs` to the generic
+        // decomposition, so a minimal engine implements neither; the
+        // batcher clamps its chunk to 1 and the default body serves it.
+        struct OneTokenEngine(MockEngine);
+        impl DecodeEngine for OneTokenEngine {
+            fn batch(&self) -> usize {
+                self.0.batch()
+            }
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn max_context(&self) -> usize {
+                self.0.max_context()
+            }
+            fn step(
+                &mut self,
+                tokens: &[i32],
+                positions: &[i32],
+                active: &[bool],
+            ) -> Result<Vec<i32>> {
+                self.0.step(tokens, positions, active)
+            }
+            fn reset_slot(&mut self, slot: usize) -> Result<()> {
+                self.0.reset_slot(slot)
+            }
+        }
+        assert_eq!(
+            OneTokenEngine(MockEngine::new(1, 97, 64)).max_run(),
+            1,
+            "the default capability is one token per slot"
+        );
+        // Chunked serving through the batcher still works: the chunk is
+        // clamped to 1 and the stream matches the mock's exactly.
+        use crate::coordinator::batcher::{Batcher, BatcherConfig};
+        use crate::coordinator::request::Request;
+        let toks = [4i32, 9, 2, 6];
+        let want = {
+            let mut m = Batcher::new(
+                MockEngine::new(1, 97, 64),
+                BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() },
+            );
+            m.submit(Request::new(0, toks.to_vec(), 3));
+            m.run_to_completion().unwrap()[0].tokens.clone()
+        };
+        let mut b = Batcher::new(
+            OneTokenEngine(MockEngine::new(1, 97, 64)),
+            BatcherConfig { prefill_chunk: 16, ..BatcherConfig::default() },
+        );
+        b.submit(Request::new(0, toks.to_vec(), 3));
+        let got = b.run_to_completion().unwrap()[0].tokens.clone();
+        assert_eq!(got, want, "clamped chunking changed the token stream");
+        assert_eq!(b.iterations(), 6, "4 prompt + 3 generated tokens, one per iteration");
     }
 
     #[test]

@@ -27,10 +27,10 @@ pub mod policy;
 pub mod request;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{prefill_chunk_from_env, Batcher, BatcherConfig};
 pub use engine::{
-    argmax_logits, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
-    TransformerServeEngine,
+    argmax_logits, step_runs_via_step, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
+    SlotRun, TransformerServeEngine,
 };
 pub use metrics::ServingMetrics;
 pub use policy::{AdmissionPolicy, AdmissionQueue};

@@ -27,6 +27,27 @@ pub fn pattern_hash(pattern: u32) -> u32 {
     h
 }
 
+/// The tag actually stored/compared by the table. The engine's bit-serial
+/// contract caps activation planes at NBW ≤ 8 bits, so every hot-loop
+/// pattern is `< 256` — where the identity map is exactly as
+/// collision-free as FNV-1a (both injective on 0..256, see the tests) at
+/// zero hash work per lookup+insert, so on the engine's streams the
+/// hit/miss/flush sequences, and therefore all counters, are
+/// bit-identical to the FNV tags. Wider patterns (reachable through the
+/// public API) still hash with FNV-1a, **forced into a disjoint tag
+/// space** (bit 31 set; identity tags are < 2⁸): a wide pattern whose
+/// hash happens to land below 256 can never phantom-hit a narrow
+/// pattern's entry, which plain FNV-for-everything could not promise
+/// either way.
+#[inline]
+fn tag_of(pattern: u32) -> u32 {
+    if pattern < 256 {
+        pattern
+    } else {
+        0x8000_0000 | pattern_hash(pattern)
+    }
+}
+
 #[derive(Debug, Clone, Copy)]
 struct PrtEntry {
     tag: u32,
@@ -74,24 +95,32 @@ impl PatternReuseTable {
 
     /// Look up a pattern; `Some(result)` bypasses the C-SRAM access.
     ///
-    /// Stale (pre-flush) entries encountered during the scan are reclaimed
-    /// to `None` on the spot, so post-flush scans degrade to cheap
-    /// discriminant checks instead of paying a tag compare per dead slot —
-    /// the flush stays O(1) without pessimizing the lookups it serves.
+    /// Hot-loop shape (this runs once per (chunk, plane, batch item) when
+    /// the PRT is enabled): the tag is the identity of the pattern for
+    /// the ≤ 8-bit patterns the engine feeds (no FNV rounds — see
+    /// [`tag_of`]), and the scan does a single discriminant match per
+    /// slot, short-circuiting the moment a live tag hits. Stale
+    /// (pre-flush) entries encountered *before* the hit are reclaimed to
+    /// `None` on the spot, so post-flush scans degrade to cheap
+    /// discriminant checks instead of paying a tag compare per dead slot
+    /// — the flush stays O(1) without pessimizing the lookups it serves.
+    /// Hit/miss decisions (and so all counters) are bit-identical to the
+    /// pre-fast-path table.
     pub fn lookup(&mut self, pattern: u32) -> Option<i64> {
         self.clock += 1;
-        let tag = pattern_hash(pattern);
+        let tag = tag_of(pattern);
+        let generation = self.generation;
         for slot in self.entries.iter_mut() {
-            if matches!(slot, Some(e) if e.generation != self.generation) {
-                *slot = None; // lazy reclaim of a flushed entry
-                continue;
-            }
-            if let Some(e) = slot {
-                if e.tag == tag {
-                    e.stamp = self.clock;
-                    self.hits += 1;
-                    return Some(e.value);
+            match slot {
+                Some(e) if e.generation == generation => {
+                    if e.tag == tag {
+                        e.stamp = self.clock;
+                        self.hits += 1;
+                        return Some(e.value);
+                    }
                 }
+                Some(_) => *slot = None, // lazy reclaim of a flushed entry
+                None => {}
             }
         }
         self.misses += 1;
@@ -101,7 +130,7 @@ impl PatternReuseTable {
     /// Record the LUT result for a pattern (after a miss), evicting LRU.
     pub fn insert(&mut self, pattern: u32, value: i64) {
         self.clock += 1;
-        let tag = pattern_hash(pattern);
+        let tag = tag_of(pattern);
         // Update in place if present (and live this generation).
         for e in self.entries.iter_mut().flatten() {
             if e.generation == self.generation && e.tag == tag {
@@ -168,6 +197,59 @@ mod tests {
         for p in 0u32..256 {
             assert!(seen.insert(pattern_hash(p)), "collision at {p}");
         }
+    }
+
+    #[test]
+    fn identity_tag_fast_path_matches_fnv_semantics() {
+        // ≤ 8-bit patterns take the identity tag; both maps are injective
+        // on that domain, so the fast path cannot change any hit/miss
+        // decision there, and wide patterns live in a disjoint tag space
+        // (bit 31) so they can never phantom-hit a narrow entry. Drive an
+        // adversarial mixed stream (narrow + wide patterns, flushes,
+        // evictions) against a straightforward reference model keyed by
+        // the *pattern* and require identical hit/miss traces and
+        // counters.
+        let mut prt = PatternReuseTable::new(4);
+        let mut model: Vec<(u32, i64)> = Vec::new(); // (pattern, value), LRU order
+        let mut prng = crate::util::Prng::new(91);
+        let (mut want_hits, mut want_misses) = (0u64, 0u64);
+        for op in 0..4000 {
+            // Mix narrow (identity-tag) and wide (FNV-tag) patterns.
+            let pattern = if prng.gen_range(4) == 0 {
+                0x1_0000 + prng.gen_range(64) as u32
+            } else {
+                prng.gen_range(256) as u32
+            };
+            match prng.gen_range(8) {
+                0 => {
+                    prt.flush();
+                    model.clear();
+                }
+                _ => {
+                    let got = prt.lookup(pattern);
+                    let hit = model.iter().position(|&(p, _)| p == pattern);
+                    match hit {
+                        Some(i) => {
+                            want_hits += 1;
+                            let e = model.remove(i);
+                            assert_eq!(got, Some(e.1), "op {op}: wrong value for {pattern:#x}");
+                            model.push(e); // most-recently-used
+                        }
+                        None => {
+                            want_misses += 1;
+                            assert_eq!(got, None, "op {op}: phantom hit for {pattern:#x}");
+                            if model.len() == 4 {
+                                model.remove(0); // LRU eviction
+                            }
+                            model.push((pattern, op as i64));
+                            prt.insert(pattern, op as i64);
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!((prt.hits(), prt.misses()), (want_hits, want_misses));
+        assert!(want_hits > 100 && want_misses > 100, "stream did not exercise both paths");
     }
 
     #[test]

@@ -155,24 +155,32 @@ fn serve(mut args: Args) -> Result<()> {
         }
         // Serve the artifact's model config on the LUT-GEMV transformer
         // backend: shapes/precision come from the manifest, worker
-        // placement from the manifest's `placement` field — or, when
-        // --config FILE is given, from `[sail]` threads/numa there.
+        // placement and prefill chunk from the manifest's `placement` /
+        // `prefill_chunk` fields — or, when --config FILE is given, from
+        // `[sail]` threads/numa/prefill_chunk there. `SAIL_PREFILL_CHUNK`
+        // overrides both (the same operator-override contract as
+        // `SAIL_NUMA`).
         "lut" => {
-            use sail::coordinator::TransformerServeEngine;
+            use sail::coordinator::{prefill_chunk_from_env, TransformerServeEngine};
             use sail::runtime::{Manifest, WorkerPool};
             let manifest = Manifest::load(std::path::Path::new(&dir))?;
             let spec = manifest.decode_spec()?;
-            let (threads, policy) = match config {
+            let (threads, policy, chunk) = match config {
                 Some(path) => {
                     let c = sail::config::RunConfig::load(std::path::Path::new(&path))?;
-                    (c.threads as usize, c.numa)
+                    (c.threads as usize, c.numa, c.prefill_chunk)
                 }
-                None => (WorkerPool::auto_width(), manifest.config.placement.clone()),
+                None => (
+                    WorkerPool::auto_width(),
+                    manifest.config.placement.clone(),
+                    manifest.config.prefill_chunk,
+                ),
             };
+            let chunk = prefill_chunk_from_env().unwrap_or(chunk);
             let pool = std::sync::Arc::new(WorkerPool::with_policy(threads, &policy));
             println!(
                 "manifest {}: {} layers, hidden {}, vocab {} — placement {policy} → \
-                 {} node group(s), {} worker(s), {} pinned",
+                 {} node group(s), {} worker(s), {} pinned; prefill chunk {chunk}",
                 dir,
                 manifest.config.layers,
                 manifest.config.hidden,
@@ -182,7 +190,8 @@ fn serve(mut args: Args) -> Result<()> {
                 pool.pinned_workers()
             );
             let engine = TransformerServeEngine::random(spec, seed, batch, pool)?;
-            let server = Server::spawn(engine, BatcherConfig::default());
+            let cfg = BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() };
+            let server = Server::spawn(engine, cfg);
             drive(server, n_requests, seed)?
         }
         other => bail!("unknown --engine {other} (lut|pjrt|mock)"),

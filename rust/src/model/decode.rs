@@ -10,6 +10,17 @@
 //! §III-B) whose element payload is allocated precisely as
 //! `KvCacheSpec::seq_bytes` accounts it.
 //!
+//! The forward comes in two grains: token-at-a-time
+//! ([`LutTransformer::step`], one [`DecodeItem`] per slot) and the
+//! multi-row [`LutTransformer::step_runs`], where each slot submits a
+//! [`DecodeRun`] of consecutive tokens — the **chunked prefill** path.
+//! One iteration then runs every projection at effective batch
+//! `Σ rows(run)`, so a T-token prompt chunked C-wide builds each weight
+//! chunk's LUT `⌈T/C⌉` times instead of `T` times (the paper's high-data-
+//! reuse argument applied along the sequence axis), while causal
+//! attention inside the chunk keeps the result bit-identical to
+//! sequential feeding.
+//!
 //! Weight precision is **per layer** ([`LayerSpec`]): the paper observes
 //! that the optimal bit precision varies across layers, so the spec names
 //! one `QuantLevel`/NBW pair per layer (and one for the head) instead of a
@@ -193,6 +204,19 @@ pub struct DecodeItem {
     pub pos: usize,
 }
 
+/// One iteration's work for one slot in the multi-row
+/// [`LutTransformer::step_runs`] form: feed `tokens[i]` at KV position
+/// `start_pos + i` (a prefill chunk when longer than one token). Only the
+/// run's **last** position produces a logits row — the interior rows
+/// exist to write KV, exactly what sequential prefill does with its
+/// discarded predictions.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeRun<'a> {
+    pub slot: usize,
+    pub tokens: &'a [i32],
+    pub start_pos: usize,
+}
+
 /// Kernel counters of one layer, split per projection — the observability
 /// that lets tests (and the perf bench) assert every projection actually
 /// ran on the LUT path.
@@ -274,6 +298,10 @@ pub struct LutTransformer {
     scores: Vec<f32>,
     kbuf: Vec<f32>,
     vbuf: Vec<f32>,
+    /// Gather buffer for the head projection's inputs: each run's last
+    /// row of the residual stream (interior prefill rows predict
+    /// nothing, so the head runs at batch = runs, not batch = rows).
+    head_x: Vec<f32>,
     /// Quantized activations of width `hidden` (projection inputs).
     quant_h: Vec<QuantizedVector>,
     /// Quantized activations of width `ffn` (down-projection inputs).
@@ -390,6 +418,7 @@ impl LutTransformer {
             scores: Vec::new(),
             kbuf: Vec::new(),
             vbuf: Vec::new(),
+            head_x: Vec::new(),
             quant_h: Vec::new(),
             quant_f: Vec::new(),
             out_q: GemvOutput::new(),
@@ -418,8 +447,9 @@ impl LutTransformer {
         &self.pool
     }
 
-    /// Logits of the last [`step`](Self::step): one row per item, in item
-    /// order.
+    /// Logits of the last [`step`](Self::step) /
+    /// [`step_runs`](Self::step_runs): one row per item (resp. per run),
+    /// in submission order.
     pub fn logits(&self) -> &GemvOutput {
         &self.logits
     }
@@ -437,60 +467,112 @@ impl LutTransformer {
     /// pooled LUT-GEMV, attention over the slot's KV pane including the
     /// token just written) and leave per-item logits in
     /// [`logits`](Self::logits).
+    ///
+    /// This is the single-token convenience form of
+    /// [`step_runs`](Self::step_runs) (every item becomes a length-1
+    /// run), kept because decode-time callers think in tokens.
     pub fn step(&mut self, items: &[DecodeItem]) -> Result<()> {
+        let runs: Vec<DecodeRun> = items
+            .iter()
+            .map(|it| DecodeRun {
+                slot: it.slot,
+                tokens: std::slice::from_ref(&it.token),
+                start_pos: it.pos,
+            })
+            .collect();
+        self.step_runs(&runs)
+    }
+
+    /// Advance every run's slot by all of its tokens in one forward pass
+    /// — the chunked-prefill tentpole. Every projection of every layer
+    /// (and the head, at batch = runs) executes as **one**
+    /// `gemv_batch_into` at effective batch `Σ rows(run)`, so each weight
+    /// chunk's LUT is built once per iteration and read by every row,
+    /// instead of being rebuilt per token as sequential prefill does.
+    ///
+    /// Causality inside a chunk: all rows' K/V are projected and written
+    /// to the cache first, then row `i` (at position `p`) attends over
+    /// cached positions `0..=p` — reading the slot's history *plus* the
+    /// in-flight rows at earlier chunk positions, and never a later row.
+    /// Because each row's float math is sequential per row and every
+    /// GEMV row is independent of its batch neighbours, the result is
+    /// **bit-identical** to feeding the same tokens one at a time
+    /// (pinned by tests and `tests/prefill_chunking.rs`).
+    ///
+    /// Leaves one logits row per run (the run's last position) in
+    /// [`logits`](Self::logits), in run order.
+    pub fn step_runs(&mut self, runs: &[DecodeRun]) -> Result<()> {
         let h = self.spec.hidden;
-        let n = items.len();
-        for it in items {
-            if it.slot >= self.batch {
-                bail!("slot {} outside batch {}", it.slot, self.batch);
+        let mut rows = 0usize;
+        for r in runs {
+            if r.slot >= self.batch {
+                bail!("slot {} outside batch {}", r.slot, self.batch);
             }
-            if it.pos >= self.spec.max_context {
+            if r.tokens.is_empty() {
+                bail!("empty token run for slot {}", r.slot);
+            }
+            if r.start_pos + r.tokens.len() > self.spec.max_context {
                 bail!(
-                    "position {} outside the {}-token context window (the batcher \
+                    "positions {}..{} outside the {}-token context window (the batcher \
                      must finish the request with ContextFull first)",
-                    it.pos,
+                    r.start_pos,
+                    r.start_pos + r.tokens.len(),
                     self.spec.max_context
                 );
             }
+            rows += r.tokens.len();
         }
-        self.logits.reset(n, self.spec.vocab);
-        if n == 0 {
+        self.logits.reset(runs.len(), self.spec.vocab);
+        if runs.is_empty() {
             return Ok(());
         }
 
-        // Stateless embedding: history enters only through the KV cache.
-        self.x.resize(n * h, 0.0);
-        for (row, it) in self.x.chunks_exact_mut(h).zip(items) {
-            for (i, xi) in row.iter_mut().enumerate() {
-                *xi = embed(it.token, it.pos, i);
+        // Stateless embedding of every row: history enters only through
+        // the KV cache.
+        self.x.resize(rows * h, 0.0);
+        let mut row = 0usize;
+        for r in runs {
+            for (j, &tok) in r.tokens.iter().enumerate() {
+                let xr = &mut self.x[row * h..(row + 1) * h];
+                for (i, xi) in xr.iter_mut().enumerate() {
+                    *xi = embed(tok, r.start_pos + j, i);
+                }
+                row += 1;
             }
         }
 
         for l in 0..self.layers.len() {
-            self.attention_block(l, items);
+            self.attention_block(l, runs);
             self.ffn_block(l);
         }
 
-        // Output head.
-        rmsnorm_rows(&self.x, &mut self.xn, h);
+        // Output head: only each run's last row predicts a next token.
+        self.head_x.resize(runs.len() * h, 0.0);
+        let mut row = 0usize;
+        for (ri, r) in runs.iter().enumerate() {
+            row += r.tokens.len();
+            self.head_x[ri * h..(ri + 1) * h].copy_from_slice(&self.x[(row - 1) * h..row * h]);
+        }
+        rmsnorm_rows(&self.head_x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
         self.stats.head +=
             self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits);
         self.stats.steps += 1;
-        self.stats.tokens += n as u64;
+        self.stats.tokens += rows as u64;
         Ok(())
     }
 
-    /// Q/K/V projections, KV-cache append, attention over the cached
-    /// window, O projection, residual add.
-    fn attention_block(&mut self, l: usize, items: &[DecodeItem]) {
+    /// Q/K/V projections for all rows, ranged KV-cache append per run,
+    /// causal attention per row over its window, O projection, residual
+    /// add.
+    fn attention_block(&mut self, l: usize, runs: &[DecodeRun]) {
         let h = self.spec.hidden;
         let hd = self.spec.head_dim();
         let heads = self.spec.heads;
         let kvd = self.spec.kv_dim();
         let heads_per_kv = heads / self.spec.kv_heads;
         let inv_sqrt_hd = 1.0 / (hd as f32).sqrt();
-        let n = items.len();
+        let rows = self.x.len() / h;
 
         rmsnorm_rows(&self.x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
@@ -500,56 +582,77 @@ impl LutTransformer {
         ls.k += lw.wk.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_k);
         ls.v += lw.wv.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_v);
 
-        // Append this token's K/V, then attend over positions 0..=pos —
-        // the current token's K/V pass through storage precision too, so
-        // cached and fresh history are treated identically.
-        for (i, it) in items.iter().enumerate() {
-            self.kv.write(l, it.slot, it.pos, self.out_k.row(i), self.out_v.row(i));
+        // Append every row's K/V — one ranged write per run
+        // (`KvCache::write_run`: a single base/bounds computation for the
+        // whole chunk). Writing all rows before attending is safe: causal
+        // masking is the *read window* below, so row i never sees a later
+        // row's K/V; and the current rows' K/V pass through storage
+        // precision too, treating cached and fresh history identically.
+        let mut row0 = 0usize;
+        for r in runs {
+            let len = r.tokens.len();
+            self.kv.write_run(
+                l,
+                r.slot,
+                r.start_pos,
+                &self.out_k.as_slice()[row0 * kvd..(row0 + len) * kvd],
+                &self.out_v.as_slice()[row0 * kvd..(row0 + len) * kvd],
+            );
+            row0 += len;
         }
 
-        self.attn.resize(n * h, 0.0);
+        self.attn.resize(rows * h, 0.0);
         self.attn.fill(0.0);
         self.kbuf.resize(kvd, 0.0);
         self.vbuf.resize(kvd, 0.0);
-        for (i, it) in items.iter().enumerate() {
-            let ctx = it.pos + 1;
-            let q_row = self.out_q.row(i);
-            self.scores.resize(heads * ctx, 0.0);
-            // Pass 1: one K read per cached position, scores for all heads.
-            for t in 0..ctx {
-                self.kv.read_k(l, it.slot, t, &mut self.kbuf);
-                for hi in 0..heads {
-                    let kh = hi / heads_per_kv;
-                    let q_h = &q_row[hi * hd..(hi + 1) * hd];
-                    let k_h = &self.kbuf[kh * hd..(kh + 1) * hd];
-                    let dot = q_h.iter().zip(k_h).fold(0.0f32, |acc, (&a, &b)| acc + a * b);
-                    self.scores[hi * ctx + t] = dot * inv_sqrt_hd;
-                }
-            }
-            // Softmax per head (max-subtracted, sequential — deterministic).
-            for head_scores in self.scores.chunks_exact_mut(ctx) {
-                let max = head_scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
-                let mut sum = 0.0f32;
-                for s in head_scores.iter_mut() {
-                    *s = (*s - max).exp();
-                    sum += *s;
-                }
-                for s in head_scores.iter_mut() {
-                    *s /= sum;
-                }
-            }
-            // Pass 2: one V read per cached position, weighted accumulate.
-            let out_row = &mut self.attn[i * h..(i + 1) * h];
-            for t in 0..ctx {
-                self.kv.read_v(l, it.slot, t, &mut self.vbuf);
-                for hi in 0..heads {
-                    let kh = hi / heads_per_kv;
-                    let w = self.scores[hi * ctx + t];
-                    let v_h = &self.vbuf[kh * hd..(kh + 1) * hd];
-                    for (o, &v) in out_row[hi * hd..(hi + 1) * hd].iter_mut().zip(v_h) {
-                        *o += w * v;
+        let mut i = 0usize;
+        for r in runs {
+            for j in 0..r.tokens.len() {
+                let pos = r.start_pos + j;
+                let ctx = pos + 1;
+                let q_row = self.out_q.row(i);
+                self.scores.resize(heads * ctx, 0.0);
+                // Pass 1: one K read per cached position, scores for all
+                // heads.
+                for t in 0..ctx {
+                    self.kv.read_k(l, r.slot, t, &mut self.kbuf);
+                    for hi in 0..heads {
+                        let kh = hi / heads_per_kv;
+                        let q_h = &q_row[hi * hd..(hi + 1) * hd];
+                        let k_h = &self.kbuf[kh * hd..(kh + 1) * hd];
+                        let dot =
+                            q_h.iter().zip(k_h).fold(0.0f32, |acc, (&a, &b)| acc + a * b);
+                        self.scores[hi * ctx + t] = dot * inv_sqrt_hd;
                     }
                 }
+                // Softmax per head (max-subtracted, sequential —
+                // deterministic).
+                for head_scores in self.scores.chunks_exact_mut(ctx) {
+                    let max = head_scores.iter().fold(f32::NEG_INFINITY, |m, &s| m.max(s));
+                    let mut sum = 0.0f32;
+                    for s in head_scores.iter_mut() {
+                        *s = (*s - max).exp();
+                        sum += *s;
+                    }
+                    for s in head_scores.iter_mut() {
+                        *s /= sum;
+                    }
+                }
+                // Pass 2: one V read per cached position, weighted
+                // accumulate.
+                let out_row = &mut self.attn[i * h..(i + 1) * h];
+                for t in 0..ctx {
+                    self.kv.read_v(l, r.slot, t, &mut self.vbuf);
+                    for hi in 0..heads {
+                        let kh = hi / heads_per_kv;
+                        let w = self.scores[hi * ctx + t];
+                        let v_h = &self.vbuf[kh * hd..(kh + 1) * hd];
+                        for (o, &v) in out_row[hi * hd..(hi + 1) * hd].iter_mut().zip(v_h) {
+                            *o += w * v;
+                        }
+                    }
+                }
+                i += 1;
             }
         }
 
@@ -715,5 +818,117 @@ mod tests {
             let m = LutTransformer::random(spec, 7, 4, pool1()).unwrap();
             assert_eq!(m.kv().data_bytes(), kv.batch_bytes(&cfg, cfg.max_context, 4));
         }
+    }
+
+    #[test]
+    fn chunked_run_bit_identical_to_sequential_steps() {
+        // The step_runs bit-identity contract at the model layer: feeding
+        // a prompt as one chunk must leave the exact KV state and final
+        // logits that token-at-a-time feeding produces — for both KV
+        // precisions (they round differently, so each must match its own
+        // sequential oracle).
+        for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            let spec = DecodeSpec::tiny(2, kv);
+            let mut seq = LutTransformer::random(spec.clone(), 7, 2, pool1()).unwrap();
+            let mut chk = LutTransformer::random(spec, 7, 2, WorkerPool::shared(2)).unwrap();
+            let prompt = [3i32, 50, 7, 21, 9];
+            for (p, &t) in prompt.iter().enumerate() {
+                seq.step(&items(&[(0, t, p)])).unwrap();
+            }
+            chk.step_runs(&[DecodeRun { slot: 0, tokens: &prompt, start_pos: 0 }]).unwrap();
+            assert_eq!(
+                seq.logits().row(0),
+                chk.logits().row(0),
+                "{kv:?}: chunked logits diverged at the prompt's last position"
+            );
+            // The cached history must be identical too: decode a few
+            // tokens from each and compare the streams.
+            let mut a = vec![5i32];
+            let mut b = vec![5i32];
+            for p in prompt.len()..prompt.len() + 4 {
+                seq.step(&items(&[(0, a[0], p)])).unwrap();
+                chk.step(&items(&[(0, b[0], p)])).unwrap();
+                a = vec![crate::coordinator::argmax_logits(seq.logits().row(0))];
+                b = vec![crate::coordinator::argmax_logits(chk.logits().row(0))];
+                assert_eq!(a, b, "{kv:?}: decode diverged after chunked prefill at pos {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_length_runs_share_one_iteration() {
+        // Slot 0 prefills 4 tokens while slot 1 decodes 1 — one forward
+        // pass, 5 rows, 2 logits rows. Both must equal their isolated
+        // sequential trajectories.
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::q8());
+        let mut iso0 = LutTransformer::random(spec.clone(), 7, 1, pool1()).unwrap();
+        let mut iso1 = LutTransformer::random(spec.clone(), 7, 1, pool1()).unwrap();
+        let mut mix = LutTransformer::random(spec, 7, 2, pool1()).unwrap();
+
+        // Warm slot 1 with one token of history everywhere.
+        iso1.step(&items(&[(0, 40, 0)])).unwrap();
+        mix.step(&items(&[(1, 40, 0)])).unwrap();
+
+        let p0 = [3i32, 9, 12, 6];
+        for (p, &t) in p0.iter().enumerate() {
+            iso0.step(&items(&[(0, t, p)])).unwrap();
+        }
+        let want0 = iso0.logits().row(0).to_vec();
+        iso1.step(&items(&[(0, 8, 1)])).unwrap();
+        let want1 = iso1.logits().row(0).to_vec();
+
+        mix.step_runs(&[
+            DecodeRun { slot: 0, tokens: &p0, start_pos: 0 },
+            DecodeRun { slot: 1, tokens: &[8], start_pos: 1 },
+        ])
+        .unwrap();
+        assert_eq!(mix.logits().batch(), 2, "one logits row per run");
+        assert_eq!(mix.logits().row(0), want0.as_slice(), "prefill run diverged");
+        assert_eq!(mix.logits().row(1), want1.as_slice(), "co-scheduled decode row diverged");
+        assert_eq!(mix.stats.tokens, 1 + 5, "5 rows this iteration plus the warm-up token");
+    }
+
+    #[test]
+    fn chunked_prefill_amortizes_lut_builds_exactly() {
+        // LUT builds per GEMV call depend only on the weight matrix, not
+        // on the batch — so a 16-token prompt fed as one run must build
+        // exactly 1/16th the LUTs of sixteen single-token steps, while
+        // reading the same per-row LUT traffic.
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let prompt: Vec<i32> = (1..=16).collect();
+        let mut seq = LutTransformer::random(spec.clone(), 7, 1, pool1()).unwrap();
+        for (p, &t) in prompt.iter().enumerate() {
+            seq.step(&items(&[(0, t, p)])).unwrap();
+        }
+        let mut chk = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+        chk.step_runs(&[DecodeRun { slot: 0, tokens: &prompt, start_pos: 0 }]).unwrap();
+        let layer_luts = |m: &LutTransformer| -> u64 {
+            m.stats.layers.iter().map(|l| l.total().luts_built).sum()
+        };
+        assert_eq!(layer_luts(&seq), 16 * layer_luts(&chk), "LUT builds did not amortize 16x");
+        assert_eq!(seq.stats.head.luts_built, 16 * chk.stats.head.luts_built);
+        // Same LUT *reads* per row in the layers: 16 rows either way.
+        let layer_reads = |m: &LutTransformer| -> u64 {
+            m.stats.layers.iter().map(|l| l.total().lut_reads).sum()
+        };
+        assert_eq!(layer_reads(&seq), layer_reads(&chk), "per-row LUT traffic changed");
+    }
+
+    #[test]
+    fn run_crossing_the_window_is_an_error_not_a_panic() {
+        let spec = DecodeSpec::tiny(1, KvCacheSpec::fp16());
+        let ctx = spec.max_context;
+        let mut m = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+        let long: Vec<i32> = (0..ctx as i32 + 1).collect();
+        assert!(
+            m.step_runs(&[DecodeRun { slot: 0, tokens: &long, start_pos: 0 }]).is_err(),
+            "run longer than the window must be rejected before any KV write"
+        );
+        assert!(m
+            .step_runs(&[DecodeRun { slot: 0, tokens: &[1, 2], start_pos: ctx - 1 }])
+            .is_err());
+        assert!(m.step_runs(&[DecodeRun { slot: 0, tokens: &[], start_pos: 0 }]).is_err());
+        // The model still serves after rejected calls.
+        m.step_runs(&[DecodeRun { slot: 0, tokens: &long[..ctx], start_pos: 0 }]).unwrap();
     }
 }

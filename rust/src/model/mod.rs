@@ -22,7 +22,9 @@
 pub mod decode;
 pub mod kv;
 
-pub use decode::{DecodeItem, DecodeSpec, DecodeStats, LayerGemvStats, LayerSpec, LutTransformer};
+pub use decode::{
+    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, LayerGemvStats, LayerSpec, LutTransformer,
+};
 pub use kv::{KvCache, KvCacheSpec};
 
 use crate::quant::QuantLevel;

@@ -40,6 +40,13 @@ pub struct ManifestConfig {
     /// `sail serve --engine lut` builds the serving pool from it (unless
     /// `--config` overrides).
     pub placement: NumaPolicy,
+    /// Most prompt tokens one serving slot consumes per batcher iteration
+    /// (`prefill_chunk` field; absent ⇒ 16). Chunked prefill is
+    /// bit-identical to token-at-a-time at every value, so this is purely
+    /// a latency/throughput knob; `sail serve --engine lut` honours it
+    /// (the `SAIL_PREFILL_CHUNK` env override wins, `--config` replaces
+    /// it).
+    pub prefill_chunk: usize,
 }
 
 /// Parsed manifest.
@@ -110,6 +117,13 @@ impl Manifest {
                 NumaPolicy::parse(s).map_err(|e| anyhow!("manifest placement: {e}"))?
             }
         };
+        let prefill_chunk = match cfg.get("prefill_chunk") {
+            None => 16,
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => n,
+                _ => bail!("manifest prefill_chunk must be an integer ≥ 1"),
+            },
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -125,6 +139,7 @@ impl Manifest {
                 layer_wbits,
                 kv_bits,
                 placement,
+                prefill_chunk,
             },
             batch: j
                 .get("batch")
@@ -165,6 +180,7 @@ impl Manifest {
     ///         layer_wbits: Some(vec![8, 4]), // mixed per-layer precision
     ///         kv_bits: 8,
     ///         placement: NumaPolicy::Auto,
+    ///         prefill_chunk: 16,
     ///     },
     ///     batch: 2,
     ///     weight_order: vec![],
@@ -259,6 +275,7 @@ mod tests {
             layer_wbits: None,
             kv_bits: 16,
             placement: NumaPolicy::Auto,
+            prefill_chunk: 16,
         }
     }
 
@@ -342,6 +359,39 @@ mod tests {
         );
         std::fs::write(dir.join("manifest.json"), bad).unwrap();
         assert!(Manifest::load(&dir).is_err(), "non-integer entry must not be dropped");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_prefill_chunk_field_roundtrip() {
+        let dir =
+            std::env::temp_dir().join(format!("sail-manifest-chunk-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000CHUNK},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        for (field, want) in [
+            ("", Some(16usize)), // absent ⇒ the serving default
+            (r#", "prefill_chunk": 1"#, Some(1)),
+            (r#", "prefill_chunk": 32"#, Some(32)),
+            (r#", "prefill_chunk": 0"#, None),
+            (r#", "prefill_chunk": "wide""#, None),
+        ] {
+            std::fs::write(dir.join("manifest.json"), base.replace("CHUNK", field)).unwrap();
+            match want {
+                Some(n) => {
+                    assert_eq!(Manifest::load(&dir).unwrap().config.prefill_chunk, n, "{field}")
+                }
+                None => assert!(
+                    Manifest::load(&dir).is_err(),
+                    "malformed prefill_chunk {field} must not fall back to the default"
+                ),
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

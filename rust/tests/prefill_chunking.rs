@@ -1,0 +1,209 @@
+//! Conformance suite for chunked multi-token prefill on the LUT serving
+//! path (the PR-5 tentpole):
+//!
+//! - token streams are **bit-identical across prefill chunk sizes
+//!   1/4/16/64**, at pool widths 1/2/8, for fp16- and q8-backed KV, under
+//!   NUMA placement off and auto — chunking, like threading and
+//!   placement, moves work, never tokens;
+//! - mixed prefill+decode iterations (continuous batching with a
+//!   per-iteration row budget) equal isolated one-request runs;
+//! - admission semantics survive chunking: over-long prompts still finish
+//!   `ContextFull` with zero tokens *before* any out-of-window KV write
+//!   (the real cache would panic on one), empty prompts still answer
+//!   `EmptyPrompt`, exact-window prompts still yield their one token;
+//! - TTFT sanity: iterations-to-first-token is monotone non-increasing in
+//!   the chunk size;
+//! - the amortization is real: layer LUT builds fall exactly 1/C with
+//!   chunk size C (LUT builds per GEMV call don't depend on rows).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use sail::coordinator::{
+    Batcher, BatcherConfig, FinishReason, MockEngine, Request, TransformerServeEngine,
+};
+use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::runtime::{NumaPolicy, WorkerPool};
+
+/// 2 decoder layers at mixed precision, hidden 32, GQA, 24-token window.
+fn spec(kv: KvCacheSpec) -> DecodeSpec {
+    DecodeSpec::tiny(2, kv)
+}
+
+fn engine(
+    kv: KvCacheSpec,
+    batch: usize,
+    width: usize,
+    policy: &NumaPolicy,
+) -> TransformerServeEngine {
+    let pool = Arc::new(WorkerPool::with_policy(width, policy));
+    TransformerServeEngine::random(spec(kv), 9, batch, pool).unwrap()
+}
+
+fn config(chunk: usize, rows: usize) -> BatcherConfig {
+    // Explicit chunk/rows so every cell of the matrix is what it says it
+    // is, independent of the SAIL_PREFILL_CHUNK CI leg.
+    BatcherConfig { prefill_chunk: chunk, iteration_rows: rows, ..BatcherConfig::default() }
+}
+
+/// Prompt lengths straddle every tested chunk size (1/4/16/64 against a
+/// 24-token window); budgets keep every request inside the window.
+fn requests() -> Vec<Request> {
+    let lens = [1usize, 3, 7, 12, 17];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &plen)| {
+            let prompt: Vec<i32> = (0..plen).map(|p| 2 + 5 * i as i32 + p as i32).collect();
+            Request::new(i as u64, prompt, 2 + i % 3)
+        })
+        .collect()
+}
+
+fn run_tokens(
+    kv: KvCacheSpec,
+    batch: usize,
+    width: usize,
+    policy: &NumaPolicy,
+    chunk: usize,
+    reqs: &[Request],
+) -> HashMap<u64, Vec<i32>> {
+    let mut b = Batcher::new(engine(kv, batch, width, policy), config(chunk, usize::MAX));
+    for r in reqs {
+        b.submit(r.clone());
+    }
+    let done = b.run_to_completion().unwrap();
+    assert_eq!(done.len(), reqs.len());
+    done.into_iter()
+        .inspect(|r| assert!(!r.tokens.is_empty(), "request {} got no tokens", r.id))
+        .map(|r| (r.id, r.tokens))
+        .collect()
+}
+
+#[test]
+fn token_streams_bit_identical_across_chunk_sizes_widths_kv_and_placement() {
+    let reqs = requests();
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        let base = run_tokens(kv, 3, 1, &NumaPolicy::Off, 1, &reqs);
+        for policy in [NumaPolicy::Off, NumaPolicy::Auto] {
+            for width in [1usize, 2, 8] {
+                for chunk in [1usize, 4, 16, 64] {
+                    assert_eq!(
+                        run_tokens(kv, 3, width, &policy, chunk, &reqs),
+                        base,
+                        "{kv:?}: chunk {chunk} width {width} policy {policy} diverged \
+                         from chunk-1 width-1"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_prefill_decode_iterations_match_isolated_runs() {
+    // Two long prompts and two short ones co-scheduled on 3 slots with a
+    // tight per-iteration row budget: prefill chunks and single-token
+    // decode rows share iterations, and every stream still equals its
+    // isolated chunk-1 single-slot run.
+    let reqs = requests();
+    for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+        let mut isolated = HashMap::new();
+        for r in &reqs {
+            isolated.extend(run_tokens(kv, 1, 1, &NumaPolicy::Off, 1, std::slice::from_ref(r)));
+        }
+        let mut b = Batcher::new(engine(kv, 3, 2, &NumaPolicy::Off), config(8, 10));
+        for r in &reqs {
+            b.submit(r.clone());
+        }
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), reqs.len());
+        for r in done {
+            assert_eq!(
+                r.tokens, isolated[&r.id],
+                "{kv:?}: request {} diverged under mixed chunked batching",
+                r.id
+            );
+        }
+    }
+}
+
+#[test]
+fn admission_semantics_survive_chunking() {
+    // The KV cache asserts on any out-of-window write, so completing at
+    // all proves the chunked prefill path never touched position
+    // `max_context`.
+    let ctx = spec(KvCacheSpec::q8()).max_context;
+    for chunk in [4usize, 16, 64] {
+        let mut b = Batcher::new(
+            engine(KvCacheSpec::q8(), 2, 2, &NumaPolicy::Off),
+            config(chunk, usize::MAX),
+        );
+        b.submit(Request::new(0, (0..ctx as i32 + 6).collect(), 5)); // over-long
+        b.submit(Request::new(1, vec![], 4)); // empty
+        b.submit(Request::new(2, vec![3, 4, 5], 3)); // ordinary
+        b.submit(Request::new(3, (0..ctx as i32).collect(), 5)); // exact fit
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4, "chunk {chunk}");
+        let by_id: HashMap<u64, _> = done.into_iter().map(|r| (r.id, r)).collect();
+        assert_eq!(by_id[&0].finish, FinishReason::ContextFull, "chunk {chunk}");
+        assert!(by_id[&0].tokens.is_empty(), "chunk {chunk}: over-long prompt sampled logits");
+        assert_eq!(by_id[&1].finish, FinishReason::EmptyPrompt, "chunk {chunk}");
+        assert!(by_id[&1].tokens.is_empty());
+        assert_eq!(by_id[&2].finish, FinishReason::MaxTokens, "chunk {chunk}");
+        assert_eq!(by_id[&2].tokens.len(), 3);
+        assert_eq!(by_id[&3].finish, FinishReason::ContextFull, "chunk {chunk}");
+        assert_eq!(
+            by_id[&3].tokens.len(),
+            1,
+            "chunk {chunk}: the exact-window prompt's last position still yields its token"
+        );
+    }
+}
+
+#[test]
+fn ttft_iterations_monotone_non_increasing_in_chunk() {
+    // Wall-clock TTFT is noisy in CI; iterations-to-first-token is its
+    // exact deterministic skeleton. With a single 20-token prompt and a
+    // 1-token budget the whole run is prefill: ceil(20 / C) iterations.
+    let mut prev = u64::MAX;
+    for chunk in [1usize, 4, 16, 64] {
+        let mut b = Batcher::new(MockEngine::new(1, 97, 64), config(chunk, usize::MAX));
+        b.submit(Request::new(0, (1..=20).collect(), 1));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done[0].tokens.len(), 1);
+        assert_eq!(b.iterations(), 20u64.div_ceil(chunk.min(20) as u64), "chunk {chunk}");
+        assert!(
+            b.iterations() <= prev,
+            "chunk {chunk}: TTFT iterations regressed ({} > {prev})",
+            b.iterations()
+        );
+        prev = b.iterations();
+    }
+}
+
+#[test]
+fn lut_builds_amortize_with_chunk_size() {
+    // The acceptance metric behind the bench matrix: serving the same
+    // 16-token prompt with chunk C must build exactly 1/C of the layer
+    // LUTs that chunk-1 builds (LUT construction per GEMV call is
+    // row-count-independent; each chunk's LUT is reused by every row).
+    let prompt: Vec<i32> = (1..=16).collect();
+    let luts_with_chunk = |chunk: usize| -> (u64, Vec<i32>) {
+        let mut b = Batcher::new(
+            engine(KvCacheSpec::q8(), 1, 1, &NumaPolicy::Off),
+            config(chunk, usize::MAX),
+        );
+        b.submit(Request::new(0, prompt.clone(), 1));
+        let done = b.run_to_completion().unwrap();
+        let stats = b.engine().stats();
+        let layer_luts: u64 = stats.layers.iter().map(|l| l.total().luts_built).sum();
+        (layer_luts, done.into_iter().next().unwrap().tokens)
+    };
+    let (luts1, toks1) = luts_with_chunk(1);
+    let (luts4, toks4) = luts_with_chunk(4);
+    let (luts16, toks16) = luts_with_chunk(16);
+    assert_eq!(toks1, toks4);
+    assert_eq!(toks1, toks16);
+    assert_eq!(luts1, 4 * luts4, "chunk 4 must build exactly 1/4 of the layer LUTs");
+    assert_eq!(luts1, 16 * luts16, "chunk 16 must build exactly 1/16 of the layer LUTs");
+}
