@@ -42,7 +42,7 @@ use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
 use sail::model::{DecodeItem, DecodeSpec, KvCacheSpec, LayerSpec, LutTransformer, ModelConfig};
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
-use sail::runtime::{NumaPolicy, Topology, WorkerPool};
+use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, Topology, WorkerPool};
 use sail::sim::SailPerfModel;
 use sail::typeconv;
 use sail::util::bench::{time_fn, time_throughput, BenchOpts, BenchResult};
@@ -123,7 +123,7 @@ fn main() {
                 &format!("LutGemvEngine 1024x1024 b{batch} {label}{suffix} (MACs/s)"),
                 BenchOpts { batch: 1, ..opts },
                 batch as f64 * mac_count,
-                || eng.gemv_batch_into(&xs, run_pool, &mut out),
+                || eng.gemv_batch_into(&xs, run_pool, &mut out).unwrap(),
             );
             variant_macs.insert((batch, label), r.items_per_sec());
             results.push(r);
@@ -139,7 +139,7 @@ fn main() {
     eng.force_scalar_accum = false;
     let (lane_out, lane_stats) = eng.gemv_batch(&xs8);
     let mut pooled_out = GemvOutput::new();
-    let pooled_stats = eng.gemv_batch_into(&xs8, &pool, &mut pooled_out);
+    let pooled_stats = eng.gemv_batch_into(&xs8, &pool, &mut pooled_out).unwrap();
     let mut bit_exact = lane_out == scalar_out && lane_stats == scalar_stats;
     bit_exact &= pooled_out == lane_out && pooled_stats == lane_stats;
     let want = reference_gemv(eng.weights(), &qx);
@@ -460,6 +460,87 @@ fn main() {
     let prefill_bit_exact = prefill_streams.iter().all(|s| *s == prefill_streams[0]);
     assert!(prefill_bit_exact, "chunked prefill decode streams diverged across chunk sizes");
 
+    // --- fault tolerance: fault-free overhead + recovery latency (PR-6) -----
+    // Two numbers the robustness work must pin: (1) what the armed-but-
+    // silent fault machinery costs on the fault-free hot path (the hooks
+    // are a relaxed atomic load when unarmed, a counter bump when armed —
+    // both must stay within noise of the disarmed path), and (2) the
+    // end-to-end cost of one worker death + respawn + lost-item re-run,
+    // inside a single GEMV dispatch (1024×1024 Q4, batch 8).
+    let fault_pool = WorkerPool::shared(threads.max(2));
+    let mut fout = GemvOutput::new();
+    let (fwant, fwant_stats) = eng.gemv_batch(&xs8);
+    let mut time_gemv = |pool: &WorkerPool, iters: usize| -> f64 {
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            let stats = eng.gemv_batch_into(&xs8, pool, &mut fout).unwrap();
+            assert_eq!(stats, fwant_stats);
+        }
+        t0.elapsed().as_secs_f64() / iters as f64 * 1e9
+    };
+    time_gemv(&fault_pool, 5); // warm the pool + arena
+    let ns_disarmed = time_gemv(&fault_pool, 30);
+    // Armed but silent: the plan's only tick is unreachable, so every
+    // hook pays its bookkeeping and no fault ever fires.
+    fault_pool.arm_faults(Arc::new(FaultPlan::new(1).with(FaultKind::SlowTile, u64::MAX)));
+    let ns_armed_silent = time_gemv(&fault_pool, 30);
+    fault_pool.disarm_faults();
+    // Recovery: every timed dispatch starts with a fresh one-tick
+    // worker-panic plan, so each pays one worker death + heal + re-run.
+    fault_pool.set_respawn_budget(1_000);
+    let recovery_rounds = 20u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..recovery_rounds {
+        fault_pool.arm_faults(Arc::new(FaultPlan::new(i).with(FaultKind::WorkerPanic, 1)));
+        let stats = eng.gemv_batch_into(&xs8, &fault_pool, &mut fout).unwrap();
+        fault_pool.disarm_faults();
+        assert_eq!((&fout, stats), (&fwant, fwant_stats), "recovered dispatch drifted (round {i})");
+    }
+    let ns_recovery = t0.elapsed().as_secs_f64() / recovery_rounds as f64 * 1e9;
+    let fault_overhead_ratio = ns_armed_silent / ns_disarmed;
+    let recovery_ratio = ns_recovery / ns_disarmed;
+    let respawned = fault_pool.respawned_workers();
+    println!("\n== fault tolerance ==");
+    println!(
+        "gemv b8 x{}T: disarmed {:.0} ns, armed-silent {:.0} ns ({fault_overhead_ratio:.3}x), \
+         worker-death recovery {:.0} ns ({recovery_ratio:.2}x), {respawned} respawns, \
+         degraded: {}",
+        fault_pool.threads(),
+        ns_disarmed,
+        ns_armed_silent,
+        ns_recovery,
+        fault_pool.degraded()
+    );
+    assert!(!fault_pool.degraded(), "recovery bench must heal within budget, not degrade");
+    let faults_json = {
+        let mut o = BTreeMap::new();
+        o.insert("bench".to_string(), Json::Str("perf_faults".to_string()));
+        o.insert("threads".to_string(), Json::Num(fault_pool.threads() as f64));
+        o.insert("gemv_ns_disarmed".to_string(), Json::Num(ns_disarmed));
+        o.insert("gemv_ns_armed_silent".to_string(), Json::Num(ns_armed_silent));
+        o.insert("fault_free_overhead_ratio".to_string(), Json::Num(fault_overhead_ratio));
+        o.insert("gemv_ns_worker_death_recovery".to_string(), Json::Num(ns_recovery));
+        o.insert("recovery_overhead_ratio".to_string(), Json::Num(recovery_ratio));
+        o.insert("recovery_rounds".to_string(), Json::Num(recovery_rounds as f64));
+        o.insert("respawned_workers".to_string(), Json::Num(respawned as f64));
+        o.insert("degraded".to_string(), Json::Bool(fault_pool.degraded()));
+        o.insert("recovery_bit_exact".to_string(), Json::Bool(true));
+        o.insert(
+            "faults_env".to_string(),
+            Json::Str(std::env::var("SAIL_FAULTS").unwrap_or_else(|_| "<unset>".to_string())),
+        );
+        Json::Obj(o)
+    };
+    let faults_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_faults.json");
+    faults_json
+        .write_atomic(std::path::Path::new(faults_path))
+        .expect("writing BENCH_faults.json");
+    let faults_root = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_faults.json");
+    faults_json
+        .write_atomic(std::path::Path::new(faults_root))
+        .expect("writing repo-root BENCH_faults.json");
+    println!("persisted fault metrics to {faults_path} (+ copy at {faults_root})");
+
     println!("\n== perf_hotpath ==");
     for r in &results {
         println!("{}", r.report());
@@ -547,16 +628,21 @@ fn main() {
         Json::Str(std::env::var("SAIL_PREFILL_CHUNK").unwrap_or_else(|_| "<unset>".to_string())),
     );
     // Persisted next to Cargo.toml (the CI artifact) and at the repo root
-    // (the perf trajectory's pickup point).
+    // (the perf trajectory's pickup point) — atomically, so an aborted
+    // bench run can never leave a torn artifact behind.
     let rendered = render_json(&results, threads, extras);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json");
-    std::fs::write(path, &rendered).expect("writing BENCH_hotpath.json");
+    rendered
+        .write_atomic(std::path::Path::new(path))
+        .expect("writing BENCH_hotpath.json");
     let root_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
-    std::fs::write(root_path, &rendered).expect("writing repo-root BENCH_hotpath.json");
+    rendered
+        .write_atomic(std::path::Path::new(root_path))
+        .expect("writing repo-root BENCH_hotpath.json");
     println!("persisted {} results to {path} (+ copy at {root_path})", results.len());
 }
 
-fn render_json(results: &[BenchResult], threads: usize, extras: BTreeMap<String, Json>) -> String {
+fn render_json(results: &[BenchResult], threads: usize, extras: BTreeMap<String, Json>) -> Json {
     let mut root = extras;
     root.insert("bench".to_string(), Json::Str("perf_hotpath".to_string()));
     root.insert("threads".to_string(), Json::Num(threads as f64));
@@ -576,5 +662,5 @@ fn render_json(results: &[BenchResult], threads: usize, extras: BTreeMap<String,
                 .collect(),
         ),
     );
-    Json::Obj(root).dump()
+    Json::Obj(root)
 }

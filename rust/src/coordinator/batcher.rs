@@ -30,7 +30,18 @@
 //!   row budget),
 //! - outputs are identical to running each request alone (isolation), and
 //!   **bit-identical across prefill chunk sizes** — `prefill_chunk: 1`
-//!   reproduces the pre-chunking token-at-a-time batcher exactly.
+//!   reproduces the pre-chunking token-at-a-time batcher exactly,
+//! - **fault isolation**: a failed batched forward is retried run-by-run;
+//!   only requests that fail in isolation finish (typed,
+//!   `FinishReason::EngineFault`, tokens-so-far), every other slot's
+//!   stream is bit-identical to the fault-free run, and no engine error
+//!   or panic escapes [`Batcher::run_iteration`],
+//! - per-request TTFT/total-latency budgets finish expired requests with
+//!   `DeadlineExceeded` (tokens-so-far), swept at admission and at every
+//!   iteration start,
+//! - the admission queue is bounded ([`BatcherConfig::queue_capacity`]):
+//!   submissions past the bound are shed with a typed zero-token
+//!   `Shed` response instead of growing memory without limit.
 
 use std::time::{Duration, Instant};
 
@@ -40,23 +51,33 @@ use super::engine::{DecodeEngine, SlotRun};
 use super::policy::{AdmissionPolicy, AdmissionQueue};
 use super::request::{FinishReason, Request, Response};
 
+/// Strict parse of a `SAIL_PREFILL_CHUNK` value: an integer ≥ 1, or a
+/// typed error naming what was wrong. Pure so the malformed forms are
+/// testable without mutating the process environment.
+pub fn parse_prefill_chunk(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(format!("invalid SAIL_PREFILL_CHUNK value '{v}' (want an integer ≥ 1)")),
+    }
+}
+
 /// The `SAIL_PREFILL_CHUNK` environment override: the per-slot prefill
 /// chunk [`BatcherConfig::default`] resolves (absent ⇒ 1, the
 /// token-at-a-time regime). The CI matrix drives the whole test suite
 /// through it, the same way `SAIL_POOL_THREADS`/`SAIL_NUMA` sweep pool
 /// width and placement.
 ///
-/// # Panics
-///
-/// On a malformed value — a misconfigured chunk must be loud, not a
-/// silent fall-back to unchunked prefill (same contract as `SAIL_NUMA`).
+/// A malformed value is reported on stderr and ignored (⇒ the chunk-1
+/// default) — one bad environment variable must not abort a serving
+/// process. Strict callers use [`parse_prefill_chunk`] directly.
 pub fn prefill_chunk_from_env() -> Option<usize> {
-    match std::env::var("SAIL_PREFILL_CHUNK") {
-        Ok(v) => match v.trim().parse::<usize>() {
-            Ok(n) if n >= 1 => Some(n),
-            _ => panic!("invalid SAIL_PREFILL_CHUNK value '{v}' (want an integer ≥ 1)"),
-        },
-        Err(_) => None,
+    let v = std::env::var("SAIL_PREFILL_CHUNK").ok()?;
+    match parse_prefill_chunk(&v) {
+        Ok(n) => Some(n),
+        Err(e) => {
+            eprintln!("sail: {e}; falling back to the default prefill chunk");
+            None
+        }
     }
 }
 
@@ -84,6 +105,11 @@ pub struct BatcherConfig {
     /// a burst of long prompts shares the iteration with in-flight
     /// decodes instead of monopolizing it. `usize::MAX` = uncapped.
     pub iteration_rows: usize,
+    /// Most requests the admission queue may hold. A submission past the
+    /// bound is *shed*: [`Batcher::submit`] returns a zero-token
+    /// [`FinishReason::Shed`] response instead of growing the queue
+    /// without bound. `usize::MAX` = unbounded (the historical default).
+    pub queue_capacity: usize,
 }
 
 impl Default for BatcherConfig {
@@ -93,6 +119,7 @@ impl Default for BatcherConfig {
             policy: AdmissionPolicy::Fifo,
             prefill_chunk: prefill_chunk_from_env().unwrap_or(1),
             iteration_rows: usize::MAX,
+            queue_capacity: usize::MAX,
         }
     }
 }
@@ -109,6 +136,16 @@ struct Slot {
     next_input: i32,
     generated: Vec<i32>,
     first_token_at: Option<Instant>,
+}
+
+/// True when `req`'s total-latency budget — or, while no token has been
+/// produced yet, its TTFT budget — has expired.
+fn deadline_expired(req: &Request, has_first_token: bool) -> bool {
+    let elapsed = req.arrival.elapsed();
+    if req.deadline.is_some_and(|d| elapsed >= d) {
+        return true;
+    }
+    !has_first_token && req.ttft_deadline.is_some_and(|d| elapsed >= d)
 }
 
 /// The iteration-level batcher.
@@ -145,8 +182,23 @@ impl<E: DecodeEngine> Batcher<E> {
 
     /// Enqueue a request (admitted into a free slot, FIFO by default, at
     /// the start of a later iteration).
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push(req, self.iterations);
+    ///
+    /// Returns `None` when the request was queued. When the bounded
+    /// admission queue ([`BatcherConfig::queue_capacity`]) is full the
+    /// request is **shed** instead: the returned zero-token
+    /// [`FinishReason::Shed`] response answers it immediately, and the
+    /// queue is left untouched.
+    pub fn submit(&mut self, req: Request) -> Option<Response> {
+        match self.queue.push_bounded(req, self.iterations, self.cfg.queue_capacity) {
+            Ok(()) => None,
+            Err(req) => Some(Response {
+                id: req.id,
+                tokens: Vec::new(),
+                ttft: Duration::default(),
+                latency: Instant::now() - req.arrival,
+                finish: FinishReason::Shed,
+            }),
+        }
     }
 
     /// Requests waiting in the admission queue.
@@ -182,6 +234,19 @@ impl<E: DecodeEngine> Batcher<E> {
                 let Some(req) = self.queue.pop(self.iterations) else {
                     return Ok(());
                 };
+                if deadline_expired(&req, false) {
+                    // The budget ran out while the request was queued: it
+                    // finishes here, before consuming a slot or any
+                    // engine work.
+                    done.push(Response {
+                        id: req.id,
+                        tokens: Vec::new(),
+                        ttft: Duration::default(),
+                        latency: Instant::now() - req.arrival,
+                        finish: FinishReason::DeadlineExceeded,
+                    });
+                    continue;
+                }
                 if req.prompt.is_empty() {
                     done.push(Response {
                         id: req.id,
@@ -213,6 +278,23 @@ impl<E: DecodeEngine> Batcher<E> {
     pub fn run_iteration(&mut self) -> Result<Vec<Response>> {
         let mut done = Vec::new();
         self.admit(&mut done)?;
+        // Deadline sweep: an active request whose TTFT or total-latency
+        // budget expired finishes now, with the tokens it generated so
+        // far, before any further engine work is spent on it.
+        for slot in &mut self.slots {
+            if slot.as_ref().is_some_and(|sl| {
+                deadline_expired(&sl.req, sl.first_token_at.is_some())
+            }) {
+                let sl = slot.take().unwrap();
+                done.push(Response {
+                    id: sl.req.id,
+                    tokens: sl.generated,
+                    ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
+                    latency: Instant::now() - sl.req.arrival,
+                    finish: FinishReason::DeadlineExceeded,
+                });
+            }
+        }
         let active = self.active_slots();
         if active == 0 {
             return Ok(done);
@@ -252,13 +334,52 @@ impl<E: DecodeEngine> Batcher<E> {
                 });
             }
         }
-        let next = self.engine.step_runs(&runs)?;
+        // Fault isolation: a failed batched forward must not take down
+        // the batch. Each run is retried alone — solo re-execution is
+        // bit-identical by the engine's isolation contract, so healthy
+        // slots' token streams are exactly what the fault-free batch
+        // would have produced. Only runs that fail *in isolation* finish
+        // with [`FinishReason::EngineFault`]; no engine error (or panic)
+        // escapes this method through the forward path.
+        let (next, faulted) = match self.engine.step_runs(&runs) {
+            Ok(next) => (next, Vec::new()),
+            Err(_) => {
+                let mut next = Vec::with_capacity(runs.len());
+                let mut faulted: Vec<usize> = Vec::new();
+                for r in &runs {
+                    match self.engine.step_runs(std::slice::from_ref(r)) {
+                        Ok(one) if !one.is_empty() => next.push(one[0]),
+                        _ => {
+                            next.push(0); // placeholder; the slot is finished below
+                            faulted.push(r.slot);
+                        }
+                    }
+                }
+                (next, faulted)
+            }
+        };
         let consumed: Vec<(usize, usize)> = runs.iter().map(|r| (r.slot, r.tokens.len())).collect();
         drop(runs);
         self.iterations += 1;
 
         let max_ctx = max_ctx as i32;
         for ((s, len), tok) in consumed.into_iter().zip(next) {
+            if faulted.contains(&s) {
+                // This run's forward failed even in isolation: finish the
+                // request with the tokens generated before the fault. Its
+                // slot is reset (KV pane and any latched injected fault)
+                // on the next admission.
+                if let Some(sl) = self.slots[s].take() {
+                    done.push(Response {
+                        id: sl.req.id,
+                        tokens: sl.generated,
+                        ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
+                        latency: Instant::now() - sl.req.arrival,
+                        finish: FinishReason::EngineFault,
+                    });
+                }
+                continue;
+            }
             let slot = &mut self.slots[s];
             let Some(sl) = slot.as_mut() else { continue };
             sl.pos += len as i32;
@@ -822,6 +943,189 @@ mod tests {
             assert!(b.iterations() <= prev, "chunk {chunk} regressed TTFT iterations");
             prev = b.iterations();
         }
+    }
+
+    #[test]
+    fn prefill_chunk_parse_rejects_malformed_forms_typed() {
+        for bad in ["", "x", "0", "-2", "1.5", "8 tokens", "0x10"] {
+            let err = parse_prefill_chunk(bad).unwrap_err();
+            assert!(err.contains("SAIL_PREFILL_CHUNK"), "'{bad}': {err}");
+        }
+        assert_eq!(parse_prefill_chunk(" 16 "), Ok(16), "whitespace is tolerated");
+        assert_eq!(parse_prefill_chunk("1"), Ok(1));
+    }
+
+    #[test]
+    fn full_queue_sheds_typed_zero_token_responses() {
+        let cfg = BatcherConfig { queue_capacity: 2, ..BatcherConfig::default() };
+        let mut b = Batcher::new(MockEngine::new(1, 97, 64), cfg);
+        assert!(b.submit(Request::new(0, vec![1], 2)).is_none());
+        assert!(b.submit(Request::new(1, vec![1], 2)).is_none());
+        let shed = b.submit(Request::new(2, vec![1], 2)).expect("third submit must shed");
+        assert_eq!(shed.id, 2);
+        assert_eq!(shed.finish, FinishReason::Shed);
+        assert!(shed.tokens.is_empty());
+        // The queued requests are unaffected by the shed one.
+        let done = b.run_to_completion().unwrap();
+        let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        assert!(done.iter().all(|r| r.finish == FinishReason::MaxTokens));
+        // Draining re-opens admission.
+        assert!(b.submit(Request::new(3, vec![1], 2)).is_none());
+        assert_eq!(b.run_to_completion().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn expired_deadlines_finish_typed_with_tokens_so_far() {
+        // Zero total budget, checked while queued: finishes at admission
+        // with zero tokens and no engine work.
+        let mut b = mk_batcher(2);
+        b.submit(Request::new(0, vec![5], 4).with_deadline(Duration::ZERO));
+        b.submit(Request::new(1, vec![5], 2));
+        let done = b.run_to_completion().unwrap();
+        let dead = done.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(dead.finish, FinishReason::DeadlineExceeded);
+        assert!(dead.tokens.is_empty());
+        let ok = done.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(ok.finish, FinishReason::MaxTokens);
+        assert_eq!(ok.tokens.len(), 2);
+
+        // Zero TTFT budget behaves the same (no first token yet ⇒ expired).
+        let mut b = mk_batcher(1);
+        b.submit(Request::new(2, vec![5], 4).with_ttft_deadline(Duration::ZERO));
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+
+        // A generous budget changes nothing — the deadline path is
+        // dormant on the happy path.
+        let mut b = mk_batcher(1);
+        b.submit(
+            Request::new(3, vec![5], 4)
+                .with_deadline(Duration::from_secs(3600))
+                .with_ttft_deadline(Duration::from_secs(3600)),
+        );
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(done[0].finish, FinishReason::MaxTokens);
+        assert_eq!(done[0].tokens.len(), 4);
+    }
+
+    /// Engine whose batched forward fails whenever `fail_slot` is in the
+    /// batch — including when retried solo — until `fail_budget` errors
+    /// have been served. The inner mock's per-slot state is only advanced
+    /// on success, mirroring a real engine whose failed iteration commits
+    /// nothing.
+    struct FaultyEngine {
+        inner: MockEngine,
+        fail_slot: usize,
+        fail_budget: usize,
+    }
+
+    impl DecodeEngine for FaultyEngine {
+        fn batch(&self) -> usize {
+            self.inner.batch()
+        }
+
+        fn vocab(&self) -> usize {
+            self.inner.vocab()
+        }
+
+        fn max_context(&self) -> usize {
+            self.inner.max_context()
+        }
+
+        fn max_run(&self) -> usize {
+            self.inner.max_run()
+        }
+
+        fn step(
+            &mut self,
+            tokens: &[i32],
+            positions: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<i32>> {
+            self.inner.step(tokens, positions, active)
+        }
+
+        fn step_runs(&mut self, runs: &[crate::coordinator::engine::SlotRun]) -> Result<Vec<i32>> {
+            if self.fail_budget > 0 && runs.iter().any(|r| r.slot == self.fail_slot) {
+                self.fail_budget -= 1;
+                bail!("injected engine fault on slot {}", self.fail_slot);
+            }
+            self.inner.step_runs(runs)
+        }
+
+        fn reset_slot(&mut self, slot: usize) -> Result<()> {
+            self.inner.reset_slot(slot)
+        }
+    }
+
+    #[test]
+    fn engine_fault_isolates_to_its_request_and_survivors_match_fault_free() {
+        // Fault-free oracle for the whole workload.
+        let reqs: Vec<Request> = (0..6).map(|id| Request::new(id, vec![5 + id as i32], 4)).collect();
+        let mut oracle = mk_batcher(3);
+        for r in &reqs {
+            oracle.submit(r.clone());
+        }
+        let mut want: Vec<_> = oracle
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens, r.finish))
+            .collect();
+        want.sort_by_key(|(id, ..)| *id);
+
+        // Same workload, but every forward containing slot 1 keeps
+        // failing (a latched fault, like an injected KV-write failure).
+        let mut b = Batcher::new(
+            FaultyEngine { inner: MockEngine::new(3, 97, 64), fail_slot: 1, fail_budget: usize::MAX },
+            BatcherConfig::default(),
+        );
+        for r in &reqs {
+            b.submit(r.clone());
+        }
+        let mut done: Vec<_> = b
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens, r.finish))
+            .collect();
+        done.sort_by_key(|(id, ..)| *id);
+        assert_eq!(done.len(), want.len(), "every request must still finish");
+        let mut faulted = 0usize;
+        for ((id, tokens, finish), (wid, wtokens, wfinish)) in done.iter().zip(&want) {
+            assert_eq!(id, wid);
+            if *finish == FinishReason::EngineFault {
+                faulted += 1;
+                assert!(tokens.is_empty(), "slot 1 faults before its first token");
+            } else {
+                assert_eq!(finish, wfinish, "request {id}");
+                assert_eq!(tokens, wtokens, "survivor {id} diverged from the fault-free run");
+            }
+        }
+        // Slot 1 is re-admitted after each fault, so every request that
+        // landed on it faults — but at least one did, and the batcher
+        // never panicked or stalled.
+        assert!(faulted >= 1, "no request ever exercised the faulty slot");
+
+        // A transient fault (one failed batch, one failed solo retry)
+        // costs *no* request: the next iteration retries cleanly.
+        let mut b = Batcher::new(
+            FaultyEngine { inner: MockEngine::new(3, 97, 64), fail_slot: 1, fail_budget: 1 },
+            BatcherConfig::default(),
+        );
+        for r in &reqs {
+            b.submit(r.clone());
+        }
+        let mut done: Vec<_> = b
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens, r.finish))
+            .collect();
+        done.sort_by_key(|(id, ..)| *id);
+        assert_eq!(done, want, "a transient fault must cost nothing after the solo retry");
     }
 
     #[test]

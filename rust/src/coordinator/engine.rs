@@ -378,22 +378,38 @@ impl DecodeEngine for LutGemvServeEngine {
             );
         }
         let k = self.gemv.k();
-        // Recurrent state update for active slots (inactive slots keep
-        // their state untouched — the fixed-batch artifact still computes
-        // them, but their outputs are ignored).
+        // Recurrent state update for active slots, staged into copies:
+        // committing only after a successful dispatch means a failed
+        // forward leaves the slot states untouched, so the batcher's solo
+        // retry re-applies the same fold exactly once (bit-identical
+        // recovery). Inactive slots keep their state untouched — the
+        // fixed-batch artifact still computes them, but their outputs are
+        // ignored.
+        let mut staged: Vec<(usize, Vec<f32>)> = Vec::new();
         for s in 0..self.batch {
             if !active[s] {
                 continue;
             }
-            let h = &mut self.hidden[s * k..(s + 1) * k];
+            let mut h = self.hidden[s * k..(s + 1) * k].to_vec();
             for (i, hi) in h.iter_mut().enumerate() {
                 *hi = 0.5 * *hi + Self::embed(tokens[s], positions[s], i);
             }
+            staged.push((s, h));
         }
         let xs: Vec<QuantizedVector> = (0..self.batch)
-            .map(|s| QuantizedVector::quantize(&self.hidden[s * k..(s + 1) * k]))
+            .map(|s| {
+                let h = staged
+                    .iter()
+                    .find(|(ss, _)| *ss == s)
+                    .map(|(_, h)| h.as_slice())
+                    .unwrap_or(&self.hidden[s * k..(s + 1) * k]);
+                QuantizedVector::quantize(h)
+            })
             .collect();
-        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits);
+        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits)?;
+        for (s, h) in staged {
+            self.hidden[s * k..(s + 1) * k].copy_from_slice(&h);
+        }
         self.gemv_stats += stats;
         self.steps += 1;
         Ok((0..self.batch)
@@ -404,26 +420,32 @@ impl DecodeEngine for LutGemvServeEngine {
     fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
         validate_runs(self.batch, self.max_context, runs)?;
         let k = self.gemv.k();
-        // Fold every run's tokens into its slot's hidden state in feed
-        // order — the exact recurrence sequential single-token steps
-        // apply (the discarded mid-prefill logits never feed back into
-        // the state, so skipping them changes nothing downstream).
+        // Fold every run's tokens into a staged copy of its slot's hidden
+        // state in feed order — the exact recurrence sequential
+        // single-token steps apply (the discarded mid-prefill logits
+        // never feed back into the state, so skipping them changes
+        // nothing downstream). Commit happens only after a successful
+        // dispatch: a failed forward leaves every slot's state untouched
+        // for a bit-identical solo retry.
+        let mut staged: Vec<(usize, Vec<f32>)> = Vec::with_capacity(runs.len());
         for r in runs {
-            let h = &mut self.hidden[r.slot * k..(r.slot + 1) * k];
+            let mut h = self.hidden[r.slot * k..(r.slot + 1) * k].to_vec();
             for (j, &t) in r.tokens.iter().enumerate() {
                 let pos = r.start_pos + j as i32;
                 for (i, hi) in h.iter_mut().enumerate() {
                     *hi = 0.5 * *hi + Self::embed(t, pos, i);
                 }
             }
+            staged.push((r.slot, h));
         }
         // One batched GEMV at effective batch = number of runs (only the
         // last position of each run needs logits).
-        let xs: Vec<QuantizedVector> = runs
-            .iter()
-            .map(|r| QuantizedVector::quantize(&self.hidden[r.slot * k..(r.slot + 1) * k]))
-            .collect();
-        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits);
+        let xs: Vec<QuantizedVector> =
+            staged.iter().map(|(_, h)| QuantizedVector::quantize(h)).collect();
+        let stats = self.gemv.gemv_batch_into(&xs, &self.pool, &mut self.logits)?;
+        for (s, h) in staged {
+            self.hidden[s * k..(s + 1) * k].copy_from_slice(&h);
+        }
         self.gemv_stats += stats;
         self.steps += 1;
         Ok((0..runs.len()).map(|i| argmax_logits(self.logits.row(i))).collect())

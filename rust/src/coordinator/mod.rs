@@ -27,7 +27,7 @@ pub mod policy;
 pub mod request;
 pub mod server;
 
-pub use batcher::{prefill_chunk_from_env, Batcher, BatcherConfig};
+pub use batcher::{parse_prefill_chunk, prefill_chunk_from_env, Batcher, BatcherConfig};
 pub use engine::{
     argmax_logits, step_runs_via_step, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
     SlotRun, TransformerServeEngine,

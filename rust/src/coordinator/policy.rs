@@ -38,6 +38,22 @@ impl AdmissionQueue {
         self.items.push_back((req, now_iter));
     }
 
+    /// Enqueue unless the queue already holds `capacity` requests. A full
+    /// queue hands the request back so the caller can shed it with a
+    /// typed response instead of growing without bound.
+    pub fn push_bounded(
+        &mut self,
+        req: Request,
+        now_iter: u64,
+        capacity: usize,
+    ) -> Result<(), Request> {
+        if self.items.len() >= capacity {
+            return Err(req);
+        }
+        self.items.push_back((req, now_iter));
+        Ok(())
+    }
+
     pub fn len(&self) -> usize {
         self.items.len()
     }
@@ -108,6 +124,19 @@ mod tests {
         q.push(req(0, 8), 0);
         q.push(req(1, 8), 0);
         assert_eq!(q.pop(1).unwrap().id, 0);
+    }
+
+    #[test]
+    fn bounded_push_sheds_exactly_above_capacity() {
+        let mut q = AdmissionQueue::new(AdmissionPolicy::Fifo);
+        assert!(q.push_bounded(req(0, 4), 0, 2).is_ok());
+        assert!(q.push_bounded(req(1, 4), 0, 2).is_ok());
+        let back = q.push_bounded(req(2, 4), 0, 2).unwrap_err();
+        assert_eq!(back.id, 2, "the shed request comes back to the caller");
+        assert_eq!(q.len(), 2, "a shed push must not grow the queue");
+        // Draining one slot re-opens admission.
+        assert_eq!(q.pop(1).unwrap().id, 0);
+        assert!(q.push_bounded(back, 1, 2).is_ok());
     }
 
     #[test]

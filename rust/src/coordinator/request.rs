@@ -1,7 +1,7 @@
 //! Request/response types and the synthetic multi-user workload generator.
 
 use crate::util::Prng;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Monotonically increasing request identifier.
 pub type RequestId = u64;
@@ -19,6 +19,15 @@ pub struct Request {
     pub eos: Option<i32>,
     /// Arrival timestamp (set by the server).
     pub arrival: Instant,
+    /// Total-latency budget from arrival. A request still running (or
+    /// still queued) past this budget finishes with
+    /// [`FinishReason::DeadlineExceeded`], carrying whatever tokens it
+    /// generated so far.
+    pub deadline: Option<Duration>,
+    /// Time-to-first-token budget from arrival: if no token has been
+    /// produced within it, the request finishes with
+    /// [`FinishReason::DeadlineExceeded`].
+    pub ttft_deadline: Option<Duration>,
 }
 
 impl Request {
@@ -26,7 +35,27 @@ impl Request {
     /// admission with [`FinishReason::EmptyPrompt`] — panicking this deep
     /// would let one malformed client request abort the serving thread.
     pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
-        Request { id, prompt, max_new_tokens, eos: None, arrival: Instant::now() }
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            eos: None,
+            arrival: Instant::now(),
+            deadline: None,
+            ttft_deadline: None,
+        }
+    }
+
+    /// Attach a total-latency budget (measured from `arrival`).
+    pub fn with_deadline(mut self, budget: Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
+
+    /// Attach a time-to-first-token budget (measured from `arrival`).
+    pub fn with_ttft_deadline(mut self, budget: Duration) -> Self {
+        self.ttft_deadline = Some(budget);
+        self
     }
 }
 
@@ -52,6 +81,17 @@ pub enum FinishReason {
     /// prefill and no logits to sample from. The response carries zero
     /// tokens.
     EmptyPrompt,
+    /// The engine's forward pass failed for this request even in
+    /// isolation (after the batcher's solo retry). The response carries
+    /// the tokens generated before the fault; every *other* in-flight
+    /// request's token stream is unaffected.
+    EngineFault,
+    /// The request's TTFT or total-latency budget expired before it
+    /// finished; the response carries the tokens generated so far.
+    DeadlineExceeded,
+    /// Shed at submission: the bounded admission queue was full. The
+    /// response carries zero tokens and the caller may resubmit later.
+    Shed,
 }
 
 /// Synthetic workload generator: Poisson arrivals, uniform prompt lengths,

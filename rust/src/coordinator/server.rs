@@ -71,7 +71,15 @@ impl Server {
                         }
                     };
                     match msg {
-                        Msg::Submit(r) => batcher.submit(r),
+                        Msg::Submit(r) => {
+                            // A full bounded queue sheds the request with
+                            // a typed zero-token response — answered like
+                            // any completion, never silently dropped.
+                            if let Some(shed) = batcher.submit(r) {
+                                metrics.record(&shed);
+                                let _ = tx_done.send(shed);
+                            }
+                        }
                         Msg::Drain => draining = true,
                     }
                 }
@@ -173,6 +181,29 @@ mod tests {
         let server = Server::spawn(MockEngine::new(2, 97, 64), BatcherConfig::default());
         let metrics = server.shutdown();
         assert_eq!(metrics.completed, 0);
+    }
+
+    #[test]
+    fn zero_capacity_queue_sheds_every_request_typed() {
+        use crate::coordinator::request::FinishReason;
+        // capacity 0 makes shedding deterministic regardless of how fast
+        // the worker drains: every submission comes back `Shed`.
+        let cfg = BatcherConfig { queue_capacity: 0, ..BatcherConfig::default() };
+        let server = Server::spawn(MockEngine::new(2, 97, 64), cfg);
+        let mut gen = WorkloadGen::new(5, 97);
+        for r in gen.burst(4) {
+            server.submit(r).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..4 {
+            got.push(server.recv().unwrap());
+        }
+        assert!(
+            got.iter().all(|r| r.finish == FinishReason::Shed && r.tokens.is_empty()),
+            "a shed request must be answered with a typed zero-token response"
+        );
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed, 4, "shed responses are recorded like completions");
     }
 
     #[test]

@@ -43,9 +43,12 @@
 
 use std::sync::{Arc, Mutex};
 
+use anyhow::Result;
+
 use super::planes;
 use super::tile::{run_tile, GemvOutput, ScratchArena, TileArgs};
 use crate::quant::{QuantizedMatrix, QuantizedVector};
+use crate::runtime::faults::FaultPlan;
 use crate::runtime::WorkerPool;
 
 /// Counters the engine reports so cycle models and the PRT can be validated
@@ -164,6 +167,10 @@ struct GemvCall {
     act_bits: usize,
     batch: usize,
     k: usize,
+    /// The dispatching pool's armed fault schedule, if any — tile jobs
+    /// consult it for injected stalls and poisoned scratch checkouts
+    /// (`None`, the fault-free fast path, costs one atomic load per call).
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// One tile's report back to the dispatcher. The output buffer returns to
@@ -184,8 +191,14 @@ fn tile_job(call: &GemvCall, t: usize) -> TileReport {
     let desc = call.tiles[t];
     let shard = &call.shards[desc.shard];
     let width = desc.col_end - desc.col_start;
+    let faults = call.faults.as_deref();
+    if let Some(d) = faults.and_then(|p| p.slow_tile()) {
+        // Injected stall: the tile computes correctly, just late — this
+        // exercises the dispatcher's heal-poll path without losing work.
+        std::thread::sleep(d);
+    }
     let mut scratch =
-        shard.arena.checkout_scratch(call.k, call.nbw, call.batch, call.prt_capacity);
+        shard.arena.checkout_scratch(call.k, call.nbw, call.batch, call.prt_capacity, faults);
     let mut out = shard.arena.checkout_out(call.batch * width);
     let args = TileArgs {
         wt: &shard.wt,
@@ -379,6 +392,16 @@ impl LutGemvEngine {
     /// every dispatch — so a steady-state call reuses every large buffer
     /// it touches.
     ///
+    /// # Errors
+    ///
+    /// A dead pool worker is *not* an error — the pool heals it and
+    /// re-executes the lost tiles inline, bit-identically. `Err` means a
+    /// tile's own computation failed even on the inline retry (a
+    /// [`PoolError`](crate::runtime::PoolError) naming the tile and
+    /// node); the engine and its buffers remain usable, and the serving
+    /// layer maps the failure to a per-request typed finish instead of a
+    /// process abort.
+    ///
     /// ```
     /// use sail::lutgemv::{GemvOutput, LutGemvEngine};
     /// use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
@@ -392,13 +415,13 @@ impl LutGemvEngine {
     /// // The same output buffer is reused across calls and pools…
     /// let mut out = GemvOutput::new();
     /// let serial = WorkerPool::serial();
-    /// let stats = eng.gemv_batch_into(&[x.clone(), x.clone()], &serial, &mut out);
+    /// let stats = eng.gemv_batch_into(&[x.clone(), x.clone()], &serial, &mut out).unwrap();
     /// assert_eq!((out.batch(), out.n()), (2, 8));
     /// let first = out.row(0).to_vec();
     ///
     /// // …and a threaded pool produces bit-identical results and stats.
     /// let pool = WorkerPool::new(2);
-    /// let stats2 = eng.gemv_batch_into(&[x.clone(), x], &pool, &mut out);
+    /// let stats2 = eng.gemv_batch_into(&[x.clone(), x], &pool, &mut out).unwrap();
     /// assert_eq!(out.row(0), first.as_slice());
     /// assert_eq!(stats, stats2);
     /// ```
@@ -407,7 +430,7 @@ impl LutGemvEngine {
         xs: &[QuantizedVector],
         pool: &WorkerPool,
         out: &mut GemvOutput,
-    ) -> GemvStats {
+    ) -> Result<GemvStats> {
         let k = self.k();
         let n = self.n();
         let batch = xs.len();
@@ -415,7 +438,7 @@ impl LutGemvEngine {
         if batch == 0 {
             // Nothing to compute: do not walk columns or build LUTs for
             // zero activations.
-            return GemvStats::default();
+            return Ok(GemvStats::default());
         }
         for x in xs {
             assert_eq!(x.len(), k, "activation length mismatch");
@@ -479,15 +502,33 @@ impl LutGemvEngine {
             act_bits,
             batch,
             k,
+            faults: pool.fault_plan(),
         });
         // Route tiles to their weight shard's node when the engine was
         // placed for this pool's shape; otherwise (unplaced engine, or a
         // pool with a different group count) fall back to locality-blind
         // fan-out — same results either way.
-        let reports = if self.shards.len() > 1 && self.shards.len() == pool.nodes() {
-            pool.run_ctx_routed(&ctx, n_tiles, |call, t| call.tiles[t].shard, tile_job)
+        let dispatched = if self.shards.len() > 1 && self.shards.len() == pool.nodes() {
+            pool.try_run_ctx_routed(&ctx, n_tiles, |call, t| call.tiles[t].shard, tile_job)
         } else {
-            pool.run_ctx(&ctx, n_tiles, tile_job)
+            pool.try_run_ctx(&ctx, n_tiles, tile_job)
+        };
+        let reports = match dispatched {
+            Ok(r) => r,
+            Err(e) => {
+                // Completed tiles' output buffers died with the error (the
+                // arena re-creates them next call — counter noise, not a
+                // leak), but the big pattern/scale buffers are recoverable:
+                // every job clone is gone by the time the pool reports.
+                if let Ok(call) = Arc::try_unwrap(ctx) {
+                    self.call_buffers.lock().unwrap().push(CallBuffers {
+                        patterns: call.patterns,
+                        x_scales: call.x_scales,
+                        tiles: call.tiles,
+                    });
+                }
+                return Err(e.into());
+            }
         };
 
         // Scatter tile outputs into the flat buffer and sum stats, in tile
@@ -516,15 +557,19 @@ impl LutGemvEngine {
             };
             self.call_buffers.lock().unwrap().push(bufs);
         }
-        stats
+        Ok(stats)
     }
 
     /// Serial convenience wrapper: allocate a fresh output and run on the
     /// caller's thread. This is the serial reference the tiled/threaded
-    /// path is property-tested against.
+    /// path is property-tested against. Infallible: the private serial
+    /// pool never carries a fault plan, so a failure here is a real
+    /// kernel bug and stays loud.
     pub fn gemv_batch(&self, xs: &[QuantizedVector]) -> (GemvOutput, GemvStats) {
         let mut out = GemvOutput::new();
-        let stats = self.gemv_batch_into(xs, &WorkerPool::serial(), &mut out);
+        let stats = self
+            .gemv_batch_into(xs, &WorkerPool::serial(), &mut out)
+            .expect("serial GEMV cannot fail");
         (out, stats)
     }
 
@@ -738,12 +783,12 @@ mod tests {
         let eng2 = LutGemvEngine::new(wt2, 4);
         let pool = WorkerPool::serial();
         let mut out = GemvOutput::new();
-        eng.gemv_batch_into(&xs, &pool, &mut out);
+        eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
         let first = out.clone();
         // A second call with different shapes must fully overwrite.
-        eng2.gemv_batch_into(&xs2, &pool, &mut out);
+        eng2.gemv_batch_into(&xs2, &pool, &mut out).unwrap();
         assert_eq!(out.batch(), xs2.len());
-        eng.gemv_batch_into(&xs, &pool, &mut out);
+        eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
         assert_eq!(out, first, "stale data leaked through buffer reuse");
     }
 
@@ -757,7 +802,7 @@ mod tests {
         for threads in [1usize, 2, 8] {
             let pool = WorkerPool::new(threads);
             let mut out = GemvOutput::new();
-            let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+            let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
             assert_eq!(out, serial, "threads={threads}");
             assert_eq!(stats, serial_stats, "stats drift at threads={threads}");
         }
@@ -777,11 +822,11 @@ mod tests {
         eng.tile_cols = 8; // 5 tiles per call
         let serial = WorkerPool::serial();
         let mut out = GemvOutput::new();
-        let baseline = eng.gemv_batch_into(&xs, &serial, &mut out);
+        let baseline = eng.gemv_batch_into(&xs, &serial, &mut out).unwrap();
         assert_eq!(eng.scratch_arena().scratches_created(), 1);
         assert_eq!(eng.scratch_arena().out_bufs_created(), 5);
         for _ in 0..10 {
-            let stats = eng.gemv_batch_into(&xs, &serial, &mut out);
+            let stats = eng.gemv_batch_into(&xs, &serial, &mut out).unwrap();
             assert_eq!(stats, baseline);
         }
         assert_eq!(
@@ -795,7 +840,7 @@ mod tests {
         // every call each buffer is back in the arena.
         let pool = WorkerPool::new(4);
         for _ in 0..10 {
-            let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+            let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
             assert_eq!(stats, baseline);
             let created = (
                 eng.scratch_arena().scratches_created(),
@@ -837,14 +882,42 @@ mod tests {
         assert_eq!(bounds[0].1, bounds[1].0, "shards must be contiguous");
 
         let mut out = GemvOutput::new();
-        let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+        let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
         assert_eq!(out, want, "placed+routed dispatch drifted");
         assert_eq!(stats, want_stats);
         for other in [WorkerPool::serial(), WorkerPool::with_policy(3, &NumaPolicy::Off)] {
-            let stats = eng.gemv_batch_into(&xs, &other, &mut out);
+            let stats = eng.gemv_batch_into(&xs, &other, &mut out).unwrap();
             assert_eq!(out, want, "fallback dispatch drifted");
             assert_eq!(stats, want_stats);
         }
+    }
+
+    #[test]
+    fn injected_tile_faults_recover_bit_identically() {
+        use crate::runtime::faults::{FaultKind, FaultPlan};
+        let mut prng = Prng::new(125);
+        let (wt, xs) = random_setup(&mut prng, 37, 96, QuantLevel::Q4, 32);
+        let mut eng = LutGemvEngine::new(wt, 4);
+        eng.tile_cols = 5; // 8 tiles per call
+        let (want, want_stats) = eng.gemv_batch(&xs);
+        let pool = WorkerPool::new(4);
+        // A stalled tile plus a poisoned scratch checkout: the stall only
+        // delays, the poison loses a chunk that the dispatcher re-executes
+        // inline — output and stats must be bit-identical to fault-free.
+        pool.arm_faults(Arc::new(
+            FaultPlan::new(21)
+                .with(FaultKind::SlowTile, 2)
+                .with(FaultKind::PoisonScratch, 3),
+        ));
+        let mut out = GemvOutput::new();
+        let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+        pool.disarm_faults();
+        assert_eq!(out, want, "faulted dispatch drifted from fault-free output");
+        assert_eq!(stats, want_stats, "recovered chunk double- or under-counted stats");
+        // The engine (and its recycled buffers) keep serving after faults.
+        let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+        assert_eq!(out, want);
+        assert_eq!(stats, want_stats);
     }
 
     #[test]

@@ -229,13 +229,24 @@ impl ScratchArena {
         (self.scratches.lock().unwrap().len(), self.out_bufs.lock().unwrap().len())
     }
 
+    /// Check a scratch out for one tile job. `faults` is the dispatching
+    /// pool's armed fault schedule, if any: a scheduled `poison_scratch`
+    /// tick panics *here*, at the arena boundary — inside the tile job,
+    /// where the worker's catch-unwind turns it into a lost chunk for the
+    /// pool's recovery ladder to heal (see `tests/fault_injection.rs`).
     pub(crate) fn checkout_scratch(
         &self,
         k: usize,
         nbw: u32,
         batch: usize,
         prt_capacity: usize,
+        faults: Option<&crate::runtime::faults::FaultPlan>,
     ) -> TileScratch {
+        if let Some(plan) = faults {
+            if plan.poisoned_scratch() {
+                panic!("injected fault: poisoned scratch checkout");
+            }
+        }
         let popped = self.scratches.lock().unwrap().pop();
         match popped {
             Some(mut s) => {

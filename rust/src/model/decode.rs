@@ -60,7 +60,7 @@ use super::ModelConfig;
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
-use crate::runtime::WorkerPool;
+use crate::runtime::{KvFault, WorkerPool};
 
 /// Weight precision of one decoder layer (or of the output head): the
 /// quantization level of its matrices and the NBW the LUT streams.
@@ -455,9 +455,14 @@ impl LutTransformer {
     }
 
     /// Clear one slot's KV panes (called on admission by the batcher).
+    /// Also clears any latched injected KV-write fault on the slot — a
+    /// faulted request's slot is fully healthy for the next admission.
     pub fn reset_slot(&mut self, slot: usize) -> Result<()> {
         if slot >= self.batch {
             bail!("slot {slot} outside batch {}", self.batch);
+        }
+        if let Some(plan) = self.pool.fault_plan() {
+            plan.kv_slot_reset(slot);
         }
         self.kv.reset_slot(slot);
         Ok(())
@@ -542,8 +547,8 @@ impl LutTransformer {
         }
 
         for l in 0..self.layers.len() {
-            self.attention_block(l, runs);
-            self.ffn_block(l);
+            self.attention_block(l, runs)?;
+            self.ffn_block(l)?;
         }
 
         // Output head: only each run's last row predicts a next token.
@@ -556,7 +561,7 @@ impl LutTransformer {
         rmsnorm_rows(&self.head_x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
         self.stats.head +=
-            self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits);
+            self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits)?;
         self.stats.steps += 1;
         self.stats.tokens += rows as u64;
         Ok(())
@@ -564,8 +569,11 @@ impl LutTransformer {
 
     /// Q/K/V projections for all rows, ranged KV-cache append per run,
     /// causal attention per row over its window, O projection, residual
-    /// add.
-    fn attention_block(&mut self, l: usize, runs: &[DecodeRun]) {
+    /// add. Pool dispatch failures and KV-write rejections (including
+    /// injected ones) surface as typed errors; a retried call re-embeds
+    /// and rewrites the same KV values, so a failed iteration leaves no
+    /// divergent state behind.
+    fn attention_block(&mut self, l: usize, runs: &[DecodeRun]) -> Result<()> {
         let h = self.spec.hidden;
         let hd = self.spec.head_dim();
         let heads = self.spec.heads;
@@ -578,9 +586,9 @@ impl LutTransformer {
         requantize_rows(&mut self.quant_h, &self.xn, h);
         let lw = &self.layers[l];
         let ls = &mut self.stats.layers[l];
-        ls.q += lw.wq.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_q);
-        ls.k += lw.wk.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_k);
-        ls.v += lw.wv.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_v);
+        ls.q += lw.wq.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_q)?;
+        ls.k += lw.wk.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_k)?;
+        ls.v += lw.wv.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_v)?;
 
         // Append every row's K/V — one ranged write per run
         // (`KvCache::write_run`: a single base/bounds computation for the
@@ -588,16 +596,30 @@ impl LutTransformer {
         // masking is the *read window* below, so row i never sees a later
         // row's K/V; and the current rows' K/V pass through storage
         // precision too, treating cached and fresh history identically.
+        let fault_plan = self.pool.fault_plan();
         let mut row0 = 0usize;
         for r in runs {
             let len = r.tokens.len();
+            let mut start_pos = r.start_pos;
+            if let Some(plan) = fault_plan.as_deref() {
+                match plan.kv_write_fault(r.slot) {
+                    Some(KvFault::Fail) => {
+                        bail!("injected fault: KV write failed for slot {}", r.slot)
+                    }
+                    // Drive the corrupted position through the cache's own
+                    // bounds check — it must come back as a typed error,
+                    // never land in a neighbouring pane.
+                    Some(KvFault::CorruptPosition) => start_pos = self.spec.max_context,
+                    None => {}
+                }
+            }
             self.kv.write_run(
                 l,
                 r.slot,
-                r.start_pos,
+                start_pos,
                 &self.out_k.as_slice()[row0 * kvd..(row0 + len) * kvd],
                 &self.out_v.as_slice()[row0 * kvd..(row0 + len) * kvd],
-            );
+            )?;
             row0 += len;
         }
 
@@ -658,26 +680,27 @@ impl LutTransformer {
 
         requantize_rows(&mut self.quant_h, &self.attn, h);
         let ls = &mut self.stats.layers[l];
-        ls.o += self.layers[l].wo.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_m);
+        ls.o += self.layers[l].wo.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_m)?;
         let orows = self.out_m.as_slice();
         for (xrow, orow) in self.x.chunks_exact_mut(h).zip(orows.chunks_exact(h)) {
             for (xi, &oi) in xrow.iter_mut().zip(orow) {
                 *xi += oi;
             }
         }
+        Ok(())
     }
 
     /// SwiGLU FFN: gate/up projections, `silu(gate) ⊙ up`, down
     /// projection, residual add.
-    fn ffn_block(&mut self, l: usize) {
+    fn ffn_block(&mut self, l: usize) -> Result<()> {
         let h = self.spec.hidden;
         let ffn = self.spec.ffn;
         rmsnorm_rows(&self.x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
         let lw = &self.layers[l];
         let ls = &mut self.stats.layers[l];
-        ls.gate += lw.w_gate.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_g);
-        ls.up += lw.w_up.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_u);
+        ls.gate += lw.w_gate.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_g)?;
+        ls.up += lw.w_up.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_u)?;
         self.mlp.resize(self.out_g.as_slice().len(), 0.0);
         for ((m, &g), &u) in
             self.mlp.iter_mut().zip(self.out_g.as_slice()).zip(self.out_u.as_slice())
@@ -687,13 +710,14 @@ impl LutTransformer {
         requantize_rows(&mut self.quant_f, &self.mlp, ffn);
         let ls = &mut self.stats.layers[l];
         ls.down +=
-            self.layers[l].w_down.gemv_batch_into(&self.quant_f, &self.pool, &mut self.out_m);
+            self.layers[l].w_down.gemv_batch_into(&self.quant_f, &self.pool, &mut self.out_m)?;
         let drows = self.out_m.as_slice();
         for (xrow, drow) in self.x.chunks_exact_mut(h).zip(drows.chunks_exact(h)) {
             for (xi, &di) in xrow.iter_mut().zip(drow) {
                 *xi += di;
             }
         }
+        Ok(())
     }
 }
 
@@ -912,6 +936,39 @@ mod tests {
             m.stats.layers.iter().map(|l| l.total().lut_reads).sum()
         };
         assert_eq!(layer_reads(&seq), layer_reads(&chk), "per-row LUT traffic changed");
+    }
+
+    #[test]
+    fn injected_kv_faults_are_typed_and_heal_on_slot_reset() {
+        use crate::runtime::{FaultKind, FaultPlan};
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let pool = WorkerPool::shared(1);
+        let mut m = LutTransformer::random(spec.clone(), 7, 2, pool.clone()).unwrap();
+        // Fault-free oracle for slot 1's trajectory.
+        let mut oracle = LutTransformer::random(spec, 7, 2, pool1()).unwrap();
+
+        // kv_write_fail latches its victim: the first KV write faults and
+        // every retry keeps faulting until the slot is reset.
+        pool.arm_faults(Arc::new(FaultPlan::new(9).with(FaultKind::KvWriteFail, 1)));
+        let err = m.step(&items(&[(0, 3, 0)])).unwrap_err();
+        assert!(err.to_string().contains("injected fault: KV write failed"), "{err}");
+        assert!(m.step(&items(&[(0, 3, 0)])).is_err(), "victim must stay latched");
+        // The *other* slot is untouched by slot 0's latched fault and
+        // stays bit-identical to the fault-free model.
+        m.step(&items(&[(1, 11, 0)])).unwrap();
+        oracle.step(&items(&[(1, 11, 0)])).unwrap();
+        assert_eq!(m.logits(), oracle.logits(), "healthy slot diverged under a latched fault");
+        // reset_slot clears the latch along with the pane.
+        m.reset_slot(0).unwrap();
+        m.step(&items(&[(0, 3, 0)])).unwrap();
+
+        // kv_corrupt is one-shot: the corrupted position is caught by the
+        // cache's own bounds check (typed), and the retry succeeds.
+        pool.arm_faults(Arc::new(FaultPlan::new(9).with(FaultKind::KvCorrupt, 1)));
+        let err = m.step(&items(&[(0, 5, 1)])).unwrap_err();
+        assert!(err.to_string().contains("outside the"), "{err}");
+        m.step(&items(&[(0, 5, 1)])).unwrap();
+        pool.disarm_faults();
     }
 
     #[test]

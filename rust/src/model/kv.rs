@@ -254,18 +254,35 @@ impl KvCache {
     /// `max_context` are a caller bug (the batcher finishes requests with
     /// `ContextFull` before ever issuing one) — enforced here so an
     /// admission-layer regression cannot silently corrupt a neighbouring
-    /// (layer, slot) pane.
-    pub fn write(&mut self, layer: usize, slot: usize, pos: usize, k: &[f32], v: &[f32]) {
-        assert!(
-            pos < self.max_context,
-            "KV write at position {pos} outside the {}-token window",
-            self.max_context
-        );
-        assert_eq!(k.len(), self.kv_dim);
-        assert_eq!(v.len(), self.kv_dim);
+    /// (layer, slot) pane. The violation surfaces as a typed error —
+    /// never a panic — which the serving path maps to `EngineFault` for
+    /// the offending request alone.
+    pub fn write(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        if pos >= self.max_context {
+            bail!(
+                "KV write at position {pos} outside the {}-token window",
+                self.max_context
+            );
+        }
+        if k.len() != self.kv_dim || v.len() != self.kv_dim {
+            bail!(
+                "KV write payloads ({}, {}) do not match kv_dim {}",
+                k.len(),
+                v.len(),
+                self.kv_dim
+            );
+        }
         let base = self.base(layer, slot, pos);
         self.k.write(base, k);
         self.v.write(base, v);
+        Ok(())
     }
 
     /// Cache the K and V vectors of a **run** of contiguous positions of
@@ -283,27 +300,32 @@ impl KvCache {
         start_pos: usize,
         k: &[f32],
         v: &[f32],
-    ) {
-        assert_eq!(k.len(), v.len(), "K and V runs must cover the same positions");
-        assert!(
-            !k.is_empty() && k.len() % self.kv_dim == 0,
-            "run payload {} is not a positive multiple of kv_dim {}",
-            k.len(),
-            self.kv_dim
-        );
+    ) -> Result<()> {
+        if k.len() != v.len() {
+            bail!("K and V runs must cover the same positions ({} vs {})", k.len(), v.len());
+        }
+        if k.is_empty() || k.len() % self.kv_dim != 0 {
+            bail!(
+                "run payload {} is not a positive multiple of kv_dim {}",
+                k.len(),
+                self.kv_dim
+            );
+        }
         let count = k.len() / self.kv_dim;
-        assert!(
-            start_pos + count <= self.max_context,
-            "KV run at positions {start_pos}..{} outside the {}-token window",
-            start_pos + count,
-            self.max_context
-        );
+        if start_pos + count > self.max_context {
+            bail!(
+                "KV run at positions {start_pos}..{} outside the {}-token window",
+                start_pos + count,
+                self.max_context
+            );
+        }
         let base = self.base(layer, slot, start_pos);
         for r in 0..count {
             let off = base + r * self.kv_dim;
             self.k.write(off, &k[r * self.kv_dim..(r + 1) * self.kv_dim]);
             self.v.write(off, &v[r * self.kv_dim..(r + 1) * self.kv_dim]);
         }
+        Ok(())
     }
 
     /// Read the cached K vector of one position (dequantized to f32).
@@ -429,7 +451,7 @@ mod tests {
             let mut kv = KvCache::new(spec, 2, 3, 4, 8).unwrap();
             let kvec: Vec<f32> = (0..8).map(|_| prng.normal() as f32).collect();
             let vvec: Vec<f32> = (0..8).map(|_| prng.normal() as f32).collect();
-            kv.write(1, 2, 3, &kvec, &vvec);
+            kv.write(1, 2, 3, &kvec, &vvec).unwrap();
             let mut back = vec![0.0f32; 8];
             kv.read_k(1, 2, 3, &mut back);
             let amax = kvec.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -487,10 +509,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "outside the 4-token window")]
     fn kv_cache_rejects_out_of_window_write() {
+        // A typed error, not a panic: the serving path degrades the one
+        // offending request instead of taking the process down.
         let mut kv = KvCache::new(KvCacheSpec::fp16(), 1, 1, 4, 8).unwrap();
-        kv.write(0, 0, 4, &[0.0; 8], &[0.0; 8]);
+        let err = kv.write(0, 0, 4, &[0.0; 8], &[0.0; 8]).unwrap_err();
+        assert!(err.to_string().contains("outside the 4-token window"), "{err}");
+        // The cache stays usable and untouched after the rejection.
+        kv.write(0, 0, 3, &[1.0; 8], &[1.0; 8]).unwrap();
+        let mut back = vec![0.0f32; 8];
+        kv.read_k(0, 0, 3, &mut back);
+        assert!(back.iter().all(|&x| x == 1.0));
     }
 
     #[test]
@@ -508,15 +537,17 @@ mod tests {
             let kr: Vec<f32> = (0..count * dim).map(|_| prng.normal() as f32).collect();
             let vr: Vec<f32> = (0..count * dim).map(|_| prng.normal() as f32).collect();
             for r in 0..count {
-                per_token.write(
-                    1,
-                    2,
-                    start + r,
-                    &kr[r * dim..(r + 1) * dim],
-                    &vr[r * dim..(r + 1) * dim],
-                );
+                per_token
+                    .write(
+                        1,
+                        2,
+                        start + r,
+                        &kr[r * dim..(r + 1) * dim],
+                        &vr[r * dim..(r + 1) * dim],
+                    )
+                    .unwrap();
             }
-            ranged.write_run(1, 2, start, &kr, &vr);
+            ranged.write_run(1, 2, start, &kr, &vr).unwrap();
             // Element payload and accounting are untouched by the write
             // path taken…
             assert_eq!(ranged.data_bytes(), per_token.data_bytes());
@@ -541,19 +572,27 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "outside the 4-token window")]
     fn write_run_rejects_runs_crossing_the_window() {
         // Positions 2..5 of a 4-token window: the *run*, not just its
-        // first row, must fit — rejected before any row is written.
+        // first row, must fit — rejected (typed) before any row is
+        // written.
         let mut kv = KvCache::new(KvCacheSpec::fp16(), 1, 1, 4, 8).unwrap();
-        kv.write_run(0, 0, 2, &[0.0; 3 * 8], &[0.0; 3 * 8]);
+        let err = kv.write_run(0, 0, 2, &[1.0; 3 * 8], &[1.0; 3 * 8]).unwrap_err();
+        assert!(err.to_string().contains("outside the 4-token window"), "{err}");
+        let mut back = vec![0.0f32; 8];
+        for p in 0..4 {
+            kv.read_k(0, 0, p, &mut back);
+            assert!(back.iter().all(|&x| x == 0.0), "row {p} written despite rejection");
+        }
     }
 
     #[test]
-    #[should_panic(expected = "not a positive multiple of kv_dim")]
     fn write_run_rejects_ragged_payloads() {
         let mut kv = KvCache::new(KvCacheSpec::fp16(), 1, 1, 4, 8).unwrap();
-        kv.write_run(0, 0, 0, &[0.0; 12], &[0.0; 12]);
+        let err = kv.write_run(0, 0, 0, &[0.0; 12], &[0.0; 12]).unwrap_err();
+        assert!(err.to_string().contains("not a positive multiple of kv_dim"), "{err}");
+        let err = kv.write_run(0, 0, 0, &[0.0; 16], &[0.0; 8]).unwrap_err();
+        assert!(err.to_string().contains("must cover the same positions"), "{err}");
     }
 
     #[test]

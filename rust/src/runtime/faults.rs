@@ -1,0 +1,438 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Robustness claims ("one dead worker cannot take down in-flight
+//! requests") are untestable without a way to *cause* the failure on
+//! demand, at a reproducible point, on every host. A [`FaultPlan`] is a
+//! seeded schedule of injected faults:
+//!
+//! - **worker panic** — a pool worker tears down mid-dispatch, taking its
+//!   queued job with it (checked in `worker_loop`, the pool boundary);
+//! - **slow tile** — a tile job stalls for a few milliseconds (checked at
+//!   the top of the engine's tile job; exercises the dispatcher's stall
+//!   detection without losing work);
+//! - **poisoned scratch** — a scratch checkout panics inside a tile job
+//!   (checked in `ScratchArena::checkout_scratch`, the arena boundary);
+//! - **KV write failure / corrupted KV position** — a KV-cache write
+//!   fails outright, or is redirected out of the context window so the
+//!   cache's typed bounds error fires (checked in the decode forward, the
+//!   cache boundary).
+//!
+//! Every hook is driven by a per-kind monotone check counter: a fault
+//! fires when its kind's counter hits a scheduled *tick*, exactly once
+//! per tick. Retries therefore do **not** re-fire a consumed fault — the
+//! recovery ladder (respawn → retry → inline serial) can be observed
+//! converging instead of looping. The one deliberate exception is the KV
+//! write failure, which latches onto the slot it first hits and keeps
+//! failing that slot until the slot is reset (next admission): that is
+//! the shape of a genuinely faulted request, and it is what drives the
+//! batcher's `FinishReason::EngineFault` path while every other slot
+//! keeps serving.
+//!
+//! Plans are **instance-scoped**, not process-global: a plan is armed on
+//! one [`WorkerPool`](super::WorkerPool) (and read by everything
+//! dispatching on that pool), so concurrently running tests and engines
+//! can never consume each other's ticks. The `SAIL_FAULTS=seed:spec`
+//! environment form ([`FaultPlan::from_env`]) is a strict parse returning
+//! a typed error on malformed input — the chaos suite and the CI fault
+//! leg arm it explicitly where they want it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// The injectable fault kinds. Spec names (for `SAIL_FAULTS` and error
+/// messages) are the snake_case forms: `worker_panic`, `slow_tile`,
+/// `poison_scratch`, `kv_write_fail`, `kv_corrupt`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A pool worker thread dies after dequeuing a job (the job is lost).
+    WorkerPanic,
+    /// A tile job sleeps for a few deterministic milliseconds.
+    SlowTile,
+    /// A scratch-buffer checkout panics inside a tile job.
+    PoisonScratch,
+    /// A KV-cache write fails; latches onto the victim slot until reset.
+    KvWriteFail,
+    /// A KV-cache write is redirected outside the context window, so the
+    /// cache's own typed bounds error fires (one-shot).
+    KvCorrupt,
+}
+
+const KINDS: usize = 5;
+
+impl FaultKind {
+    const ALL: [FaultKind; KINDS] = [
+        FaultKind::WorkerPanic,
+        FaultKind::SlowTile,
+        FaultKind::PoisonScratch,
+        FaultKind::KvWriteFail,
+        FaultKind::KvCorrupt,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultKind::WorkerPanic => 0,
+            FaultKind::SlowTile => 1,
+            FaultKind::PoisonScratch => 2,
+            FaultKind::KvWriteFail => 3,
+            FaultKind::KvCorrupt => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic => "worker_panic",
+            FaultKind::SlowTile => "slow_tile",
+            FaultKind::PoisonScratch => "poison_scratch",
+            FaultKind::KvWriteFail => "kv_write_fail",
+            FaultKind::KvCorrupt => "kv_corrupt",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// What an injected KV-cache fault should do to the write.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvFault {
+    /// Fail the write outright (typed error from the forward).
+    Fail,
+    /// Redirect the write outside the window so `KvCache`'s own typed
+    /// bounds check rejects it.
+    CorruptPosition,
+}
+
+/// The classic splitmix64 finalizer — the only PRNG a fault schedule
+/// needs, and dependency-free.
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A seeded, deterministic schedule of injected faults.
+///
+/// Each kind keeps a monotone check counter (bumped on every hook call)
+/// and a sorted list of fire *ticks*; a hook call fires iff its counter
+/// value is a scheduled tick — exactly once, so an inline retry of the
+/// same work does not re-trip the same fault.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Sorted 1-based fire ticks per kind.
+    ticks: [Vec<u64>; KINDS],
+    /// Hook-call counters per kind.
+    counters: [AtomicU64; KINDS],
+    /// Faults actually fired per kind (observability for tests/benches).
+    fired: [AtomicU64; KINDS],
+    /// The slot a `KvWriteFail` has latched onto (fails until reset).
+    kv_victim: Mutex<Option<usize>>,
+    /// Seed-derived stall for `SlowTile` (small: the suite soaks it).
+    slow_tile: Duration,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults) with the given seed; compose with
+    /// [`with`](FaultPlan::with) / [`with_seeded`](FaultPlan::with_seeded).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            ticks: Default::default(),
+            counters: Default::default(),
+            fired: Default::default(),
+            kv_victim: Mutex::new(None),
+            slow_tile: Duration::from_millis(1 + splitmix64(seed) % 5),
+        }
+    }
+
+    /// Schedule `kind` to fire on its `tick`-th hook check (1-based).
+    pub fn with(mut self, kind: FaultKind, tick: u64) -> Self {
+        assert!(tick >= 1, "fault ticks are 1-based");
+        let t = &mut self.ticks[kind.index()];
+        if let Err(pos) = t.binary_search(&tick) {
+            t.insert(pos, tick);
+        }
+        self
+    }
+
+    /// Schedule `kind` on a seed-derived tick in `[1, bound]` — the chaos
+    /// soak sweeps seeds so faults land at different points of the run.
+    /// `occurrence` distinguishes repeated seeded entries of one kind.
+    pub fn with_seeded(self, kind: FaultKind, bound: u64, occurrence: u64) -> Self {
+        assert!(bound >= 1, "seeded fault bound must be ≥ 1");
+        let h = splitmix64(
+            self.seed ^ (kind.index() as u64).wrapping_mul(0xA24BAED4963EE407) ^ occurrence,
+        );
+        let tick = 1 + h % bound;
+        self.with(kind, tick)
+    }
+
+    /// Strict parse of the `SAIL_FAULTS` grammar: `seed:item(,item)*`
+    /// where `item` is `kind@tick` (explicit 1-based tick) or
+    /// `kind%bound` (seed-derived tick in `[1, bound]`). Malformed input
+    /// is a typed error, never a panic.
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let (seed_str, spec) = s
+            .split_once(':')
+            .ok_or_else(|| format!("fault spec '{s}' missing 'seed:' prefix"))?;
+        let seed = seed_str
+            .trim()
+            .parse::<u64>()
+            .map_err(|e| format!("bad fault seed '{seed_str}': {e}"))?;
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Err(format!("fault spec '{s}' has no fault items"));
+        }
+        let mut plan = FaultPlan::new(seed);
+        let mut seeded_occurrences = [0u64; KINDS];
+        for item in spec.split(',') {
+            let item = item.trim();
+            let (name, sep, arg) = if let Some((n, a)) = item.split_once('@') {
+                (n, '@', a)
+            } else if let Some((n, a)) = item.split_once('%') {
+                (n, '%', a)
+            } else {
+                return Err(format!(
+                    "fault item '{item}' wants kind@tick or kind%bound"
+                ));
+            };
+            let kind = FaultKind::from_name(name.trim()).ok_or_else(|| {
+                format!(
+                    "unknown fault kind '{}' (want one of {})",
+                    name.trim(),
+                    FaultKind::ALL.map(|k| k.name()).join("/")
+                )
+            })?;
+            let n = arg
+                .trim()
+                .parse::<u64>()
+                .map_err(|e| format!("bad fault item '{item}': {e}"))?;
+            if n == 0 {
+                return Err(format!("fault item '{item}': ticks/bounds are 1-based"));
+            }
+            plan = if sep == '@' {
+                plan.with(kind, n)
+            } else {
+                let occ = seeded_occurrences[kind.index()];
+                seeded_occurrences[kind.index()] += 1;
+                plan.with_seeded(kind, n, occ)
+            };
+        }
+        Ok(plan)
+    }
+
+    /// The `SAIL_FAULTS` environment override: `Ok(None)` when unset,
+    /// `Ok(Some(plan))` on a well-formed spec, and a typed `Err` (never a
+    /// panic) on a malformed one.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("SAIL_FAULTS") {
+            Ok(v) => FaultPlan::parse(&v).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Bump `kind`'s check counter; true iff this check is a scheduled
+    /// tick (each tick fires exactly once).
+    fn check(&self, kind: FaultKind) -> bool {
+        let k = kind.index();
+        if self.ticks[k].is_empty() {
+            return false;
+        }
+        let tick = self.counters[k].fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = self.ticks[k].binary_search(&tick).is_ok();
+        if hit {
+            self.fired[k].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Pool-boundary hook: should this worker tear itself down now?
+    pub fn worker_panic(&self) -> bool {
+        self.check(FaultKind::WorkerPanic)
+    }
+
+    /// Tile-job hook: how long should this tile stall, if at all?
+    pub fn slow_tile(&self) -> Option<Duration> {
+        self.check(FaultKind::SlowTile).then_some(self.slow_tile)
+    }
+
+    /// Arena-boundary hook: should this scratch checkout panic?
+    pub fn poisoned_scratch(&self) -> bool {
+        self.check(FaultKind::PoisonScratch)
+    }
+
+    /// Cache-boundary hook, called per KV run write with the writing
+    /// slot. `KvWriteFail` latches: once it fires, the victim slot keeps
+    /// failing until [`kv_slot_reset`](FaultPlan::kv_slot_reset).
+    pub fn kv_write_fault(&self, slot: usize) -> Option<KvFault> {
+        let mut victim = self.kv_victim.lock().unwrap();
+        if *victim == Some(slot) {
+            self.fired[FaultKind::KvWriteFail.index()].fetch_add(1, Ordering::Relaxed);
+            return Some(KvFault::Fail);
+        }
+        if self.check(FaultKind::KvWriteFail) {
+            *victim = Some(slot);
+            return Some(KvFault::Fail);
+        }
+        drop(victim);
+        self.check(FaultKind::KvCorrupt).then_some(KvFault::CorruptPosition)
+    }
+
+    /// Clear a latched KV victim when its slot is reset (new admission).
+    pub fn kv_slot_reset(&self, slot: usize) {
+        let mut victim = self.kv_victim.lock().unwrap();
+        if *victim == Some(slot) {
+            *victim = None;
+        }
+    }
+
+    /// Faults fired so far for `kind`.
+    pub fn fired(&self, kind: FaultKind) -> u64 {
+        self.fired[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults fired across all kinds.
+    pub fn fired_total(&self) -> u64 {
+        (0..KINDS).map(|k| self.fired[k].load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// The armable slot a [`WorkerPool`](super::WorkerPool) carries (one per
+/// pool; worker threads keep a clone). The atomic fast path makes an
+/// unarmed cell cost one relaxed load per check site — no locks, no
+/// allocation, nothing measurable on the fault-free hot path.
+#[derive(Debug, Default)]
+pub struct FaultCell {
+    armed: AtomicBool,
+    plan: RwLock<Option<Arc<FaultPlan>>>,
+}
+
+impl FaultCell {
+    pub fn arm(&self, plan: Arc<FaultPlan>) {
+        *self.plan.write().unwrap() = Some(plan);
+        self.armed.store(true, Ordering::Release);
+    }
+
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+        *self.plan.write().unwrap() = None;
+    }
+
+    /// The armed plan, if any (`None` costs one atomic load).
+    pub fn get(&self) -> Option<Arc<FaultPlan>> {
+        if !self.armed.load(Ordering::Acquire) {
+            return None;
+        }
+        self.plan.read().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_fire_exactly_once_at_their_tick() {
+        let plan = FaultPlan::new(7)
+            .with(FaultKind::PoisonScratch, 2)
+            .with(FaultKind::PoisonScratch, 4);
+        let fired: Vec<bool> = (0..6).map(|_| plan.poisoned_scratch()).collect();
+        assert_eq!(fired, vec![false, true, false, true, false, false]);
+        assert_eq!(plan.fired(FaultKind::PoisonScratch), 2);
+        // Other kinds are untouched.
+        assert!(plan.slow_tile().is_none());
+        assert_eq!(plan.fired_total(), 2);
+    }
+
+    #[test]
+    fn seeded_ticks_are_deterministic_and_in_bound() {
+        for seed in [0u64, 1, 42, u64::MAX] {
+            let a = FaultPlan::new(seed).with_seeded(FaultKind::WorkerPanic, 8, 0);
+            let b = FaultPlan::new(seed).with_seeded(FaultKind::WorkerPanic, 8, 0);
+            let fire_a: Vec<bool> = (0..8).map(|_| a.worker_panic()).collect();
+            let fire_b: Vec<bool> = (0..8).map(|_| b.worker_panic()).collect();
+            assert_eq!(fire_a, fire_b, "seed {seed} not reproducible");
+            assert_eq!(fire_a.iter().filter(|&&f| f).count(), 1, "seed {seed}");
+        }
+        // Different occurrences usually land on different ticks; at
+        // minimum the plan holds ≥ 1 tick and every tick is in bound.
+        let p = FaultPlan::new(3)
+            .with_seeded(FaultKind::SlowTile, 16, 0)
+            .with_seeded(FaultKind::SlowTile, 16, 1);
+        let hits = (0..16).filter(|_| p.slow_tile().is_some()).count();
+        assert!(hits >= 1 && hits <= 2);
+    }
+
+    #[test]
+    fn parse_round_trips_both_item_forms() {
+        let p = FaultPlan::parse("42:worker_panic@3,slow_tile%8,poison_scratch@1").unwrap();
+        assert_eq!(p.seed(), 42);
+        assert!(p.poisoned_scratch(), "tick 1 must fire on the first check");
+        assert!(!p.worker_panic());
+        assert!(!p.worker_panic());
+        assert!(p.worker_panic(), "tick 3 must fire on the third check");
+        let slow = (0..8).filter(|_| p.slow_tile().is_some()).count();
+        assert_eq!(slow, 1, "one seeded slow_tile tick in [1,8]");
+    }
+
+    #[test]
+    fn parse_rejects_each_malformed_form_typed() {
+        for bad in [
+            "",                      // no seed separator
+            "42",                    // no separator
+            "x:worker_panic@1",      // non-numeric seed
+            "42:",                   // empty spec
+            "42:worker_panic",       // item without @/%
+            "42:worker_panic@0",     // 0 tick (1-based)
+            "42:slow_tile%0",        // 0 bound
+            "42:worker_panic@x",     // non-numeric tick
+            "42:no_such_kind@1",     // unknown kind
+            "42:worker_panic@1,,",   // empty item
+        ] {
+            let r = FaultPlan::parse(bad);
+            assert!(r.is_err(), "'{bad}' must be a typed parse error");
+        }
+        // from_env never panics: unset is Ok(None).
+        // (Not asserted via set_var here — env mutation races parallel
+        // tests; parse() above covers every malformed form.)
+    }
+
+    #[test]
+    fn kv_write_fail_latches_victim_until_reset() {
+        let p = FaultPlan::new(1).with(FaultKind::KvWriteFail, 2);
+        assert_eq!(p.kv_write_fault(0), None, "tick 1: no fault yet");
+        assert_eq!(p.kv_write_fault(3), Some(KvFault::Fail), "tick 2 latches slot 3");
+        // The victim keeps failing; other slots are untouched.
+        assert_eq!(p.kv_write_fault(3), Some(KvFault::Fail));
+        assert_eq!(p.kv_write_fault(0), None);
+        assert_eq!(p.kv_write_fault(3), Some(KvFault::Fail));
+        p.kv_slot_reset(3);
+        assert_eq!(p.kv_write_fault(3), None, "reset clears the latch");
+    }
+
+    #[test]
+    fn kv_corrupt_is_one_shot() {
+        let p = FaultPlan::new(9).with(FaultKind::KvCorrupt, 1);
+        assert_eq!(p.kv_write_fault(5), Some(KvFault::CorruptPosition));
+        assert_eq!(p.kv_write_fault(5), None, "corruption does not latch");
+    }
+
+    #[test]
+    fn cell_arm_disarm() {
+        let cell = FaultCell::default();
+        assert!(cell.get().is_none());
+        let plan = Arc::new(FaultPlan::new(5).with(FaultKind::SlowTile, 1));
+        cell.arm(Arc::clone(&plan));
+        assert!(cell.get().is_some());
+        assert!(Arc::ptr_eq(&cell.get().unwrap(), &plan));
+        cell.disarm();
+        assert!(cell.get().is_none());
+    }
+}

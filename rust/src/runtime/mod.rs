@@ -7,7 +7,14 @@
 //!   node groups, optionally pinned to their node's CPUs, with per-group
 //!   job queues so callers can route work to the node that owns its data.
 //!   Dispatch is deterministic: results come back in item order, and
-//!   outputs are bit-identical at every thread count and placement;
+//!   outputs are bit-identical at every thread count and placement. Dead
+//!   workers are healed (bounded respawn budget, inline re-execution of
+//!   lost chunks, degraded-serial fallback) and item failures surface as
+//!   typed [`PoolError`]s, never dispatcher panics;
+//! - [`faults`]: deterministic, pool-scoped fault injection
+//!   (`SAIL_FAULTS=seed:spec`) — seeded schedules of worker deaths, slow
+//!   tiles, poisoned scratch checkouts, and KV-write failures that the
+//!   chaos suite uses to prove the degradation ladder;
 //! - [`topology`]: NUMA discovery from sysfs (single-node fallback for
 //!   containers/non-Linux), the `SAIL_NUMA=off|auto|<map>` policy, and
 //!   placement planning (worker distribution + weight-shard ranges);
@@ -21,13 +28,15 @@
 //!   `artifacts/` is the entire model.
 
 pub mod executor;
+pub mod faults;
 pub mod manifest;
 pub mod pool;
 pub mod topology;
 pub mod weights;
 
 pub use executor::{DecodeModel, GemvTile};
+pub use faults::{FaultCell, FaultKind, FaultPlan, KvFault};
 pub use manifest::Manifest;
-pub use pool::WorkerPool;
+pub use pool::{PoolError, WorkerPool};
 pub use topology::{NumaPolicy, Placement, Topology};
 pub use weights::{DType, WeightArray, WeightsFile};

@@ -9,7 +9,9 @@
 //!    combine them in item order, so output (and any f32 reduction a caller
 //!    performs) is bit-identical at every thread count *and every placement
 //!    policy* — where a worker runs changes when a tile finishes, never
-//!    what it computes.
+//!    what it computes. The fault-recovery ladder preserves this: a lost
+//!    chunk is re-executed (inline, same items, same `g`), so a recovered
+//!    dispatch returns exactly the bytes the fault-free one would.
 //! 2. **No dependencies** — built on `std::thread` + `std::sync::mpsc`; no
 //!    rayon/crossbeam offline. Thread pinning goes through the two-line
 //!    `sched_setaffinity` shim in [`super::topology`], the only `unsafe`
@@ -22,6 +24,22 @@
 //!    every column tile to the node holding that tile's weight shard.
 //!    Single-node hosts (and `SAIL_NUMA=off`) degrade to one unpinned
 //!    group, which is exactly the pre-NUMA pool.
+//! 4. **Fault tolerance** — a dead worker is a *recoverable* event, not a
+//!    process abort. The degradation ladder, in order: (a) the dispatcher
+//!    polls its results barrier with a short timeout and **heals** the
+//!    pool on stall — dead workers are joined and respawned on their own
+//!    node, within a bounded respawn budget (default `2×threads`, min 4);
+//!    (b) a chunk that died with its worker is re-executed **inline** on
+//!    the dispatching thread (bit-identical by construction — same items,
+//!    same pure `g`); (c) a node group with zero live workers and no
+//!    budget left marks the pool **degraded**: its queue is drained
+//!    inline and every later dispatch runs serially on the caller's
+//!    thread — slower, never wrong, never deadlocked. An item that
+//!    *itself* panics (a compute bug, not a dead worker) fails the retry
+//!    too and surfaces as a typed [`PoolError`] from the `try_*` entry
+//!    points. Deterministic fault injection for all of this lives in
+//!    [`super::faults`]; arm a plan with
+//!    [`arm_faults`](WorkerPool::arm_faults).
 //!
 //! The workers are **long-lived**: spawned once, blocking on their group's
 //! job channel, serving every dispatch until the pool is dropped — one
@@ -44,14 +62,87 @@
 //! [`run_ctx_routed`]: WorkerPool::run_ctx_routed
 //! [`NumaPolicy`]: super::topology::NumaPolicy
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use super::faults::{FaultCell, FaultPlan};
 use super::topology::{pin_current_thread, NumaPolicy, Placement};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// How often a blocked dispatcher wakes to reap/respawn dead workers.
+/// Fault-free dispatches only pay this when a GEMV outlasts the poll
+/// (heal on a healthy pool is a handful of `is_finished` checks).
+const HEAL_POLL: Duration = Duration::from_millis(10);
+
+/// A typed dispatch failure: the pool could not produce results for
+/// `items` even after recovery (worker respawn + inline re-execution).
+/// This means the *work itself* fails — a panicking tile job — not merely
+/// a dead worker; dead workers are healed transparently.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolError {
+    /// Node group the failing items were assigned to (0 on single-group
+    /// and inline-serial pools).
+    pub node: usize,
+    /// Half-open item range `[start, end)` that failed.
+    pub items: (usize, usize),
+    /// The captured panic message of the failing item.
+    pub detail: String,
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pool dispatch failed on node {}: items [{}, {}): {}",
+            self.node, self.items.0, self.items.1, self.detail
+        )
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+fn panic_detail(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked (non-string payload)".to_string()
+    }
+}
+
+/// Run items `[start, end)` on the calling thread, catching a per-item
+/// panic as a typed error — the bottom rung of the degradation ladder and
+/// the serial reference path (bit-identical to a pooled run: same items,
+/// same `g`, same order of any caller-side reduction).
+fn run_inline<C, T, G>(
+    ctx: &Arc<C>,
+    start: usize,
+    end: usize,
+    g: G,
+    node: usize,
+) -> Result<Vec<T>, PoolError>
+where
+    C: Send + Sync + 'static,
+    T: Send + 'static,
+    G: Fn(&C, usize) -> T + Send + Copy + 'static,
+{
+    let mut out = Vec::with_capacity(end - start);
+    for i in start..end {
+        let item = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| g(ctx.as_ref(), i)));
+        match item {
+            Ok(v) => out.push(v),
+            Err(p) => {
+                return Err(PoolError { node, items: (i, i + 1), detail: panic_detail(p) })
+            }
+        }
+    }
+    Ok(out)
+}
 
 /// One node group's job queue (the workers of that group are the only
 /// consumers, so a job sent here runs on that node).
@@ -60,17 +151,109 @@ struct NodeQueue {
     workers: usize,
 }
 
+/// One live worker thread and the node group it serves.
+struct WorkerSlot {
+    node: usize,
+    handle: JoinHandle<()>,
+}
+
 /// The long-lived half of a threaded pool: per-node job queues feeding the
-/// workers, and the workers themselves (joined when the pool drops).
+/// workers, the workers themselves (reaped/respawned by `heal`, joined
+/// when the pool drops), and the respawn accounting.
 struct Shared {
     queues: Vec<NodeQueue>,
-    workers: Vec<JoinHandle<()>>,
+    /// Each group's receive end, retained so a respawned worker resumes
+    /// the *same* queue — jobs enqueued behind a dead worker are never
+    /// orphaned.
+    receivers: Vec<Arc<Mutex<Receiver<Job>>>>,
+    /// Pin targets per group (empty ⇒ unpinned placement).
+    node_cpus: Vec<Vec<usize>>,
+    workers: Mutex<Vec<WorkerSlot>>,
     generations: AtomicU64,
+    /// Remaining worker respawns before a dead group degrades the pool.
+    respawn_budget: AtomicU64,
+    /// Workers respawned so far (observability for tests and benches).
+    respawns: AtomicU64,
+    /// Latched once any group runs out of workers and budget: every later
+    /// dispatch runs inline-serial (correct, never deadlocked).
+    degraded: AtomicBool,
     /// Workers whose `sched_setaffinity` call succeeded (observability:
     /// the perf bench records it next to the pinned-vs-unpinned matrix).
-    /// Final by construction: every worker acks its pin attempt before
-    /// `with_placement` returns.
+    /// Counts the construction-time cohort — every startup worker acks its
+    /// pin attempt before `with_placement` returns; respawned workers pin
+    /// best-effort without re-acking.
     pinned_workers: usize,
+    /// The pool's armable fault schedule (workers check it per dequeue).
+    faults: Arc<FaultCell>,
+}
+
+impl Shared {
+    /// Take one unit of respawn budget, if any remains.
+    fn take_respawn(&self) -> bool {
+        let mut cur = self.respawn_budget.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.respawn_budget.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => cur = now,
+            }
+        }
+        false
+    }
+
+    /// Reap dead workers, respawn them on their own node while budget
+    /// remains, and degrade any group left with zero workers (draining
+    /// its queue inline so no dispatcher can deadlock behind it). Cheap
+    /// when healthy: a lock and one `is_finished` check per worker.
+    fn heal(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        let mut i = 0;
+        while i < ws.len() {
+            if !ws[i].handle.is_finished() {
+                i += 1;
+                continue;
+            }
+            let dead = ws.swap_remove(i);
+            let node = dead.node;
+            let _ = dead.handle.join();
+            if !self.take_respawn() {
+                continue;
+            }
+            let rx = Arc::clone(&self.receivers[node]);
+            let cpus = self.node_cpus[node].clone();
+            let faults = Arc::clone(&self.faults);
+            let k = self.respawns.fetch_add(1, Ordering::Relaxed);
+            let spawned = std::thread::Builder::new()
+                .name(format!("sail-pool-n{node}-r{k}"))
+                .spawn(move || {
+                    if !cpus.is_empty() {
+                        pin_current_thread(&cpus);
+                    }
+                    worker_loop(&rx, &faults)
+                });
+            if let Ok(handle) = spawned {
+                ws.push(WorkerSlot { node, handle });
+            }
+        }
+        for node in 0..self.queues.len() {
+            if ws.iter().any(|w| w.node == node) {
+                continue;
+            }
+            // No worker left on this group and no budget to respawn one:
+            // latch degraded mode and run its queued jobs here — each job
+            // reports to its own dispatcher's barrier, so every blocked
+            // caller (ours or a concurrent one) still completes.
+            self.degraded.store(true, Ordering::Release);
+            let rx = self.receivers[node].lock().unwrap();
+            while let Ok(job) = rx.try_recv() {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            }
+        }
+    }
 }
 
 /// A fixed-width pool of persistent workers, grouped by NUMA node.
@@ -95,14 +278,18 @@ struct Shared {
 /// let b = LutGemvEngine::new(quantize(&[-0.75; 64]), 4);
 /// let x = [QuantizedVector::quantize(&[1.0; 16])];
 /// let mut out = GemvOutput::new();
-/// a.gemv_batch_into(&x, &pool, &mut out);
+/// a.gemv_batch_into(&x, &pool, &mut out).unwrap();
 /// let a0 = out.row(0)[0];
-/// b.gemv_batch_into(&x, &pool, &mut out);
+/// b.gemv_batch_into(&x, &pool, &mut out).unwrap();
 /// assert!(a0 > 0.0 && out.row(0)[0] < 0.0);
 /// ```
 pub struct WorkerPool {
     threads: usize,
     placement: Placement,
+    /// Armable fault schedule; shared with every worker thread (serial
+    /// pools keep one too — engine- and cache-boundary hooks read it even
+    /// when no worker exists).
+    faults: Arc<FaultCell>,
     shared: Option<Shared>,
 }
 
@@ -113,6 +300,7 @@ impl std::fmt::Debug for WorkerPool {
             .field("nodes", &self.placement.nodes().len())
             .field("pinned", &self.placement.pinned())
             .field("persistent", &self.shared.is_some())
+            .field("degraded", &self.degraded())
             .finish()
     }
 }
@@ -140,10 +328,13 @@ impl WorkerPool {
     /// call costs locality, never correctness).
     pub fn with_placement(placement: Placement) -> Self {
         let threads = placement.total_workers().max(1);
+        let faults = Arc::new(FaultCell::default());
         if threads == 1 && !placement.pinned() {
-            return WorkerPool { threads, placement, shared: None };
+            return WorkerPool { threads, placement, faults, shared: None };
         }
         let mut queues = Vec::with_capacity(placement.nodes().len());
+        let mut receivers = Vec::with_capacity(placement.nodes().len());
+        let mut node_cpus = Vec::with_capacity(placement.nodes().len());
         let mut workers = Vec::with_capacity(threads);
         // Startup handshake: every worker reports its pin result before
         // the constructor returns, so `pinned_workers()` is exact (the
@@ -152,43 +343,76 @@ impl WorkerPool {
         for (ni, node) in placement.nodes().iter().enumerate() {
             let (tx, rx) = channel::<Job>();
             let rx = Arc::new(Mutex::new(rx));
+            let cpus = if placement.pinned() { node.cpus.clone() } else { Vec::new() };
             for w in 0..node.workers {
                 let rx = Arc::clone(&rx);
-                let cpus = if placement.pinned() { node.cpus.clone() } else { Vec::new() };
+                let cpus = cpus.clone();
+                let cell = Arc::clone(&faults);
                 let ack = ack_tx.clone();
-                workers.push(
-                    std::thread::Builder::new()
-                        .name(format!("sail-pool-n{ni}-{w}"))
-                        .spawn(move || {
-                            let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
-                            let _ = ack.send(pinned);
-                            drop(ack);
-                            worker_loop(&rx)
-                        })
-                        .expect("spawning pool worker"),
-                );
+                let handle = std::thread::Builder::new()
+                    .name(format!("sail-pool-n{ni}-{w}"))
+                    .spawn(move || {
+                        let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
+                        let _ = ack.send(pinned);
+                        drop(ack);
+                        worker_loop(&rx, &cell)
+                    })
+                    .expect("spawning pool worker");
+                workers.push(WorkerSlot { node: ni, handle });
             }
             queues.push(NodeQueue { jobs: Mutex::new(tx), workers: node.workers });
+            receivers.push(rx);
+            node_cpus.push(cpus);
         }
         drop(ack_tx);
         let pinned_workers = ack_rx.iter().filter(|&p| p).count();
-        let shared =
-            Shared { queues, workers, generations: AtomicU64::new(0), pinned_workers };
-        WorkerPool { threads, placement, shared: Some(shared) }
+        let shared = Shared {
+            queues,
+            receivers,
+            node_cpus,
+            workers: Mutex::new(workers),
+            generations: AtomicU64::new(0),
+            respawn_budget: AtomicU64::new(((2 * threads).max(4)) as u64),
+            respawns: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            pinned_workers,
+            faults: Arc::clone(&faults),
+        };
+        WorkerPool { threads, placement, faults, shared: Some(shared) }
+    }
+
+    /// Strict parse of a `SAIL_POOL_THREADS` value: a positive integer or
+    /// a typed error (the env audit's contract — malformed config is an
+    /// `Err`, never a panic).
+    pub fn parse_pool_threads(s: &str) -> Result<usize, String> {
+        let t = s
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| format!("invalid SAIL_POOL_THREADS value '{s}': {e}"))?;
+        if t == 0 {
+            return Err(format!("invalid SAIL_POOL_THREADS value '{s}': want an integer ≥ 1"));
+        }
+        Ok(t)
     }
 
     /// The auto pool width: `SAIL_POOL_THREADS` when set to a positive
     /// integer, else one worker per available core. [`auto`](Self::auto)
     /// and the serving drivers share this, so the env semantics live in
-    /// exactly one place.
+    /// exactly one place. A malformed value is *lenient* here (warn and
+    /// fall back to the core count — pool construction stays infallible);
+    /// [`parse_pool_threads`](Self::parse_pool_threads) is the strict
+    /// form for callers that want the typed error.
     pub fn auto_width() -> usize {
-        std::env::var("SAIL_POOL_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            .filter(|&t| t > 0)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
+        match std::env::var("SAIL_POOL_THREADS") {
+            Ok(v) => match Self::parse_pool_threads(&v) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("sail: {e}; falling back to available cores");
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+                }
+            },
+            Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
     }
 
     /// One worker per available core, overridable with the
@@ -228,8 +452,9 @@ impl WorkerPool {
     }
 
     /// Workers whose affinity call succeeded (0 on unpinned placements and
-    /// on hosts where `sched_setaffinity` is unavailable). Exact, not
-    /// advisory: every worker acks its pin attempt during construction.
+    /// on hosts where `sched_setaffinity` is unavailable). Exact for the
+    /// construction-time cohort: every startup worker acks its pin attempt
+    /// during construction.
     pub fn pinned_workers(&self) -> usize {
         self.shared.as_ref().map(|s| s.pinned_workers).unwrap_or(0)
     }
@@ -241,13 +466,58 @@ impl WorkerPool {
         self.shared.as_ref().map(|s| s.generations.load(Ordering::Relaxed)).unwrap_or(0)
     }
 
+    /// Arm a deterministic fault schedule on this pool: workers (and the
+    /// engine/cache hooks of everything dispatching on this pool) consult
+    /// it until [`disarm_faults`](Self::disarm_faults). Plans are
+    /// pool-scoped, so concurrently running pools never consume each
+    /// other's fault ticks.
+    pub fn arm_faults(&self, plan: Arc<FaultPlan>) {
+        self.faults.arm(plan);
+    }
+
+    /// Remove any armed fault schedule (the fault-free fast path is one
+    /// relaxed atomic load per check site).
+    pub fn disarm_faults(&self) {
+        self.faults.disarm();
+    }
+
+    /// The armed fault schedule, if any — read by the LUT-GEMV engine's
+    /// tile jobs and the decode forward's KV hooks.
+    pub fn fault_plan(&self) -> Option<Arc<FaultPlan>> {
+        self.faults.get()
+    }
+
+    /// Override the worker respawn budget (default `2×threads`, min 4).
+    /// The chaos tests drop it to 0 to force full degradation.
+    pub fn set_respawn_budget(&self, budget: u64) {
+        if let Some(s) = &self.shared {
+            s.respawn_budget.store(budget, Ordering::Relaxed);
+        }
+    }
+
+    /// Workers respawned so far after dying (0 on a healthy pool).
+    pub fn respawned_workers(&self) -> u64 {
+        self.shared.as_ref().map(|s| s.respawns.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// True once any node group lost all workers with no respawn budget
+    /// left: the pool has permanently fallen back to inline-serial
+    /// dispatch (the bottom rung of the degradation ladder).
+    pub fn degraded(&self) -> bool {
+        self.shared
+            .as_ref()
+            .map(|s| s.degraded.load(Ordering::Acquire))
+            .unwrap_or(false)
+    }
+
     /// Evaluate `g(ctx, 0..n_items)` across the pool, returning results in
     /// item order. All shared state must travel through `ctx` (cloned into
     /// each chunk job as an `Arc`); `g` itself must be stateless —
     /// `Copy + 'static` admits function pointers and non-capturing
     /// closures, and is what lets the jobs cross to persistent workers
-    /// without `unsafe`. `g` must be pure per item (items run concurrently
-    /// and their assignment to workers is an implementation detail).
+    /// without `unsafe`. `g` must be pure per item (items run concurrently,
+    /// their assignment to workers is an implementation detail, and fault
+    /// recovery may re-execute a lost chunk's items).
     ///
     /// Items carry no placement hint here: chunks are spread over the node
     /// groups proportionally to their worker counts. Use
@@ -261,17 +531,40 @@ impl WorkerPool {
     ///
     /// # Panics
     ///
-    /// If a job panics its worker survives (the panic is caught), but the
-    /// dispatching `run_ctx` call panics — a lost chunk can never be
-    /// silently dropped from the results.
+    /// If an item's own computation panics even on the inline retry — see
+    /// [`try_run_ctx`](WorkerPool::try_run_ctx) for the non-panicking
+    /// form. Dead workers alone never panic the dispatcher: their chunks
+    /// are recovered.
     pub fn run_ctx<C, T, G>(&self, ctx: &Arc<C>, n_items: usize, g: G) -> Vec<T>
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
         G: Fn(&C, usize) -> T + Send + Copy + 'static,
     {
+        match self.try_run_ctx(ctx, n_items, g) {
+            Ok(v) => v,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`run_ctx`](WorkerPool::run_ctx) with a typed error instead of a
+    /// panic: a worker failure is healed (respawn + inline re-execution of
+    /// the lost chunk, bit-identical by construction); only an item whose
+    /// computation itself fails twice surfaces as a [`PoolError`] naming
+    /// the item range and node.
+    pub fn try_run_ctx<C, T, G>(
+        &self,
+        ctx: &Arc<C>,
+        n_items: usize,
+        g: G,
+    ) -> Result<Vec<T>, PoolError>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+    {
         let Some(shared) = self.dispatchable(n_items) else {
-            return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect();
+            return run_inline(ctx, 0, n_items, g, 0);
         };
         // Split into min(threads, n_items) contiguous chunks, then assign
         // chunk ranges to node groups proportionally to worker counts —
@@ -289,7 +582,7 @@ impl WorkerPool {
                 plan.push((node, start, end));
             }
         }
-        self.dispatch(shared, ctx, plan, g)
+        self.try_dispatch(shared, ctx, plan, g)
     }
 
     /// Evaluate `g(ctx, 0..n_items)` across the pool with explicit
@@ -305,8 +598,10 @@ impl WorkerPool {
     ///
     /// # Panics
     ///
-    /// If `route` returns a node index `≥ self.nodes()`, or if a job
-    /// panics (see [`run_ctx`](WorkerPool::run_ctx)).
+    /// If `route` returns a node index `≥ self.nodes()` (a caller planning
+    /// bug, loud in every build), or if an item's computation panics even
+    /// on the inline retry (see
+    /// [`try_run_ctx_routed`](WorkerPool::try_run_ctx_routed)).
     pub fn run_ctx_routed<C, T, G, R>(
         &self,
         ctx: &Arc<C>,
@@ -320,8 +615,30 @@ impl WorkerPool {
         G: Fn(&C, usize) -> T + Send + Copy + 'static,
         R: Fn(&C, usize) -> usize,
     {
+        match self.try_run_ctx_routed(ctx, n_items, route, g) {
+            Ok(v) => v,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// [`run_ctx_routed`](WorkerPool::run_ctx_routed) with a typed error
+    /// instead of a panic on item failure (route-to-unknown-node remains a
+    /// loud planning assert).
+    pub fn try_run_ctx_routed<C, T, G, R>(
+        &self,
+        ctx: &Arc<C>,
+        n_items: usize,
+        route: R,
+        g: G,
+    ) -> Result<Vec<T>, PoolError>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        R: Fn(&C, usize) -> usize,
+    {
         let Some(shared) = self.dispatchable(n_items) else {
-            return (0..n_items).map(|i| g(ctx.as_ref(), i)).collect();
+            return run_inline(ctx, 0, n_items, g, 0);
         };
         // Group consecutive items by node, then split each run across the
         // owning node's workers.
@@ -349,7 +666,7 @@ impl WorkerPool {
                 run_node = node;
             }
         }
-        self.dispatch(shared, ctx, plan, g)
+        self.try_dispatch(shared, ctx, plan, g)
     }
 
     /// Evaluate `f(0..n_items)` across the pool, returning results in item
@@ -364,25 +681,39 @@ impl WorkerPool {
         self.run_ctx(&Arc::new(f), n_items, |f, i| f(i))
     }
 
+    /// [`run`](WorkerPool::run) with a typed error instead of a panic on
+    /// item failure.
+    pub fn try_run<T, F>(&self, n_items: usize, f: F) -> Result<Vec<T>, PoolError>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        self.try_run_ctx(&Arc::new(f), n_items, |f, i| f(i))
+    }
+
     /// The shared state, iff this dispatch should actually fan out
-    /// (`None` ⇒ run inline on the caller's thread).
+    /// (`None` ⇒ run inline on the caller's thread — serial pools, single
+    /// items, and pools degraded past their respawn budget).
     fn dispatchable(&self, n_items: usize) -> Option<&Shared> {
         match &self.shared {
-            Some(s) if n_items > 1 => Some(s),
+            Some(s) if n_items > 1 && !s.degraded.load(Ordering::Acquire) => Some(s),
             _ => None,
         }
     }
 
     /// Enqueue one job per `(node, start, end)` chunk and barrier on the
-    /// per-generation results channel. Chunks must be in item order and
-    /// tile `[0, n)` exactly; results are flattened back in chunk order.
-    fn dispatch<C, T, G>(
+    /// per-generation results channel, healing the pool on stalls. Chunks
+    /// must be in item order and tile `[0, n)` exactly; results are
+    /// flattened back in chunk order. A chunk whose worker died is
+    /// re-executed inline (same items, same `g` — bit-identical); only an
+    /// item that fails again surfaces as a typed error.
+    fn try_dispatch<C, T, G>(
         &self,
         shared: &Shared,
         ctx: &Arc<C>,
         plan: Vec<(usize, usize, usize)>,
         g: G,
-    ) -> Vec<T>
+    ) -> Result<Vec<T>, PoolError>
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
@@ -394,7 +725,7 @@ impl WorkerPool {
         // then enqueue lock-free — concurrent dispatchers on a shared
         // pool don't serialize their enqueue phases.
         let mut senders: Vec<Option<Sender<Job>>> = vec![None; shared.queues.len()];
-        for (c, (node, start, end)) in plan.into_iter().enumerate() {
+        for (c, &(node, start, end)) in plan.iter().enumerate() {
             let ctx = Arc::clone(ctx);
             let tx = tx.clone();
             let job: Job = Box::new(move || {
@@ -414,17 +745,42 @@ impl WorkerPool {
         drop(tx);
         let mut slots: Vec<Option<Vec<T>>> = Vec::with_capacity(n_chunks);
         slots.resize_with(n_chunks, || None);
-        for _ in 0..n_chunks {
-            match rx.recv() {
-                Ok((c, out)) => slots[c] = Some(out),
-                Err(_) => panic!("pool worker dropped a chunk (job panicked?)"),
+        let mut received = 0usize;
+        while received < n_chunks {
+            match rx.recv_timeout(HEAL_POLL) {
+                Ok((c, out)) => {
+                    slots[c] = Some(out);
+                    received += 1;
+                }
+                // A stall: maybe just a long tile, maybe a dead worker
+                // sitting on its group's queue. Heal reaps/respawns the
+                // dead and drains any worker-less group, so the barrier
+                // always makes progress.
+                Err(RecvTimeoutError::Timeout) => shared.heal(),
+                // Every sender is gone: all surviving chunks reported;
+                // whatever is still missing died with its job.
+                Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        slots.into_iter().flat_map(|s| s.expect("every chunk reports exactly once")).collect()
+        if received < n_chunks {
+            // Heal first (reap + respawn for future dispatches), then
+            // re-execute each lost chunk inline. Re-execution is
+            // bit-identical by construction: same items, same pure `g`.
+            shared.heal();
+            for (c, &(node, start, end)) in plan.iter().enumerate() {
+                if slots[c].is_none() {
+                    slots[c] = Some(run_inline(ctx, start, end, g, node)?);
+                }
+            }
+        }
+        Ok(slots
+            .into_iter()
+            .flat_map(|s| s.expect("every chunk accounted for"))
+            .collect())
     }
 }
 
-fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+fn worker_loop(rx: &Mutex<Receiver<Job>>, faults: &FaultCell) {
     loop {
         // Hold the lock only while dequeueing; a closed channel ends the
         // worker (the pool dropped its sender).
@@ -432,9 +788,18 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>) {
             Ok(job) => job,
             Err(_) => return,
         };
+        // Injected worker death: drop the job unrun and exit the thread —
+        // exactly what a crashed worker looks like to the dispatcher (a
+        // lost chunk + a joinable handle for heal to reap).
+        if let Some(plan) = faults.get() {
+            if plan.worker_panic() {
+                drop(job);
+                return;
+            }
+        }
         // A panicking job must not kill the worker — the pool would
         // silently lose width for every later dispatch. The dispatcher
-        // notices the lost chunk and panics on its own thread.
+        // notices the lost chunk and retries it inline on its own thread.
         let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
     }
 }
@@ -444,8 +809,8 @@ impl Drop for WorkerPool {
         if let Some(shared) = self.shared.take() {
             // Closing every queue ends every worker_loop.
             drop(shared.queues);
-            for w in shared.workers {
-                let _ = w.join();
+            for w in shared.workers.into_inner().unwrap() {
+                let _ = w.handle.join();
             }
         }
     }
@@ -460,6 +825,7 @@ impl Default for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::faults::FaultKind;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -524,6 +890,17 @@ mod tests {
     }
 
     #[test]
+    fn pool_threads_parse_rejects_malformed_forms_typed() {
+        for bad in ["", "x", "-3", "0", "1.5", "8 cores"] {
+            assert!(
+                WorkerPool::parse_pool_threads(bad).is_err(),
+                "'{bad}' must be a typed parse error"
+            );
+        }
+        assert_eq!(WorkerPool::parse_pool_threads(" 8 "), Ok(8));
+    }
+
+    #[test]
     fn workers_persist_across_dispatches() {
         let pool = WorkerPool::new(3);
         for round in 0..50usize {
@@ -580,6 +957,83 @@ mod tests {
         assert_eq!(pool.run(4, |i| i), vec![0, 1, 2, 3]);
     }
 
+    #[test]
+    fn poisoned_item_is_a_typed_error_not_a_panic() {
+        // The same poisoned item through the try_ entry point: a
+        // PoolError naming the item, no panic on the dispatcher thread.
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::with_policy(threads, &NumaPolicy::Off);
+            let err = pool
+                .try_run(6, |i| {
+                    assert!(i != 3, "poisoned item");
+                    i * 2
+                })
+                .unwrap_err();
+            assert!(
+                err.items.0 <= 3 && 3 < err.items.1,
+                "error range {:?} must cover the poisoned item (threads={threads})",
+                err.items
+            );
+            assert!(err.detail.contains("poisoned item"), "{err}");
+            assert!(err.to_string().contains("pool dispatch failed"), "{err}");
+            // The pool still serves.
+            assert_eq!(pool.try_run(4, |i| i).unwrap(), vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn injected_worker_death_is_healed_and_results_recovered() {
+        let pool = WorkerPool::with_policy(4, &NumaPolicy::Off);
+        pool.arm_faults(Arc::new(FaultPlan::new(11).with(FaultKind::WorkerPanic, 1)));
+        // The first dequeued job dies with its worker; the dispatcher
+        // recovers the lost chunk inline — results stay bit-identical —
+        // and heal respawns the worker.
+        let got = pool.run(32, |i| i * 5);
+        assert_eq!(got, (0..32).map(|i| i * 5).collect::<Vec<_>>());
+        assert!(!pool.degraded(), "one death is well inside the budget");
+        assert_eq!(pool.respawned_workers(), 1, "heal must respawn the dead worker");
+        pool.disarm_faults();
+        // Full width serves again after the respawn.
+        let got = pool.run(16, |i| i + 7);
+        assert_eq!(got, (0..16).map(|i| i + 7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn respawn_budget_exhaustion_degrades_to_serial_not_a_hang() {
+        let pool = WorkerPool::with_policy(2, &NumaPolicy::Off);
+        pool.set_respawn_budget(0);
+        // Both workers die on their first dequeue; with no budget the
+        // group empties, the pool degrades, and the dispatch must still
+        // return complete, correct results (inline recovery).
+        pool.arm_faults(Arc::new(
+            FaultPlan::new(3)
+                .with(FaultKind::WorkerPanic, 1)
+                .with(FaultKind::WorkerPanic, 2),
+        ));
+        let got = pool.run(8, |i| i * 3);
+        assert_eq!(got, (0..8).map(|i| i * 3).collect::<Vec<_>>());
+        assert!(pool.degraded(), "an empty group with no budget must latch degraded");
+        assert_eq!(pool.respawned_workers(), 0);
+        pool.disarm_faults();
+        // Degraded pools serve inline-serial: correct, and no new pooled
+        // generations are minted.
+        let gens = pool.generations();
+        let got = pool.run(8, |i| i + 1);
+        assert_eq!(got, (1..9).collect::<Vec<_>>());
+        assert_eq!(pool.generations(), gens, "degraded dispatch must not touch the queue");
+    }
+
+    #[test]
+    fn armed_but_silent_plan_leaves_results_unchanged() {
+        let pool = WorkerPool::new(3);
+        let baseline = pool.run(21, |i| i * 13);
+        pool.arm_faults(Arc::new(FaultPlan::new(5).with(FaultKind::WorkerPanic, 1_000_000)));
+        let armed = pool.run(21, |i| i * 13);
+        pool.disarm_faults();
+        assert_eq!(armed, baseline, "an unfired plan must be invisible");
+        assert!(pool.fault_plan().is_none(), "disarm must clear the plan");
+    }
+
     /// A fake 2-node placement that works on any host: groups are real,
     /// pinning is requested but CPUs may overlap the whole machine — the
     /// routing and determinism guarantees must hold regardless of whether
@@ -629,6 +1083,18 @@ mod tests {
             pool.run_ctx_routed(&ctx, 4, |_, _| 7, |_, i| i)
         }));
         assert!(r.is_err(), "routing to a nonexistent group must be loud");
+    }
+
+    #[test]
+    fn routed_dispatch_survives_worker_death_on_a_group() {
+        let pool = fake_two_node(4);
+        pool.arm_faults(Arc::new(FaultPlan::new(17).with(FaultKind::WorkerPanic, 1)));
+        let ctx = Arc::new((0..24usize).collect::<Vec<_>>());
+        let routed =
+            pool.run_ctx_routed(&ctx, 24, |_, i| usize::from(i >= 12), |d, i| d[i] * 9);
+        pool.disarm_faults();
+        assert_eq!(routed, (0..24).map(|i| i * 9).collect::<Vec<_>>());
+        assert_eq!(Arc::strong_count(&ctx), 1, "recovery must not leak context clones");
     }
 
     #[test]

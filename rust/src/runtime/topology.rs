@@ -239,18 +239,33 @@ impl NumaPolicy {
         Ok(NumaPolicy::Explicit(groups))
     }
 
-    /// The process-wide policy from the `SAIL_NUMA` environment variable
-    /// (absent ⇒ [`NumaPolicy::Auto`]).
-    ///
-    /// # Panics
-    ///
-    /// On a malformed `SAIL_NUMA` value — a misconfigured placement must
-    /// be loud, not silently unpinned.
-    pub fn from_env() -> NumaPolicy {
+    /// Strict read of the `SAIL_NUMA` environment variable: `Auto` when
+    /// absent, the parsed policy when well-formed, and a typed `Err`
+    /// (never a panic) on a malformed value — the form for callers that
+    /// want to reject bad config at their own boundary (the env audit's
+    /// contract).
+    pub fn try_from_env() -> Result<NumaPolicy, String> {
         match std::env::var("SAIL_NUMA") {
-            Ok(v) => NumaPolicy::parse(&v)
-                .unwrap_or_else(|e| panic!("invalid SAIL_NUMA value: {e}")),
-            Err(_) => NumaPolicy::Auto,
+            Ok(v) => {
+                NumaPolicy::parse(&v).map_err(|e| format!("invalid SAIL_NUMA value: {e}"))
+            }
+            Err(_) => Ok(NumaPolicy::Auto),
+        }
+    }
+
+    /// The process-wide policy from the `SAIL_NUMA` environment variable
+    /// (absent ⇒ [`NumaPolicy::Auto`]). Lenient: a malformed value warns
+    /// on stderr and falls back to `Auto` so pool construction stays
+    /// infallible — a mis-typed placement costs locality, never the
+    /// process. Use [`try_from_env`](NumaPolicy::try_from_env) to get the
+    /// typed error instead.
+    pub fn from_env() -> NumaPolicy {
+        match Self::try_from_env() {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("sail: {e}; falling back to SAIL_NUMA=auto");
+                NumaPolicy::Auto
+            }
         }
     }
 }

@@ -71,6 +71,41 @@ impl Json {
         out
     }
 
+    /// Serialize to `path` atomically: the text is written to a
+    /// pid-unique temp file in the same directory and renamed into
+    /// place. A crash (or injected fault) mid-write can therefore never
+    /// leave a truncated artifact at `path` — readers see either the old
+    /// complete file or the new complete file. BENCH_*.json emitters use
+    /// this so a killed bench run cannot corrupt a previous result.
+    pub fn write_atomic(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    format!("write_atomic target '{}' has no file name", path.display()),
+                )
+            })?
+            .to_os_string();
+        let mut tmp_name = file_name;
+        tmp_name.push(format!(".{}.tmp", std::process::id()));
+        let tmp = match dir {
+            Some(d) => d.join(&tmp_name),
+            None => std::path::PathBuf::from(&tmp_name),
+        };
+        std::fs::write(&tmp, self.dump())?;
+        // Same-directory rename is atomic on POSIX; on failure, clean up
+        // the temp file so aborted writes do not accumulate.
+        match std::fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -326,5 +361,42 @@ mod tests {
         assert_eq!(Json::Num(f64::NAN).dump(), "null");
         assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
         assert_eq!(Json::Num(2.5).dump(), "2.5");
+    }
+
+    #[test]
+    fn write_atomic_survives_a_simulated_partial_write() {
+        let dir = std::env::temp_dir().join(format!("sail-json-atomic-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bench.json");
+
+        let old = Json::Obj(BTreeMap::from([("v".to_string(), Json::Num(1.0))]));
+        old.write_atomic(&path).unwrap();
+        assert_eq!(Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap(), old);
+
+        // A writer that died mid-write leaves a truncated *temp* file —
+        // the published path is untouched. Simulate the torn state the
+        // non-atomic `fs::write(path, …)` would have produced and check
+        // the atomic protocol never exposes it.
+        let new = Json::Obj(BTreeMap::from([("v".to_string(), Json::Num(2.0))]));
+        let full = new.dump();
+        let torn = &full[..full.len() / 2];
+        let tmp = dir.join(format!("bench.json.{}.tmp", std::process::id()));
+        std::fs::write(&tmp, torn).unwrap();
+        assert!(Json::parse(torn).is_err(), "the torn prefix must not be valid JSON");
+        assert_eq!(
+            Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap(),
+            old,
+            "a dead writer's temp file must not clobber the published artifact"
+        );
+
+        // Completing the protocol (write_atomic reuses the same temp
+        // name) replaces the file with the complete new value.
+        new.write_atomic(&path).unwrap();
+        assert_eq!(Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap(), new);
+        assert!(!tmp.exists(), "temp file must be renamed away, not left behind");
+
+        // And the target must be a real file name, typed.
+        assert!(new.write_atomic(std::path::Path::new("/")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

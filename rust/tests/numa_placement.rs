@@ -82,14 +82,14 @@ fn per_node_arenas_reach_steady_state() {
     let mut eng = LutGemvEngine::with_pool(wt, 4, &pool);
     eng.tile_cols = 8;
     let mut out = GemvOutput::new();
-    let baseline = eng.gemv_batch_into(&xs, &pool, &mut out);
+    let baseline = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
     for _ in 0..10 {
-        assert_eq!(eng.gemv_batch_into(&xs, &pool, &mut out), baseline);
+        assert_eq!(eng.gemv_batch_into(&xs, &pool, &mut out).unwrap(), baseline);
     }
     let after_warm =
         (eng.scratch_arena().scratches_created(), eng.scratch_arena().out_bufs_created());
     for _ in 0..10 {
-        assert_eq!(eng.gemv_batch_into(&xs, &pool, &mut out), baseline);
+        assert_eq!(eng.gemv_batch_into(&xs, &pool, &mut out).unwrap(), baseline);
     }
     assert_eq!(
         (eng.scratch_arena().scratches_created(), eng.scratch_arena().out_bufs_created()),

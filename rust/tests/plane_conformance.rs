@@ -70,7 +70,7 @@ fn assert_conformance(
     for threads in [1usize, 2, 8] {
         let pool = WorkerPool::new(threads);
         let mut out = GemvOutput::new();
-        let stats = lane_eng.gemv_batch_into(xs, &pool, &mut out);
+        let stats = lane_eng.gemv_batch_into(xs, &pool, &mut out).unwrap();
         if out != want {
             return Err(format!("{label}: output drift at threads={threads}"));
         }
@@ -81,7 +81,7 @@ fn assert_conformance(
     // And at the ambient width (SAIL_POOL_THREADS in the CI matrix).
     let auto = WorkerPool::auto();
     let mut out = GemvOutput::new();
-    let stats = lane_eng.gemv_batch_into(xs, &auto, &mut out);
+    let stats = lane_eng.gemv_batch_into(xs, &auto, &mut out).unwrap();
     if out != want || stats != want_stats {
         return Err(format!("{label}: drift on auto pool ({} threads)", auto.threads()));
     }

@@ -131,7 +131,7 @@ fn saturating_the_pool_with_excess_jobs_never_deadlocks() {
                 eng.tile_cols = 1; // 64 single-column tiles per dispatch
                 let mut out = GemvOutput::new();
                 for round in 0..10 {
-                    let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                    let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
                     assert_eq!(out, want, "caller {t} round {round}");
                     assert_eq!(stats, want_stats, "caller {t} round {round} stats");
                 }

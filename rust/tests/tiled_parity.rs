@@ -66,7 +66,7 @@ fn tiled_backend_bit_identical_property() {
             for threads in [1usize, 2, 8] {
                 let pool = WorkerPool::new(threads);
                 let mut out = GemvOutput::new();
-                let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
                 if out != serial {
                     return Err(format!("output drift at threads={threads} tile_cols={tile_cols}"));
                 }
@@ -102,7 +102,7 @@ fn tiled_backend_bit_identical_with_prt() {
             for threads in [2usize, 8] {
                 let pool = WorkerPool::new(threads);
                 let mut out = GemvOutput::new();
-                let stats = eng.gemv_batch_into(&xs, &pool, &mut out);
+                let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
                 if out != serial {
                     return Err(format!("PRT output drift at threads={threads}"));
                 }
@@ -128,13 +128,13 @@ fn stats_invariant_across_thread_counts_fixed_shape() {
     for threads in [1usize, 2, 4, 8, 16] {
         let pool = WorkerPool::new(threads);
         let mut out = GemvOutput::new();
-        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out));
+        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out).unwrap());
     }
     {
         // Ambient width too (SAIL_POOL_THREADS in the CI matrix).
         let pool = WorkerPool::auto();
         let mut out = GemvOutput::new();
-        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out));
+        all_stats.push(eng.gemv_batch_into(&xs, &pool, &mut out).unwrap());
     }
     for (i, s) in all_stats.iter().enumerate().skip(1) {
         assert_eq!(*s, all_stats[0], "stats at pool #{i} differ");
@@ -193,7 +193,7 @@ fn numa_sharded_backend_bit_identical_property() {
             for (mode, p) in
                 [("routed", &pool), ("fallback", &off), ("serial", &WorkerPool::serial())]
             {
-                let stats = eng.gemv_batch_into(&xs, p, &mut out);
+                let stats = eng.gemv_batch_into(&xs, p, &mut out).unwrap();
                 if out != want {
                     return Err(format!("{mode} output drift (groups={groups})"));
                 }
