@@ -1,6 +1,6 @@
-//! End-to-end driver (ARCHITECTURE.md "Decode data path"): serve batched
-//! multi-user requests through the full serving stack and report latency
-//! and throughput.
+//! End-to-end driver (ARCHITECTURE.md "Serving data path"): serve an
+//! arrival-driven multi-user workload through the streaming front-end and
+//! report latency, throughput, and goodput.
 //!
 //! Engines (`--engine`):
 //! - `lut` (default): multi-layer KV-cached transformer decode on the
@@ -14,28 +14,31 @@
 //! Run: `cargo run --release --example serve_multiuser`
 //! Options: --engine lut|pjrt|mock --batch N --requests N --rate R
 //!          --seed S --threads T --numa off|auto|MAP
-//!          --prefill-chunk C --artifacts DIR (--mock = --engine mock)
+//!          --prefill-chunk C --queue-cap Q (0 = unbounded)
+//!          --slo-ttft-ms MS --slo-tpot-ms MS (0 = no SLO steering)
+//!          --preempt --bursty --artifacts DIR (--mock = --engine mock)
 //!
-//! `--numa` selects the worker placement policy for the `lut` engine
-//! (default: the `SAIL_NUMA` env override, else auto-detect); on a
-//! multi-node host workers are pinned per node and every projection's
-//! weights are sharded so tile traffic stays socket-local. Placement
-//! never changes tokens — only latency.
-//!
-//! `--prefill-chunk` sets how many prompt tokens one slot consumes per
-//! batcher iteration (0 = the `SAIL_PREFILL_CHUNK` env override, else
-//! 16): chunked prefill runs every projection once per iteration at
-//! effective batch Σ rows, amortizing LUT builds across the whole chunk.
-//! Like placement, the chunk never changes tokens — only TTFT and
-//! prefill throughput.
+//! Requests arrive on a seeded Poisson (or `--bursty`) schedule and each
+//! gets its own token stream. A bounded admission queue (`--queue-cap`)
+//! sheds excess load with typed zero-token responses; the driver **retries
+//! shed requests with backoff** instead of dropping them — the pre-PR
+//! version silently lost sheds because `submit`'s old `Option<Response>`
+//! return read like a completion. With `--slo-ttft-ms/--slo-tpot-ms` the
+//! scheduler retunes the iteration row budget each iteration (and with
+//! `--preempt` may evict a deadline-free decode for a TTFT-critical
+//! waiter); neither changes a single token — only latency.
 //!
 //! The run is recorded in EXPERIMENTS.md §E2E.
 
+use std::collections::HashMap;
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
 use sail::coordinator::{
-    BatcherConfig, MockEngine, PjrtEngine, Server, TransformerServeEngine, WorkloadGen,
+    workload, ArrivalProcess, BatcherConfig, FinishReason, MockEngine, PjrtEngine, Request,
+    ServingConfig, ServingFrontend, SloPolicy, StreamHandle, TransformerServeEngine,
+    WorkloadSpec,
 };
 use sail::model::{DecodeSpec, KvCacheSpec, LayerSpec};
 use sail::quant::QuantLevel;
@@ -76,6 +79,11 @@ fn main() -> anyhow::Result<()> {
     let dir = args.opt_str("artifacts", "artifacts");
     let numa = args.opt_str("numa", ""); // "" = SAIL_NUMA env, else auto
     let prefill_chunk: usize = args.opt("prefill-chunk", 0); // 0 = env, else 16
+    let queue_cap: usize = args.opt("queue-cap", 0); // 0 = unbounded
+    let slo_ttft_ms: f64 = args.opt("slo-ttft-ms", 0.0); // 0 = no steering
+    let slo_tpot_ms: f64 = args.opt("slo-tpot-ms", 0.0);
+    let preempt = args.flag("preempt");
+    let bursty = args.flag("bursty");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     let numa_policy = if numa.is_empty() {
         NumaPolicy::from_env()
@@ -90,23 +98,52 @@ fn main() -> anyhow::Result<()> {
     // The chunk is a batcher knob, so it applies to every engine; the
     // PJRT artifact advertises max_run = 1 and is served token-at-a-time
     // regardless.
-    let bcfg = BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() };
+    let bcfg = BatcherConfig {
+        prefill_chunk: chunk,
+        queue_capacity: if queue_cap == 0 { usize::MAX } else { queue_cap },
+        ..BatcherConfig::default()
+    };
+    let slo = if slo_ttft_ms > 0.0 || slo_tpot_ms > 0.0 {
+        let d = SloPolicy::default();
+        let ms = |v: f64, default: Duration| {
+            if v > 0.0 {
+                Duration::from_secs_f64(v / 1e3)
+            } else {
+                default
+            }
+        };
+        Some(SloPolicy { ttft: ms(slo_ttft_ms, d.ttft), tpot: ms(slo_tpot_ms, d.tpot), ..d })
+    } else {
+        None
+    };
+    let scfg = ServingConfig { batcher: bcfg, slo, preemption: preempt };
 
     println!("=== SAIL end-to-end serving demo ===");
     println!("engine: {engine_kind}");
     println!(
-        "batch slots: {batch}, requests: {n_requests}, arrival rate: {rate}/s, \
-         prefill chunk: {chunk}\n"
+        "batch slots: {batch}, requests: {n_requests}, arrival rate: {rate}/s \
+         ({}), prefill chunk: {chunk}, queue cap: {}",
+        if bursty { "bursty" } else { "poisson" },
+        if queue_cap == 0 { "unbounded".to_string() } else { queue_cap.to_string() },
     );
+    match &slo {
+        Some(s) => println!(
+            "SLO steering: ttft {:.0} ms, tpot {:.1} ms, preemption {}\n",
+            s.ttft.as_secs_f64() * 1e3,
+            s.tpot.as_secs_f64() * 1e3,
+            if preempt { "on" } else { "off" },
+        ),
+        None => println!("SLO steering: off\n"),
+    }
 
-    let server = match engine_kind.as_str() {
-        "mock" => Server::spawn(MockEngine::new(batch, 2048, 256), bcfg),
+    let frontend = Arc::new(match engine_kind.as_str() {
+        "mock" => ServingFrontend::spawn(MockEngine::new(batch, 2048, 256), scfg),
         "pjrt" => {
             let engine = PjrtEngine::load(std::path::Path::new(&dir), batch)?;
             println!(
                 "loaded decode artifact (tiny-e2e: 4 layers, hidden 256, vocab 2048, ctx 256)\n"
             );
-            Server::spawn(engine, bcfg)
+            ServingFrontend::spawn(engine, scfg)
         }
         "lut" => {
             // --threads 0 keeps the auto sizing (SAIL_POOL_THREADS env,
@@ -130,32 +167,64 @@ fn main() -> anyhow::Result<()> {
                 pool.pinned_workers(),
                 Topology::detect().summary()
             );
-            Server::spawn(TransformerServeEngine::random(spec, seed, batch, pool)?, bcfg)
+            ServingFrontend::spawn(TransformerServeEngine::random(spec, seed, batch, pool)?, scfg)
         }
         other => anyhow::bail!("unknown engine {other} (lut|pjrt|mock)"),
+    });
+
+    // Arrival-driven workload: seeded schedule (Poisson or bursty at the
+    // same long-run rate), 30% multi-turn session reuse, replayed in real
+    // time. The originals are kept so sheds can be retried.
+    let arrivals = if bursty {
+        ArrivalProcess::Bursty { rate_per_sec: rate, burst_size: 4 }
+    } else {
+        ArrivalProcess::Poisson { rate_per_sec: rate }
     };
+    let spec = WorkloadSpec {
+        seed,
+        vocab: 2048,
+        prompt_len: (3, 10),
+        max_new: (8, 24),
+        arrivals,
+        session_reuse: 0.3,
+        max_prompt: 64,
+    };
+    let schedule = workload::generate(&spec, n_requests);
+    let originals: HashMap<u64, Request> =
+        schedule.iter().map(|tr| (tr.req.id, tr.req.clone())).collect();
 
-    // Open-loop Poisson arrivals (the multi-user serving scenario §V-A).
-    let mut gen = WorkloadGen::new(seed, 2048);
-    gen.rate_per_sec = rate;
-    gen.prompt_len = (3, 10);
-    gen.max_new = (8, 24);
-    let planned: Vec<_> = (0..n_requests).map(|_| gen.next_request()).collect();
-
-    let submit = server.submitter();
-    let submitter = std::thread::spawn(move || {
-        for (mut r, gap) in planned {
-            std::thread::sleep(gap);
-            r.arrival = std::time::Instant::now();
-            if submit.submit(r).is_err() {
-                return;
+    let (tx_handles, rx_handles) = channel::<StreamHandle>();
+    let submitter_fe = Arc::clone(&frontend);
+    let submitter = std::thread::spawn(move || -> anyhow::Result<()> {
+        for h in workload::replay(&submitter_fe, &schedule, 1.0)? {
+            if tx_handles.send(h).is_err() {
+                break;
             }
         }
+        Ok(())
     });
 
     let mut latencies = Vec::new();
+    let mut retried = 0u64;
+    let mut given_up = 0u64;
     for i in 0..n_requests {
-        let resp = server.recv()?;
+        let mut handle = rx_handles.recv()?;
+        let resp = loop {
+            let (_, resp) = handle.wait()?;
+            if resp.finish != FinishReason::Shed {
+                break resp;
+            }
+            // Shed at admission: back off briefly and resubmit the
+            // original request (same id, same prompt). The pre-PR driver
+            // dropped these on the floor.
+            retried += 1;
+            if retried > 20 * n_requests as u64 {
+                given_up += 1;
+                break resp;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            handle = frontend.submit(originals[&resp.id].clone())?;
+        };
         latencies.push(resp.latency);
         if i % 6 == 0 {
             println!(
@@ -170,11 +239,16 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    submitter.join().expect("submitter panicked");
-    let metrics = server.shutdown();
+    submitter.join().expect("submitter panicked")?;
+    drop(rx_handles);
+    let frontend = Arc::into_inner(frontend).expect("all front-end handles dropped");
+    let metrics = frontend.shutdown();
 
     println!("\n=== results ===");
     println!("{}", metrics.report());
+    if retried > 0 {
+        println!("shed retries: {retried} (gave up on {given_up})");
+    }
     let mean: Duration =
         latencies.iter().sum::<Duration>() / latencies.len().max(1) as u32;
     println!("mean latency: {:.1} ms", mean.as_secs_f64() * 1e3);

@@ -1,0 +1,177 @@
+//! Serving load bench: goodput vs offered load on the streaming front-end.
+//!
+//! Drives the full serving data path — seeded Poisson arrivals →
+//! [`ServingFrontend`] admission → SLO row-budget scheduling → per-request
+//! token streams — on the real LUT transformer engine, at three offered
+//! loads calibrated against the machine's measured offline capacity
+//! (0.5×, 1×, 2×). The 2× point runs with a bounded admission queue, so
+//! shedding under genuine overload shows up in the artifact.
+//!
+//! Every non-shed stream is asserted **bit-identical** to the offline
+//! `run_to_completion` oracle at every load point — the CI serving leg
+//! fails on this assert, which is the point: scheduling under load must
+//! change latency, never tokens.
+//!
+//! Results are persisted to BENCH_serving.json next to Cargo.toml **and
+//! at the repo root** (schema in EXPERIMENTS.md §BENCH_serving.json
+//! schema); `tests/serving_frontend.rs` writes a mock-engine smoke
+//! version of the same artifact on plain `cargo test`.
+//!
+//! Run: cargo bench --bench serving_load
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sail::coordinator::{
+    workload, ArrivalProcess, Batcher, BatcherConfig, FinishReason, RequestId, ServingConfig,
+    ServingFrontend, SloPolicy, TransformerServeEngine, WorkloadSpec,
+};
+use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::runtime::WorkerPool;
+use sail::util::json::Json;
+
+const N_REQUESTS: usize = 32;
+const BATCH: usize = 4;
+const ENGINE_SEED: u64 = 9;
+
+fn spec() -> DecodeSpec {
+    DecodeSpec::tiny(2, KvCacheSpec::q8())
+}
+
+/// Workload sized to the tiny decode spec (vocab 96, max_context 24):
+/// prompt + budget never exceeds 20 positions, so `ContextFull` is
+/// impossible and every fault-free finish is normal.
+fn wspec() -> WorkloadSpec {
+    WorkloadSpec {
+        seed: 21,
+        vocab: 96,
+        prompt_len: (2, 6),
+        max_new: (4, 8),
+        // Base rate is arbitrary: replay's time_scale sets the real
+        // offered load below. Content draws are rate-independent.
+        arrivals: ArrivalProcess::Poisson { rate_per_sec: 1.0 },
+        session_reuse: 0.3,
+        max_prompt: 12,
+    }
+}
+
+fn main() {
+    let schedule = workload::generate(&wspec(), N_REQUESTS);
+    let base_span = schedule.last().expect("non-empty schedule").at.as_secs_f64();
+    let pool = WorkerPool::shared(WorkerPool::auto_width());
+
+    // Offline oracle + capacity calibration: the same request set through
+    // run_to_completion, timed. `capacity` is the machine's saturated
+    // decode throughput at this batch width — the 1× load point.
+    let engine =
+        TransformerServeEngine::random(spec(), ENGINE_SEED, BATCH, Arc::clone(&pool)).unwrap();
+    let mut oracle = Batcher::new(engine, BatcherConfig::default());
+    for tr in &schedule {
+        oracle.submit(tr.req.clone());
+    }
+    let t0 = std::time::Instant::now();
+    let done = oracle.run_to_completion().unwrap();
+    let offline_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let total_tokens: usize = done.iter().map(|r| r.tokens.len()).sum();
+    let capacity = total_tokens as f64 / offline_secs;
+    let mean_tokens = total_tokens as f64 / N_REQUESTS as f64;
+    let want: HashMap<RequestId, (Vec<i32>, FinishReason)> =
+        done.into_iter().map(|r| (r.id, (r.tokens, r.finish))).collect();
+    assert!(
+        want.values().all(|(t, f)| !t.is_empty() && *f != FinishReason::EngineFault),
+        "offline oracle must be fault-free"
+    );
+    println!(
+        "offline capacity: {capacity:.0} tok/s ({total_tokens} tokens in {offline_secs:.3}s, \
+         batch {BATCH}, pool {} threads)",
+        pool.threads()
+    );
+
+    let mut points = Vec::new();
+    for load in [0.5f64, 1.0, 2.0] {
+        // Offered request rate hitting `load` × capacity in token terms,
+        // mapped onto the schedule via replay's time compression.
+        let offered_rps = load * capacity / mean_tokens;
+        let time_scale = if base_span > 0.0 && offered_rps.is_finite() && offered_rps > 0.0 {
+            (N_REQUESTS as f64 / base_span) / offered_rps
+        } else {
+            1.0
+        };
+        // Overload gets a bounded queue so shedding is reachable; the
+        // underloaded points keep the queue open (shed 0 expected).
+        let queue_capacity = if load > 1.0 { 2 * BATCH } else { usize::MAX };
+        let cfg = ServingConfig {
+            batcher: BatcherConfig { queue_capacity, ..BatcherConfig::default() },
+            slo: Some(SloPolicy {
+                ttft: Duration::from_millis(250),
+                tpot: Duration::from_millis(50),
+                max_rows: 128,
+            }),
+            preemption: true,
+        };
+        let engine =
+            TransformerServeEngine::random(spec(), ENGINE_SEED, BATCH, Arc::clone(&pool))
+                .unwrap();
+        let fe = ServingFrontend::spawn(engine, cfg);
+        let handles = workload::replay(&fe, &schedule, time_scale).unwrap();
+        let mut matched = 0usize;
+        for h in handles {
+            let id = h.id;
+            let (streamed, resp) = h.wait().unwrap();
+            assert_eq!(streamed, resp.tokens, "stream {id} desynced at load {load}x");
+            if resp.finish == FinishReason::Shed {
+                assert!(streamed.is_empty(), "shed {id} streamed tokens at load {load}x");
+                continue;
+            }
+            let (want_tokens, want_finish) = &want[&id];
+            assert_eq!(
+                (&resp.tokens, &resp.finish),
+                (want_tokens, want_finish),
+                "offered load changed stream {id} at {load}x — scheduling leaked into tokens"
+            );
+            matched += 1;
+        }
+        let m = fe.shutdown();
+        assert_eq!(m.completed, N_REQUESTS as u64, "lost responses at load {load}x");
+        assert_eq!(matched as u64 + m.shed, N_REQUESTS as u64);
+        println!("\n--- load {load}x (offered {offered_rps:.1} req/s) ---");
+        println!("{}", m.report());
+
+        let mut o = BTreeMap::new();
+        o.insert("load".to_string(), Json::Str(format!("{load}x")));
+        o.insert("offered_rps".to_string(), Json::Num(offered_rps));
+        o.insert("time_scale".to_string(), Json::Num(time_scale));
+        o.insert("requests".to_string(), Json::Num(m.completed as f64));
+        o.insert("shed".to_string(), Json::Num(m.shed as f64));
+        o.insert("shed_rate".to_string(), Json::Num(m.shed_rate()));
+        o.insert("deadline_exceeded".to_string(), Json::Num(m.deadline_exceeded as f64));
+        o.insert("ttft_p50_ms".to_string(), Json::Num(m.ttft.p50()));
+        o.insert("ttft_p99_ms".to_string(), Json::Num(m.ttft.p99()));
+        o.insert("tpot_p50_ms".to_string(), Json::Num(m.tpot.p50()));
+        o.insert("tpot_p99_ms".to_string(), Json::Num(m.tpot.p99()));
+        o.insert("tok_per_sec".to_string(), Json::Num(m.tokens_per_sec()));
+        o.insert("goodput_tok_per_sec".to_string(), Json::Num(m.goodput_tokens_per_sec()));
+        o.insert("streams_bit_exact".to_string(), Json::Bool(true));
+        points.push(Json::Obj(o));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving_load".to_string()));
+    top.insert("source".to_string(), Json::Str("bench".to_string()));
+    top.insert("engine".to_string(), Json::Str("lut-transformer".to_string()));
+    top.insert("requests".to_string(), Json::Num(N_REQUESTS as f64));
+    top.insert("batch".to_string(), Json::Num(BATCH as f64));
+    top.insert("pool_threads".to_string(), Json::Num(pool.threads() as f64));
+    top.insert("capacity_tok_per_sec".to_string(), Json::Num(capacity));
+    top.insert("streams_bit_exact".to_string(), Json::Bool(true));
+    top.insert("points".to_string(), Json::Arr(points));
+    let doc = Json::Obj(top);
+    for path in [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serving.json"),
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"),
+    ] {
+        doc.write_atomic(std::path::Path::new(path)).unwrap();
+        println!("wrote {path}");
+    }
+}

@@ -37,19 +37,35 @@
 //!   stream is bit-identical to the fault-free run, and no engine error
 //!   or panic escapes [`Batcher::run_iteration`],
 //! - per-request TTFT/total-latency budgets finish expired requests with
-//!   `DeadlineExceeded` (tokens-so-far), swept at admission and at every
-//!   iteration start,
+//!   `DeadlineExceeded` (tokens-so-far). The deadline clock starts at
+//!   [`Batcher::submit`] (not at `Request` construction), and *queued*
+//!   requests are swept every iteration — an expiree parked behind busy
+//!   slots finishes typed without ever consuming a slot, engine work, or
+//!   bounded-queue capacity,
 //! - the admission queue is bounded ([`BatcherConfig::queue_capacity`]):
 //!   submissions past the bound are shed with a typed zero-token
-//!   `Shed` response instead of growing memory without limit.
+//!   `Shed` response ([`Admission::Shed`]) instead of growing memory
+//!   without limit,
+//! - **preemption is invisible in the streams**: [`Batcher::preempt`]
+//!   evicts a slot mid-flight and re-queues it for recompute-resume
+//!   (feed = prompt ⊕ tokens generated so far, so the resumed prefill's
+//!   final logits sample the *next* token); the preempted request's
+//!   completed stream is bit-identical to an uninterrupted run, and the
+//!   freed slot goes to a queued waiter before the victim is re-admitted.
+//!
+//! [`Batcher::run_iteration_events`] additionally reports each iteration's
+//! sampled `(request, token)` pairs in slot order — the serving front-end
+//! (`coordinator::serving`) forwards them over per-request stream channels
+//! as they are produced.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::engine::{DecodeEngine, SlotRun};
 use super::policy::{AdmissionPolicy, AdmissionQueue};
-use super::request::{FinishReason, Request, Response};
+use super::request::{FinishReason, Request, RequestId, Response};
 
 /// Strict parse of a `SAIL_PREFILL_CHUNK` value: an integer ≥ 1, or a
 /// typed error naming what was wrong. Pure so the malformed forms are
@@ -124,18 +140,114 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Outcome of [`Batcher::submit`]: either the request entered the
+/// admission queue, or it was answered synchronously (backpressure shed,
+/// today) and will never produce further events.
+///
+/// Pre-PR `submit` returned `Option<Response>`, conflating "queued"
+/// (`None`) with "rejected right now" in a way callers routinely read
+/// backwards — `serve_multiuser` silently dropped sheds because the
+/// `Some` arm looked like a completion.
+#[derive(Debug)]
+pub enum Admission {
+    /// The request is queued; its response arrives from a later
+    /// [`Batcher::run_iteration`].
+    Queued,
+    /// The request was answered immediately (zero tokens,
+    /// [`FinishReason::Shed`]); the caller may retry later.
+    Shed(Response),
+}
+
+impl Admission {
+    pub fn is_queued(&self) -> bool {
+        matches!(self, Admission::Queued)
+    }
+
+    /// The synchronous rejection, if any.
+    pub fn shed(self) -> Option<Response> {
+        match self {
+            Admission::Queued => None,
+            Admission::Shed(r) => Some(r),
+        }
+    }
+}
+
+/// What one [`Batcher::run_iteration_events`] call did — the serving
+/// front-end's window into the iteration loop.
+#[derive(Debug, Default)]
+pub struct IterationEvents {
+    /// Engine rows submitted this iteration (0 when no slot was active).
+    pub rows: usize,
+    /// Tokens sampled this iteration, in slot order. Includes the final
+    /// token of a request that completed this same iteration — streams
+    /// carry every token exactly once.
+    pub tokens: Vec<(RequestId, i32)>,
+    /// Requests that finished this iteration (including queued expirees
+    /// and admission rejections).
+    pub done: Vec<Response>,
+}
+
+/// Read-only view of an active slot for scheduling decisions (the
+/// serving front-end's preemption-victim policy).
+#[derive(Debug, Clone)]
+pub struct SlotSummary {
+    pub slot: usize,
+    pub id: RequestId,
+    /// Still consuming prefill feed (no KV-complete state worth keeping).
+    pub prefilling: bool,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Generation budget left (`max_new_tokens - generated`).
+    pub remaining_budget: usize,
+    /// The request carries its own TTFT or total-latency budget.
+    pub has_deadline: bool,
+}
+
 #[derive(Debug)]
 struct Slot {
     req: Request,
-    /// Prompt tokens already consumed by the engine (prefill cursor).
+    /// Tokens to prefill *instead of* `req.prompt` when non-empty: set on
+    /// recompute-resume to prompt ⊕ previously generated tokens, so the
+    /// re-prefill rebuilds the evicted KV state and its final logits
+    /// sample the next new token.
+    resume_feed: Vec<i32>,
+    /// Feed tokens already consumed by the engine (prefill cursor).
     fed: usize,
     /// Position of the *next* token to be written to the KV cache.
     pos: i32,
     /// Generation input: the token sampled last iteration (meaningful
-    /// once the prompt is fully consumed).
+    /// once the feed is fully consumed).
     next_input: i32,
     generated: Vec<i32>,
     first_token_at: Option<Instant>,
+}
+
+impl Slot {
+    /// The prefill feed: the prompt, or the recompute-resume feed after a
+    /// preemption.
+    fn feed(&self) -> &[i32] {
+        if self.resume_feed.is_empty() {
+            &self.req.prompt
+        } else {
+            &self.resume_feed
+        }
+    }
+}
+
+/// A request evicted mid-flight by [`Batcher::preempt`], waiting to be
+/// re-admitted and recomputed.
+#[derive(Debug)]
+struct Preempted {
+    req: Request,
+    /// prompt ⊕ generated — the full recompute-resume feed.
+    feed: Vec<i32>,
+    generated: Vec<i32>,
+    first_token_at: Option<Instant>,
+    /// Earliest iteration at which re-admission is allowed. Set to the
+    /// iteration *after* the eviction so the freed slot goes to a queued
+    /// waiter first — re-admitting the victim immediately would make
+    /// preemption a no-op.
+    not_before: u64,
 }
 
 /// True when `req`'s total-latency budget — or, while no token has been
@@ -153,6 +265,8 @@ pub struct Batcher<E: DecodeEngine> {
     engine: E,
     slots: Vec<Option<Slot>>,
     queue: AdmissionQueue,
+    /// Preempted requests awaiting recompute-resume, FIFO.
+    resume: VecDeque<Preempted>,
     cfg: BatcherConfig,
     iterations: u64,
     admitted: u64,
@@ -168,6 +282,7 @@ impl<E: DecodeEngine> Batcher<E> {
             engine,
             slots: (0..b).map(|_| None).collect(),
             queue: AdmissionQueue::new(cfg.policy),
+            resume: VecDeque::new(),
             cfg,
             iterations: 0,
             admitted: 0,
@@ -183,15 +298,23 @@ impl<E: DecodeEngine> Batcher<E> {
     /// Enqueue a request (admitted into a free slot, FIFO by default, at
     /// the start of a later iteration).
     ///
-    /// Returns `None` when the request was queued. When the bounded
-    /// admission queue ([`BatcherConfig::queue_capacity`]) is full the
-    /// request is **shed** instead: the returned zero-token
-    /// [`FinishReason::Shed`] response answers it immediately, and the
+    /// The request's `arrival` is re-stamped here: deadline budgets
+    /// measure from the moment the serving system accepts the request,
+    /// not from `Request` construction (pre-PR, a request built early —
+    /// e.g. a whole workload generated up front — burned its budget
+    /// before it was ever submitted).
+    ///
+    /// Returns [`Admission::Queued`] when the request entered the queue.
+    /// When the bounded admission queue
+    /// ([`BatcherConfig::queue_capacity`]) is full the request is
+    /// **shed** instead: [`Admission::Shed`] carries the zero-token
+    /// [`FinishReason::Shed`] response answering it immediately, and the
     /// queue is left untouched.
-    pub fn submit(&mut self, req: Request) -> Option<Response> {
+    pub fn submit(&mut self, mut req: Request) -> Admission {
+        req.arrival = Instant::now();
         match self.queue.push_bounded(req, self.iterations, self.cfg.queue_capacity) {
-            Ok(()) => None,
-            Err(req) => Some(Response {
+            Ok(()) => Admission::Queued,
+            Err(req) => Admission::Shed(Response {
                 id: req.id,
                 tokens: Vec::new(),
                 ttft: Duration::default(),
@@ -201,9 +324,20 @@ impl<E: DecodeEngine> Batcher<E> {
         }
     }
 
-    /// Requests waiting in the admission queue.
+    /// Requests waiting to run: queued plus preempted-awaiting-resume.
     pub fn pending(&self) -> usize {
+        self.queue.len() + self.resume.len()
+    }
+
+    /// Requests waiting in the admission queue (excluding preempted
+    /// requests awaiting resume).
+    pub fn queued(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Preempted requests awaiting recompute-resume.
+    pub fn resumable(&self) -> usize {
+        self.resume.len()
     }
 
     /// Slots currently serving a request.
@@ -216,12 +350,102 @@ impl<E: DecodeEngine> Batcher<E> {
         self.iterations
     }
 
-    /// True when nothing is queued and no slot is active.
-    pub fn is_idle(&self) -> bool {
-        self.queue.is_empty() && self.active_slots() == 0
+    /// Free slots (admission capacity this iteration).
+    pub fn free_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
     }
 
-    /// Admit queued requests into free slots (FIFO), resetting slot KV.
+    /// True when nothing is queued, nothing awaits resume, and no slot is
+    /// active.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.resume.is_empty() && self.active_slots() == 0
+    }
+
+    /// Replace the per-iteration row budget
+    /// ([`BatcherConfig::iteration_rows`]). The serving front-end's
+    /// SLO scheduler retunes this between iterations to trade prefill
+    /// throughput (TTFT) against decode cadence (TPOT); the budget never
+    /// changes *what* tokens are produced, only how iterations pack rows.
+    pub fn set_iteration_rows(&mut self, rows: usize) {
+        self.cfg.iteration_rows = rows.max(1);
+    }
+
+    /// Current per-iteration row budget.
+    pub fn iteration_rows(&self) -> usize {
+        self.cfg.iteration_rows
+    }
+
+    /// Smallest remaining TTFT budget over the *queued* requests — how
+    /// close the most urgent waiter is to busting its first-token
+    /// deadline. `None` when no queued request carries a TTFT budget.
+    pub fn min_queued_ttft_headroom(&self) -> Option<Duration> {
+        self.queue
+            .iter()
+            .filter_map(|r| r.ttft_deadline.map(|d| d.saturating_sub(r.arrival.elapsed())))
+            .min()
+    }
+
+    /// Summaries of the active slots, for scheduling decisions.
+    pub fn slot_summaries(&self) -> Vec<SlotSummary> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, slot)| {
+                slot.as_ref().map(|sl| SlotSummary {
+                    slot: s,
+                    id: sl.req.id,
+                    prefilling: sl.fed < sl.feed().len(),
+                    generated: sl.generated.len(),
+                    remaining_budget: sl.req.max_new_tokens.saturating_sub(sl.generated.len()),
+                    has_deadline: sl.req.deadline.is_some() || sl.req.ttft_deadline.is_some(),
+                })
+            })
+            .collect()
+    }
+
+    /// Evict the request on `slot` mid-flight and queue it for
+    /// recompute-resume; returns false when the slot is empty. The
+    /// victim's KV state is discarded — on re-admission it re-prefills
+    /// prompt ⊕ generated-so-far (so the resumed run's first sample is
+    /// the *next* new token) and its completed stream is bit-identical
+    /// to an uninterrupted run. Resume is deferred by one iteration so
+    /// the freed slot goes to a queued waiter first.
+    pub fn preempt(&mut self, slot: usize) -> bool {
+        let Some(sl) = self.slots.get_mut(slot).and_then(Option::take) else {
+            return false;
+        };
+        let mut feed = sl.req.prompt.clone();
+        feed.extend_from_slice(&sl.generated);
+        self.resume.push_back(Preempted {
+            req: sl.req,
+            feed,
+            generated: sl.generated,
+            first_token_at: sl.first_token_at,
+            not_before: self.iterations + 1,
+        });
+        true
+    }
+
+    /// Pop the next resumable preempted request. Preempted requests
+    /// outrank the main queue (they are the oldest work in the system)
+    /// *except* during the eviction iteration itself, where the queued
+    /// waiters the preemption was for go first — once the queue is
+    /// drained (or the deferral iteration has passed) the victim takes
+    /// any free slot.
+    fn pop_resume(&mut self) -> Option<Preempted> {
+        let ready = self
+            .resume
+            .front()
+            .is_some_and(|p| p.not_before <= self.iterations || self.queue.is_empty());
+        if ready {
+            self.resume.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Admit pending requests into free slots (resume queue first, then
+    /// the admission queue), resetting slot KV.
     ///
     /// Admission hardening: a request with an empty prompt cannot be
     /// prefilled (there is no first token to feed) — it is answered
@@ -231,6 +455,33 @@ impl<E: DecodeEngine> Batcher<E> {
     fn admit(&mut self, done: &mut Vec<Response>) -> Result<()> {
         for s in 0..self.slots.len() {
             while self.slots[s].is_none() {
+                if let Some(p) = self.pop_resume() {
+                    if deadline_expired(&p.req, p.first_token_at.is_some()) {
+                        done.push(Response {
+                            id: p.req.id,
+                            tokens: p.generated,
+                            ttft: p
+                                .first_token_at
+                                .map(|t| t - p.req.arrival)
+                                .unwrap_or_default(),
+                            latency: Instant::now() - p.req.arrival,
+                            finish: FinishReason::DeadlineExceeded,
+                        });
+                        continue;
+                    }
+                    self.engine.reset_slot(s)?;
+                    self.admitted += 1;
+                    self.slots[s] = Some(Slot {
+                        req: p.req,
+                        resume_feed: p.feed,
+                        fed: 0,
+                        pos: 0,
+                        next_input: 0,
+                        generated: p.generated,
+                        first_token_at: p.first_token_at,
+                    });
+                    continue;
+                }
                 let Some(req) = self.queue.pop(self.iterations) else {
                     return Ok(());
                 };
@@ -261,6 +512,7 @@ impl<E: DecodeEngine> Batcher<E> {
                 self.admitted += 1;
                 self.slots[s] = Some(Slot {
                     req,
+                    resume_feed: Vec::new(),
                     fed: 0,
                     pos: 0,
                     next_input: 0,
@@ -274,10 +526,36 @@ impl<E: DecodeEngine> Batcher<E> {
 
     /// One iteration: admit, submit one [`SlotRun`] per active slot
     /// (prefill chunks alongside single-token decode rows), harvest
-    /// completions.
+    /// completions. Thin wrapper over
+    /// [`run_iteration_events`](Batcher::run_iteration_events) for
+    /// callers that only want completions.
     pub fn run_iteration(&mut self) -> Result<Vec<Response>> {
-        let mut done = Vec::new();
-        self.admit(&mut done)?;
+        Ok(self.run_iteration_events()?.done)
+    }
+
+    /// One iteration, reporting everything that happened: rows submitted,
+    /// tokens sampled (in slot order — the serving front-end forwards
+    /// these over per-request streams), and completed responses.
+    pub fn run_iteration_events(&mut self) -> Result<IterationEvents> {
+        let mut ev = IterationEvents::default();
+        // Queued-expiree sweep: a request whose budget ran out *while
+        // waiting in the queue* finishes now — typed, without consuming a
+        // slot, engine work, or bounded-queue capacity. Pre-PR the queue
+        // was only checked at pop time, so behind busy slots an expiree
+        // could wait forever (and hold a queue seat that shed live
+        // requests).
+        if !self.queue.is_empty() {
+            for req in self.queue.drain_matching(|r| deadline_expired(r, false)) {
+                ev.done.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    ttft: Duration::default(),
+                    latency: Instant::now() - req.arrival,
+                    finish: FinishReason::DeadlineExceeded,
+                });
+            }
+        }
+        self.admit(&mut ev.done)?;
         // Deadline sweep: an active request whose TTFT or total-latency
         // budget expired finishes now, with the tokens it generated so
         // far, before any further engine work is spent on it.
@@ -286,7 +564,7 @@ impl<E: DecodeEngine> Batcher<E> {
                 deadline_expired(&sl.req, sl.first_token_at.is_some())
             }) {
                 let sl = slot.take().unwrap();
-                done.push(Response {
+                ev.done.push(Response {
                     id: sl.req.id,
                     tokens: sl.generated,
                     ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
@@ -297,7 +575,7 @@ impl<E: DecodeEngine> Batcher<E> {
         }
         let active = self.active_slots();
         if active == 0 {
-            return Ok(done);
+            return Ok(ev);
         }
         let max_ctx = self.engine.max_context();
         // The per-slot chunk: config clamped to the engine's capability.
@@ -309,12 +587,13 @@ impl<E: DecodeEngine> Batcher<E> {
         let mut runs: Vec<SlotRun> = Vec::with_capacity(active);
         for (s, slot) in self.slots.iter().enumerate() {
             let Some(sl) = slot else { continue };
-            if sl.fed < sl.req.prompt.len() {
-                // Prefilling: up to `chunk` prompt tokens, clamped so the
+            let feed = sl.feed();
+            if sl.fed < feed.len() {
+                // Prefilling: up to `chunk` feed tokens, clamped so the
                 // run never reaches position `max_context` (ContextFull is
-                // raised below, before any out-of-window KV write) and
-                // never overdraws the iteration row budget.
-                let remaining = sl.req.prompt.len() - sl.fed;
+                // raised below, before an out-of-window KV write could
+                // happen) and never overdraws the iteration row budget.
+                let remaining = feed.len() - sl.fed;
                 let avail = max_ctx.saturating_sub(sl.pos as usize);
                 debug_assert!(avail > 0, "prefilling slot left with a full window");
                 let extra =
@@ -322,7 +601,7 @@ impl<E: DecodeEngine> Batcher<E> {
                 extra_budget -= extra;
                 runs.push(SlotRun {
                     slot: s,
-                    tokens: &sl.req.prompt[sl.fed..sl.fed + 1 + extra],
+                    tokens: &feed[sl.fed..sl.fed + 1 + extra],
                     start_pos: sl.pos,
                 });
             } else {
@@ -361,6 +640,7 @@ impl<E: DecodeEngine> Batcher<E> {
         let consumed: Vec<(usize, usize)> = runs.iter().map(|r| (r.slot, r.tokens.len())).collect();
         drop(runs);
         self.iterations += 1;
+        ev.rows = consumed.iter().map(|(_, len)| len).sum();
 
         let max_ctx = max_ctx as i32;
         for ((s, len), tok) in consumed.into_iter().zip(next) {
@@ -370,7 +650,7 @@ impl<E: DecodeEngine> Batcher<E> {
                 // slot is reset (KV pane and any latched injected fault)
                 // on the next admission.
                 if let Some(sl) = self.slots[s].take() {
-                    done.push(Response {
+                    ev.done.push(Response {
                         id: sl.req.id,
                         tokens: sl.generated,
                         ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
@@ -383,45 +663,56 @@ impl<E: DecodeEngine> Batcher<E> {
             let slot = &mut self.slots[s];
             let Some(sl) = slot.as_mut() else { continue };
             sl.pos += len as i32;
-            if sl.fed < sl.req.prompt.len() {
+            if sl.fed < sl.feed().len() {
                 sl.fed += len;
-                if sl.fed < sl.req.prompt.len() {
+                if sl.fed < sl.feed().len() {
                     if sl.pos >= max_ctx {
-                        // The KV window is exhausted with prompt tokens
+                        // The KV window is exhausted with feed tokens
                         // still unfed: feeding another would write KV
-                        // position `max_context` out of bounds. No logits
-                        // were ever sampled, so the response carries zero
+                        // position `max_context` out of bounds. Only an
+                        // over-long *prompt* can get here (a resume feed
+                        // fits by construction — its positions were all
+                        // valid before the eviction), so no logits were
+                        // ever sampled and the response carries zero
                         // tokens — identical at every chunk size, because
                         // runs are clamped to the window above.
                         let sl = slot.take().unwrap();
-                        done.push(Response {
+                        ev.done.push(Response {
                             id: sl.req.id,
-                            tokens: Vec::new(),
-                            ttft: Duration::default(),
+                            tokens: sl.generated,
+                            ttft: sl
+                                .first_token_at
+                                .map(|t| t - sl.req.arrival)
+                                .unwrap_or_default(),
                             latency: Instant::now() - sl.req.arrival,
                             finish: FinishReason::ContextFull,
                         });
                     }
                     // Still prefilling: the run's prediction is discarded.
+                    // For a resume feed that includes re-computing
+                    // previously generated tokens — they were already
+                    // streamed before the eviction.
                     continue;
                 }
-                // This run consumed the prompt's last token: `tok`,
+                // This run consumed the feed's last token: `tok`,
                 // predicted from that final position, is the request's
-                // first sampled token — fall through to generation
-                // handling (TTFT stamps here).
+                // next sampled token — the *first* for a fresh prompt
+                // (TTFT stamps below), the first *new* one after a
+                // recompute-resume — fall through to generation handling.
             }
             if sl.first_token_at.is_none() {
                 sl.first_token_at = Some(Instant::now());
             }
             sl.generated.push(tok);
             sl.next_input = tok;
+            ev.tokens.push((sl.req.id, tok));
             let eos_hit = self.cfg.eos_enabled && sl.req.eos.map(|e| e == tok).unwrap_or(false);
             let budget_hit = sl.generated.len() >= sl.req.max_new_tokens;
             let ctx_hit = sl.pos >= max_ctx;
             if eos_hit || budget_hit || ctx_hit {
                 let sl = slot.take().unwrap();
                 let now = Instant::now();
-                done.push(Response {
+                ev.done.push(Response {
                     id: sl.req.id,
                     tokens: sl.generated,
                     ttft: sl.first_token_at.map(|t| t - sl.req.arrival).unwrap_or_default(),
@@ -436,7 +727,7 @@ impl<E: DecodeEngine> Batcher<E> {
                 });
             }
         }
-        Ok(done)
+        Ok(ev)
     }
 
     /// Drive iterations until every submitted request completes.
@@ -959,9 +1250,10 @@ mod tests {
     fn full_queue_sheds_typed_zero_token_responses() {
         let cfg = BatcherConfig { queue_capacity: 2, ..BatcherConfig::default() };
         let mut b = Batcher::new(MockEngine::new(1, 97, 64), cfg);
-        assert!(b.submit(Request::new(0, vec![1], 2)).is_none());
-        assert!(b.submit(Request::new(1, vec![1], 2)).is_none());
-        let shed = b.submit(Request::new(2, vec![1], 2)).expect("third submit must shed");
+        assert!(b.submit(Request::new(0, vec![1], 2)).is_queued());
+        assert!(b.submit(Request::new(1, vec![1], 2)).is_queued());
+        let shed =
+            b.submit(Request::new(2, vec![1], 2)).shed().expect("third submit must shed");
         assert_eq!(shed.id, 2);
         assert_eq!(shed.finish, FinishReason::Shed);
         assert!(shed.tokens.is_empty());
@@ -972,7 +1264,7 @@ mod tests {
         assert_eq!(ids, vec![0, 1]);
         assert!(done.iter().all(|r| r.finish == FinishReason::MaxTokens));
         // Draining re-opens admission.
-        assert!(b.submit(Request::new(3, vec![1], 2)).is_none());
+        assert!(b.submit(Request::new(3, vec![1], 2)).is_queued());
         assert_eq!(b.run_to_completion().unwrap().len(), 1);
     }
 
@@ -1063,7 +1355,8 @@ mod tests {
     #[test]
     fn engine_fault_isolates_to_its_request_and_survivors_match_fault_free() {
         // Fault-free oracle for the whole workload.
-        let reqs: Vec<Request> = (0..6).map(|id| Request::new(id, vec![5 + id as i32], 4)).collect();
+        let reqs: Vec<Request> =
+            (0..6).map(|id| Request::new(id, vec![5 + id as i32], 4)).collect();
         let mut oracle = mk_batcher(3);
         for r in &reqs {
             oracle.submit(r.clone());
@@ -1079,7 +1372,11 @@ mod tests {
         // Same workload, but every forward containing slot 1 keeps
         // failing (a latched fault, like an injected KV-write failure).
         let mut b = Batcher::new(
-            FaultyEngine { inner: MockEngine::new(3, 97, 64), fail_slot: 1, fail_budget: usize::MAX },
+            FaultyEngine {
+                inner: MockEngine::new(3, 97, 64),
+                fail_slot: 1,
+                fail_budget: usize::MAX,
+            },
             BatcherConfig::default(),
         );
         for r in &reqs {
@@ -1141,5 +1438,197 @@ mod tests {
         assert!(err.is_err(), "zero-slot batcher must error, not livelock");
         let msg = format!("{:#}", err.unwrap_err());
         assert!(msg.contains("stalled"), "unexpected error: {msg}");
+    }
+
+    #[test]
+    fn deadline_clock_starts_at_submit_not_construction() {
+        // Regression (pre-fix failing): `arrival` was stamped at
+        // `Request::new`, so a request built early — e.g. a workload
+        // schedule generated up front — burned its deadline budget before
+        // the serving system ever saw it. `submit` must restart the
+        // clock.
+        let mut b = mk_batcher(1);
+        let req = Request::new(0, vec![5], 3)
+            .with_deadline(Duration::from_millis(200))
+            .with_ttft_deadline(Duration::from_millis(200));
+        std::thread::sleep(Duration::from_millis(250));
+        b.submit(req);
+        let done = b.run_to_completion().unwrap();
+        assert_eq!(
+            done[0].finish,
+            FinishReason::MaxTokens,
+            "the deadline budget must start ticking at submit, not at construction"
+        );
+        assert_eq!(done[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn queued_expiree_finishes_typed_without_consuming_slot_or_capacity() {
+        // Regression (pre-fix failing): deadlines were only checked when a
+        // request was *popped* for admission, so behind a busy slot an
+        // expired request sat in the queue indefinitely — eventually
+        // running to completion anyway, and meanwhile holding a seat in
+        // the bounded queue that shed live requests.
+        let cfg = BatcherConfig {
+            queue_capacity: 1,
+            prefill_chunk: 1,
+            ..BatcherConfig::default()
+        };
+        let mut b = Batcher::new(MockEngine::new(1, 97, 64), cfg);
+        // A, a long prefill, occupies the only slot for many iterations.
+        assert!(b.submit(Request::new(0, (1..=40).collect(), 1)).is_queued());
+        assert!(b.run_iteration().unwrap().is_empty());
+        assert_eq!(b.active_slots(), 1);
+        // B's budget is already gone the moment it is queued.
+        assert!(b
+            .submit(Request::new(1, vec![5], 4).with_deadline(Duration::ZERO))
+            .is_queued());
+        let done = b.run_iteration().unwrap();
+        assert_eq!(done.len(), 1, "the queued expiree must finish on the next iteration");
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(b.active_slots(), 1, "the expiree must not evict or occupy a slot");
+        // Its bounded-queue seat is free again for a live request.
+        assert!(
+            b.submit(Request::new(2, vec![5], 2)).is_queued(),
+            "the swept expiree must release its queue-capacity seat"
+        );
+        let done = b.run_to_completion().unwrap();
+        let ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert!(done.iter().all(|r| r.finish == FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn iteration_events_stream_every_token_exactly_once() {
+        let mut b = mk_batcher(2);
+        b.submit(Request::new(0, vec![5, 6], 4));
+        b.submit(Request::new(1, vec![7], 2));
+        let mut streamed: std::collections::HashMap<u64, Vec<i32>> =
+            std::collections::HashMap::new();
+        let mut done = Vec::new();
+        while !b.is_idle() {
+            let ev = b.run_iteration_events().unwrap();
+            for (id, tok) in ev.tokens {
+                streamed.entry(id).or_default().push(tok);
+            }
+            assert!(ev.rows >= 1, "an iteration with active slots must submit rows");
+            done.extend(ev.done);
+        }
+        assert_eq!(done.len(), 2);
+        for r in &done {
+            assert_eq!(
+                streamed.get(&r.id),
+                Some(&r.tokens),
+                "request {}: streamed tokens must equal the response tokens",
+                r.id
+            );
+        }
+    }
+
+    #[test]
+    fn preempted_request_resumes_bit_identically_with_streams_intact() {
+        // Oracle: the same request, never interrupted.
+        let cfg = BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() };
+        let mk = || Batcher::new(MockEngine::new(1, 97, 64), cfg);
+        let mut o = mk();
+        o.submit(Request::new(0, vec![5, 6, 7], 6));
+        let want = o.run_to_completion().unwrap().remove(0);
+        assert_eq!(want.tokens.len(), 6);
+
+        // Preempting on an empty slot is a typed no-op.
+        assert!(!mk().preempt(0));
+
+        // Evict after 1..=6 iterations (mid-prefill and mid-generation):
+        // the recompute-resume stream must be bit-identical, and the
+        // events must carry each token exactly once — re-prefilled
+        // positions are never re-streamed.
+        for preempt_after in 1..=6usize {
+            let mut b = mk();
+            b.submit(Request::new(0, vec![5, 6, 7], 6));
+            let mut streamed = Vec::new();
+            for _ in 0..preempt_after {
+                let ev = b.run_iteration_events().unwrap();
+                streamed.extend(ev.tokens.iter().map(|&(_, t)| t));
+                assert!(ev.done.is_empty(), "completed before the planned eviction");
+            }
+            assert!(b.preempt(0), "slot 0 must be active after {preempt_after} iterations");
+            assert_eq!(b.active_slots(), 0);
+            assert_eq!(b.resumable(), 1);
+            let mut resp = None;
+            while resp.is_none() {
+                let mut ev = b.run_iteration_events().unwrap();
+                streamed.extend(ev.tokens.iter().map(|&(_, t)| t));
+                if !ev.done.is_empty() {
+                    resp = Some(ev.done.remove(0));
+                }
+            }
+            let resp = resp.unwrap();
+            assert_eq!(
+                resp.tokens, want.tokens,
+                "eviction after {preempt_after} iterations changed the stream"
+            );
+            assert_eq!(resp.finish, want.finish);
+            assert_eq!(
+                streamed, want.tokens,
+                "eviction after {preempt_after} iterations duplicated or dropped stream events"
+            );
+        }
+    }
+
+    #[test]
+    fn preemption_yields_slot_to_waiter_then_resumes_victim() {
+        let cfg = BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() };
+        // Oracle for the victim, uninterrupted and alone.
+        let mut o = Batcher::new(MockEngine::new(1, 97, 64), cfg);
+        o.submit(Request::new(0, vec![5], 8));
+        let want = o.run_to_completion().unwrap().remove(0);
+
+        let mut b = Batcher::new(MockEngine::new(1, 97, 64), cfg);
+        b.submit(Request::new(0, vec![5], 8));
+        for _ in 0..3 {
+            assert!(b.run_iteration().unwrap().is_empty());
+        }
+        b.submit(Request::new(1, vec![9], 2));
+        assert!(b.preempt(0));
+        // The freed slot must go to the queued waiter, not back to the
+        // victim — otherwise preemption never makes room.
+        let ev = b.run_iteration_events().unwrap();
+        assert!(
+            ev.tokens.iter().all(|&(id, _)| id == 1),
+            "the eviction iteration must serve the waiter, got {:?}",
+            ev.tokens
+        );
+        let mut done = ev.done;
+        done.extend(b.run_to_completion().unwrap());
+        let ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 0], "waiter finishes first, then the resumed victim");
+        let victim = done.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(victim.tokens, want.tokens, "the resumed victim's stream drifted");
+        assert_eq!(victim.finish, want.finish);
+    }
+
+    #[test]
+    fn set_iteration_rows_retunes_budget_without_changing_streams() {
+        let run = |retune: bool| {
+            let mut b = chunked_batcher(2, 8, usize::MAX);
+            b.submit(Request::new(0, (1..=24).collect(), 3));
+            b.submit(Request::new(1, vec![5], 6));
+            let mut done = Vec::new();
+            let mut flip = false;
+            while !b.is_idle() {
+                if retune {
+                    // Oscillate the budget mid-flight, as the serving
+                    // scheduler does between iterations.
+                    b.set_iteration_rows(if flip { 2 } else { 64 });
+                    flip = !flip;
+                }
+                done.extend(b.run_iteration().unwrap());
+            }
+            done.sort_by_key(|r| r.id);
+            done.into_iter().map(|r| (r.id, r.tokens)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false), "retuning iteration_rows changed the streams");
     }
 }

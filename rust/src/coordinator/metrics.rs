@@ -1,8 +1,17 @@
-//! Serving metrics: throughput, latency percentiles, utilization.
+//! Serving metrics: throughput, latency percentiles, SLO accounting.
+//!
+//! The serving front-end reports the load-test quartet the CPU-inference
+//! papers use (xFasterTransformer; Intel's "Efficient LLM Inference on
+//! CPUs"): **TTFT** (time to first token), **TPOT** (time per output
+//! token after the first), aggregate tok/s, and **goodput** — tokens from
+//! requests that ran to a *normal* finish, excluding sheds, deadline
+//! expiries, and engine faults. Under overload, goodput is the honest
+//! number: raw tok/s keeps rising while deadline-busted work makes it
+//! useless.
 
 use std::time::{Duration, Instant};
 
-use super::request::Response;
+use super::request::{FinishReason, Response};
 use crate::util::stats::{Percentiles, Summary};
 
 /// Aggregated serving metrics over a run.
@@ -13,7 +22,19 @@ pub struct ServingMetrics {
     pub tokens_generated: u64,
     pub latency: Percentiles,
     pub ttft: Percentiles,
+    /// Per-token decode cadence (ms per token after the first), one
+    /// sample per response with ≥ 2 tokens ([`Response::tpot`]).
+    pub tpot: Percentiles,
     pub tokens_per_req: Summary,
+    /// Requests shed at submission (bounded queue full).
+    pub shed: u64,
+    /// Requests finished by TTFT/total-latency budget expiry.
+    pub deadline_exceeded: u64,
+    /// Requests finished by an engine fault (after the solo retry).
+    pub engine_faults: u64,
+    /// Tokens from requests that reached a normal finish (`MaxTokens`,
+    /// `Eos`, `ContextFull`, `EmptyPrompt`) — the goodput numerator.
+    pub goodput_tokens: u64,
     finished_at: Option<Instant>,
 }
 
@@ -31,7 +52,12 @@ impl ServingMetrics {
             tokens_generated: 0,
             latency: Percentiles::new(),
             ttft: Percentiles::new(),
+            tpot: Percentiles::new(),
             tokens_per_req: Summary::new(),
+            shed: 0,
+            deadline_exceeded: 0,
+            engine_faults: 0,
+            goodput_tokens: 0,
             finished_at: None,
         }
     }
@@ -46,7 +72,19 @@ impl ServingMetrics {
         if !r.tokens.is_empty() {
             self.ttft.push(r.ttft.as_secs_f64() * 1e3);
         }
+        if let Some(tpot) = r.tpot() {
+            self.tpot.push(tpot.as_secs_f64() * 1e3);
+        }
         self.tokens_per_req.push(r.tokens.len() as f64);
+        match r.finish {
+            FinishReason::Shed => self.shed += 1,
+            FinishReason::DeadlineExceeded => self.deadline_exceeded += 1,
+            FinishReason::EngineFault => self.engine_faults += 1,
+            FinishReason::MaxTokens
+            | FinishReason::Eos
+            | FinishReason::ContextFull
+            | FinishReason::EmptyPrompt => self.goodput_tokens += r.tokens.len() as u64,
+        }
         self.finished_at = Some(Instant::now());
     }
 
@@ -64,21 +102,51 @@ impl ServingMetrics {
         }
     }
 
+    /// Goodput: tokens per second counting only normally finished
+    /// requests.
+    pub fn goodput_tokens_per_sec(&self) -> f64 {
+        let secs = self.elapsed().as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.goodput_tokens as f64 / secs
+        }
+    }
+
+    /// Fraction of recorded responses that were shed at submission.
+    pub fn shed_rate(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.completed as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} elapsed={:.2}s throughput={:.2} tok/s\n\
+            "requests={} tokens={} elapsed={:.2}s throughput={:.2} tok/s \
+             goodput={:.2} tok/s\n\
              latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms   \
-             ttft p50/p95 = {:.1}/{:.1} ms   mean tokens/req = {:.1}",
+             ttft p50/p95 = {:.1}/{:.1} ms   tpot p50/p99 = {:.2}/{:.2} ms   \
+             mean tokens/req = {:.1}\n\
+             shed={} ({:.1}%)   deadline_exceeded={}   engine_faults={}",
             self.completed,
             self.tokens_generated,
             self.elapsed().as_secs_f64(),
             self.tokens_per_sec(),
+            self.goodput_tokens_per_sec(),
             self.latency.p50(),
             self.latency.p95(),
             self.latency.p99(),
             self.ttft.p50(),
             self.ttft.p95(),
+            self.tpot.p50(),
+            self.tpot.p99(),
             self.tokens_per_req.mean(),
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.deadline_exceeded,
+            self.engine_faults,
         )
     }
 }
@@ -102,10 +170,14 @@ mod tests {
         }
         assert_eq!(m.completed, 10);
         assert_eq!(m.tokens_generated, 50);
+        assert_eq!(m.goodput_tokens, 50, "normal finishes are all goodput");
         assert!(m.latency.p50() >= 50.0 && m.latency.p50() <= 60.0);
+        // 5 tokens, ttft 10+i ms, latency 50+i ms ⇒ tpot = 40/4 = 10 ms.
+        assert!((m.tpot.p50() - 10.0).abs() < 0.5, "tpot p50 = {}", m.tpot.p50());
         let rep = m.report();
         assert!(rep.contains("requests=10"));
         assert!(m.tokens_per_sec() > 0.0);
+        assert_eq!(m.shed_rate(), 0.0);
     }
 
     #[test]
@@ -129,5 +201,67 @@ mod tests {
         });
         assert_eq!(m.completed, 2);
         assert!(m.ttft.p50() >= 40.0, "ttft p50 deflated: {}", m.ttft.p50());
+    }
+
+    #[test]
+    fn sheds_and_deadline_expiries_are_excluded_from_goodput() {
+        let mut m = ServingMetrics::new();
+        m.record(&Response {
+            id: 0,
+            tokens: vec![1; 4],
+            ttft: Duration::from_millis(5),
+            latency: Duration::from_millis(20),
+            finish: FinishReason::MaxTokens,
+        });
+        m.record(&Response {
+            id: 1,
+            tokens: vec![],
+            ttft: Duration::default(),
+            latency: Duration::default(),
+            finish: FinishReason::Shed,
+        });
+        // Deadline-busted work generated tokens, but they are not goodput.
+        m.record(&Response {
+            id: 2,
+            tokens: vec![1; 7],
+            ttft: Duration::from_millis(5),
+            latency: Duration::from_millis(500),
+            finish: FinishReason::DeadlineExceeded,
+        });
+        m.record(&Response {
+            id: 3,
+            tokens: vec![1; 2],
+            ttft: Duration::from_millis(5),
+            latency: Duration::from_millis(9),
+            finish: FinishReason::EngineFault,
+        });
+        assert_eq!(m.completed, 4);
+        assert_eq!(m.tokens_generated, 13);
+        assert_eq!(m.goodput_tokens, 4);
+        assert_eq!((m.shed, m.deadline_exceeded, m.engine_faults), (1, 1, 1));
+        assert!((m.shed_rate() - 0.25).abs() < 1e-9);
+        assert!(m.goodput_tokens_per_sec() <= m.tokens_per_sec());
+        let rep = m.report();
+        assert!(rep.contains("shed=1"));
+    }
+
+    #[test]
+    fn tpot_needs_at_least_two_tokens() {
+        let one = Response {
+            id: 0,
+            tokens: vec![9],
+            ttft: Duration::from_millis(4),
+            latency: Duration::from_millis(4),
+            finish: FinishReason::MaxTokens,
+        };
+        assert_eq!(one.tpot(), None);
+        let three = Response {
+            id: 1,
+            tokens: vec![9, 9, 9],
+            ttft: Duration::from_millis(4),
+            latency: Duration::from_millis(10),
+            finish: FinishReason::MaxTokens,
+        };
+        assert_eq!(three.tpot(), Some(Duration::from_millis(3)));
     }
 }

@@ -16,9 +16,18 @@
 //!   PJRT-backed [`crate::runtime::DecodeModel`], the single-projection
 //!   toy [`LutGemvServeEngine`] for micro-benches, and a deterministic
 //!   mock for coordinator tests;
-//! - [`batcher`]: slot management and the iteration loop;
-//! - [`metrics`]: latency/throughput accounting;
-//! - [`server`]: the threaded front-end (submission queue + worker).
+//! - [`batcher`]: slot management and the iteration loop (chunked
+//!   prefill, bounded admission, deadlines, preemption/resume, and the
+//!   per-iteration event stream [`batcher::IterationEvents`]);
+//! - [`metrics`]: latency/throughput accounting (TTFT/TPOT percentiles,
+//!   shed rate, goodput);
+//! - [`server`]: the whole-response threaded front-end (submission queue
+//!   + worker, one shared completion channel);
+//! - [`serving`]: the **streaming** front-end — per-request token stream
+//!   channels, SLO-aware row-budget scheduling, deadline-driven
+//!   preemption; scheduling is bit-invisible in the streams;
+//! - [`workload`]: seeded arrival-driven workload schedules (Poisson /
+//!   bursty, mixed lengths, session reuse) for the serving bench.
 
 pub mod batcher;
 pub mod engine;
@@ -26,8 +35,13 @@ pub mod metrics;
 pub mod policy;
 pub mod request;
 pub mod server;
+pub mod serving;
+pub mod workload;
 
-pub use batcher::{parse_prefill_chunk, prefill_chunk_from_env, Batcher, BatcherConfig};
+pub use batcher::{
+    parse_prefill_chunk, prefill_chunk_from_env, Admission, Batcher, BatcherConfig,
+    IterationEvents, SlotSummary,
+};
 pub use engine::{
     argmax_logits, step_runs_via_step, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
     SlotRun, TransformerServeEngine,
@@ -36,3 +50,8 @@ pub use metrics::ServingMetrics;
 pub use policy::{AdmissionPolicy, AdmissionQueue};
 pub use request::{FinishReason, Request, RequestId, Response, WorkloadGen};
 pub use server::Server;
+pub use serving::{
+    choose_victim, plan_iteration_rows, ServingConfig, ServingFrontend, SloPolicy, StreamEvent,
+    StreamHandle,
+};
+pub use workload::{generate, replay, ArrivalProcess, TimedRequest, WorkloadSpec};

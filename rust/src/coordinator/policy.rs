@@ -62,6 +62,34 @@ impl AdmissionQueue {
         self.items.is_empty()
     }
 
+    /// Iterate the queued requests (storage order — admission order for
+    /// FIFO). The batcher's deadline sweep and the serving scheduler's
+    /// TTFT-headroom probe read the queue through this without popping.
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.items.iter().map(|(r, _)| r)
+    }
+
+    /// Remove and return every queued request matching `pred`, preserving
+    /// the relative order of both the removed requests and the survivors
+    /// (with their original enqueue iterations). Allocation-free when
+    /// nothing matches — this runs once per batcher iteration.
+    pub fn drain_matching<F: FnMut(&Request) -> bool>(&mut self, mut pred: F) -> Vec<Request> {
+        if !self.items.iter().any(|(r, _)| pred(r)) {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        let mut kept = VecDeque::with_capacity(self.items.len());
+        for (req, enq) in self.items.drain(..) {
+            if pred(&req) {
+                out.push(req);
+            } else {
+                kept.push_back((req, enq));
+            }
+        }
+        self.items = kept;
+        out
+    }
+
     /// Pop the next request to admit at iteration `now_iter`.
     pub fn pop(&mut self, now_iter: u64) -> Option<Request> {
         if self.items.is_empty() {

@@ -17,7 +17,12 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Optional stop token.
     pub eos: Option<i32>,
-    /// Arrival timestamp (set by the server).
+    /// Arrival timestamp. Stamped at construction as a placeholder and
+    /// **re-stamped by [`Batcher::submit`]** — deadline budgets measure
+    /// queueing from the moment the serving system accepts the request,
+    /// not from whenever the client happened to build it.
+    ///
+    /// [`Batcher::submit`]: super::Batcher::submit
     pub arrival: Instant,
     /// Total-latency budget from arrival. A request still running (or
     /// still queued) past this budget finishes with
@@ -70,6 +75,19 @@ pub struct Response {
     pub latency: std::time::Duration,
     /// Why generation stopped.
     pub finish: FinishReason,
+}
+
+impl Response {
+    /// Time-per-output-token: mean decode cadence after the first token,
+    /// `(latency - ttft) / (tokens - 1)`. `None` for responses with
+    /// fewer than two tokens — a single token has TTFT but no cadence.
+    pub fn tpot(&self) -> Option<Duration> {
+        let n = self.tokens.len();
+        if n < 2 {
+            return None;
+        }
+        Some(self.latency.saturating_sub(self.ttft) / (n as u32 - 1))
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

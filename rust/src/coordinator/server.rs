@@ -11,7 +11,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Admission, Batcher, BatcherConfig};
 use super::engine::DecodeEngine;
 use super::metrics::ServingMetrics;
 use super::request::{Request, Response};
@@ -75,7 +75,7 @@ impl Server {
                             // A full bounded queue sheds the request with
                             // a typed zero-token response — answered like
                             // any completion, never silently dropped.
-                            if let Some(shed) = batcher.submit(r) {
+                            if let Admission::Shed(shed) = batcher.submit(r) {
                                 metrics.record(&shed);
                                 let _ = tx_done.send(shed);
                             }

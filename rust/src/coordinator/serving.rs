@@ -1,0 +1,536 @@
+//! Arrival-driven continuous-batching serving front-end.
+//!
+//! [`Server`](super::Server) answers whole responses on one shared
+//! channel; this module is the streaming front-end above the same
+//! [`Batcher`] machinery: each submission gets its **own** token stream
+//! (a `std::sync::mpsc` channel of [`StreamEvent`]s) fed from
+//! [`Batcher::run_iteration_events`] as tokens are sampled, plus an
+//! SLO-aware scheduler that retunes the PR-5 iteration row budget every
+//! iteration and may preempt a deadline-free decode to give its slot to
+//! a TTFT-critical waiter.
+//!
+//! **The determinism contract** (property-tested in
+//! `tests/serving_frontend.rs`): every scheduling decision this module
+//! makes — row-budget retuning, preemption, admission order under load —
+//! is *invisible in the token streams*. A request's stream depends only
+//! on its own prompt (engine isolation + per-slot KV + recompute-resume),
+//! so for any fixed arrival schedule the online streams are bit-identical
+//! to offline [`Batcher::run_to_completion`], across pool widths, NUMA
+//! placements, prefill chunks, and healing fault plans. What the
+//! scheduler *does* change is latency: TTFT/TPOT under load, measured by
+//! [`ServingMetrics`] and persisted by `benches/serving_load.rs`.
+//!
+//! The scheduler itself is two pure functions — [`plan_iteration_rows`]
+//! (split the row budget between prefill throughput and decode cadence)
+//! and [`choose_victim`] (which slot to evict for an urgent waiter) — so
+//! the policy is unit-testable without threads or clocks.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::batcher::{Admission, Batcher, BatcherConfig, SlotSummary};
+use super::engine::DecodeEngine;
+use super::metrics::ServingMetrics;
+use super::request::{Request, RequestId, Response};
+
+/// One event on a per-request token stream.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// A token was sampled for this request. Tokens arrive in order and
+    /// exactly once — including the final token of the iteration that
+    /// completes the request.
+    Token(i32),
+    /// The request finished; the response's `tokens` equals everything
+    /// streamed. No further events follow.
+    Done(Response),
+}
+
+/// The client half of one request's token stream.
+pub struct StreamHandle {
+    pub id: RequestId,
+    rx: Receiver<StreamEvent>,
+}
+
+impl StreamHandle {
+    /// Next event, blocking. `Err` only if the serving worker died before
+    /// completing this request (engine failure) — a shed or expired
+    /// request still gets a normal [`StreamEvent::Done`].
+    pub fn recv(&self) -> Result<StreamEvent> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serving worker terminated mid-stream"))
+    }
+
+    /// Drain the stream to completion: all tokens in order plus the final
+    /// response. The invariant `streamed == response.tokens` is part of
+    /// the front-end contract (asserted by the conformance tests).
+    pub fn wait(self) -> Result<(Vec<i32>, Response)> {
+        let mut streamed = Vec::new();
+        loop {
+            match self.rx.recv() {
+                Ok(StreamEvent::Token(t)) => streamed.push(t),
+                Ok(StreamEvent::Done(r)) => return Ok((streamed, r)),
+                Err(_) => bail!(
+                    "serving worker terminated before request {} completed",
+                    self.id
+                ),
+            }
+        }
+    }
+}
+
+/// Latency targets the scheduler steers toward. Targets shape *when*
+/// work runs, never *what* is computed — streams are SLO-invariant.
+#[derive(Debug, Clone, Copy)]
+pub struct SloPolicy {
+    /// Time-to-first-token target: when the most urgent queued request's
+    /// TTFT headroom shrinks below a quarter of this, the scheduler opens
+    /// the row budget wide (and may preempt) to get its prefill through.
+    pub ttft: Duration,
+    /// Time-per-output-token target: the per-iteration wall-time budget.
+    /// Iterations are sized to `tpot / measured-row-cost` rows so decode
+    /// cadence holds while prefill chunks ride along.
+    pub tpot: Duration,
+    /// Hard per-iteration row ceiling (the PR-5 budget's upper bound).
+    pub max_rows: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            ttft: Duration::from_millis(200),
+            tpot: Duration::from_millis(50),
+            max_rows: 256,
+        }
+    }
+}
+
+/// Serving front-end configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingConfig {
+    pub batcher: BatcherConfig,
+    /// SLO steering; `None` leaves the batcher's static row budget alone.
+    pub slo: Option<SloPolicy>,
+    /// Allow evicting deadline-free decodes for TTFT-critical waiters
+    /// (recompute-resume keeps the victim's stream bit-identical).
+    pub preemption: bool,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig { batcher: BatcherConfig::default(), slo: None, preemption: false }
+    }
+}
+
+/// Split the iteration row budget for the next iteration.
+///
+/// Pure policy: `active` slots each get their guaranteed row; the return
+/// value decides how many *extra* prefill rows may stack on top.
+/// - Normally the budget is what the TPOT target affords at the measured
+///   per-row cost (`tpot / row_cost` rows), so decode cadence holds.
+/// - When the most urgent queued waiter's TTFT headroom is inside a
+///   quarter of the TTFT target, the budget opens to `max_rows`: finishing
+///   that prefill now is worth a slow iteration for everyone.
+/// - Always ≥ `active` (no slot starves — the batcher guarantees each
+///   active slot one row regardless) and ≤ `max_rows` (but never below
+///   `active`, so a batch wider than `max_rows` still steps).
+pub fn plan_iteration_rows(
+    slo: &SloPolicy,
+    active: usize,
+    row_cost: Duration,
+    ttft_headroom: Option<Duration>,
+) -> usize {
+    let lo = active.max(1);
+    let hi = slo.max_rows.max(lo);
+    if ttft_headroom.is_some_and(|h| h <= slo.ttft / 4) {
+        return hi;
+    }
+    let cost = row_cost.as_secs_f64();
+    let afford = if cost > 0.0 {
+        (slo.tpot.as_secs_f64() / cost) as usize
+    } else {
+        hi
+    };
+    afford.clamp(lo, hi)
+}
+
+/// Pick the slot to evict for an urgent waiter: among slots that carry no
+/// deadline of their own and are past prefill (evicting mid-prefill
+/// throws away work without freeing anything sooner), the one with the
+/// most generation budget left — it would hold the slot longest, and its
+/// recompute-resume cost is paid furthest in the future. Ties break to
+/// the highest slot index. `None` when every slot is protected.
+pub fn choose_victim(slots: &[SlotSummary]) -> Option<usize> {
+    slots
+        .iter()
+        .filter(|s| !s.has_deadline && !s.prefilling)
+        .max_by_key(|s| (s.remaining_budget, s.slot))
+        .map(|s| s.slot)
+}
+
+/// One scheduling step before an iteration: retune the row budget from
+/// the SLO targets and, when a TTFT-critical request is stuck behind a
+/// full slot set, preempt one deadline-free decode for it.
+fn schedule_slo<E: DecodeEngine>(
+    b: &mut Batcher<E>,
+    slo: &SloPolicy,
+    row_cost: Duration,
+    preemption: bool,
+) {
+    let headroom = b.min_queued_ttft_headroom();
+    b.set_iteration_rows(plan_iteration_rows(slo, b.active_slots(), row_cost, headroom));
+    if preemption
+        && b.queued() > 0
+        && b.free_slots() == 0
+        && headroom.is_some_and(|h| h <= slo.ttft / 4)
+    {
+        if let Some(victim) = choose_victim(&b.slot_summaries()) {
+            b.preempt(victim);
+        }
+    }
+}
+
+enum Msg {
+    Submit(Request, Sender<StreamEvent>),
+    Drain,
+}
+
+/// The streaming continuous-batching front-end: a worker thread drives
+/// the batcher iteration loop; [`submit`](ServingFrontend::submit)
+/// returns a per-request [`StreamHandle`] immediately (admission —
+/// including sheds — is reported *on the stream*, so submission never
+/// blocks on the iteration loop).
+pub struct ServingFrontend {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<ServingMetrics>>,
+}
+
+impl ServingFrontend {
+    /// Spawn the serving worker around an engine.
+    pub fn spawn<E: DecodeEngine + Send + 'static>(engine: E, cfg: ServingConfig) -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || serve_loop(engine, cfg, rx));
+        ServingFrontend { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request, returning its token stream. The request's
+    /// deadline clock starts when the worker accepts it
+    /// ([`Batcher::submit`] re-stamps `arrival`), not here and not at
+    /// construction. A shed arrives as a zero-token
+    /// [`StreamEvent::Done`] on the returned stream.
+    pub fn submit(&self, req: Request) -> Result<StreamHandle> {
+        let id = req.id;
+        let (tx_ev, rx_ev) = channel();
+        self.tx
+            .send(Msg::Submit(req, tx_ev))
+            .map_err(|_| anyhow::anyhow!("serving worker terminated"))?;
+        Ok(StreamHandle { id, rx: rx_ev })
+    }
+
+    /// Signal no-more-requests, drain every in-flight request, and join,
+    /// returning the final metrics.
+    pub fn shutdown(mut self) -> ServingMetrics {
+        let _ = self.tx.send(Msg::Drain);
+        let worker = self.worker.take().expect("double shutdown");
+        worker.join().expect("serving worker panicked")
+    }
+}
+
+impl Drop for ServingFrontend {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Drain);
+            let _ = w.join();
+        }
+    }
+}
+
+fn serve_loop<E: DecodeEngine>(
+    engine: E,
+    cfg: ServingConfig,
+    rx: Receiver<Msg>,
+) -> ServingMetrics {
+    let mut batcher = Batcher::new(engine, cfg.batcher);
+    let mut metrics = ServingMetrics::new();
+    let mut streams: HashMap<RequestId, Sender<StreamEvent>> = HashMap::new();
+    // EWMA of the measured per-row iteration cost, feeding
+    // `plan_iteration_rows`. Seeded optimistically low so the first
+    // budgets are wide; real measurements take over within a few
+    // iterations (7/8 decay).
+    let mut row_cost = Duration::from_micros(50);
+    let mut draining = false;
+    loop {
+        // Pull everything available without blocking; block only when
+        // fully idle (nothing to compute).
+        loop {
+            let msg = if batcher.is_idle() && !draining {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return metrics, // all senders gone
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        draining = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Submit(r, tx_ev) => {
+                    let id = r.id;
+                    match batcher.submit(r) {
+                        Admission::Queued => {
+                            streams.insert(id, tx_ev);
+                        }
+                        Admission::Shed(shed) => {
+                            metrics.record(&shed);
+                            let _ = tx_ev.send(StreamEvent::Done(shed));
+                        }
+                    }
+                }
+                Msg::Drain => draining = true,
+            }
+        }
+        if batcher.is_idle() {
+            if draining {
+                return metrics;
+            }
+            continue;
+        }
+        if let Some(slo) = &cfg.slo {
+            schedule_slo(&mut batcher, slo, row_cost, cfg.preemption);
+        }
+        let t0 = Instant::now();
+        // An engine error must not panic the worker: report it and stop —
+        // open streams observe the hangup as a typed recv error.
+        let ev = match batcher.run_iteration_events() {
+            Ok(ev) => ev,
+            Err(e) => {
+                eprintln!("sail serving: engine failure, stopping worker: {e}");
+                return metrics;
+            }
+        };
+        if ev.rows > 0 {
+            let per_row = t0.elapsed() / ev.rows as u32;
+            row_cost = (row_cost * 7 + per_row) / 8;
+        }
+        for (id, tok) in &ev.tokens {
+            if let Some(tx) = streams.get(id) {
+                // A receiver that hung up just stops consuming its
+                // stream; the request still runs to completion.
+                let _ = tx.send(StreamEvent::Token(*tok));
+            }
+        }
+        for resp in ev.done {
+            metrics.record(&resp);
+            if let Some(tx) = streams.remove(&resp.id) {
+                let _ = tx.send(StreamEvent::Done(resp));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::request::FinishReason;
+
+    fn summaries() -> Vec<SlotSummary> {
+        vec![
+            SlotSummary {
+                slot: 0,
+                id: 0,
+                prefilling: false,
+                generated: 2,
+                remaining_budget: 10,
+                has_deadline: true,
+            },
+            SlotSummary {
+                slot: 1,
+                id: 1,
+                prefilling: true,
+                generated: 0,
+                remaining_budget: 30,
+                has_deadline: false,
+            },
+            SlotSummary {
+                slot: 2,
+                id: 2,
+                prefilling: false,
+                generated: 5,
+                remaining_budget: 20,
+                has_deadline: false,
+            },
+            SlotSummary {
+                slot: 3,
+                id: 3,
+                prefilling: false,
+                generated: 1,
+                remaining_budget: 4,
+                has_deadline: false,
+            },
+        ]
+    }
+
+    #[test]
+    fn victim_is_deadline_free_decoding_and_longest_remaining() {
+        // Slot 0 is protected (deadline), slot 1 is mid-prefill; of the
+        // eligible 2 and 3, slot 2 has the most budget left.
+        assert_eq!(choose_victim(&summaries()), Some(2));
+        // All protected ⇒ no victim.
+        let protected: Vec<SlotSummary> = summaries()
+            .into_iter()
+            .map(|mut s| {
+                s.has_deadline = true;
+                s
+            })
+            .collect();
+        assert_eq!(choose_victim(&protected), None);
+        assert_eq!(choose_victim(&[]), None);
+    }
+
+    #[test]
+    fn row_plan_holds_tpot_and_respects_bounds() {
+        let slo = SloPolicy {
+            ttft: Duration::from_millis(200),
+            tpot: Duration::from_millis(10),
+            max_rows: 64,
+        };
+        // 1 ms/row, 10 ms target ⇒ 10 rows.
+        assert_eq!(plan_iteration_rows(&slo, 2, Duration::from_millis(1), None), 10);
+        // Costlier rows shrink the budget, but never below the active set.
+        assert_eq!(plan_iteration_rows(&slo, 4, Duration::from_millis(5), None), 4);
+        // Cheap rows grow it, capped at max_rows.
+        assert_eq!(plan_iteration_rows(&slo, 1, Duration::from_micros(10), None), 64);
+        // More active slots than max_rows: the floor wins (every slot
+        // still steps; the batcher guarantees one row each regardless).
+        assert_eq!(plan_iteration_rows(&slo, 100, Duration::from_millis(1), None), 100);
+        // Zero measured cost (first iteration): wide open.
+        assert_eq!(plan_iteration_rows(&slo, 1, Duration::ZERO, None), 64);
+    }
+
+    #[test]
+    fn ttft_urgency_opens_the_budget() {
+        let slo = SloPolicy {
+            ttft: Duration::from_millis(100),
+            tpot: Duration::from_millis(1),
+            max_rows: 128,
+        };
+        let costly = Duration::from_millis(1); // affords only 1 row
+        // Ample headroom: TPOT rules.
+        assert_eq!(
+            plan_iteration_rows(&slo, 1, costly, Some(Duration::from_millis(90))),
+            1
+        );
+        // Inside a quarter of the TTFT target: open wide.
+        assert_eq!(
+            plan_iteration_rows(&slo, 1, costly, Some(Duration::from_millis(25))),
+            128
+        );
+        assert_eq!(plan_iteration_rows(&slo, 1, costly, Some(Duration::ZERO)), 128);
+        // No queued TTFT deadline at all: not urgent.
+        assert_eq!(plan_iteration_rows(&slo, 1, costly, None), 1);
+    }
+
+    #[test]
+    fn burst_streams_every_token_and_completes() {
+        let fe = ServingFrontend::spawn(MockEngine::new(2, 97, 64), ServingConfig::default());
+        let handles: Vec<StreamHandle> = (0..6u64)
+            .map(|id| {
+                fe.submit(Request::new(id, vec![3 + id as i32, 7], 4 + id as usize % 3))
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            let id = h.id;
+            let (streamed, resp) = h.wait().unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.finish, FinishReason::MaxTokens);
+            assert_eq!(streamed, resp.tokens, "stream {id} lost or duplicated tokens");
+            assert!(!streamed.is_empty());
+        }
+        let metrics = fe.shutdown();
+        assert_eq!(metrics.completed, 6);
+        assert_eq!(metrics.shed, 0);
+    }
+
+    #[test]
+    fn shed_arrives_as_done_event_on_the_stream() {
+        let cfg = ServingConfig {
+            batcher: BatcherConfig { queue_capacity: 0, ..BatcherConfig::default() },
+            ..ServingConfig::default()
+        };
+        let fe = ServingFrontend::spawn(MockEngine::new(2, 97, 64), cfg);
+        let h = fe.submit(Request::new(0, vec![5], 4)).unwrap();
+        let (streamed, resp) = h.wait().unwrap();
+        assert!(streamed.is_empty());
+        assert_eq!(resp.finish, FinishReason::Shed);
+        let metrics = fe.shutdown();
+        assert_eq!(metrics.shed, 1);
+        assert!((metrics.shed_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_scheduling_and_preemption_do_not_change_streams() {
+        // Offline oracle: same requests through run_to_completion.
+        let reqs = |with_ttft: bool| -> Vec<Request> {
+            (0..8u64)
+                .map(|id| {
+                    let plen = 1 + id as usize % 4;
+                    let prompt = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
+                    let r = Request::new(id, prompt, 3 + id as usize % 5);
+                    if with_ttft && id % 2 == 1 {
+                        // Generous budget: urgency steering may trigger,
+                        // expiry must not.
+                        r.with_ttft_deadline(Duration::from_secs(3600))
+                    } else {
+                        r
+                    }
+                })
+                .collect()
+        };
+        let mut oracle = Batcher::new(MockEngine::new(2, 97, 64), BatcherConfig::default());
+        for r in reqs(false) {
+            oracle.submit(r);
+        }
+        let want: HashMap<RequestId, Vec<i32>> = oracle
+            .run_to_completion()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens))
+            .collect();
+
+        // Online, with an aggressive SLO (tiny TPOT target ⇒ constant
+        // retuning; TTFT target 20000 s makes the odd requests' 3600 s
+        // headroom look "urgent" — ≤ ttft/4 — so the urgency path and
+        // preemption genuinely fire without any deadline ever expiring).
+        let cfg = ServingConfig {
+            batcher: BatcherConfig::default(),
+            slo: Some(SloPolicy {
+                ttft: Duration::from_secs(20_000),
+                tpot: Duration::from_micros(1),
+                max_rows: 64,
+            }),
+            preemption: true,
+        };
+        let fe = ServingFrontend::spawn(MockEngine::new(2, 97, 64), cfg);
+        let handles: Vec<StreamHandle> =
+            reqs(true).into_iter().map(|r| fe.submit(r).unwrap()).collect();
+        for h in handles {
+            let id = h.id;
+            let (streamed, resp) = h.wait().unwrap();
+            assert_eq!(resp.finish, FinishReason::MaxTokens, "request {id}");
+            assert_eq!(streamed, want[&id], "SLO scheduling changed stream {id}");
+            assert_eq!(streamed, resp.tokens);
+        }
+        fe.shutdown();
+    }
+}

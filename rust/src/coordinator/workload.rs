@@ -1,0 +1,263 @@
+//! Deterministic arrival-driven workload synthesis for the serving bench.
+//!
+//! The serving front-end's load tests need *schedules*, not just request
+//! batches: each request carries an arrival offset from t=0, drawn from a
+//! seeded arrival process. Everything here is a pure function of the
+//! [`WorkloadSpec`] — two calls with the same spec produce byte-identical
+//! schedules on any host — which is what lets the bench's bit-exactness
+//! assert compare online streams against an offline oracle: the *same*
+//! request set replays through both.
+//!
+//! Supported mixes (the serving-paper workload axes):
+//! - **Poisson** open-loop arrivals at a target rate, or **bursty**
+//!   arrivals (same long-run rate, delivered in back-to-back clumps — the
+//!   queueing-pressure worst case at equal load);
+//! - mixed prompt/output length distributions (uniform ranges);
+//! - **session reuse**: with probability `session_reuse` a request
+//!   continues a previous session — its prompt is the session's prior
+//!   prompt ⊕ that request's *answer-length placeholder* ⊕ a fresh turn,
+//!   truncated to `max_prompt` from the front like a chat window. Reused
+//!   sessions give the multi-turn prompt-length distribution real serving
+//!   traces have (long shared prefixes, growing contexts).
+
+use std::time::Duration;
+
+use super::request::Request;
+use super::serving::{ServingFrontend, StreamHandle};
+use crate::util::Prng;
+
+/// The inter-arrival process of a workload.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Independent exponential gaps at `rate_per_sec` (open-loop Poisson).
+    Poisson { rate_per_sec: f64 },
+    /// Same long-run rate, but arrivals land in back-to-back bursts of
+    /// `burst_size`: one exponential gap (at `rate_per_sec / burst_size`)
+    /// before each burst, zero gap inside it.
+    Bursty { rate_per_sec: f64, burst_size: usize },
+}
+
+/// A seeded workload description; [`generate`] is a pure function of it.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub seed: u64,
+    pub vocab: usize,
+    /// Uniform prompt length range `[lo, hi]`, inclusive.
+    pub prompt_len: (usize, usize),
+    /// Uniform generation budget range `[lo, hi]`, inclusive.
+    pub max_new: (usize, usize),
+    pub arrivals: ArrivalProcess,
+    /// Probability in `[0, 1]` that a request continues an existing
+    /// session instead of opening a new one.
+    pub session_reuse: f64,
+    /// Chat-window cap: session prompts are truncated to this many
+    /// trailing tokens. Also the hard cap on fresh prompts, so a spec
+    /// tuned to an engine's `max_context` never emits `ContextFull` bait.
+    pub max_prompt: usize,
+}
+
+impl WorkloadSpec {
+    /// A small default mix compatible with the test engines (vocab 97,
+    /// max_context 64).
+    pub fn small(seed: u64, arrivals: ArrivalProcess) -> Self {
+        WorkloadSpec {
+            seed,
+            vocab: 97,
+            prompt_len: (2, 10),
+            max_new: (4, 12),
+            arrivals,
+            session_reuse: 0.3,
+            max_prompt: 24,
+        }
+    }
+}
+
+/// One scheduled arrival: submit `req` at `at` (offset from replay start).
+#[derive(Debug, Clone)]
+pub struct TimedRequest {
+    pub at: Duration,
+    pub req: Request,
+}
+
+/// Generate a deterministic `n`-request schedule from `spec`. Request ids
+/// are `0..n` in arrival order; arrival offsets are non-decreasing.
+pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<TimedRequest> {
+    assert!(spec.prompt_len.0 >= 1, "prompts must be non-empty");
+    assert!(spec.prompt_len.1 >= spec.prompt_len.0 && spec.max_new.1 >= spec.max_new.0);
+    assert!(spec.max_prompt >= spec.prompt_len.1, "max_prompt below the fresh-prompt range");
+    assert!((0.0..=1.0).contains(&spec.session_reuse));
+    let mut prng = Prng::new(spec.seed);
+    let mut sessions: Vec<Vec<i32>> = Vec::new();
+    let mut t = Duration::ZERO;
+    let mut out = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        // Arrival gap first, so the schedule shape is independent of the
+        // per-request content draws below.
+        let gap = match spec.arrivals {
+            ArrivalProcess::Poisson { rate_per_sec } => prng.exp(rate_per_sec),
+            ArrivalProcess::Bursty { rate_per_sec, burst_size } => {
+                let b = burst_size.max(1);
+                if id as usize % b == 0 {
+                    prng.exp(rate_per_sec / b as f64)
+                } else {
+                    0.0
+                }
+            }
+        };
+        t += Duration::from_secs_f64(gap);
+
+        let turn_len = prng.usize_in(spec.prompt_len.0, spec.prompt_len.1 + 1);
+        let turn: Vec<i32> =
+            (0..turn_len).map(|_| prng.usize_in(1, spec.vocab) as i32).collect();
+        let reuse = !sessions.is_empty() && prng.f64() < spec.session_reuse;
+        let prompt = if reuse {
+            // Continue a session: prior context ⊕ fresh turn, truncated
+            // to the window from the front (oldest context falls off).
+            let s = prng.usize_in(0, sessions.len());
+            let mut p = sessions[s].clone();
+            p.extend_from_slice(&turn);
+            if p.len() > spec.max_prompt {
+                p.drain(..p.len() - spec.max_prompt);
+            }
+            sessions[s] = p.clone();
+            p
+        } else {
+            sessions.push(turn.clone());
+            turn
+        };
+        let max_new = prng.usize_in(spec.max_new.0, spec.max_new.1 + 1);
+        out.push(TimedRequest { at: t, req: Request::new(id, prompt, max_new) });
+    }
+    out
+}
+
+/// Replay a schedule against a serving front-end in (scaled) real time:
+/// sleep to each arrival's offset × `time_scale`, submit, collect the
+/// stream handles. `time_scale` < 1 compresses the schedule (offered
+/// load ÷ time_scale); 0 submits everything back-to-back.
+pub fn replay(
+    frontend: &ServingFrontend,
+    schedule: &[TimedRequest],
+    time_scale: f64,
+) -> anyhow::Result<Vec<StreamHandle>> {
+    let start = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(schedule.len());
+    for tr in schedule {
+        let due = tr.at.mul_f64(time_scale);
+        let now = start.elapsed();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        handles.push(frontend.submit(tr.req.clone())?);
+    }
+    Ok(handles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_spec(seed: u64) -> WorkloadSpec {
+        WorkloadSpec::small(seed, ArrivalProcess::Poisson { rate_per_sec: 100.0 })
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_spec() {
+        let a = generate(&poisson_spec(7), 50);
+        let b = generate(&poisson_spec(7), 50);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+        }
+        // A different seed gives a different schedule.
+        let c = generate(&poisson_spec(8), 50);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.req.prompt != y.req.prompt || x.at != y.at));
+    }
+
+    #[test]
+    fn requests_are_in_range_and_arrivals_monotone() {
+        let spec = poisson_spec(11);
+        let sched = generate(&spec, 200);
+        let mut prev = Duration::ZERO;
+        let mut saw_reuse_length = false;
+        for (i, tr) in sched.iter().enumerate() {
+            assert_eq!(tr.req.id, i as u64);
+            assert!(tr.at >= prev, "arrival offsets must be non-decreasing");
+            prev = tr.at;
+            let plen = tr.req.prompt.len();
+            assert!(plen >= spec.prompt_len.0 && plen <= spec.max_prompt, "plen {plen}");
+            saw_reuse_length |= plen > spec.prompt_len.1;
+            assert!(tr.req.prompt.iter().all(|&t| t >= 1 && (t as usize) < spec.vocab));
+            assert!(
+                tr.req.max_new_tokens >= spec.max_new.0
+                    && tr.req.max_new_tokens <= spec.max_new.1
+            );
+        }
+        // With 30% session reuse over 200 requests, multi-turn prompts
+        // longer than a single fresh turn must appear.
+        assert!(saw_reuse_length, "session reuse never grew a prompt");
+    }
+
+    #[test]
+    fn bursty_arrivals_share_timestamps_within_a_burst() {
+        let spec = WorkloadSpec::small(
+            3,
+            ArrivalProcess::Bursty { rate_per_sec: 100.0, burst_size: 4 },
+        );
+        let sched = generate(&spec, 40);
+        for chunk in sched.chunks(4) {
+            // Zero gap inside the burst: all 4 share the leader's offset.
+            assert!(chunk.iter().all(|tr| tr.at == chunk[0].at), "burst not back-to-back");
+        }
+        // Bursts themselves are separated (exponential gaps at rate/4
+        // essentially never draw an exact zero).
+        let leaders: Vec<Duration> = sched.iter().step_by(4).map(|tr| tr.at).collect();
+        assert!(leaders.windows(2).all(|w| w[1] > w[0]), "bursts share a timestamp");
+    }
+
+    #[test]
+    fn session_reuse_extends_a_prior_prompt_as_prefix() {
+        // With reuse certain after the first request, every later prompt
+        // must extend some earlier session's context: its head (up to the
+        // window truncation) re-appears from an earlier prompt.
+        let spec = WorkloadSpec { session_reuse: 1.0, ..poisson_spec(5) };
+        let sched = generate(&spec, 12);
+        for later in &sched[1..] {
+            let p = &later.req.prompt;
+            let shares_context = sched.iter().any(|earlier| {
+                earlier.req.id != later.req.id
+                    && !earlier.req.prompt.is_empty()
+                    && p.len() > earlier.req.prompt.len().min(spec.max_prompt - 1)
+                    && {
+                        // Untruncated case: earlier prompt is a strict prefix.
+                        p.starts_with(&earlier.req.prompt)
+                            // Truncated case: some suffix of the earlier
+                            // prompt is the head of this one.
+                            || (1..earlier.req.prompt.len()).any(|cut| {
+                                p.starts_with(&earlier.req.prompt[cut..])
+                            })
+                    }
+            });
+            assert!(shares_context, "request {} shares no context with any session", later.req.id);
+        }
+    }
+
+    #[test]
+    fn specs_reject_malformed_ranges() {
+        let ok = poisson_spec(1);
+        assert!(std::panic::catch_unwind(|| {
+            generate(&WorkloadSpec { prompt_len: (0, 4), ..ok }, 1)
+        })
+        .is_err());
+        assert!(std::panic::catch_unwind(|| {
+            generate(&WorkloadSpec { max_prompt: 3, ..ok }, 1)
+        })
+        .is_err());
+        assert!(std::panic::catch_unwind(|| {
+            generate(&WorkloadSpec { session_reuse: 1.5, ..ok }, 1)
+        })
+        .is_err());
+    }
+}

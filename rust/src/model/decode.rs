@@ -256,7 +256,13 @@ impl LayerGemvStats {
 }
 
 /// Accumulated per-projection kernel counters across all steps.
-#[derive(Debug, Clone, Default)]
+///
+/// Exactly-once accounting: a forward pass accumulates into a private
+/// staging copy and commits here only when the whole pass succeeds, so a
+/// failed iteration (e.g. an injected KV fault after layer 0 already ran
+/// its Q/K/V GEMVs) contributes nothing and the batcher's solo retry is
+/// counted once — not `k` partial layers plus a full retry.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct DecodeStats {
     /// One entry per decoder layer.
     pub layers: Vec<LayerGemvStats>,
@@ -286,8 +292,12 @@ pub struct LutTransformer {
     kv: KvCache,
     pool: Arc<WorkerPool>,
     batch: usize,
-    /// Per-projection kernel counters (public observability).
+    /// Per-projection kernel counters (public observability). Committed
+    /// from `staged` only by forwards that complete successfully.
     pub stats: DecodeStats,
+    /// In-flight counters of the current forward; discarded (overwritten
+    /// at the next forward's start) when the pass fails mid-way.
+    staged: DecodeStats,
     // Reused scratch (steady-state step does not grow or reallocate
     // these — including the quantized-activation buffers, whose int8 code
     // vectors recycle through `QuantizedVector::quantize_into`).
@@ -403,6 +413,7 @@ impl LutTransformer {
             layers: vec![LayerGemvStats::default(); spec.layers()],
             ..DecodeStats::default()
         };
+        let staged = stats.clone();
         Ok(LutTransformer {
             spec,
             layers,
@@ -411,6 +422,7 @@ impl LutTransformer {
             pool,
             batch,
             stats,
+            staged,
             x: Vec::new(),
             xn: Vec::new(),
             attn: Vec::new(),
@@ -531,6 +543,12 @@ impl LutTransformer {
         if runs.is_empty() {
             return Ok(());
         }
+        // Exactly-once stats: this forward accumulates into `staged` and
+        // commits into `stats` only if every layer and the head succeed.
+        // A pass that fails mid-way (KV fault at layer k) leaves `stats`
+        // untouched, so the batcher's solo retry of the same run is
+        // counted once instead of once plus k partial layers.
+        self.reset_staged();
 
         // Stateless embedding of every row: history enters only through
         // the KV cache.
@@ -560,11 +578,39 @@ impl LutTransformer {
         }
         rmsnorm_rows(&self.head_x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
-        self.stats.head +=
+        self.staged.head +=
             self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits)?;
-        self.stats.steps += 1;
-        self.stats.tokens += rows as u64;
+        self.staged.steps += 1;
+        self.staged.tokens += rows as u64;
+        self.commit_staged();
         Ok(())
+    }
+
+    /// Zero the staging counters at the start of a forward (any residue
+    /// belongs to a previous *failed* pass and must be discarded).
+    fn reset_staged(&mut self) {
+        for l in &mut self.staged.layers {
+            *l = LayerGemvStats::default();
+        }
+        self.staged.head = GemvStats::default();
+        self.staged.steps = 0;
+        self.staged.tokens = 0;
+    }
+
+    /// Fold a completed forward's staged counters into the public stats.
+    fn commit_staged(&mut self) {
+        for (dst, src) in self.stats.layers.iter_mut().zip(&self.staged.layers) {
+            dst.q += src.q;
+            dst.k += src.k;
+            dst.v += src.v;
+            dst.o += src.o;
+            dst.gate += src.gate;
+            dst.up += src.up;
+            dst.down += src.down;
+        }
+        self.stats.head += self.staged.head;
+        self.stats.steps += self.staged.steps;
+        self.stats.tokens += self.staged.tokens;
     }
 
     /// Q/K/V projections for all rows, ranged KV-cache append per run,
@@ -585,7 +631,7 @@ impl LutTransformer {
         rmsnorm_rows(&self.x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
         let lw = &self.layers[l];
-        let ls = &mut self.stats.layers[l];
+        let ls = &mut self.staged.layers[l];
         ls.q += lw.wq.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_q)?;
         ls.k += lw.wk.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_k)?;
         ls.v += lw.wv.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_v)?;
@@ -679,7 +725,7 @@ impl LutTransformer {
         }
 
         requantize_rows(&mut self.quant_h, &self.attn, h);
-        let ls = &mut self.stats.layers[l];
+        let ls = &mut self.staged.layers[l];
         ls.o += self.layers[l].wo.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_m)?;
         let orows = self.out_m.as_slice();
         for (xrow, orow) in self.x.chunks_exact_mut(h).zip(orows.chunks_exact(h)) {
@@ -698,7 +744,7 @@ impl LutTransformer {
         rmsnorm_rows(&self.x, &mut self.xn, h);
         requantize_rows(&mut self.quant_h, &self.xn, h);
         let lw = &self.layers[l];
-        let ls = &mut self.stats.layers[l];
+        let ls = &mut self.staged.layers[l];
         ls.gate += lw.w_gate.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_g)?;
         ls.up += lw.w_up.gemv_batch_into(&self.quant_h, &self.pool, &mut self.out_u)?;
         self.mlp.resize(self.out_g.as_slice().len(), 0.0);
@@ -708,7 +754,7 @@ impl LutTransformer {
             *m = silu(g) * u;
         }
         requantize_rows(&mut self.quant_f, &self.mlp, ffn);
-        let ls = &mut self.stats.layers[l];
+        let ls = &mut self.staged.layers[l];
         ls.down +=
             self.layers[l].w_down.gemv_batch_into(&self.quant_f, &self.pool, &mut self.out_m)?;
         let drows = self.out_m.as_slice();
@@ -969,6 +1015,62 @@ mod tests {
         assert!(err.to_string().contains("outside the"), "{err}");
         m.step(&items(&[(0, 5, 1)])).unwrap();
         pool.disarm_faults();
+    }
+
+    #[test]
+    fn failed_forward_commits_no_stats_and_retry_counts_once() {
+        use crate::runtime::{FaultKind, FaultPlan};
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let pool = WorkerPool::shared(1);
+        let mut m = LutTransformer::random(spec.clone(), 7, 1, pool.clone()).unwrap();
+        let mut oracle = LutTransformer::random(spec, 7, 1, pool1()).unwrap();
+
+        // kv_corrupt is one-shot and fires on the very first KV write —
+        // *after* layer 0's Q/K/V GEMVs already ran. Regression (pre-fix
+        // failing): the failed pass committed those partial layer-0
+        // counters, so the successful retry was double-counted.
+        pool.arm_faults(Arc::new(FaultPlan::new(9).with(FaultKind::KvCorrupt, 1)));
+        assert!(m.step(&items(&[(0, 3, 0)])).is_err());
+        assert_eq!(m.stats.steps, 0, "a failed forward must not count as a step");
+        assert_eq!(m.stats.tokens, 0);
+        assert_eq!(m.stats.head, GemvStats::default());
+        assert!(
+            m.stats.layers.iter().all(|l| *l == LayerGemvStats::default()),
+            "a failed forward leaked partial per-layer stats: {:?}",
+            m.stats.layers
+        );
+        // The retry succeeds (one-shot fault) and must count exactly once.
+        m.step(&items(&[(0, 3, 0)])).unwrap();
+        pool.disarm_faults();
+        oracle.step(&items(&[(0, 3, 0)])).unwrap();
+        assert_eq!(m.stats, oracle.stats, "retried work must be counted exactly once");
+        assert_eq!(m.logits(), oracle.logits(), "retry changed the logits");
+    }
+
+    #[test]
+    fn healing_pool_faults_leave_stats_equal_to_fault_free() {
+        use crate::runtime::{FaultKind, FaultPlan};
+        // worker_panic / slow_tile / poison_scratch heal inside the pool
+        // dispatch: the forward succeeds, so both the logits and the
+        // committed stats must equal the fault-free run (tile reports are
+        // delivered exactly once per tile even when its worker died).
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::q8());
+        let mut oracle = LutTransformer::random(spec.clone(), 7, 1, pool1()).unwrap();
+        let pool = WorkerPool::shared(2);
+        pool.arm_faults(Arc::new(
+            FaultPlan::new(11)
+                .with_seeded(FaultKind::WorkerPanic, 3, 0)
+                .with_seeded(FaultKind::SlowTile, 4, 0)
+                .with_seeded(FaultKind::PoisonScratch, 5, 0),
+        ));
+        let mut m = LutTransformer::random(spec, 7, 1, pool.clone()).unwrap();
+        for (p, t) in [3i32, 50, 7, 21].into_iter().enumerate() {
+            m.step(&items(&[(0, t, p)])).unwrap();
+            oracle.step(&items(&[(0, t, p)])).unwrap();
+            assert_eq!(m.logits(), oracle.logits(), "pos {p} diverged under healing faults");
+        }
+        pool.disarm_faults();
+        assert_eq!(m.stats, oracle.stats, "healed faults skewed the kernel stats");
     }
 
     #[test]

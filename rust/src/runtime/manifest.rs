@@ -10,6 +10,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 use super::topology::NumaPolicy;
 use crate::model::{DecodeSpec, KvCacheSpec, LayerSpec};
@@ -47,6 +48,14 @@ pub struct ManifestConfig {
     /// (the `SAIL_PREFILL_CHUNK` env override wins, `--config` replaces
     /// it).
     pub prefill_chunk: usize,
+    /// Serving TTFT target (`slo_ttft_ms` field, milliseconds > 0);
+    /// absent ⇒ no target. The streaming front-end's scheduler
+    /// ([`crate::coordinator::SloPolicy`]) steers the iteration row
+    /// budget toward it — a latency knob only, never a correctness one.
+    pub slo_ttft: Option<Duration>,
+    /// Serving TPOT target (`slo_tpot_ms` field, milliseconds > 0);
+    /// absent ⇒ no target.
+    pub slo_tpot: Option<Duration>,
 }
 
 /// Parsed manifest.
@@ -124,6 +133,23 @@ impl Manifest {
                 _ => bail!("manifest prefill_chunk must be an integer ≥ 1"),
             },
         };
+        // SLO targets, same strictness: absent ⇒ none, a positive number
+        // of milliseconds ⇒ a target, anything else is a load error (a
+        // malformed target silently dropped would serve without the SLO
+        // the artifact asked for).
+        let slo_ms = |k: &str| -> Result<Option<Duration>> {
+            match cfg.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_f64() {
+                    Some(ms) if ms > 0.0 && ms.is_finite() => {
+                        Ok(Some(Duration::from_secs_f64(ms / 1e3)))
+                    }
+                    _ => bail!("manifest {k} must be a number of milliseconds > 0"),
+                },
+            }
+        };
+        let slo_ttft = slo_ms("slo_ttft_ms")?;
+        let slo_tpot = slo_ms("slo_tpot_ms")?;
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -140,6 +166,8 @@ impl Manifest {
                 kv_bits,
                 placement,
                 prefill_chunk,
+                slo_ttft,
+                slo_tpot,
             },
             batch: j
                 .get("batch")
@@ -181,6 +209,7 @@ impl Manifest {
     ///         kv_bits: 8,
     ///         placement: NumaPolicy::Auto,
     ///         prefill_chunk: 16,
+    ///         slo_ttft: None, slo_tpot: None,
     ///     },
     ///     batch: 2,
     ///     weight_order: vec![],
@@ -276,6 +305,8 @@ mod tests {
             kv_bits: 16,
             placement: NumaPolicy::Auto,
             prefill_chunk: 16,
+            slo_ttft: None,
+            slo_tpot: None,
         }
     }
 
@@ -389,6 +420,47 @@ mod tests {
                 None => assert!(
                     Manifest::load(&dir).is_err(),
                     "malformed prefill_chunk {field} must not fall back to the default"
+                ),
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_slo_fields_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sail-manifest-slo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000SLO},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        type Want = Option<(Option<Duration>, Option<Duration>)>;
+        let cases: [(&str, Want); 5] = [
+            ("", Some((None, None))), // absent ⇒ no targets
+            (
+                r#", "slo_ttft_ms": 200, "slo_tpot_ms": 50"#,
+                Some((Some(Duration::from_millis(200)), Some(Duration::from_millis(50)))),
+            ),
+            (
+                r#", "slo_tpot_ms": 12.5"#,
+                Some((None, Some(Duration::from_micros(12_500)))),
+            ),
+            (r#", "slo_ttft_ms": 0"#, None),
+            (r#", "slo_ttft_ms": "fast""#, None),
+        ];
+        for (field, want) in cases {
+            std::fs::write(dir.join("manifest.json"), base.replace("SLO", field)).unwrap();
+            match want {
+                Some((ttft, tpot)) => {
+                    let m = Manifest::load(&dir).unwrap();
+                    assert_eq!((m.config.slo_ttft, m.config.slo_tpot), (ttft, tpot), "{field}");
+                }
+                None => assert!(
+                    Manifest::load(&dir).is_err(),
+                    "malformed SLO target {field} must not fall back to none"
                 ),
             }
         }

@@ -182,6 +182,51 @@ fn respawn_budget_exhaustion_degrades_to_serial_bit_identically() {
 }
 
 #[test]
+fn retry_path_counts_stats_exactly_once() {
+    // Regression (satellite of the serving PR): the batcher's solo-retry
+    // path used to double-count kernel work. A batched forward that
+    // failed mid-way had already committed per-projection `GemvStats` for
+    // the layers it finished; the solo retry then committed a whole
+    // forward again, so a faulted-then-healed run inflated `DecodeStats`
+    // versus a fault-free run. Stats are now staged during the forward
+    // and committed only on success — a failed `step_runs` contributes
+    // exactly nothing, and the retry contributes exactly one forward.
+    //
+    // Oracle: fault-free single-request run on a serial pool.
+    let req = || Request::new(0, vec![2, 3], 5);
+    let oracle_engine =
+        TransformerServeEngine::random(spec(), 9, 1, WorkerPool::shared(1)).unwrap();
+    let mut ob = Batcher::new(oracle_engine, BatcherConfig::default());
+    ob.submit(req());
+    let want = ob.run_to_completion().unwrap();
+    assert_eq!(want.len(), 1);
+    assert!(want[0].finish != FinishReason::EngineFault);
+    let want_stats = ob.engine().stats().clone();
+    assert!(want_stats.steps > 0 && want_stats.tokens > 0);
+
+    // Same request under a transient KV corruption: tick 3 lands inside
+    // the second forward (2 `kv_write_fault` calls per 2-layer forward),
+    // which fails batched AND solo once, then heals — the one-shot fault
+    // is consumed by the failed attempt, so the retry of the *next*
+    // iteration succeeds. Tokens, finish, and kernel stats must all be
+    // bit-identical to the fault-free oracle.
+    let pool = WorkerPool::shared(2);
+    pool.arm_faults(Arc::new(FaultPlan::new(9).with(FaultKind::KvCorrupt, 3)));
+    let engine = TransformerServeEngine::random(spec(), 9, 1, Arc::clone(&pool)).unwrap();
+    let mut b = Batcher::new(engine, BatcherConfig::default());
+    b.submit(req());
+    let got = b.run_to_completion().unwrap();
+    pool.disarm_faults();
+    assert_eq!(got.len(), 1);
+    assert_eq!((&got[0].tokens, got[0].finish), (&want[0].tokens, want[0].finish));
+    assert_eq!(
+        b.engine().stats(),
+        &want_stats,
+        "retried iteration counted its stats more (or less) than once"
+    );
+}
+
+#[test]
 fn env_spec_grammar_drives_the_full_stack() {
     // The exact strings the CI fault leg exports via SAIL_FAULTS, parsed
     // through the strict grammar and armed on a serving pool. (The env

@@ -1,0 +1,290 @@
+//! Conformance suite for the streaming serving front-end.
+//!
+//! The property under test is the front-end's **determinism contract**:
+//! every scheduling decision — SLO row-budget retuning, preemption,
+//! admission order, prefill chunking, pool width, NUMA placement, even a
+//! healing fault plan — is invisible in the token streams. For a fixed
+//! request set, the online per-request streams must be bit-identical to
+//! offline [`Batcher::run_to_completion`] on a serial fault-free pool.
+//!
+//! Also here: the deadline-expiry stream shape (an expiree's stream is a
+//! *prefix* of its fault-free stream, finished `DeadlineExceeded`), and
+//! the tier-1 serving smoke — an arrival-driven workload replayed at
+//! three offered-load points, persisting the latency/goodput artifact to
+//! `BENCH_serving.json` (schema in EXPERIMENTS.md).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sail::coordinator::{
+    workload, ArrivalProcess, Batcher, BatcherConfig, FinishReason, MockEngine, Request,
+    RequestId, ServingConfig, ServingFrontend, SloPolicy, TransformerServeEngine, WorkloadSpec,
+};
+use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, WorkerPool};
+use sail::util::json::Json;
+
+fn spec() -> DecodeSpec {
+    DecodeSpec::tiny(2, KvCacheSpec::q8())
+}
+
+/// Six requests with mixed prompt lengths and budgets — enough to cycle a
+/// 3-slot batcher through admission, decode, and refill at least twice.
+/// Odd ids optionally carry a *generous* TTFT deadline (an hour): with
+/// the SLO test's huge TTFT target their headroom always reads "urgent",
+/// so the row-budget urgency path and preemption genuinely fire, while
+/// the deadline itself can never expire inside a test run.
+fn requests(with_ttft: bool) -> Vec<Request> {
+    (0..6u64)
+        .map(|id| {
+            let plen = 1 + (id as usize % 3);
+            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
+            let r = Request::new(id, prompt, 4 + id as usize % 3);
+            if with_ttft && id % 2 == 1 {
+                r.with_ttft_deadline(Duration::from_secs(3600))
+            } else {
+                r
+            }
+        })
+        .collect()
+}
+
+/// Pool-level faults only (worker death, slow tiles, scratch poisoning) —
+/// every one heals in-pool with a bit-identical result, so an armed plan
+/// must leave all streams untouched. KV faults are deliberately absent:
+/// those surface as typed `EngineFault` finishes and belong to
+/// `tests/fault_injection.rs`.
+fn healing_plan(seed: u64) -> Arc<FaultPlan> {
+    Arc::new(
+        FaultPlan::new(seed)
+            .with_seeded(FaultKind::WorkerPanic, 6, 0)
+            .with_seeded(FaultKind::SlowTile, 8, 0)
+            .with_seeded(FaultKind::PoisonScratch, 8, 0),
+    )
+}
+
+/// The offline oracle: the same requests through `run_to_completion` on a
+/// serial fault-free pool at prefill chunk 1.
+fn oracle() -> HashMap<RequestId, (Vec<i32>, FinishReason)> {
+    let engine = TransformerServeEngine::random(spec(), 9, 3, WorkerPool::shared(1)).unwrap();
+    let cfg = BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() };
+    let mut b = Batcher::new(engine, cfg);
+    for r in requests(false) {
+        b.submit(r);
+    }
+    b.run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, (r.tokens, r.finish)))
+        .collect()
+}
+
+#[test]
+fn streams_bit_identical_across_widths_placements_chunks_and_faults() {
+    let want = oracle();
+    assert!(want.values().all(|(t, f)| !t.is_empty() && *f != FinishReason::EngineFault));
+
+    for prefill_chunk in [1usize, 16] {
+        for policy in [NumaPolicy::Off, NumaPolicy::Auto] {
+            for width in [1usize, 2, 8] {
+                for faults in [false, true] {
+                    let ctx = format!(
+                        "chunk {prefill_chunk} {policy} width {width} faults {faults}"
+                    );
+                    let pool = Arc::new(WorkerPool::with_policy(width, &policy));
+                    let plan = healing_plan(4242);
+                    if faults {
+                        pool.arm_faults(Arc::clone(&plan));
+                    }
+                    let engine =
+                        TransformerServeEngine::random(spec(), 9, 3, Arc::clone(&pool))
+                            .unwrap();
+                    // Aggressive SLO: the 1 µs TPOT target forces a
+                    // retune every iteration, and the odd requests' 1 h
+                    // TTFT headroom is inside ttft/4 of the 20000 s
+                    // target, so urgency + preemption fire constantly.
+                    let cfg = ServingConfig {
+                        batcher: BatcherConfig {
+                            prefill_chunk,
+                            ..BatcherConfig::default()
+                        },
+                        slo: Some(SloPolicy {
+                            ttft: Duration::from_secs(20_000),
+                            tpot: Duration::from_micros(1),
+                            max_rows: 64,
+                        }),
+                        preemption: true,
+                    };
+                    let fe = ServingFrontend::spawn(engine, cfg);
+                    let handles: Vec<_> = requests(true)
+                        .into_iter()
+                        .map(|r| fe.submit(r).unwrap())
+                        .collect();
+                    for h in handles {
+                        let id = h.id;
+                        let (streamed, resp) = h.wait().unwrap();
+                        assert_eq!(
+                            streamed, resp.tokens,
+                            "stream {id} desynced from its response ({ctx})"
+                        );
+                        let (want_tokens, want_finish) = &want[&id];
+                        assert_eq!(
+                            (&resp.tokens, &resp.finish),
+                            (want_tokens, want_finish),
+                            "scheduling leaked into stream {id} ({ctx})"
+                        );
+                    }
+                    let metrics = fe.shutdown();
+                    if faults {
+                        pool.disarm_faults();
+                        assert!(plan.fired_total() >= 1, "armed plan never fired ({ctx})");
+                    }
+                    assert_eq!(metrics.completed, 6, "{ctx}");
+                    assert_eq!(
+                        (metrics.shed, metrics.deadline_exceeded, metrics.engine_faults),
+                        (0, 0, 0),
+                        "{ctx}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deadline_expirees_stream_a_prefix_and_survivors_exactly_match() {
+    // Fault-free oracle without deadlines.
+    let mut ob = Batcher::new(MockEngine::new(2, 97, 64), BatcherConfig::default());
+    for r in requests(false) {
+        ob.submit(r);
+    }
+    let want: HashMap<RequestId, Vec<i32>> =
+        ob.run_to_completion().unwrap().into_iter().map(|r| (r.id, r.tokens)).collect();
+
+    // Online: ids 1 and 4 carry an already-expired total-latency budget.
+    // With 2 slots and 6 submissions, at least one expiree is still
+    // *queued* when swept — it must finish typed without ever holding a
+    // slot (the deadline clock starts at submit, not admission).
+    let doomed = [1u64, 4];
+    let fe = ServingFrontend::spawn(MockEngine::new(2, 97, 64), ServingConfig::default());
+    let handles: Vec<_> = requests(false)
+        .into_iter()
+        .map(|r| {
+            let r = if doomed.contains(&r.id) { r.with_deadline(Duration::ZERO) } else { r };
+            fe.submit(r).unwrap()
+        })
+        .collect();
+    for h in handles {
+        let id = h.id;
+        let (streamed, resp) = h.wait().unwrap();
+        assert_eq!(streamed, resp.tokens, "stream {id} desynced from its response");
+        if doomed.contains(&id) {
+            assert_eq!(resp.finish, FinishReason::DeadlineExceeded, "request {id}");
+            assert!(
+                want[&id].starts_with(&resp.tokens),
+                "expiree {id} streamed tokens that are not a prefix of its fault-free run"
+            );
+        } else {
+            assert_eq!(resp.finish, FinishReason::MaxTokens, "request {id}");
+            assert_eq!(streamed, want[&id], "deadline handling changed survivor {id}");
+        }
+    }
+    let metrics = fe.shutdown();
+    assert_eq!(metrics.completed, 6);
+    assert_eq!(metrics.deadline_exceeded, doomed.len() as u64);
+    // Expired work is not goodput; the four survivors' tokens all are.
+    let survivor_tokens: u64 = want
+        .iter()
+        .filter(|(id, _)| !doomed.contains(id))
+        .map(|(_, t)| t.len() as u64)
+        .sum();
+    assert_eq!(metrics.goodput_tokens, survivor_tokens);
+}
+
+/// Tier-1 serving smoke: replay one seeded arrival schedule at three
+/// offered-load points (0.5×/1×/2× of the base rate), assert every
+/// stream bit-matches the offline oracle at every load, and persist the
+/// latency/goodput artifact to `BENCH_serving.json` (next to Cargo.toml
+/// and at the repo root). `benches/serving_load.rs` overwrites it with
+/// the release-build version; this test keeps the artifact alive (and the
+/// schema honest) on plain `cargo test`.
+#[test]
+fn serving_smoke_replays_three_load_points_and_writes_artifact() {
+    const BASE_RATE: f64 = 400.0; // requests/sec before time scaling
+    const N: usize = 24;
+    let wspec =
+        WorkloadSpec::small(21, ArrivalProcess::Poisson { rate_per_sec: BASE_RATE });
+    let schedule = workload::generate(&wspec, N);
+
+    // Offline oracle for the whole request set.
+    let mut ob = Batcher::new(MockEngine::new(4, 97, 64), BatcherConfig::default());
+    for tr in &schedule {
+        ob.submit(tr.req.clone());
+    }
+    let want: HashMap<RequestId, Vec<i32>> =
+        ob.run_to_completion().unwrap().into_iter().map(|r| (r.id, r.tokens)).collect();
+
+    let mut points = Vec::new();
+    for (label, time_scale) in [("0.5x", 2.0f64), ("1x", 1.0), ("2x", 0.5)] {
+        let cfg = ServingConfig {
+            batcher: BatcherConfig::default(),
+            slo: Some(SloPolicy {
+                ttft: Duration::from_millis(250),
+                tpot: Duration::from_millis(50),
+                max_rows: 128,
+            }),
+            preemption: true,
+        };
+        let fe = ServingFrontend::spawn(MockEngine::new(4, 97, 64), cfg);
+        let handles = workload::replay(&fe, &schedule, time_scale).unwrap();
+        for h in handles {
+            let id = h.id;
+            let (streamed, resp) = h.wait().unwrap();
+            assert_eq!(resp.finish, FinishReason::MaxTokens, "request {id} at {label}");
+            assert_eq!(
+                streamed, want[&id],
+                "offered load changed stream {id} at {label}"
+            );
+            assert_eq!(streamed, resp.tokens);
+        }
+        let m = fe.shutdown();
+        assert_eq!(m.completed, N as u64, "{label}");
+        assert_eq!(m.goodput_tokens, m.tokens_generated, "{label}: no sheds expected");
+
+        let mut o = BTreeMap::new();
+        o.insert("load".to_string(), Json::Str(label.to_string()));
+        o.insert("offered_rps".to_string(), Json::Num(BASE_RATE / time_scale));
+        o.insert("time_scale".to_string(), Json::Num(time_scale));
+        o.insert("requests".to_string(), Json::Num(m.completed as f64));
+        o.insert("shed".to_string(), Json::Num(m.shed as f64));
+        o.insert("shed_rate".to_string(), Json::Num(m.shed_rate()));
+        o.insert("deadline_exceeded".to_string(), Json::Num(m.deadline_exceeded as f64));
+        o.insert("ttft_p50_ms".to_string(), Json::Num(m.ttft.p50()));
+        o.insert("ttft_p99_ms".to_string(), Json::Num(m.ttft.p99()));
+        o.insert("tpot_p50_ms".to_string(), Json::Num(m.tpot.p50()));
+        o.insert("tpot_p99_ms".to_string(), Json::Num(m.tpot.p99()));
+        o.insert("tok_per_sec".to_string(), Json::Num(m.tokens_per_sec()));
+        o.insert(
+            "goodput_tok_per_sec".to_string(),
+            Json::Num(m.goodput_tokens_per_sec()),
+        );
+        points.push(Json::Obj(o));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving_load".to_string()));
+    top.insert("source".to_string(), Json::Str("test-smoke".to_string()));
+    top.insert("engine".to_string(), Json::Str("mock".to_string()));
+    top.insert("requests".to_string(), Json::Num(N as f64));
+    top.insert("base_rate_rps".to_string(), Json::Num(BASE_RATE));
+    top.insert("streams_bit_exact".to_string(), Json::Bool(true));
+    top.insert("points".to_string(), Json::Arr(points));
+    let doc = Json::Obj(top);
+    for path in [
+        concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serving.json"),
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json"),
+    ] {
+        doc.write_atomic(std::path::Path::new(path)).unwrap();
+    }
+}
