@@ -16,6 +16,9 @@
 //!          --seed S --threads T --numa off|auto|MAP
 //!          --prefill-chunk C --queue-cap Q (0 = unbounded)
 //!          --slo-ttft-ms MS --slo-tpot-ms MS (0 = no SLO steering)
+//!          --kv contiguous|paged:N ("" = SAIL_KV env; lut engine only)
+//!          --kv-pages-budget P (0 = one slot's worth; paged only)
+//!          --shared-heads H (0 = off: Zipf-popular shared system prompts)
 //!          --preempt --bursty --artifacts DIR (--mock = --engine mock)
 //!
 //! Requests arrive on a seeded Poisson (or `--bursty`) schedule and each
@@ -37,10 +40,10 @@ use std::time::Duration;
 
 use sail::coordinator::{
     workload, ArrivalProcess, BatcherConfig, FinishReason, MockEngine, PjrtEngine, Request,
-    ServingConfig, ServingFrontend, SloPolicy, StreamHandle, TransformerServeEngine,
-    WorkloadSpec,
+    ServingConfig, ServingFrontend, SharedPromptMix, SloPolicy, StreamHandle,
+    TransformerServeEngine, WorkloadSpec,
 };
-use sail::model::{DecodeSpec, KvCacheSpec, LayerSpec};
+use sail::model::{parse_kv_layout, DecodeSpec, KvCacheSpec, KvRuntimeConfig, LayerSpec};
 use sail::quant::QuantLevel;
 use sail::runtime::{NumaPolicy, Topology, WorkerPool};
 use sail::util::cli::Args;
@@ -82,9 +85,26 @@ fn main() -> anyhow::Result<()> {
     let queue_cap: usize = args.opt("queue-cap", 0); // 0 = unbounded
     let slo_ttft_ms: f64 = args.opt("slo-ttft-ms", 0.0); // 0 = no steering
     let slo_tpot_ms: f64 = args.opt("slo-tpot-ms", 0.0);
+    let kv_arg = args.opt_str("kv", ""); // "" = SAIL_KV env, else contiguous
+    let kv_pages_budget: usize = args.opt("kv-pages-budget", 0); // 0 = default
+    let shared_heads: usize = args.opt("shared-heads", 0); // 0 = off
     let preempt = args.flag("preempt");
     let bursty = args.flag("bursty");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let kv_cfg = {
+        let mut cfg = if kv_arg.is_empty() {
+            KvRuntimeConfig::from_env()
+        } else {
+            KvRuntimeConfig {
+                layout: parse_kv_layout(&kv_arg).map_err(|e| anyhow::anyhow!("--kv: {e}"))?,
+                ..KvRuntimeConfig::default()
+            }
+        };
+        if kv_pages_budget > 0 {
+            cfg.pages_budget = Some(kv_pages_budget);
+        }
+        cfg
+    };
     let numa_policy = if numa.is_empty() {
         NumaPolicy::from_env()
     } else {
@@ -152,12 +172,13 @@ fn main() -> anyhow::Result<()> {
             let pool = Arc::new(WorkerPool::with_policy(width, &numa_policy));
             let spec = demo_spec();
             println!(
-                "LUT transformer: {} layers, hidden {}, vocab {}, ctx {}, q8 KV, \
+                "LUT transformer: {} layers, hidden {}, vocab {}, ctx {}, q8 KV ({}), \
                  pool {} threads",
                 spec.layers(),
                 spec.hidden,
                 spec.vocab,
                 spec.max_context,
+                kv_cfg.layout,
                 pool.threads()
             );
             println!(
@@ -167,7 +188,10 @@ fn main() -> anyhow::Result<()> {
                 pool.pinned_workers(),
                 Topology::detect().summary()
             );
-            ServingFrontend::spawn(TransformerServeEngine::random(spec, seed, batch, pool)?, scfg)
+            ServingFrontend::spawn(
+                TransformerServeEngine::random_with_kv(spec, seed, batch, pool, kv_cfg)?,
+                scfg,
+            )
         }
         other => anyhow::bail!("unknown engine {other} (lut|pjrt|mock)"),
     });
@@ -188,6 +212,10 @@ fn main() -> anyhow::Result<()> {
         arrivals,
         session_reuse: 0.3,
         max_prompt: 64,
+        // --shared-heads H: fresh requests prepend one of H fixed system
+        // prompts (Zipf-popular) — the prefix-cache showcase workload.
+        shared_prompts: (shared_heads > 0)
+            .then(|| SharedPromptMix { heads: shared_heads, head_len: 12, zipf_s: 1.1 }),
     };
     let schedule = workload::generate(&spec, n_requests);
     let originals: HashMap<u64, Request> =

@@ -16,6 +16,12 @@
 //! placement modes are expected to coincide within noise; the off→auto
 //! delta is the headline NUMA metric on multi-socket hosts.
 //!
+//! PR-8 adds the **paged-vs-contiguous KV matrix**: the batched decode
+//! workload at b8 × 8T on the contiguous slab vs the paged page-pool
+//! store (page 4 and 16), reporting decode tok/s and resident KV bytes
+//! per layout with a cross-layout token-stream bit-exactness assert —
+//! paging must change the memory shape, never the tokens.
+//!
 //! PR-5 adds the **chunked prefill matrix**: prompt 128/512 × chunk
 //! 1/8/32 × pool 1/8 on the transformer serving path, reporting TTFT,
 //! prefill tok/s, and `GemvStats.luts_built` per prompt token (the
@@ -40,7 +46,9 @@ use sail::coordinator::{
 };
 use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
-use sail::model::{DecodeItem, DecodeSpec, KvCacheSpec, LayerSpec, LutTransformer, ModelConfig};
+use sail::model::{
+    DecodeItem, DecodeSpec, KvCacheSpec, KvRuntimeConfig, LayerSpec, LutTransformer, ModelConfig,
+};
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, Topology, WorkerPool};
 use sail::sim::SailPerfModel;
@@ -460,6 +468,91 @@ fn main() {
     let prefill_bit_exact = prefill_streams.iter().all(|s| *s == prefill_streams[0]);
     assert!(prefill_bit_exact, "chunked prefill decode streams diverged across chunk sizes");
 
+    // --- paged vs contiguous KV store (PR-8) --------------------------------
+    // The page-pool store against the contiguous slab on the batched
+    // decode workload: decode tok/s and resident KV bytes per layout at
+    // b8 x8T, plus a cross-layout bit-exactness assert (batch 2, 16
+    // decoded tokens) — paging must change the memory shape, never the
+    // tokens. The contiguous slab sizes batch × max_context up front;
+    // the paged store grows page-at-a-time, so its resident bytes track
+    // actual occupancy (pool capacity is reported alongside).
+    let kv_layouts: [(&str, KvRuntimeConfig); 3] = [
+        ("contiguous", KvRuntimeConfig::contiguous()),
+        ("paged:4", KvRuntimeConfig::paged(4)),
+        ("paged:16", KvRuntimeConfig::paged(16)),
+    ];
+    let kv_pool = Arc::new(WorkerPool::with_policy(8, &NumaPolicy::Off));
+    let mut kv_rows: Vec<Json> = Vec::new();
+    let mut kv_streams: Vec<Vec<Vec<i32>>> = Vec::new();
+    println!("\n== paged vs contiguous KV ==");
+    for (label, cfg) in &kv_layouts {
+        let batch = 8usize;
+        let mut m =
+            LutTransformer::random_with_kv(decode_spec(), 77, batch, Arc::clone(&kv_pool), *cfg)
+                .unwrap();
+        let max_ctx = m.spec().max_context;
+        let mut pos = 0usize;
+        let r = time_throughput(
+            &format!("decode 4L h64 b{batch} x8T kv-{label} (tok/s)"),
+            decode_opts,
+            batch as f64,
+            || {
+                if pos == max_ctx {
+                    for s in 0..batch {
+                        m.reset_slot(s).unwrap();
+                    }
+                    pos = 0;
+                }
+                let items: Vec<DecodeItem> = (0..batch)
+                    .map(|s| DecodeItem { slot: s, token: (7 + s) as i32, pos })
+                    .collect();
+                m.step(&items).unwrap();
+                pos += 1;
+            },
+        );
+        let data_bytes = m.kv().data_bytes();
+        let scale_bytes = m.kv().scale_bytes();
+        let (pool_pages, pages_in_use) = match m.kv_metrics() {
+            Some(kv) => (kv.pool_pages as f64, kv.pages_in_use as f64),
+            None => (0.0, 0.0),
+        };
+        println!(
+            "kv-{label:<10} b{batch} x8T: {:>9.0} tok/s, {data_bytes} KV data bytes resident \
+             (+{scale_bytes} scale bytes)",
+            r.items_per_sec()
+        );
+        let mut o = BTreeMap::new();
+        o.insert("layout".to_string(), Json::Str(label.to_string()));
+        o.insert("batch".to_string(), Json::Num(batch as f64));
+        o.insert("tok_per_sec".to_string(), Json::Num(r.items_per_sec()));
+        o.insert("kv_data_bytes".to_string(), Json::Num(data_bytes as f64));
+        o.insert("kv_scale_bytes".to_string(), Json::Num(scale_bytes as f64));
+        o.insert("pool_pages".to_string(), Json::Num(pool_pages));
+        o.insert("pages_in_use".to_string(), Json::Num(pages_in_use));
+        kv_rows.push(Json::Obj(o));
+        results.push(r);
+
+        // Bit-exactness leg: fresh model per layout, identical seeds.
+        let mut m =
+            LutTransformer::random_with_kv(decode_spec(), 77, 2, Arc::clone(&kv_pool), *cfg)
+                .unwrap();
+        let mut toks = vec![3i32, 11];
+        let mut got = Vec::new();
+        for pos in 0..16usize {
+            let items: Vec<DecodeItem> = toks
+                .iter()
+                .enumerate()
+                .map(|(s, &t)| DecodeItem { slot: s, token: t, pos })
+                .collect();
+            m.step(&items).unwrap();
+            toks = (0..2).map(|s| argmax_logits(m.logits().row(s))).collect();
+            got.push(toks.clone());
+        }
+        kv_streams.push(got);
+    }
+    let kv_bit_exact = kv_streams.iter().all(|s| *s == kv_streams[0]);
+    assert!(kv_bit_exact, "decode token streams diverged across KV layouts");
+
     // --- fault tolerance: fault-free overhead + recovery latency (PR-6) -----
     // Two numbers the robustness work must pin: (1) what the armed-but-
     // silent fault machinery costs on the fault-free hot path (the hooks
@@ -626,6 +719,14 @@ fn main() {
     extras.insert(
         "prefill_env".to_string(),
         Json::Str(std::env::var("SAIL_PREFILL_CHUNK").unwrap_or_else(|_| "<unset>".to_string())),
+    );
+    // The paged-vs-contiguous KV matrix: one row per layout (decode
+    // tok/s + resident KV bytes + page-pool occupancy at b8 x8T).
+    extras.insert("kv_paged_matrix".to_string(), Json::Arr(kv_rows));
+    extras.insert("kv_paged_bit_exact".to_string(), Json::Bool(kv_bit_exact));
+    extras.insert(
+        "kv_env".to_string(),
+        Json::Str(std::env::var("SAIL_KV").unwrap_or_else(|_| "<unset>".to_string())),
     );
     // Persisted next to Cargo.toml (the CI artifact) and at the repo root
     // (the perf trajectory's pickup point) — atomically, so an aborted

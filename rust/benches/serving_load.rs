@@ -10,7 +10,13 @@
 //! Every non-shed stream is asserted **bit-identical** to the offline
 //! `run_to_completion` oracle at every load point — the CI serving leg
 //! fails on this assert, which is the point: scheduling under load must
-//! change latency, never tokens.
+//! change latency, never tokens. The oracle runs on the **contiguous**
+//! KV store and the online engines on the **paged** store with the radix
+//! prefix cache, so the assert also pins paged == contiguous across the
+//! whole serving path; the workload carries Zipf-popular shared system
+//! prompts ([`SharedPromptMix`]) and each load point records the prefix
+//! hit rate, COW copies, and peak resident pages vs the contiguous worst
+//! case (asserted strictly below it).
 //!
 //! Results are persisted to BENCH_serving.json next to Cargo.toml **and
 //! at the repo root** (schema in EXPERIMENTS.md §BENCH_serving.json
@@ -25,15 +31,18 @@ use std::time::Duration;
 
 use sail::coordinator::{
     workload, ArrivalProcess, Batcher, BatcherConfig, FinishReason, RequestId, ServingConfig,
-    ServingFrontend, SloPolicy, TransformerServeEngine, WorkloadSpec,
+    ServingFrontend, SharedPromptMix, SloPolicy, TransformerServeEngine, WorkloadSpec,
 };
-use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::model::{DecodeSpec, KvCacheSpec, KvRuntimeConfig};
 use sail::runtime::WorkerPool;
 use sail::util::json::Json;
 
 const N_REQUESTS: usize = 32;
 const BATCH: usize = 4;
 const ENGINE_SEED: u64 = 9;
+/// Online KV page size: 4 tokens ⇒ each 8-token shared head spans exactly
+/// two whole pages, so prefix hits cover the full head.
+const PAGE_TOKENS: usize = 4;
 
 fn spec() -> DecodeSpec {
     DecodeSpec::tiny(2, KvCacheSpec::q8())
@@ -41,18 +50,22 @@ fn spec() -> DecodeSpec {
 
 /// Workload sized to the tiny decode spec (vocab 96, max_context 24):
 /// prompt + budget never exceeds 20 positions, so `ContextFull` is
-/// impossible and every fault-free finish is normal.
+/// impossible and every fault-free finish is normal. Every request is
+/// fresh (no session reuse) and prepends one of 4 Zipf-popular 8-token
+/// system prompts — the many-users-few-system-prompts mix the prefix
+/// cache converts from repeated prefill into page sharing.
 fn wspec() -> WorkloadSpec {
     WorkloadSpec {
         seed: 21,
         vocab: 96,
         prompt_len: (2, 6),
-        max_new: (4, 8),
+        max_new: (4, 6),
         // Base rate is arbitrary: replay's time_scale sets the real
         // offered load below. Content draws are rate-independent.
         arrivals: ArrivalProcess::Poisson { rate_per_sec: 1.0 },
-        session_reuse: 0.3,
-        max_prompt: 12,
+        session_reuse: 0.0,
+        max_prompt: 16,
+        shared_prompts: Some(SharedPromptMix { heads: 4, head_len: 8, zipf_s: 1.1 }),
     }
 }
 
@@ -63,9 +76,18 @@ fn main() {
 
     // Offline oracle + capacity calibration: the same request set through
     // run_to_completion, timed. `capacity` is the machine's saturated
-    // decode throughput at this batch width — the 1× load point.
-    let engine =
-        TransformerServeEngine::random(spec(), ENGINE_SEED, BATCH, Arc::clone(&pool)).unwrap();
+    // decode throughput at this batch width — the 1× load point. The
+    // oracle is pinned to the contiguous slab store: the online engines
+    // below run paged, so the bit-exactness assert doubles as a
+    // cross-layout conformance check on the full serving path.
+    let engine = TransformerServeEngine::random_with_kv(
+        spec(),
+        ENGINE_SEED,
+        BATCH,
+        Arc::clone(&pool),
+        KvRuntimeConfig::contiguous(),
+    )
+    .unwrap();
     let mut oracle = Batcher::new(engine, BatcherConfig::default());
     for tr in &schedule {
         oracle.submit(tr.req.clone());
@@ -110,9 +132,14 @@ fn main() {
             }),
             preemption: true,
         };
-        let engine =
-            TransformerServeEngine::random(spec(), ENGINE_SEED, BATCH, Arc::clone(&pool))
-                .unwrap();
+        let engine = TransformerServeEngine::random_with_kv(
+            spec(),
+            ENGINE_SEED,
+            BATCH,
+            Arc::clone(&pool),
+            KvRuntimeConfig::paged(PAGE_TOKENS),
+        )
+        .unwrap();
         let fe = ServingFrontend::spawn(engine, cfg);
         let handles = workload::replay(&fe, &schedule, time_scale).unwrap();
         let mut matched = 0usize;
@@ -135,6 +162,21 @@ fn main() {
         let m = fe.shutdown();
         assert_eq!(m.completed, N_REQUESTS as u64, "lost responses at load {load}x");
         assert_eq!(matched as u64 + m.shed, N_REQUESTS as u64);
+        let kv = m.kv.expect("paged online engine must report KV metrics");
+        // The tentpole's memory claim, checked at every load point: the
+        // shared-prompt workload holds strictly fewer resident KV pages
+        // than the contiguous layout's batch × pages-per-slot worst case.
+        assert!(
+            kv.peak_slot_resident_pages < kv.contiguous_worst_case_pages,
+            "paged store never undercut the contiguous worst case at load {load}x: \
+             peak {} vs {}",
+            kv.peak_slot_resident_pages,
+            kv.contiguous_worst_case_pages
+        );
+        assert!(
+            kv.prefix_hits > 0,
+            "shared-head workload produced zero prefix hits at load {load}x"
+        );
         println!("\n--- load {load}x (offered {offered_rps:.1} req/s) ---");
         println!("{}", m.report());
 
@@ -153,6 +195,16 @@ fn main() {
         o.insert("tok_per_sec".to_string(), Json::Num(m.tokens_per_sec()));
         o.insert("goodput_tok_per_sec".to_string(), Json::Num(m.goodput_tokens_per_sec()));
         o.insert("streams_bit_exact".to_string(), Json::Bool(true));
+        o.insert("prefix_hit_rate".to_string(), Json::Num(kv.prefix_hit_rate()));
+        o.insert("prefix_hits".to_string(), Json::Num(kv.prefix_hits as f64));
+        o.insert("prefix_misses".to_string(), Json::Num(kv.prefix_misses as f64));
+        o.insert("cow_copies".to_string(), Json::Num(kv.cow_copies as f64));
+        o.insert("kv_pages_peak".to_string(), Json::Num(kv.peak_slot_resident_pages as f64));
+        o.insert("kv_pool_pages".to_string(), Json::Num(kv.pool_pages as f64));
+        o.insert(
+            "kv_contiguous_worst_case_pages".to_string(),
+            Json::Num(kv.contiguous_worst_case_pages as f64),
+        );
         points.push(Json::Obj(o));
     }
 
@@ -165,6 +217,11 @@ fn main() {
     top.insert("pool_threads".to_string(), Json::Num(pool.threads() as f64));
     top.insert("capacity_tok_per_sec".to_string(), Json::Num(capacity));
     top.insert("streams_bit_exact".to_string(), Json::Bool(true));
+    top.insert("kv_oracle".to_string(), Json::Str("contiguous".to_string()));
+    top.insert("kv_online".to_string(), Json::Str(format!("paged:{PAGE_TOKENS}")));
+    top.insert("shared_prompt_heads".to_string(), Json::Num(4.0));
+    top.insert("shared_prompt_head_len".to_string(), Json::Num(8.0));
+    top.insert("shared_prompt_zipf_s".to_string(), Json::Num(1.1));
     top.insert("points".to_string(), Json::Arr(points));
     let doc = Json::Obj(top);
     for path in [

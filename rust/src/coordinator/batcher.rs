@@ -444,6 +444,22 @@ impl<E: DecodeEngine> Batcher<E> {
         }
     }
 
+    /// Ask the engine's prefix cache to map the longest cached KV prefix
+    /// of `feed` into the freshly reset `slot`, returning the number of
+    /// feed tokens whose KV is already resident — prefill starts there.
+    ///
+    /// The split is clamped to `max_context - 1`: a cached prefix exactly
+    /// filling the window (possible when a full-window prompt was
+    /// inserted) must still leave one feedable position, so an over-long
+    /// prompt sharing it walks into the usual `ContextFull`-during-prefill
+    /// path instead of submitting a run at position `max_context`.
+    /// Engines without a prefix cache report 0 (cold start) and the
+    /// admission below is byte-for-byte the pre-paging behaviour.
+    fn attach_prefix(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
+        let split = self.engine.prefix_attach(slot, feed)?;
+        Ok(split.min(self.engine.max_context().saturating_sub(1)))
+    }
+
     /// Admit pending requests into free slots (resume queue first, then
     /// the admission queue), resetting slot KV.
     ///
@@ -471,11 +487,12 @@ impl<E: DecodeEngine> Batcher<E> {
                     }
                     self.engine.reset_slot(s)?;
                     self.admitted += 1;
+                    let split = self.attach_prefix(s, &p.feed)?;
                     self.slots[s] = Some(Slot {
                         req: p.req,
                         resume_feed: p.feed,
-                        fed: 0,
-                        pos: 0,
+                        fed: split,
+                        pos: split as i32,
                         next_input: 0,
                         generated: p.generated,
                         first_token_at: p.first_token_at,
@@ -510,11 +527,12 @@ impl<E: DecodeEngine> Batcher<E> {
                 }
                 self.engine.reset_slot(s)?;
                 self.admitted += 1;
+                let split = self.attach_prefix(s, &req.prompt)?;
                 self.slots[s] = Some(Slot {
                     req,
                     resume_feed: Vec::new(),
-                    fed: 0,
-                    pos: 0,
+                    fed: split,
+                    pos: split as i32,
                     next_input: 0,
                     generated: Vec::new(),
                     first_token_at: None,
@@ -699,6 +717,12 @@ impl<E: DecodeEngine> Batcher<E> {
                 // next sampled token — the *first* for a fresh prompt
                 // (TTFT stamps below), the first *new* one after a
                 // recompute-resume — fall through to generation handling.
+                //
+                // The slot's KV now covers the whole feed: publish its
+                // full pages into the prefix cache so later requests
+                // sharing the prefix attach instead of re-prefilling (a
+                // no-op on engines without a prefix cache).
+                self.engine.prefix_insert(s, sl.feed())?;
             }
             if sl.first_token_at.is_none() {
                 sl.first_token_at = Some(Instant::now());

@@ -21,7 +21,9 @@ use anyhow::{bail, Result};
 
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
-use crate::model::{DecodeItem, DecodeRun, DecodeSpec, DecodeStats, LutTransformer};
+use crate::model::{
+    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, KvMetrics, KvRuntimeConfig, LutTransformer,
+};
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use crate::runtime::WorkerPool;
 
@@ -178,6 +180,23 @@ pub trait DecodeEngine {
     }
     /// Clear slot state before admitting a new request.
     fn reset_slot(&mut self, slot: usize) -> Result<()>;
+    /// Map the longest cached KV prefix of `feed` into `slot` (paged KV
+    /// with a prefix cache only) and return the number of tokens covered —
+    /// the batcher starts prefill at that split. Engines without a prefix
+    /// cache report a cold start (0).
+    fn prefix_attach(&mut self, _slot: usize, _feed: &[i32]) -> Result<usize> {
+        Ok(0)
+    }
+    /// Publish `slot`'s prefilled KV pages for the token sequence `feed`
+    /// into the prefix cache so later requests sharing the prefix can
+    /// attach. A no-op on engines without a prefix cache.
+    fn prefix_insert(&mut self, _slot: usize, _feed: &[i32]) -> Result<()> {
+        Ok(())
+    }
+    /// KV pool/prefix-cache counters, if the engine runs a paged store.
+    fn kv_metrics(&self) -> Option<KvMetrics> {
+        None
+    }
 }
 
 /// PJRT-backed engine over the AOT decode artifact.
@@ -491,6 +510,20 @@ impl TransformerServeEngine {
         Ok(TransformerServeEngine { model: LutTransformer::random(spec, seed, batch, pool)? })
     }
 
+    /// [`random`](Self::random) with an explicit KV runtime configuration
+    /// (store layout, prefix cache, page budget) instead of `SAIL_KV`.
+    pub fn random_with_kv(
+        spec: DecodeSpec,
+        seed: u64,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+        kv_cfg: KvRuntimeConfig,
+    ) -> Result<Self> {
+        Ok(TransformerServeEngine {
+            model: LutTransformer::random_with_kv(spec, seed, batch, pool, kv_cfg)?,
+        })
+    }
+
     pub fn model(&self) -> &LutTransformer {
         &self.model
     }
@@ -562,6 +595,18 @@ impl DecodeEngine for TransformerServeEngine {
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
         self.model.reset_slot(slot)
+    }
+
+    fn prefix_attach(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
+        self.model.prefix_attach(slot, feed)
+    }
+
+    fn prefix_insert(&mut self, slot: usize, feed: &[i32]) -> Result<()> {
+        self.model.prefix_insert(slot, feed)
+    }
+
+    fn kv_metrics(&self) -> Option<KvMetrics> {
+        self.model.kv_metrics()
     }
 }
 

@@ -12,6 +12,7 @@
 use std::time::{Duration, Instant};
 
 use super::request::{FinishReason, Response};
+use crate::model::KvMetrics;
 use crate::util::stats::{Percentiles, Summary};
 
 /// Aggregated serving metrics over a run.
@@ -35,6 +36,10 @@ pub struct ServingMetrics {
     /// Tokens from requests that reached a normal finish (`MaxTokens`,
     /// `Eos`, `ContextFull`, `EmptyPrompt`) — the goodput numerator.
     pub goodput_tokens: u64,
+    /// Paged-KV pool and prefix-cache counters, harvested from the engine
+    /// at drain/shutdown ([`ServingMetrics::record_kv`]). `None` on the
+    /// contiguous store.
+    pub kv: Option<KvMetrics>,
     finished_at: Option<Instant>,
 }
 
@@ -58,7 +63,17 @@ impl ServingMetrics {
             deadline_exceeded: 0,
             engine_faults: 0,
             goodput_tokens: 0,
+            kv: None,
             finished_at: None,
+        }
+    }
+
+    /// Install the engine's paged-KV counters (latest snapshot wins; a
+    /// `None` from a contiguous engine leaves any prior snapshot alone so
+    /// harvesting at both drain and shutdown is safe).
+    pub fn record_kv(&mut self, kv: Option<KvMetrics>) {
+        if kv.is_some() {
+            self.kv = kv;
         }
     }
 
@@ -123,7 +138,7 @@ impl ServingMetrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} tokens={} elapsed={:.2}s throughput={:.2} tok/s \
              goodput={:.2} tok/s\n\
              latency p50/p95/p99 = {:.1}/{:.1}/{:.1} ms   \
@@ -147,7 +162,25 @@ impl ServingMetrics {
             self.shed_rate() * 100.0,
             self.deadline_exceeded,
             self.engine_faults,
-        )
+        );
+        if let Some(kv) = &self.kv {
+            s.push_str(&format!(
+                "\nkv paged:{} pool={} pages   peak resident={} (contiguous worst case {})   \
+                 cow_copies={}   prefix hit rate={:.1}% ({} hits / {} misses)   \
+                 prefix pages held={} evictions={}",
+                kv.page_tokens,
+                kv.pool_pages,
+                kv.peak_slot_resident_pages,
+                kv.contiguous_worst_case_pages,
+                kv.cow_copies,
+                kv.prefix_hit_rate() * 100.0,
+                kv.prefix_hits,
+                kv.prefix_misses,
+                kv.prefix_pages_held,
+                kv.prefix_evictions,
+            ));
+        }
+        s
     }
 }
 
@@ -243,6 +276,34 @@ mod tests {
         assert!(m.goodput_tokens_per_sec() <= m.tokens_per_sec());
         let rep = m.report();
         assert!(rep.contains("shed=1"));
+    }
+
+    #[test]
+    fn kv_snapshot_is_optional_and_sticky() {
+        let mut m = ServingMetrics::new();
+        assert!(!m.report().contains("kv paged"), "no KV line without a paged engine");
+        let kv = KvMetrics {
+            page_tokens: 16,
+            pool_pages: 40,
+            pages_in_use: 12,
+            peak_slot_resident_pages: 20,
+            contiguous_worst_case_pages: 32,
+            cow_copies: 3,
+            prefix_hits: 6,
+            prefix_misses: 2,
+            prefix_insertions: 5,
+            prefix_evictions: 1,
+            prefix_pages_held: 4,
+            numa_nodes: 1,
+        };
+        m.record_kv(Some(kv));
+        // A later contiguous harvest (None) must not erase the snapshot.
+        m.record_kv(None);
+        let rep = m.report();
+        assert!(rep.contains("kv paged:16"), "{rep}");
+        assert!(rep.contains("peak resident=20 (contiguous worst case 32)"), "{rep}");
+        assert!(rep.contains("hit rate=75.0%"), "{rep}");
+        assert_eq!(m.kv.unwrap().cow_copies, 3);
     }
 
     #[test]

@@ -27,7 +27,8 @@
 //!   channels, SLO-aware row-budget scheduling, deadline-driven
 //!   preemption; scheduling is bit-invisible in the streams;
 //! - [`workload`]: seeded arrival-driven workload schedules (Poisson /
-//!   bursty, mixed lengths, session reuse) for the serving bench.
+//!   bursty, mixed lengths, session reuse, shared Zipf-popular system
+//!   prompts) for the serving bench.
 
 pub mod batcher;
 pub mod engine;
@@ -54,4 +55,4 @@ pub use serving::{
     choose_victim, plan_iteration_rows, ServingConfig, ServingFrontend, SloPolicy, StreamEvent,
     StreamHandle,
 };
-pub use workload::{generate, replay, ArrivalProcess, TimedRequest, WorkloadSpec};
+pub use workload::{generate, replay, ArrivalProcess, SharedPromptMix, TimedRequest, WorkloadSpec};

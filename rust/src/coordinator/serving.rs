@@ -270,7 +270,12 @@ fn serve_loop<E: DecodeEngine>(
             let msg = if batcher.is_idle() && !draining {
                 match rx.recv() {
                     Ok(m) => m,
-                    Err(_) => return metrics, // all senders gone
+                    Err(_) => {
+                        // All senders gone: final KV-pool/prefix-cache
+                        // snapshot, then out.
+                        metrics.record_kv(batcher.engine().kv_metrics());
+                        return metrics;
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -300,6 +305,7 @@ fn serve_loop<E: DecodeEngine>(
         }
         if batcher.is_idle() {
             if draining {
+                metrics.record_kv(batcher.engine().kv_metrics());
                 return metrics;
             }
             continue;
@@ -314,6 +320,7 @@ fn serve_loop<E: DecodeEngine>(
             Ok(ev) => ev,
             Err(e) => {
                 eprintln!("sail serving: engine failure, stopping worker: {e}");
+                metrics.record_kv(batcher.engine().kv_metrics());
                 return metrics;
             }
         };

@@ -18,7 +18,12 @@
 //!   prompt ⊕ that request's *answer-length placeholder* ⊕ a fresh turn,
 //!   truncated to `max_prompt` from the front like a chat window. Reused
 //!   sessions give the multi-turn prompt-length distribution real serving
-//!   traces have (long shared prefixes, growing contexts).
+//!   traces have (long shared prefixes, growing contexts);
+//! - **shared system prompts** ([`SharedPromptMix`]): fresh requests
+//!   prepend one of `heads` fixed prompt heads, chosen by a Zipf draw —
+//!   the many-users-few-system-prompts shape that prefix caching exists
+//!   for. Head popularity follows `1/k^s`, so a paged KV store with a
+//!   radix prefix cache sees a hit rate that rises with the skew.
 
 use std::time::Duration;
 
@@ -35,6 +40,23 @@ pub enum ArrivalProcess {
     /// `burst_size`: one exponential gap (at `rate_per_sec / burst_size`)
     /// before each burst, zero gap inside it.
     Bursty { rate_per_sec: f64, burst_size: usize },
+}
+
+/// Shared-system-prompt mix: `heads` distinct fixed prompt heads of
+/// `head_len` tokens each; every *fresh* request (not a session
+/// continuation) prepends one, chosen by a Zipf(`zipf_s`) popularity draw
+/// (head `k`'s probability ∝ `1/(k+1)^s`). The resulting schedule has the
+/// long-shared-prefix structure real multi-tenant serving sees — N system
+/// prompts reused across many users — which is the workload a radix
+/// prefix cache converts from repeated prefill into page sharing.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedPromptMix {
+    /// Number of distinct prompt heads (≥ 1).
+    pub heads: usize,
+    /// Tokens per head (≥ 1).
+    pub head_len: usize,
+    /// Zipf skew `s` (> 0): larger ⇒ the top head dominates harder.
+    pub zipf_s: f64,
 }
 
 /// A seeded workload description; [`generate`] is a pure function of it.
@@ -54,6 +76,8 @@ pub struct WorkloadSpec {
     /// trailing tokens. Also the hard cap on fresh prompts, so a spec
     /// tuned to an engine's `max_context` never emits `ContextFull` bait.
     pub max_prompt: usize,
+    /// Optional shared-system-prompt structure on fresh requests.
+    pub shared_prompts: Option<SharedPromptMix>,
 }
 
 impl WorkloadSpec {
@@ -68,8 +92,24 @@ impl WorkloadSpec {
             arrivals,
             session_reuse: 0.3,
             max_prompt: 24,
+            shared_prompts: None,
         }
     }
+}
+
+/// Inverse-CDF Zipf draw: head `k` (0-based) with probability
+/// `(k+1)^-s / Σ_{j=1..n} j^-s`. Pure in `(u, n, s)`, so the schedule
+/// stays a deterministic function of the spec.
+fn zipf_index(u: f64, n: usize, s: f64) -> usize {
+    let total: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+    let mut acc = 0.0;
+    for k in 1..=n {
+        acc += (k as f64).powf(-s) / total;
+        if u < acc {
+            return k - 1;
+        }
+    }
+    n - 1
 }
 
 /// One scheduled arrival: submit `req` at `at` (offset from replay start).
@@ -86,6 +126,26 @@ pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<TimedRequest> {
     assert!(spec.prompt_len.1 >= spec.prompt_len.0 && spec.max_new.1 >= spec.max_new.0);
     assert!(spec.max_prompt >= spec.prompt_len.1, "max_prompt below the fresh-prompt range");
     assert!((0.0..=1.0).contains(&spec.session_reuse));
+    if let Some(mix) = spec.shared_prompts {
+        assert!(mix.heads >= 1 && mix.head_len >= 1, "shared-prompt mix needs ≥1 head of ≥1 token");
+        assert!(mix.zipf_s > 0.0, "Zipf skew must be positive");
+        assert!(
+            spec.max_prompt >= mix.head_len + spec.prompt_len.1,
+            "max_prompt below head_len + the fresh-turn maximum"
+        );
+    }
+    // Head token tables come from a seed-derived side stream so adding or
+    // removing the mix perturbs only what it must: arrival gaps and turn
+    // content draw from the main stream exactly as without it.
+    let heads: Vec<Vec<i32>> = match spec.shared_prompts {
+        Some(mix) => {
+            let mut hp = Prng::new(spec.seed ^ 0x5a5a_a5a5_c0ff_ee00);
+            (0..mix.heads)
+                .map(|_| (0..mix.head_len).map(|_| hp.usize_in(1, spec.vocab) as i32).collect())
+                .collect()
+        }
+        None => Vec::new(),
+    };
     let mut prng = Prng::new(spec.seed);
     let mut sessions: Vec<Vec<i32>> = Vec::new();
     let mut t = Duration::ZERO;
@@ -122,8 +182,19 @@ pub fn generate(spec: &WorkloadSpec, n: usize) -> Vec<TimedRequest> {
             sessions[s] = p.clone();
             p
         } else {
-            sessions.push(turn.clone());
-            turn
+            // Fresh request: under a shared-prompt mix, prepend a
+            // Zipf-chosen head (the validation above guarantees the
+            // result fits `max_prompt`).
+            let p = match spec.shared_prompts {
+                Some(mix) => {
+                    let mut p = heads[zipf_index(prng.f64(), mix.heads, mix.zipf_s)].clone();
+                    p.extend_from_slice(&turn);
+                    p
+                }
+                None => turn,
+            };
+            sessions.push(p.clone());
+            p
         };
         let max_new = prng.usize_in(spec.max_new.0, spec.max_new.1 + 1);
         out.push(TimedRequest { at: t, req: Request::new(id, prompt, max_new) });
@@ -245,6 +316,87 @@ mod tests {
     }
 
     #[test]
+    fn shared_prompt_mix_prepends_zipf_heads() {
+        let mix = SharedPromptMix { heads: 3, head_len: 6, zipf_s: 1.2 };
+        let spec = WorkloadSpec {
+            session_reuse: 0.0,
+            max_prompt: 24,
+            shared_prompts: Some(mix),
+            ..poisson_spec(21)
+        };
+        let sched = generate(&spec, 120);
+        let again = generate(&spec, 120);
+        // Determinism first: the mix is still a pure function of the spec.
+        for (x, y) in sched.iter().zip(&again) {
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.at, y.at);
+        }
+        // Recover the head tables the generator used and classify every
+        // prompt: all fresh (reuse 0.0), so each starts with some head.
+        let mut hp = crate::util::Prng::new(spec.seed ^ 0x5a5a_a5a5_c0ff_ee00);
+        let heads: Vec<Vec<i32>> = (0..mix.heads)
+            .map(|_| (0..mix.head_len).map(|_| hp.usize_in(1, spec.vocab) as i32).collect())
+            .collect();
+        let mut counts = vec![0usize; mix.heads];
+        for tr in &sched {
+            let h = heads
+                .iter()
+                .position(|h| tr.req.prompt.starts_with(h))
+                .expect("prompt starts with no known head");
+            counts[h] += 1;
+            assert!(tr.req.prompt.len() > mix.head_len, "head with no fresh turn");
+            assert!(tr.req.prompt.len() <= spec.max_prompt);
+        }
+        // Zipf skew: the most popular head strictly dominates the least
+        // popular, and every head appears (120 draws, 3 heads).
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(counts[0] > counts[2], "no Zipf skew: {counts:?}");
+    }
+
+    #[test]
+    fn shared_prompt_mix_sessions_keep_their_head() {
+        // Session continuations extend a head-carrying prompt, so the
+        // shared head survives as the prefix until window truncation.
+        let mix = SharedPromptMix { heads: 2, head_len: 4, zipf_s: 1.0 };
+        let spec = WorkloadSpec {
+            session_reuse: 0.5,
+            max_prompt: 64,
+            shared_prompts: Some(mix),
+            ..poisson_spec(9)
+        };
+        let sched = generate(&spec, 60);
+        let mut hp = crate::util::Prng::new(spec.seed ^ 0x5a5a_a5a5_c0ff_ee00);
+        let heads: Vec<Vec<i32>> = (0..mix.heads)
+            .map(|_| (0..mix.head_len).map(|_| hp.usize_in(1, spec.vocab) as i32).collect())
+            .collect();
+        for tr in &sched {
+            if tr.req.prompt.len() <= spec.max_prompt - spec.prompt_len.1 {
+                // Untruncated prompts must still open with a head.
+                assert!(
+                    heads.iter().any(|h| tr.req.prompt.starts_with(h)),
+                    "request {} lost its shared head",
+                    tr.req.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_draw_is_a_valid_skewed_distribution() {
+        // Inverse CDF sanity: u spanning [0,1) covers every index, in
+        // order, and the first index owns the largest probability mass.
+        let n = 5;
+        let got: Vec<usize> =
+            (0..1000).map(|i| zipf_index(i as f64 / 1000.0, n, 1.1)).collect();
+        assert_eq!(got[0], 0);
+        assert_eq!(*got.last().unwrap(), n - 1);
+        assert!(got.windows(2).all(|w| w[0] <= w[1]), "inverse CDF must be monotone");
+        let c0 = got.iter().filter(|&&k| k == 0).count();
+        let c4 = got.iter().filter(|&&k| k == 4).count();
+        assert!(c0 > c4, "head 0 ({c0}) must outweigh head 4 ({c4})");
+    }
+
+    #[test]
     fn specs_reject_malformed_ranges() {
         let ok = poisson_spec(1);
         assert!(std::panic::catch_unwind(|| {
@@ -259,5 +411,14 @@ mod tests {
             generate(&WorkloadSpec { session_reuse: 1.5, ..ok }, 1)
         })
         .is_err());
+        // Shared-prompt mixes validate too: zero heads, zero skew, and a
+        // window too small for head ⊕ fresh turn are all rejected.
+        let mix = |heads, head_len, zipf_s| WorkloadSpec {
+            shared_prompts: Some(SharedPromptMix { heads, head_len, zipf_s }),
+            ..ok
+        };
+        assert!(std::panic::catch_unwind(|| generate(&mix(0, 4, 1.0), 1)).is_err());
+        assert!(std::panic::catch_unwind(|| generate(&mix(2, 4, 0.0), 1)).is_err());
+        assert!(std::panic::catch_unwind(|| generate(&mix(2, 40, 1.0), 1)).is_err());
     }
 }

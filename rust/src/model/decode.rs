@@ -6,9 +6,13 @@
 //! of each layer, plus the output head — is one [`LutGemvEngine`] GEMV
 //! dispatched on the shared [`WorkerPool`], exactly the iteration-level
 //! tensor scheduling of §III-A. Per-token attention reads a real
-//! slot-indexed [`KvCache`] (fp16- or q8-backed per [`KvCacheSpec`],
-//! §III-B) whose element payload is allocated precisely as
-//! `KvCacheSpec::seq_bytes` accounts it.
+//! slot-indexed KV store (fp16- or q8-backed per [`KvCacheSpec`], §III-B)
+//! through the [`KvStore`] abstraction: the contiguous slab whose element
+//! payload is allocated precisely as `KvCacheSpec::seq_bytes` accounts
+//! it, or the paged pool ([`KvBackend`], `SAIL_KV=paged:<page_tokens>`)
+//! whose per-slot page tables the same reads and ranged writes walk —
+//! bit-identically, with copy-on-write prefix sharing underneath
+//! ([`prefix_attach`](LutTransformer::prefix_attach)).
 //!
 //! The forward comes in two grains: token-at-a-time
 //! ([`LutTransformer::step`], one [`DecodeItem`] per slot) and the
@@ -55,7 +59,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::kv::{KvCache, KvCacheSpec};
+use super::kv::{KvBackend, KvCacheSpec, KvMetrics, KvRuntimeConfig, KvStore};
 use super::ModelConfig;
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
@@ -289,7 +293,7 @@ pub struct LutTransformer {
     spec: DecodeSpec,
     layers: Vec<LayerWeights>,
     head: LutGemvEngine,
-    kv: KvCache,
+    kv: KvBackend,
     pool: Arc<WorkerPool>,
     batch: usize,
     /// Per-projection kernel counters (public observability). Committed
@@ -366,12 +370,29 @@ fn silu(x: f32) -> f32 {
 
 impl LutTransformer {
     /// Build a model with seeded random weights: the same `(spec, seed)`
-    /// gives the same model at any batch size and any pool width.
+    /// gives the same model at any batch size and any pool width. The KV
+    /// store layout comes from the `SAIL_KV` env
+    /// ([`KvRuntimeConfig::from_env`]); token streams are bit-identical
+    /// whichever store is selected.
     pub fn random(
         spec: DecodeSpec,
         seed: u64,
         batch: usize,
         pool: Arc<WorkerPool>,
+    ) -> Result<Self> {
+        Self::random_with_kv(spec, seed, batch, pool, KvRuntimeConfig::from_env())
+    }
+
+    /// [`random`](Self::random) with an explicit KV store configuration
+    /// (layout, prefix cache, page budget) instead of the `SAIL_KV` env —
+    /// the constructor benches and the conformance matrix use to pin
+    /// paged vs contiguous side by side in one process.
+    pub fn random_with_kv(
+        spec: DecodeSpec,
+        seed: u64,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+        kv_cfg: KvRuntimeConfig,
     ) -> Result<Self> {
         spec.validate()?;
         if batch == 0 {
@@ -408,7 +429,15 @@ impl LutTransformer {
             })
             .collect();
         let head = gen(spec.vocab, h, spec.head);
-        let kv = KvCache::new(spec.kv, spec.layers(), batch, spec.max_context, kvd)?;
+        let mut kv = KvBackend::build(kv_cfg, spec.kv, spec.layers(), batch, spec.max_context, kvd)?;
+        // Interleave the paged pool's page frames across the placement's
+        // node groups (round-robin, deterministic) — the PR-4 NUMA
+        // follow-on. A no-op on the contiguous slab and on single-group
+        // placements.
+        if let KvBackend::Paged { store, .. } = &kv {
+            let nodes = pool.placement().interleave_pages(store.pool_pages());
+            kv.set_numa_interleave(nodes);
+        }
         let stats = DecodeStats {
             layers: vec![LayerGemvStats::default(); spec.layers()],
             ..DecodeStats::default()
@@ -451,8 +480,38 @@ impl LutTransformer {
         self.batch
     }
 
-    pub fn kv(&self) -> &KvCache {
+    pub fn kv(&self) -> &KvBackend {
         &self.kv
+    }
+
+    /// Paged-store observability (pool occupancy, COW copies, prefix hit
+    /// counters); `None` on the contiguous slab.
+    pub fn kv_metrics(&self) -> Option<KvMetrics> {
+        self.kv.metrics()
+    }
+
+    /// Map the longest cached prefix of `feed` read-only into `slot`'s
+    /// page table and return the feed index prefill should start from
+    /// (0 = cold; the batcher seeds `fed`/`pos` with the split). Must be
+    /// called on a freshly reset slot, before any token of the request
+    /// runs — the shared span's tokens are then never fed, so no LUT is
+    /// built for them ([`prefix_attach` is the "skip prefill
+    /// entirely"](KvBackend::prefix_attach) path). Contiguous stores
+    /// always return 0.
+    pub fn prefix_attach(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
+        if slot >= self.batch {
+            bail!("slot {slot} outside batch {}", self.batch);
+        }
+        self.kv.prefix_attach(slot, feed)
+    }
+
+    /// Publish `slot`'s completed prefill of `feed` into the prefix tree
+    /// (see [`KvBackend::prefix_insert`]); a no-op on contiguous stores.
+    pub fn prefix_insert(&mut self, slot: usize, feed: &[i32]) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot {slot} outside batch {}", self.batch);
+        }
+        self.kv.prefix_insert(slot, feed)
     }
 
     pub fn pool(&self) -> &Arc<WorkerPool> {
@@ -882,12 +941,99 @@ mod tests {
 
     #[test]
     fn kv_allocation_matches_spec_accounting() {
+        // Layout-aware: the contiguous slab allocates exactly
+        // `batch_bytes`; the paged pool allocates exactly
+        // `pool_pages × page_bytes` (worst case + budget). `random` reads
+        // SAIL_KV, so this test must hold under either CI leg.
+        use super::super::kv::KvLayout;
         for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
             let spec = DecodeSpec::tiny(3, kv);
             let cfg = spec.to_model_config();
             let m = LutTransformer::random(spec, 7, 4, pool1()).unwrap();
-            assert_eq!(m.kv().data_bytes(), kv.batch_bytes(&cfg, cfg.max_context, 4));
+            match m.kv().layout() {
+                KvLayout::Contiguous => {
+                    assert_eq!(m.kv().data_bytes(), kv.batch_bytes(&cfg, cfg.max_context, 4));
+                }
+                KvLayout::Paged { page_tokens } => {
+                    let store = m.kv().paged().unwrap();
+                    assert_eq!(
+                        m.kv().data_bytes(),
+                        store.pool_pages() as u64 * kv.page_bytes(&cfg, page_tokens)
+                    );
+                }
+            }
+            // And the explicit paged constructor, independent of the env.
+            let spec = DecodeSpec::tiny(3, kv);
+            let p = LutTransformer::random_with_kv(
+                spec, 7, 4, pool1(), KvRuntimeConfig::paged(16),
+            )
+            .unwrap();
+            let store = p.kv().paged().unwrap();
+            assert_eq!(
+                p.kv().data_bytes(),
+                store.pool_pages() as u64 * kv.page_bytes(&cfg, 16)
+            );
         }
+    }
+
+    #[test]
+    fn prefix_attach_matches_cold_prefill_bit_for_bit() {
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::q8());
+        let mut m =
+            LutTransformer::random_with_kv(spec, 7, 2, pool1(), KvRuntimeConfig::paged(4))
+                .unwrap();
+        let prompt: Vec<i32> = vec![3, 50, 7, 21, 9, 12, 6, 8, 40];
+        // Cold prefill on slot 0, published into the prefix tree.
+        assert_eq!(m.prefix_attach(0, &prompt).unwrap(), 0, "empty tree must miss");
+        m.step_runs(&[DecodeRun { slot: 0, tokens: &prompt, start_pos: 0 }]).unwrap();
+        let cold = m.logits().row(0).to_vec();
+        m.prefix_insert(0, &prompt).unwrap();
+        let tokens_after_cold = m.stats.tokens;
+        // Warm admission on slot 1: the two full pages (8 of 9 tokens)
+        // attach; only the tail past the split is ever fed.
+        let split = m.prefix_attach(1, &prompt).unwrap();
+        assert_eq!(split, 8);
+        m.step_runs(&[DecodeRun { slot: 1, tokens: &prompt[split..], start_pos: split }])
+            .unwrap();
+        assert_eq!(m.stats.tokens - tokens_after_cold, 1, "shared span must not be re-fed");
+        assert_eq!(m.logits().row(0), cold.as_slice(), "warm logits diverged from cold");
+        // The decode trajectories stay identical too.
+        m.step(&items(&[(0, 5, 9), (1, 5, 9)])).unwrap();
+        assert_eq!(m.logits().row(0), m.logits().row(1), "post-attach decode diverged");
+        let km = m.kv_metrics().unwrap();
+        assert_eq!((km.prefix_hits, km.prefix_misses), (1, 1));
+        assert!((km.prefix_hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(km.cow_copies, 0, "the tail wrote a fresh page, not a shared one");
+    }
+
+    #[test]
+    fn full_prefix_hit_cows_the_last_shared_page() {
+        // An exactly-page-aligned full-prompt hit re-feeds the last token
+        // (split ≤ len − 1), which rewrites a shared page → exactly one
+        // COW — and the original page keeps the original bits, so the
+        // cold slot's stream is untouched.
+        let spec = DecodeSpec::tiny(2, KvCacheSpec::fp16());
+        let mut m =
+            LutTransformer::random_with_kv(spec, 7, 2, pool1(), KvRuntimeConfig::paged(4))
+                .unwrap();
+        let prompt: Vec<i32> = vec![3, 50, 7, 21, 9, 12, 6, 8]; // two exact pages
+        m.step_runs(&[DecodeRun { slot: 0, tokens: &prompt, start_pos: 0 }]).unwrap();
+        let cold = m.logits().row(0).to_vec();
+        m.prefix_insert(0, &prompt).unwrap();
+        let split = m.prefix_attach(1, &prompt).unwrap();
+        assert_eq!(split, 7, "full match clamps to len − 1");
+        m.step_runs(&[DecodeRun { slot: 1, tokens: &prompt[7..], start_pos: 7 }]).unwrap();
+        assert_eq!(m.logits().row(0), cold.as_slice());
+        assert_eq!(m.kv_metrics().unwrap().cow_copies, 1, "shared-page rewrite must COW once");
+        // Both slots now decode identically (the COW copy carried the
+        // shared history bit-for-bit).
+        m.step(&items(&[(0, 5, 8), (1, 5, 8)])).unwrap();
+        assert_eq!(m.logits().row(0), m.logits().row(1));
+        // Refcounts balance: with both slots reset, only the tree's two
+        // retained pages stay in use.
+        m.reset_slot(0).unwrap();
+        m.reset_slot(1).unwrap();
+        assert_eq!(m.kv_metrics().unwrap().pages_in_use, 2);
     }
 
     #[test]

@@ -5,13 +5,68 @@
 //! per-token `Q × K_cacheᵀ` product streams without rebuilding large LUTs.
 //! The GPU baselines' batch capacity is governed by this module's byte
 //! accounting, and the serving-path decode model reads and writes its
-//! per-slot history through [`KvCache`] — a real store whose element
-//! payload is allocated exactly as [`KvCacheSpec::seq_bytes`] accounts it
-//! (cross-checked in tests and in `tests/decode_serving.rs`).
+//! per-slot history through a [`KvStore`] — either the contiguous
+//! slab-per-slot [`KvCache`] or the [`PagedKvCache`], a shared page pool
+//! with per-slot page tables, refcounted copy-on-write sharing, and a
+//! typed-exhaustion free list. `SAIL_KV=contiguous|paged:<page_tokens>`
+//! selects the store at runtime ([`kv_layout_from_env`]); both are
+//! bit-identical through the decode path (pinned in `tests/paged_kv.rs`).
+
+use std::fmt;
 
 use anyhow::{bail, Result};
 
+use super::prefix::RadixPrefixCache;
 use super::ModelConfig;
+
+/// Bytes per page-table entry the paged store spends per mapped page
+/// (`u32` page id), counted by [`KvCacheSpec::paged_seq_bytes`] so
+/// capacity math covers the metadata the contiguous slab does not have.
+pub const PAGE_TABLE_ENTRY_BYTES: u64 = 4;
+
+/// Typed accounting failure from [`KvCacheSpec::slots_for`]: the spec is
+/// degenerate (a sequence accounts to zero bytes), so "how many sequences
+/// fit" has no meaningful answer. The old `max_batch` divisor silently
+/// clamped this to 1 byte/sequence and returned garbage capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvAccountingError {
+    /// `seq_bytes(m, ctx) == 0`: zero context length or a model whose KV
+    /// geometry collapses to zero bytes per token.
+    DegenerateSpec { ctx: usize },
+}
+
+impl fmt::Display for KvAccountingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvAccountingError::DegenerateSpec { ctx } => write!(
+                f,
+                "degenerate KV spec: a sequence at ctx {ctx} accounts to 0 bytes \
+                 (zero context or zero kv geometry)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KvAccountingError {}
+
+/// Typed allocation failure from the paged store: every page in the pool
+/// is referenced (by slot tables and/or the prefix tree). The backend
+/// reacts by evicting prefix-tree leaves and retrying
+/// ([`KvBackend::write_run`]); if nothing is evictable the error
+/// propagates and the batcher finishes the one offending request
+/// `EngineFault`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PagePoolExhausted {
+    pub pool_pages: usize,
+}
+
+impl fmt::Display for PagePoolExhausted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "KV page pool exhausted: all {} pages referenced", self.pool_pages)
+    }
+}
+
+impl std::error::Error for PagePoolExhausted {}
 
 /// KV-cache precision and layout for one serving deployment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,9 +95,79 @@ impl KvCacheSpec {
         self.seq_bytes(m, ctx) * batch as u64
     }
 
+    /// Element-payload bytes of one KV page holding `page_tokens` tokens
+    /// (all layers, K and V) — the allocation granule of the paged store.
+    pub fn page_bytes(&self, m: &ModelConfig, page_tokens: usize) -> u64 {
+        m.kv_bytes_per_token(self.bits) * page_tokens as u64
+    }
+
+    /// Worst-case bytes for one sequence under the paged store: whole
+    /// pages (the last page is allocated in full even when partially
+    /// occupied) **plus** the page-table entries mapping them. The
+    /// contiguous [`seq_bytes`](Self::seq_bytes) has neither rounding nor
+    /// table overhead, so `paged_seq_bytes ≥ seq_bytes` always.
+    pub fn paged_seq_bytes(&self, m: &ModelConfig, ctx: usize, page_tokens: usize) -> u64 {
+        let pages = ctx.div_ceil(page_tokens.max(1)) as u64;
+        pages * self.page_bytes(m, page_tokens) + pages * PAGE_TABLE_ENTRY_BYTES
+    }
+
+    /// How many sequences fit in `capacity_bytes` alongside the weights
+    /// and a reserve — the typed replacement for the old `max_batch`
+    /// arithmetic. A degenerate spec (zero bytes per sequence) is a
+    /// [`KvAccountingError`] instead of a silently clamped divisor; an
+    /// over-committed capacity (`weights + reserve ≥ capacity`) is a
+    /// legitimate answer of 0.
+    pub fn slots_for(
+        &self,
+        m: &ModelConfig,
+        ctx: usize,
+        capacity_bytes: u64,
+        weight_bytes: u64,
+        reserve_bytes: u64,
+    ) -> Result<usize, KvAccountingError> {
+        let per_seq = self.seq_bytes(m, ctx);
+        if per_seq == 0 {
+            return Err(KvAccountingError::DegenerateSpec { ctx });
+        }
+        let need = weight_bytes + reserve_bytes;
+        if need >= capacity_bytes {
+            return Ok(0);
+        }
+        Ok(((capacity_bytes - need) / per_seq) as usize)
+    }
+
+    /// [`slots_for`](Self::slots_for) for the paged store: per-sequence
+    /// cost is [`paged_seq_bytes`](Self::paged_seq_bytes) (whole pages +
+    /// page-table entries) and `radix_bytes` of prefix-tree node overhead
+    /// is charged against the capacity up front — capacity math stays
+    /// honest about the metadata the slab-per-slot layout never had.
+    pub fn slots_for_paged(
+        &self,
+        m: &ModelConfig,
+        ctx: usize,
+        page_tokens: usize,
+        capacity_bytes: u64,
+        weight_bytes: u64,
+        reserve_bytes: u64,
+        radix_bytes: u64,
+    ) -> Result<usize, KvAccountingError> {
+        let per_seq = self.paged_seq_bytes(m, ctx, page_tokens);
+        if per_seq == 0 {
+            return Err(KvAccountingError::DegenerateSpec { ctx });
+        }
+        let need = weight_bytes + reserve_bytes + radix_bytes;
+        if need >= capacity_bytes {
+            return Ok(0);
+        }
+        Ok(((capacity_bytes - need) / per_seq) as usize)
+    }
+
     /// Largest batch fitting in `capacity_bytes` alongside the weights —
     /// the constraint that yields Table III's shrinking batch columns and
-    /// "X" (does-not-fit) entries.
+    /// "X" (does-not-fit) entries. Thin wrapper over
+    /// [`slots_for`](Self::slots_for); a degenerate spec is a programmer
+    /// error here (the typed API is for validating external specs) and
+    /// panics loudly instead of returning garbage capacity.
     pub fn max_batch(
         &self,
         m: &ModelConfig,
@@ -51,11 +176,142 @@ impl KvCacheSpec {
         weight_bytes: u64,
         reserve_bytes: u64,
     ) -> usize {
-        let need = weight_bytes + reserve_bytes;
-        if need >= capacity_bytes {
-            return 0;
+        self.slots_for(m, ctx, capacity_bytes, weight_bytes, reserve_bytes)
+            .expect("degenerate KvCacheSpec (zero seq_bytes); validate with slots_for")
+    }
+}
+
+/// Which KV store a deployment runs: the PR-3 contiguous slab (one
+/// `[max_context, kv_dim]` pane per layer/slot) or the paged pool with
+/// `page_tokens` tokens per page. Selected at runtime by `SAIL_KV`
+/// (see [`parse_kv_layout`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    Contiguous,
+    Paged { page_tokens: usize },
+}
+
+impl fmt::Display for KvLayout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvLayout::Contiguous => write!(f, "contiguous"),
+            KvLayout::Paged { page_tokens } => write!(f, "paged:{page_tokens}"),
         }
-        ((capacity_bytes - need) / self.seq_bytes(m, ctx).max(1)) as usize
+    }
+}
+
+/// Strict `SAIL_KV` grammar: `contiguous`, or `paged:<page_tokens>` with
+/// `page_tokens ≥ 1`. Anything else is an error (the env reader warns and
+/// falls back; explicit config paths propagate it typed).
+pub fn parse_kv_layout(v: &str) -> Result<KvLayout, String> {
+    let t = v.trim();
+    if t == "contiguous" {
+        return Ok(KvLayout::Contiguous);
+    }
+    if let Some(n) = t.strip_prefix("paged:") {
+        return match n.trim().parse::<usize>() {
+            Ok(p) if p >= 1 => Ok(KvLayout::Paged { page_tokens: p }),
+            _ => Err(format!("invalid page size {n:?} (want paged:<tokens ≥ 1>)")),
+        };
+    }
+    Err(format!("invalid KV layout {t:?} (want contiguous or paged:<page_tokens>)"))
+}
+
+/// Lenient `SAIL_KV` reader for default-construction paths: unset or
+/// empty → `None` (caller picks its default), malformed → warn on stderr
+/// and `None` — the decode path keeps serving rather than dying on a
+/// typo'd env var. Strict validation lives in [`parse_kv_layout`] and
+/// the manifest loader.
+pub fn kv_layout_from_env() -> Option<KvLayout> {
+    let v = std::env::var("SAIL_KV").ok()?;
+    if v.trim().is_empty() {
+        return None;
+    }
+    match parse_kv_layout(&v) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("SAIL_KV: {e}; using the contiguous store");
+            None
+        }
+    }
+}
+
+/// Runtime KV configuration a transformer is built with: the store
+/// layout, whether the radix-tree prefix cache rides on the paged store,
+/// and the shared-page budget (pool pages beyond the per-slot worst
+/// case; also the prefix tree's retention cap — see [`KvBackend::build`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvRuntimeConfig {
+    pub layout: KvLayout,
+    /// Enable the radix-tree prefix cache (paged layout only; ignored —
+    /// there is nothing to share — on the contiguous slab).
+    pub prefix_cache: bool,
+    /// Extra pool pages housing shared prefixes, and the prefix tree's
+    /// page-retention budget. `None` → one slot's worth
+    /// (`ceil(max_context / page_tokens)`).
+    pub pages_budget: Option<usize>,
+}
+
+impl Default for KvRuntimeConfig {
+    fn default() -> Self {
+        KvRuntimeConfig { layout: KvLayout::Contiguous, prefix_cache: true, pages_budget: None }
+    }
+}
+
+impl KvRuntimeConfig {
+    /// `SAIL_KV`-selected layout with default prefix-cache settings.
+    pub fn from_env() -> Self {
+        KvRuntimeConfig {
+            layout: kv_layout_from_env().unwrap_or(KvLayout::Contiguous),
+            ..Default::default()
+        }
+    }
+
+    pub fn contiguous() -> Self {
+        KvRuntimeConfig::default()
+    }
+
+    pub fn paged(page_tokens: usize) -> Self {
+        KvRuntimeConfig { layout: KvLayout::Paged { page_tokens }, ..Default::default() }
+    }
+}
+
+/// Paged-store observability snapshot, surfaced through
+/// `DecodeEngine::kv_metrics` into `ServingMetrics` and the benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvMetrics {
+    pub page_tokens: usize,
+    /// Physical pages in the pool (slot worst case + shared budget).
+    pub pool_pages: usize,
+    /// Pages currently referenced by any slot table or the prefix tree.
+    pub pages_in_use: usize,
+    /// High-water mark of *distinct* pages referenced by slot tables —
+    /// the "resident KV" to compare against the contiguous worst case.
+    pub peak_slot_resident_pages: usize,
+    /// What the contiguous slab would always hold resident:
+    /// `batch × ceil(max_context / page_tokens)` pages.
+    pub contiguous_worst_case_pages: usize,
+    pub cow_copies: u64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_insertions: u64,
+    pub prefix_evictions: u64,
+    /// Pages currently retained by the prefix tree (≤ its budget).
+    pub prefix_pages_held: usize,
+    /// Distinct NUMA nodes the page frames are interleaved across
+    /// (1 when placement is off/single-node).
+    pub numa_nodes: usize,
+}
+
+impl KvMetrics {
+    /// Fraction of prefix lookups that attached at least one shared page.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
     }
 }
 
@@ -116,20 +372,22 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
 }
 
-/// Element storage for one side (K or V) of the cache, per
+/// Element storage for one side (K or V) of a cache, per
 /// [`KvCacheSpec`]: fp16 elements, or int8 codes with one f32 scale per
-/// cached vector (the llama.cpp-style 8-bit KV the paper extends).
+/// cached vector (the llama.cpp-style 8-bit KV the paper extends). Both
+/// the contiguous slab and the paged pool allocate their payload through
+/// this enum, so precision behaviour is identical by construction.
 #[derive(Debug, Clone)]
-enum KvStore {
+enum KvPayload {
     F16(Vec<u16>),
     Q8 { data: Vec<i8>, scales: Vec<f32> },
 }
 
-impl KvStore {
-    fn new(spec: KvCacheSpec, elems: usize, vectors: usize) -> Result<KvStore> {
+impl KvPayload {
+    fn new(spec: KvCacheSpec, elems: usize, vectors: usize) -> Result<KvPayload> {
         Ok(match spec.bits {
-            16 => KvStore::F16(vec![0; elems]),
-            8 => KvStore::Q8 { data: vec![0; elems], scales: vec![1.0; vectors] },
+            16 => KvPayload::F16(vec![0; elems]),
+            8 => KvPayload::Q8 { data: vec![0; elems], scales: vec![1.0; vectors] },
             b => bail!("unsupported KV precision: {b} bits (16 = fp16, 8 = q8)"),
         })
     }
@@ -139,8 +397,15 @@ impl KvStore {
     /// [`KvCache::scale_bytes`]).
     fn data_bytes(&self) -> u64 {
         match self {
-            KvStore::F16(d) => 2 * d.len() as u64,
-            KvStore::Q8 { data, .. } => data.len() as u64,
+            KvPayload::F16(d) => 2 * d.len() as u64,
+            KvPayload::Q8 { data, .. } => data.len() as u64,
+        }
+    }
+
+    fn scale_bytes(&self) -> u64 {
+        match self {
+            KvPayload::F16(_) => 0,
+            KvPayload::Q8 { scales, .. } => 4 * scales.len() as u64,
         }
     }
 
@@ -148,12 +413,12 @@ impl KvStore {
     /// `base / len`), rounding through the storage precision.
     fn write(&mut self, base: usize, src: &[f32]) {
         match self {
-            KvStore::F16(d) => {
+            KvPayload::F16(d) => {
                 for (dst, &x) in d[base..base + src.len()].iter_mut().zip(src) {
                     *dst = f32_to_f16_bits(x);
                 }
             }
-            KvStore::Q8 { data, scales } => {
+            KvPayload::Q8 { data, scales } => {
                 let amax = src.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
                 let scale = if amax == 0.0 { 1.0 } else { amax / 127.0 };
                 scales[base / src.len()] = scale;
@@ -167,12 +432,12 @@ impl KvStore {
     /// Dequantize one vector at element offset `base` into `dst`.
     fn read(&self, base: usize, dst: &mut [f32]) {
         match self {
-            KvStore::F16(d) => {
+            KvPayload::F16(d) => {
                 for (out, &h) in dst.iter_mut().zip(&d[base..base + dst.len()]) {
                     *out = f16_bits_to_f32(h);
                 }
             }
-            KvStore::Q8 { data, scales } => {
+            KvPayload::Q8 { data, scales } => {
                 let scale = scales[base / dst.len()];
                 for (out, &q) in dst.iter_mut().zip(&data[base..base + dst.len()]) {
                     *out = q as f32 * scale;
@@ -183,22 +448,85 @@ impl KvStore {
 
     fn reset_range(&mut self, base: usize, elems: usize, vec_len: usize) {
         match self {
-            KvStore::F16(d) => d[base..base + elems].fill(0),
-            KvStore::Q8 { data, scales } => {
+            KvPayload::F16(d) => d[base..base + elems].fill(0),
+            KvPayload::Q8 { data, scales } => {
                 data[base..base + elems].fill(0);
                 scales[base / vec_len..(base + elems) / vec_len].fill(1.0);
             }
         }
     }
+
+    /// Bit-exact copy of `elems` elements (and their Q8 scales) from
+    /// `src_base` to `dst_base` — the COW page copy. Both bases and
+    /// `elems` must be `vec_len`-aligned so scales map one-to-one.
+    fn copy_region(&mut self, src_base: usize, dst_base: usize, elems: usize, vec_len: usize) {
+        debug_assert!(src_base % vec_len == 0 && dst_base % vec_len == 0 && elems % vec_len == 0);
+        match self {
+            KvPayload::F16(d) => d.copy_within(src_base..src_base + elems, dst_base),
+            KvPayload::Q8 { data, scales } => {
+                data.copy_within(src_base..src_base + elems, dst_base);
+                scales.copy_within(
+                    src_base / vec_len..(src_base + elems) / vec_len,
+                    dst_base / vec_len,
+                );
+            }
+        }
+    }
 }
 
-/// The slot-indexed KV cache the decode model reads every iteration: per
-/// layer and batch slot, `max_context` cached K and V vectors of width
-/// `kv_dim` (= kv_heads × head_dim), stored through the precision the
+/// The storage contract both KV stores implement — what the decode path
+/// needs and nothing more.
+///
+/// # Invariants (shared by both implementations)
+///
+/// - **Validation precedes mutation.** A rejected write (`Err`) leaves
+///   every *other* referent's visible state bit-identical to before the
+///   call: window and payload-shape checks run before any element,
+///   scale, refcount, or page-table mutation. The serving path relies on
+///   this to degrade exactly one request on a fault.
+/// - **Ranged ≡ per-token.** `write_run` of `n` rows is bit-identical to
+///   `n` single-position writes (Q8 re-derives one scale per vector
+///   either way).
+/// - **Unwritten reads are zero.** Reading a position never written (or
+///   reset) yields zeros — both stores present the same fresh state.
+/// - **Reset isolates slots.** `reset_slot` erases exactly one slot's
+///   visible history; no other slot's reads change.
+pub trait KvStore {
+    fn spec(&self) -> KvCacheSpec;
+    fn max_context(&self) -> usize;
+    fn kv_dim(&self) -> usize;
+    /// Cache K and V vectors for a run of contiguous positions: row `r`
+    /// of `k`/`v` (each `kv_dim` elements) lands at `start_pos + r`.
+    fn write_run(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        start_pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()>;
+    /// Read the cached K vector of one position (dequantized to f32).
+    fn read_k(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]);
+    /// Read the cached V vector of one position (dequantized to f32).
+    fn read_v(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]);
+    /// Erase one slot's visible history (no KV leakage into the next
+    /// admitted request — the batcher invariant).
+    fn reset_slot(&mut self, slot: usize);
+    /// Bytes of element payload allocated.
+    fn data_bytes(&self) -> u64;
+    /// Metadata bytes on top of the element payload (Q8 scales).
+    fn scale_bytes(&self) -> u64;
+}
+
+/// The slot-indexed contiguous KV cache: per layer and batch slot,
+/// `max_context` cached K and V vectors of width `kv_dim`
+/// (= kv_heads × head_dim), stored through the precision the
 /// [`KvCacheSpec`] names. Element index layout is
 /// `((layer · batch + slot) · max_context + pos) · kv_dim + i`, i.e. one
 /// contiguous `[max_context, kv_dim]` pane per (layer, slot) — the
-/// column-wise streaming unit of Fig 5.
+/// column-wise streaming unit of Fig 5. Memory scales with the worst
+/// case (`batch × max_context`) regardless of occupancy; the
+/// [`PagedKvCache`] is the usage-proportional alternative.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     spec: KvCacheSpec,
@@ -206,8 +534,8 @@ pub struct KvCache {
     batch: usize,
     max_context: usize,
     kv_dim: usize,
-    k: KvStore,
-    v: KvStore,
+    k: KvPayload,
+    v: KvPayload,
 }
 
 impl KvCache {
@@ -227,8 +555,8 @@ impl KvCache {
             batch,
             max_context,
             kv_dim,
-            k: KvStore::new(spec, elems, vectors)?,
-            v: KvStore::new(spec, elems, vectors)?,
+            k: KvPayload::new(spec, elems, vectors)?,
+            v: KvPayload::new(spec, elems, vectors)?,
         })
     }
 
@@ -301,16 +629,7 @@ impl KvCache {
         k: &[f32],
         v: &[f32],
     ) -> Result<()> {
-        if k.len() != v.len() {
-            bail!("K and V runs must cover the same positions ({} vs {})", k.len(), v.len());
-        }
-        if k.is_empty() || k.len() % self.kv_dim != 0 {
-            bail!(
-                "run payload {} is not a positive multiple of kv_dim {}",
-                k.len(),
-                self.kv_dim
-            );
-        }
+        validate_run_shape(k, v, self.kv_dim)?;
         let count = k.len() / self.kv_dim;
         if start_pos + count > self.max_context {
             bail!(
@@ -366,10 +685,669 @@ impl KvCache {
     /// scales; zero for fp16). `seq_bytes` deliberately excludes these,
     /// matching the paper's element-payload accounting.
     pub fn scale_bytes(&self) -> u64 {
-        match &self.k {
-            KvStore::F16(_) => 0,
-            KvStore::Q8 { scales, .. } => 2 * 4 * scales.len() as u64,
+        self.k.scale_bytes() + self.v.scale_bytes()
+    }
+}
+
+impl KvStore for KvCache {
+    fn spec(&self) -> KvCacheSpec {
+        KvCache::spec(self)
+    }
+    fn max_context(&self) -> usize {
+        KvCache::max_context(self)
+    }
+    fn kv_dim(&self) -> usize {
+        KvCache::kv_dim(self)
+    }
+    fn write_run(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        start_pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        KvCache::write_run(self, layer, slot, start_pos, k, v)
+    }
+    fn read_k(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        KvCache::read_k(self, layer, slot, pos, dst)
+    }
+    fn read_v(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        KvCache::read_v(self, layer, slot, pos, dst)
+    }
+    fn reset_slot(&mut self, slot: usize) {
+        KvCache::reset_slot(self, slot)
+    }
+    fn data_bytes(&self) -> u64 {
+        KvCache::data_bytes(self)
+    }
+    fn scale_bytes(&self) -> u64 {
+        KvCache::scale_bytes(self)
+    }
+}
+
+fn validate_run_shape(k: &[f32], v: &[f32], kv_dim: usize) -> Result<()> {
+    if k.len() != v.len() {
+        bail!("K and V runs must cover the same positions ({} vs {})", k.len(), v.len());
+    }
+    if k.is_empty() || k.len() % kv_dim != 0 {
+        bail!("run payload {} is not a positive multiple of kv_dim {}", k.len(), kv_dim);
+    }
+    Ok(())
+}
+
+/// The paged KV store: a shared pool of fixed-size pages (each holding
+/// `page_tokens` token positions across **all** layers, K and V), a free
+/// list, per-page refcounts, and one page table per batch slot mapping
+/// `pos / page_tokens → page id`. Memory held resident scales with
+/// tokens actually cached, not `batch × max_context`; identical prompt
+/// prefixes share pages read-only (refcount > 1) and are copied on first
+/// write (copy-on-write), so sharing is invisible to the decode math.
+///
+/// Element index layout within the pool is
+/// `((page · layers + layer) · page_tokens + pos % page_tokens) · kv_dim + i`
+/// — one page is one contiguous region, which keeps the COW copy a pair
+/// of `copy_within`s and lets page frames be interleaved across NUMA
+/// nodes as whole units.
+///
+/// # Refcounting invariants
+///
+/// - A page's refcount is exactly the number of slot-table entries
+///   mapping it plus the number of prefix-tree nodes retaining it.
+/// - `refcount == 0 ⇔` the page is on the free list; allocation zeroes
+///   the page so reuse is indistinguishable from fresh state.
+/// - A write to a page with `refcount > 1` copies the page first (the
+///   writer gets a private copy; every other referent keeps the original
+///   bits). The copy covers all layers, K, V, and Q8 scales.
+/// - A failed write (window/shape validation, pool exhaustion mid-COW)
+///   never leaves a half-copied page visible: validation runs first, and
+///   a COW copy is published into the table only after it completed.
+#[derive(Debug, Clone)]
+pub struct PagedKvCache {
+    spec: KvCacheSpec,
+    layers: usize,
+    batch: usize,
+    max_context: usize,
+    kv_dim: usize,
+    page_tokens: usize,
+    pages_per_slot: usize,
+    pool_pages: usize,
+    k: KvPayload,
+    v: KvPayload,
+    refcount: Vec<u32>,
+    /// Per-page count of *slot-table* references only (tree refs
+    /// excluded) — feeds the resident-vs-worst-case metric.
+    slot_refs: Vec<u32>,
+    free: Vec<u32>,
+    tables: Vec<Vec<u32>>,
+    slot_resident: usize,
+    peak_slot_resident: usize,
+    cow_copies: u64,
+    /// Deterministic page-frame → NUMA-node interleave map (observability
+    /// + first-touch guidance; identity 0s when placement is off).
+    page_nodes: Vec<usize>,
+}
+
+impl PagedKvCache {
+    /// Build a pool of `batch × ceil(max_context/page_tokens) +
+    /// extra_pages` pages. The first term is the worst case — every slot
+    /// simultaneously at full context with nothing shared — so slot
+    /// allocation cannot starve as long as prefix-tree retention stays
+    /// within `extra_pages` (the tree's budget; see [`KvBackend::build`]).
+    pub fn new(
+        spec: KvCacheSpec,
+        layers: usize,
+        batch: usize,
+        max_context: usize,
+        kv_dim: usize,
+        page_tokens: usize,
+        extra_pages: usize,
+    ) -> Result<PagedKvCache> {
+        assert!(layers > 0 && batch > 0 && max_context > 0 && kv_dim > 0);
+        if page_tokens == 0 {
+            bail!("paged KV page_tokens must be ≥ 1");
         }
+        let pages_per_slot = max_context.div_ceil(page_tokens);
+        let pool_pages = batch * pages_per_slot + extra_pages;
+        let vectors = pool_pages * layers * page_tokens;
+        let elems = vectors * kv_dim;
+        Ok(PagedKvCache {
+            spec,
+            layers,
+            batch,
+            max_context,
+            kv_dim,
+            page_tokens,
+            pages_per_slot,
+            pool_pages,
+            k: KvPayload::new(spec, elems, vectors)?,
+            v: KvPayload::new(spec, elems, vectors)?,
+            refcount: vec![0; pool_pages],
+            slot_refs: vec![0; pool_pages],
+            // Reverse so pop() hands out page 0, 1, 2, … — allocation
+            // order is deterministic and readable in tests.
+            free: (0..pool_pages as u32).rev().collect(),
+            tables: vec![Vec::new(); batch],
+            slot_resident: 0,
+            peak_slot_resident: 0,
+            cow_copies: 0,
+            page_nodes: vec![0; pool_pages],
+        })
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn pages_per_slot(&self) -> usize {
+        self.pages_per_slot
+    }
+
+    pub fn pool_pages(&self) -> usize {
+        self.pool_pages
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.pool_pages - self.free.len()
+    }
+
+    pub fn peak_slot_resident_pages(&self) -> usize {
+        self.peak_slot_resident
+    }
+
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Current refcount of one page (tests and invariant checks).
+    pub fn refcount(&self, page: u32) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    /// One slot's page table (page ids in position order).
+    pub fn table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    /// Actual page-table bytes currently mapped (the worst case is
+    /// budgeted by [`KvCacheSpec::paged_seq_bytes`]).
+    pub fn table_bytes(&self) -> u64 {
+        self.tables.iter().map(|t| t.len() as u64 * PAGE_TABLE_ENTRY_BYTES).sum()
+    }
+
+    /// Install the deterministic page-frame → NUMA-node interleave map
+    /// (from `Placement::interleave_pages`). Observability + first-touch
+    /// guidance; does not move already-allocated memory.
+    pub fn set_numa_interleave(&mut self, nodes: Vec<usize>) {
+        assert_eq!(nodes.len(), self.pool_pages);
+        self.page_nodes = nodes;
+    }
+
+    /// NUMA node assigned to one page frame.
+    pub fn page_node(&self, page: u32) -> usize {
+        self.page_nodes[page as usize]
+    }
+
+    /// Distinct NUMA nodes the pool is interleaved across.
+    pub fn numa_nodes(&self) -> usize {
+        let mut nodes: Vec<usize> = self.page_nodes.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes.len()
+    }
+
+    #[inline]
+    fn page_base(&self, page: u32, layer: usize, off: usize) -> usize {
+        debug_assert!(layer < self.layers && off < self.page_tokens);
+        ((page as usize * self.layers + layer) * self.page_tokens + off) * self.kv_dim
+    }
+
+    fn page_elems(&self) -> usize {
+        self.layers * self.page_tokens * self.kv_dim
+    }
+
+    /// Pop a free page, zeroed to fresh state, refcount 1.
+    fn alloc_page(&mut self) -> Result<u32> {
+        let Some(p) = self.free.pop() else {
+            return Err(PagePoolExhausted { pool_pages: self.pool_pages }.into());
+        };
+        let elems = self.page_elems();
+        let base = p as usize * elems;
+        self.k.reset_range(base, elems, self.kv_dim);
+        self.v.reset_range(base, elems, self.kv_dim);
+        self.refcount[p as usize] = 1;
+        Ok(p)
+    }
+
+    fn add_slot_ref(&mut self, page: u32) {
+        self.slot_refs[page as usize] += 1;
+        if self.slot_refs[page as usize] == 1 {
+            self.slot_resident += 1;
+            self.peak_slot_resident = self.peak_slot_resident.max(self.slot_resident);
+        }
+    }
+
+    fn drop_slot_ref(&mut self, page: u32) {
+        self.slot_refs[page as usize] -= 1;
+        if self.slot_refs[page as usize] == 0 {
+            self.slot_resident -= 1;
+        }
+    }
+
+    /// Drop one reference; a page reaching refcount 0 returns to the
+    /// free list (its content is dead — allocation re-zeroes).
+    pub(crate) fn release(&mut self, page: u32) {
+        let rc = &mut self.refcount[page as usize];
+        debug_assert!(*rc > 0, "release of unreferenced page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Add one reference (prefix-tree retention).
+    pub(crate) fn retain(&mut self, page: u32) {
+        debug_assert!(self.refcount[page as usize] > 0, "retain of free page {page}");
+        self.refcount[page as usize] += 1;
+    }
+
+    /// Map already-populated shared pages read-only into an empty slot's
+    /// table (prefix attach): refcount bump per page, zero copies.
+    /// Writes into these pages COW.
+    pub(crate) fn map_shared(&mut self, slot: usize, pages: &[u32]) {
+        assert!(self.tables[slot].is_empty(), "map_shared on a non-empty slot table");
+        for &p in pages {
+            debug_assert!(self.refcount[p as usize] > 0);
+            self.refcount[p as usize] += 1;
+            self.add_slot_ref(p);
+            self.tables[slot].push(p);
+        }
+    }
+
+    /// Make positions `start_pos .. start_pos + count` of `slot`
+    /// privately writable: validate the window, extend the table with
+    /// fresh zeroed pages, and COW any shared page in range. On `Err`
+    /// (window violation or pool exhaustion) no *other* referent's
+    /// visible state changed; pages already allocated for this slot stay
+    /// mapped and are reused when the write is retried.
+    fn ensure_writable(&mut self, slot: usize, start_pos: usize, count: usize) -> Result<()> {
+        if start_pos + count > self.max_context {
+            bail!(
+                "KV run at positions {start_pos}..{} outside the {}-token window",
+                start_pos + count,
+                self.max_context
+            );
+        }
+        let first = start_pos / self.page_tokens;
+        let last = (start_pos + count - 1) / self.page_tokens;
+        while self.tables[slot].len() <= last {
+            let p = self.alloc_page()?;
+            self.add_slot_ref(p);
+            self.tables[slot].push(p);
+        }
+        for pi in first..=last {
+            let old = self.tables[slot][pi];
+            if self.refcount[old as usize] > 1 {
+                // Shared → copy-on-write: private copy first, published
+                // into the table only once the copy completed.
+                let fresh = self.alloc_page()?;
+                let elems = self.page_elems();
+                self.k.copy_region(old as usize * elems, fresh as usize * elems, elems, self.kv_dim);
+                self.v.copy_region(old as usize * elems, fresh as usize * elems, elems, self.kv_dim);
+                self.refcount[old as usize] -= 1;
+                self.drop_slot_ref(old);
+                self.add_slot_ref(fresh);
+                self.tables[slot][pi] = fresh;
+                self.cow_copies += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl KvStore for PagedKvCache {
+    fn spec(&self) -> KvCacheSpec {
+        self.spec
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    fn write_run(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        start_pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        validate_run_shape(k, v, self.kv_dim)?;
+        let count = k.len() / self.kv_dim;
+        self.ensure_writable(slot, start_pos, count)?;
+        for r in 0..count {
+            let pos = start_pos + r;
+            let page = self.tables[slot][pos / self.page_tokens];
+            let base = self.page_base(page, layer, pos % self.page_tokens);
+            self.k.write(base, &k[r * self.kv_dim..(r + 1) * self.kv_dim]);
+            self.v.write(base, &v[r * self.kv_dim..(r + 1) * self.kv_dim]);
+        }
+        Ok(())
+    }
+
+    fn read_k(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        assert!(pos < self.max_context);
+        assert_eq!(dst.len(), self.kv_dim);
+        match self.tables[slot].get(pos / self.page_tokens) {
+            Some(&page) => self.k.read(self.page_base(page, layer, pos % self.page_tokens), dst),
+            None => dst.fill(0.0), // never written — same fresh state as the slab
+        }
+    }
+
+    fn read_v(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        assert!(pos < self.max_context);
+        assert_eq!(dst.len(), self.kv_dim);
+        match self.tables[slot].get(pos / self.page_tokens) {
+            Some(&page) => self.v.read(self.page_base(page, layer, pos % self.page_tokens), dst),
+            None => dst.fill(0.0),
+        }
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        assert!(slot < self.batch);
+        let pages: Vec<u32> = std::mem::take(&mut self.tables[slot]);
+        for p in pages {
+            self.drop_slot_ref(p);
+            self.release(p);
+        }
+    }
+
+    fn data_bytes(&self) -> u64 {
+        self.k.data_bytes() + self.v.data_bytes()
+    }
+
+    fn scale_bytes(&self) -> u64 {
+        self.k.scale_bytes() + self.v.scale_bytes()
+    }
+}
+
+/// The concrete store a `LutTransformer` carries, selected by
+/// [`KvRuntimeConfig`] (`SAIL_KV` by default): the contiguous slab, or
+/// the paged pool with an optional radix-tree prefix cache orchestrated
+/// on top. Both sides are [`KvStore`]s; this enum is the zero-generics
+/// dispatch point plus the place where page sharing, tree eviction under
+/// pool pressure, and observability meet.
+#[derive(Debug, Clone)]
+pub enum KvBackend {
+    Contiguous(KvCache),
+    Paged { store: PagedKvCache, prefix: Option<RadixPrefixCache> },
+}
+
+impl KvBackend {
+    /// Build the store a [`KvRuntimeConfig`] names. For the paged layout
+    /// the pool is sized `batch × ceil(max_context/page_tokens)` (worst
+    /// case, nothing shared) **plus** the shared-page budget, and the
+    /// prefix tree's retention budget is that same extra — so pages held
+    /// only by the tree can never starve slot allocation; the
+    /// evict-under-pressure path in [`write_run`](Self::write_run) is a
+    /// safety valve for explicitly over-budgeted trees.
+    pub fn build(
+        cfg: KvRuntimeConfig,
+        spec: KvCacheSpec,
+        layers: usize,
+        batch: usize,
+        max_context: usize,
+        kv_dim: usize,
+    ) -> Result<KvBackend> {
+        match cfg.layout {
+            KvLayout::Contiguous => {
+                Ok(KvBackend::Contiguous(KvCache::new(spec, layers, batch, max_context, kv_dim)?))
+            }
+            KvLayout::Paged { page_tokens } => {
+                if page_tokens == 0 {
+                    bail!("paged KV page_tokens must be ≥ 1");
+                }
+                let budget = cfg.pages_budget.unwrap_or(max_context.div_ceil(page_tokens));
+                let store = PagedKvCache::new(
+                    spec,
+                    layers,
+                    batch,
+                    max_context,
+                    kv_dim,
+                    page_tokens,
+                    budget,
+                )?;
+                let prefix = cfg.prefix_cache.then(|| RadixPrefixCache::new(page_tokens, budget));
+                Ok(KvBackend::Paged { store, prefix })
+            }
+        }
+    }
+
+    pub fn layout(&self) -> KvLayout {
+        match self {
+            KvBackend::Contiguous(_) => KvLayout::Contiguous,
+            KvBackend::Paged { store, .. } => KvLayout::Paged { page_tokens: store.page_tokens() },
+        }
+    }
+
+    /// The paged store, when that is what this backend runs (tests,
+    /// benches, invariant checks).
+    pub fn paged(&self) -> Option<&PagedKvCache> {
+        match self {
+            KvBackend::Contiguous(_) => None,
+            KvBackend::Paged { store, .. } => Some(store),
+        }
+    }
+
+    /// The prefix tree, when enabled.
+    pub fn prefix_cache(&self) -> Option<&RadixPrefixCache> {
+        match self {
+            KvBackend::Contiguous(_) => None,
+            KvBackend::Paged { prefix, .. } => prefix.as_ref(),
+        }
+    }
+
+    /// Install the page-frame → NUMA-node interleave map (no-op on the
+    /// contiguous slab).
+    pub fn set_numa_interleave(&mut self, nodes: Vec<usize>) {
+        if let KvBackend::Paged { store, .. } = self {
+            store.set_numa_interleave(nodes);
+        }
+    }
+
+    /// Paged-store observability; `None` on the contiguous slab (there
+    /// is no pool to meter).
+    pub fn metrics(&self) -> Option<KvMetrics> {
+        match self {
+            KvBackend::Contiguous(_) => None,
+            KvBackend::Paged { store, prefix } => Some(KvMetrics {
+                page_tokens: store.page_tokens(),
+                pool_pages: store.pool_pages(),
+                pages_in_use: store.pages_in_use(),
+                peak_slot_resident_pages: store.peak_slot_resident_pages(),
+                contiguous_worst_case_pages: store.batch * store.pages_per_slot(),
+                cow_copies: store.cow_copies(),
+                prefix_hits: prefix.as_ref().map_or(0, |t| t.hits()),
+                prefix_misses: prefix.as_ref().map_or(0, |t| t.misses()),
+                prefix_insertions: prefix.as_ref().map_or(0, |t| t.insertions()),
+                prefix_evictions: prefix.as_ref().map_or(0, |t| t.evictions()),
+                prefix_pages_held: prefix.as_ref().map_or(0, |t| t.pages_held()),
+                numa_nodes: store.numa_nodes(),
+            }),
+        }
+    }
+
+    /// Longest-cached-prefix attach for a freshly reset slot: map the
+    /// matched full pages read-only (refcount bump, zero copies — and
+    /// zero LUT builds for the span, since those feed tokens are never
+    /// run) and return the feed index prefill should start from. The
+    /// split is always ≤ `feed.len() − 1`: the final feed token is re-run
+    /// so the request's first logits are computed exactly as a cold
+    /// prefill would (a full-prefix hit rewrites one shared page
+    /// position with identical bits, exercising COW, not correctness).
+    /// Contiguous stores and disabled prefix caches return 0 (cold path).
+    pub fn prefix_attach(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
+        match self {
+            KvBackend::Contiguous(_) => Ok(0),
+            KvBackend::Paged { store, prefix } => {
+                let Some(tree) = prefix else { return Ok(0) };
+                if !store.tables[slot].is_empty() {
+                    bail!("prefix attach on slot {slot} with a non-empty page table");
+                }
+                if feed.is_empty() {
+                    return Ok(0);
+                }
+                let m = tree.lookup(feed);
+                let split = m.tokens.min(feed.len() - 1);
+                if split == 0 {
+                    tree.record(false);
+                    return Ok(0);
+                }
+                store.map_shared(slot, &m.pages);
+                tree.record(true);
+                Ok(split)
+            }
+        }
+    }
+
+    /// Publish a completed prefill's full pages into the prefix tree
+    /// (refcount bump per newly retained page; chunks already cached are
+    /// no-ops), then trim the tree back under its page budget (LRU leaf
+    /// eviction). Keyed on the *feed* — the prompt, or prompt ⊕ generated
+    /// for a preemption resume — so recompute-resumes share too.
+    pub fn prefix_insert(&mut self, slot: usize, feed: &[i32]) -> Result<()> {
+        match self {
+            KvBackend::Contiguous(_) => Ok(()),
+            KvBackend::Paged { store, prefix } => {
+                let Some(tree) = prefix else { return Ok(()) };
+                let full = feed.len() / store.page_tokens();
+                if full == 0 {
+                    return Ok(());
+                }
+                if store.tables[slot].len() < full {
+                    bail!(
+                        "prefix insert for slot {slot}: table holds {} pages, feed needs {full}",
+                        store.tables[slot].len()
+                    );
+                }
+                let pages: Vec<u32> = store.tables[slot][..full].to_vec();
+                for p in tree.insert_chunks(feed, &pages) {
+                    store.retain(p);
+                }
+                for p in tree.trim() {
+                    store.release(p);
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl KvStore for KvBackend {
+    fn spec(&self) -> KvCacheSpec {
+        match self {
+            KvBackend::Contiguous(c) => c.spec(),
+            KvBackend::Paged { store, .. } => store.spec,
+        }
+    }
+
+    fn max_context(&self) -> usize {
+        match self {
+            KvBackend::Contiguous(c) => c.max_context(),
+            KvBackend::Paged { store, .. } => store.max_context,
+        }
+    }
+
+    fn kv_dim(&self) -> usize {
+        match self {
+            KvBackend::Contiguous(c) => c.kv_dim(),
+            KvBackend::Paged { store, .. } => store.kv_dim,
+        }
+    }
+
+    /// Ranged write, with the paged path's pool-pressure reaction: on
+    /// [`PagePoolExhausted`], evict one LRU prefix-tree leaf and retry;
+    /// only when nothing is left to evict does the error propagate (the
+    /// batcher then finishes the one offending request `EngineFault`).
+    fn write_run(
+        &mut self,
+        layer: usize,
+        slot: usize,
+        start_pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        match self {
+            KvBackend::Contiguous(c) => c.write_run(layer, slot, start_pos, k, v),
+            KvBackend::Paged { store, prefix } => loop {
+                match store.write_run(layer, slot, start_pos, k, v) {
+                    Ok(()) => return Ok(()),
+                    Err(e) if e.is::<PagePoolExhausted>() => {
+                        match prefix.as_mut().and_then(|t| t.evict_one()) {
+                            Some(page) => store.release(page),
+                            None => return Err(e),
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            },
+        }
+    }
+
+    fn read_k(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        match self {
+            KvBackend::Contiguous(c) => c.read_k(layer, slot, pos, dst),
+            KvBackend::Paged { store, .. } => store.read_k(layer, slot, pos, dst),
+        }
+    }
+
+    fn read_v(&self, layer: usize, slot: usize, pos: usize, dst: &mut [f32]) {
+        match self {
+            KvBackend::Contiguous(c) => c.read_v(layer, slot, pos, dst),
+            KvBackend::Paged { store, .. } => store.read_v(layer, slot, pos, dst),
+        }
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        match self {
+            KvBackend::Contiguous(c) => c.reset_slot(slot),
+            KvBackend::Paged { store, .. } => KvStore::reset_slot(store, slot),
+        }
+    }
+
+    fn data_bytes(&self) -> u64 {
+        match self {
+            KvBackend::Contiguous(c) => c.data_bytes(),
+            KvBackend::Paged { store, .. } => KvStore::data_bytes(store),
+        }
+    }
+
+    fn scale_bytes(&self) -> u64 {
+        match self {
+            KvBackend::Contiguous(c) => c.scale_bytes(),
+            KvBackend::Paged { store, .. } => KvStore::scale_bytes(store),
+        }
+    }
+}
+
+impl KvBackend {
+    /// Convenience mirrors of the [`KvStore`] surface so existing
+    /// `model.kv().data_bytes()`-style call sites keep reading naturally
+    /// without importing the trait.
+    pub fn data_bytes(&self) -> u64 {
+        KvStore::data_bytes(self)
+    }
+
+    pub fn scale_bytes(&self) -> u64 {
+        KvStore::scale_bytes(self)
+    }
+
+    pub fn spec(&self) -> KvCacheSpec {
+        KvStore::spec(self)
     }
 }
 
@@ -405,6 +1383,63 @@ mod tests {
         // …but fits 2×V100 (32 GB) at batch ≥ 1.
         let b2 = KvCacheSpec::fp16().max_batch(&m, 4096, 2 * cap, w, 1_000_000_000);
         assert!(b2 >= 1, "got {b2}");
+    }
+
+    #[test]
+    fn slots_for_degenerate_spec_is_a_typed_error() {
+        // Regression for the `.max(1)` divisor: a zero-`seq_bytes` spec
+        // used to yield a garbage huge capacity; it is now a typed
+        // validation error, and the valid path is unchanged.
+        let m = ModelConfig::llama2_7b();
+        let spec = KvCacheSpec::fp16();
+        let cap = 16u64 * 1_000_000_000;
+        let w = m.weight_bytes(QuantLevel::Q4, 32);
+        assert_eq!(
+            spec.slots_for(&m, 0, cap, w, 0),
+            Err(KvAccountingError::DegenerateSpec { ctx: 0 })
+        );
+        assert_eq!(
+            spec.slots_for_paged(&m, 0, 16, cap, w, 0, 0),
+            Err(KvAccountingError::DegenerateSpec { ctx: 0 })
+        );
+        let err = spec.slots_for(&m, 0, cap, w, 0).unwrap_err();
+        assert!(err.to_string().contains("0 bytes"), "{err}");
+        // Valid specs agree with the legacy wrapper, including the
+        // legitimate zero when weights alone overflow capacity.
+        assert_eq!(spec.slots_for(&m, 4096, cap, w, 0).unwrap(), spec.max_batch(&m, 4096, cap, w, 0));
+        assert_eq!(spec.slots_for(&m, 4096, 1, w, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn paged_accounting_covers_page_and_table_overhead() {
+        let m = ModelConfig::llama2_7b();
+        let spec = KvCacheSpec::q8();
+        // Whole-page rounding + table entries: paged ≥ contiguous, and
+        // exactly pages × (page_bytes + entry) at page granularity.
+        for ctx in [1usize, 15, 16, 17, 4096] {
+            let paged = spec.paged_seq_bytes(&m, ctx, 16);
+            assert!(paged >= spec.seq_bytes(&m, ctx), "ctx {ctx}");
+            let pages = ctx.div_ceil(16) as u64;
+            assert_eq!(paged, pages * spec.page_bytes(&m, 16) + pages * PAGE_TABLE_ENTRY_BYTES);
+        }
+        // The per-sequence overhead shrinks the slot count, never grows it.
+        let cap = 16u64 * 1_000_000_000;
+        let w = m.weight_bytes(QuantLevel::Q4, 32);
+        let flat = spec.slots_for(&m, 4096, cap, w, 0).unwrap();
+        let paged = spec.slots_for_paged(&m, 4096, 16, cap, w, 0, 1 << 20).unwrap();
+        assert!(paged <= flat, "{paged} vs {flat}");
+    }
+
+    #[test]
+    fn kv_layout_grammar() {
+        assert_eq!(parse_kv_layout("contiguous"), Ok(KvLayout::Contiguous));
+        assert_eq!(parse_kv_layout(" paged:16 "), Ok(KvLayout::Paged { page_tokens: 16 }));
+        assert_eq!(parse_kv_layout("paged:1"), Ok(KvLayout::Paged { page_tokens: 1 }));
+        for bad in ["", "slab", "paged", "paged:", "paged:0", "paged:-4", "paged:x", "16"] {
+            assert!(parse_kv_layout(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert_eq!(KvLayout::Paged { page_tokens: 8 }.to_string(), "paged:8");
+        assert_eq!(KvLayout::Contiguous.to_string(), "contiguous");
     }
 
     #[test]
@@ -509,6 +1544,183 @@ mod tests {
     }
 
     #[test]
+    fn paged_pool_allocation_matches_page_accounting() {
+        // Pool payload = pool_pages × page_bytes, at any occupancy; the
+        // table bytes grow with mapped pages only.
+        let m = ModelConfig {
+            name: "kv-paged-acct".into(),
+            hidden: 64,
+            layers: 3,
+            heads: 8,
+            kv_heads: 4,
+            ffn: 128,
+            vocab: 97,
+            max_context: 40,
+        };
+        let kv_dim = m.kv_heads * m.head_dim();
+        for spec in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            for (batch, pt, extra) in [(1usize, 16usize, 0usize), (2, 8, 3), (5, 7, 1)] {
+                let mut kv =
+                    PagedKvCache::new(spec, m.layers, batch, m.max_context, kv_dim, pt, extra)
+                        .unwrap();
+                let pages = batch * m.max_context.div_ceil(pt) + extra;
+                assert_eq!(kv.pool_pages(), pages);
+                assert_eq!(KvStore::data_bytes(&kv), pages as u64 * spec.page_bytes(&m, pt));
+                assert_eq!(kv.pages_in_use(), 0);
+                assert_eq!(kv.table_bytes(), 0);
+                kv.write_run(0, 0, 0, &vec![1.0; kv_dim], &vec![1.0; kv_dim]).unwrap();
+                assert_eq!(kv.pages_in_use(), 1);
+                assert_eq!(kv.table_bytes(), PAGE_TABLE_ENTRY_BYTES);
+            }
+        }
+    }
+
+    #[test]
+    fn paged_matches_contiguous_bit_for_bit() {
+        // Same writes through the KvStore trait → bit-identical reads,
+        // both precisions, page size coprime with the run lengths.
+        fn exercise<S: KvStore>(s: &mut S, seed: u64) {
+            let dim = s.kv_dim();
+            let mut prng = crate::util::Prng::new(seed);
+            // Slot 1: a 5-row run at 0, then single rows; slot 0: rows
+            // written out of lockstep; slot 2 reset mid-way.
+            for (slot, start, rows) in
+                [(1usize, 0usize, 5usize), (0, 0, 3), (1, 5, 1), (2, 0, 4), (0, 3, 2), (1, 6, 2)]
+            {
+                let k: Vec<f32> = (0..rows * dim).map(|_| prng.normal() as f32).collect();
+                let v: Vec<f32> = (0..rows * dim).map(|_| prng.normal() as f32).collect();
+                for layer in 0..2 {
+                    s.write_run(layer, slot, start, &k, &v).unwrap();
+                }
+            }
+            s.reset_slot(2);
+        }
+        for spec in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
+            let (layers, batch, ctx, dim, pt) = (2usize, 3usize, 9usize, 8usize, 4usize);
+            let mut slab = KvCache::new(spec, layers, batch, ctx, dim).unwrap();
+            let mut paged = PagedKvCache::new(spec, layers, batch, ctx, dim, pt, 0).unwrap();
+            exercise(&mut slab, 91);
+            exercise(&mut paged, 91);
+            let mut a = vec![0.0f32; dim];
+            let mut b = vec![0.0f32; dim];
+            for l in 0..layers {
+                for s in 0..batch {
+                    for p in 0..ctx {
+                        slab.read_k(l, s, p, &mut a);
+                        KvStore::read_k(&paged, l, s, p, &mut b);
+                        assert_eq!(a, b, "{spec:?}: K diverged at ({l},{s},{p})");
+                        slab.read_v(l, s, p, &mut a);
+                        KvStore::read_v(&paged, l, s, p, &mut b);
+                        assert_eq!(a, b, "{spec:?}: V diverged at ({l},{s},{p})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cow_write_preserves_the_shared_original() {
+        let (layers, batch, ctx, dim, pt) = (2usize, 2usize, 8usize, 4usize, 4usize);
+        let mut kv =
+            PagedKvCache::new(KvCacheSpec::q8(), layers, batch, ctx, dim, pt, 2).unwrap();
+        let mut prng = crate::util::Prng::new(7);
+        let k: Vec<f32> = (0..8 * dim).map(|_| prng.normal() as f32).collect();
+        let v: Vec<f32> = (0..8 * dim).map(|_| prng.normal() as f32).collect();
+        for layer in 0..layers {
+            kv.write_run(layer, 0, 0, &k, &v).unwrap();
+        }
+        let shared: Vec<u32> = kv.table(0).to_vec();
+        assert_eq!(shared.len(), 2);
+        // Snapshot slot 0's visible content, then share its pages into
+        // slot 1 and overwrite one shared position there.
+        let snap = |kv: &PagedKvCache, slot: usize| -> Vec<f32> {
+            let mut out = Vec::new();
+            let mut buf = vec![0.0f32; dim];
+            for l in 0..layers {
+                for p in 0..ctx {
+                    kv.read_k(l, slot, p, &mut buf);
+                    out.extend_from_slice(&buf);
+                    kv.read_v(l, slot, p, &mut buf);
+                    out.extend_from_slice(&buf);
+                }
+            }
+            out
+        };
+        let before = snap(&kv, 0);
+        kv.map_shared(1, &shared);
+        assert_eq!(kv.refcount(shared[0]), 2);
+        assert_eq!(snap(&kv, 1), before, "shared mapping must read identically");
+        for layer in 0..layers {
+            kv.write_run(layer, 1, 5, &vec![9.0; dim], &vec![-9.0; dim]).unwrap();
+        }
+        // Exactly one COW (page 1 holds positions 4..8; layer 1's write
+        // sees the already-private copy).
+        assert_eq!(kv.cow_copies(), 1);
+        assert_eq!(snap(&kv, 0), before, "original mutated through a COW write");
+        assert_ne!(kv.table(1)[1], shared[1], "writer must hold a private copy");
+        assert_eq!(kv.table(1)[0], shared[0], "read-only page stays shared");
+        assert_eq!(kv.refcount(shared[1]), 1, "original's refcount back to its owner");
+        // Slot 1's un-overwritten positions still match the original.
+        let mut buf = vec![0.0f32; dim];
+        let mut orig = vec![0.0f32; dim];
+        kv.read_k(0, 1, 4, &mut buf);
+        kv.read_k(0, 0, 4, &mut orig);
+        assert_eq!(buf, orig, "COW copy must carry the original bits");
+        // Releasing both slots balances every refcount.
+        KvStore::reset_slot(&mut kv, 0);
+        KvStore::reset_slot(&mut kv, 1);
+        assert_eq!(kv.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn page_pool_exhaustion_is_typed_and_recoverable() {
+        // batch 1 × 2 pages + 0 extra: retaining a page (as the prefix
+        // tree would) and COW-ing forces exhaustion — a typed error the
+        // backend reacts to by eviction, after which the write succeeds.
+        let dim = 4usize;
+        let mut kv = PagedKvCache::new(KvCacheSpec::fp16(), 1, 1, 8, dim, 4, 0).unwrap();
+        kv.write_run(0, 0, 0, &vec![1.0; 8 * dim], &vec![1.0; 8 * dim]).unwrap();
+        let held = kv.table(0)[0];
+        kv.retain(held); // tree-style retention
+        KvStore::reset_slot(&mut kv, 0);
+        assert_eq!(kv.pages_in_use(), 1); // only the retained page
+        kv.map_shared(0, &[held]);
+        // COW of the shared page takes the last free page; extending to
+        // page index 1 then exhausts the pool.
+        let err = kv
+            .write_run(0, 0, 0, &vec![2.0; 8 * dim], &vec![2.0; 8 * dim])
+            .unwrap_err();
+        let typed = err.downcast_ref::<PagePoolExhausted>().expect("typed exhaustion");
+        assert_eq!(typed.pool_pages, 2);
+        // Evict the tree-held page (rc 1 → free) and retry: succeeds,
+        // and the interrupted COW left no half-state behind.
+        kv.release(held);
+        kv.write_run(0, 0, 0, &vec![2.0; 8 * dim], &vec![2.0; 8 * dim]).unwrap();
+        let mut buf = vec![0.0f32; dim];
+        kv.read_k(0, 0, 7, &mut buf);
+        assert!(buf.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn failed_write_on_shared_pages_mutates_nothing() {
+        // Window-violating writes (the KvCorrupt fault redirects
+        // start_pos to max_context) must reject before any allocation,
+        // COW, or refcount motion.
+        let dim = 4usize;
+        let mut kv = PagedKvCache::new(KvCacheSpec::q8(), 1, 2, 8, dim, 4, 1).unwrap();
+        kv.write_run(0, 0, 0, &vec![3.0; 8 * dim], &vec![3.0; 8 * dim]).unwrap();
+        let shared: Vec<u32> = kv.table(0).to_vec();
+        kv.map_shared(1, &shared);
+        let in_use = kv.pages_in_use();
+        let err = kv.write_run(0, 1, 8, &vec![0.0; dim], &vec![0.0; dim]).unwrap_err();
+        assert!(err.to_string().contains("outside the 8-token window"), "{err}");
+        assert_eq!(kv.pages_in_use(), in_use, "failed write leaked a page");
+        assert_eq!(kv.cow_copies(), 0, "failed write ran a COW copy");
+        assert_eq!(kv.refcount(shared[0]), 2);
+        assert_eq!(kv.table(1), shared.as_slice(), "table rewritten on a failed write");
+    }
+
+    #[test]
     fn kv_cache_rejects_out_of_window_write() {
         // A typed error, not a panic: the serving path degrades the one
         // offending request instead of taking the process down.
@@ -593,11 +1805,17 @@ mod tests {
         assert!(err.to_string().contains("not a positive multiple of kv_dim"), "{err}");
         let err = kv.write_run(0, 0, 0, &[0.0; 16], &[0.0; 8]).unwrap_err();
         assert!(err.to_string().contains("must cover the same positions"), "{err}");
+        // Same contract through the paged store.
+        let mut pv = PagedKvCache::new(KvCacheSpec::fp16(), 1, 1, 4, 8, 2, 0).unwrap();
+        assert!(pv.write_run(0, 0, 0, &[0.0; 12], &[0.0; 12]).is_err());
+        assert!(pv.write_run(0, 0, 0, &[0.0; 16], &[0.0; 8]).is_err());
     }
 
     #[test]
     fn unsupported_precision_is_an_error() {
         assert!(KvCache::new(KvCacheSpec { bits: 4 }, 1, 1, 4, 8).is_err());
+        assert!(PagedKvCache::new(KvCacheSpec { bits: 4 }, 1, 1, 4, 8, 2, 0).is_err());
+        assert!(PagedKvCache::new(KvCacheSpec::q8(), 1, 1, 4, 8, 0, 0).is_err());
     }
 
     #[test]

@@ -21,11 +21,17 @@
 
 pub mod decode;
 pub mod kv;
+pub mod prefix;
 
 pub use decode::{
     DecodeItem, DecodeRun, DecodeSpec, DecodeStats, LayerGemvStats, LayerSpec, LutTransformer,
 };
-pub use kv::{KvCache, KvCacheSpec};
+pub use kv::{
+    kv_layout_from_env, parse_kv_layout, KvAccountingError, KvBackend, KvCache, KvCacheSpec,
+    KvLayout, KvMetrics, KvRuntimeConfig, KvStore, PagePoolExhausted, PagedKvCache,
+    PAGE_TABLE_ENTRY_BYTES,
+};
+pub use prefix::{PrefixMatch, RadixPrefixCache};
 
 use crate::quant::QuantLevel;
 use crate::util::ceil_div;

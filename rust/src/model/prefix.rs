@@ -1,0 +1,372 @@
+//! Radix tree over prompt-token prefixes, at KV-page granularity.
+//!
+//! The tree caches *which pool page* holds the KV of each full
+//! `page_tokens`-sized chunk of a previously prefilled feed. On admission
+//! the batcher asks for the longest cached prefix of the new request's
+//! feed ([`RadixPrefixCache::lookup`]); matched pages are mapped
+//! read-only into the slot's page table (refcount bump, zero copies,
+//! zero LUT builds for the span) and prefill starts at the split point.
+//! After a request's prefill completes, its full pages are published
+//! back ([`insert_chunks`](RadixPrefixCache::insert_chunks)) so the next
+//! identical prompt head hits.
+//!
+//! # Invariants
+//!
+//! - Every alive node owns exactly **one** page reference, taken via
+//!   `PagedKvCache::retain` when the node is created and dropped via
+//!   `release` when the node is evicted — so
+//!   [`pages_held`](RadixPrefixCache::pages_held) is exactly the number
+//!   of alive nodes, and the pool's refcounts balance by construction.
+//! - A node's `tokens` is exactly `page_tokens` long: the tree never
+//!   caches partial pages, so an attached prefix is always a whole
+//!   number of pages and the split point is always page-aligned.
+//! - Eviction is LRU over **leaves** only (nodes with no alive
+//!   children): an interior node is pinned by its descendants, so a
+//!   cached path never dangles mid-prefix. [`trim`](RadixPrefixCache::trim)
+//!   evicts until the page budget holds;
+//!   [`evict_one`](RadixPrefixCache::evict_one) is the pool-pressure
+//!   valve ([`KvBackend::write_run`](super::KvBackend)).
+//! - All bookkeeping is deterministic: the LRU clock advances only on
+//!   lookups/inserts (no wall time), ties break on the lowest node
+//!   index, and child scans are in insertion order — the same request
+//!   sequence always produces the same tree, hit pattern, and eviction
+//!   order on every run.
+
+/// Result of a longest-prefix lookup: the cached pages covering the
+/// first `tokens` feed tokens (`pages.len() × page_tokens == tokens`).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixMatch {
+    pub pages: Vec<u32>,
+    pub tokens: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// The `page_tokens` feed tokens this node's page caches.
+    tokens: Vec<i32>,
+    /// Pool page holding those tokens' KV (one tree reference held).
+    page: u32,
+    /// Alive children, in insertion order.
+    children: Vec<usize>,
+    /// `None` for depth-0 nodes (children of the virtual root).
+    parent: Option<usize>,
+    /// LRU clock stamp of the last lookup/insert that touched this node.
+    last_used: u64,
+    alive: bool,
+}
+
+/// The prefix cache: a radix tree whose edges are whole KV pages.
+/// Orchestrated by [`KvBackend`](super::KvBackend) — the tree tracks
+/// *which* pages to share and when to let go; the page pool owns the
+/// bytes and the refcounts.
+#[derive(Debug, Clone)]
+pub struct RadixPrefixCache {
+    page_tokens: usize,
+    /// Page-retention budget: [`trim`](Self::trim) evicts LRU leaves
+    /// until `pages_held ≤ budget_pages`.
+    budget_pages: usize,
+    nodes: Vec<Node>,
+    /// Indices of dead `nodes` entries, reused before growing the arena.
+    free_nodes: Vec<usize>,
+    /// Depth-0 alive children (the virtual root's edge list).
+    root_children: Vec<usize>,
+    clock: u64,
+    alive_nodes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl RadixPrefixCache {
+    pub fn new(page_tokens: usize, budget_pages: usize) -> Self {
+        assert!(page_tokens >= 1);
+        RadixPrefixCache {
+            page_tokens,
+            budget_pages,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            root_children: Vec::new(),
+            clock: 0,
+            alive_nodes: 0,
+            hits: 0,
+            misses: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn budget_pages(&self) -> usize {
+        self.budget_pages
+    }
+
+    /// Pages currently retained by the tree (= alive nodes).
+    pub fn pages_held(&self) -> usize {
+        self.alive_nodes
+    }
+
+    /// Alive nodes (one cached page-chunk each).
+    pub fn node_count(&self) -> usize {
+        self.alive_nodes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Deterministic estimate of the tree's own memory on top of the
+    /// page payload: per alive node, the cached tokens (4 bytes each)
+    /// plus fixed node bookkeeping — what
+    /// [`KvCacheSpec::slots_for_paged`](super::KvCacheSpec::slots_for_paged)
+    /// charges as `radix_bytes`.
+    pub fn overhead_bytes(&self) -> u64 {
+        const NODE_FIXED_BYTES: u64 = 96; // page id, links, clock, vec headers
+        self.alive_nodes as u64 * (4 * self.page_tokens as u64 + NODE_FIXED_BYTES)
+    }
+
+    /// Longest cached prefix of `feed`, in whole pages. Touches the LRU
+    /// clock on every node along the matched path (so a hit path is the
+    /// freshest). Does **not** count hit/miss — the caller decides what
+    /// the lookup was for and calls [`record`](Self::record) once per
+    /// admission (a full-prompt match clamped back to `len − 1` tokens
+    /// must still count as the hit it is).
+    pub fn lookup(&mut self, feed: &[i32]) -> PrefixMatch {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut m = PrefixMatch::default();
+        let mut edges: &[usize] = &self.root_children;
+        let mut matched: Vec<usize> = Vec::new();
+        for chunk in feed.chunks_exact(self.page_tokens) {
+            let Some(&child) = edges.iter().find(|&&c| self.nodes[c].tokens == chunk) else {
+                break;
+            };
+            matched.push(child);
+            m.pages.push(self.nodes[child].page);
+            m.tokens += self.page_tokens;
+            edges = &self.nodes[child].children;
+        }
+        for idx in matched {
+            self.nodes[idx].last_used = stamp;
+        }
+        m
+    }
+
+    /// Count one admission's lookup outcome (see [`lookup`](Self::lookup)).
+    pub fn record(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+    }
+
+    /// Publish a completed prefill: cache every full `page_tokens` chunk
+    /// of `feed`, chunk `i` backed by `pages[i]`. Chunks already cached
+    /// are no-ops (their existing page stays; the duplicate page id is
+    /// *not* retained). Returns the pages newly retained by the tree —
+    /// the caller must `PagedKvCache::retain` each, then
+    /// [`trim`](Self::trim) back under budget.
+    pub fn insert_chunks(&mut self, feed: &[i32], pages: &[u32]) -> Vec<u32> {
+        let chunks: Vec<&[i32]> = feed.chunks_exact(self.page_tokens).collect();
+        assert!(pages.len() >= chunks.len(), "insert needs one page per full chunk");
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut newly = Vec::new();
+        let mut parent: Option<usize> = None;
+        for (chunk, &page) in chunks.into_iter().zip(pages) {
+            let edges = match parent {
+                None => &self.root_children,
+                Some(p) => &self.nodes[p].children,
+            };
+            let found = edges.iter().copied().find(|&c| self.nodes[c].tokens == chunk);
+            let idx = match found {
+                Some(c) => {
+                    self.nodes[c].last_used = stamp;
+                    c
+                }
+                None => {
+                    let node = Node {
+                        tokens: chunk.to_vec(),
+                        page,
+                        children: Vec::new(),
+                        parent,
+                        last_used: stamp,
+                        alive: true,
+                    };
+                    let idx = match self.free_nodes.pop() {
+                        Some(i) => {
+                            self.nodes[i] = node;
+                            i
+                        }
+                        None => {
+                            self.nodes.push(node);
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match parent {
+                        None => self.root_children.push(idx),
+                        Some(p) => self.nodes[p].children.push(idx),
+                    }
+                    self.alive_nodes += 1;
+                    self.insertions += 1;
+                    newly.push(page);
+                    idx
+                }
+            };
+            parent = Some(idx);
+        }
+        newly
+    }
+
+    /// Evict the least-recently-used **leaf** (ties to the lowest node
+    /// index) and return its page for the caller to
+    /// `PagedKvCache::release`. `None` when the tree is empty.
+    pub fn evict_one(&mut self) -> Option<u32> {
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.alive && n.children.is_empty())
+            .min_by_key(|(i, n)| (n.last_used, *i))
+            .map(|(i, _)| i)?;
+        let page = self.nodes[victim].page;
+        self.nodes[victim].alive = false;
+        self.nodes[victim].tokens = Vec::new();
+        match self.nodes[victim].parent {
+            None => self.root_children.retain(|&c| c != victim),
+            Some(p) => self.nodes[p].children.retain(|&c| c != victim),
+        }
+        self.free_nodes.push(victim);
+        self.alive_nodes -= 1;
+        self.evictions += 1;
+        Some(page)
+    }
+
+    /// Evict LRU leaves until the page budget holds; returns the
+    /// released pages (caller `release`s each against the pool).
+    pub fn trim(&mut self) -> Vec<u32> {
+        let mut released = Vec::new();
+        while self.alive_nodes > self.budget_pages {
+            match self.evict_one() {
+                Some(p) => released.push(p),
+                None => break,
+            }
+        }
+        released
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(tokens: &[i32]) -> Vec<i32> {
+        tokens.to_vec()
+    }
+
+    #[test]
+    fn lookup_walks_full_chunks_only() {
+        let mut t = RadixPrefixCache::new(4, 16);
+        let f = feed(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!(t.insert_chunks(&f, &[10, 11]), vec![10, 11]);
+        assert_eq!(t.pages_held(), 2);
+        // Full match of the cached chunks (the trailing partial chunk
+        // 9,10 was never cached).
+        let m = t.lookup(&f);
+        assert_eq!((m.tokens, m.pages.clone()), (8, vec![10, 11]));
+        // A shorter identical head matches one page…
+        let m = t.lookup(&[1, 2, 3, 4, 99]);
+        assert_eq!((m.tokens, m.pages.clone()), (4, vec![10]));
+        // …a diverging head matches nothing, as does a sub-page feed.
+        assert_eq!(t.lookup(&[9, 9, 9, 9]).tokens, 0);
+        assert_eq!(t.lookup(&[1, 2, 3]).tokens, 0);
+    }
+
+    #[test]
+    fn reinsert_is_a_no_op_and_shares_interior_nodes() {
+        let mut t = RadixPrefixCache::new(2, 16);
+        assert_eq!(t.insert_chunks(&[1, 2, 3, 4], &[5, 6]), vec![5, 6]);
+        // Same feed again: nothing newly retained, even with different
+        // backing pages on the duplicate path.
+        assert_eq!(t.insert_chunks(&[1, 2, 3, 4], &[7, 8]), Vec::<u32>::new());
+        assert_eq!(t.pages_held(), 2);
+        // A feed sharing the first chunk adds only the divergent tail.
+        assert_eq!(t.insert_chunks(&[1, 2, 9, 9], &[5, 9]), vec![9]);
+        assert_eq!(t.pages_held(), 3);
+        assert_eq!(t.insertions(), 3);
+        let m = t.lookup(&[1, 2, 9, 9]);
+        assert_eq!(m.pages, vec![5, 9]);
+    }
+
+    #[test]
+    fn eviction_is_lru_over_leaves_only() {
+        let mut t = RadixPrefixCache::new(2, 16);
+        t.insert_chunks(&[1, 1, 2, 2], &[0, 1]); // chain 0 → 1
+        t.insert_chunks(&[3, 3], &[2]); // lone leaf 2
+        // Touch the chain so the lone leaf is LRU.
+        t.lookup(&[1, 1, 2, 2]);
+        assert_eq!(t.evict_one(), Some(2), "LRU leaf first");
+        // The interior node (page 0) is pinned by its child: next victim
+        // is the chain's leaf (page 1), then the now-leaf root child.
+        assert_eq!(t.evict_one(), Some(1));
+        assert_eq!(t.evict_one(), Some(0));
+        assert_eq!(t.evict_one(), None);
+        assert_eq!(t.pages_held(), 0);
+        assert_eq!(t.evictions(), 3);
+        // Arena slots are reused; the tree stays functional.
+        t.insert_chunks(&[7, 7], &[4]);
+        assert_eq!(t.lookup(&[7, 7]).pages, vec![4]);
+    }
+
+    #[test]
+    fn trim_enforces_the_page_budget() {
+        let mut t = RadixPrefixCache::new(1, 2);
+        t.insert_chunks(&[1], &[10]);
+        t.insert_chunks(&[2], &[11]);
+        assert_eq!(t.trim(), Vec::<u32>::new(), "within budget");
+        t.insert_chunks(&[3], &[12]);
+        t.insert_chunks(&[4], &[13]);
+        // Budget 2, held 4: the two LRU leaves go, insertion-order ties.
+        assert_eq!(t.trim(), vec![10, 11]);
+        assert_eq!(t.pages_held(), 2);
+        assert_eq!(t.lookup(&[3]).pages, vec![12]);
+        assert_eq!(t.lookup(&[1]).tokens, 0, "evicted head no longer matches");
+    }
+
+    #[test]
+    fn hit_accounting_and_overhead_are_deterministic() {
+        let mut t = RadixPrefixCache::new(4, 16);
+        assert_eq!(t.prefix_stats(), (0, 0));
+        t.record(false);
+        t.insert_chunks(&[1, 2, 3, 4], &[0]);
+        t.record(true);
+        t.record(true);
+        assert_eq!(t.prefix_stats(), (2, 1));
+        let per_node = t.overhead_bytes();
+        assert!(per_node > 0);
+        t.insert_chunks(&[5, 6, 7, 8], &[1]);
+        assert_eq!(t.overhead_bytes(), 2 * per_node, "overhead scales with nodes");
+    }
+
+    impl RadixPrefixCache {
+        fn prefix_stats(&self) -> (u64, u64) {
+            (self.hits, self.misses)
+        }
+    }
+}

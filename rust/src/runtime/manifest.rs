@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use super::topology::NumaPolicy;
-use crate::model::{DecodeSpec, KvCacheSpec, LayerSpec};
+use crate::model::{DecodeSpec, KvCacheSpec, KvLayout, KvRuntimeConfig, LayerSpec};
 use crate::quant::QuantLevel;
 use crate::util::json::Json;
 
@@ -56,6 +56,19 @@ pub struct ManifestConfig {
     /// Serving TPOT target (`slo_tpot_ms` field, milliseconds > 0);
     /// absent ⇒ no target.
     pub slo_tpot: Option<Duration>,
+    /// Paged-KV page size in tokens (`kv_page_tokens` field, ≥ 1); absent
+    /// ⇒ the contiguous slab store. The token streams are bit-identical
+    /// either way — paging is a memory-residency knob, never a
+    /// correctness one. The `SAIL_KV` env override wins at serve time.
+    pub kv_page_tokens: Option<usize>,
+    /// Extra pages beyond the worst case kept for prefix-cache retention
+    /// (`kv_pages_budget` field); absent ⇒ one slot's worth. Only
+    /// meaningful with `kv_page_tokens`.
+    pub kv_pages_budget: Option<usize>,
+    /// Radix-tree prefix caching on the paged store (`prefix_cache`
+    /// field, boolean); absent ⇒ enabled. Ignored on the contiguous
+    /// store.
+    pub prefix_cache: bool,
 }
 
 /// Parsed manifest.
@@ -150,6 +163,30 @@ impl Manifest {
         };
         let slo_ttft = slo_ms("slo_ttft_ms")?;
         let slo_tpot = slo_ms("slo_tpot_ms")?;
+        // KV store layout, same strictness as every optional field above:
+        // absent ⇒ contiguous, a positive page size ⇒ paged, anything
+        // else is a load error (a malformed page size silently dropped
+        // would serve with a different memory layout than the artifact
+        // asked for).
+        let kv_page_tokens = match cfg.get("kv_page_tokens") {
+            None => None,
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => Some(n),
+                _ => bail!("manifest kv_page_tokens must be an integer ≥ 1"),
+            },
+        };
+        let kv_pages_budget = match cfg.get("kv_pages_budget") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(n) if n >= 0.0 && n.is_finite() && n.fract() == 0.0 => Some(n as usize),
+                _ => bail!("manifest kv_pages_budget must be an integer ≥ 0"),
+            },
+        };
+        let prefix_cache = match cfg.get("prefix_cache") {
+            None => true,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => bail!("manifest prefix_cache must be a boolean"),
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -168,6 +205,9 @@ impl Manifest {
                 prefill_chunk,
                 slo_ttft,
                 slo_tpot,
+                kv_page_tokens,
+                kv_pages_budget,
+                prefix_cache,
             },
             batch: j
                 .get("batch")
@@ -180,6 +220,22 @@ impl Manifest {
     /// Path to an artifact file within the directory.
     pub fn artifact(&self, name: &str) -> PathBuf {
         self.dir.join(name)
+    }
+
+    /// The KV runtime configuration this artifact asks to be served with:
+    /// `kv_page_tokens` selects the paged store, `kv_pages_budget` and
+    /// `prefix_cache` tune it. The `SAIL_KV` environment override (read
+    /// by the serving CLI, not here) replaces the layout.
+    pub fn kv_runtime_config(&self) -> KvRuntimeConfig {
+        let c = &self.config;
+        KvRuntimeConfig {
+            layout: match c.kv_page_tokens {
+                Some(pt) => KvLayout::Paged { page_tokens: pt },
+                None => KvLayout::Contiguous,
+            },
+            prefix_cache: c.prefix_cache,
+            pages_budget: c.kv_pages_budget,
+        }
     }
 
     /// KV-cache shape for a given batch: [L, 2, B, CTX, H].
@@ -210,6 +266,7 @@ impl Manifest {
     ///         placement: NumaPolicy::Auto,
     ///         prefill_chunk: 16,
     ///         slo_ttft: None, slo_tpot: None,
+    ///         kv_page_tokens: None, kv_pages_budget: None, prefix_cache: true,
     ///     },
     ///     batch: 2,
     ///     weight_order: vec![],
@@ -307,6 +364,9 @@ mod tests {
             prefill_chunk: 16,
             slo_ttft: None,
             slo_tpot: None,
+            kv_page_tokens: None,
+            kv_pages_budget: None,
+            prefix_cache: true,
         }
     }
 
@@ -461,6 +521,58 @@ mod tests {
                 None => assert!(
                     Manifest::load(&dir).is_err(),
                     "malformed SLO target {field} must not fall back to none"
+                ),
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_kv_fields_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sail-manifest-kv-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000KV},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        type Want = Option<(Option<usize>, Option<usize>, bool)>;
+        let cases: [(&str, Want); 8] = [
+            ("", Some((None, None, true))), // absent ⇒ contiguous, cache on
+            (r#", "kv_page_tokens": 16"#, Some((Some(16), None, true))),
+            (
+                r#", "kv_page_tokens": 8, "kv_pages_budget": 12, "prefix_cache": false"#,
+                Some((Some(8), Some(12), false)),
+            ),
+            (r#", "kv_pages_budget": 0"#, Some((None, Some(0), true))),
+            (r#", "kv_page_tokens": 0"#, None),
+            (r#", "kv_page_tokens": "wide""#, None),
+            (r#", "kv_pages_budget": -3"#, None),
+            (r#", "prefix_cache": "yes""#, None),
+        ];
+        for (field, want) in cases {
+            std::fs::write(dir.join("manifest.json"), base.replace("KV", field)).unwrap();
+            match want {
+                Some((pt, budget, cache)) => {
+                    let m = Manifest::load(&dir).unwrap();
+                    let c = &m.config;
+                    assert_eq!(
+                        (c.kv_page_tokens, c.kv_pages_budget, c.prefix_cache),
+                        (pt, budget, cache),
+                        "{field}"
+                    );
+                    let kv = m.kv_runtime_config();
+                    match pt {
+                        Some(n) => assert_eq!(kv.layout, KvLayout::Paged { page_tokens: n }),
+                        None => assert_eq!(kv.layout, KvLayout::Contiguous),
+                    }
+                    assert_eq!((kv.prefix_cache, kv.pages_budget), (cache, budget));
+                }
+                None => assert!(
+                    Manifest::load(&dir).is_err(),
+                    "malformed KV field {field} must not fall back to a default layout"
                 ),
             }
         }

@@ -446,6 +446,18 @@ impl Placement {
         debug_assert_eq!(start, n_items);
         ranges
     }
+
+    /// Round-robin KV page frames across the placement's node groups:
+    /// page `i` lives on `nodes()[i % groups].node_id` — the PR-4 NUMA
+    /// follow-on applied to the paged KV pool, so long-context attention
+    /// reads of one slot's page chain spread across sockets instead of
+    /// saturating one. Deterministic in the placement alone (page
+    /// *values* never depend on it — only where frames live), and the
+    /// trivial single-group placement maps every page to node 0.
+    pub fn interleave_pages(&self, pages: usize) -> Vec<usize> {
+        let groups = self.nodes.len();
+        (0..pages).map(|i| self.nodes[i % groups].node_id).collect()
+    }
 }
 
 /// Best-effort thread pinning: restrict the *calling* thread to `cpus`.
@@ -661,6 +673,26 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0, "gap in shard ranges at n={n}");
             }
         }
+    }
+
+    #[test]
+    fn page_interleave_is_round_robin_and_deterministic() {
+        // Two explicit groups: pages alternate node ids; the trivial
+        // placement maps everything to node 0; same placement → same map.
+        let p = Placement::plan(&NumaPolicy::parse("0:0-3;1:4-7").unwrap(), 8);
+        assert_eq!(p.interleave_pages(5), vec![0, 1, 0, 1, 0]);
+        assert_eq!(p.interleave_pages(0), Vec::<usize>::new());
+        assert_eq!(p.interleave_pages(5), p.interleave_pages(5));
+        assert_eq!(Placement::single(4).interleave_pages(3), vec![0, 0, 0]);
+        // Node ids come from the placement's plan, not the group index.
+        let topo = Topology {
+            nodes: vec![
+                NumaNode { id: 2, cpus: vec![0, 1] },
+                NumaNode { id: 5, cpus: vec![2, 3] },
+            ],
+        };
+        let p = Placement::plan_on(&topo, 4);
+        assert_eq!(p.interleave_pages(4), vec![2, 5, 2, 5]);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! - **batched decode equals isolated decode** bit-for-bit;
 //! - every projection of every layer (Q/K/V/O/gate/up/down + head) runs
 //!   on the LUT path, visible in the per-layer `GemvStats` rollup;
-//! - the KV cache's element allocation matches `KvCacheSpec::seq_bytes`;
+//! - the KV store's element allocation matches the accounting —
+//!   `KvCacheSpec::seq_bytes` on the contiguous slab, pool pages ×
+//!   `KvCacheSpec::page_bytes` on the paged store (whichever `SAIL_KV`
+//!   selected for the leg);
 //! - admission hardening holds on the real engine: over-long prompts
 //!   finish `ContextFull` during prefill (no out-of-window KV write, which
 //!   the cache would catch with a panic), and empty prompts are answered
@@ -19,7 +22,7 @@ use std::sync::Arc;
 use sail::coordinator::{
     Batcher, BatcherConfig, FinishReason, Request, Server, TransformerServeEngine,
 };
-use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::model::{DecodeSpec, KvCacheSpec, KvLayout};
 use sail::runtime::{NumaPolicy, WorkerPool};
 
 /// 3 decoder layers at mixed per-layer precision (Q8/Q4/Q6), hidden 32,
@@ -149,15 +152,31 @@ fn every_projection_ran_on_the_lut_path() {
 
 #[test]
 fn kv_allocation_matches_seq_bytes_accounting() {
+    // Layout-aware: the engine resolves its store from SAIL_KV, so the
+    // paged CI legs exercise the page-pool arithmetic here. Contiguous
+    // allocates exactly batch × seq_bytes; the paged pool allocates
+    // pool_pages whole pages (per-slot worst case + shared-page budget).
     for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
         for batch in [1usize, 3] {
             let e = engine(kv, batch, 1);
             let cfg = e.model().spec().to_model_config();
-            assert_eq!(
-                e.model().kv().data_bytes(),
-                kv.batch_bytes(&cfg, cfg.max_context, batch),
-                "{kv:?} batch {batch}: allocation disagrees with seq_bytes accounting"
-            );
+            let got = e.model().kv().data_bytes();
+            match e.model().kv().layout() {
+                KvLayout::Contiguous => assert_eq!(
+                    got,
+                    kv.batch_bytes(&cfg, cfg.max_context, batch),
+                    "{kv:?} batch {batch}: allocation disagrees with seq_bytes accounting"
+                ),
+                KvLayout::Paged { page_tokens } => {
+                    let pool = e.model().kv().paged().unwrap().pool_pages() as u64;
+                    assert_eq!(
+                        got,
+                        pool * kv.page_bytes(&cfg, page_tokens),
+                        "{kv:?} batch {batch}: pool allocation disagrees with \
+                         page_bytes accounting"
+                    );
+                }
+            }
         }
     }
 }

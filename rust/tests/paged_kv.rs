@@ -1,0 +1,389 @@
+//! Conformance suite for the paged KV store and the radix-tree prefix
+//! cache (the PR-8 tentpole), on top of the per-store unit tests in
+//! `model/kv.rs` / `model/prefix.rs`:
+//!
+//! - **paged == contiguous**: token streams through the real serving
+//!   stack are bit-identical between the contiguous slab and the paged
+//!   pool, across prefill chunk {1,16} × pool width {1,2,8} × NUMA
+//!   {off,auto} × FaultPlan {off,healing} — and across page sizes,
+//!   including non-divisors of the context and pages larger than it;
+//! - **shared-prefix == cold-prefill**: a prompt admitted against cached
+//!   prefix pages produces exactly the stream a cold prefill would;
+//! - **prefix hits skip work**: a prefix-hit admission never feeds the
+//!   shared span, so it builds zero LUTs for it (`DecodeStats` delta);
+//! - **COW faults stay contained**: an injected KV fault on the write
+//!   that would copy a shared page finishes only that request
+//!   `EngineFault`; the shared original is never mutated (survivors and
+//!   later re-users stay bit-identical) and page refcounts balance once
+//!   the faulted slot resets;
+//! - the batcher's split clamp: a cached prefix covering the whole
+//!   context window still leaves one feedable position for an over-long
+//!   prompt, which finishes `ContextFull` exactly like a cold run.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use sail::coordinator::{Batcher, BatcherConfig, FinishReason, Request, TransformerServeEngine};
+use sail::model::{DecodeItem, DecodeSpec, DecodeStats, KvCacheSpec, KvRuntimeConfig, LutTransformer};
+use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, WorkerPool};
+
+const PAGE_TOKENS: usize = 4;
+
+fn spec() -> DecodeSpec {
+    DecodeSpec::tiny(2, KvCacheSpec::q8())
+}
+
+/// The shared 8-token system prompt: exactly two whole pages at the
+/// suite's page size, so a full-head hit maps both and the re-run of the
+/// head's last token lands inside a shared page (the COW path).
+fn head() -> Vec<i32> {
+    (2..10).collect()
+}
+
+/// Six requests sharing [`head`] with distinct 1–3 token tails and 4–6
+/// token budgets — enough to cycle every slot of a 3-wide batcher through
+/// prefix-hit admission, and short enough (max pos 16 < 24) that
+/// `ContextFull` is unreachable.
+fn requests() -> Vec<Request> {
+    (0..6u64)
+        .map(|id| {
+            let mut prompt = head();
+            prompt.extend((0..1 + id as i32 % 3).map(|p| 20 + id as i32 + p));
+            Request::new(id, prompt, 4 + id as usize % 3)
+        })
+        .collect()
+}
+
+fn collect(done: Vec<sail::coordinator::Response>) -> BTreeMap<u64, (Vec<i32>, FinishReason)> {
+    done.into_iter().map(|r| (r.id, (r.tokens, r.finish))).collect()
+}
+
+/// Serve [`requests`] to completion on a fresh engine with the given KV
+/// store, pool shape, prefill chunk, and (optionally) an armed fault
+/// plan.
+fn serve(
+    kv: KvRuntimeConfig,
+    width: usize,
+    policy: &NumaPolicy,
+    chunk: usize,
+    plan: Option<Arc<FaultPlan>>,
+) -> BTreeMap<u64, (Vec<i32>, FinishReason)> {
+    let pool = Arc::new(WorkerPool::with_policy(width, policy));
+    if let Some(p) = &plan {
+        pool.arm_faults(Arc::clone(p));
+    }
+    let engine =
+        TransformerServeEngine::random_with_kv(spec(), 9, 3, Arc::clone(&pool), kv).unwrap();
+    let mut b =
+        Batcher::new(engine, BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() });
+    for r in requests() {
+        b.submit(r);
+    }
+    let done = b.run_to_completion().unwrap();
+    pool.disarm_faults();
+    collect(done)
+}
+
+/// Pool-level faults only (worker deaths, slow tiles, poisoned scratch):
+/// the kinds that must heal bit-identically. No KV faults — every
+/// request finishes clean under this plan.
+fn healing_plan() -> Arc<FaultPlan> {
+    Arc::new(
+        FaultPlan::new(4242)
+            .with_seeded(FaultKind::WorkerPanic, 6, 0)
+            .with_seeded(FaultKind::SlowTile, 8, 0)
+            .with_seeded(FaultKind::PoisonScratch, 8, 0),
+    )
+}
+
+fn total_luts(s: &DecodeStats) -> u64 {
+    s.layers.iter().map(|l| l.total().luts_built).sum::<u64>() + s.head.luts_built
+}
+
+#[test]
+fn paged_matches_contiguous_across_chunk_width_numa_and_healing_faults() {
+    // One contiguous oracle; every paged leg of the acceptance matrix
+    // must reproduce its streams bit-for-bit. The paged legs run with
+    // the prefix cache on and a shared-head workload, so page sharing,
+    // COW rewrites of the split position, and (on the healing legs)
+    // worker deaths are all active while the streams must not move.
+    let want = serve(KvRuntimeConfig::contiguous(), 1, &NumaPolicy::Off, 1, None);
+    assert!(want.values().all(|(t, f)| !t.is_empty() && *f == FinishReason::MaxTokens));
+    for chunk in [1usize, 16] {
+        for width in [1usize, 2, 8] {
+            for policy in [NumaPolicy::Off, NumaPolicy::Auto] {
+                for faults in [None, Some(healing_plan())] {
+                    let leg = format!(
+                        "chunk {chunk} width {width} numa {policy} faults {}",
+                        faults.is_some()
+                    );
+                    let got =
+                        serve(KvRuntimeConfig::paged(PAGE_TOKENS), width, &policy, chunk, faults);
+                    assert_eq!(got, want, "paged run diverged from contiguous ({leg})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn page_size_sweep_is_bit_identical_to_contiguous() {
+    // Page sizes that divide the 24-token context, ones that don't, one
+    // token per page, and a page larger than the whole window: the
+    // layout arithmetic changes completely, the tokens must not.
+    let want = serve(KvRuntimeConfig::contiguous(), 2, &NumaPolicy::Off, 1, None);
+    for pt in [1usize, 3, 5, 16, 64] {
+        let got = serve(KvRuntimeConfig::paged(pt), 2, &NumaPolicy::Off, 1, None);
+        assert_eq!(got, want, "paged:{pt} diverged from contiguous");
+    }
+}
+
+#[test]
+fn shared_prefix_admission_matches_cold_prefill() {
+    // Warm: one engine serves request A (caching its head pages at
+    // prefill completion), then request B sharing the head. Cold: a
+    // fresh engine serves only B. The streams must match exactly —
+    // attaching cached pages and re-running the split token is
+    // indistinguishable from prefilling the whole prompt.
+    let mut b_prompt = head();
+    b_prompt.extend([40, 41, 42]);
+    let warm = {
+        let pool = WorkerPool::shared(2);
+        let engine = TransformerServeEngine::random_with_kv(
+            spec(),
+            9,
+            2,
+            pool,
+            KvRuntimeConfig::paged(PAGE_TOKENS),
+        )
+        .unwrap();
+        let mut b = Batcher::new(engine, BatcherConfig::default());
+        b.submit(Request::new(0, head(), 4));
+        b.run_to_completion().unwrap();
+        b.submit(Request::new(1, b_prompt.clone(), 5));
+        let done = b.run_to_completion().unwrap();
+        let kv = b.engine().model().kv_metrics().unwrap();
+        assert!(kv.prefix_hits >= 1, "second admission never hit the cached head");
+        collect(done)
+    };
+    let cold = {
+        let pool = WorkerPool::shared(2);
+        let engine = TransformerServeEngine::random_with_kv(
+            spec(),
+            9,
+            2,
+            pool,
+            KvRuntimeConfig::paged(PAGE_TOKENS),
+        )
+        .unwrap();
+        let mut b = Batcher::new(engine, BatcherConfig::default());
+        b.submit(Request::new(1, b_prompt, 5));
+        collect(b.run_to_completion().unwrap())
+    };
+    assert_eq!(warm[&1], cold[&1], "prefix-hit stream diverged from cold prefill");
+}
+
+#[test]
+fn prefix_hit_admission_builds_no_luts_for_the_shared_span() {
+    // The "skip prefill entirely" acceptance bar, in kernel-counter
+    // terms: the same 8-token prompt served twice. Run 1 is cold and
+    // feeds all 8 prompt positions; run 2 attaches the cached pages at
+    // split 7 (= min(matched, len−1)) and feeds exactly one. At prefill
+    // chunk 1 with a single slot, every fed token is one forward with a
+    // constant number of LUT builds, so the second run's build count
+    // must drop in exact proportion to the tokens it skipped.
+    let pool = WorkerPool::shared(1);
+    let engine = TransformerServeEngine::random_with_kv(
+        spec(),
+        9,
+        1,
+        pool,
+        KvRuntimeConfig::paged(PAGE_TOKENS),
+    )
+    .unwrap();
+    let mut b =
+        Batcher::new(engine, BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() });
+
+    b.submit(Request::new(0, head(), 4));
+    let first = collect(b.run_to_completion().unwrap());
+    let cold_tokens = b.engine().stats().tokens;
+    let cold_luts = total_luts(b.engine().stats());
+    // Cold: 8 prompt positions + 3 more decode steps (the last prefill
+    // forward samples the first token).
+    assert_eq!(cold_tokens, 8 + 4 - 1);
+    assert_eq!(cold_luts % cold_tokens, 0, "builds per forward are not constant");
+    let luts_per_token = cold_luts / cold_tokens;
+
+    b.submit(Request::new(1, head(), 4));
+    let second = collect(b.run_to_completion().unwrap());
+    let warm_tokens = b.engine().stats().tokens - cold_tokens;
+    let warm_luts = total_luts(b.engine().stats()) - cold_luts;
+    // Warm: split 7 skips 7 of the 8 prompt positions.
+    assert_eq!(warm_tokens, cold_tokens - 7, "prefix hit did not skip the shared span");
+    assert_eq!(
+        warm_luts,
+        luts_per_token * warm_tokens,
+        "prefix-hit admission built LUTs for the shared span"
+    );
+    assert_eq!(second[&1], first[&0], "identical prompts must stream identically");
+    let kv = b.engine().model().kv_metrics().unwrap();
+    assert_eq!((kv.prefix_hits, kv.prefix_misses), (1, 1));
+}
+
+#[test]
+fn cow_faults_leave_the_shared_original_untouched_and_refcounts_balance() {
+    // Transformer-level precision test: slot 1 attaches the cached head
+    // and its first write lands at position 7 — inside shared page 1, so
+    // it must copy-on-write. Both KV fault kinds are injected on exactly
+    // that write. The store's validation-first ordering means the failed
+    // COW publishes nothing: slot 0 (mapping the original) keeps
+    // decoding bit-identically, the healed retry reproduces the
+    // fault-free logits, and resetting the slots leaves exactly the
+    // tree-retained pages in use.
+    let h = head();
+    for kind in [FaultKind::KvWriteFail, FaultKind::KvCorrupt] {
+        let run = |plan: Option<Arc<FaultPlan>>| -> (Vec<i32>, Vec<i32>) {
+            let pool = WorkerPool::shared(2);
+            let mut m = LutTransformer::random_with_kv(
+                spec(),
+                9,
+                2,
+                Arc::clone(&pool),
+                KvRuntimeConfig::paged(PAGE_TOKENS),
+            )
+            .unwrap();
+            for (pos, &t) in h.iter().enumerate() {
+                m.step(&[DecodeItem { slot: 0, token: t, pos }]).unwrap();
+            }
+            m.prefix_insert(0, &h).unwrap();
+            assert_eq!(m.prefix_attach(1, &h).unwrap(), 7);
+            if let Some(p) = plan {
+                pool.arm_faults(p);
+                let err =
+                    m.step(&[DecodeItem { slot: 1, token: h[7], pos: 7 }]).unwrap_err();
+                pool.disarm_faults();
+                assert!(!err.to_string().is_empty());
+                // Heal: the reset releases slot 1's shared references
+                // and clears any latched fault; a fresh attach hits the
+                // (intact) cached head again.
+                m.reset_slot(1).unwrap();
+                assert_eq!(m.prefix_attach(1, &h).unwrap(), 7);
+            }
+            // The COW write (fault-free here, or the healed retry).
+            m.step(&[DecodeItem { slot: 1, token: h[7], pos: 7 }]).unwrap();
+            let s1 = m.logits().row(0).to_vec();
+            // The shared original, read through slot 0.
+            m.step(&[DecodeItem { slot: 0, token: 42, pos: 8 }]).unwrap();
+            let s0 = m.logits().row(0).to_vec();
+            let kv = m.kv_metrics().unwrap();
+            assert!(kv.cow_copies >= 1, "split-position rewrite never copied");
+            // Refcount balance: after both slots reset, every page still
+            // in use is exactly a tree-retained page (the 2-page head).
+            m.reset_slot(0).unwrap();
+            m.reset_slot(1).unwrap();
+            let kv = m.kv_metrics().unwrap();
+            assert_eq!(kv.pages_in_use, kv.prefix_pages_held, "leaked page references");
+            assert_eq!(kv.prefix_pages_held, 2);
+            (s0, s1)
+        };
+        let want = run(None);
+        let got = run(Some(Arc::new(FaultPlan::new(1).with(kind, 1))));
+        assert_eq!(got, want, "{kind:?} on the COW write leaked into surviving state");
+    }
+}
+
+#[test]
+fn serving_cow_fault_finishes_typed_and_survivors_match_the_oracle() {
+    // The same containment through the whole serving stack: request B
+    // (the COW victim) finishes `EngineFault` with no tokens, while its
+    // batch-mate C and a later re-user D of the same shared head stream
+    // bit-identically to a fault-free oracle run — the faulted copy
+    // never mutated the pages everyone else reads.
+    let h = head();
+    let tailed = |id: u64, tail: &[i32], n: usize| {
+        let mut p = h.clone();
+        p.extend_from_slice(tail);
+        Request::new(id, p, n)
+    };
+    let run = |plan: Option<Arc<FaultPlan>>| {
+        let pool = Arc::new(WorkerPool::shared(2));
+        let engine = TransformerServeEngine::random_with_kv(
+            spec(),
+            9,
+            2,
+            Arc::clone(&pool),
+            KvRuntimeConfig::paged(PAGE_TOKENS),
+        )
+        .unwrap();
+        let mut b =
+            Batcher::new(engine, BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() });
+        // Round 1: A caches the head pages.
+        b.submit(Request::new(0, h.clone(), 4));
+        let r1 = collect(b.run_to_completion().unwrap());
+        // Round 2: B re-serves the bare head (first write = the COW
+        // rewrite of shared page 1, the armed plan's tick 1); C shares
+        // the head with a tail (first write opens a fresh page).
+        if let Some(p) = &plan {
+            pool.arm_faults(Arc::clone(p));
+        }
+        b.submit(Request::new(1, h.clone(), 4));
+        b.submit(tailed(2, &[50, 51], 5));
+        let r2 = collect(b.run_to_completion().unwrap());
+        pool.disarm_faults();
+        // Round 3: D re-uses the head after the fault, clean.
+        b.submit(Request::new(3, h.clone(), 4));
+        let r3 = collect(b.run_to_completion().unwrap());
+        let kv = b.engine().model().kv_metrics().unwrap();
+        assert_eq!(kv.prefix_pages_held, 2, "tree retention drifted from the 2-page head");
+        (r1, r2, r3)
+    };
+    let (w1, w2, w3) = run(None);
+    let plan = Arc::new(FaultPlan::new(7).with(FaultKind::KvWriteFail, 1));
+    let (g1, g2, g3) = run(Some(Arc::clone(&plan)));
+    assert!(plan.fired_total() >= 1, "armed plan never fired");
+    assert_eq!(g1, w1, "pre-fault round diverged");
+    assert_eq!(g2[&1].1, FinishReason::EngineFault, "COW victim must finish typed");
+    assert!(g2[&1].0.is_empty(), "the faulted prefill never sampled a token");
+    assert_eq!(g2[&2], w2[&2], "batch-mate of the faulted COW drifted");
+    assert_eq!(g3, w3, "post-fault re-user of the shared head drifted");
+}
+
+#[test]
+fn full_window_cached_prefix_on_an_overlong_prompt_stays_context_full() {
+    // The admission clamp: request A prefill-fills the entire 24-token
+    // window (finishing `ContextFull` with exactly one token) and caches
+    // all 6 pages. An over-long prompt sharing that full-window prefix
+    // would raw-split at 24 = max_context — a zero-window slot and an
+    // out-of-window KV write; the batcher clamps to 23 so one feedable
+    // position remains, and the request finishes `ContextFull` mid-
+    // prefill (no sampled tokens) exactly like a cold run.
+    let ctx = spec().max_context;
+    let full: Vec<i32> = (0..ctx as i32).map(|t| 2 + t % 80).collect();
+    let mut overlong = full.clone();
+    overlong.extend([81, 82, 83, 84]);
+    let run = |warm: bool| {
+        let pool = WorkerPool::shared(2);
+        let engine = TransformerServeEngine::random_with_kv(
+            spec(),
+            9,
+            1,
+            pool,
+            KvRuntimeConfig::paged(PAGE_TOKENS),
+        )
+        .unwrap();
+        let mut b = Batcher::new(engine, BatcherConfig::default());
+        if warm {
+            b.submit(Request::new(0, full.clone(), 3));
+            let done = collect(b.run_to_completion().unwrap());
+            assert_eq!(done[&0].1, FinishReason::ContextFull);
+            assert_eq!(done[&0].0.len(), 1);
+        }
+        b.submit(Request::new(1, overlong.clone(), 3));
+        collect(b.run_to_completion().unwrap())
+    };
+    let cold = run(false);
+    let warm = run(true);
+    assert_eq!(warm[&1], cold[&1], "clamped full-window attach changed the stream");
+    assert_eq!(warm[&1].1, FinishReason::ContextFull);
+    assert!(warm[&1].0.is_empty(), "no logits are ever sampled for the over-long prompt");
+}

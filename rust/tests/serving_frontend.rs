@@ -269,6 +269,21 @@ fn serving_smoke_replays_three_load_points_and_writes_artifact() {
             "goodput_tok_per_sec".to_string(),
             Json::Num(m.goodput_tokens_per_sec()),
         );
+        // KV/prefix columns stay in the schema with null values: the
+        // mock engine carries no KV store, so `m.kv` is None here. The
+        // release bench fills them from the paged online engines.
+        for key in [
+            "prefix_hit_rate",
+            "prefix_hits",
+            "prefix_misses",
+            "cow_copies",
+            "kv_pages_peak",
+            "kv_pool_pages",
+            "kv_contiguous_worst_case_pages",
+        ] {
+            o.insert(key.to_string(), Json::Null);
+        }
+        assert!(m.kv.is_none(), "{label}: mock engine must not report KV metrics");
         points.push(Json::Obj(o));
     }
 
@@ -279,6 +294,11 @@ fn serving_smoke_replays_three_load_points_and_writes_artifact() {
     top.insert("requests".to_string(), Json::Num(N as f64));
     top.insert("base_rate_rps".to_string(), Json::Num(BASE_RATE));
     top.insert("streams_bit_exact".to_string(), Json::Bool(true));
+    top.insert("kv_oracle".to_string(), Json::Null);
+    top.insert("kv_online".to_string(), Json::Null);
+    top.insert("shared_prompt_heads".to_string(), Json::Null);
+    top.insert("shared_prompt_head_len".to_string(), Json::Null);
+    top.insert("shared_prompt_zipf_s".to_string(), Json::Null);
     top.insert("points".to_string(), Json::Arr(points));
     let doc = Json::Obj(top);
     for path in [
