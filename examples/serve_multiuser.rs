@@ -18,6 +18,9 @@
 //!          --slo-ttft-ms MS --slo-tpot-ms MS (0 = no SLO steering)
 //!          --kv contiguous|paged:N ("" = SAIL_KV env; lut engine only)
 //!          --kv-pages-budget P (0 = one slot's worth; paged only)
+//!          --spec off|k:N[,bits:Q][,layers:L] ("" = SAIL_SPEC env;
+//!            lut engine only — self-speculative decode, bit-identical
+//!            streams; artifacts may also pin it via spec_draft_* fields)
 //!          --shared-heads H (0 = off: Zipf-popular shared system prompts)
 //!          --preempt --bursty --artifacts DIR (--mock = --engine mock)
 //!
@@ -39,9 +42,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use sail::coordinator::{
-    workload, ArrivalProcess, BatcherConfig, FinishReason, MockEngine, PjrtEngine, Request,
-    ServingConfig, ServingFrontend, SharedPromptMix, SloPolicy, StreamHandle,
-    TransformerServeEngine, WorkloadSpec,
+    parse_spec_config, spec_config_from_env, workload, ArrivalProcess, BatcherConfig,
+    FinishReason, MockEngine, PjrtEngine, Request, ServingConfig, ServingFrontend,
+    SharedPromptMix, SloPolicy, SpeculativeEngine, StreamHandle, TransformerServeEngine,
+    WorkloadSpec,
 };
 use sail::model::{parse_kv_layout, DecodeSpec, KvCacheSpec, KvRuntimeConfig, LayerSpec};
 use sail::quant::QuantLevel;
@@ -87,10 +91,16 @@ fn main() -> anyhow::Result<()> {
     let slo_tpot_ms: f64 = args.opt("slo-tpot-ms", 0.0);
     let kv_arg = args.opt_str("kv", ""); // "" = SAIL_KV env, else contiguous
     let kv_pages_budget: usize = args.opt("kv-pages-budget", 0); // 0 = default
+    let spec_arg = args.opt_str("spec", ""); // "" = SAIL_SPEC env, else off
     let shared_heads: usize = args.opt("shared-heads", 0); // 0 = off
     let preempt = args.flag("preempt");
     let bursty = args.flag("bursty");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let spec_cfg = if spec_arg.is_empty() {
+        spec_config_from_env()
+    } else {
+        parse_spec_config(&spec_arg).map_err(|e| anyhow::anyhow!("--spec: {e}"))?
+    };
     let kv_cfg = {
         let mut cfg = if kv_arg.is_empty() {
             KvRuntimeConfig::from_env()
@@ -181,6 +191,14 @@ fn main() -> anyhow::Result<()> {
                 kv_cfg.layout,
                 pool.threads()
             );
+            if let Some(sc) = &spec_cfg {
+                println!(
+                    "speculation: k={}, draft bits {}, draft layers {}",
+                    sc.k,
+                    sc.draft.bits.map_or("target".to_string(), |b| format!("q{}", b.bits())),
+                    sc.draft.layers.map_or("all".to_string(), |l| l.to_string()),
+                );
+            }
             println!(
                 "placement: {numa_policy} → {} node group(s), {} pinned worker(s) \
                  [host: {}]\n",
@@ -188,10 +206,18 @@ fn main() -> anyhow::Result<()> {
                 pool.pinned_workers(),
                 Topology::detect().summary()
             );
-            ServingFrontend::spawn(
-                TransformerServeEngine::random_with_kv(spec, seed, batch, pool, kv_cfg)?,
-                scfg,
-            )
+            match spec_cfg {
+                // Speculation wraps the same weights; the streams are
+                // bit-identical to plain decode — only latency changes.
+                Some(sc) => ServingFrontend::spawn(
+                    SpeculativeEngine::random_with_kv(spec, seed, batch, pool, kv_cfg, sc)?,
+                    scfg,
+                ),
+                None => ServingFrontend::spawn(
+                    TransformerServeEngine::random_with_kv(spec, seed, batch, pool, kv_cfg)?,
+                    scfg,
+                ),
+            }
         }
         other => anyhow::bail!("unknown engine {other} (lut|pjrt|mock)"),
     });

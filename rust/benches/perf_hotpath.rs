@@ -22,6 +22,15 @@
 //! per layout with a cross-layout token-stream bit-exactness assert —
 //! paging must change the memory shape, never the tokens.
 //!
+//! PR-9 adds the **speculative-decoding acceptance × speedup matrix**:
+//! self-speculative decode on the batch-1 latency workload at draft
+//! length k 1/2/4/8 × draft derivation {identical weights, 2-bit,
+//! layer-truncated, sabotaged}, reporting decode tok/s, speedup over
+//! plain decode, and the acceptance-rate counters per cell — with an
+//! in-run assert that every cell's token stream is bit-identical to
+//! plain decode (the acceptance-equivalence contract: draft quality
+//! moves latency, never tokens).
+//!
 //! PR-5 adds the **chunked prefill matrix**: prompt 128/512 × chunk
 //! 1/8/32 × pool 1/8 on the transformer serving path, reporting TTFT,
 //! prefill tok/s, and `GemvStats.luts_built` per prompt token (the
@@ -41,13 +50,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use sail::coordinator::{
-    argmax_logits, Batcher, BatcherConfig, LutGemvServeEngine, MockEngine, Request,
-    TransformerServeEngine,
+    argmax_logits, Batcher, BatcherConfig, DecodeEngine, LutGemvServeEngine, MockEngine, Request,
+    SlotRun, SpecConfig, SpeculativeEngine, TransformerServeEngine,
 };
 use sail::lutgemv::engine::{reference_gemv, LutGemvEngine};
 use sail::lutgemv::{GemvCycleModel, GemvOutput, PatternReuseTable};
 use sail::model::{
-    DecodeItem, DecodeSpec, KvCacheSpec, KvRuntimeConfig, LayerSpec, LutTransformer, ModelConfig,
+    DecodeItem, DecodeSpec, DraftSpec, KvCacheSpec, KvRuntimeConfig, LayerSpec, LutTransformer,
+    ModelConfig,
 };
 use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, Topology, WorkerPool};
@@ -553,6 +563,117 @@ fn main() {
     let kv_bit_exact = kv_streams.iter().all(|s| *s == kv_streams[0]);
     assert!(kv_bit_exact, "decode token streams diverged across KV layouts");
 
+    // --- speculative decoding: acceptance × speedup matrix (PR-9) -----------
+    // Self-speculative decode on the batch-1 latency workload: one
+    // episode = a 3-token prefill plus 48 argmax-fed decode feeds (deep
+    // enough that k=8 rounds never hit the 64-token window, so no cell
+    // pays fallback steps). One plain-decode baseline, then draft length
+    // k 1/2/4/8 × draft derivation {identical, bits:q2, layers:2,
+    // sabotage}, all from the same seed. Every cell's stream is asserted
+    // bit-identical to plain decode in-run — the acceptance-equivalence
+    // contract — and the artifact row records tok/s, speedup vs plain,
+    // and the SpecStats counters. `identical` is the 100%-acceptance
+    // calibration row and `sabotage` the 0%-acceptance worst case; the
+    // genuinely reduced drafts land in between, which is the trade the
+    // matrix exists to measure.
+    let spec_prompt = [3i32, 7, 11];
+    let spec_feeds = 48usize;
+    let spec_episode = |e: &mut dyn DecodeEngine| -> Vec<i32> {
+        e.reset_slot(0).unwrap();
+        let runs = [SlotRun { slot: 0, tokens: &spec_prompt, start_pos: 0 }];
+        let mut cur = e.step_runs(&runs).unwrap()[0];
+        let mut got = vec![cur];
+        for i in 0..spec_feeds {
+            cur = e.step(&[cur], &[(spec_prompt.len() + i) as i32], &[true]).unwrap()[0];
+            got.push(cur);
+        }
+        got
+    };
+    let spec_pool = Arc::new(WorkerPool::with_policy(8, &NumaPolicy::Off));
+    let mut plain_engine = TransformerServeEngine::random_with_kv(
+        decode_spec(),
+        77,
+        1,
+        Arc::clone(&spec_pool),
+        KvRuntimeConfig::contiguous(),
+    )
+    .unwrap();
+    let want_stream = spec_episode(&mut plain_engine);
+    let plain_r = time_throughput(
+        "spec-decode baseline plain b1 x8T (tok/s)",
+        decode_opts,
+        (spec_feeds + 1) as f64,
+        || spec_episode(&mut plain_engine),
+    );
+    let plain_rate = plain_r.items_per_sec();
+    results.push(plain_r);
+    let spec_drafts: [(&str, DraftSpec, bool); 4] = [
+        ("identical", DraftSpec::default(), false),
+        ("bits:q2", DraftSpec { bits: Some(QuantLevel::Q2), layers: None }, false),
+        ("layers:2", DraftSpec { bits: None, layers: Some(2) }, false),
+        ("sabotage", DraftSpec::default(), true),
+    ];
+    let mut spec_rows: Vec<Json> = Vec::new();
+    let mut spec_speedups: BTreeMap<(&str, usize), f64> = BTreeMap::new();
+    let mut spec_bit_exact = true;
+    println!("\n== speculative decoding (acceptance x speedup) ==");
+    for (label, draft, sabotage) in &spec_drafts {
+        for k in [1usize, 2, 4, 8] {
+            let cfg = SpecConfig { k, draft: *draft, sabotage: *sabotage };
+            let mut e = SpeculativeEngine::random_with_kv(
+                decode_spec(),
+                77,
+                1,
+                Arc::clone(&spec_pool),
+                KvRuntimeConfig::contiguous(),
+                cfg,
+            )
+            .unwrap();
+            let got = spec_episode(&mut e);
+            spec_bit_exact &= got == want_stream;
+            assert_eq!(
+                got, want_stream,
+                "speculative stream diverged from plain decode (draft {label}, k {k})"
+            );
+            let r = time_throughput(
+                &format!("spec-decode k{k} draft-{label} b1 x8T (tok/s)"),
+                decode_opts,
+                (spec_feeds + 1) as f64,
+                || spec_episode(&mut e),
+            );
+            let st = e.stats();
+            let speedup = r.items_per_sec() / plain_rate;
+            spec_speedups.insert((*label, k), speedup);
+            println!(
+                "spec k{k} draft-{label:<9}: {:>9.0} tok/s ({speedup:.2}x plain), \
+                 acceptance {:>5.1}% ({} accepted / {} drafted, {} buffered, {} fallback)",
+                r.items_per_sec(),
+                st.acceptance_rate() * 100.0,
+                st.accepted,
+                st.drafted,
+                st.buffered,
+                st.fallback_steps
+            );
+            let mut o = BTreeMap::new();
+            o.insert("k".to_string(), Json::Num(k as f64));
+            o.insert("draft".to_string(), Json::Str(label.to_string()));
+            o.insert("tok_per_sec".to_string(), Json::Num(r.items_per_sec()));
+            o.insert("speedup_vs_plain".to_string(), Json::Num(speedup));
+            o.insert("acceptance_rate".to_string(), Json::Num(st.acceptance_rate()));
+            o.insert("rounds".to_string(), Json::Num(st.rounds as f64));
+            o.insert("drafted".to_string(), Json::Num(st.drafted as f64));
+            o.insert("accepted".to_string(), Json::Num(st.accepted as f64));
+            o.insert("buffered".to_string(), Json::Num(st.buffered as f64));
+            o.insert("fallback_steps".to_string(), Json::Num(st.fallback_steps as f64));
+            spec_rows.push(Json::Obj(o));
+            results.push(r);
+        }
+    }
+    println!(
+        "spec bit-exact vs plain across all {} cells: {spec_bit_exact}",
+        spec_rows.len()
+    );
+
     // --- fault tolerance: fault-free overhead + recovery latency (PR-6) -----
     // Two numbers the robustness work must pin: (1) what the armed-but-
     // silent fault machinery costs on the fault-free hot path (the hooks
@@ -727,6 +848,21 @@ fn main() {
     extras.insert(
         "kv_env".to_string(),
         Json::Str(std::env::var("SAIL_KV").unwrap_or_else(|_| "<unset>".to_string())),
+    );
+    // The speculative acceptance × speedup matrix: one row per
+    // (draft derivation, k), plus the plain-decode reference rate the
+    // speedups are relative to. CI lifts this section out into its own
+    // artifact (`spec-acceptance-matrix`).
+    extras.insert("spec_matrix".to_string(), Json::Arr(spec_rows));
+    extras.insert("spec_bit_exact_vs_plain".to_string(), Json::Bool(spec_bit_exact));
+    extras.insert("spec_plain_tok_per_sec".to_string(), Json::Num(plain_rate));
+    extras.insert(
+        "spec_speedup_k4_identical_vs_plain".to_string(),
+        Json::Num(spec_speedups[&("identical", 4)]),
+    );
+    extras.insert(
+        "spec_env".to_string(),
+        Json::Str(std::env::var("SAIL_SPEC").unwrap_or_else(|_| "<unset>".to_string())),
     );
     // Persisted next to Cargo.toml (the CI artifact) and at the repo root
     // (the perf trajectory's pickup point) — atomically, so an aborted

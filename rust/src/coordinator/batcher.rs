@@ -631,6 +631,13 @@ impl<E: DecodeEngine> Batcher<E> {
                 });
             }
         }
+        // Whatever the prefill rows left of the iteration budget is the
+        // speculation grant: a speculative engine spends it on draft +
+        // verify rows (2 per drafted token), plain engines ignore it.
+        // Granting zero never stalls a slot — every run above already
+        // holds its guaranteed row, speculation just degrades to plain
+        // decode (same tokens, fewer of them per iteration).
+        self.engine.spec_grant(extra_budget);
         // Fault isolation: a failed batched forward must not take down
         // the batch. Each run is retried alone — solo re-execution is
         // bit-identical by the engine's isolation contract, so healthy

@@ -14,7 +14,13 @@
 //! - [`MockEngine`] — a deterministic token automaton with the same
 //!   slot/KV semantics, for property-testing batching invariants without
 //!   any compute.
+//!
+//! [`SpeculativeEngine`] is not a fifth backend but a wrapper: it drives
+//! a [`TransformerServeEngine`] target plus a cheap same-weights draft
+//! ([`DraftSpec`]) through self-speculative decoding, emitting token
+//! streams bit-identical to the wrapped target alone.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -22,7 +28,8 @@ use anyhow::{bail, Result};
 use crate::lutgemv::engine::GemvStats;
 use crate::lutgemv::{GemvOutput, LutGemvEngine};
 use crate::model::{
-    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, KvMetrics, KvRuntimeConfig, LutTransformer,
+    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, DraftSpec, FloatWeights, KvMetrics,
+    KvRuntimeConfig, LutTransformer,
 };
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
 use crate::runtime::WorkerPool;
@@ -64,10 +71,21 @@ pub struct SlotRun<'a> {
 }
 
 /// Shared `step_runs` validation: slots in range and unique per
-/// iteration, runs non-empty, positions non-negative and inside the
-/// context window (the batcher raises `ContextFull` *before* a run could
-/// ever touch position `max_context`).
-fn validate_runs(batch: usize, max_context: usize, runs: &[SlotRun]) -> Result<()> {
+/// iteration, runs non-empty and no longer than the engine's `max_run`
+/// capability, positions non-negative and inside the context window (the
+/// batcher raises `ContextFull` *before* a run could ever touch position
+/// `max_context`). An empty run *list* is valid and validates trivially —
+/// `step_runs(&[])` is a no-op iteration, not an error.
+///
+/// Public so test harnesses and engine wrappers can hold their inputs to
+/// the same contract the built-in engines enforce; every violation is a
+/// typed `Err`, never a panic.
+pub fn validate_runs(
+    batch: usize,
+    max_context: usize,
+    max_run: usize,
+    runs: &[SlotRun],
+) -> Result<()> {
     let mut seen = vec![false; batch];
     for r in runs {
         if r.slot >= batch {
@@ -79,6 +97,13 @@ fn validate_runs(batch: usize, max_context: usize, runs: &[SlotRun]) -> Result<(
         seen[r.slot] = true;
         if r.tokens.is_empty() {
             bail!("empty token run for slot {}", r.slot);
+        }
+        if r.tokens.len() > max_run {
+            bail!(
+                "{}-token run for slot {} exceeds the engine's max_run {max_run}",
+                r.tokens.len(),
+                r.slot
+            );
         }
         if r.start_pos < 0 {
             bail!("negative start position {} for slot {}", r.start_pos, r.slot);
@@ -108,7 +133,7 @@ pub fn step_runs_via_step<E: DecodeEngine + ?Sized>(
     engine: &mut E,
     runs: &[SlotRun],
 ) -> Result<Vec<i32>> {
-    validate_runs(engine.batch(), engine.max_context(), runs)?;
+    validate_runs(engine.batch(), engine.max_context(), engine.max_run(), runs)?;
     let b = engine.batch();
     let max_len = runs.iter().map(|r| r.tokens.len()).max().unwrap_or(0);
     let mut out = vec![0i32; runs.len()];
@@ -195,6 +220,19 @@ pub trait DecodeEngine {
     }
     /// KV pool/prefix-cache counters, if the engine runs a paged store.
     fn kv_metrics(&self) -> Option<KvMetrics> {
+        None
+    }
+    /// Hand the engine this iteration's *unused* row budget: rows the
+    /// batcher's scheduler had available under
+    /// [`iteration_rows`](crate::coordinator::BatcherConfig::iteration_rows)
+    /// but did not fill with decode or prefill rows. A speculative engine
+    /// spends it on draft + verify rows (each drafted token costs two
+    /// extra rows); plain engines ignore it. Throttling the grant to zero
+    /// never stalls serving — speculation simply degrades to plain
+    /// decode, with identical tokens.
+    fn spec_grant(&mut self, _rows: usize) {}
+    /// Speculative-decoding counters, if the engine drafts.
+    fn spec_stats(&self) -> Option<SpecStats> {
         None
     }
 }
@@ -437,7 +475,7 @@ impl DecodeEngine for LutGemvServeEngine {
     }
 
     fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
-        validate_runs(self.batch, self.max_context, runs)?;
+        validate_runs(self.batch, self.max_context, self.max_run(), runs)?;
         let k = self.gemv.k();
         // Fold every run's tokens into a staged copy of its slot's hidden
         // state in feed order — the exact recurrence sequential
@@ -528,6 +566,13 @@ impl TransformerServeEngine {
         &self.model
     }
 
+    /// Mutable access to the model — the speculative wrapper drives its
+    /// verify forwards ([`LutTransformer::step_runs_all_logits`]) and KV
+    /// rollback ([`LutTransformer::truncate_slot`]) through this.
+    pub fn model_mut(&mut self) -> &mut LutTransformer {
+        &mut self.model
+    }
+
     /// Per-layer, per-projection kernel counters (rolled up across steps).
     pub fn stats(&self) -> &DecodeStats {
         &self.model.stats
@@ -584,7 +629,7 @@ impl DecodeEngine for TransformerServeEngine {
     }
 
     fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
-        validate_runs(self.model.batch(), self.model.spec().max_context, runs)?;
+        validate_runs(self.model.batch(), self.model.spec().max_context, self.max_run(), runs)?;
         let model_runs: Vec<DecodeRun> = runs
             .iter()
             .map(|r| DecodeRun { slot: r.slot, tokens: r.tokens, start_pos: r.start_pos as usize })
@@ -607,6 +652,570 @@ impl DecodeEngine for TransformerServeEngine {
 
     fn kv_metrics(&self) -> Option<KvMetrics> {
         self.model.kv_metrics()
+    }
+}
+
+/// Speculative-decoding configuration: the draft length and how the
+/// draft model is derived from the target's weights ([`DraftSpec`]).
+/// Parsed from `SAIL_SPEC` (`off`, or `k:<n>[,bits:<level>][,layers:<l>]`)
+/// or built explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// Tokens drafted per speculation round (`≥ 1`).
+    pub k: usize,
+    /// Draft derivation (default: the draft *is* the target — the
+    /// 100%-acceptance calibration point).
+    pub draft: DraftSpec,
+    /// Test-only adversary: corrupt every draft token to
+    /// `(argmax + 1) mod vocab`, forcing zero acceptance per round. Pins
+    /// the claim that the emitted stream cannot depend on draft quality.
+    pub sabotage: bool,
+}
+
+impl SpecConfig {
+    /// Draft `k` tokens per round with an identical-weights draft.
+    pub fn new(k: usize) -> Self {
+        SpecConfig { k, draft: DraftSpec::default(), sabotage: false }
+    }
+}
+
+/// Parse a `SAIL_SPEC` value. Grammar: `off` (speculation disabled —
+/// `Ok(None)`) or a comma-separated field list `k:<n>[,bits:<level>]`
+/// `[,layers:<l>]`: `k` is the draft length (required, ≥ 1), `bits` caps
+/// every draft projection at a [`QuantLevel`], `layers` truncates the
+/// draft's decoder stack. Strict: any malformed field is an `Err`; the
+/// env path downgrades that to a warning ([`spec_config_from_env`]).
+pub fn parse_spec_config(v: &str) -> Result<Option<SpecConfig>, String> {
+    let t = v.trim();
+    if t.eq_ignore_ascii_case("off") {
+        return Ok(None);
+    }
+    let mut k = None;
+    let mut draft = DraftSpec::default();
+    for part in t.split(',') {
+        let Some((key, val)) = part.split_once(':') else {
+            return Err(format!(
+                "invalid SAIL_SPEC field {part:?} \
+                 (want off, or k:<n>[,bits:<level>][,layers:<l>])"
+            ));
+        };
+        let val = val.trim();
+        match key.trim() {
+            "k" => match val.parse::<usize>() {
+                Ok(n) if n >= 1 => k = Some(n),
+                _ => {
+                    return Err(format!("invalid SAIL_SPEC draft length {val:?} (want k ≥ 1)"));
+                }
+            },
+            "bits" => match QuantLevel::parse(val) {
+                Some(level) => draft.bits = Some(level),
+                None => return Err(format!("invalid SAIL_SPEC draft quant level {val:?}")),
+            },
+            "layers" => match val.parse::<usize>() {
+                Ok(n) if n >= 1 => draft.layers = Some(n),
+                _ => {
+                    return Err(format!(
+                        "invalid SAIL_SPEC draft layer count {val:?} (want ≥ 1)"
+                    ));
+                }
+            },
+            other => {
+                return Err(format!("unknown SAIL_SPEC field {other:?} (want k/bits/layers)"));
+            }
+        }
+    }
+    match k {
+        Some(k) => Ok(Some(SpecConfig { k, draft, sabotage: false })),
+        None => Err("SAIL_SPEC is missing the required k:<n> field".into()),
+    }
+}
+
+/// Read `SAIL_SPEC` leniently: unset or empty means disabled; a malformed
+/// value warns on stderr and disables speculation instead of failing the
+/// serving process (same policy as the other `SAIL_*` env knobs).
+pub fn spec_config_from_env() -> Option<SpecConfig> {
+    let v = std::env::var("SAIL_SPEC").ok()?;
+    if v.trim().is_empty() {
+        return None;
+    }
+    match parse_spec_config(&v) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("warning: {e}; speculation disabled");
+            None
+        }
+    }
+}
+
+/// Speculation counters, cumulative across an engine's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Speculation rounds (one draft loop + one multi-row verify each).
+    pub rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub drafted: u64,
+    /// Draft tokens the target accepted (argmax-equal predictions).
+    pub accepted: u64,
+    /// Tokens served straight from the accepted buffer — feeds that ran
+    /// **no** forward at all, the latency win speculation exists for.
+    pub buffered: u64,
+    /// Decode feeds served by a plain single-token target step instead
+    /// of a round (no window room, no row grant, or an unhealthy draft).
+    pub fallback_steps: u64,
+}
+
+impl SpecStats {
+    /// Fraction of drafted tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Self-speculative decoding on the LUT serving path.
+///
+/// Wraps a [`TransformerServeEngine`] *target* plus a cheap *draft*
+/// [`LutTransformer`] quantized from the **same** float weights
+/// ([`FloatWeights`]) at fewer effective bits and/or a truncated layer
+/// stack ([`DraftSpec::from_target`]). On a decode feed the draft
+/// proposes up to `k` tokens autoregressively; the target judges all of
+/// them in **one** multi-row [`LutTransformer::step_runs_all_logits`]
+/// forward — on the LUT path a k-row verify costs one LUT build per
+/// weight chunk, nearly the price of a single decode step (the paper's
+/// batched-GEMV amortization, PR-5). The longest draft prefix whose
+/// tokens argmax-match the target's own predictions is accepted; the
+/// rejected tail is rolled back off both KV caches
+/// ([`LutTransformer::truncate_slot`], contiguous and paged stores
+/// alike).
+///
+/// Determinism contract: **speculation changes latency, never tokens.**
+/// Every emitted token is the target's own argmax computed over exactly
+/// the cache prefix plain decode would have — acceptance only decides
+/// how many of those tokens one round yields. Draft failures are
+/// absorbed (the slot decodes plainly until reset); draft quality, bit
+/// width, even an adversarial always-wrong draft ([`SpecConfig::sabotage`])
+/// affect throughput only. Pinned by `tests/speculative_decode.rs`
+/// across the full chunk × width × NUMA × KV-layout × faults matrix.
+pub struct SpeculativeEngine {
+    target: TransformerServeEngine,
+    draft: LutTransformer,
+    k: usize,
+    sabotage: bool,
+    /// Accepted-but-unserved target tokens per slot (front = next out).
+    pending: Vec<VecDeque<i32>>,
+    /// The feed `(token, position)` the buffer head is the answer to.
+    expect: Vec<Option<(i32, usize)>>,
+    /// Memo of the slot's last serviced decode feed
+    /// `(token, position, output)` — replayed when the batcher's solo
+    /// retry re-sends a feed that already succeeded inside a failed
+    /// collective call.
+    last: Vec<Option<(i32, usize, i32)>>,
+    /// Exclusive upper bound of target-KV positions holding speculative
+    /// or accepted writes per slot (the rollback watermark).
+    hi: Vec<usize>,
+    /// Same watermark for the draft's KV.
+    draft_hi: Vec<usize>,
+    /// Draft health: a failed draft forward leaves its KV suspect, so
+    /// the slot decodes plainly until `reset_slot` clears it.
+    draft_ok: Vec<bool>,
+    /// Rows the current iteration may spend on drafting (each drafted
+    /// token costs one draft row + one extra verify row). Engines driven
+    /// outside a batcher never receive a grant and speculate freely.
+    grant: usize,
+    stats: SpecStats,
+}
+
+impl SpeculativeEngine {
+    /// Wrap `target` with an explicit draft model. The draft must share
+    /// the target's batch size, vocab, and context window; in the
+    /// intended self-speculative setup both are quantized from the same
+    /// [`FloatWeights`] so their predictions correlate, but correctness
+    /// never depends on that — stream identity holds for *any* draft.
+    pub fn new(
+        target: TransformerServeEngine,
+        draft: LutTransformer,
+        cfg: SpecConfig,
+    ) -> Result<Self> {
+        if cfg.k == 0 {
+            bail!("speculative draft length k must be ≥ 1");
+        }
+        let b = target.batch();
+        if draft.batch() != b {
+            bail!("draft batch {} != target batch {b}", draft.batch());
+        }
+        if draft.spec().vocab != target.vocab() {
+            bail!("draft vocab {} != target vocab {}", draft.spec().vocab, target.vocab());
+        }
+        if draft.spec().max_context < target.max_context() {
+            bail!(
+                "draft context window {} shorter than the target's {}",
+                draft.spec().max_context,
+                target.max_context()
+            );
+        }
+        Ok(SpeculativeEngine {
+            target,
+            draft,
+            k: cfg.k,
+            sabotage: cfg.sabotage,
+            pending: (0..b).map(|_| VecDeque::new()).collect(),
+            expect: vec![None; b],
+            last: vec![None; b],
+            hi: vec![0; b],
+            draft_hi: vec![0; b],
+            draft_ok: vec![true; b],
+            grant: usize::MAX,
+            stats: SpecStats::default(),
+        })
+    }
+
+    /// Seeded self-speculative pair: target and draft quantized from the
+    /// **same** [`FloatWeights::generate`] stream, the draft at the
+    /// reduced precision / truncated depth `cfg.draft` asks for. The
+    /// draft always runs the contiguous KV store — it is scratch state,
+    /// rolled back wholesale every round, and must not compete for the
+    /// target's page pool.
+    pub fn random_with_kv(
+        spec: DecodeSpec,
+        seed: u64,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+        kv_cfg: KvRuntimeConfig,
+        cfg: SpecConfig,
+    ) -> Result<Self> {
+        let floats = FloatWeights::generate(&spec, seed);
+        let draft_spec = cfg.draft.from_target(&spec)?;
+        let target = TransformerServeEngine::new(LutTransformer::from_floats(
+            spec,
+            &floats,
+            batch,
+            Arc::clone(&pool),
+            kv_cfg,
+        )?);
+        let draft = LutTransformer::from_floats(
+            draft_spec,
+            &floats,
+            batch,
+            pool,
+            KvRuntimeConfig::contiguous(),
+        )?;
+        SpeculativeEngine::new(target, draft, cfg)
+    }
+
+    /// The wrapped target engine (its model owns the authoritative KV).
+    pub fn target(&self) -> &TransformerServeEngine {
+        &self.target
+    }
+
+    /// The reduced-precision draft model.
+    pub fn draft_model(&self) -> &LutTransformer {
+        &self.draft
+    }
+
+    /// Speculation counters so far.
+    pub fn stats(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// A prefill chunk: mirror it into the draft (keeping the two caches
+    /// in lockstep), forward it through the target, and drop any
+    /// speculative state it supersedes.
+    fn prefill_one(&mut self, r: &SlotRun) -> Result<i32> {
+        let s = r.slot;
+        let start = r.start_pos as usize;
+        let end = start + r.tokens.len();
+        self.pending[s].clear();
+        self.expect[s] = None;
+        self.last[s] = None;
+        if self.hi[s] > start {
+            self.target.model_mut().truncate_slot(s, start, self.hi[s])?;
+            self.hi[s] = start;
+        }
+        if self.draft_ok[s] && self.draft_hi[s] > start {
+            if self.draft.truncate_slot(s, start, self.draft_hi[s]).is_err() {
+                self.draft_ok[s] = false;
+            }
+            self.draft_hi[s] = start;
+        }
+        if self.draft_ok[s] {
+            let druns = [DecodeRun { slot: s, tokens: r.tokens, start_pos: start }];
+            if self.draft.step_runs(&druns).is_err() {
+                self.draft_ok[s] = false;
+            } else {
+                self.draft_hi[s] = end;
+            }
+        }
+        let next = self.target.step_runs(std::slice::from_ref(r))?[0];
+        self.hi[s] = end;
+        Ok(next)
+    }
+
+    /// One decode feed `(tok @ pos)` for slot `s`: serve from the
+    /// accepted buffer when the feed continues the speculated line,
+    /// otherwise roll both caches back to `pos` and run a fresh round.
+    fn decode_one(&mut self, s: usize, tok: i32, pos: usize) -> Result<i32> {
+        if let Some((lt, lp, lo)) = self.last[s] {
+            if (lt, lp) == (tok, pos) {
+                // The batcher's solo retry replays feeds that already
+                // succeeded inside a failed collective call; the answer
+                // comes from the memo, not a second forward.
+                return Ok(lo);
+            }
+        }
+        if let Some((et, ep)) = self.expect[s] {
+            if (et, ep) == (tok, pos) {
+                if let Some(next) = self.pending[s].pop_front() {
+                    self.stats.buffered += 1;
+                    self.expect[s] = Some((next, pos + 1));
+                    self.last[s] = Some((tok, pos, next));
+                    return Ok(next);
+                }
+                // Buffer drained exactly at the speculation frontier
+                // (`hi == pos`): fall through to a fresh round.
+            } else {
+                // The stream turned elsewhere (slot recompute without a
+                // reset): the buffer is stale.
+                self.pending[s].clear();
+                self.expect[s] = None;
+            }
+        }
+        // Re-anchor both caches at the fed position so the round below
+        // starts from exactly the plain-decode state.
+        if self.hi[s] > pos {
+            self.target.model_mut().truncate_slot(s, pos, self.hi[s])?;
+            self.hi[s] = pos;
+        }
+        if self.draft_ok[s] && self.draft_hi[s] > pos {
+            if self.draft.truncate_slot(s, pos, self.draft_hi[s]).is_err() {
+                self.draft_ok[s] = false;
+            }
+            self.draft_hi[s] = pos;
+        }
+        self.speculate(s, tok, pos)
+    }
+
+    /// One speculation round at `(tok @ pos)`: draft up to `k` tokens,
+    /// verify them in one multi-row target forward, accept the longest
+    /// argmax-matching prefix, roll the rejected tail back off both
+    /// caches. Degrades to a plain target step when the window, the row
+    /// grant, or the draft's health leaves no room to draft.
+    fn speculate(&mut self, s: usize, tok: i32, pos: usize) -> Result<i32> {
+        let ctx = self.target.max_context();
+        debug_assert!(pos < ctx, "validated by the callers");
+        let mut k_plan = self.k.min(ctx - pos - 1);
+        if !self.draft_ok[s] {
+            k_plan = 0;
+        }
+        k_plan = k_plan.min(self.grant / 2);
+        // 1. Draft autoregressively at reduced precision. A draft-side
+        //    failure must never surface on the serving path: stop
+        //    drafting and decode plainly until the slot is reset.
+        let mut drafts: Vec<i32> = Vec::with_capacity(k_plan);
+        let mut cur = tok;
+        for i in 0..k_plan {
+            let item = [DecodeItem { slot: s, token: cur, pos: pos + i }];
+            if self.draft.step(&item).is_err() {
+                self.draft_ok[s] = false;
+                break;
+            }
+            self.draft_hi[s] = pos + i + 1;
+            let mut d = argmax_logits(self.draft.logits().row(0));
+            if self.sabotage {
+                d = (d + 1).rem_euclid(self.target.vocab() as i32);
+            }
+            drafts.push(d);
+            cur = d;
+        }
+        let k_eff = drafts.len();
+        if k_eff == 0 {
+            // Nothing to verify: a plain single-token target step —
+            // exactly what a non-speculative engine would run — with the
+            // draft kept in lockstep for the next round.
+            if self.draft_ok[s] {
+                let item = [DecodeItem { slot: s, token: tok, pos }];
+                if self.draft.step(&item).is_err() {
+                    self.draft_ok[s] = false;
+                } else {
+                    self.draft_hi[s] = pos + 1;
+                }
+            }
+            let toks = [tok];
+            let run = SlotRun { slot: s, tokens: &toks, start_pos: pos as i32 };
+            let next = self.target.step_runs(std::slice::from_ref(&run))?[0];
+            self.hi[s] = pos + 1;
+            self.stats.fallback_steps += 1;
+            self.expect[s] = Some((next, pos + 1));
+            self.last[s] = Some((tok, pos, next));
+            return Ok(next);
+        }
+        self.grant = self.grant.saturating_sub(2 * k_eff);
+        // 2. One multi-row verify forward of the target over the fed
+        //    token plus the draft: row i's logits are bit-identical to
+        //    what plain decode would compute after consuming the first
+        //    i + 1 of those tokens.
+        let mut vtokens = Vec::with_capacity(k_eff + 1);
+        vtokens.push(tok);
+        vtokens.extend_from_slice(&drafts);
+        let vrun = [DecodeRun { slot: s, tokens: &vtokens, start_pos: pos }];
+        if let Err(e) = self.target.model_mut().step_runs_all_logits(&vrun) {
+            // Restore the pre-round cache (the forward may have written
+            // any prefix of the verify positions) and surface the error
+            // — the batcher's solo retry or EngineFault finish owns it.
+            self.target.model_mut().truncate_slot(s, pos, pos + k_eff + 1)?;
+            if self.draft_ok[s] && self.draft.truncate_slot(s, pos, self.draft_hi[s]).is_err() {
+                self.draft_ok[s] = false;
+            }
+            self.draft_hi[s] = pos;
+            self.pending[s].clear();
+            self.expect[s] = None;
+            self.last[s] = None;
+            return Err(e);
+        }
+        // 3. Deterministic argmax acceptance. The emitted tokens are all
+        //    target argmaxes by construction — the draft only decides how
+        //    many of them this round yields.
+        let targets: Vec<i32> =
+            (0..=k_eff).map(|i| argmax_logits(self.target.model().logits().row(i))).collect();
+        let mut j = 0;
+        while j < k_eff && drafts[j] == targets[j] {
+            j += 1;
+        }
+        self.stats.rounds += 1;
+        self.stats.drafted += k_eff as u64;
+        self.stats.accepted += j as u64;
+        // 4. Roll the rejected tail back off both caches. Positions
+        //    pos..=pos+j now hold exactly the tokens plain decode would
+        //    have written there (the fed token, then j accepted tokens).
+        self.target.model_mut().truncate_slot(s, pos + j + 1, pos + k_eff + 1)?;
+        self.hi[s] = pos + j + 1;
+        if self.draft_ok[s] {
+            let keep = (pos + j + 1).min(self.draft_hi[s]);
+            if self.draft.truncate_slot(s, keep, self.draft_hi[s]).is_err() {
+                self.draft_ok[s] = false;
+            } else {
+                self.draft_hi[s] = keep;
+                if j == k_eff {
+                    // Full acceptance: the draft never consumed its own
+                    // last proposal — feed it so the next round's draft
+                    // history is gapless.
+                    let item =
+                        [DecodeItem { slot: s, token: drafts[k_eff - 1], pos: pos + k_eff }];
+                    if self.draft.step(&item).is_err() {
+                        self.draft_ok[s] = false;
+                    } else {
+                        self.draft_hi[s] = pos + k_eff + 1;
+                    }
+                }
+            }
+        }
+        // 5. Emit the first target token now; the accepted tail is
+        //    served from the buffer on the following feeds, no forwards
+        //    needed.
+        let out = targets[0];
+        self.pending[s].clear();
+        self.pending[s].extend(&targets[1..j + 1]);
+        self.expect[s] = Some((out, pos + 1));
+        self.last[s] = Some((tok, pos, out));
+        Ok(out)
+    }
+}
+
+impl DecodeEngine for SpeculativeEngine {
+    fn batch(&self) -> usize {
+        self.target.batch()
+    }
+
+    fn vocab(&self) -> usize {
+        self.target.vocab()
+    }
+
+    fn max_context(&self) -> usize {
+        self.target.max_context()
+    }
+
+    fn max_run(&self) -> usize {
+        self.target.max_run()
+    }
+
+    fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
+        let b = self.target.batch();
+        if tokens.len() != b || positions.len() != b || active.len() != b {
+            bail!(
+                "step arity mismatch: tokens={} positions={} active={} batch={b}",
+                tokens.len(),
+                positions.len(),
+                active.len()
+            );
+        }
+        let ctx = self.target.max_context();
+        let mut next = vec![0i32; b];
+        for s in 0..b {
+            if !active[s] {
+                continue;
+            }
+            if positions[s] < 0 {
+                bail!("negative position {} for slot {s}", positions[s]);
+            }
+            if positions[s] as usize >= ctx {
+                bail!(
+                    "position {} for slot {s} outside the {ctx}-token context window",
+                    positions[s]
+                );
+            }
+            next[s] = self.decode_one(s, tokens[s], positions[s] as usize)?;
+        }
+        Ok(next)
+    }
+
+    fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
+        validate_runs(self.batch(), self.max_context(), self.max_run(), runs)?;
+        let mut out = vec![0i32; runs.len()];
+        for (ri, r) in runs.iter().enumerate() {
+            out[ri] = if r.tokens.len() == 1 {
+                self.decode_one(r.slot, r.tokens[0], r.start_pos as usize)?
+            } else {
+                self.prefill_one(r)?
+            };
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        self.target.reset_slot(slot)?;
+        self.draft.reset_slot(slot)?;
+        self.pending[slot].clear();
+        self.expect[slot] = None;
+        self.last[slot] = None;
+        self.hi[slot] = 0;
+        self.draft_hi[slot] = 0;
+        self.draft_ok[slot] = true;
+        Ok(())
+    }
+
+    fn prefix_attach(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
+        // The attach covers target-KV positions only; the draft starts
+        // cold for the slot, so its early proposals may be poor — that
+        // costs acceptance, never tokens.
+        self.target.prefix_attach(slot, feed)
+    }
+
+    fn prefix_insert(&mut self, slot: usize, feed: &[i32]) -> Result<()> {
+        self.target.prefix_insert(slot, feed)
+    }
+
+    fn kv_metrics(&self) -> Option<KvMetrics> {
+        self.target.kv_metrics()
+    }
+
+    fn spec_grant(&mut self, rows: usize) {
+        self.grant = rows;
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        Some(self.stats)
     }
 }
 
@@ -646,7 +1255,18 @@ impl DecodeEngine for MockEngine {
     }
 
     fn step(&mut self, tokens: &[i32], positions: &[i32], active: &[bool]) -> Result<Vec<i32>> {
-        assert_eq!(tokens.len(), self.batch);
+        // Same contract as the real engines: a mis-sized call is a typed
+        // error, not a panic that aborts the caller (pre-fix this was an
+        // `assert_eq!` on the token arity alone).
+        let b = self.batch;
+        if tokens.len() != b || positions.len() != b || active.len() != b {
+            bail!(
+                "step arity mismatch: tokens={} positions={} active={} batch={b}",
+                tokens.len(),
+                positions.len(),
+                active.len()
+            );
+        }
         self.steps += 1;
         Ok((0..self.batch)
             .map(|s| {
@@ -666,7 +1286,7 @@ impl DecodeEngine for MockEngine {
     }
 
     fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
-        validate_runs(self.batch, self.max_context, runs)?;
+        validate_runs(self.batch, self.max_context, self.max_run(), runs)?;
         self.steps += 1;
         Ok(runs
             .iter()
@@ -830,6 +1450,14 @@ mod tests {
         assert!(t.step(&[1], &[0], &[true]).is_err());
         assert!(t.step(&[1, 2], &[0, -1], &[true, true]).is_err(), "negative position");
         assert!(t.step(&[1, 2], &[0, 0], &[true, true]).is_ok());
+
+        // The mock holds the same contract (pre-fix: an `assert_eq!` on
+        // the token arity alone — a panic, and only for one of the three
+        // mis-sized inputs).
+        let mut m = MockEngine::new(2, 97, 8);
+        assert!(m.step(&[1], &[0], &[true]).is_err());
+        assert!(m.step(&[1, 2], &[0, 0], &[true]).is_err());
+        assert!(m.step(&[1, 2], &[0, 0], &[true, true]).is_ok());
     }
 
     fn transformer_engine(batch: usize, threads: usize) -> TransformerServeEngine {
@@ -957,6 +1585,133 @@ mod tests {
         let ctx = t.max_context() as i32;
         assert!(t.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: ctx - 1 }]).is_err());
         assert!(t.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: 0 }]).is_ok());
+    }
+
+    #[test]
+    fn step_runs_rejects_runs_longer_than_max_run() {
+        // A minimal engine (no step_runs override) advertises
+        // max_run = 1; pre-fix the generic decomposition happily fed it
+        // longer runs. Now that is a typed error like every other
+        // contract violation, checked before any slot state mutates.
+        struct OneToken(MockEngine);
+        impl DecodeEngine for OneToken {
+            fn batch(&self) -> usize {
+                self.0.batch()
+            }
+            fn vocab(&self) -> usize {
+                self.0.vocab()
+            }
+            fn max_context(&self) -> usize {
+                self.0.max_context()
+            }
+            fn step(
+                &mut self,
+                tokens: &[i32],
+                positions: &[i32],
+                active: &[bool],
+            ) -> Result<Vec<i32>> {
+                self.0.step(tokens, positions, active)
+            }
+            fn reset_slot(&mut self, slot: usize) -> Result<()> {
+                self.0.reset_slot(slot)
+            }
+        }
+        let mut e = OneToken(MockEngine::new(2, 97, 64));
+        let toks = [1i32, 2, 3];
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &toks, start_pos: 0 }]).is_err());
+        assert_eq!(e.0.state, vec![0, 0], "rejected run mutated slot state");
+        // Single-token runs still serve, and the empty run list is a
+        // no-op iteration, not an error.
+        assert!(e.step_runs(&[SlotRun { slot: 0, tokens: &toks[..1], start_pos: 0 }]).is_ok());
+        assert_eq!(e.step_runs(&[]).unwrap(), Vec::<i32>::new());
+        // Direct validation sees the same set of cases.
+        assert!(validate_runs(2, 64, 1, &[SlotRun { slot: 0, tokens: &toks, start_pos: 0 }])
+            .is_err());
+        assert!(validate_runs(2, 64, 4, &[SlotRun { slot: 0, tokens: &toks, start_pos: 0 }])
+            .is_ok());
+        assert!(validate_runs(2, 64, 4, &[]).is_ok(), "empty run list is valid");
+    }
+
+    #[test]
+    fn step_runs_leaves_absent_slots_inert() {
+        // Slots with no run this iteration keep their state bit-exactly,
+        // through the mock's native path and the generic decomposition
+        // alike (the decomposition marks them inactive on every inner
+        // step).
+        let mut native = MockEngine::new(3, 97, 64);
+        native.step(&[5, 7, 9], &[0, 0, 0], &[true, true, true]).unwrap();
+        let before = native.state.clone();
+        let toks = [4i32, 1];
+        native.step_runs(&[SlotRun { slot: 1, tokens: &toks, start_pos: 1 }]).unwrap();
+        assert_eq!(native.state[0], before[0], "slot 0 touched by a slot-1 run");
+        assert_eq!(native.state[2], before[2], "slot 2 touched by a slot-1 run");
+        assert_ne!(native.state[1], before[1], "slot 1's run did not advance its state");
+        let mut generic = MockEngine::new(3, 97, 64);
+        generic.step(&[5, 7, 9], &[0, 0, 0], &[true, true, true]).unwrap();
+        step_runs_via_step(&mut generic, &[SlotRun { slot: 1, tokens: &toks, start_pos: 1 }])
+            .unwrap();
+        assert_eq!(generic.state, native.state, "generic decomposition diverged");
+    }
+
+    #[test]
+    fn spec_config_grammar_round_trips() {
+        assert_eq!(parse_spec_config("off").unwrap(), None);
+        assert_eq!(parse_spec_config(" OFF ").unwrap(), None);
+        assert_eq!(parse_spec_config("k:4").unwrap().unwrap(), SpecConfig::new(4));
+        let c = parse_spec_config("k:2, bits:q2, layers:1").unwrap().unwrap();
+        assert_eq!(c.k, 2);
+        assert_eq!(c.draft.bits, Some(QuantLevel::Q2));
+        assert_eq!(c.draft.layers, Some(1));
+        for bad in ["", "k:0", "k:x", "bits:q4", "k:2,bits:7", "k:2,layers:0", "k:2,foo:1", "4"] {
+            assert!(parse_spec_config(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    fn spec_engine(cfg: SpecConfig, batch: usize, threads: usize) -> SpeculativeEngine {
+        SpeculativeEngine::random_with_kv(
+            crate::model::DecodeSpec::tiny(2, crate::model::KvCacheSpec::fp16()),
+            11,
+            batch,
+            WorkerPool::shared(threads),
+            KvRuntimeConfig::contiguous(),
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn speculative_stream_matches_plain_decode() {
+        // Same (spec, seed) as `transformer_engine`, so the wrapper's
+        // target is that exact model: the emitted stream must reproduce
+        // it token for token, from an identical draft (full acceptance)
+        // and a sabotaged always-wrong draft (zero acceptance) alike.
+        fn drive(e: &mut dyn DecodeEngine, prompt: &[i32], n: usize) -> Vec<i32> {
+            let mut toks = Vec::new();
+            let mut t =
+                e.step_runs(&[SlotRun { slot: 0, tokens: prompt, start_pos: 0 }]).unwrap()[0];
+            for i in 0..n {
+                toks.push(t);
+                let tt = [t];
+                let pos = (prompt.len() + i) as i32;
+                t = e.step_runs(&[SlotRun { slot: 0, tokens: &tt, start_pos: pos }]).unwrap()[0];
+            }
+            toks.push(t);
+            toks
+        }
+        let prompt = [3i32, 7, 11];
+        let want = drive(&mut transformer_engine(1, 1), &prompt, 10);
+
+        let mut full = spec_engine(SpecConfig::new(4), 1, 1);
+        assert_eq!(drive(&mut full, &prompt, 10), want, "identical-draft stream diverged");
+        let st = full.stats();
+        assert!(st.rounds > 0, "speculation never ran");
+        assert_eq!(st.accepted, st.drafted, "an identical draft must be fully accepted");
+        assert!(st.buffered > 0, "no tokens were served from the accepted buffer");
+
+        let mut sab = spec_engine(SpecConfig { sabotage: true, ..SpecConfig::new(4) }, 1, 1);
+        assert_eq!(drive(&mut sab, &prompt, 10), want, "sabotaged-draft stream diverged");
+        let st = sab.stats();
+        assert!(st.drafted > 0 && st.accepted == 0, "an always-wrong draft cannot be accepted");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::engine::SpecStats;
 use super::request::{FinishReason, Response};
 use crate::model::KvMetrics;
 use crate::util::stats::{Percentiles, Summary};
@@ -40,6 +41,10 @@ pub struct ServingMetrics {
     /// at drain/shutdown ([`ServingMetrics::record_kv`]). `None` on the
     /// contiguous store.
     pub kv: Option<KvMetrics>,
+    /// Speculative-decoding counters, harvested from the engine at
+    /// drain/shutdown ([`ServingMetrics::record_spec`]). `None` on plain
+    /// engines.
+    pub spec: Option<SpecStats>,
     finished_at: Option<Instant>,
 }
 
@@ -64,6 +69,7 @@ impl ServingMetrics {
             engine_faults: 0,
             goodput_tokens: 0,
             kv: None,
+            spec: None,
             finished_at: None,
         }
     }
@@ -74,6 +80,15 @@ impl ServingMetrics {
     pub fn record_kv(&mut self, kv: Option<KvMetrics>) {
         if kv.is_some() {
             self.kv = kv;
+        }
+    }
+
+    /// Install the engine's speculation counters (same sticky policy as
+    /// [`record_kv`](ServingMetrics::record_kv): the latest `Some` wins,
+    /// a `None` from a plain engine leaves any prior snapshot alone).
+    pub fn record_spec(&mut self, spec: Option<SpecStats>) {
+        if spec.is_some() {
+            self.spec = spec;
         }
     }
 
@@ -178,6 +193,18 @@ impl ServingMetrics {
                 kv.prefix_misses,
                 kv.prefix_pages_held,
                 kv.prefix_evictions,
+            ));
+        }
+        if let Some(spec) = &self.spec {
+            s.push_str(&format!(
+                "\nspec rounds={} drafted={} accepted={} ({:.1}%)   \
+                 buffered={}   fallback_steps={}",
+                spec.rounds,
+                spec.drafted,
+                spec.accepted,
+                spec.acceptance_rate() * 100.0,
+                spec.buffered,
+                spec.fallback_steps,
             ));
         }
         s
@@ -304,6 +331,21 @@ mod tests {
         assert!(rep.contains("peak resident=20 (contiguous worst case 32)"), "{rep}");
         assert!(rep.contains("hit rate=75.0%"), "{rep}");
         assert_eq!(m.kv.unwrap().cow_copies, 3);
+    }
+
+    #[test]
+    fn spec_snapshot_is_optional_and_sticky() {
+        let mut m = ServingMetrics::new();
+        assert!(!m.report().contains("spec rounds"), "no spec line without a drafting engine");
+        let st =
+            SpecStats { rounds: 4, drafted: 16, accepted: 12, buffered: 12, fallback_steps: 1 };
+        m.record_spec(Some(st));
+        // A later harvest from a plain engine must not erase the snapshot.
+        m.record_spec(None);
+        let rep = m.report();
+        assert!(rep.contains("spec rounds=4"), "{rep}");
+        assert!(rep.contains("(75.0%)"), "{rep}");
+        assert_eq!(m.spec.unwrap().accepted, 12);
     }
 
     #[test]

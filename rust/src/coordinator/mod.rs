@@ -14,8 +14,10 @@
 //!   backend [`TransformerServeEngine`] (multi-layer KV-cached transformer
 //!   decode, every projection on the paper's actual kernel), the
 //!   PJRT-backed [`crate::runtime::DecodeModel`], the single-projection
-//!   toy [`LutGemvServeEngine`] for micro-benches, and a deterministic
-//!   mock for coordinator tests;
+//!   toy [`LutGemvServeEngine`] for micro-benches, a deterministic
+//!   mock for coordinator tests, and the self-speculative wrapper
+//!   [`SpeculativeEngine`] (draft k tokens at reduced precision, verify
+//!   in one multi-row forward, streams bit-identical to plain decode);
 //! - [`batcher`]: slot management and the iteration loop (chunked
 //!   prefill, bounded admission, deadlines, preemption/resume, and the
 //!   per-iteration event stream [`batcher::IterationEvents`]);
@@ -44,8 +46,9 @@ pub use batcher::{
     IterationEvents, SlotSummary,
 };
 pub use engine::{
-    argmax_logits, step_runs_via_step, DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine,
-    SlotRun, TransformerServeEngine,
+    argmax_logits, parse_spec_config, spec_config_from_env, step_runs_via_step, validate_runs,
+    DecodeEngine, LutGemvServeEngine, MockEngine, PjrtEngine, SlotRun, SpecConfig, SpecStats,
+    SpeculativeEngine, TransformerServeEngine,
 };
 pub use metrics::ServingMetrics;
 pub use policy::{AdmissionPolicy, AdmissionQueue};

@@ -274,6 +274,7 @@ fn serve_loop<E: DecodeEngine>(
                         // All senders gone: final KV-pool/prefix-cache
                         // snapshot, then out.
                         metrics.record_kv(batcher.engine().kv_metrics());
+                        metrics.record_spec(batcher.engine().spec_stats());
                         return metrics;
                     }
                 }
@@ -306,6 +307,7 @@ fn serve_loop<E: DecodeEngine>(
         if batcher.is_idle() {
             if draining {
                 metrics.record_kv(batcher.engine().kv_metrics());
+                metrics.record_spec(batcher.engine().spec_stats());
                 return metrics;
             }
             continue;
@@ -321,6 +323,7 @@ fn serve_loop<E: DecodeEngine>(
             Err(e) => {
                 eprintln!("sail serving: engine failure, stopping worker: {e}");
                 metrics.record_kv(batcher.engine().kv_metrics());
+                metrics.record_spec(batcher.engine().spec_stats());
                 return metrics;
             }
         };

@@ -276,6 +276,107 @@ pub struct DecodeStats {
     pub tokens: u64,
 }
 
+/// The float-valued weights of one decoder layer, pre-quantization.
+struct LayerFloats {
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    w_gate: Vec<f32>,
+    w_up: Vec<f32>,
+    w_down: Vec<f32>,
+}
+
+/// Seeded float weights of a decode model, generated **once** and shared
+/// between a target and any draft derived from it ([`DraftSpec`]). The
+/// PRNG stream depends only on the model dimensions and the seed — never
+/// on the per-layer quant levels — so quantizing the same float set under
+/// two specs yields a self-speculative pair whose divergence comes purely
+/// from precision/depth reduction, not from different weights.
+pub struct FloatWeights {
+    hidden: usize,
+    kv_dim: usize,
+    ffn: usize,
+    vocab: usize,
+    layers: Vec<LayerFloats>,
+    head: Vec<f32>,
+}
+
+impl FloatWeights {
+    /// Draw the full weight set for `spec`'s dimensions from
+    /// `Prng::new(seed)`, in the exact matrix order the seeded
+    /// constructors have always used (per layer: Q, K, V, O, gate, up,
+    /// down; then the head) — `LutTransformer::random*` models stay
+    /// bit-identical to their pre-refactor selves.
+    pub fn generate(spec: &DecodeSpec, seed: u64) -> FloatWeights {
+        let h = spec.hidden;
+        let kvd = spec.kv_dim();
+        let mut prng = crate::util::Prng::new(seed);
+        let mut draw =
+            |n: usize, k: usize| -> Vec<f32> { (0..n * k).map(|_| prng.normal() as f32).collect() };
+        let layers = (0..spec.layers())
+            .map(|_| LayerFloats {
+                wq: draw(h, h),
+                wk: draw(kvd, h),
+                wv: draw(kvd, h),
+                wo: draw(h, h),
+                w_gate: draw(spec.ffn, h),
+                w_up: draw(spec.ffn, h),
+                w_down: draw(h, spec.ffn),
+            })
+            .collect();
+        let head = draw(spec.vocab, h);
+        FloatWeights { hidden: h, kv_dim: kvd, ffn: spec.ffn, vocab: spec.vocab, layers, head }
+    }
+
+    /// Layer count of the generated set (a draft spec may use a prefix).
+    pub fn layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// Recipe for deriving a cheap *draft* model from a target spec for
+/// self-speculative decoding: same dimensions, vocabulary, and KV
+/// precision, but fewer effective weight bits and/or a truncated layer
+/// stack. The draft re-quantizes the **same** [`FloatWeights`] the
+/// target uses, so it is "the model, degraded" rather than a second
+/// model — the paper-adjacent CPU speculation setup where draft cost
+/// shrinks with bit width while the verify pass amortizes through the
+/// multi-row `step_runs` forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DraftSpec {
+    /// Re-quantize every kept layer (and the head) at this uniform
+    /// level, applied only where it *lowers* the bits — a draft is never
+    /// more precise than its target.
+    pub bits: Option<QuantLevel>,
+    /// Keep only the first `n` decoder layers of the target's stack.
+    pub layers: Option<usize>,
+}
+
+impl DraftSpec {
+    /// Derive the draft's [`DecodeSpec`] from the target's: truncate the
+    /// layer stack, then lower per-layer levels. `Default::default()`
+    /// (no reduction) is legal and yields a draft identical to the
+    /// target — useful as the 100%-acceptance calibration point.
+    pub fn from_target(&self, target: &DecodeSpec) -> Result<DecodeSpec> {
+        let n = self.layers.unwrap_or(target.layers());
+        if n == 0 || n > target.layers() {
+            bail!("draft layer count {n} outside 1..={}", target.layers());
+        }
+        let mut spec = target.clone();
+        spec.layer_specs.truncate(n);
+        if let Some(level) = self.bits {
+            for ls in spec.layer_specs.iter_mut().chain(std::iter::once(&mut spec.head)) {
+                if level.bits() < ls.level.bits() {
+                    ls.level = level;
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
 /// One decoder layer's quantized weights, each its own LUT-GEMV engine.
 struct LayerWeights {
     wq: LutGemvEngine,
@@ -394,23 +495,64 @@ impl LutTransformer {
         pool: Arc<WorkerPool>,
         kv_cfg: KvRuntimeConfig,
     ) -> Result<Self> {
+        let floats = FloatWeights::generate(&spec, seed);
+        Self::from_floats(spec, &floats, batch, pool, kv_cfg)
+    }
+
+    /// Build a model by quantizing a pre-generated [`FloatWeights`] set
+    /// under `spec` — the constructor both halves of a self-speculative
+    /// pair share ([`DraftSpec::from_target`] derives the draft's spec,
+    /// then target and draft each quantize the *same* floats).
+    /// `spec.layers()` may be smaller than the float set's layer count (a
+    /// layer-truncated draft quantizes the prefix of the stack);
+    /// dimensions must match exactly.
+    pub fn from_floats(
+        spec: DecodeSpec,
+        floats: &FloatWeights,
+        batch: usize,
+        pool: Arc<WorkerPool>,
+        kv_cfg: KvRuntimeConfig,
+    ) -> Result<Self> {
         spec.validate()?;
         if batch == 0 {
             bail!("batch must be positive");
         }
+        if spec.hidden != floats.hidden
+            || spec.kv_dim() != floats.kv_dim
+            || spec.ffn != floats.ffn
+            || spec.vocab != floats.vocab
+        {
+            bail!(
+                "spec dimensions (h {}, kv {}, ffn {}, vocab {}) do not match the float \
+                 weight set (h {}, kv {}, ffn {}, vocab {})",
+                spec.hidden,
+                spec.kv_dim(),
+                spec.ffn,
+                spec.vocab,
+                floats.hidden,
+                floats.kv_dim,
+                floats.ffn,
+                floats.vocab
+            );
+        }
+        if spec.layers() > floats.layers.len() {
+            bail!(
+                "spec wants {} layers but the float weight set has {}",
+                spec.layers(),
+                floats.layers.len()
+            );
+        }
         let h = spec.hidden;
         let kvd = spec.kv_dim();
-        let mut prng = crate::util::Prng::new(seed);
         // Every projection engine is *placed* for the serving pool: its
         // weight shards are first-touch-copied onto the node groups whose
         // pinned workers will read them, so steady-state decode never
         // streams weights across a socket (a no-op single shard on
         // single-node pools). Weight values depend only on (spec, seed) —
         // placement changes where bytes live, never what they are.
-        let mut gen = |n: usize, k: usize, ls: LayerSpec| -> LutGemvEngine {
-            let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+        let gen = |w: &[f32], n: usize, k: usize, ls: LayerSpec| -> LutGemvEngine {
             LutGemvEngine::with_pool(
-                QuantizedMatrix::quantize(&w, n, k, ls.level, spec.group),
+                QuantizedMatrix::quantize(w, n, k, ls.level, spec.group),
                 ls.nbw,
                 &pool,
             )
@@ -418,17 +560,18 @@ impl LutTransformer {
         let layers: Vec<LayerWeights> = spec
             .layer_specs
             .iter()
-            .map(|&ls| LayerWeights {
-                wq: gen(h, h, ls),
-                wk: gen(kvd, h, ls),
-                wv: gen(kvd, h, ls),
-                wo: gen(h, h, ls),
-                w_gate: gen(spec.ffn, h, ls),
-                w_up: gen(spec.ffn, h, ls),
-                w_down: gen(h, spec.ffn, ls),
+            .zip(&floats.layers)
+            .map(|(&ls, lf)| LayerWeights {
+                wq: gen(&lf.wq, h, h, ls),
+                wk: gen(&lf.wk, kvd, h, ls),
+                wv: gen(&lf.wv, kvd, h, ls),
+                wo: gen(&lf.wo, h, h, ls),
+                w_gate: gen(&lf.w_gate, spec.ffn, h, ls),
+                w_up: gen(&lf.w_up, spec.ffn, h, ls),
+                w_down: gen(&lf.w_down, h, spec.ffn, ls),
             })
             .collect();
-        let head = gen(spec.vocab, h, spec.head);
+        let head = gen(&floats.head, spec.vocab, h, spec.head);
         let mut kv = KvBackend::build(kv_cfg, spec.kv, spec.layers(), batch, spec.max_context, kvd)?;
         // Interleave the paged pool's page frames across the placement's
         // node groups (round-robin, deterministic) — the PR-4 NUMA
@@ -539,6 +682,20 @@ impl LutTransformer {
         Ok(())
     }
 
+    /// Roll back one slot's KV history tail — the speculative-decode
+    /// rejection path. After a verify forward wrote positions up to
+    /// `written`, positions `keep .. written` return to the never-written
+    /// state on either store layout (zeroed slab range; unmapped +
+    /// released pages with the free list restored in order — see
+    /// [`KvStore::truncate_slot`]), so the store is indistinguishable
+    /// from one that never saw the rejected tokens.
+    pub fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("slot {slot} outside batch {}", self.batch);
+        }
+        self.kv.truncate_slot(slot, keep, written)
+    }
+
     /// Advance every item by one token: run all layers (each projection a
     /// pooled LUT-GEMV, attention over the slot's KV pane including the
     /// token just written) and leave per-item logits in
@@ -578,6 +735,23 @@ impl LutTransformer {
     /// Leaves one logits row per run (the run's last position) in
     /// [`logits`](Self::logits), in run order.
     pub fn step_runs(&mut self, runs: &[DecodeRun]) -> Result<()> {
+        self.forward(runs, false)
+    }
+
+    /// [`step_runs`](Self::step_runs) with a logits row for **every** fed
+    /// position, not just each run's last: logits row `i` is the
+    /// next-token distribution after consuming the i-th row (run order,
+    /// position order within a run), bit-identical to the row `step_runs`
+    /// would have produced had the run stopped at that position (row-wise
+    /// norm/quantize/GEMV are all independent per row). This is the
+    /// speculative-decode *verify* forward: one multi-row pass prices a
+    /// whole k-token draft at a single LUT build per weight chunk, and
+    /// per-position argmax over these rows decides the accepted prefix.
+    pub fn step_runs_all_logits(&mut self, runs: &[DecodeRun]) -> Result<()> {
+        self.forward(runs, true)
+    }
+
+    fn forward(&mut self, runs: &[DecodeRun], all_logits: bool) -> Result<()> {
         let h = self.spec.hidden;
         let mut rows = 0usize;
         for r in runs {
@@ -598,7 +772,7 @@ impl LutTransformer {
             }
             rows += r.tokens.len();
         }
-        self.logits.reset(runs.len(), self.spec.vocab);
+        self.logits.reset(if all_logits { rows } else { runs.len() }, self.spec.vocab);
         if runs.is_empty() {
             return Ok(());
         }
@@ -628,15 +802,23 @@ impl LutTransformer {
             self.ffn_block(l)?;
         }
 
-        // Output head: only each run's last row predicts a next token.
-        self.head_x.resize(runs.len() * h, 0.0);
-        let mut row = 0usize;
-        for (ri, r) in runs.iter().enumerate() {
-            row += r.tokens.len();
-            self.head_x[ri * h..(ri + 1) * h].copy_from_slice(&self.x[(row - 1) * h..row * h]);
+        if all_logits {
+            // Verify mode: the head runs at batch = rows — every fed
+            // position predicts, so a k-token draft is judged in one pass.
+            rmsnorm_rows(&self.x, &mut self.xn, h);
+            requantize_rows(&mut self.quant_h, &self.xn, h);
+        } else {
+            // Output head: only each run's last row predicts a next token.
+            self.head_x.resize(runs.len() * h, 0.0);
+            let mut row = 0usize;
+            for (ri, r) in runs.iter().enumerate() {
+                row += r.tokens.len();
+                self.head_x[ri * h..(ri + 1) * h]
+                    .copy_from_slice(&self.x[(row - 1) * h..row * h]);
+            }
+            rmsnorm_rows(&self.head_x, &mut self.xn, h);
+            requantize_rows(&mut self.quant_h, &self.xn, h);
         }
-        rmsnorm_rows(&self.head_x, &mut self.xn, h);
-        requantize_rows(&mut self.quant_h, &self.xn, h);
         self.staged.head +=
             self.head.gemv_batch_into(&self.quant_h, &self.pool, &mut self.logits)?;
         self.staged.steps += 1;

@@ -377,7 +377,10 @@ pub fn f16_bits_to_f32(h: u16) -> f32 {
 /// cached vector (the llama.cpp-style 8-bit KV the paper extends). Both
 /// the contiguous slab and the paged pool allocate their payload through
 /// this enum, so precision behaviour is identical by construction.
-#[derive(Debug, Clone)]
+/// `PartialEq` is part of the contract surface: the speculative-decode
+/// rollback tests compare whole stores bit-for-bit against a never-
+/// drafted twin.
+#[derive(Debug, Clone, PartialEq)]
 enum KvPayload {
     F16(Vec<u16>),
     Q8 { data: Vec<i8>, scales: Vec<f32> },
@@ -512,6 +515,16 @@ pub trait KvStore {
     /// Erase one slot's visible history (no KV leakage into the next
     /// admitted request — the batcher invariant).
     fn reset_slot(&mut self, slot: usize);
+    /// Roll back one slot's history tail: positions `keep .. written`
+    /// (previously written by this slot) return to the never-written
+    /// state, positions `< keep` stay untouched. This is the speculative-
+    /// decode rejection path — after a verify forward wrote `written`
+    /// positions and only `keep` of them were accepted, the store must be
+    /// indistinguishable from one that never saw the rejected tail
+    /// (pinned in `tests/speculative_decode.rs`, including free-list
+    /// order on the paged store). `keep > written` or a tail outside the
+    /// window is a typed error; `keep == written` is a no-op.
+    fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()>;
     /// Bytes of element payload allocated.
     fn data_bytes(&self) -> u64;
     /// Metadata bytes on top of the element payload (Q8 scales).
@@ -526,8 +539,10 @@ pub trait KvStore {
 /// contiguous `[max_context, kv_dim]` pane per (layer, slot) — the
 /// column-wise streaming unit of Fig 5. Memory scales with the worst
 /// case (`batch × max_context`) regardless of occupancy; the
-/// [`PagedKvCache`] is the usage-proportional alternative.
-#[derive(Debug, Clone)]
+/// [`PagedKvCache`] is the usage-proportional alternative. Two caches
+/// compare equal (`PartialEq`) iff every stored element and Q8 scale is
+/// bit-identical — the rollback tests' equality oracle.
+#[derive(Debug, Clone, PartialEq)]
 pub struct KvCache {
     spec: KvCacheSpec,
     layers: usize,
@@ -673,6 +688,34 @@ impl KvCache {
         }
     }
 
+    /// Roll back positions `keep .. written` of one slot to the
+    /// never-written state (zero elements; Q8 scales back to their fresh
+    /// 1.0), leaving positions `< keep` untouched. On the slab "written"
+    /// carries no allocation state, so the rolled-back pane is literally
+    /// bit-identical to one that never saw the rejected tail.
+    pub fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("truncate of slot {slot} outside batch {}", self.batch);
+        }
+        if keep > written || written > self.max_context {
+            bail!(
+                "invalid truncate range keep {keep} .. written {written} \
+                 (window {})",
+                self.max_context
+            );
+        }
+        if keep == written {
+            return Ok(());
+        }
+        let elems = (written - keep) * self.kv_dim;
+        for layer in 0..self.layers {
+            let base = self.base(layer, slot, keep);
+            self.k.reset_range(base, elems, self.kv_dim);
+            self.v.reset_range(base, elems, self.kv_dim);
+        }
+        Ok(())
+    }
+
     /// Bytes of element payload actually allocated — by construction equal
     /// to [`KvCacheSpec::batch_bytes`] at `max_context` for the matching
     /// [`ModelConfig`] (pinned by tests): 2 (K and V) × layers × kv_dim ×
@@ -717,6 +760,9 @@ impl KvStore for KvCache {
     }
     fn reset_slot(&mut self, slot: usize) {
         KvCache::reset_slot(self, slot)
+    }
+    fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        KvCache::truncate_slot(self, slot, keep, written)
     }
     fn data_bytes(&self) -> u64 {
         KvCache::data_bytes(self)
@@ -869,6 +915,13 @@ impl PagedKvCache {
         &self.tables[slot]
     }
 
+    /// The free list, in pop order from the **back** (tests and invariant
+    /// checks — the rollback tests assert a truncated slot restores the
+    /// free list exactly, not just its length).
+    pub fn free_pages(&self) -> &[u32] {
+        &self.free
+    }
+
     /// Actual page-table bytes currently mapped (the worst case is
     /// budgeted by [`KvCacheSpec::paged_seq_bytes`]).
     pub fn table_bytes(&self) -> u64 {
@@ -1003,6 +1056,52 @@ impl PagedKvCache {
         }
         Ok(())
     }
+
+    /// Roll back positions `keep .. written` of one slot: whole pages
+    /// past `ceil(keep / page_tokens)` are unmapped and released in
+    /// **reverse allocation order** — `alloc_page` pops the free list's
+    /// tail and `release` pushes it, so reverse-order release restores
+    /// the free list bit-exactly, and a later never-drafted run allocates
+    /// the very same page ids. The kept boundary page's rejected tail is
+    /// re-zeroed across all layers (K, V, and Q8 scales), matching the
+    /// fresh-allocation state byte-for-byte. A *shared* boundary page
+    /// (refcount > 1) is left untouched: sharing means this slot never
+    /// wrote into it — any speculative write would have COWed it private
+    /// first — so there is no tail to erase.
+    pub fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        if slot >= self.batch {
+            bail!("truncate of slot {slot} outside batch {}", self.batch);
+        }
+        if keep > written || written > self.max_context {
+            bail!(
+                "invalid truncate range keep {keep} .. written {written} \
+                 (window {})",
+                self.max_context
+            );
+        }
+        if keep == written {
+            return Ok(());
+        }
+        let keep_pages = keep.div_ceil(self.page_tokens);
+        while self.tables[slot].len() > keep_pages {
+            let p = self.tables[slot].pop().expect("len > keep_pages implies non-empty");
+            self.drop_slot_ref(p);
+            self.release(p);
+        }
+        let off = keep % self.page_tokens;
+        if off != 0 && self.tables[slot].len() == keep_pages {
+            let page = self.tables[slot][keep_pages - 1];
+            if self.refcount[page as usize] == 1 {
+                let elems = (self.page_tokens - off) * self.kv_dim;
+                for layer in 0..self.layers {
+                    let base = self.page_base(page, layer, off);
+                    self.k.reset_range(base, elems, self.kv_dim);
+                    self.v.reset_range(base, elems, self.kv_dim);
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 impl KvStore for PagedKvCache {
@@ -1064,6 +1163,10 @@ impl KvStore for PagedKvCache {
             self.drop_slot_ref(p);
             self.release(p);
         }
+    }
+
+    fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        PagedKvCache::truncate_slot(self, slot, keep, written)
     }
 
     fn data_bytes(&self) -> u64 {
@@ -1140,6 +1243,15 @@ impl KvBackend {
         match self {
             KvBackend::Contiguous(_) => None,
             KvBackend::Paged { store, .. } => Some(store),
+        }
+    }
+
+    /// The contiguous slab, when that is what this backend runs (the
+    /// rollback tests compare whole slabs bit-for-bit).
+    pub fn contiguous(&self) -> Option<&KvCache> {
+        match self {
+            KvBackend::Contiguous(c) => Some(c),
+            KvBackend::Paged { .. } => None,
         }
     }
 
@@ -1316,6 +1428,13 @@ impl KvStore for KvBackend {
         match self {
             KvBackend::Contiguous(c) => c.reset_slot(slot),
             KvBackend::Paged { store, .. } => KvStore::reset_slot(store, slot),
+        }
+    }
+
+    fn truncate_slot(&mut self, slot: usize, keep: usize, written: usize) -> Result<()> {
+        match self {
+            KvBackend::Contiguous(c) => c.truncate_slot(slot, keep, written),
+            KvBackend::Paged { store, .. } => store.truncate_slot(slot, keep, written),
         }
     }
 

@@ -24,7 +24,8 @@ pub mod kv;
 pub mod prefix;
 
 pub use decode::{
-    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, LayerGemvStats, LayerSpec, LutTransformer,
+    DecodeItem, DecodeRun, DecodeSpec, DecodeStats, DraftSpec, FloatWeights, LayerGemvStats,
+    LayerSpec, LutTransformer,
 };
 pub use kv::{
     kv_layout_from_env, parse_kv_layout, KvAccountingError, KvBackend, KvCache, KvCacheSpec,

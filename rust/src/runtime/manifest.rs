@@ -13,7 +13,7 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use super::topology::NumaPolicy;
-use crate::model::{DecodeSpec, KvCacheSpec, KvLayout, KvRuntimeConfig, LayerSpec};
+use crate::model::{DecodeSpec, DraftSpec, KvCacheSpec, KvLayout, KvRuntimeConfig, LayerSpec};
 use crate::quant::QuantLevel;
 use crate::util::json::Json;
 
@@ -69,6 +69,19 @@ pub struct ManifestConfig {
     /// field, boolean); absent ⇒ enabled. Ignored on the contiguous
     /// store.
     pub prefix_cache: bool,
+    /// Speculative-decoding draft length (`spec_draft_k` field, ≥ 1);
+    /// absent ⇒ serve without speculation. Speculation is bit-invisible
+    /// in the token streams — a throughput knob, never a correctness
+    /// one. The `SAIL_SPEC` env override wins at serve time.
+    pub spec_draft_k: Option<usize>,
+    /// Draft weight-precision cap in bits (`spec_draft_bits` field, one
+    /// of 2/3/4/5/6/8); absent ⇒ the target's own per-layer levels. Only
+    /// meaningful with `spec_draft_k`.
+    pub spec_draft_bits: Option<QuantLevel>,
+    /// Draft decoder-stack depth (`spec_draft_layers` field, ≥ 1);
+    /// absent ⇒ the target's full stack. Only meaningful with
+    /// `spec_draft_k`.
+    pub spec_draft_layers: Option<usize>,
 }
 
 /// Parsed manifest.
@@ -187,6 +200,32 @@ impl Manifest {
             Some(Json::Bool(b)) => *b,
             Some(_) => bail!("manifest prefix_cache must be a boolean"),
         };
+        // Speculative-decoding fields, same strictness: absent ⇒ no
+        // speculation, a present-but-malformed value is a load error
+        // (silently dropping it would serve without the speedup the
+        // artifact asked for, or with a different draft than the one it
+        // was validated with).
+        let spec_draft_k = match cfg.get("spec_draft_k") {
+            None => None,
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => Some(n),
+                _ => bail!("manifest spec_draft_k must be an integer ≥ 1"),
+            },
+        };
+        let spec_draft_bits = match cfg.get("spec_draft_bits") {
+            None => None,
+            Some(v) => match v.as_usize().and_then(|b| QuantLevel::parse(&b.to_string())) {
+                Some(level) => Some(level),
+                None => bail!("manifest spec_draft_bits must be one of 2/3/4/5/6/8"),
+            },
+        };
+        let spec_draft_layers = match cfg.get("spec_draft_layers") {
+            None => None,
+            Some(v) => match v.as_usize() {
+                Some(n) if n >= 1 => Some(n),
+                _ => bail!("manifest spec_draft_layers must be an integer ≥ 1"),
+            },
+        };
         Ok(Manifest {
             dir: dir.to_path_buf(),
             config: ManifestConfig {
@@ -208,6 +247,9 @@ impl Manifest {
                 kv_page_tokens,
                 kv_pages_budget,
                 prefix_cache,
+                spec_draft_k,
+                spec_draft_bits,
+                spec_draft_layers,
             },
             batch: j
                 .get("batch")
@@ -236,6 +278,17 @@ impl Manifest {
             prefix_cache: c.prefix_cache,
             pages_budget: c.kv_pages_budget,
         }
+    }
+
+    /// The speculative-decoding setup this artifact asks to be served
+    /// with: `Some((k, draft))` when `spec_draft_k` is present; the
+    /// [`DraftSpec`] carries the optional bits/layers reduction. The
+    /// `SAIL_SPEC` environment override (read by the serving CLI, not
+    /// here) replaces it.
+    pub fn spec_draft(&self) -> Option<(usize, DraftSpec)> {
+        let c = &self.config;
+        c.spec_draft_k
+            .map(|k| (k, DraftSpec { bits: c.spec_draft_bits, layers: c.spec_draft_layers }))
     }
 
     /// KV-cache shape for a given batch: [L, 2, B, CTX, H].
@@ -267,6 +320,7 @@ impl Manifest {
     ///         prefill_chunk: 16,
     ///         slo_ttft: None, slo_tpot: None,
     ///         kv_page_tokens: None, kv_pages_budget: None, prefix_cache: true,
+    ///         spec_draft_k: None, spec_draft_bits: None, spec_draft_layers: None,
     ///     },
     ///     batch: 2,
     ///     weight_order: vec![],
@@ -367,6 +421,9 @@ mod tests {
             kv_page_tokens: None,
             kv_pages_budget: None,
             prefix_cache: true,
+            spec_draft_k: None,
+            spec_draft_bits: None,
+            spec_draft_layers: None,
         }
     }
 
@@ -573,6 +630,51 @@ mod tests {
                 None => assert!(
                     Manifest::load(&dir).is_err(),
                     "malformed KV field {field} must not fall back to a default layout"
+                ),
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_spec_draft_fields_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sail-manifest-spec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = r#"{
+            "config": {"hidden": 64, "layers": 2, "heads": 4, "ffn": 128,
+                       "vocab": 256, "max_context": 32, "wbits": 4,
+                       "group": 16, "params": 100000SPEC},
+            "batch": 2,
+            "weight_order": ["embed", "l0", "l1", "head"]
+        }"#;
+        type Want = Option<Option<(usize, Option<u32>, Option<usize>)>>;
+        let cases: [(&str, Want); 8] = [
+            ("", Some(None)), // absent ⇒ plain decode
+            (r#", "spec_draft_k": 4"#, Some(Some((4, None, None)))),
+            (
+                r#", "spec_draft_k": 2, "spec_draft_bits": 2, "spec_draft_layers": 1"#,
+                Some(Some((2, Some(2), Some(1)))),
+            ),
+            // bits/layers without k parse, but spec_draft() stays None.
+            (r#", "spec_draft_bits": 8"#, Some(None)),
+            (r#", "spec_draft_k": 0"#, None),
+            (r#", "spec_draft_k": "fast""#, None),
+            (r#", "spec_draft_k": 2, "spec_draft_bits": 7"#, None),
+            (r#", "spec_draft_k": 2, "spec_draft_layers": 0"#, None),
+        ];
+        for (field, want) in cases {
+            std::fs::write(dir.join("manifest.json"), base.replace("SPEC", field)).unwrap();
+            match want {
+                Some(draft) => {
+                    let m = Manifest::load(&dir).unwrap();
+                    let got = m
+                        .spec_draft()
+                        .map(|(k, d)| (k, d.bits.map(|b| b.bits()), d.layers));
+                    assert_eq!(got, draft, "{field}");
+                }
+                None => assert!(
+                    Manifest::load(&dir).is_err(),
+                    "malformed spec field {field} must not fall back to plain decode"
                 ),
             }
         }

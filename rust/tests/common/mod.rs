@@ -1,0 +1,104 @@
+//! Shared builders for the integration suites.
+//!
+//! Every conformance suite in `tests/` compares engines against each
+//! other ("bit-identical across widths/placements/layouts/specs"), so
+//! the weights, seed, and workload shapes must be *literally* the same
+//! on both sides of each comparison. Centralising the builders here
+//! keeps that literal: two engines built by the same function from the
+//! same spec are the same model, whatever suite asked for them.
+//!
+//! Each suite compiles its own copy of this module (`mod common;`) and
+//! uses a subset of it, hence the file-level `dead_code` allowance.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use sail::coordinator::{Request, SpecConfig, SpeculativeEngine, TransformerServeEngine};
+use sail::model::{DecodeSpec, KvCacheSpec, KvRuntimeConfig};
+use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, WorkerPool};
+
+/// The one weight seed the suites share. Engines built from the same
+/// spec with this seed are bit-for-bit the same model.
+pub const SEED: u64 = 9;
+
+/// The suites' model shape: `layers` decoder layers at mixed per-layer
+/// precision (Q8/Q4/Q6 cycle), hidden 32, GQA (4 query heads over 2 KV
+/// heads), 24-token context.
+pub fn tiny_spec(layers: usize, kv: KvCacheSpec) -> DecodeSpec {
+    DecodeSpec::tiny(layers, kv)
+}
+
+/// Seeded engine on a shared serial/threaded pool, contiguous-or-env KV.
+pub fn engine(spec: DecodeSpec, batch: usize, width: usize) -> TransformerServeEngine {
+    TransformerServeEngine::random(spec, SEED, batch, WorkerPool::shared(width)).unwrap()
+}
+
+/// Seeded engine on a freshly placed pool (NUMA policy applied).
+pub fn engine_placed(
+    spec: DecodeSpec,
+    batch: usize,
+    width: usize,
+    policy: &NumaPolicy,
+) -> TransformerServeEngine {
+    let pool = Arc::new(WorkerPool::with_policy(width, policy));
+    TransformerServeEngine::random(spec, SEED, batch, pool).unwrap()
+}
+
+/// Seeded engine over an explicit pool and KV runtime configuration
+/// (the paged/contiguous comparisons build both sides through this).
+pub fn engine_with_kv(
+    spec: DecodeSpec,
+    batch: usize,
+    pool: Arc<WorkerPool>,
+    kv: KvRuntimeConfig,
+) -> TransformerServeEngine {
+    TransformerServeEngine::random_with_kv(spec, SEED, batch, pool, kv).unwrap()
+}
+
+/// Seeded self-speculative engine over the *same* weight stream as
+/// [`engine_with_kv`]: the target is bit-for-bit the plain engine, the
+/// draft is derived from the shared float weights per `cfg.draft`.
+pub fn spec_engine_with_kv(
+    spec: DecodeSpec,
+    batch: usize,
+    pool: Arc<WorkerPool>,
+    kv: KvRuntimeConfig,
+    cfg: SpecConfig,
+) -> SpeculativeEngine {
+    SpeculativeEngine::random_with_kv(spec, SEED, batch, pool, kv, cfg).unwrap()
+}
+
+/// The canonical mixed workload: six requests, prompt lengths 1–3,
+/// budgets 4–6 — enough to cycle a 3-slot batcher through admission,
+/// decode, and refill at least twice. With `with_ttft`, odd ids carry a
+/// generous (1 h) TTFT deadline: against a huge SLO target their
+/// headroom always reads "urgent", so urgency steering and preemption
+/// genuinely fire, while the deadline itself can never expire in-test.
+pub fn mixed_requests(with_ttft: bool) -> Vec<Request> {
+    (0..6u64)
+        .map(|id| {
+            let plen = 1 + (id as usize % 3);
+            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
+            let r = Request::new(id, prompt, 4 + id as usize % 3);
+            if with_ttft && id % 2 == 1 {
+                r.with_ttft_deadline(std::time::Duration::from_secs(3600))
+            } else {
+                r
+            }
+        })
+        .collect()
+}
+
+/// Pool-level faults only (worker death, slow tiles, scratch
+/// poisoning): the kinds that heal in-pool with a bit-identical result,
+/// so an armed plan must leave every stream untouched. KV faults are
+/// deliberately absent — those surface as typed `EngineFault` finishes
+/// and belong to `tests/fault_injection.rs`.
+pub fn healing_plan(seed: u64) -> Arc<FaultPlan> {
+    Arc::new(
+        FaultPlan::new(seed)
+            .with_seeded(FaultKind::WorkerPanic, 6, 0)
+            .with_seeded(FaultKind::SlowTile, 8, 0)
+            .with_seeded(FaultKind::PoisonScratch, 8, 0),
+    )
+}

@@ -16,43 +16,30 @@
 //!   the cache would catch with a panic), and empty prompts are answered
 //!   without taking the server worker down.
 
+mod common;
+
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use sail::coordinator::{
     Batcher, BatcherConfig, FinishReason, Request, Server, TransformerServeEngine,
 };
 use sail::model::{DecodeSpec, KvCacheSpec, KvLayout};
-use sail::runtime::{NumaPolicy, WorkerPool};
+use sail::runtime::NumaPolicy;
+
+use common::{engine_placed, mixed_requests};
 
 /// 3 decoder layers at mixed per-layer precision (Q8/Q4/Q6), hidden 32,
 /// GQA (4 query heads over 2 KV heads), 24-token context.
 fn spec(kv: KvCacheSpec) -> DecodeSpec {
-    DecodeSpec::tiny(3, kv)
+    common::tiny_spec(3, kv)
 }
 
 fn engine(kv: KvCacheSpec, batch: usize, width: usize) -> TransformerServeEngine {
-    TransformerServeEngine::random(spec(kv), 9, batch, WorkerPool::shared(width)).unwrap()
-}
-
-fn engine_placed(
-    kv: KvCacheSpec,
-    batch: usize,
-    width: usize,
-    policy: &NumaPolicy,
-) -> TransformerServeEngine {
-    let pool = Arc::new(WorkerPool::with_policy(width, policy));
-    TransformerServeEngine::random(spec(kv), 9, batch, pool).unwrap()
+    common::engine(spec(kv), batch, width)
 }
 
 fn requests() -> Vec<Request> {
-    (0..6u64)
-        .map(|id| {
-            let plen = 1 + (id as usize % 3);
-            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
-            Request::new(id, prompt, 4 + id as usize % 3)
-        })
-        .collect()
+    mixed_requests(false)
 }
 
 fn run_tokens(
@@ -96,7 +83,7 @@ fn token_streams_bit_identical_across_numa_placements() {
     for kv in [KvCacheSpec::fp16(), KvCacheSpec::q8()] {
         let run = |policy: &NumaPolicy, width: usize| {
             let mut b =
-                Batcher::new(engine_placed(kv, 3, width, policy), BatcherConfig::default());
+                Batcher::new(engine_placed(spec(kv), 3, width, policy), BatcherConfig::default());
             for r in &reqs {
                 b.submit(r.clone());
             }

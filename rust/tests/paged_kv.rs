@@ -20,17 +20,21 @@
 //!   context window still leaves one feedable position for an over-long
 //!   prompt, which finishes `ContextFull` exactly like a cold run.
 
+mod common;
+
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use sail::coordinator::{Batcher, BatcherConfig, FinishReason, Request, TransformerServeEngine};
+use sail::coordinator::{Batcher, BatcherConfig, FinishReason, Request};
 use sail::model::{DecodeItem, DecodeSpec, DecodeStats, KvCacheSpec, KvRuntimeConfig, LutTransformer};
 use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, WorkerPool};
+
+use common::engine_with_kv;
 
 const PAGE_TOKENS: usize = 4;
 
 fn spec() -> DecodeSpec {
-    DecodeSpec::tiny(2, KvCacheSpec::q8())
+    common::tiny_spec(2, KvCacheSpec::q8())
 }
 
 /// The shared 8-token system prompt: exactly two whole pages at the
@@ -72,8 +76,7 @@ fn serve(
     if let Some(p) = &plan {
         pool.arm_faults(Arc::clone(p));
     }
-    let engine =
-        TransformerServeEngine::random_with_kv(spec(), 9, 3, Arc::clone(&pool), kv).unwrap();
+    let engine = engine_with_kv(spec(), 3, Arc::clone(&pool), kv);
     let mut b =
         Batcher::new(engine, BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() });
     for r in requests() {
@@ -88,12 +91,7 @@ fn serve(
 /// the kinds that must heal bit-identically. No KV faults — every
 /// request finishes clean under this plan.
 fn healing_plan() -> Arc<FaultPlan> {
-    Arc::new(
-        FaultPlan::new(4242)
-            .with_seeded(FaultKind::WorkerPanic, 6, 0)
-            .with_seeded(FaultKind::SlowTile, 8, 0)
-            .with_seeded(FaultKind::PoisonScratch, 8, 0),
-    )
+    common::healing_plan(4242)
 }
 
 fn total_luts(s: &DecodeStats) -> u64 {
@@ -149,14 +147,7 @@ fn shared_prefix_admission_matches_cold_prefill() {
     b_prompt.extend([40, 41, 42]);
     let warm = {
         let pool = WorkerPool::shared(2);
-        let engine = TransformerServeEngine::random_with_kv(
-            spec(),
-            9,
-            2,
-            pool,
-            KvRuntimeConfig::paged(PAGE_TOKENS),
-        )
-        .unwrap();
+        let engine = engine_with_kv(spec(), 2, pool, KvRuntimeConfig::paged(PAGE_TOKENS));
         let mut b = Batcher::new(engine, BatcherConfig::default());
         b.submit(Request::new(0, head(), 4));
         b.run_to_completion().unwrap();
@@ -168,14 +159,7 @@ fn shared_prefix_admission_matches_cold_prefill() {
     };
     let cold = {
         let pool = WorkerPool::shared(2);
-        let engine = TransformerServeEngine::random_with_kv(
-            spec(),
-            9,
-            2,
-            pool,
-            KvRuntimeConfig::paged(PAGE_TOKENS),
-        )
-        .unwrap();
+        let engine = engine_with_kv(spec(), 2, pool, KvRuntimeConfig::paged(PAGE_TOKENS));
         let mut b = Batcher::new(engine, BatcherConfig::default());
         b.submit(Request::new(1, b_prompt, 5));
         collect(b.run_to_completion().unwrap())
@@ -193,14 +177,7 @@ fn prefix_hit_admission_builds_no_luts_for_the_shared_span() {
     // constant number of LUT builds, so the second run's build count
     // must drop in exact proportion to the tokens it skipped.
     let pool = WorkerPool::shared(1);
-    let engine = TransformerServeEngine::random_with_kv(
-        spec(),
-        9,
-        1,
-        pool,
-        KvRuntimeConfig::paged(PAGE_TOKENS),
-    )
-    .unwrap();
+    let engine = engine_with_kv(spec(), 1, pool, KvRuntimeConfig::paged(PAGE_TOKENS));
     let mut b =
         Batcher::new(engine, BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() });
 
@@ -246,7 +223,7 @@ fn cow_faults_leave_the_shared_original_untouched_and_refcounts_balance() {
             let pool = WorkerPool::shared(2);
             let mut m = LutTransformer::random_with_kv(
                 spec(),
-                9,
+                common::SEED,
                 2,
                 Arc::clone(&pool),
                 KvRuntimeConfig::paged(PAGE_TOKENS),
@@ -307,14 +284,8 @@ fn serving_cow_fault_finishes_typed_and_survivors_match_the_oracle() {
     };
     let run = |plan: Option<Arc<FaultPlan>>| {
         let pool = Arc::new(WorkerPool::shared(2));
-        let engine = TransformerServeEngine::random_with_kv(
-            spec(),
-            9,
-            2,
-            Arc::clone(&pool),
-            KvRuntimeConfig::paged(PAGE_TOKENS),
-        )
-        .unwrap();
+        let engine =
+            engine_with_kv(spec(), 2, Arc::clone(&pool), KvRuntimeConfig::paged(PAGE_TOKENS));
         let mut b =
             Batcher::new(engine, BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() });
         // Round 1: A caches the head pages.
@@ -363,14 +334,7 @@ fn full_window_cached_prefix_on_an_overlong_prompt_stays_context_full() {
     overlong.extend([81, 82, 83, 84]);
     let run = |warm: bool| {
         let pool = WorkerPool::shared(2);
-        let engine = TransformerServeEngine::random_with_kv(
-            spec(),
-            9,
-            1,
-            pool,
-            KvRuntimeConfig::paged(PAGE_TOKENS),
-        )
-        .unwrap();
+        let engine = engine_with_kv(spec(), 1, pool, KvRuntimeConfig::paged(PAGE_TOKENS));
         let mut b = Batcher::new(engine, BatcherConfig::default());
         if warm {
             b.submit(Request::new(0, full.clone(), 3));

@@ -16,18 +16,19 @@
 //! - the amortization is real: layer LUT builds fall exactly 1/C with
 //!   chunk size C (LUT builds per GEMV call don't depend on rows).
 
+mod common;
+
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use sail::coordinator::{
     Batcher, BatcherConfig, FinishReason, MockEngine, Request, TransformerServeEngine,
 };
 use sail::model::{DecodeSpec, KvCacheSpec};
-use sail::runtime::{NumaPolicy, WorkerPool};
+use sail::runtime::NumaPolicy;
 
 /// 2 decoder layers at mixed precision, hidden 32, GQA, 24-token window.
 fn spec(kv: KvCacheSpec) -> DecodeSpec {
-    DecodeSpec::tiny(2, kv)
+    common::tiny_spec(2, kv)
 }
 
 fn engine(
@@ -36,8 +37,7 @@ fn engine(
     width: usize,
     policy: &NumaPolicy,
 ) -> TransformerServeEngine {
-    let pool = Arc::new(WorkerPool::with_policy(width, policy));
-    TransformerServeEngine::random(spec(kv), 9, batch, pool).unwrap()
+    common::engine_placed(spec(kv), batch, width, policy)
 }
 
 fn config(chunk: usize, rows: usize) -> BatcherConfig {

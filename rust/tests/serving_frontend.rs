@@ -13,61 +13,31 @@
 //! three offered-load points, persisting the latency/goodput artifact to
 //! `BENCH_serving.json` (schema in EXPERIMENTS.md).
 
+mod common;
+
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 use std::time::Duration;
 
 use sail::coordinator::{
-    workload, ArrivalProcess, Batcher, BatcherConfig, FinishReason, MockEngine, Request,
-    RequestId, ServingConfig, ServingFrontend, SloPolicy, TransformerServeEngine, WorkloadSpec,
+    workload, ArrivalProcess, Batcher, BatcherConfig, FinishReason, MockEngine, RequestId,
+    ServingConfig, ServingFrontend, SloPolicy, TransformerServeEngine, WorkloadSpec,
 };
 use sail::model::{DecodeSpec, KvCacheSpec};
-use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, WorkerPool};
+use sail::runtime::{NumaPolicy, WorkerPool};
 use sail::util::json::Json;
 
+use common::{healing_plan, mixed_requests as requests};
+
 fn spec() -> DecodeSpec {
-    DecodeSpec::tiny(2, KvCacheSpec::q8())
-}
-
-/// Six requests with mixed prompt lengths and budgets — enough to cycle a
-/// 3-slot batcher through admission, decode, and refill at least twice.
-/// Odd ids optionally carry a *generous* TTFT deadline (an hour): with
-/// the SLO test's huge TTFT target their headroom always reads "urgent",
-/// so the row-budget urgency path and preemption genuinely fire, while
-/// the deadline itself can never expire inside a test run.
-fn requests(with_ttft: bool) -> Vec<Request> {
-    (0..6u64)
-        .map(|id| {
-            let plen = 1 + (id as usize % 3);
-            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
-            let r = Request::new(id, prompt, 4 + id as usize % 3);
-            if with_ttft && id % 2 == 1 {
-                r.with_ttft_deadline(Duration::from_secs(3600))
-            } else {
-                r
-            }
-        })
-        .collect()
-}
-
-/// Pool-level faults only (worker death, slow tiles, scratch poisoning) —
-/// every one heals in-pool with a bit-identical result, so an armed plan
-/// must leave all streams untouched. KV faults are deliberately absent:
-/// those surface as typed `EngineFault` finishes and belong to
-/// `tests/fault_injection.rs`.
-fn healing_plan(seed: u64) -> Arc<FaultPlan> {
-    Arc::new(
-        FaultPlan::new(seed)
-            .with_seeded(FaultKind::WorkerPanic, 6, 0)
-            .with_seeded(FaultKind::SlowTile, 8, 0)
-            .with_seeded(FaultKind::PoisonScratch, 8, 0),
-    )
+    common::tiny_spec(2, KvCacheSpec::q8())
 }
 
 /// The offline oracle: the same requests through `run_to_completion` on a
 /// serial fault-free pool at prefill chunk 1.
 fn oracle() -> HashMap<RequestId, (Vec<i32>, FinishReason)> {
-    let engine = TransformerServeEngine::random(spec(), 9, 3, WorkerPool::shared(1)).unwrap();
+    let engine =
+        TransformerServeEngine::random(spec(), common::SEED, 3, WorkerPool::shared(1)).unwrap();
     let cfg = BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() };
     let mut b = Batcher::new(engine, cfg);
     for r in requests(false) {
@@ -98,7 +68,7 @@ fn streams_bit_identical_across_widths_placements_chunks_and_faults() {
                         pool.arm_faults(Arc::clone(&plan));
                     }
                     let engine =
-                        TransformerServeEngine::random(spec(), 9, 3, Arc::clone(&pool))
+                        TransformerServeEngine::random(spec(), common::SEED, 3, Arc::clone(&pool))
                             .unwrap();
                     // Aggressive SLO: the 1 µs TPOT target forces a
                     // retune every iteration, and the odd requests' 1 h

@@ -1,0 +1,482 @@
+//! Acceptance-equivalence harness for self-speculative decoding on the
+//! LUT serving path (the PR-9 tentpole).
+//!
+//! The property under test: **speculation changes latency, never
+//! tokens**. Every emitted token is a target argmax computed over an
+//! exactly-plain cache prefix, so the speculative streams must be
+//! bit-identical to plain decode for *any* draft — fewer bits, fewer
+//! layers, even an adversarial always-wrong draft — across the full
+//! serving matrix (prefill chunk × pool width × NUMA × KV layout ×
+//! healing faults). On top of stream identity:
+//!
+//! - the engine's round/buffer accounting matches a reference oracle
+//!   exactly for always-right and always-wrong drafts, and satisfies
+//!   the structural conservation laws for any draft;
+//! - KV rollback is total: after rejecting j of k draft tokens the
+//!   cache is indistinguishable from a never-drafted run — contiguous
+//!   bytes compare equal, and on the paged store the page tables,
+//!   refcounts, free-list *order*, and dequantized contents all match,
+//!   including pages shared copy-on-write through the prefix cache.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use sail::coordinator::{
+    spec_config_from_env, Batcher, BatcherConfig, DecodeEngine, FinishReason, SlotRun, SpecConfig,
+    SpecStats, SpeculativeEngine, TransformerServeEngine,
+};
+use sail::model::{DecodeSpec, DraftSpec, KvCacheSpec, KvRuntimeConfig, KvStore, LutTransformer};
+use sail::quant::QuantLevel;
+use sail::runtime::{FaultPlan, NumaPolicy, WorkerPool};
+
+fn spec() -> DecodeSpec {
+    common::tiny_spec(2, KvCacheSpec::q8())
+}
+
+fn draft(bits: Option<QuantLevel>, layers: Option<usize>) -> DraftSpec {
+    DraftSpec { bits, layers }
+}
+
+fn sabotage_cfg(k: usize) -> SpecConfig {
+    SpecConfig { k, draft: draft(None, None), sabotage: true }
+}
+
+/// A genuinely reduced draft (2-bit weights) that accepts some rounds
+/// and rejects others — the partial-rollback workhorse.
+fn q2_cfg(k: usize) -> SpecConfig {
+    SpecConfig { k, draft: draft(Some(QuantLevel::Q2), None), sabotage: false }
+}
+
+/// One multi-token prefill run, then `n` single-token decode feeds each
+/// consuming the previous output — autoregressive serving without a
+/// batcher, so the engine's round/buffer accounting is exactly
+/// predictable by [`oracle_stats`].
+fn drive(e: &mut dyn DecodeEngine, slot: usize, prompt: &[i32], n: usize) -> Vec<i32> {
+    let b = e.batch();
+    let mut out = Vec::with_capacity(n + 1);
+    out.push(e.step_runs(&[SlotRun { slot, tokens: prompt, start_pos: 0 }]).unwrap()[0]);
+    for i in 0..n {
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut active = vec![false; b];
+        tokens[slot] = *out.last().unwrap();
+        positions[slot] = (prompt.len() + i) as i32;
+        active[slot] = true;
+        out.push(e.step(&tokens, &positions, &active).unwrap()[slot]);
+    }
+    out
+}
+
+/// The reference accounting oracle: simulate the round/buffer protocol
+/// for a draft that is always right (`hit`) or always wrong. Each feed
+/// is served from the accepted buffer, or falls back to a plain step
+/// when the window leaves no room to draft, or opens a fresh round of
+/// `min(k, window)` drafted tokens.
+fn oracle_stats(k: usize, prompt_len: usize, n: usize, ctx: usize, hit: bool) -> SpecStats {
+    let mut st = SpecStats::default();
+    let mut pending = 0usize;
+    for i in 0..n {
+        let pos = prompt_len + i;
+        if pending > 0 {
+            pending -= 1;
+            st.buffered += 1;
+            continue;
+        }
+        let k_plan = k.min(ctx - pos - 1);
+        if k_plan == 0 {
+            st.fallback_steps += 1;
+            continue;
+        }
+        st.rounds += 1;
+        st.drafted += k_plan as u64;
+        if hit {
+            st.accepted += k_plan as u64;
+            pending = k_plan;
+        }
+    }
+    st
+}
+
+/// Serve [`common::mixed_requests`] to completion through the batcher:
+/// plain decode when `cfg` is `None`, speculative otherwise.
+fn serve(
+    paged: Option<usize>,
+    width: usize,
+    chunk: usize,
+    policy: &NumaPolicy,
+    plan: Option<Arc<FaultPlan>>,
+    cfg: Option<SpecConfig>,
+) -> BTreeMap<u64, (Vec<i32>, FinishReason)> {
+    let kv = match paged {
+        Some(pt) => KvRuntimeConfig::paged(pt),
+        None => KvRuntimeConfig::contiguous(),
+    };
+    let pool = Arc::new(WorkerPool::with_policy(width, policy));
+    if let Some(p) = &plan {
+        pool.arm_faults(Arc::clone(p));
+    }
+    let bcfg = BatcherConfig { prefill_chunk: chunk, ..BatcherConfig::default() };
+    let done = match cfg {
+        Some(sc) => {
+            let e = common::spec_engine_with_kv(spec(), 3, Arc::clone(&pool), kv, sc);
+            let mut b = Batcher::new(e, bcfg);
+            for r in common::mixed_requests(false) {
+                b.submit(r);
+            }
+            b.run_to_completion().unwrap()
+        }
+        None => {
+            let e = common::engine_with_kv(spec(), 3, Arc::clone(&pool), kv);
+            let mut b = Batcher::new(e, bcfg);
+            for r in common::mixed_requests(false) {
+                b.submit(r);
+            }
+            b.run_to_completion().unwrap()
+        }
+    };
+    pool.disarm_faults();
+    done.into_iter().map(|r| (r.id, (r.tokens, r.finish))).collect()
+}
+
+/// Snapshot of the paged store's bookkeeping that a total rollback must
+/// restore bit-exactly: per-slot page tables, their refcounts, the
+/// free-list *order* (the LIFO release discipline), and the in-use
+/// count. Peak/COW counters are deliberately absent — they are
+/// observability, and speculation legitimately moves them.
+#[allow(clippy::type_complexity)]
+fn paged_state(m: &LutTransformer) -> (Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<u32>, usize) {
+    let p = m.kv().paged().unwrap();
+    let tables: Vec<Vec<u32>> = (0..m.batch()).map(|s| p.table(s).to_vec()).collect();
+    let refcounts =
+        tables.iter().map(|t| t.iter().map(|&pg| p.refcount(pg)).collect()).collect();
+    (tables, refcounts, p.free_pages().to_vec(), p.pages_in_use())
+}
+
+/// Dequantized K/V contents of one slot's first `positions` positions,
+/// every layer.
+fn kv_contents(m: &LutTransformer, slot: usize, positions: usize) -> Vec<f32> {
+    let kv = m.kv();
+    let mut buf = vec![0.0f32; kv.kv_dim()];
+    let mut out = Vec::new();
+    for layer in 0..m.spec().layers() {
+        for pos in 0..positions {
+            kv.read_k(layer, slot, pos, &mut buf);
+            out.extend_from_slice(&buf);
+            kv.read_v(layer, slot, pos, &mut buf);
+            out.extend_from_slice(&buf);
+        }
+    }
+    out
+}
+
+#[test]
+fn speculative_streams_bit_identical_across_the_serving_matrix() {
+    // One plain contiguous serial oracle; every speculative cell of the
+    // acceptance matrix must reproduce its streams bit-for-bit.
+    let want = serve(None, 1, 1, &NumaPolicy::Off, None, None);
+    assert!(want.values().all(|(t, f)| !t.is_empty() && *f == FinishReason::MaxTokens));
+    for paged in [None, Some(16usize)] {
+        for chunk in [1usize, 16] {
+            for width in [1usize, 2, 8] {
+                for policy in [NumaPolicy::Off, NumaPolicy::Auto] {
+                    for faults in [false, true] {
+                        let plan = faults.then(|| common::healing_plan(4242));
+                        let got =
+                            serve(paged, width, chunk, &policy, plan, Some(SpecConfig::new(4)));
+                        assert_eq!(
+                            got, want,
+                            "speculation moved a token (kv {paged:?} chunk {chunk} width \
+                             {width} numa {policy} faults {faults})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_draft_config_streams_identically_through_the_batcher() {
+    // Draft quality is a latency knob: k 1..8, bit-reduced drafts,
+    // layer-truncated drafts, and the adversarial always-wrong draft
+    // all serve the same streams, on both KV layouts.
+    let want = serve(None, 1, 1, &NumaPolicy::Off, None, None);
+    let cfgs = [
+        SpecConfig::new(1),
+        SpecConfig::new(2),
+        SpecConfig::new(8),
+        q2_cfg(4),
+        SpecConfig { k: 4, draft: draft(None, Some(1)), sabotage: false },
+        SpecConfig { k: 3, draft: draft(Some(QuantLevel::Q2), Some(1)), sabotage: false },
+        sabotage_cfg(4),
+    ];
+    for paged in [None, Some(16usize)] {
+        for cfg in cfgs {
+            let got = serve(paged, 2, 1, &NumaPolicy::Off, None, Some(cfg));
+            assert_eq!(got, want, "draft config {cfg:?} moved a token (kv {paged:?})");
+        }
+    }
+}
+
+#[test]
+fn sail_spec_env_leg_streams_match_plain_decode() {
+    // The CI matrix leg sets SAIL_SPEC (off / k:4) the same way the
+    // fault job sets SAIL_FAULTS; this test picks the leg's config up
+    // through the env parser and holds the equivalence bar under it, on
+    // a busier cell than the sweeps above (paged KV, chunked prefill,
+    // auto placement). On the off leg it degenerates to plain-vs-plain
+    // — deliberately cheap, the explicit sweeps carry the coverage.
+    let want = serve(None, 1, 1, &NumaPolicy::Off, None, None);
+    let cfg = spec_config_from_env();
+    let got = serve(Some(16), 2, 16, &NumaPolicy::Auto, None, cfg);
+    assert_eq!(
+        got,
+        want,
+        "SAIL_SPEC={:?} changed the token streams",
+        std::env::var("SAIL_SPEC").unwrap_or_else(|_| "<unset>".to_string())
+    );
+}
+
+#[test]
+fn acceptance_accounting_matches_the_reference_oracle() {
+    // Identical-weights drafts are always right (the draft *is* the
+    // target, kept in KV lockstep); sabotaged drafts are always wrong
+    // (off-by-one argmax). Both make every round's outcome predictable,
+    // so the engine's counters must equal the oracle simulation exactly
+    // — including the window-clamped rounds near the end of the context
+    // and the final zero-room fallback step.
+    let ctx = spec().max_context;
+    let prompt = [3, 7, 11];
+    let n = ctx - prompt.len(); // last feed lands at ctx − 1: k_plan = 0
+    for seed in [5u64, 9, 123] {
+        for k in [1usize, 2, 4, 8] {
+            for sabotage in [false, true] {
+                let cfg = SpecConfig { k, draft: draft(None, None), sabotage };
+                let mut se = SpeculativeEngine::random_with_kv(
+                    spec(),
+                    seed,
+                    1,
+                    WorkerPool::shared(1),
+                    KvRuntimeConfig::contiguous(),
+                    cfg,
+                )
+                .unwrap();
+                let mut pe = TransformerServeEngine::random_with_kv(
+                    spec(),
+                    seed,
+                    1,
+                    WorkerPool::shared(1),
+                    KvRuntimeConfig::contiguous(),
+                )
+                .unwrap();
+                let leg = format!("seed {seed} k {k} sabotage {sabotage}");
+                let got = drive(&mut se, 0, &prompt, n);
+                let want = drive(&mut pe, 0, &prompt, n);
+                assert_eq!(got, want, "stream diverged ({leg})");
+                let st = se.stats();
+                assert_eq!(
+                    st,
+                    oracle_stats(k, prompt.len(), n, ctx, !sabotage),
+                    "accounting diverged from the oracle ({leg})"
+                );
+                assert!(st.drafted > 0, "{leg}: no round ever drafted");
+            }
+        }
+    }
+}
+
+#[test]
+fn reduced_drafts_obey_the_accounting_conservation_laws() {
+    // Bit-reduced and layer-truncated drafts accept unpredictably, so
+    // the exact oracle does not apply — but every feed is still exactly
+    // one of {buffered serve, fresh round, fallback}, acceptance never
+    // exceeds drafting, and at most one round's accepted tail can be
+    // left unserved in the buffer.
+    let prompt = [3, 7, 11];
+    let n = 16;
+    for d in [draft(Some(QuantLevel::Q2), None), draft(None, Some(1))] {
+        let cfg = SpecConfig { k: 4, draft: d, sabotage: false };
+        let mut se = common::spec_engine_with_kv(
+            spec(),
+            1,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::contiguous(),
+            cfg,
+        );
+        let mut pe = common::engine_with_kv(
+            spec(),
+            1,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::contiguous(),
+        );
+        let got = drive(&mut se, 0, &prompt, n);
+        let want = drive(&mut pe, 0, &prompt, n);
+        assert_eq!(got, want, "draft {d:?} moved a token");
+        let st = se.stats();
+        assert_eq!(
+            st.rounds + st.buffered + st.fallback_steps,
+            n as u64,
+            "draft {d:?}: feeds are not conserved across rounds/buffer/fallback"
+        );
+        assert!(st.accepted <= st.drafted, "draft {d:?}: accepted more than drafted");
+        assert!(st.drafted >= st.rounds, "draft {d:?}: a round drafted nothing");
+        assert!(
+            st.accepted - st.buffered <= cfg.k as u64,
+            "draft {d:?}: more than one round's tail left in the buffer"
+        );
+    }
+}
+
+#[test]
+fn rejected_drafts_leave_the_contiguous_cache_identical_to_plain_decode() {
+    // Total-rollback bar, contiguous: after any mix of full rejection
+    // (sabotage) and partial acceptance (a Q2 draft), the byte-compared
+    // cache equals a never-drafted run's.
+    let prompt = [3, 7, 11];
+    let n = 12;
+    for cfg in [sabotage_cfg(4), q2_cfg(4)] {
+        let mut se = common::spec_engine_with_kv(
+            spec(),
+            2,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::contiguous(),
+            cfg,
+        );
+        let mut pe = common::engine_with_kv(
+            spec(),
+            2,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::contiguous(),
+        );
+        let got = drive(&mut se, 0, &prompt, n);
+        let want = drive(&mut pe, 0, &prompt, n);
+        assert_eq!(got, want, "{cfg:?}");
+        if cfg.sabotage {
+            let st = se.stats();
+            assert!(st.drafted > 0 && st.accepted == 0, "sabotage accepted a draft");
+        }
+        assert_eq!(
+            se.target().model().kv().contiguous().unwrap(),
+            pe.model().kv().contiguous().unwrap(),
+            "{cfg:?}: rejected speculative writes survived in the contiguous cache"
+        );
+    }
+}
+
+#[test]
+fn rejected_drafts_restore_paged_tables_refcounts_and_free_list() {
+    // Total-rollback bar, paged: the verify forward allocates pages for
+    // the speculative tail and the rejection must hand them back in
+    // reverse order, so tables, refcounts, the free list (order
+    // included) and the dequantized contents all match a never-drafted
+    // run — page-for-page, not just byte-count.
+    let prompt = [3, 7, 11];
+    let n = 12;
+    for cfg in [sabotage_cfg(4), q2_cfg(4)] {
+        let mut se = common::spec_engine_with_kv(
+            spec(),
+            2,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::paged(4),
+            cfg,
+        );
+        let mut pe = common::engine_with_kv(
+            spec(),
+            2,
+            WorkerPool::shared(1),
+            KvRuntimeConfig::paged(4),
+        );
+        let got = drive(&mut se, 0, &prompt, n);
+        let want = drive(&mut pe, 0, &prompt, n);
+        assert_eq!(got, want, "{cfg:?}");
+        let (sm, pm) = (se.target().model(), pe.model());
+        assert_eq!(
+            paged_state(sm),
+            paged_state(pm),
+            "{cfg:?}: rollback left different page bookkeeping than plain decode"
+        );
+        let written = prompt.len() + n;
+        assert_eq!(
+            kv_contents(sm, 0, written),
+            kv_contents(pm, 0, written),
+            "{cfg:?}: rejected speculative writes survived in the paged contents"
+        );
+    }
+}
+
+/// Cold-prefill slot 0 with the 8-token head (two whole pages at page
+/// size 4), publish it to the prefix cache, attach it on slot 1 (split
+/// 7 re-feeds the last head token — a COW write into the shared
+/// boundary page), then decode `n` tokens on slot 1.
+fn run_shared_head(e: &mut dyn DecodeEngine, head: &[i32], n: usize) -> Vec<i32> {
+    e.step_runs(&[SlotRun { slot: 0, tokens: head, start_pos: 0 }]).unwrap();
+    e.prefix_insert(0, head).unwrap();
+    let split = e.prefix_attach(1, head).unwrap();
+    assert_eq!(split, head.len() - 1, "full-head hit must split at len − 1");
+    let b = e.batch();
+    let first =
+        e.step_runs(&[SlotRun { slot: 1, tokens: &head[split..], start_pos: split as i32 }])
+            .unwrap()[0];
+    let mut out = vec![first];
+    for i in 0..n {
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut active = vec![false; b];
+        tokens[1] = *out.last().unwrap();
+        positions[1] = (head.len() + i) as i32;
+        active[1] = true;
+        out.push(e.step(&tokens, &positions, &active).unwrap()[1]);
+    }
+    out
+}
+
+#[test]
+fn rollback_leaves_prefix_shared_cow_pages_intact() {
+    // Speculation over a prefix-cache hit: slot 1's verify forwards
+    // start inside a page shared with slot 0 and the radix tree, so the
+    // first write copies-on-write and every rejection truncates the
+    // private copy's tail. The shared original must never move — the
+    // whole paged state (and both slots' contents) must equal a plain
+    // never-drafted run's, with the sabotaged draft rejected every
+    // round.
+    let head: Vec<i32> = (2..10).collect();
+    let n = 8;
+    let mut pe = common::engine_with_kv(
+        spec(),
+        2,
+        WorkerPool::shared(1),
+        KvRuntimeConfig::paged(4),
+    );
+    let want = run_shared_head(&mut pe, &head, n);
+    let mut se = common::spec_engine_with_kv(
+        spec(),
+        2,
+        WorkerPool::shared(1),
+        KvRuntimeConfig::paged(4),
+        sabotage_cfg(4),
+    );
+    let got = run_shared_head(&mut se, &head, n);
+    assert_eq!(got, want, "speculation over a COW page moved a token");
+    let st = se.stats();
+    assert!(st.drafted > 0 && st.accepted == 0, "sabotage accepted a draft");
+    let (sm, pm) = (se.target().model(), pe.model());
+    assert_eq!(paged_state(sm), paged_state(pm), "COW rollback bookkeeping diverged");
+    assert_eq!(
+        kv_contents(sm, 0, head.len()),
+        kv_contents(pm, 0, head.len()),
+        "the shared original's contents moved under a speculating sharer"
+    );
+    assert_eq!(
+        kv_contents(sm, 1, head.len() + n),
+        kv_contents(pm, 1, head.len() + n),
+        "the COW copy's contents diverged from plain decode"
+    );
+    // The head's first page is still genuinely shared (slot 0, slot 1,
+    // and the tree); the boundary page was copied, so the slots map
+    // different physical pages there.
+    let p = sm.kv().paged().unwrap();
+    assert!(p.refcount(p.table(0)[0]) >= 3, "first head page lost its sharers");
+    assert_ne!(p.table(0)[1], p.table(1)[1], "the COW write never copied the boundary page");
+}
