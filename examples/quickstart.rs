@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     // -- 2. LUT-GEMV vs naive reference ------------------------------------
     let eng = LutGemvEngine::new(wt, 4);
     let (out, stats) = eng.gemv_batch(std::slice::from_ref(&qx));
-    let want = reference_gemv(eng.weights(), &qx);
+    let want = reference_gemv(&eng.weights(), &qx);
     assert_eq!(out[0], want, "LUT-GEMV must be bit-exact vs reference");
     println!(
         "LUT-GEMV exact ✓  ({} LUTs built, {} lookups; y[0..4] = {:?})",

@@ -22,6 +22,12 @@
 //!            lut engine only — self-speculative decode, bit-identical
 //!            streams; artifacts may also pin it via spec_draft_* fields)
 //!          --shared-heads H (0 = off: Zipf-popular shared system prompts)
+//!          --reload-after N (0 = off: after the N-th completed response,
+//!            hot-swap the weights to seed+1 without stopping serving —
+//!            in-flight streams finish on the old generation, later
+//!            admissions decode on the new one, and the retired
+//!            generation's reclamation shows up in the final report's
+//!            `reclaim` line; lut engine only)
 //!          --preempt --bursty --artifacts DIR (--mock = --engine mock)
 //!
 //! Requests arrive on a seeded Poisson (or `--bursty`) schedule and each
@@ -93,6 +99,7 @@ fn main() -> anyhow::Result<()> {
     let kv_pages_budget: usize = args.opt("kv-pages-budget", 0); // 0 = default
     let spec_arg = args.opt_str("spec", ""); // "" = SAIL_SPEC env, else off
     let shared_heads: usize = args.opt("shared-heads", 0); // 0 = off
+    let reload_after: usize = args.opt("reload-after", 0); // 0 = never
     let preempt = args.flag("preempt");
     let bursty = args.flag("bursty");
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
@@ -280,6 +287,19 @@ fn main() -> anyhow::Result<()> {
             handle = frontend.submit(originals[&resp.id].clone())?;
         };
         latencies.push(resp.latency);
+        if reload_after > 0 && latencies.len() == reload_after {
+            // Live hot-swap mid-workload: the worker rebuilds the weights
+            // between iterations. Requests already streaming keep their
+            // old-generation tokens; admissions from here on use seed+1.
+            match frontend.swap_weights(seed + 1) {
+                Ok(()) => println!(
+                    "  [swap] weights hot-swapped to seed {} after {} responses",
+                    seed + 1,
+                    reload_after
+                ),
+                Err(e) => println!("  [swap] rejected: {e}"),
+            }
+        }
         if i % 6 == 0 {
             println!(
                 "  [{}/{}] req {:>3}: {:>2} tokens, ttft {:>7.1} ms, latency {:>7.1} ms ({:?})",

@@ -295,6 +295,13 @@ impl<E: DecodeEngine> Batcher<E> {
         &self.engine
     }
 
+    /// Mutable access to the wrapped engine — the serving loop drives
+    /// live weight swaps ([`DecodeEngine::swap_weights`]) through this
+    /// between iterations, never mid-iteration.
+    pub fn engine_mut(&mut self) -> &mut E {
+        &mut self.engine
+    }
+
     /// Enqueue a request (admitted into a free slot, FIFO by default, at
     /// the start of a later iteration).
     ///

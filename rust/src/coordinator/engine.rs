@@ -32,7 +32,8 @@ use crate::model::{
     KvRuntimeConfig, LutTransformer,
 };
 use crate::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
-use crate::runtime::WorkerPool;
+use crate::runtime::reclaim::{ReclaimDomain, ReclaimStats};
+use crate::runtime::{PoolStats, WorkerPool};
 
 /// Greedy argmax over a logits row, NaN-safe.
 ///
@@ -233,6 +234,26 @@ pub trait DecodeEngine {
     fn spec_grant(&mut self, _rows: usize) {}
     /// Speculative-decoding counters, if the engine drafts.
     fn spec_stats(&self) -> Option<SpecStats> {
+        None
+    }
+    /// Live weight hot-swap: rebuild the model's weights from `seed`
+    /// without stopping serving. In-flight slots finish their streams on
+    /// the weights that prefilled them; slots admitted after the swap use
+    /// the new weights; superseded weight generations are retired through
+    /// a [`ReclaimDomain`] once no slot references them. The default is a
+    /// typed error — most engines have no rebuildable weight source.
+    fn swap_weights(&mut self, _seed: u64) -> Result<()> {
+        bail!("this engine does not support live weight swapping")
+    }
+    /// Dispatch-pool observability counters (per-worker execute/steal
+    /// tallies, dispatch latency percentiles), if the engine fans out on
+    /// a [`WorkerPool`].
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
+    /// Weight-generation reclamation counters, if the engine supports
+    /// [`swap_weights`](DecodeEngine::swap_weights).
+    fn reclaim_stats(&self) -> Option<ReclaimStats> {
         None
     }
 }
@@ -528,13 +549,55 @@ impl DecodeEngine for LutGemvServeEngine {
 /// Determinism: the model is bit-identical at every pool width and across
 /// batch compositions (`tests/decode_serving.rs`), so the serving
 /// invariants the mock pins down hold on the real multi-layer path too.
+///
+/// Live weight hot-swap ([`DecodeEngine::swap_weights`]): the engine
+/// tracks a monotone weight *generation* per slot. A swap rebuilds the
+/// model (same spec/batch/pool/KV config, new seed) and makes it current;
+/// slots mid-stream keep decoding on the generation whose KV holds their
+/// history — bit-identical to a no-swap run — while every slot admitted
+/// afterwards (`reset_slot`) migrates to the new generation. A superseded
+/// generation is retired through the engine's [`ReclaimDomain`] the
+/// moment its last slot migrates away, so the [`ReclaimStats`] counters
+/// prove old weights are dropped, not leaked.
 pub struct TransformerServeEngine {
+    /// The current weight generation's model.
     model: LutTransformer,
+    /// Generation counter of `model`; bumped by each successful swap.
+    version: u64,
+    /// The generation each slot's KV history lives in. Equal to `version`
+    /// except for slots admitted before the last swap(s).
+    slot_version: Vec<u64>,
+    /// Superseded generations still referenced by at least one slot.
+    old: Vec<(u64, LutTransformer)>,
+    /// How to rebuild the model for a new seed; `None` when the engine
+    /// wrapped an externally built model ([`new`](Self::new)) — such
+    /// engines report a typed error on `swap_weights`.
+    rebuild: Option<Rebuild>,
+    /// Deferred reclamation of retired generations (observability: the
+    /// serving layer surfaces these counters).
+    domain: Arc<ReclaimDomain>,
+}
+
+/// The constructor arguments a seeded engine keeps so `swap_weights` can
+/// rebuild the model for a new seed.
+struct Rebuild {
+    spec: DecodeSpec,
+    batch: usize,
+    pool: Arc<WorkerPool>,
+    kv_cfg: KvRuntimeConfig,
 }
 
 impl TransformerServeEngine {
     pub fn new(model: LutTransformer) -> Self {
-        TransformerServeEngine { model }
+        let batch = model.batch();
+        TransformerServeEngine {
+            model,
+            version: 0,
+            slot_version: vec![0; batch],
+            old: Vec::new(),
+            rebuild: None,
+            domain: Arc::new(ReclaimDomain::new()),
+        }
     }
 
     /// Seeded-random model: the same `(spec, seed)` gives the same model
@@ -545,7 +608,7 @@ impl TransformerServeEngine {
         batch: usize,
         pool: Arc<WorkerPool>,
     ) -> Result<Self> {
-        Ok(TransformerServeEngine { model: LutTransformer::random(spec, seed, batch, pool)? })
+        Self::random_with_kv(spec, seed, batch, pool, KvRuntimeConfig::from_env())
     }
 
     /// [`random`](Self::random) with an explicit KV runtime configuration
@@ -557,13 +620,59 @@ impl TransformerServeEngine {
         pool: Arc<WorkerPool>,
         kv_cfg: KvRuntimeConfig,
     ) -> Result<Self> {
-        Ok(TransformerServeEngine {
-            model: LutTransformer::random_with_kv(spec, seed, batch, pool, kv_cfg)?,
-        })
+        let model = LutTransformer::random_with_kv(
+            spec.clone(),
+            seed,
+            batch,
+            Arc::clone(&pool),
+            kv_cfg,
+        )?;
+        let mut eng = Self::new(model);
+        eng.rebuild = Some(Rebuild { spec, batch, pool, kv_cfg });
+        Ok(eng)
     }
 
     pub fn model(&self) -> &LutTransformer {
         &self.model
+    }
+
+    /// The current weight generation (0 at construction; +1 per swap).
+    pub fn weights_version(&self) -> u64 {
+        self.version
+    }
+
+    /// Weight generations currently alive: the serving one plus every
+    /// superseded generation still finishing a pre-swap stream.
+    pub fn live_generations(&self) -> usize {
+        1 + self.old.len()
+    }
+
+    /// The model that owns generation `v`'s KV.
+    fn model_for_version_mut(&mut self, v: u64) -> Result<&mut LutTransformer> {
+        if v == self.version {
+            return Ok(&mut self.model);
+        }
+        match self.old.iter_mut().find(|(g, _)| *g == v) {
+            Some((_, m)) => Ok(m),
+            None => bail!("weight generation {v} was retired while a slot still used it"),
+        }
+    }
+
+    /// Retire every superseded generation no slot references anymore.
+    fn retire_unreferenced(&mut self) {
+        if self.old.iter().all(|(v, _)| self.slot_version.contains(v)) {
+            return;
+        }
+        let mut kept = Vec::new();
+        for (v, m) in self.old.drain(..) {
+            if self.slot_version.contains(&v) {
+                kept.push((v, m));
+            } else {
+                self.domain.retire(Box::new(m));
+            }
+        }
+        self.old = kept;
+        self.domain.collect();
     }
 
     /// Mutable access to the model — the speculative wrapper drives its
@@ -610,7 +719,10 @@ impl DecodeEngine for TransformerServeEngine {
                 active.len()
             );
         }
-        let mut items = Vec::with_capacity(b);
+        // One item batch per live weight generation, in slot order within
+        // each (with no swap in flight there is exactly one generation,
+        // and this is byte-for-byte the single-model path).
+        let mut by_gen: Vec<(u64, Vec<DecodeItem>)> = Vec::new();
         for s in 0..b {
             if !active[s] {
                 continue;
@@ -618,40 +730,122 @@ impl DecodeEngine for TransformerServeEngine {
             if positions[s] < 0 {
                 bail!("negative position {} for slot {s}", positions[s]);
             }
-            items.push(DecodeItem { slot: s, token: tokens[s], pos: positions[s] as usize });
+            let item = DecodeItem { slot: s, token: tokens[s], pos: positions[s] as usize };
+            let v = self.slot_version[s];
+            match by_gen.iter_mut().find(|(g, _)| *g == v) {
+                Some((_, items)) => items.push(item),
+                None => by_gen.push((v, vec![item])),
+            }
         }
-        self.model.step(&items)?;
         let mut next = vec![0i32; b];
-        for (i, it) in items.iter().enumerate() {
-            next[it.slot] = argmax_logits(self.model.logits().row(i));
+        for (v, items) in by_gen {
+            let model = self.model_for_version_mut(v)?;
+            model.step(&items)?;
+            for (i, it) in items.iter().enumerate() {
+                next[it.slot] = argmax_logits(model.logits().row(i));
+            }
         }
         Ok(next)
     }
 
     fn step_runs(&mut self, runs: &[SlotRun]) -> Result<Vec<i32>> {
         validate_runs(self.model.batch(), self.model.spec().max_context, self.max_run(), runs)?;
-        let model_runs: Vec<DecodeRun> = runs
-            .iter()
-            .map(|r| DecodeRun { slot: r.slot, tokens: r.tokens, start_pos: r.start_pos as usize })
-            .collect();
-        self.model.step_runs(&model_runs)?;
-        Ok((0..runs.len()).map(|i| argmax_logits(self.model.logits().row(i))).collect())
+        // Partition runs by their slot's weight generation, preserving
+        // submission order within each partition; each generation's model
+        // executes one multi-row forward over its own runs.
+        let mut by_gen: Vec<(u64, Vec<usize>)> = Vec::new();
+        for (ri, r) in runs.iter().enumerate() {
+            let v = self.slot_version[r.slot];
+            match by_gen.iter_mut().find(|(g, _)| *g == v) {
+                Some((_, idxs)) => idxs.push(ri),
+                None => by_gen.push((v, vec![ri])),
+            }
+        }
+        let mut out = vec![0i32; runs.len()];
+        for (v, idxs) in by_gen {
+            let model_runs: Vec<DecodeRun> = idxs
+                .iter()
+                .map(|&ri| {
+                    let r = &runs[ri];
+                    DecodeRun { slot: r.slot, tokens: r.tokens, start_pos: r.start_pos as usize }
+                })
+                .collect();
+            let model = self.model_for_version_mut(v)?;
+            model.step_runs(&model_runs)?;
+            for (j, &ri) in idxs.iter().enumerate() {
+                out[ri] = argmax_logits(model.logits().row(j));
+            }
+        }
+        Ok(out)
     }
 
     fn reset_slot(&mut self, slot: usize) -> Result<()> {
+        // Admission hook: the slot migrates to the current generation.
+        // Clear its pane in the generation that held it (releasing KV
+        // pages there), then retire any generation left unreferenced.
+        let stale = self.slot_version[slot];
+        if stale != self.version {
+            if let Some((_, m)) = self.old.iter_mut().find(|(v, _)| *v == stale) {
+                m.reset_slot(slot)?;
+            }
+            self.slot_version[slot] = self.version;
+            self.retire_unreferenced();
+        }
         self.model.reset_slot(slot)
     }
 
     fn prefix_attach(&mut self, slot: usize, feed: &[i32]) -> Result<usize> {
-        self.model.prefix_attach(slot, feed)
+        // The batcher resets the slot before attaching, so the slot is on
+        // the current generation here; route by version anyway so a
+        // direct driver cannot cross KV between generations.
+        let v = self.slot_version[slot];
+        self.model_for_version_mut(v)?.prefix_attach(slot, feed)
     }
 
     fn prefix_insert(&mut self, slot: usize, feed: &[i32]) -> Result<()> {
-        self.model.prefix_insert(slot, feed)
+        let v = self.slot_version[slot];
+        self.model_for_version_mut(v)?.prefix_insert(slot, feed)
     }
 
     fn kv_metrics(&self) -> Option<KvMetrics> {
         self.model.kv_metrics()
+    }
+
+    fn swap_weights(&mut self, seed: u64) -> Result<()> {
+        let Some(rb) = &self.rebuild else {
+            bail!(
+                "live weight swap needs a rebuildable engine \
+                 (TransformerServeEngine::random / random_with_kv); this one wrapped \
+                 an externally built model"
+            );
+        };
+        let next = LutTransformer::random_with_kv(
+            rb.spec.clone(),
+            seed,
+            rb.batch,
+            Arc::clone(&rb.pool),
+            rb.kv_cfg,
+        )?;
+        let prev = std::mem::replace(&mut self.model, next);
+        let prev_version = self.version;
+        self.version += 1;
+        if self.slot_version.contains(&prev_version) {
+            // Some slot's stream still lives in the old generation's KV:
+            // keep the model until every such slot is re-admitted.
+            self.old.push((prev_version, prev));
+        } else {
+            self.domain.retire(Box::new(prev));
+            self.domain.collect();
+        }
+        Ok(())
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.model.pool().pool_stats())
+    }
+
+    fn reclaim_stats(&self) -> Option<ReclaimStats> {
+        Some(self.domain.stats())
     }
 }
 
@@ -1217,6 +1411,14 @@ impl DecodeEngine for SpeculativeEngine {
     fn spec_stats(&self) -> Option<SpecStats> {
         Some(self.stats)
     }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        self.target.pool_stats()
+    }
+
+    fn reclaim_stats(&self) -> Option<ReclaimStats> {
+        self.target.reclaim_stats()
+    }
 }
 
 /// Deterministic mock: next token = hash(slot history) — context-sensitive
@@ -1768,6 +1970,89 @@ mod tests {
         let got = b.run_to_completion().unwrap()[0].tokens.clone();
         assert_eq!(got, want, "clamped chunking changed the token stream");
         assert_eq!(b.iterations(), 6, "4 prompt + 3 generated tokens, one per iteration");
+    }
+
+    #[test]
+    fn swap_weights_is_generation_exact_and_reclaims_old_weights() {
+        // Three engines: the swapped one, a no-swap control with the same
+        // seed (the oracle for the pre-swap stream), and a fresh engine
+        // built directly at the swap seed (the oracle for post-swap
+        // admissions).
+        let spec = || crate::model::DecodeSpec::tiny(2, crate::model::KvCacheSpec::fp16());
+        let mut e = transformer_engine(2, 2);
+        let mut control = transformer_engine(2, 2);
+        let mut fresh =
+            TransformerServeEngine::random(spec(), 500, 2, WorkerPool::shared(2)).unwrap();
+
+        // Slot 0 prefills and decodes a few tokens before the swap.
+        let p0 = [3i32, 7, 11];
+        let run0 = SlotRun { slot: 0, tokens: &p0, start_pos: 0 };
+        let mut t0 = e.step_runs(std::slice::from_ref(&run0)).unwrap()[0];
+        let mut t0_c = control.step_runs(std::slice::from_ref(&run0)).unwrap()[0];
+        assert_eq!(t0, t0_c);
+        for i in 0..3 {
+            let pos = (p0.len() + i) as i32;
+            t0 = e.step(&[t0, 0], &[pos, 0], &[true, false]).unwrap()[0];
+            t0_c = control.step(&[t0_c, 0], &[pos, 0], &[true, false]).unwrap()[0];
+            assert_eq!(t0, t0_c, "pre-swap decode diverged at step {i}");
+        }
+
+        assert_eq!(e.weights_version(), 0);
+        e.swap_weights(500).unwrap();
+        assert_eq!(e.weights_version(), 1);
+        assert_eq!(e.live_generations(), 2, "slot 0 must pin generation 0");
+        assert_eq!(e.reclaim_stats().unwrap().retired, 0, "generation 0 retired too early");
+
+        // Slot 1 is admitted after the swap: its stream must match the
+        // fresh seed-500 engine bit for bit.
+        e.reset_slot(1).unwrap();
+        fresh.reset_slot(1).unwrap();
+        let p1 = [9i32, 2];
+        let run1 = SlotRun { slot: 1, tokens: &p1, start_pos: 0 };
+        let mut t1 = e.step_runs(std::slice::from_ref(&run1)).unwrap()[0];
+        let mut t1_f = fresh.step_runs(std::slice::from_ref(&run1)).unwrap()[0];
+        assert_eq!(t1, t1_f, "post-swap admission must serve the new weights");
+
+        // Mixed-generation iterations: both slots active in ONE step call
+        // on the swapped engine (the partitioned path), each generation's
+        // oracle running its slot solo.
+        for i in 0..4 {
+            let pos0 = (p0.len() + 3 + i) as i32;
+            let pos1 = (p1.len() + i) as i32;
+            let both = e.step(&[t0, t1], &[pos0, pos1], &[true, true]).unwrap();
+            t0_c = control.step(&[t0_c, 0], &[pos0, 0], &[true, false]).unwrap()[0];
+            t1_f = fresh.step(&[0, t1_f], &[0, pos1], &[false, true]).unwrap()[1];
+            assert_eq!(both[0], t0_c, "pre-swap stream drifted off the old weights at {i}");
+            assert_eq!(both[1], t1_f, "post-swap stream drifted off the new weights at {i}");
+            t0 = both[0];
+            t1 = both[1];
+        }
+
+        // Slot 0 finishes and is re-admitted: generation 0 loses its last
+        // reference and must be reclaimed through the domain.
+        e.reset_slot(0).unwrap();
+        assert_eq!(e.live_generations(), 1, "generation 0 must retire on migration");
+        let rs = e.reclaim_stats().unwrap();
+        assert_eq!((rs.retired, rs.reclaimed, rs.pending), (1, 1, 0), "{rs:?}");
+        // The engine surfaces its dispatch-pool counters too.
+        assert!(e.pool_stats().unwrap().dispatches > 0, "no dispatches counted");
+    }
+
+    #[test]
+    fn swap_on_externally_built_model_is_a_typed_error() {
+        let model = LutTransformer::random(
+            crate::model::DecodeSpec::tiny(2, crate::model::KvCacheSpec::fp16()),
+            11,
+            1,
+            WorkerPool::shared(1),
+        )
+        .unwrap();
+        let mut e = TransformerServeEngine::new(model);
+        let err = e.swap_weights(99).unwrap_err().to_string();
+        assert!(err.contains("rebuildable"), "unexpected error text: {err}");
+        assert_eq!(e.weights_version(), 0, "a failed swap must not bump the generation");
+        // The engine still serves after the rejected swap.
+        assert!(e.step(&[1], &[0], &[true]).is_ok());
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 use super::engine::SpecStats;
 use super::request::{FinishReason, Response};
 use crate::model::KvMetrics;
+use crate::runtime::{PoolStats, ReclaimStats};
 use crate::util::stats::{Percentiles, Summary};
 
 /// Aggregated serving metrics over a run.
@@ -45,6 +46,15 @@ pub struct ServingMetrics {
     /// drain/shutdown ([`ServingMetrics::record_spec`]). `None` on plain
     /// engines.
     pub spec: Option<SpecStats>,
+    /// Dispatch-pool counters (per-worker execute/steal tallies, dispatch
+    /// latency percentiles), harvested from the engine at drain/shutdown
+    /// ([`ServingMetrics::record_pool`]). `None` on engines that never
+    /// fan out on a worker pool.
+    pub pool: Option<PoolStats>,
+    /// Weight-generation reclamation counters, harvested at drain/shutdown
+    /// ([`ServingMetrics::record_reclaim`]). `None` on engines without
+    /// live weight swapping.
+    pub reclaim: Option<ReclaimStats>,
     finished_at: Option<Instant>,
 }
 
@@ -70,6 +80,8 @@ impl ServingMetrics {
             goodput_tokens: 0,
             kv: None,
             spec: None,
+            pool: None,
+            reclaim: None,
             finished_at: None,
         }
     }
@@ -89,6 +101,22 @@ impl ServingMetrics {
     pub fn record_spec(&mut self, spec: Option<SpecStats>) {
         if spec.is_some() {
             self.spec = spec;
+        }
+    }
+
+    /// Install the engine's dispatch-pool counters (same sticky policy:
+    /// the latest `Some` wins, a `None` leaves any prior snapshot alone).
+    pub fn record_pool(&mut self, pool: Option<PoolStats>) {
+        if pool.is_some() {
+            self.pool = pool;
+        }
+    }
+
+    /// Install the engine's weight-reclamation counters (same sticky
+    /// policy as the other snapshots).
+    pub fn record_reclaim(&mut self, reclaim: Option<ReclaimStats>) {
+        if reclaim.is_some() {
+            self.reclaim = reclaim;
         }
     }
 
@@ -205,6 +233,32 @@ impl ServingMetrics {
                 spec.acceptance_rate() * 100.0,
                 spec.buffered,
                 spec.fallback_steps,
+            ));
+        }
+        if let Some(pool) = &self.pool {
+            let executed: u64 = pool.executed.iter().sum();
+            let stolen: u64 = pool.stolen.iter().sum();
+            s.push_str(&format!(
+                "\npool backend={} workers={} dispatches={}   \
+                 executed={} stolen={} cross_node={}   \
+                 queue hwm={} inline_reclaims={}   \
+                 dispatch p50/p99 = {:.1}/{:.1} us",
+                pool.backend,
+                pool.workers,
+                pool.dispatches,
+                executed,
+                stolen,
+                pool.cross_node_steals,
+                pool.queue_depth_hwm,
+                pool.inline_reclaims,
+                pool.dispatch_p50_us,
+                pool.dispatch_p99_us,
+            ));
+        }
+        if let Some(rec) = &self.reclaim {
+            s.push_str(&format!(
+                "\nreclaim retired={} reclaimed={} pending={} active_pins={}",
+                rec.retired, rec.reclaimed, rec.pending, rec.active_pins,
             ));
         }
         s
@@ -346,6 +400,38 @@ mod tests {
         assert!(rep.contains("spec rounds=4"), "{rep}");
         assert!(rep.contains("(75.0%)"), "{rep}");
         assert_eq!(m.spec.unwrap().accepted, 12);
+    }
+
+    #[test]
+    fn pool_and_reclaim_snapshots_are_optional_and_sticky() {
+        let mut m = ServingMetrics::new();
+        let rep = m.report();
+        assert!(!rep.contains("pool backend"), "no pool line without a pooled engine");
+        assert!(!rep.contains("reclaim retired"), "no reclaim line without swapping");
+        let ps = PoolStats {
+            backend: "steal",
+            workers: 4,
+            dispatches: 9,
+            executed: vec![3, 1, 2, 0],
+            stolen: vec![0, 1, 0, 2],
+            cross_node_steals: 1,
+            queue_depth_hwm: 5,
+            inline_reclaims: 0,
+            dispatch_p50_us: 12.5,
+            dispatch_p99_us: 40.0,
+        };
+        m.record_pool(Some(ps.clone()));
+        m.record_reclaim(Some(ReclaimStats { retired: 2, reclaimed: 1, pending: 1, active_pins: 0 }));
+        // Later harvests from engines without these counters must not
+        // erase the snapshots.
+        m.record_pool(None);
+        m.record_reclaim(None);
+        let rep = m.report();
+        assert!(rep.contains("pool backend=steal workers=4 dispatches=9"), "{rep}");
+        assert!(rep.contains("executed=6 stolen=3 cross_node=1"), "{rep}");
+        assert!(rep.contains("reclaim retired=2 reclaimed=1 pending=1"), "{rep}");
+        assert_eq!(m.pool.as_ref().unwrap(), &ps);
+        assert_eq!(m.reclaim.unwrap().reclaimed, 1);
     }
 
     #[test]

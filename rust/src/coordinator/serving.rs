@@ -196,6 +196,11 @@ fn schedule_slo<E: DecodeEngine>(
 
 enum Msg {
     Submit(Request, Sender<StreamEvent>),
+    /// Live weight hot-swap: rebuild the engine's weights from the seed
+    /// **between** iterations (never mid-iteration, so every in-flight
+    /// request's stream stays bit-identical); the ack reports the
+    /// engine's verdict back to the caller.
+    Swap(u64, Sender<Result<()>>),
     Drain,
 }
 
@@ -229,6 +234,25 @@ impl ServingFrontend {
             .send(Msg::Submit(req, tx_ev))
             .map_err(|_| anyhow::anyhow!("serving worker terminated"))?;
         Ok(StreamHandle { id, rx: rx_ev })
+    }
+
+    /// Live weight hot-swap: ask the worker to rebuild the engine's
+    /// weights from `seed` between iterations and wait for the verdict.
+    /// On success, requests admitted afterwards decode on the new
+    /// weights while every request already prefilled finishes its stream
+    /// on the generation that admitted it (the engine keeps superseded
+    /// generations alive until their last slot drains, then reclaims
+    /// them — see [`DecodeEngine::swap_weights`]). On engines without a
+    /// rebuildable weight source this returns their typed error and
+    /// serving continues unchanged.
+    pub fn swap_weights(&self, seed: u64) -> Result<()> {
+        let (tx_ack, rx_ack) = channel();
+        self.tx
+            .send(Msg::Swap(seed, tx_ack))
+            .map_err(|_| anyhow::anyhow!("serving worker terminated"))?;
+        rx_ack
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serving worker terminated before the swap ack"))?
     }
 
     /// Signal no-more-requests, drain every in-flight request, and join,
@@ -275,6 +299,8 @@ fn serve_loop<E: DecodeEngine>(
                         // snapshot, then out.
                         metrics.record_kv(batcher.engine().kv_metrics());
                         metrics.record_spec(batcher.engine().spec_stats());
+                        metrics.record_pool(batcher.engine().pool_stats());
+                        metrics.record_reclaim(batcher.engine().reclaim_stats());
                         return metrics;
                     }
                 }
@@ -301,6 +327,11 @@ fn serve_loop<E: DecodeEngine>(
                         }
                     }
                 }
+                Msg::Swap(seed, ack) => {
+                    // Between iterations by construction: the pump never
+                    // runs while `run_iteration_events` is on the stack.
+                    let _ = ack.send(batcher.engine_mut().swap_weights(seed));
+                }
                 Msg::Drain => draining = true,
             }
         }
@@ -308,6 +339,8 @@ fn serve_loop<E: DecodeEngine>(
             if draining {
                 metrics.record_kv(batcher.engine().kv_metrics());
                 metrics.record_spec(batcher.engine().spec_stats());
+                metrics.record_pool(batcher.engine().pool_stats());
+                metrics.record_reclaim(batcher.engine().reclaim_stats());
                 return metrics;
             }
             continue;
@@ -324,6 +357,8 @@ fn serve_loop<E: DecodeEngine>(
                 eprintln!("sail serving: engine failure, stopping worker: {e}");
                 metrics.record_kv(batcher.engine().kv_metrics());
                 metrics.record_spec(batcher.engine().spec_stats());
+                metrics.record_pool(batcher.engine().pool_stats());
+                metrics.record_reclaim(batcher.engine().reclaim_stats());
                 return metrics;
             }
         };

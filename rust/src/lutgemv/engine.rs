@@ -43,12 +43,13 @@
 
 use std::sync::{Arc, Mutex};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::planes;
 use super::tile::{run_tile, GemvOutput, ScratchArena, TileArgs};
 use crate::quant::{QuantizedMatrix, QuantizedVector};
 use crate::runtime::faults::FaultPlan;
+use crate::runtime::reclaim::{ReclaimDomain, ReclaimStats};
 use crate::runtime::WorkerPool;
 
 /// Counters the engine reports so cycle models and the PRT can be validated
@@ -78,13 +79,19 @@ impl std::ops::AddAssign for GemvStats {
 /// a fixed output column, matching how llama.cpp stores the transposed
 /// projection matrices.
 pub struct LutGemvEngine {
-    /// Quantized weights, stored transposed (`[N, K]` row-major) so that an
-    /// output column's basis weights are contiguous — the layout the
-    /// address hasher stripes across cache slices. `Arc`-held because tile
-    /// jobs on persistent pool workers share it without borrowing. This is
-    /// the *master* copy ([`weights`](LutGemvEngine::weights), the
-    /// reference oracle); the hot path reads the per-node shards.
-    wt: Arc<QuantizedMatrix>,
+    /// The live weight snapshot: master matrix plus per-node shards,
+    /// swapped atomically by [`publish_weights`](Self::publish_weights).
+    /// Readers clone the two inner `Arc`s once per call under this lock
+    /// (two refcount bumps — the lock is never held across the dispatch),
+    /// so a publish never blocks on or races with in-flight GEMVs.
+    snap: Mutex<WeightSnapshot>,
+    /// Output columns (`wt.rows`) — immutable across swaps, cached so the
+    /// hot path and shape checks never take the snapshot lock.
+    n: usize,
+    /// Activation length (`wt.cols`) — immutable across swaps.
+    k: usize,
+    /// Scale group size — immutable across swaps (publish re-validates).
+    group_size: usize,
     nbw: u32,
     /// Enable the Pattern Reuse Table (§III-D).
     pub use_prt: bool,
@@ -102,16 +109,35 @@ pub struct LutGemvEngine {
     /// shrink it to force multi-tile execution on tiny matrices. Tiles
     /// never straddle a shard boundary (each shard tiles independently).
     pub tile_cols: usize,
-    /// Per-node weight shards: contiguous column ranges, each with its own
-    /// weight slice, range-proof sums, and scratch arena — single entry
-    /// (sharing the master `Arc`s, no copy) for unplaced engines.
-    shards: Arc<Vec<NodeShard>>,
+    /// Deferred-reclamation domain for retired snapshots: every GEMV pins
+    /// it for the call's duration, and `publish_weights` retires the old
+    /// snapshot through it — so the observable [`reclaim_stats`]
+    /// (Self::reclaim_stats) counters prove retired shards are dropped
+    /// only after the last in-flight reader, and never leak.
+    domain: Arc<ReclaimDomain>,
     /// Recycled per-call pattern/scale/tile buffers, recovered from the
     /// call context after every dispatch. A small stack (not a single
     /// slot) so concurrent `gemv_batch_into` calls on one shared engine
     /// each get a reusable set instead of racing for one and dropping the
     /// loser's.
     call_buffers: Mutex<Vec<CallBuffers>>,
+}
+
+/// One generation of the engine's weights: the master `[N, K]` matrix
+/// (the reference oracle) plus the per-node shards the hot path reads.
+/// Swapped as a unit by [`LutGemvEngine::publish_weights`]; the retired
+/// generation is handed to the engine's [`ReclaimDomain`] and dropped
+/// only after every GEMV pinned before the swap has finished.
+struct WeightSnapshot {
+    /// Quantized weights, stored transposed (`[N, K]` row-major) so that an
+    /// output column's basis weights are contiguous — the layout the
+    /// address hasher stripes across cache slices. `Arc`-held because tile
+    /// jobs on persistent pool workers share it without borrowing.
+    wt: Arc<QuantizedMatrix>,
+    /// Per-node weight shards: contiguous column ranges, each with its own
+    /// weight slice, range-proof sums, and scratch arena — single entry
+    /// (sharing the master `Arc`s, no copy) for unplaced engines.
+    shards: Arc<Vec<NodeShard>>,
 }
 
 /// One node group's slice of the engine: the output columns
@@ -259,23 +285,18 @@ impl LutGemvEngine {
     /// ```
     pub fn new(wt: QuantizedMatrix, nbw: u32) -> Self {
         Self::check_shape(&wt, nbw);
-        let wt = Arc::new(wt);
-        let group_abs_sums = Arc::new(Self::compute_abs_sums(&wt));
-        let shard = NodeShard {
-            col_start: 0,
-            col_end: wt.rows,
-            wt: Arc::clone(&wt),
-            group_abs_sums: Arc::clone(&group_abs_sums),
-            arena: Arc::new(ScratchArena::new()),
-        };
+        let (n, k, group_size) = (wt.rows, wt.cols, wt.group_size);
         LutGemvEngine {
-            wt,
+            snap: Mutex::new(Self::build_snapshot(wt, None)),
+            n,
+            k,
+            group_size,
             nbw,
             use_prt: false,
             prt_capacity: DEFAULT_PRT_CAPACITY,
             force_scalar_accum: false,
             tile_cols: DEFAULT_TILE_COLS,
-            shards: Arc::new(vec![shard]),
+            domain: Arc::new(ReclaimDomain::new()),
             call_buffers: Mutex::new(Vec::new()),
         }
     }
@@ -293,20 +314,113 @@ impl LutGemvEngine {
     /// on a differently-shaped pool — outputs stay bit-identical, the
     /// dispatch just falls back to unrouted (locality-blind) fan-out.
     pub fn with_pool(wt: QuantizedMatrix, nbw: u32, pool: &WorkerPool) -> Self {
-        let mut eng = Self::new(wt, nbw);
-        let ranges = pool.placement().shard_ranges(eng.wt.rows);
-        if ranges.len() > 1 {
-            let ctx = Arc::new(ShardBuild {
-                wt: Arc::clone(&eng.wt),
-                group_abs_sums: Arc::clone(&eng.shards[0].group_abs_sums),
-                ranges,
-            });
-            let n = ctx.ranges.len();
-            // Routed so shard i is built (first-touched) on node i.
-            let shards = pool.run_ctx_routed(&ctx, n, |_, i| i, build_shard);
-            eng.shards = Arc::new(shards);
+        let eng = Self::new(wt, nbw);
+        let placed = {
+            let snap = eng.snap.lock().unwrap();
+            Self::build_snapshot_for_pool(&snap.wt, &snap.shards[0].group_abs_sums, pool)
+        };
+        if let Some(placed) = placed {
+            *eng.snap.lock().unwrap() = placed;
         }
         eng
+    }
+
+    /// One snapshot with a single shard sharing the master `Arc`s (the
+    /// unplaced / single-node layout, zero copies). `abs_sums` lets a
+    /// publish reuse sums already computed for shape validation.
+    fn build_snapshot(wt: QuantizedMatrix, abs_sums: Option<Vec<u64>>) -> WeightSnapshot {
+        let wt = Arc::new(wt);
+        let group_abs_sums =
+            Arc::new(abs_sums.unwrap_or_else(|| Self::compute_abs_sums(&wt)));
+        let shard = NodeShard {
+            col_start: 0,
+            col_end: wt.rows,
+            wt: Arc::clone(&wt),
+            group_abs_sums,
+            arena: Arc::new(ScratchArena::new()),
+        };
+        WeightSnapshot { wt, shards: Arc::new(vec![shard]) }
+    }
+
+    /// Multi-shard snapshot placed for `pool` (first-touch copies built on
+    /// the owning nodes' workers), or `None` when the pool has a single
+    /// node group and the unplaced snapshot is already the right layout.
+    fn build_snapshot_for_pool(
+        wt: &Arc<QuantizedMatrix>,
+        group_abs_sums: &Arc<Vec<u64>>,
+        pool: &WorkerPool,
+    ) -> Option<WeightSnapshot> {
+        let ranges = pool.placement().shard_ranges(wt.rows);
+        if ranges.len() <= 1 {
+            return None;
+        }
+        let ctx = Arc::new(ShardBuild {
+            wt: Arc::clone(wt),
+            group_abs_sums: Arc::clone(group_abs_sums),
+            ranges,
+        });
+        let n = ctx.ranges.len();
+        // Routed so shard i is built (first-touched) on node i.
+        let shards = pool.run_ctx_routed(&ctx, n, |_, i| i, build_shard);
+        Some(WeightSnapshot { wt: Arc::clone(wt), shards: Arc::new(shards) })
+    }
+
+    /// Publish a new weight matrix under live traffic: build its shards
+    /// (placed for `pool`, like [`with_pool`](Self::with_pool)), swap the
+    /// live snapshot, and retire the old one through the engine's
+    /// [`ReclaimDomain`]. In-flight GEMVs that pinned the old snapshot
+    /// finish on it bit-identically; calls entering after the swap read
+    /// the new weights. The retired shards are dropped — observably, via
+    /// [`reclaim_stats`](Self::reclaim_stats) — once the last pre-swap
+    /// reader is gone.
+    ///
+    /// The new matrix must match the engine's immutable shape contract
+    /// (`[N, K]`, same scale group size) — logits width, activation
+    /// length, and chunk geometry must not change under a live serving
+    /// loop. Tunables (`use_prt`, `tile_cols`, …) are engine state, not
+    /// snapshot state, and are unaffected.
+    pub fn publish_weights(&self, wt: QuantizedMatrix, pool: &WorkerPool) -> Result<()> {
+        if wt.rows != self.n || wt.cols != self.k {
+            bail!(
+                "weight swap shape mismatch: engine serves [{}, {}], got [{}, {}]",
+                self.n,
+                self.k,
+                wt.rows,
+                wt.cols
+            );
+        }
+        if wt.group_size != self.group_size {
+            bail!(
+                "weight swap group mismatch: engine group {}, got {}",
+                self.group_size,
+                wt.group_size
+            );
+        }
+        Self::check_shape(&wt, self.nbw);
+        // Build the full new snapshot *before* taking the snapshot lock:
+        // the expensive part (abs sums + first-touch shard copies) runs
+        // concurrently with in-flight GEMVs on the old weights.
+        let mut next = Self::build_snapshot(wt, None);
+        if let Some(placed) =
+            Self::build_snapshot_for_pool(&next.wt, &next.shards[0].group_abs_sums, pool)
+        {
+            next = placed;
+        }
+        let old = std::mem::replace(&mut *self.snap.lock().unwrap(), next);
+        // Swap happened first, so readers pinning from here on can only
+        // see the new snapshot; retire makes the old one collectable once
+        // every earlier pin is released.
+        self.domain.retire(Box::new(old));
+        self.domain.collect();
+        Ok(())
+    }
+
+    /// Counters of the engine's snapshot reclamation (see
+    /// [`ReclaimDomain`]): how many snapshots were retired by weight
+    /// swaps, how many have been dropped, and how many await a grace
+    /// period behind in-flight GEMVs.
+    pub fn reclaim_stats(&self) -> ReclaimStats {
+        self.domain.stats()
     }
 
     fn check_shape(wt: &QuantizedMatrix, nbw: u32) {
@@ -338,38 +452,44 @@ impl LutGemvEngine {
     /// Number of weight shards (node groups this engine was placed for;
     /// 1 when unplaced).
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        self.snap.lock().unwrap().shards.len()
     }
 
     /// The shard column boundaries, `(col_start, col_end)` per shard —
     /// observability for placement tests and the perf bench.
     pub fn shard_bounds(&self) -> Vec<(usize, usize)> {
-        self.shards.iter().map(|s| (s.col_start, s.col_end)).collect()
+        let snap = self.snap.lock().unwrap();
+        snap.shards.iter().map(|s| (s.col_start, s.col_end)).collect()
     }
 
     pub fn n(&self) -> usize {
-        self.wt.rows
+        self.n
     }
 
     pub fn k(&self) -> usize {
-        self.wt.cols
+        self.k
     }
 
     pub fn nbw(&self) -> u32 {
         self.nbw
     }
 
-    pub fn weights(&self) -> &QuantizedMatrix {
-        &self.wt
+    /// The *current* master weight matrix (the reference oracle). Returns
+    /// a clone of the snapshot's `Arc`: a concurrent
+    /// [`publish_weights`](Self::publish_weights) swaps what future calls
+    /// see, but never invalidates a matrix already handed out.
+    pub fn weights(&self) -> Arc<QuantizedMatrix> {
+        Arc::clone(&self.snap.lock().unwrap().wt)
     }
 
-    /// The scratch/output recycling arena of the *first* shard (tests
-    /// assert steady-state buffer reuse through its counters; unplaced
-    /// engines have exactly one shard, so this is *the* arena for them).
-    /// Placed engines keep one arena per node so checkout never crosses a
-    /// socket.
-    pub fn scratch_arena(&self) -> &ScratchArena {
-        &self.shards[0].arena
+    /// The scratch/output recycling arena of the *first* shard of the
+    /// current snapshot (tests assert steady-state buffer reuse through
+    /// its counters; unplaced engines have exactly one shard, so this is
+    /// *the* arena for them). Placed engines keep one arena per node so
+    /// checkout never crosses a socket. Arenas belong to a snapshot and
+    /// are retired with it on a weight swap.
+    pub fn scratch_arena(&self) -> Arc<ScratchArena> {
+        Arc::clone(&self.snap.lock().unwrap().shards[0].arena)
     }
 
     /// Compute `y = x · W` for a batch of activation vectors, exactly,
@@ -452,8 +572,16 @@ impl LutGemvEngine {
             assert_eq!(x.bits as usize, act_bits, "mixed activation widths in one batch");
         }
 
+        // Pin the reclaim domain for the whole call, then take one clone
+        // of the snapshot's shard list: a concurrent `publish_weights`
+        // cannot reclaim these shards until the guard drops, and this call
+        // computes entirely on the generation it pinned — bit-identical to
+        // a call with no swap in flight.
+        let _reclaim_pin = self.domain.pin();
+        let shards = Arc::clone(&self.snap.lock().unwrap().shards);
+
         let nbw = self.nbw as usize;
-        let group = self.wt.group_size;
+        let group = self.group_size;
         let chunks_per_group = group.div_ceil(nbw);
         let groups = k / group;
         let n_chunks = groups * chunks_per_group;
@@ -481,7 +609,7 @@ impl LutGemvEngine {
         // shard boundary, so every tile has exactly one home node).
         let tile_cols = self.tile_cols.max(1);
         tiles.clear();
-        for (si, shard) in self.shards.iter().enumerate() {
+        for (si, shard) in shards.iter().enumerate() {
             let mut c = shard.col_start;
             while c < shard.col_end {
                 let e = (c + tile_cols).min(shard.col_end);
@@ -491,7 +619,7 @@ impl LutGemvEngine {
         }
         let n_tiles = tiles.len();
         let ctx = Arc::new(GemvCall {
-            shards: Arc::clone(&self.shards),
+            shards: Arc::clone(&shards),
             nbw: self.nbw,
             use_prt: self.use_prt,
             prt_capacity: self.prt_capacity.max(1),
@@ -508,7 +636,7 @@ impl LutGemvEngine {
         // placed for this pool's shape; otherwise (unplaced engine, or a
         // pool with a different group count) fall back to locality-blind
         // fan-out — same results either way.
-        let dispatched = if self.shards.len() > 1 && self.shards.len() == pool.nodes() {
+        let dispatched = if shards.len() > 1 && shards.len() == pool.nodes() {
             pool.try_run_ctx_routed(&ctx, n_tiles, |call, t| call.tiles[t].shard, tile_job)
         } else {
             pool.try_run_ctx(&ctx, n_tiles, tile_job)
@@ -543,7 +671,7 @@ impl LutGemvEngine {
                 data[bi * n + report.col_start..bi * n + report.col_end]
                     .copy_from_slice(&report.out[bi * width..(bi + 1) * width]);
             }
-            self.shards[report.shard].arena.checkin_out(report.out);
+            shards[report.shard].arena.checkin_out(report.out);
         }
 
         // Every tile job dropped its context clone before reporting, so
@@ -636,7 +764,7 @@ mod tests {
                 let eng = LutGemvEngine::new(wt, nbw);
                 let (ys, _) = eng.gemv_batch(&xs);
                 for (bi, x) in xs.iter().enumerate() {
-                    let want = reference_gemv(eng.weights(), x);
+                    let want = reference_gemv(&eng.weights(), x);
                     assert_eq!(ys.row(bi), want.as_slice(), "level={level} nbw={nbw}");
                 }
             }
@@ -663,7 +791,7 @@ mod tests {
                 let eng = LutGemvEngine::new(wt, nbw);
                 let (ys, _) = eng.gemv_batch(&xs);
                 for (bi, x) in xs.iter().enumerate() {
-                    let want = reference_gemv(eng.weights(), x);
+                    let want = reference_gemv(&eng.weights(), x);
                     if ys.row(bi) != want.as_slice() {
                         return Err(format!("mismatch at level={level} nbw={nbw}"));
                     }
@@ -742,7 +870,7 @@ mod tests {
         let eng = LutGemvEngine::new(wt, 3);
         let (ys, _) = eng.gemv_batch(&xs);
         for (bi, x) in xs.iter().enumerate() {
-            assert_eq!(ys.row(bi), reference_gemv(eng.weights(), x).as_slice());
+            assert_eq!(ys.row(bi), reference_gemv(&eng.weights(), x).as_slice());
         }
     }
 
@@ -759,7 +887,7 @@ mod tests {
         q[2] = -1;
         q[3] = 1;
         let x = QuantizedVector { q, scale: 0.33, bits: 8 };
-        assert_eq!(eng.gemv(&x), reference_gemv(eng.weights(), &x));
+        assert_eq!(eng.gemv(&x), reference_gemv(&eng.weights(), &x));
     }
 
     #[test]
@@ -928,10 +1056,107 @@ mod tests {
         let eng = LutGemvEngine::with_pool(wt, 4, &pool);
         assert_eq!(eng.shard_count(), 1);
         // Single shard shares the master matrix Arc — no slice was built.
-        assert!(Arc::ptr_eq(&eng.wt, &eng.shards[0].wt));
+        {
+            let snap = eng.snap.lock().unwrap();
+            assert!(Arc::ptr_eq(&snap.wt, &snap.shards[0].wt));
+        }
         let (ys, _) = eng.gemv_batch(&xs);
         for (bi, x) in xs.iter().enumerate() {
-            assert_eq!(ys.row(bi), reference_gemv(eng.weights(), x).as_slice());
+            assert_eq!(ys.row(bi), reference_gemv(&eng.weights(), x).as_slice());
         }
+    }
+
+    #[test]
+    fn published_weights_serve_new_matrix_and_reclaim_old() {
+        use std::sync::Weak;
+        let mut prng = Prng::new(127);
+        let (wt_a, xs) = random_setup(&mut prng, 12, 64, QuantLevel::Q4, 32);
+        let (wt_b, _) = random_setup(&mut prng, 12, 64, QuantLevel::Q4, 32);
+        let eng = LutGemvEngine::new(wt_a, 4);
+        let pool = WorkerPool::new(2);
+        let want_a: Vec<Vec<f32>> =
+            xs.iter().map(|x| reference_gemv(&eng.weights(), x)).collect();
+        let old_weak: Weak<QuantizedMatrix> =
+            Arc::downgrade(&eng.snap.lock().unwrap().wt);
+        let mut out = GemvOutput::new();
+        eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+        for (bi, want) in want_a.iter().enumerate() {
+            assert_eq!(out.row(bi), want.as_slice());
+        }
+
+        let oracle_b = LutGemvEngine::new(wt_b.clone(), 4);
+        eng.publish_weights(wt_b, &pool).unwrap();
+        eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+        for (bi, x) in xs.iter().enumerate() {
+            assert_eq!(
+                out.row(bi),
+                reference_gemv(&oracle_b.weights(), x).as_slice(),
+                "post-swap GEMV not serving the new weights"
+            );
+        }
+        // No reader was pinned across the swap → the old snapshot is gone.
+        assert!(old_weak.upgrade().is_none(), "retired snapshot leaked");
+        let s = eng.reclaim_stats();
+        assert_eq!((s.retired, s.reclaimed, s.pending, s.active_pins), (1, 1, 0, 0));
+    }
+
+    #[test]
+    fn publish_rejects_mismatched_shapes() {
+        let mut prng = Prng::new(129);
+        let (wt, _) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let eng = LutGemvEngine::new(wt, 4);
+        let pool = WorkerPool::serial();
+        let (wrong_n, _) = random_setup(&mut prng, 9, 64, QuantLevel::Q4, 32);
+        assert!(eng.publish_weights(wrong_n, &pool).is_err());
+        let (wrong_k, _) = random_setup(&mut prng, 8, 96, QuantLevel::Q4, 32);
+        assert!(eng.publish_weights(wrong_k, &pool).is_err());
+        let (wrong_group, _) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 16);
+        assert!(eng.publish_weights(wrong_group, &pool).is_err());
+        assert_eq!(eng.reclaim_stats().retired, 0, "failed publish must not swap");
+    }
+
+    #[test]
+    fn in_flight_pin_defers_snapshot_reclaim() {
+        let mut prng = Prng::new(131);
+        let (wt_a, xs) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let (wt_b, _) = random_setup(&mut prng, 8, 64, QuantLevel::Q4, 32);
+        let eng = LutGemvEngine::new(wt_a, 4);
+        let pool = WorkerPool::serial();
+        let old_weak = Arc::downgrade(&eng.snap.lock().unwrap().wt);
+        let guard = eng.domain.pin(); // stands in for a GEMV mid-dispatch
+        eng.publish_weights(wt_b, &pool).unwrap();
+        assert!(old_weak.upgrade().is_some(), "grace period violated under pin");
+        assert_eq!(eng.reclaim_stats().pending, 1);
+        // Post-swap calls run on the new weights even while the old
+        // generation's pin is alive — their own pins don't extend it.
+        let (ys, _) = eng.gemv_batch(&xs);
+        let oracle = eng.weights();
+        for (bi, x) in xs.iter().enumerate() {
+            assert_eq!(ys.row(bi), reference_gemv(&oracle, x).as_slice());
+        }
+        assert_eq!(eng.reclaim_stats().pending, 1);
+        drop(guard);
+        assert!(old_weak.upgrade().is_none(), "release did not reclaim");
+        let s = eng.reclaim_stats();
+        assert_eq!((s.retired, s.reclaimed, s.pending), (1, 1, 0));
+    }
+
+    #[test]
+    fn publish_on_placed_pool_rebuilds_shards() {
+        use crate::runtime::topology::NumaPolicy;
+        let mut prng = Prng::new(133);
+        let (wt_a, xs) = random_setup(&mut prng, 37, 96, QuantLevel::Q4, 32);
+        let (wt_b, _) = random_setup(&mut prng, 37, 96, QuantLevel::Q4, 32);
+        let pool = WorkerPool::with_policy(4, &NumaPolicy::Explicit(vec![vec![0], vec![1]]));
+        let mut eng = LutGemvEngine::with_pool(wt_a, 4, &pool);
+        eng.tile_cols = 5;
+        let oracle = LutGemvEngine::new(wt_b.clone(), 4);
+        let (want, want_stats) = oracle.gemv_batch(&xs);
+        eng.publish_weights(wt_b, &pool).unwrap();
+        assert_eq!(eng.shard_count(), 2, "publish lost the pool placement");
+        let mut out = GemvOutput::new();
+        let stats = eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+        assert_eq!(out, want, "post-swap placed dispatch drifted");
+        assert_eq!(stats, want_stats);
     }
 }

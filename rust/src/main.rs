@@ -248,7 +248,7 @@ fn crosscheck(mut args: Args) -> Result<()> {
     // Rust engine result (itself checked against the naive reference).
     let eng = LutGemvEngine::new(wt, 4);
     let rust_out = eng.gemv(&qx);
-    let ref_out = reference_gemv(eng.weights(), &qx);
+    let ref_out = reference_gemv(&eng.weights(), &qx);
     assert_eq!(rust_out, ref_out, "rust engine vs naive reference");
 
     // Compiled Pallas kernel result.

@@ -4,13 +4,26 @@
 //!
 //! - [`pool`]: the persistent, NUMA-aware worker pool (the software
 //!   analogue of the paper's 16 thread-pipelines). Workers are spawned in
-//!   node groups, optionally pinned to their node's CPUs, with per-group
-//!   job queues so callers can route work to the node that owns its data.
-//!   Dispatch is deterministic: results come back in item order, and
-//!   outputs are bit-identical at every thread count and placement. Dead
-//!   workers are healed (bounded respawn budget, inline re-execution of
-//!   lost chunks, degraded-serial fallback) and item failures surface as
-//!   typed [`PoolError`]s, never dispatcher panics;
+//!   node groups, optionally pinned to their node's CPUs. The default
+//!   dispatch backend is lock-free work stealing ([`PoolMode::Steal`]):
+//!   per-worker Chase–Lev deques fed by per-node injectors, per-item
+//!   claim CAS for exactly-once execution, and a completion-count epoch
+//!   instead of a results barrier; `SAIL_POOL=channel` selects the
+//!   original per-group job-queue dispatcher. Dispatch is deterministic
+//!   either way: results come back in item order, and outputs are
+//!   bit-identical at every thread count, placement, backend, and steal
+//!   schedule. Dead workers are healed (bounded respawn budget, inline
+//!   reclaim of stranded items, degraded-serial fallback with a
+//!   per-dispatch recovery probe) and item failures surface as typed
+//!   [`PoolError`]s, never dispatcher panics;
+//! - [`steal`]: the `std`-only work-stealing primitives under the pool —
+//!   the fixed-capacity [`StealDeque`], the generation-checked
+//!   [`BlockTable`] of in-flight dispatches, and the packed
+//!   [`steal::TaskRef`];
+//! - [`reclaim`]: epoch-based deferred reclamation ([`ReclaimDomain`])
+//!   so engines can publish a new `Arc` weight-shard snapshot under live
+//!   traffic and retire the old one only after every in-flight reader is
+//!   gone — the mechanism behind `ServingFrontend::swap_weights`;
 //! - [`faults`]: deterministic, pool-scoped fault injection
 //!   (`SAIL_FAULTS=seed:spec`) — seeded schedules of worker deaths, slow
 //!   tiles, poisoned scratch checkouts, and KV-write failures that the
@@ -31,12 +44,16 @@ pub mod executor;
 pub mod faults;
 pub mod manifest;
 pub mod pool;
+pub mod reclaim;
+pub mod steal;
 pub mod topology;
 pub mod weights;
 
 pub use executor::{DecodeModel, GemvTile};
 pub use faults::{FaultCell, FaultKind, FaultPlan, KvFault};
 pub use manifest::Manifest;
-pub use pool::{PoolError, WorkerPool};
+pub use pool::{PoolError, PoolMode, PoolStats, WorkerPool};
+pub use reclaim::{ReclaimDomain, ReclaimGuard, ReclaimStats};
+pub use steal::{BlockTable, Processed, StealDeque, StealTask};
 pub use topology::{NumaPolicy, Placement, Topology};
 pub use weights::{DType, WeightArray, WeightsFile};

@@ -7,76 +7,97 @@
 //!
 //! 1. **Determinism** — results are returned indexed by item, and callers
 //!    combine them in item order, so output (and any f32 reduction a caller
-//!    performs) is bit-identical at every thread count *and every placement
-//!    policy* — where a worker runs changes when a tile finishes, never
-//!    what it computes. The fault-recovery ladder preserves this: a lost
-//!    chunk is re-executed (inline, same items, same `g`), so a recovered
-//!    dispatch returns exactly the bytes the fault-free one would.
-//! 2. **No dependencies** — built on `std::thread` + `std::sync::mpsc`; no
+//!    performs) is bit-identical at every thread count, every placement
+//!    policy, *and every steal schedule* — where (and in what order) a
+//!    worker runs changes when a tile finishes, never what it computes.
+//!    The fault-recovery ladder preserves this: a lost item is re-executed
+//!    (inline, same item, same `g`), so a recovered dispatch returns
+//!    exactly the bytes the fault-free one would.
+//! 2. **No dependencies** — built on `std::thread` + `std` atomics; no
 //!    rayon/crossbeam offline. Thread pinning goes through the two-line
 //!    `sched_setaffinity` shim in [`super::topology`], the only `unsafe`
 //!    in the runtime layer.
-//! 3. **NUMA locality** — workers are spawned in *node groups* (one job
-//!    queue per group) resolved from the `SAIL_NUMA` policy
-//!    ([`NumaPolicy`]): on a multi-node host each group's workers are
-//!    pinned to their node's CPUs, and [`run_ctx_routed`] lets a caller
-//!    steer each item to the group that owns its data — the engine routes
-//!    every column tile to the node holding that tile's weight shard.
-//!    Single-node hosts (and `SAIL_NUMA=off`) degrade to one unpinned
-//!    group, which is exactly the pre-NUMA pool.
+//! 3. **NUMA locality** — workers are spawned in *node groups* resolved
+//!    from the `SAIL_NUMA` policy ([`NumaPolicy`]): on a multi-node host
+//!    each group's workers are pinned to their node's CPUs, and
+//!    [`run_ctx_routed`] lets a caller steer each item to the group that
+//!    owns its data. The steal order respects this: a worker drains its
+//!    own deque and its node's injector first, steals from same-node
+//!    siblings next, and crosses the node boundary only when its whole
+//!    group is dry.
 //! 4. **Fault tolerance** — a dead worker is a *recoverable* event, not a
-//!    process abort. The degradation ladder, in order: (a) the dispatcher
-//!    polls its results barrier with a short timeout and **heals** the
-//!    pool on stall — dead workers are joined and respawned on their own
-//!    node, within a bounded respawn budget (default `2×threads`, min 4);
-//!    (b) a chunk that died with its worker is re-executed **inline** on
-//!    the dispatching thread (bit-identical by construction — same items,
-//!    same pure `g`); (c) a node group with zero live workers and no
-//!    budget left marks the pool **degraded**: its queue is drained
-//!    inline and every later dispatch runs serially on the caller's
-//!    thread — slower, never wrong, never deadlocked. An item that
-//!    *itself* panics (a compute bug, not a dead worker) fails the retry
-//!    too and surfaces as a typed [`PoolError`] from the `try_*` entry
-//!    points. Deterministic fault injection for all of this lives in
-//!    [`super::faults`]; arm a plan with
-//!    [`arm_faults`](WorkerPool::arm_faults).
+//!    process abort: stalled dispatches heal the pool (reap + respawn
+//!    within a bounded budget), lost items are re-executed inline
+//!    (bit-identical), and a group left with zero workers and zero budget
+//!    degrades the pool to inline-serial dispatch — slower, never wrong,
+//!    never deadlocked. Degradation is no longer permanent: each later
+//!    dispatch runs one bounded recovery probe ([`Shared::try_recover`])
+//!    and un-latches once every group has a live worker again.
+//!    Deterministic fault injection lives in [`super::faults`].
 //!
-//! The workers are **long-lived**: spawned once, blocking on their group's
-//! job channel, serving every dispatch until the pool is dropped — one
-//! serving engine per model can share a single process-wide
-//! `Arc<WorkerPool>`, and per-GEMV dispatch cost is a handful of channel
-//! sends, not thread spawns.
+//! ## Two dispatch backends, selected by [`PoolMode`] / `SAIL_POOL`
 //!
-//! Each [`run_ctx`](WorkerPool::run_ctx) / [`run_ctx_routed`] call is one
-//! *generation*: the items are split into contiguous chunks (tiles are
-//! uniform cost, so static partitioning balances within one tile of
-//! ideal), one job per chunk is enqueued on the owning group's queue, and
-//! the caller blocks on a per-generation results channel until every chunk
-//! has reported — that results channel is the generation barrier, so
-//! overlapping dispatches from different callers can never steal each
-//! other's results. Jobs are pure compute and never block on the pool, so
-//! enqueueing more jobs than workers only queues them (saturation-tested
-//! in `tests/shared_pool_serving.rs`); do **not** dispatch onto the pool
-//! from inside a job, as nested dispatch can idle-wait every worker.
+//! **Steal (default)** — the lock-free path. Each dispatch registers a
+//! *dispatch block* (items, per-item claim words, per-item result slots, a
+//! completion counter) in a generation-checked [`BlockTable`], packs one
+//! [`TaskRef`] per item, and pushes them onto the destination group's
+//! injector. Workers move refs from the injector into their own
+//! fixed-capacity Chase–Lev [`StealDeque`] (owner pops LIFO, thieves steal
+//! FIFO) and *claim* each item with a CAS before executing it — the claim,
+//! not the queue, is the exactly-once mechanism, so duplicated or stale
+//! refs are benign. The dispatch completes when the completion count
+//! reaches the item count (a per-block epoch): with ragged tile costs a
+//! dispatch finishes when the *work* is done, not when the slowest queue
+//! drains, because idle workers steal the tail.
+//!
+//! **Channel** — the original per-group `mpsc` job queue with a
+//! per-dispatch results channel as the barrier, kept selectable
+//! (`SAIL_POOL=channel`) so the proven dispatcher stays exercised while
+//! the steal path builds its record. Outputs and stats are bit-identical
+//! between the two backends by construction.
+//!
+//! Workers are **long-lived**: spawned once, serving every dispatch until
+//! the pool drops — one serving engine per model can share a single
+//! process-wide `Arc<WorkerPool>`. Jobs are pure compute and never block
+//! on the pool; do **not** dispatch onto the pool from inside a job.
 //!
 //! [`run_ctx_routed`]: WorkerPool::run_ctx_routed
 //! [`NumaPolicy`]: super::topology::NumaPolicy
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::faults::{FaultCell, FaultPlan};
+use super::steal::{pack_ref, unpack_ref, BlockTable, Processed, StealDeque, StealTask, TaskRef};
 use super::topology::{pin_current_thread, NumaPolicy, Placement};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// How often a blocked dispatcher wakes to reap/respawn dead workers.
-/// Fault-free dispatches only pay this when a GEMV outlasts the poll
-/// (heal on a healthy pool is a handful of `is_finished` checks).
+/// How often a blocked dispatcher wakes to reap/respawn dead workers and
+/// reclaim stalled items. Fault-free dispatches only pay this when a GEMV
+/// outlasts the poll (heal on a healthy pool is a handful of
+/// `is_finished` checks).
 const HEAL_POLL: Duration = Duration::from_millis(10);
+
+/// Claim word: item still queued, executable by whoever CASes first.
+const CLAIM_QUEUED: u32 = 0;
+/// Claim word: item executed and its result stored (terminal state).
+const CLAIM_DONE: u32 = 1;
+/// Claim word: item claimed by a dispatcher's inline reclaim.
+const DISPATCHER_TOKEN: u32 = 2;
+/// First worker incarnation token; tokens are minted monotonically and
+/// never reused, so a dead incarnation's claims are unambiguous.
+const FIRST_WORKER_TOKEN: u32 = 3;
+
+/// Dispatch latencies retained for the p50/p99 in [`PoolStats`].
+const LATENCY_RING: usize = 4096;
+/// How many refs a worker moves from its node injector into its own deque
+/// per refill (locality batch; correctness never depends on it).
+const INJECTOR_BATCH: usize = 16;
 
 /// A typed dispatch failure: the pool could not produce results for
 /// `items` even after recovery (worker respawn + inline re-execution).
@@ -105,6 +126,83 @@ impl std::fmt::Display for PoolError {
 
 impl std::error::Error for PoolError {}
 
+/// Which dispatch backend a pool runs (`SAIL_POOL=steal|channel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Work-stealing deques + claim CAS + completion-count epoch (the
+    /// default).
+    Steal,
+    /// Per-group job channels + per-dispatch results barrier (the
+    /// original dispatcher, kept as the env-selectable fallback).
+    Channel,
+}
+
+impl PoolMode {
+    /// Strict parse of a `SAIL_POOL` value: `steal` or `channel`, or a
+    /// typed error (malformed config is an `Err`, never a panic).
+    pub fn parse(s: &str) -> Result<PoolMode, String> {
+        match s.trim() {
+            "steal" => Ok(PoolMode::Steal),
+            "channel" => Ok(PoolMode::Channel),
+            other => Err(format!("invalid SAIL_POOL value '{other}': want steal|channel")),
+        }
+    }
+
+    /// The process-wide mode: `SAIL_POOL` when set and well-formed, else
+    /// [`PoolMode::Steal`]. Lenient on malformed values (warn and fall
+    /// back — pool construction stays infallible);
+    /// [`parse`](Self::parse) is the strict form.
+    pub fn from_env() -> PoolMode {
+        match std::env::var("SAIL_POOL") {
+            Ok(v) => match Self::parse(&v) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("sail: {e}; falling back to steal");
+                    PoolMode::Steal
+                }
+            },
+            Err(_) => PoolMode::Steal,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            PoolMode::Steal => "steal",
+            PoolMode::Channel => "channel",
+        }
+    }
+}
+
+/// Observability snapshot of a pool's dispatch machinery (flows into
+/// `ServingMetrics` and the perf benches, so barrier-removal gains are
+/// measured rather than asserted).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PoolStats {
+    /// `"steal"`, `"channel"`, or `"serial"` (inline pools).
+    pub backend: &'static str,
+    /// Pool width.
+    pub workers: usize,
+    /// Pooled dispatches served so far.
+    pub dispatches: u64,
+    /// Per-worker-lane executed-item counts (empty on channel/serial).
+    pub executed: Vec<u64>,
+    /// Per-worker-lane stolen-ref counts (empty on channel/serial).
+    pub stolen: Vec<u64>,
+    /// Steals that crossed a node-group boundary.
+    pub cross_node_steals: u64,
+    /// High-water mark of any node injector's depth at enqueue time.
+    pub queue_depth_hwm: u64,
+    /// Items the dispatcher executed inline during recovery (dead-worker
+    /// reclaim on the steal path, lost-chunk re-execution on the channel
+    /// path).
+    pub inline_reclaims: u64,
+    /// Median pooled-dispatch latency over the last [`LATENCY_RING`]
+    /// dispatches, microseconds.
+    pub dispatch_p50_us: f64,
+    /// 99th-percentile pooled-dispatch latency, microseconds.
+    pub dispatch_p99_us: f64,
+}
+
 fn panic_detail(p: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
@@ -113,6 +211,21 @@ fn panic_detail(p: Box<dyn std::any::Any + Send>) -> String {
     } else {
         "job panicked (non-string payload)".to_string()
     }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Run items `[start, end)` on the calling thread, catching a per-item
@@ -129,7 +242,7 @@ fn run_inline<C, T, G>(
 where
     C: Send + Sync + 'static,
     T: Send + 'static,
-    G: Fn(&C, usize) -> T + Send + Copy + 'static,
+    G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
 {
     let mut out = Vec::with_capacity(end - start);
     for i in start..end {
@@ -144,38 +257,331 @@ where
     Ok(out)
 }
 
-/// One node group's job queue (the workers of that group are the only
-/// consumers, so a job sent here runs on that node).
+/// One node group's job queue (channel backend; the workers of that group
+/// are the only consumers, so a job sent here runs on that node).
 struct NodeQueue {
     jobs: Mutex<Sender<Job>>,
-    workers: usize,
 }
 
-/// One live worker thread and the node group it serves.
+/// One live worker thread: the node group it serves, its steal lane and
+/// incarnation token (0/0 on the channel backend), and its join handle.
 struct WorkerSlot {
     node: usize,
+    lane: usize,
+    token: u32,
     handle: JoinHandle<()>,
 }
 
-/// The long-lived half of a threaded pool: per-node job queues feeding the
-/// workers, the workers themselves (reaped/respawned by `heal`, joined
-/// when the pool drops), and the respawn accounting.
+/// The lock-free dispatch core shared by steal-mode workers: the block
+/// table, per-node injectors, per-lane deques, parking, and the steal
+/// counters.
+struct StealCore {
+    table: BlockTable,
+    /// Unbounded per-node-group overflow/entry queues; dispatchers push
+    /// here, workers refill their deques from their own node's first.
+    injectors: Vec<Mutex<VecDeque<TaskRef>>>,
+    /// One fixed-capacity Chase–Lev deque per worker lane. A respawned
+    /// worker adopts its dead predecessor's lane (and deque).
+    deques: Vec<StealDeque>,
+    /// Lane ids per node group (steal-order planning).
+    node_lanes: Vec<Vec<usize>>,
+    /// Idle workers park here; dispatchers notify after enqueueing.
+    park: (Mutex<()>, Condvar),
+    shutdown: AtomicBool,
+    /// Next worker incarnation token (monotone, never reused).
+    next_token: AtomicU32,
+    /// Tokens of reaped (dead) incarnations — their dangling claims are
+    /// reclaimable by the dispatcher.
+    dead_tokens: Mutex<HashSet<u32>>,
+    /// Seeded forced-steal chaos (0 = off): flips worker acquire order to
+    /// steal-first pseudo-randomly, for the steal-schedule fuzzer.
+    chaos: AtomicU64,
+    /// Per-lane items executed.
+    executed: Vec<AtomicU64>,
+    /// Per-lane refs acquired by stealing (vs own deque/injector).
+    stolen: Vec<AtomicU64>,
+    cross_node_steals: AtomicU64,
+    /// Deepest injector observed at enqueue time.
+    queue_hwm: AtomicU64,
+}
+
+impl StealCore {
+    /// One acquire attempt for `lane` on `node`: own deque, own injector,
+    /// then stealing (same-node siblings, other-node injectors, other-node
+    /// deques). Chaos mode pseudo-randomly tries stealing first so the
+    /// fuzzer exercises schedules a healthy run would rarely produce.
+    fn acquire(&self, lane: usize, node: usize, token: u32, scans: &mut u64) -> Option<TaskRef> {
+        *scans += 1;
+        let chaos = self.chaos.load(Ordering::Relaxed);
+        let steal_first =
+            chaos != 0 && splitmix64(chaos ^ ((token as u64) << 32) ^ *scans) & 1 == 1;
+        if !steal_first {
+            if let Some(r) = self.acquire_local(lane, node) {
+                return Some(r);
+            }
+        }
+        if let Some(r) = self.acquire_stolen(lane, node) {
+            return Some(r);
+        }
+        if steal_first {
+            self.acquire_local(lane, node)
+        } else {
+            None
+        }
+    }
+
+    fn acquire_local(&self, lane: usize, node: usize) -> Option<TaskRef> {
+        if let Some(r) = self.deques[lane].pop() {
+            return Some(r);
+        }
+        self.drain_injector(lane, node)
+    }
+
+    /// Pop one ref from `node`'s injector and move up to
+    /// [`INJECTOR_BATCH`] more into `lane`'s own deque.
+    fn drain_injector(&self, lane: usize, node: usize) -> Option<TaskRef> {
+        let mut q = self.injectors[node].lock().unwrap();
+        let first = q.pop_front()?;
+        for _ in 0..INJECTOR_BATCH {
+            let Some(r) = q.pop_front() else { break };
+            if let Err(r) = self.deques[lane].push(r) {
+                q.push_front(r);
+                break;
+            }
+        }
+        Some(first)
+    }
+
+    fn acquire_stolen(&self, lane: usize, node: usize) -> Option<TaskRef> {
+        // Same-node siblings first (preserves PR-4 locality), rotated by
+        // our own position so victims are spread.
+        let siblings = &self.node_lanes[node];
+        let k = siblings.len();
+        let pos = siblings.iter().position(|&l| l == lane).unwrap_or(0);
+        for off in 1..k {
+            let victim = siblings[(pos + off) % k];
+            if let Some(r) = self.deques[victim].steal() {
+                self.stolen[lane].fetch_add(1, Ordering::Relaxed);
+                return Some(r);
+            }
+        }
+        // Cross-node only when the whole group is dry: injectors (oldest
+        // work) before sibling deques.
+        let n_nodes = self.injectors.len();
+        for d in 1..n_nodes {
+            let other = (node + d) % n_nodes;
+            let r = self.injectors[other].lock().unwrap().pop_front();
+            if let Some(r) = r {
+                self.stolen[lane].fetch_add(1, Ordering::Relaxed);
+                self.cross_node_steals.fetch_add(1, Ordering::Relaxed);
+                return Some(r);
+            }
+        }
+        for d in 1..n_nodes {
+            let other = (node + d) % n_nodes;
+            for &victim in &self.node_lanes[other] {
+                if let Some(r) = self.deques[victim].steal() {
+                    self.stolen[lane].fetch_add(1, Ordering::Relaxed);
+                    self.cross_node_steals.fetch_add(1, Ordering::Relaxed);
+                    return Some(r);
+                }
+            }
+        }
+        None
+    }
+
+    /// Resolve and offer one ref; stale refs are dropped silently.
+    fn run_ref(&self, r: TaskRef, lane: usize, token: u32) -> Processed {
+        let (slot, generation, item) = unpack_ref(r);
+        let Some(task) = self.table.lookup(slot, generation) else {
+            return Processed::Skipped;
+        };
+        let p = task.process(item, token);
+        if p == Processed::Executed {
+            self.executed[lane].fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+fn worker_loop_steal(core: &StealCore, lane: usize, node: usize, token: u32) {
+    let mut scans = 0u64;
+    loop {
+        if core.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match core.acquire(lane, node, token, &mut scans) {
+            Some(r) => {
+                // An injected worker death (Die) leaves the claim dangling
+                // for the dispatcher's dead-incarnation reclaim — exactly
+                // what a crashed worker looks like.
+                if core.run_ref(r, lane, token) == Processed::Die {
+                    return;
+                }
+            }
+            None => {
+                let guard = core.park.0.lock().unwrap();
+                if core.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let _ = core.park.1.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            }
+        }
+    }
+}
+
+/// Per-item result slot (filled exactly once by whoever wins the claim).
+type ItemResult<T> = Mutex<Option<Result<T, String>>>;
+
+/// One in-flight steal-mode dispatch: items, claims, results, and the
+/// completion epoch. Registered in the [`BlockTable`] for the duration of
+/// the dispatch; its claim CAS — not the queues — is the exactly-once
+/// mechanism.
+struct DispatchBlock<C, T, G> {
+    /// The caller's context, cloned per executed item and dropped before
+    /// the completion count ticks — so when the dispatch completes, the
+    /// caller's `Arc` is provably the last one.
+    ctx: Mutex<Option<Arc<C>>>,
+    g: G,
+    n: usize,
+    claims: Vec<AtomicU32>,
+    results: Vec<ItemResult<T>>,
+    done: AtomicUsize,
+    complete: (Mutex<()>, Condvar),
+    faults: Arc<FaultCell>,
+}
+
+impl<C, T, G> DispatchBlock<C, T, G>
+where
+    C: Send + Sync + 'static,
+    T: Send + 'static,
+    G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
+{
+    /// Execute a claimed item and mark it done. The executor already owns
+    /// the claim (stored `claimer`); this stores the result, flips the
+    /// claim to [`CLAIM_DONE`], and ticks the completion count.
+    fn execute_claimed(&self, i: usize) {
+        let ctx = self.ctx.lock().unwrap().clone();
+        let outcome = match ctx {
+            Some(ctx) => {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (self.g)(ctx.as_ref(), i)
+                }));
+                // Drop our context clone *before* the done tick: the
+                // AcqRel tick + the dispatcher's Acquire load order this
+                // drop before the dispatcher recovers the context.
+                drop(ctx);
+                r.map_err(panic_detail)
+            }
+            // Unreachable in practice: a winnable claim implies an
+            // incomplete block, which still holds its context. Complete
+            // the item as an error rather than wedge the dispatch.
+            None => Err("dispatch context already retired".to_string()),
+        };
+        *self.results[i].lock().unwrap() = Some(outcome);
+        self.claims[i].store(CLAIM_DONE, Ordering::Release);
+        let prev = self.done.fetch_add(1, Ordering::AcqRel);
+        if prev + 1 == self.n {
+            let _g = self.complete.0.lock().unwrap();
+            self.complete.1.notify_all();
+        }
+    }
+
+    /// Dispatcher-side recovery of stalled items: claims dangling on a
+    /// dead worker incarnation are always reclaimed (that worker died
+    /// *before* executing — post-execution claims read [`CLAIM_DONE`]);
+    /// still-queued items are taken inline only when the pool is degraded
+    /// (a healthy pool's live workers must run them — the dispatcher
+    /// claiming queued items could deadlock jobs that rendezvous across
+    /// workers). Returns the number of items reclaimed.
+    fn reclaim_stalled(&self, dead: &HashSet<u32>, degraded: bool) -> usize {
+        let mut reclaimed = 0usize;
+        for i in 0..self.n {
+            let cur = self.claims[i].load(Ordering::Acquire);
+            let take = match cur {
+                CLAIM_QUEUED => degraded,
+                t if t >= FIRST_WORKER_TOKEN => dead.contains(&t),
+                _ => false,
+            };
+            if !take {
+                continue;
+            }
+            if self.claims[i]
+                .compare_exchange(cur, DISPATCHER_TOKEN, Ordering::AcqRel, Ordering::Relaxed)
+                .is_err()
+            {
+                continue;
+            }
+            self.execute_claimed(i);
+            reclaimed += 1;
+        }
+        reclaimed
+    }
+}
+
+impl<C, T, G> StealTask for DispatchBlock<C, T, G>
+where
+    C: Send + Sync + 'static,
+    T: Send + 'static,
+    G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
+{
+    fn process(&self, item: u32, token: u32) -> Processed {
+        let i = item as usize;
+        let Some(claim) = self.claims.get(i) else {
+            // Possible only through generation aliasing; benign.
+            return Processed::Skipped;
+        };
+        if claim
+            .compare_exchange(CLAIM_QUEUED, token, Ordering::AcqRel, Ordering::Relaxed)
+            .is_err()
+        {
+            return Processed::Skipped;
+        }
+        // Injected worker death fires *after* the claim (the window the
+        // dead-incarnation reclaim exists for). Dispatcher-side inline
+        // execution never consumes fault ticks — parity with the channel
+        // backend, where only workers check the plan.
+        if token >= FIRST_WORKER_TOKEN {
+            if let Some(plan) = self.faults.get() {
+                if plan.worker_panic() {
+                    return Processed::Die;
+                }
+            }
+        }
+        self.execute_claimed(i);
+        Processed::Executed
+    }
+}
+
+/// Which backend a [`Shared`] drives.
+enum Backend {
+    Channel {
+        queues: Vec<NodeQueue>,
+        /// Each group's receive end, retained so a respawned worker
+        /// resumes the *same* queue — jobs enqueued behind a dead worker
+        /// are never orphaned.
+        receivers: Vec<Arc<Mutex<Receiver<Job>>>>,
+    },
+    Steal(Arc<StealCore>),
+}
+
+/// The long-lived half of a threaded pool: the backend (queues or steal
+/// core), the workers (reaped/respawned by `heal`, joined when the pool
+/// drops), and the respawn/latency accounting.
 struct Shared {
-    queues: Vec<NodeQueue>,
-    /// Each group's receive end, retained so a respawned worker resumes
-    /// the *same* queue — jobs enqueued behind a dead worker are never
-    /// orphaned.
-    receivers: Vec<Arc<Mutex<Receiver<Job>>>>,
+    backend: Backend,
     /// Pin targets per group (empty ⇒ unpinned placement).
     node_cpus: Vec<Vec<usize>>,
+    /// Nominal worker count per group (routed-dispatch chunk sizing).
+    group_workers: Vec<usize>,
     workers: Mutex<Vec<WorkerSlot>>,
     generations: AtomicU64,
     /// Remaining worker respawns before a dead group degrades the pool.
     respawn_budget: AtomicU64,
     /// Workers respawned so far (observability for tests and benches).
     respawns: AtomicU64,
-    /// Latched once any group runs out of workers and budget: every later
-    /// dispatch runs inline-serial (correct, never deadlocked).
+    /// Latched once any group runs out of workers and budget: dispatches
+    /// run inline-serial until a recovery probe succeeds.
     degraded: AtomicBool,
     /// Workers whose `sched_setaffinity` call succeeded (observability:
     /// the perf bench records it next to the pinned-vs-unpinned matrix).
@@ -183,11 +589,19 @@ struct Shared {
     /// pin attempt before `with_placement` returns; respawned workers pin
     /// best-effort without re-acking.
     pinned_workers: usize,
-    /// The pool's armable fault schedule (workers check it per dequeue).
+    /// The pool's armable fault schedule (workers check it per claim /
+    /// per dequeue).
     faults: Arc<FaultCell>,
+    dispatches: AtomicU64,
+    inline_reclaims: AtomicU64,
+    latencies_us: Mutex<VecDeque<f64>>,
 }
 
 impl Shared {
+    fn group_count(&self) -> usize {
+        self.group_workers.len()
+    }
+
     /// Take one unit of respawn budget, if any remains.
     fn take_respawn(&self) -> bool {
         let mut cur = self.respawn_budget.load(Ordering::Relaxed);
@@ -205,54 +619,145 @@ impl Shared {
         false
     }
 
-    /// Reap dead workers, respawn them on their own node while budget
-    /// remains, and degrade any group left with zero workers (draining
-    /// its queue inline so no dispatcher can deadlock behind it). Cheap
-    /// when healthy: a lock and one `is_finished` check per worker.
-    fn heal(&self) {
-        let mut ws = self.workers.lock().unwrap();
+    /// Join every finished worker, recording dead steal incarnations so
+    /// their dangling claims become reclaimable. Returns the freed
+    /// `(node, lane)` seats.
+    fn reap_locked(&self, ws: &mut Vec<WorkerSlot>) -> Vec<(usize, usize)> {
+        let mut dead = Vec::new();
         let mut i = 0;
         while i < ws.len() {
             if !ws[i].handle.is_finished() {
                 i += 1;
                 continue;
             }
-            let dead = ws.swap_remove(i);
-            let node = dead.node;
-            let _ = dead.handle.join();
+            let w = ws.swap_remove(i);
+            let _ = w.handle.join();
+            if let Backend::Steal(core) = &self.backend {
+                core.dead_tokens.lock().unwrap().insert(w.token);
+            }
+            dead.push((w.node, w.lane));
+        }
+        dead
+    }
+
+    /// Spawn a replacement worker on `node` (steal mode: adopting `lane`
+    /// with a fresh incarnation token). Consumes no budget itself —
+    /// callers gate on [`take_respawn`](Self::take_respawn).
+    fn spawn_worker(&self, node: usize, lane: usize) -> Option<WorkerSlot> {
+        let k = self.respawns.fetch_add(1, Ordering::Relaxed);
+        let cpus = self.node_cpus[node].clone();
+        let name = format!("sail-pool-n{node}-r{k}");
+        match &self.backend {
+            Backend::Channel { receivers, .. } => {
+                let rx = Arc::clone(&receivers[node]);
+                let faults = Arc::clone(&self.faults);
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        if !cpus.is_empty() {
+                            pin_current_thread(&cpus);
+                        }
+                        worker_loop(&rx, &faults)
+                    })
+                    .ok()
+                    .map(|handle| WorkerSlot { node, lane: 0, token: 0, handle })
+            }
+            Backend::Steal(core) => {
+                let core = Arc::clone(core);
+                let token = core.next_token.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        if !cpus.is_empty() {
+                            pin_current_thread(&cpus);
+                        }
+                        worker_loop_steal(&core, lane, node, token)
+                    })
+                    .ok()
+                    .map(|handle| WorkerSlot { node, lane, token, handle })
+            }
+        }
+    }
+
+    /// Reap dead workers, respawn them on their own seat while budget
+    /// remains, and degrade any group left with zero workers (channel
+    /// mode drains that group's queue inline so no dispatcher can
+    /// deadlock behind it; steal mode needs no drain — each blocked
+    /// dispatcher reclaims its own stalled items). Cheap when healthy: a
+    /// lock and one `is_finished` check per worker.
+    fn heal(&self) {
+        let mut ws = self.workers.lock().unwrap();
+        for (node, lane) in self.reap_locked(&mut ws) {
             if !self.take_respawn() {
                 continue;
             }
-            let rx = Arc::clone(&self.receivers[node]);
-            let cpus = self.node_cpus[node].clone();
-            let faults = Arc::clone(&self.faults);
-            let k = self.respawns.fetch_add(1, Ordering::Relaxed);
-            let spawned = std::thread::Builder::new()
-                .name(format!("sail-pool-n{node}-r{k}"))
-                .spawn(move || {
-                    if !cpus.is_empty() {
-                        pin_current_thread(&cpus);
-                    }
-                    worker_loop(&rx, &faults)
-                });
-            if let Ok(handle) = spawned {
-                ws.push(WorkerSlot { node, handle });
+            if let Some(slot) = self.spawn_worker(node, lane) {
+                ws.push(slot);
             }
         }
-        for node in 0..self.queues.len() {
+        for node in 0..self.group_count() {
             if ws.iter().any(|w| w.node == node) {
                 continue;
             }
-            // No worker left on this group and no budget to respawn one:
-            // latch degraded mode and run its queued jobs here — each job
-            // reports to its own dispatcher's barrier, so every blocked
-            // caller (ours or a concurrent one) still completes.
             self.degraded.store(true, Ordering::Release);
-            let rx = self.receivers[node].lock().unwrap();
-            while let Ok(job) = rx.try_recv() {
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+            if let Backend::Channel { receivers, .. } = &self.backend {
+                // Run the dead group's queued jobs here — each job reports
+                // to its own dispatcher's barrier, so every blocked caller
+                // (ours or a concurrent one) still completes.
+                let rx = receivers[node].lock().unwrap();
+                while let Ok(job) = rx.try_recv() {
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                }
             }
         }
+    }
+
+    /// Bounded recovery probe for a degraded pool: one respawn attempt
+    /// per dispatch epoch (one budget unit), un-latching only once every
+    /// group has a live worker again. Returns whether the pool is healthy
+    /// enough to dispatch.
+    fn try_recover(&self) -> bool {
+        let mut ws = self.workers.lock().unwrap();
+        let _ = self.reap_locked(&mut ws);
+        let empty = (0..self.group_count()).find(|&n| !ws.iter().any(|w| w.node == n));
+        if let Some(node) = empty {
+            if !self.take_respawn() {
+                return false;
+            }
+            let lane = self.free_lane(node, &ws);
+            match self.spawn_worker(node, lane) {
+                Some(slot) => ws.push(slot),
+                None => return false,
+            }
+        }
+        let all_covered = (0..self.group_count()).all(|n| ws.iter().any(|w| w.node == n));
+        if all_covered {
+            self.degraded.store(false, Ordering::Release);
+        }
+        all_covered
+    }
+
+    /// A steal lane on `node` not owned by any live worker (channel mode:
+    /// lanes are meaningless, 0).
+    fn free_lane(&self, node: usize, ws: &[WorkerSlot]) -> usize {
+        match &self.backend {
+            Backend::Channel { .. } => 0,
+            Backend::Steal(core) => core.node_lanes[node]
+                .iter()
+                .copied()
+                .find(|&l| !ws.iter().any(|w| w.node == node && w.lane == l))
+                .unwrap_or(core.node_lanes[node][0]),
+        }
+    }
+
+    fn record_dispatch(&self, started: Instant) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let us = started.elapsed().as_secs_f64() * 1e6;
+        let mut ring = self.latencies_us.lock().unwrap();
+        if ring.len() == LATENCY_RING {
+            ring.pop_front();
+        }
+        ring.push_back(us);
     }
 }
 
@@ -286,6 +791,7 @@ impl Shared {
 pub struct WorkerPool {
     threads: usize,
     placement: Placement,
+    mode: PoolMode,
     /// Armable fault schedule; shared with every worker thread (serial
     /// pools keep one too — engine- and cache-boundary hooks read it even
     /// when no worker exists).
@@ -297,6 +803,7 @@ impl std::fmt::Debug for WorkerPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("WorkerPool")
             .field("threads", &self.threads)
+            .field("mode", &self.mode)
             .field("nodes", &self.placement.nodes().len())
             .field("pinned", &self.placement.pinned())
             .field("persistent", &self.shared.is_some())
@@ -307,69 +814,137 @@ impl std::fmt::Debug for WorkerPool {
 
 impl WorkerPool {
     /// A pool of exactly `threads` workers (clamped to ≥ 1), placed per
-    /// the process-wide `SAIL_NUMA` policy (absent ⇒ `auto`). For
-    /// `threads > 1` the workers are spawned immediately and live until
-    /// the pool is dropped.
+    /// the process-wide `SAIL_NUMA` policy (absent ⇒ `auto`) and run by
+    /// the `SAIL_POOL` backend (absent ⇒ steal). For `threads > 1` the
+    /// workers are spawned immediately and live until the pool is
+    /// dropped.
     pub fn new(threads: usize) -> Self {
         Self::with_policy(threads, &NumaPolicy::from_env())
     }
 
     /// A pool of exactly `threads` workers under an explicit placement
     /// policy (the env-independent constructor the NUMA parity tests and
-    /// the pinned-vs-unpinned bench matrix use).
+    /// the pinned-vs-unpinned bench matrix use); backend still from
+    /// `SAIL_POOL`.
     pub fn with_policy(threads: usize, policy: &NumaPolicy) -> Self {
         Self::with_placement(Placement::plan(policy, threads.max(1)))
     }
 
-    /// A pool spawned from an already-resolved [`Placement`] (worker count
-    /// = `placement.total_workers()`). Each node group gets its own job
-    /// queue; each worker pins itself to its group's CPUs before first
-    /// dequeue when the placement says so (best-effort — a failed affinity
-    /// call costs locality, never correctness).
+    /// A pool with both placement policy and dispatch backend pinned
+    /// (the steal-vs-channel parity tests and bench matrix use this).
+    pub fn with_policy_mode(threads: usize, policy: &NumaPolicy, mode: PoolMode) -> Self {
+        Self::with_placement_mode(Placement::plan(policy, threads.max(1)), mode)
+    }
+
+    /// A pool spawned from an already-resolved [`Placement`], backend
+    /// from `SAIL_POOL`.
     pub fn with_placement(placement: Placement) -> Self {
+        Self::with_placement_mode(placement, PoolMode::from_env())
+    }
+
+    /// A pool spawned from an already-resolved [`Placement`] (worker
+    /// count = `placement.total_workers()`) on an explicit backend. Each
+    /// node group gets its own injector (or job queue); each worker pins
+    /// itself to its group's CPUs before first dequeue when the placement
+    /// says so (best-effort — a failed affinity call costs locality,
+    /// never correctness).
+    pub fn with_placement_mode(placement: Placement, mode: PoolMode) -> Self {
         let threads = placement.total_workers().max(1);
         let faults = Arc::new(FaultCell::default());
         if threads == 1 && !placement.pinned() {
-            return WorkerPool { threads, placement, faults, shared: None };
+            return WorkerPool { threads, placement, mode, faults, shared: None };
         }
-        let mut queues = Vec::with_capacity(placement.nodes().len());
-        let mut receivers = Vec::with_capacity(placement.nodes().len());
-        let mut node_cpus = Vec::with_capacity(placement.nodes().len());
+        let n_nodes = placement.nodes().len();
+        let group_workers: Vec<usize> = placement.nodes().iter().map(|n| n.workers).collect();
+        let mut node_cpus = Vec::with_capacity(n_nodes);
+        for node in placement.nodes() {
+            node_cpus.push(if placement.pinned() { node.cpus.clone() } else { Vec::new() });
+        }
         let mut workers = Vec::with_capacity(threads);
         // Startup handshake: every worker reports its pin result before
         // the constructor returns, so `pinned_workers()` is exact (the
         // bench artifact records it) rather than racing worker startup.
         let (ack_tx, ack_rx) = channel::<bool>();
-        for (ni, node) in placement.nodes().iter().enumerate() {
-            let (tx, rx) = channel::<Job>();
-            let rx = Arc::new(Mutex::new(rx));
-            let cpus = if placement.pinned() { node.cpus.clone() } else { Vec::new() };
-            for w in 0..node.workers {
-                let rx = Arc::clone(&rx);
-                let cpus = cpus.clone();
-                let cell = Arc::clone(&faults);
-                let ack = ack_tx.clone();
-                let handle = std::thread::Builder::new()
-                    .name(format!("sail-pool-n{ni}-{w}"))
-                    .spawn(move || {
-                        let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
-                        let _ = ack.send(pinned);
-                        drop(ack);
-                        worker_loop(&rx, &cell)
-                    })
-                    .expect("spawning pool worker");
-                workers.push(WorkerSlot { node: ni, handle });
+        let backend = match mode {
+            PoolMode::Channel => {
+                let mut queues = Vec::with_capacity(n_nodes);
+                let mut receivers = Vec::with_capacity(n_nodes);
+                for (ni, node) in placement.nodes().iter().enumerate() {
+                    let (tx, rx) = channel::<Job>();
+                    let rx = Arc::new(Mutex::new(rx));
+                    for w in 0..node.workers {
+                        let rx = Arc::clone(&rx);
+                        let cpus = node_cpus[ni].clone();
+                        let cell = Arc::clone(&faults);
+                        let ack = ack_tx.clone();
+                        let handle = std::thread::Builder::new()
+                            .name(format!("sail-pool-n{ni}-{w}"))
+                            .spawn(move || {
+                                let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
+                                let _ = ack.send(pinned);
+                                drop(ack);
+                                worker_loop(&rx, &cell)
+                            })
+                            .expect("spawning pool worker");
+                        workers.push(WorkerSlot { node: ni, lane: 0, token: 0, handle });
+                    }
+                    queues.push(NodeQueue { jobs: Mutex::new(tx) });
+                    receivers.push(rx);
+                }
+                Backend::Channel { queues, receivers }
             }
-            queues.push(NodeQueue { jobs: Mutex::new(tx), workers: node.workers });
-            receivers.push(rx);
-            node_cpus.push(cpus);
-        }
+            PoolMode::Steal => {
+                let mut node_lanes: Vec<Vec<usize>> = vec![Vec::new(); n_nodes];
+                let mut lanes = 0usize;
+                for (ni, node) in placement.nodes().iter().enumerate() {
+                    for _ in 0..node.workers {
+                        node_lanes[ni].push(lanes);
+                        lanes += 1;
+                    }
+                }
+                let core = Arc::new(StealCore {
+                    table: BlockTable::new(),
+                    injectors: (0..n_nodes).map(|_| Mutex::new(VecDeque::new())).collect(),
+                    deques: (0..lanes).map(|_| StealDeque::new()).collect(),
+                    node_lanes,
+                    park: (Mutex::new(()), Condvar::new()),
+                    shutdown: AtomicBool::new(false),
+                    next_token: AtomicU32::new(FIRST_WORKER_TOKEN),
+                    dead_tokens: Mutex::new(HashSet::new()),
+                    chaos: AtomicU64::new(0),
+                    executed: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+                    stolen: (0..lanes).map(|_| AtomicU64::new(0)).collect(),
+                    cross_node_steals: AtomicU64::new(0),
+                    queue_hwm: AtomicU64::new(0),
+                });
+                for (ni, node) in placement.nodes().iter().enumerate() {
+                    for w in 0..node.workers {
+                        let lane = core.node_lanes[ni][w];
+                        let token = core.next_token.fetch_add(1, Ordering::Relaxed);
+                        let core = Arc::clone(&core);
+                        let cpus = node_cpus[ni].clone();
+                        let ack = ack_tx.clone();
+                        let handle = std::thread::Builder::new()
+                            .name(format!("sail-pool-n{ni}-{w}"))
+                            .spawn(move || {
+                                let pinned = !cpus.is_empty() && pin_current_thread(&cpus);
+                                let _ = ack.send(pinned);
+                                drop(ack);
+                                worker_loop_steal(&core, lane, ni, token)
+                            })
+                            .expect("spawning pool worker");
+                        workers.push(WorkerSlot { node: ni, lane, token, handle });
+                    }
+                }
+                Backend::Steal(core)
+            }
+        };
         drop(ack_tx);
         let pinned_workers = ack_rx.iter().filter(|&p| p).count();
         let shared = Shared {
-            queues,
-            receivers,
+            backend,
             node_cpus,
+            group_workers,
             workers: Mutex::new(workers),
             generations: AtomicU64::new(0),
             respawn_budget: AtomicU64::new(((2 * threads).max(4)) as u64),
@@ -377,8 +952,11 @@ impl WorkerPool {
             degraded: AtomicBool::new(false),
             pinned_workers,
             faults: Arc::clone(&faults),
+            dispatches: AtomicU64::new(0),
+            inline_reclaims: AtomicU64::new(0),
+            latencies_us: Mutex::new(VecDeque::new()),
         };
-        WorkerPool { threads, placement, faults, shared: Some(shared) }
+        WorkerPool { threads, placement, mode, faults, shared: Some(shared) }
     }
 
     /// Strict parse of a `SAIL_POOL_THREADS` value: a positive integer or
@@ -417,7 +995,8 @@ impl WorkerPool {
 
     /// One worker per available core, overridable with the
     /// `SAIL_POOL_THREADS` environment variable (the CI thread matrix and
-    /// perf runs pin pool width through it); placed per `SAIL_NUMA`.
+    /// perf runs pin pool width through it); placed per `SAIL_NUMA`,
+    /// backend per `SAIL_POOL`.
     pub fn auto() -> Self {
         WorkerPool::new(Self::auto_width())
     }
@@ -435,8 +1014,14 @@ impl WorkerPool {
         Arc::new(WorkerPool::new(threads))
     }
 
+    /// Pool width (≥ 1).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The dispatch backend this pool runs.
+    pub fn mode(&self) -> PoolMode {
+        self.mode
     }
 
     /// The resolved placement this pool was spawned with. Engines read it
@@ -460,8 +1045,8 @@ impl WorkerPool {
     }
 
     /// Number of dispatch generations served so far (0 for serial pools —
-    /// inline runs never touch the queue). Observability for the warm-pool
-    /// benches and the saturation tests.
+    /// inline runs never touch the queues). Observability for the
+    /// warm-pool benches and the saturation tests.
     pub fn generations(&self) -> u64 {
         self.shared.as_ref().map(|s| s.generations.load(Ordering::Relaxed)).unwrap_or(0)
     }
@@ -488,7 +1073,9 @@ impl WorkerPool {
     }
 
     /// Override the worker respawn budget (default `2×threads`, min 4).
-    /// The chaos tests drop it to 0 to force full degradation.
+    /// The chaos tests drop it to 0 to force full degradation; topping it
+    /// back up lets the per-dispatch recovery probe un-latch a degraded
+    /// pool.
     pub fn set_respawn_budget(&self, budget: u64) {
         if let Some(s) = &self.shared {
             s.respawn_budget.store(budget, Ordering::Relaxed);
@@ -500,9 +1087,10 @@ impl WorkerPool {
         self.shared.as_ref().map(|s| s.respawns.load(Ordering::Relaxed)).unwrap_or(0)
     }
 
-    /// True once any node group lost all workers with no respawn budget
-    /// left: the pool has permanently fallen back to inline-serial
-    /// dispatch (the bottom rung of the degradation ladder).
+    /// True while some node group has no live workers and the recovery
+    /// probe has not yet succeeded: dispatches run inline-serial (the
+    /// bottom rung of the degradation ladder). Un-latches once a later
+    /// dispatch's probe restores a worker on every group.
     pub fn degraded(&self) -> bool {
         self.shared
             .as_ref()
@@ -510,21 +1098,66 @@ impl WorkerPool {
             .unwrap_or(false)
     }
 
+    /// Seeded forced-steal chaos for the steal-schedule fuzzer: workers
+    /// pseudo-randomly (per seed/incarnation/scan) try stealing *before*
+    /// their own deque, exercising orders a healthy run would rarely
+    /// produce. `None` disarms. No-op on channel/serial pools.
+    pub fn set_steal_chaos(&self, seed: Option<u64>) {
+        if let Some(Shared { backend: Backend::Steal(core), .. }) = &self.shared {
+            core.chaos.store(seed.map(|s| s.max(1)).unwrap_or(0), Ordering::Relaxed);
+        }
+    }
+
+    /// Observability snapshot: backend, steal/execute counters, queue
+    /// high-water, inline reclaims, and dispatch latency percentiles.
+    pub fn pool_stats(&self) -> PoolStats {
+        let Some(s) = &self.shared else {
+            return PoolStats { backend: "serial", workers: self.threads, ..Default::default() };
+        };
+        let (backend, executed, stolen, cross, hwm) = match &s.backend {
+            Backend::Channel { .. } => ("channel", Vec::new(), Vec::new(), 0, 0),
+            Backend::Steal(core) => (
+                "steal",
+                core.executed.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+                core.stolen.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+                core.cross_node_steals.load(Ordering::Relaxed),
+                core.queue_hwm.load(Ordering::Relaxed),
+            ),
+        };
+        let mut sorted: Vec<f64> = {
+            let ring = s.latencies_us.lock().unwrap();
+            ring.iter().copied().collect()
+        };
+        sorted.sort_by(f64::total_cmp);
+        PoolStats {
+            backend,
+            workers: self.threads,
+            dispatches: s.dispatches.load(Ordering::Relaxed),
+            executed,
+            stolen,
+            cross_node_steals: cross,
+            queue_depth_hwm: hwm,
+            inline_reclaims: s.inline_reclaims.load(Ordering::Relaxed),
+            dispatch_p50_us: percentile(&sorted, 0.50),
+            dispatch_p99_us: percentile(&sorted, 0.99),
+        }
+    }
+
     /// Evaluate `g(ctx, 0..n_items)` across the pool, returning results in
     /// item order. All shared state must travel through `ctx` (cloned into
-    /// each chunk job as an `Arc`); `g` itself must be stateless —
+    /// each item/chunk job as an `Arc`); `g` itself must be stateless —
     /// `Copy + 'static` admits function pointers and non-capturing
     /// closures, and is what lets the jobs cross to persistent workers
     /// without `unsafe`. `g` must be pure per item (items run concurrently,
     /// their assignment to workers is an implementation detail, and fault
-    /// recovery may re-execute a lost chunk's items).
+    /// recovery may re-execute a lost item).
     ///
-    /// Items carry no placement hint here: chunks are spread over the node
+    /// Items carry no placement hint here: work is spread over the node
     /// groups proportionally to their worker counts. Use
     /// [`run_ctx_routed`](WorkerPool::run_ctx_routed) when items have a
     /// home node.
     ///
-    /// Every job drops its `Arc` clone *before* reporting its chunk, so
+    /// Every executed item drops its `Arc` clone *before* reporting, so
     /// when `run_ctx` returns the caller's `Arc` is the only survivor and
     /// `Arc::try_unwrap` deterministically recovers the context (the
     /// engine uses this to recycle per-call buffers).
@@ -533,13 +1166,13 @@ impl WorkerPool {
     ///
     /// If an item's own computation panics even on the inline retry — see
     /// [`try_run_ctx`](WorkerPool::try_run_ctx) for the non-panicking
-    /// form. Dead workers alone never panic the dispatcher: their chunks
+    /// form. Dead workers alone never panic the dispatcher: their items
     /// are recovered.
     pub fn run_ctx<C, T, G>(&self, ctx: &Arc<C>, n_items: usize, g: G) -> Vec<T>
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
-        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
     {
         match self.try_run_ctx(ctx, n_items, g) {
             Ok(v) => v,
@@ -549,7 +1182,7 @@ impl WorkerPool {
 
     /// [`run_ctx`](WorkerPool::run_ctx) with a typed error instead of a
     /// panic: a worker failure is healed (respawn + inline re-execution of
-    /// the lost chunk, bit-identical by construction); only an item whose
+    /// the lost items, bit-identical by construction); only an item whose
     /// computation itself fails twice surfaces as a [`PoolError`] naming
     /// the item range and node.
     pub fn try_run_ctx<C, T, G>(
@@ -561,7 +1194,7 @@ impl WorkerPool {
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
-        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
     {
         let Some(shared) = self.dispatchable(n_items) else {
             return run_inline(ctx, 0, n_items, g, 0);
@@ -587,10 +1220,12 @@ impl WorkerPool {
 
     /// Evaluate `g(ctx, 0..n_items)` across the pool with explicit
     /// *routing*: `route(ctx, item)` names the node group whose workers
-    /// must execute that item (the engine's tile → weight-shard owner
+    /// should execute that item (the engine's tile → weight-shard owner
     /// map). Results come back in item order, bit-identical to
     /// [`run_ctx`](WorkerPool::run_ctx) — routing moves work between
-    /// sockets, never changes it.
+    /// sockets, never changes it. On the steal backend routing seeds the
+    /// destination injector; an idle remote worker may still cross-steal
+    /// a tile (locality is a preference, correctness is not).
     ///
     /// Contiguous runs of same-node items are split into at most
     /// `workers(node)` chunks each, so a node's run is balanced across
@@ -612,7 +1247,7 @@ impl WorkerPool {
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
-        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
         R: Fn(&C, usize) -> usize,
     {
         match self.try_run_ctx_routed(ctx, n_items, route, g) {
@@ -634,7 +1269,7 @@ impl WorkerPool {
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
-        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
         R: Fn(&C, usize) -> usize,
     {
         let Some(shared) = self.dispatchable(n_items) else {
@@ -649,12 +1284,12 @@ impl WorkerPool {
             let node = if i < n_items { route(ctx.as_ref(), i) } else { usize::MAX };
             if i == n_items || node != run_node {
                 assert!(
-                    run_node < shared.queues.len(),
+                    run_node < shared.group_count(),
                     "routed to node {run_node} but the pool has {} group(s)",
-                    shared.queues.len()
+                    shared.group_count()
                 );
                 let len = i - run_start;
-                let parts = shared.queues[run_node].workers.min(len);
+                let parts = shared.group_workers[run_node].min(len);
                 let per = len.div_ceil(parts);
                 let mut s = run_start;
                 while s < i {
@@ -693,20 +1328,21 @@ impl WorkerPool {
 
     /// The shared state, iff this dispatch should actually fan out
     /// (`None` ⇒ run inline on the caller's thread — serial pools, single
-    /// items, and pools degraded past their respawn budget).
+    /// items, and degraded pools whose recovery probe did not succeed).
     fn dispatchable(&self, n_items: usize) -> Option<&Shared> {
-        match &self.shared {
-            Some(s) if n_items > 1 && !s.degraded.load(Ordering::Acquire) => Some(s),
-            _ => None,
+        let s = self.shared.as_ref()?;
+        if n_items <= 1 {
+            return None;
         }
+        if s.degraded.load(Ordering::Acquire) && !s.try_recover() {
+            return None;
+        }
+        Some(s)
     }
 
-    /// Enqueue one job per `(node, start, end)` chunk and barrier on the
-    /// per-generation results channel, healing the pool on stalls. Chunks
-    /// must be in item order and tile `[0, n)` exactly; results are
-    /// flattened back in chunk order. A chunk whose worker died is
-    /// re-executed inline (same items, same `g` — bit-identical); only an
-    /// item that fails again surfaces as a typed error.
+    /// Backend-dispatching fan-out. `plan` chunks must be in item order
+    /// and tile `[0, n)` exactly; results come back flattened in item
+    /// order.
     fn try_dispatch<C, T, G>(
         &self,
         shared: &Shared,
@@ -717,14 +1353,137 @@ impl WorkerPool {
     where
         C: Send + Sync + 'static,
         T: Send + 'static,
-        G: Fn(&C, usize) -> T + Send + Copy + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
+    {
+        let started = Instant::now();
+        let out = match &shared.backend {
+            Backend::Channel { queues, .. } => {
+                self.try_dispatch_channel(shared, queues, ctx, plan, g)
+            }
+            Backend::Steal(core) => self.try_dispatch_steal(shared, core, ctx, plan, g),
+        };
+        shared.record_dispatch(started);
+        out
+    }
+
+    /// Steal-backend dispatch: register a block, inject one ref per item,
+    /// wait on the completion epoch (healing + reclaiming on stalls),
+    /// then extract results — retrying any per-item error inline once
+    /// (parity with the channel ladder's lost-chunk re-execution).
+    fn try_dispatch_steal<C, T, G>(
+        &self,
+        shared: &Shared,
+        core: &Arc<StealCore>,
+        ctx: &Arc<C>,
+        plan: Vec<(usize, usize, usize)>,
+        g: G,
+    ) -> Result<Vec<T>, PoolError>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
+    {
+        let n = plan.last().map(|&(_, _, e)| e).unwrap_or(0);
+        let block = Arc::new(DispatchBlock {
+            ctx: Mutex::new(Some(Arc::clone(ctx))),
+            g,
+            n,
+            claims: (0..n).map(|_| AtomicU32::new(CLAIM_QUEUED)).collect(),
+            results: (0..n).map(|_| Mutex::new(None)).collect(),
+            done: AtomicUsize::new(0),
+            complete: (Mutex::new(()), Condvar::new()),
+            faults: Arc::clone(&shared.faults),
+        });
+        let (slot, generation) =
+            core.table.insert(Arc::clone(&block) as Arc<dyn StealTask>);
+        let mut item_nodes = vec![0usize; n];
+        for &(node, start, end) in &plan {
+            for i in item_nodes.iter_mut().take(end).skip(start) {
+                *i = node;
+            }
+            let mut q = core.injectors[node].lock().unwrap();
+            for i in start..end {
+                q.push_back(pack_ref(slot, generation, i as u32));
+            }
+            core.queue_hwm.fetch_max(q.len() as u64, Ordering::Relaxed);
+        }
+        shared.generations.fetch_add(1, Ordering::Relaxed);
+        {
+            let _g = core.park.0.lock().unwrap();
+            core.park.1.notify_all();
+        }
+        // Completion-count epoch: done == n is the only barrier. On a
+        // stall, heal the pool and reclaim items stranded on dead
+        // incarnations (or, once degraded, still-queued ones).
+        while block.done.load(Ordering::Acquire) < n {
+            let guard = block.complete.0.lock().unwrap();
+            if block.done.load(Ordering::Acquire) >= n {
+                break;
+            }
+            let (_guard, timed_out) =
+                block.complete.1.wait_timeout(guard, HEAL_POLL).unwrap();
+            if !timed_out.timed_out() || block.done.load(Ordering::Acquire) >= n {
+                continue;
+            }
+            shared.heal();
+            let dead = core.dead_tokens.lock().unwrap().clone();
+            let degraded = shared.degraded.load(Ordering::Acquire);
+            let reclaimed = block.reclaim_stalled(&dead, degraded);
+            if reclaimed > 0 {
+                shared.inline_reclaims.fetch_add(reclaimed as u64, Ordering::Relaxed);
+            }
+        }
+        core.table.remove(slot, generation);
+        // Recover the caller's context: every executed item dropped its
+        // clone before its done tick, so after the epoch the block's copy
+        // is the only other survivor — take it.
+        drop(block.ctx.lock().unwrap().take());
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let r = block.results[i]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("completed dispatch has a result per item");
+            match r {
+                Ok(v) => out.push(v),
+                // A per-item panic (e.g. an injected one-shot scratch
+                // poison): retry inline once, bit-identical — same item,
+                // same pure `g`. A second failure is the work itself
+                // failing: surface it typed.
+                Err(_) => {
+                    let mut v = run_inline(ctx, i, i + 1, g, item_nodes[i])?;
+                    out.push(v.pop().expect("run_inline returns the item"));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Channel-backend dispatch: enqueue one job per `(node, start, end)`
+    /// chunk and barrier on the per-generation results channel, healing
+    /// the pool on stalls. A chunk whose worker died is re-executed inline
+    /// (same items, same `g` — bit-identical); only an item that fails
+    /// again surfaces as a typed error.
+    fn try_dispatch_channel<C, T, G>(
+        &self,
+        shared: &Shared,
+        queues: &[NodeQueue],
+        ctx: &Arc<C>,
+        plan: Vec<(usize, usize, usize)>,
+        g: G,
+    ) -> Result<Vec<T>, PoolError>
+    where
+        C: Send + Sync + 'static,
+        T: Send + 'static,
+        G: Fn(&C, usize) -> T + Send + Sync + Copy + 'static,
     {
         let n_chunks = plan.len();
         let (tx, rx) = channel::<(usize, Vec<T>)>();
         // Clone each referenced node's sender once (under a brief lock),
         // then enqueue lock-free — concurrent dispatchers on a shared
         // pool don't serialize their enqueue phases.
-        let mut senders: Vec<Option<Sender<Job>>> = vec![None; shared.queues.len()];
+        let mut senders: Vec<Option<Sender<Job>>> = vec![None; queues.len()];
         for (c, &(node, start, end)) in plan.iter().enumerate() {
             let ctx = Arc::clone(ctx);
             let tx = tx.clone();
@@ -736,7 +1495,7 @@ impl WorkerPool {
                 let _ = tx.send((c, out));
             });
             let sender = senders[node]
-                .get_or_insert_with(|| shared.queues[node].jobs.lock().unwrap().clone());
+                .get_or_insert_with(|| queues[node].jobs.lock().unwrap().clone());
             sender.send(job).expect("worker pool has shut down");
         }
         shared.generations.fetch_add(1, Ordering::Relaxed);
@@ -770,6 +1529,7 @@ impl WorkerPool {
             for (c, &(node, start, end)) in plan.iter().enumerate() {
                 if slots[c].is_none() {
                     slots[c] = Some(run_inline(ctx, start, end, g, node)?);
+                    shared.inline_reclaims.fetch_add((end - start) as u64, Ordering::Relaxed);
                 }
             }
         }
@@ -807,9 +1567,17 @@ fn worker_loop(rx: &Mutex<Receiver<Job>>, faults: &FaultCell) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         if let Some(shared) = self.shared.take() {
-            // Closing every queue ends every worker_loop.
-            drop(shared.queues);
-            for w in shared.workers.into_inner().unwrap() {
+            if let Backend::Steal(core) = &shared.backend {
+                core.shutdown.store(true, Ordering::Release);
+                let _g = core.park.0.lock().unwrap();
+                core.park.1.notify_all();
+            }
+            let Shared { backend, workers, .. } = shared;
+            // Channel: closing every queue ends every worker_loop. Steal:
+            // the shutdown flag above ends every worker within one park
+            // timeout.
+            drop(backend);
+            for w in workers.into_inner().unwrap() {
                 let _ = w.handle.join();
             }
         }
@@ -864,7 +1632,9 @@ mod tests {
     #[test]
     fn actually_runs_concurrently() {
         // With 4 workers and 4 items that each wait for all 4 to arrive,
-        // completion proves the items ran on distinct threads.
+        // completion proves the items ran on distinct threads (and that
+        // the dispatcher never claims queued items on a healthy pool —
+        // doing so would deadlock this rendezvous).
         let barrier = Arc::new(std::sync::Barrier::new(4));
         let pool = WorkerPool::with_policy(4, &NumaPolicy::Off);
         pool.run(4, move |_| {
@@ -898,6 +1668,25 @@ mod tests {
             );
         }
         assert_eq!(WorkerPool::parse_pool_threads(" 8 "), Ok(8));
+    }
+
+    #[test]
+    fn pool_mode_parse_rejects_malformed_forms_typed() {
+        for bad in ["", "chan", "STEAL", "stealing", "2"] {
+            let err = PoolMode::parse(bad).unwrap_err();
+            assert!(err.contains("SAIL_POOL"), "'{bad}' → {err}");
+        }
+        assert_eq!(PoolMode::parse(" steal "), Ok(PoolMode::Steal));
+        assert_eq!(PoolMode::parse("channel"), Ok(PoolMode::Channel));
+    }
+
+    #[test]
+    fn default_mode_is_steal_unless_env_overrides() {
+        let pool = WorkerPool::new(2);
+        match std::env::var("SAIL_POOL").ok().map(|v| PoolMode::parse(&v)) {
+            Some(Ok(m)) => assert_eq!(pool.mode(), m, "pool must honor SAIL_POOL"),
+            _ => assert_eq!(pool.mode(), PoolMode::Steal, "steal is the default backend"),
+        }
     }
 
     #[test]
@@ -960,67 +1749,104 @@ mod tests {
     #[test]
     fn poisoned_item_is_a_typed_error_not_a_panic() {
         // The same poisoned item through the try_ entry point: a
-        // PoolError naming the item, no panic on the dispatcher thread.
-        for threads in [1usize, 2, 8] {
-            let pool = WorkerPool::with_policy(threads, &NumaPolicy::Off);
-            let err = pool
-                .try_run(6, |i| {
-                    assert!(i != 3, "poisoned item");
-                    i * 2
-                })
-                .unwrap_err();
-            assert!(
-                err.items.0 <= 3 && 3 < err.items.1,
-                "error range {:?} must cover the poisoned item (threads={threads})",
-                err.items
-            );
-            assert!(err.detail.contains("poisoned item"), "{err}");
-            assert!(err.to_string().contains("pool dispatch failed"), "{err}");
-            // The pool still serves.
-            assert_eq!(pool.try_run(4, |i| i).unwrap(), vec![0, 1, 2, 3]);
+        // PoolError naming the item, no panic on the dispatcher thread —
+        // on both backends.
+        for mode in [PoolMode::Steal, PoolMode::Channel] {
+            for threads in [1usize, 2, 8] {
+                let pool = WorkerPool::with_policy_mode(threads, &NumaPolicy::Off, mode);
+                let err = pool
+                    .try_run(6, |i| {
+                        assert!(i != 3, "poisoned item");
+                        i * 2
+                    })
+                    .unwrap_err();
+                assert!(
+                    err.items.0 <= 3 && 3 < err.items.1,
+                    "error range {:?} must cover the poisoned item (threads={threads} {mode:?})",
+                    err.items
+                );
+                assert!(err.detail.contains("poisoned item"), "{err}");
+                assert!(err.to_string().contains("pool dispatch failed"), "{err}");
+                // The pool still serves.
+                assert_eq!(pool.try_run(4, |i| i).unwrap(), vec![0, 1, 2, 3]);
+            }
         }
     }
 
     #[test]
     fn injected_worker_death_is_healed_and_results_recovered() {
-        let pool = WorkerPool::with_policy(4, &NumaPolicy::Off);
-        pool.arm_faults(Arc::new(FaultPlan::new(11).with(FaultKind::WorkerPanic, 1)));
-        // The first dequeued job dies with its worker; the dispatcher
-        // recovers the lost chunk inline — results stay bit-identical —
-        // and heal respawns the worker.
-        let got = pool.run(32, |i| i * 5);
-        assert_eq!(got, (0..32).map(|i| i * 5).collect::<Vec<_>>());
-        assert!(!pool.degraded(), "one death is well inside the budget");
-        assert_eq!(pool.respawned_workers(), 1, "heal must respawn the dead worker");
-        pool.disarm_faults();
-        // Full width serves again after the respawn.
-        let got = pool.run(16, |i| i + 7);
-        assert_eq!(got, (0..16).map(|i| i + 7).collect::<Vec<_>>());
+        for mode in [PoolMode::Steal, PoolMode::Channel] {
+            let pool = WorkerPool::with_policy_mode(4, &NumaPolicy::Off, mode);
+            pool.arm_faults(Arc::new(FaultPlan::new(11).with(FaultKind::WorkerPanic, 1)));
+            // The first claimed/dequeued job dies with its worker; the
+            // dispatcher recovers the lost work inline — results stay
+            // bit-identical — and heal respawns the worker.
+            let got = pool.run(32, |i| i * 5);
+            assert_eq!(got, (0..32).map(|i| i * 5).collect::<Vec<_>>(), "{mode:?}");
+            assert!(!pool.degraded(), "one death is well inside the budget ({mode:?})");
+            assert_eq!(pool.respawned_workers(), 1, "heal must respawn the dead worker");
+            pool.disarm_faults();
+            // Full width serves again after the respawn.
+            let got = pool.run(16, |i| i + 7);
+            assert_eq!(got, (0..16).map(|i| i + 7).collect::<Vec<_>>());
+        }
     }
 
     #[test]
     fn respawn_budget_exhaustion_degrades_to_serial_not_a_hang() {
-        let pool = WorkerPool::with_policy(2, &NumaPolicy::Off);
-        pool.set_respawn_budget(0);
-        // Both workers die on their first dequeue; with no budget the
-        // group empties, the pool degrades, and the dispatch must still
-        // return complete, correct results (inline recovery).
-        pool.arm_faults(Arc::new(
-            FaultPlan::new(3)
-                .with(FaultKind::WorkerPanic, 1)
-                .with(FaultKind::WorkerPanic, 2),
-        ));
-        let got = pool.run(8, |i| i * 3);
-        assert_eq!(got, (0..8).map(|i| i * 3).collect::<Vec<_>>());
-        assert!(pool.degraded(), "an empty group with no budget must latch degraded");
-        assert_eq!(pool.respawned_workers(), 0);
-        pool.disarm_faults();
-        // Degraded pools serve inline-serial: correct, and no new pooled
-        // generations are minted.
-        let gens = pool.generations();
-        let got = pool.run(8, |i| i + 1);
-        assert_eq!(got, (1..9).collect::<Vec<_>>());
-        assert_eq!(pool.generations(), gens, "degraded dispatch must not touch the queue");
+        for mode in [PoolMode::Steal, PoolMode::Channel] {
+            let pool = WorkerPool::with_policy_mode(2, &NumaPolicy::Off, mode);
+            pool.set_respawn_budget(0);
+            // Both workers die on their first dequeue; with no budget the
+            // group empties, the pool degrades, and the dispatch must
+            // still return complete, correct results (inline recovery).
+            pool.arm_faults(Arc::new(
+                FaultPlan::new(3)
+                    .with(FaultKind::WorkerPanic, 1)
+                    .with(FaultKind::WorkerPanic, 2),
+            ));
+            let got = pool.run(8, |i| i * 3);
+            assert_eq!(got, (0..8).map(|i| i * 3).collect::<Vec<_>>(), "{mode:?}");
+            assert!(pool.degraded(), "an empty group with no budget must latch degraded");
+            assert_eq!(pool.respawned_workers(), 0);
+            pool.disarm_faults();
+            // Degraded pools serve inline-serial: correct, and no new
+            // pooled generations are minted (the recovery probe fails
+            // while the budget stays 0).
+            let gens = pool.generations();
+            let got = pool.run(8, |i| i + 1);
+            assert_eq!(got, (1..9).collect::<Vec<_>>());
+            assert_eq!(pool.generations(), gens, "degraded dispatch must not touch the queue");
+        }
+    }
+
+    #[test]
+    fn degraded_pool_recovers_after_budget_top_up() {
+        // The one-way latch regression: a degraded pool whose budget is
+        // topped back up must un-latch via the per-dispatch recovery
+        // probe and dispatch pooled again.
+        for mode in [PoolMode::Steal, PoolMode::Channel] {
+            let pool = WorkerPool::with_policy_mode(2, &NumaPolicy::Off, mode);
+            pool.set_respawn_budget(0);
+            pool.arm_faults(Arc::new(
+                FaultPlan::new(7)
+                    .with(FaultKind::WorkerPanic, 1)
+                    .with(FaultKind::WorkerPanic, 2),
+            ));
+            let _ = pool.run(8, |i| i * 3);
+            assert!(pool.degraded(), "storm must degrade the pool ({mode:?})");
+            pool.disarm_faults();
+            pool.set_respawn_budget(4);
+            let gens = pool.generations();
+            let got = pool.run(8, |i| i + 1);
+            assert_eq!(got, (1..9).collect::<Vec<_>>(), "{mode:?}");
+            assert!(!pool.degraded(), "budget top-up must un-latch degraded ({mode:?})");
+            assert!(
+                pool.generations() > gens,
+                "recovered dispatch must be pooled, not inline ({mode:?})"
+            );
+            assert!(pool.respawned_workers() >= 1, "{mode:?}");
+        }
     }
 
     #[test]
@@ -1118,5 +1944,78 @@ mod tests {
         let got = pool.run(5, |i| i + 10);
         assert_eq!(got, vec![10, 11, 12, 13, 14]);
         assert!(pool.generations() >= 1);
+    }
+
+    #[test]
+    fn steal_and_channel_pools_agree_bit_identically() {
+        for threads in [2usize, 3, 8] {
+            let steal = WorkerPool::with_policy_mode(threads, &NumaPolicy::Off, PoolMode::Steal);
+            let chan =
+                WorkerPool::with_policy_mode(threads, &NumaPolicy::Off, PoolMode::Channel);
+            assert_eq!(steal.mode(), PoolMode::Steal);
+            assert_eq!(chan.mode(), PoolMode::Channel);
+            let ctx = Arc::new((0..91usize).map(|i| i as f32 * 0.37).collect::<Vec<_>>());
+            let a = steal.run_ctx(&ctx, 91, |d, i| d[i].sin().to_bits());
+            let b = chan.run_ctx(&ctx, 91, |d, i| d[i].sin().to_bits());
+            assert_eq!(a, b, "threads={threads}");
+        }
+        // Routed dispatch on a fake 2-node placement, both backends.
+        let policy = NumaPolicy::Explicit(vec![vec![0], vec![1]]);
+        let steal = WorkerPool::with_policy_mode(4, &policy, PoolMode::Steal);
+        let chan = WorkerPool::with_policy_mode(4, &policy, PoolMode::Channel);
+        let ctx = Arc::new((0..40usize).collect::<Vec<_>>());
+        let a = steal.run_ctx_routed(&ctx, 40, |_, i| i % 2, |d, i| d[i] * 11);
+        let b = chan.run_ctx_routed(&ctx, 40, |_, i| i % 2, |d, i| d[i] * 11);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn forced_steal_chaos_preserves_outputs_and_exactly_once() {
+        let pool = WorkerPool::with_policy_mode(4, &NumaPolicy::Off, PoolMode::Steal);
+        for seed in [1u64, 7, 0xDEAD_BEEF] {
+            pool.set_steal_chaos(Some(seed));
+            let counters: Arc<Vec<AtomicUsize>> =
+                Arc::new((0..64).map(|_| AtomicUsize::new(0)).collect());
+            let c = Arc::clone(&counters);
+            let got = pool.run(64, move |i| {
+                c[i].fetch_add(1, Ordering::Relaxed);
+                i * 17
+            });
+            assert_eq!(got, (0..64).map(|i| i * 17).collect::<Vec<_>>(), "seed={seed}");
+            for (i, c) in counters.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "seed={seed} item {i}");
+            }
+        }
+        pool.set_steal_chaos(None);
+        let got = pool.run(16, |i| i);
+        assert_eq!(got, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn steal_pool_reports_observability_counters() {
+        let pool = WorkerPool::with_policy_mode(4, &NumaPolicy::Off, PoolMode::Steal);
+        for _ in 0..4 {
+            let _ = pool.run(16, |i| i * 2);
+        }
+        let s = pool.pool_stats();
+        assert_eq!(s.backend, "steal");
+        assert_eq!(s.workers, 4);
+        assert_eq!(s.dispatches, 4);
+        assert_eq!(s.executed.len(), 4);
+        assert_eq!(
+            s.executed.iter().sum::<u64>() + s.inline_reclaims,
+            64,
+            "every item is executed by exactly one lane (or reclaimed)"
+        );
+        assert!(s.queue_depth_hwm >= 1, "enqueue must record injector depth");
+        assert!(s.dispatch_p50_us >= 0.0 && s.dispatch_p99_us >= s.dispatch_p50_us);
+        // Channel and serial pools identify themselves.
+        let chan = WorkerPool::with_policy_mode(2, &NumaPolicy::Off, PoolMode::Channel);
+        let _ = chan.run(8, |i| i);
+        let cs = chan.pool_stats();
+        assert_eq!(cs.backend, "channel");
+        assert_eq!(cs.dispatches, 1);
+        assert!(cs.executed.is_empty());
+        assert_eq!(WorkerPool::serial().pool_stats().backend, "serial");
     }
 }

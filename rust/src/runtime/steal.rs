@@ -1,0 +1,395 @@
+//! Work-stealing primitives for the lock-free dispatch path
+//! (ARCHITECTURE.md "Work distribution & weight reclamation").
+//!
+//! Three pieces, all `std`-only:
+//!
+//! - [`StealDeque`] — a fixed-capacity Chase–Lev deque over packed `u64`
+//!   task references. The owning worker pushes and pops at the bottom
+//!   (LIFO, cache-warm); thieves steal from the top (FIFO, oldest first).
+//!   Implemented entirely over `AtomicU64`/`AtomicI64` cells — no
+//!   `unsafe`, no `UnsafeCell` — so a lost steal race can only ever
+//!   *discard* a value it speculatively read, never observe a torn one.
+//! - [`BlockTable`] — a generation-checked registry mapping the 16-bit
+//!   slot of a [`TaskRef`] to the dispatch block it belongs to. Stale
+//!   references (their dispatch already completed) fail the generation
+//!   check and are dropped by whoever pops them; queues never need to be
+//!   drained on completion.
+//! - [`TaskRef`] — the packed `(slot, generation, item)` triple that
+//!   flows through deques and injectors.
+//!
+//! ## Why exactly-once survives stealing
+//!
+//! The deque alone is *not* the exactly-once mechanism. A task reference
+//! may linger in a queue after its item was reclaimed inline by the
+//! dispatcher, and a wrapped generation could in principle alias a new
+//! dispatch in the same table slot. Both are benign because execution is
+//! gated by a per-item claim CAS inside the dispatch block (see
+//! `runtime::pool`): whoever wins the `QUEUED → claimed` transition runs
+//! the item, everyone else skips. A duplicate or aliased reference can
+//! therefore at worst *help* execute a still-queued item of the aliased
+//! block — the same work, performed once.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Outcome of offering one task reference to a dispatch block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Processed {
+    /// The claim CAS was won and the item executed (or recorded a typed
+    /// per-item error). Counts toward the dispatch's completion epoch.
+    Executed,
+    /// The item was already claimed by someone else, or the reference was
+    /// stale; nothing ran.
+    Skipped,
+    /// A [`crate::runtime::FaultKind::WorkerPanic`] tick fired *after*
+    /// the claim was taken: the worker must exit immediately, leaving the
+    /// claim dangling for the dispatcher's dead-incarnation reclaim.
+    Die,
+}
+
+/// A dispatch block the steal path can execute items of.
+///
+/// Implemented by the pool's generic dispatch block; object-safe so the
+/// [`BlockTable`] can hold blocks of arbitrary context/result types.
+pub trait StealTask: Send + Sync {
+    /// Claim item `item` on behalf of worker incarnation `token` and, if
+    /// the claim is won, execute it.
+    ///
+    /// Invariants the implementation must uphold:
+    /// - at most one caller ever observes [`Processed::Executed`] or
+    ///   [`Processed::Die`] per item (claim CAS),
+    /// - an out-of-range `item` (possible only through generation
+    ///   aliasing) returns [`Processed::Skipped`].
+    fn process(&self, item: u32, token: u32) -> Processed;
+}
+
+/// Packed task reference: `slot:16 | generation:16 | item:32`.
+///
+/// `slot`/`generation` address a [`BlockTable`] entry; `item` is the
+/// item index within that dispatch block.
+pub type TaskRef = u64;
+
+/// Packs a table coordinate and item index into a [`TaskRef`].
+#[inline]
+pub fn pack_ref(slot: u16, generation: u16, item: u32) -> TaskRef {
+    ((slot as u64) << 48) | ((generation as u64) << 32) | item as u64
+}
+
+/// Splits a [`TaskRef`] back into `(slot, generation, item)`.
+#[inline]
+pub fn unpack_ref(r: TaskRef) -> (u16, u16, u32) {
+    ((r >> 48) as u16, (r >> 32) as u16, r as u32)
+}
+
+/// Capacity of every per-worker deque (power of two; overflow falls back
+/// to the unbounded per-node injector, so this bounds locality, not
+/// correctness).
+pub const DEQUE_CAPACITY: usize = 1024;
+
+/// A fixed-capacity Chase–Lev work-stealing deque over [`TaskRef`]s.
+///
+/// Usage contract (not enforceable by the type system without handles,
+/// and deliberately kept handle-free so respawned workers can adopt the
+/// deque of their dead predecessor): [`push`](Self::push) and
+/// [`pop`](Self::pop) are called only by the deque's current owner (one
+/// thread at a time); [`steal`](Self::steal) may be called from any
+/// thread concurrently. Violating the owner contract cannot cause memory
+/// unsafety (all cells are atomics) — it can only lose or duplicate
+/// *references*, which the claim CAS tolerates (see module docs).
+///
+/// Memory-ordering sketch (the classic Chase–Lev/Lê proof shape):
+/// - `push` publishes the slot with a `Release` store of `bottom`, so a
+///   thief that `Acquire`-loads `bottom` sees the slot contents;
+/// - `steal` separates its `top` and `bottom` loads with a `SeqCst`
+///   fence and commits via a `SeqCst` CAS on `top`; a stale slot read
+///   loses that CAS and the value is discarded;
+/// - `pop` reserves the bottom slot, fences, then re-checks `top`; the
+///   last remaining item is decided by the same CAS thieves use.
+pub struct StealDeque {
+    top: AtomicI64,
+    bottom: AtomicI64,
+    slots: Vec<AtomicU64>,
+}
+
+impl Default for StealDeque {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StealDeque {
+    /// Creates an empty deque of [`DEQUE_CAPACITY`] slots.
+    pub fn new() -> Self {
+        Self {
+            top: AtomicI64::new(0),
+            bottom: AtomicI64::new(0),
+            slots: (0..DEQUE_CAPACITY).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, index: i64) -> &AtomicU64 {
+        &self.slots[(index as u64 as usize) & (DEQUE_CAPACITY - 1)]
+    }
+
+    /// Owner-only: pushes `value` at the bottom. Returns `Err(value)`
+    /// when the deque is full (caller should overflow to an injector).
+    pub fn push(&self, value: TaskRef) -> Result<(), TaskRef> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        if b - t >= DEQUE_CAPACITY as i64 {
+            return Err(value);
+        }
+        self.slot(b).store(value, Ordering::Relaxed);
+        // Publish the slot before the new bottom becomes visible to
+        // thieves.
+        self.bottom.store(b + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner-only: pops the most recently pushed value (LIFO).
+    pub fn pop(&self) -> Option<TaskRef> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        self.bottom.store(b, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // Empty: restore bottom.
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let value = self.slot(b).load(Ordering::Relaxed);
+        if t == b {
+            // Last element: race thieves for it via the same CAS on top.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return won.then_some(value);
+        }
+        Some(value)
+    }
+
+    /// Any thread: steals the oldest value (FIFO). A lost race returns
+    /// `None` even when the deque is non-empty; callers retry or move on
+    /// to the next victim.
+    pub fn steal(&self) -> Option<TaskRef> {
+        let t = self.top.load(Ordering::Acquire);
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return None;
+        }
+        // Speculative read: the owner cannot recycle this physical slot
+        // while `top == t` (push refuses at `b - t == capacity`), and if
+        // another thief advanced `top` first our CAS below fails and the
+        // value is discarded.
+        let value = self.slot(t).load(Ordering::Relaxed);
+        self.top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed)
+            .ok()
+            .map(|_| value)
+    }
+
+    /// Approximate occupancy (racy; for observability only).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Relaxed);
+        (b - t).max(0) as usize
+    }
+
+    /// Whether the deque currently looks empty (racy snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+struct TableEntry {
+    generation: u16,
+    task: Option<Arc<dyn StealTask>>,
+}
+
+/// Generation-checked registry of in-flight dispatch blocks.
+///
+/// Every dispatch [`insert`](Self::insert)s its block, enqueues
+/// [`TaskRef`]s carrying the returned `(slot, generation)`, and
+/// [`remove`](Self::remove)s the block once all items completed — the
+/// generation bump at removal is what invalidates any references still
+/// sitting in queues. The interior `Mutex` is held only for the few
+/// pointer moves of a lookup; item execution happens outside it.
+#[derive(Default)]
+pub struct BlockTable {
+    inner: Mutex<TableInner>,
+}
+
+#[derive(Default)]
+struct TableInner {
+    entries: Vec<TableEntry>,
+    free: Vec<u16>,
+}
+
+impl BlockTable {
+    /// Creates an empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registers a dispatch block; returns its `(slot, generation)`
+    /// coordinate for packing into [`TaskRef`]s.
+    pub fn insert(&self, task: Arc<dyn StealTask>) -> (u16, u16) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(slot) = inner.free.pop() {
+            let e = &mut inner.entries[slot as usize];
+            e.task = Some(task);
+            (slot, e.generation)
+        } else {
+            let slot = inner.entries.len();
+            assert!(slot <= u16::MAX as usize, "more than 65536 concurrent dispatches");
+            inner.entries.push(TableEntry { generation: 0, task: Some(task) });
+            (slot as u16, 0)
+        }
+    }
+
+    /// Resolves a reference to its block; `None` when the reference is
+    /// stale (slot freed or generation bumped since it was packed).
+    pub fn lookup(&self, slot: u16, generation: u16) -> Option<Arc<dyn StealTask>> {
+        let inner = self.inner.lock().unwrap();
+        let e = inner.entries.get(slot as usize)?;
+        if e.generation != generation {
+            return None;
+        }
+        e.task.clone()
+    }
+
+    /// Unregisters a completed block, bumping the slot's generation so
+    /// lingering references to it go stale.
+    pub fn remove(&self, slot: u16, generation: u16) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(e) = inner.entries.get_mut(slot as usize) else { return };
+        if e.generation == generation && e.task.is_some() {
+            e.task = None;
+            e.generation = e.generation.wrapping_add(1);
+            inner.free.push(slot);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn refs_roundtrip_through_packing() {
+        for (s, g, i) in [(0u16, 0u16, 0u32), (7, 65535, 12345), (65535, 1, u32::MAX)] {
+            assert_eq!(unpack_ref(pack_ref(s, g, i)), (s, g, i));
+        }
+    }
+
+    #[test]
+    fn owner_sees_lifo_thieves_see_fifo() {
+        let d = StealDeque::new();
+        for v in 1..=4u64 {
+            d.push(v).unwrap();
+        }
+        assert_eq!(d.steal(), Some(1)); // oldest first
+        assert_eq!(d.pop(), Some(4)); // newest first
+        assert_eq!(d.steal(), Some(2));
+        assert_eq!(d.pop(), Some(3));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+    }
+
+    #[test]
+    fn push_overflows_at_capacity() {
+        let d = StealDeque::new();
+        for v in 0..DEQUE_CAPACITY as u64 {
+            d.push(v).unwrap();
+        }
+        assert_eq!(d.push(999), Err(999));
+        assert_eq!(d.steal(), Some(0));
+        d.push(999).unwrap();
+    }
+
+    #[test]
+    fn concurrent_thieves_take_each_value_exactly_once() {
+        let d = Arc::new(StealDeque::new());
+        let n = 4000u64;
+        let seen: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let d = Arc::clone(&d);
+                let seen = Arc::clone(&seen);
+                s.spawn(move || loop {
+                    match d.steal() {
+                        Some(v) if v == u64::MAX => break,
+                        Some(v) => {
+                            seen[v as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => std::hint::spin_loop(),
+                    }
+                });
+            }
+            // Owner: interleave pushes with occasional pops.
+            let mut next = 0u64;
+            while next < n {
+                if d.push(next).is_ok() {
+                    next += 1;
+                    if next % 7 == 0 {
+                        if let Some(v) = d.pop() {
+                            seen[v as usize].fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+            // Drain what the thieves left, then post one sentinel per
+            // thief.
+            while let Some(v) = d.pop() {
+                seen[v as usize].fetch_add(1, Ordering::Relaxed);
+            }
+            loop {
+                let remaining =
+                    seen.iter().filter(|c| c.load(Ordering::Relaxed) == 0).count();
+                if remaining == 0 {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+            for _ in 0..4 {
+                while d.push(u64::MAX).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+        });
+        for (v, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "value {v} seen != once");
+        }
+    }
+
+    #[test]
+    fn table_generations_invalidate_stale_refs() {
+        struct Nop;
+        impl StealTask for Nop {
+            fn process(&self, _item: u32, _token: u32) -> Processed {
+                Processed::Skipped
+            }
+        }
+        let t = BlockTable::new();
+        let (s0, g0) = t.insert(Arc::new(Nop));
+        assert!(t.lookup(s0, g0).is_some());
+        t.remove(s0, g0);
+        assert!(t.lookup(s0, g0).is_none(), "removed block must go stale");
+        let (s1, g1) = t.insert(Arc::new(Nop));
+        assert_eq!(s1, s0, "slot is recycled");
+        assert_ne!(g1, g0, "generation must differ on reuse");
+        assert!(t.lookup(s1, g1).is_some());
+        assert!(t.lookup(s0, g0).is_none());
+        // Double-remove with a stale generation is a no-op.
+        t.remove(s0, g0);
+        assert!(t.lookup(s1, g1).is_some());
+    }
+}

@@ -50,7 +50,7 @@ fn gemv_exactness_projection_shapes() {
         let eng = LutGemvEngine::new(wt, 4);
         let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
         let qx = QuantizedVector::quantize(&x);
-        assert_eq!(eng.gemv(&qx), reference_gemv(eng.weights(), &qx), "{level}");
+        assert_eq!(eng.gemv(&qx), reference_gemv(&eng.weights(), &qx), "{level}");
     }
 }
 

@@ -1,0 +1,362 @@
+//! Conformance suite for the work-stealing dispatch backend and the
+//! epoch-based weight-reclamation path it enables.
+//!
+//! Four properties, each load-bearing for the steal pool being the
+//! default backend:
+//!
+//! 1. **Steal-schedule bit-identity.** For seeded weights and
+//!    activations, `LutGemvEngine` output *and* `GemvStats` are
+//!    bit-for-bit identical across backends (steal / channel / serial),
+//!    widths, NUMA placements, forced-steal chaos schedules, and healing
+//!    worker-panic plans. The steal deque may reorder execution
+//!    arbitrarily; none of that order is allowed to reach the numerics.
+//! 2. **Exactly-once execution.** Under forced steals and mid-dispatch
+//!    worker panics, every item of every dispatch executes exactly once
+//!    (counted with per-item atomics) — no drop, no double-run.
+//! 3. **Hot-swap mid-stream.** A live `ServingFrontend` swaps weight
+//!    generations between iterations: streams admitted before the swap
+//!    finish bit-identical to an offline oracle on the *old* weights,
+//!    streams admitted after match an oracle on the *new* weights, no
+//!    request faults, and the retired generation is reclaimed (observed
+//!    via `ServingMetrics::reclaim`).
+//! 4. **Reclamation soak.** Concurrent readers race `publish_weights`:
+//!    every whole GEMV output matches exactly one published generation
+//!    (no torn mix of old and new weights), and when the dust settles
+//!    every retired snapshot has been dropped — no leak, no ABA.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Weak};
+use std::thread;
+
+use sail::coordinator::{
+    Batcher, BatcherConfig, FinishReason, Request, RequestId, ServingConfig, ServingFrontend,
+    StreamEvent, TransformerServeEngine,
+};
+use sail::lutgemv::engine::reference_gemv;
+use sail::lutgemv::{GemvOutput, LutGemvEngine};
+use sail::model::{DecodeSpec, KvCacheSpec};
+use sail::quant::{QuantLevel, QuantizedMatrix, QuantizedVector};
+use sail::runtime::{FaultKind, FaultPlan, NumaPolicy, PoolMode, WorkerPool};
+use sail::util::Prng;
+
+/// Seeded GEMV problem shared by the dispatch-level tests. Rebuilt from
+/// the same PRNG stream on every call, so two calls yield bit-identical
+/// weights and activations without requiring `Clone` anywhere.
+fn gemv_problem(seed: u64) -> (QuantizedMatrix, Vec<QuantizedVector>) {
+    let mut prng = Prng::new(seed);
+    let (n, k, group) = (16, 64, 32);
+    let w: Vec<f32> = (0..n * k).map(|_| prng.normal() as f32).collect();
+    let wt = QuantizedMatrix::quantize(&w, n, k, QuantLevel::Q4, group);
+    let xs = (0..4)
+        .map(|_| {
+            let x: Vec<f32> = (0..k).map(|_| prng.normal() as f32).collect();
+            QuantizedVector::quantize(&x)
+        })
+        .collect();
+    (wt, xs)
+}
+
+/// A fake two-node NUMA map over `width` workers, so placement-aware
+/// steal ordering (own deque → same node → cross-node) genuinely kicks
+/// in on single-node CI hosts.
+fn fake_two_node(width: usize) -> NumaPolicy {
+    let split = width.div_ceil(2);
+    NumaPolicy::Explicit(vec![(0..split).collect(), (split..width).collect()])
+}
+
+/// Property 1: the steal backend is schedule-invisible. Outputs and
+/// stats from steal and channel pools — across widths, placements,
+/// forced-steal chaos seeds, and a healing worker-panic plan — all equal
+/// the naive reference and each other.
+#[test]
+fn steal_schedules_are_bit_identical_to_channel_and_reference() {
+    let (wt_ref, xs) = gemv_problem(2026);
+    let want: Vec<Vec<f32>> = xs.iter().map(|x| reference_gemv(&wt_ref, x)).collect();
+
+    let mut baseline_stats = None;
+    for width in [1usize, 2, 8] {
+        for numa in [false, true] {
+            if numa && width < 2 {
+                // A two-node map needs at least one worker per node.
+                continue;
+            }
+            let policy = if numa { fake_two_node(width) } else { NumaPolicy::Off };
+            for chaos in [None, Some(7u64), Some(21)] {
+                for faults in [false, true] {
+                    for mode in [PoolMode::Steal, PoolMode::Channel] {
+                        let ctx = format!(
+                            "width {width} numa {numa} chaos {chaos:?} faults {faults} {mode:?}"
+                        );
+                        let pool = WorkerPool::with_policy_mode(width, &policy, mode);
+                        pool.set_steal_chaos(chaos);
+                        let plan = Arc::new(
+                            FaultPlan::new(31 + width as u64)
+                                .with_seeded(FaultKind::WorkerPanic, 6, 0),
+                        );
+                        if faults {
+                            pool.arm_faults(Arc::clone(&plan));
+                        }
+                        let (wt, _) = gemv_problem(2026);
+                        let eng = LutGemvEngine::with_pool(wt, 3, &pool);
+                        let mut out = GemvOutput::new();
+                        let stats = eng
+                            .gemv_batch_into(&xs, &pool, &mut out)
+                            .unwrap_or_else(|e| panic!("dispatch failed ({ctx}): {e}"));
+                        pool.disarm_faults();
+                        for (bi, want_row) in want.iter().enumerate() {
+                            assert_eq!(
+                                out.row(bi),
+                                want_row.as_slice(),
+                                "row {bi} desynced from reference ({ctx})"
+                            );
+                        }
+                        match &baseline_stats {
+                            None => baseline_stats = Some(stats),
+                            Some(base) => assert_eq!(
+                                &stats, base,
+                                "GemvStats leaked the dispatch schedule ({ctx})"
+                            ),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property 2: exactly-once execution under forced steals and worker
+/// panics. Each dispatched item bumps its own atomic counter; after
+/// several chaotic rounds every counter equals the round count exactly.
+#[test]
+fn chaos_and_panics_never_drop_or_double_run_items() {
+    const ITEMS: usize = 64;
+    const ROUNDS: u32 = 5;
+    for width in [2usize, 8] {
+        for chaos_seed in [3u64, 17, 40] {
+            let pool =
+                WorkerPool::with_policy_mode(width, &fake_two_node(width), PoolMode::Steal);
+            pool.set_steal_chaos(Some(chaos_seed));
+            let plan = Arc::new(
+                FaultPlan::new(chaos_seed).with_seeded(FaultKind::WorkerPanic, 5, 0),
+            );
+            pool.arm_faults(Arc::clone(&plan));
+            let counters: Arc<Vec<AtomicU32>> =
+                Arc::new((0..ITEMS).map(|_| AtomicU32::new(0)).collect());
+            for _ in 0..ROUNDS {
+                let got = pool.run_ctx(&counters, ITEMS, |c, i| {
+                    c[i].fetch_add(1, Ordering::SeqCst);
+                    i
+                });
+                assert_eq!(got, (0..ITEMS).collect::<Vec<_>>());
+            }
+            pool.disarm_faults();
+            for (i, c) in counters.iter().enumerate() {
+                assert_eq!(
+                    c.load(Ordering::SeqCst),
+                    ROUNDS,
+                    "item {i} ran a wrong number of times \
+                     (width {width} chaos {chaos_seed}, degraded={})",
+                    pool.degraded()
+                );
+            }
+        }
+    }
+}
+
+const SEED_OLD: u64 = common::SEED;
+const SEED_NEW: u64 = 4242;
+
+fn swap_spec() -> DecodeSpec {
+    common::tiny_spec(2, KvCacheSpec::q8())
+}
+
+fn pre_swap_requests() -> Vec<Request> {
+    vec![Request::new(0, vec![3, 7], 5), Request::new(1, vec![9, 2, 4], 6)]
+}
+
+fn post_swap_requests() -> Vec<Request> {
+    (10..16u64)
+        .map(|id| {
+            let plen = 1 + (id as usize % 3);
+            let prompt: Vec<i32> = (0..plen).map(|p| 2 + id as i32 + p as i32).collect();
+            Request::new(id, prompt, 4 + id as usize % 3)
+        })
+        .collect()
+}
+
+/// Offline oracle for one weight generation: the requests through
+/// `run_to_completion` on a serial fault-free pool.
+fn generation_oracle(
+    seed: u64,
+    requests: Vec<Request>,
+) -> HashMap<RequestId, (Vec<i32>, FinishReason)> {
+    let engine =
+        TransformerServeEngine::random(swap_spec(), seed, 2, WorkerPool::shared(1)).unwrap();
+    let cfg = BatcherConfig { prefill_chunk: 1, ..BatcherConfig::default() };
+    let mut b = Batcher::new(engine, cfg);
+    for r in requests {
+        b.submit(r);
+    }
+    b.run_to_completion()
+        .unwrap()
+        .into_iter()
+        .map(|r| (r.id, (r.tokens, r.finish)))
+        .collect()
+}
+
+/// Property 3: a live weight swap is generation-exact. Streams admitted
+/// before the swap finish on the old weights, streams admitted after run
+/// on the new ones, nothing faults, and the old generation is reclaimed.
+#[test]
+fn hot_swap_mid_stream_is_generation_exact_and_reclaims() {
+    let want_old = generation_oracle(SEED_OLD, pre_swap_requests());
+    let want_new = generation_oracle(SEED_NEW, post_swap_requests());
+    assert!(want_old.values().chain(want_new.values()).all(|(t, f)| {
+        !t.is_empty() && *f == FinishReason::MaxTokens
+    }));
+
+    for width in [1usize, 4] {
+        let ctx = format!("width {width}");
+        let engine = TransformerServeEngine::random(
+            swap_spec(),
+            SEED_OLD,
+            2,
+            WorkerPool::shared(width),
+        )
+        .unwrap();
+        let fe = ServingFrontend::spawn(engine, ServingConfig::default());
+
+        // Admit both pre-swap requests and *observe* a first token from
+        // each, so the swap below provably lands mid-stream: both slots
+        // hold old-generation KV state when the new weights arrive.
+        let pre: Vec<_> = pre_swap_requests()
+            .into_iter()
+            .map(|r| fe.submit(r).unwrap())
+            .collect();
+        let mut first_tokens = Vec::new();
+        for h in &pre {
+            match h.recv().unwrap() {
+                StreamEvent::Token(t) => first_tokens.push((h.id, t)),
+                StreamEvent::Done(r) => {
+                    panic!("request {} finished before the swap ({ctx}): {r:?}", h.id)
+                }
+            }
+        }
+
+        fe.swap_weights(SEED_NEW).unwrap();
+
+        let post: Vec<_> = post_swap_requests()
+            .into_iter()
+            .map(|r| fe.submit(r).unwrap())
+            .collect();
+
+        // Pre-swap streams must finish on the OLD weights, untouched by
+        // the swap. (The first token was consumed above, so `wait`'s
+        // streamed tail is the response minus that token.)
+        for h in pre {
+            let id = h.id;
+            let (tail, resp) = h.wait().unwrap();
+            let first = first_tokens.iter().find(|(i, _)| *i == id).unwrap().1;
+            assert_eq!(resp.tokens.first(), Some(&first), "{ctx}");
+            assert_eq!(tail, resp.tokens[1..], "stream {id} desynced ({ctx})");
+            let (want_tokens, want_finish) = &want_old[&id];
+            assert_eq!(
+                (&resp.tokens, &resp.finish),
+                (want_tokens, want_finish),
+                "pre-swap stream {id} left its weight generation ({ctx})"
+            );
+        }
+        // Post-swap streams must match the NEW-generation oracle.
+        for h in post {
+            let id = h.id;
+            let (streamed, resp) = h.wait().unwrap();
+            assert_eq!(streamed, resp.tokens, "stream {id} desynced ({ctx})");
+            let (want_tokens, want_finish) = &want_new[&id];
+            assert_eq!(
+                (&resp.tokens, &resp.finish),
+                (want_tokens, want_finish),
+                "post-swap stream {id} is not on the new weights ({ctx})"
+            );
+        }
+
+        let metrics = fe.shutdown();
+        assert_eq!(metrics.completed, 8, "{ctx}");
+        assert_eq!(
+            (metrics.shed, metrics.deadline_exceeded, metrics.engine_faults),
+            (0, 0, 0),
+            "{ctx}"
+        );
+        let pool = metrics.pool.as_ref().unwrap_or_else(|| panic!("no pool snapshot ({ctx})"));
+        assert!(pool.dispatches > 0, "{ctx}");
+        let rs = metrics
+            .reclaim
+            .unwrap_or_else(|| panic!("no reclaim snapshot ({ctx})"));
+        assert!(rs.retired >= 1, "old generation never retired ({ctx})");
+        assert_eq!(rs.reclaimed, rs.retired, "retired generation leaked ({ctx})");
+        assert_eq!((rs.pending, rs.active_pins), (0, 0), "{ctx}");
+    }
+}
+
+/// Property 4: reclamation soak. Readers hammer the GEMV path while the
+/// main thread republishes two alternating weight generations. Every
+/// whole output must match exactly one generation's reference (pinned
+/// snapshots are immutable — a torn old/new mix is impossible to
+/// produce without breaking the epoch), and afterwards every retired
+/// snapshot has been dropped.
+#[test]
+fn publish_soak_has_no_torn_reads_and_reclaims_every_generation() {
+    const PUBLISHES: usize = 20;
+    let (wt0, xs) = gemv_problem(77);
+    let (wt1_src, _) = gemv_problem(78);
+    let want0: Vec<Vec<f32>> = xs.iter().map(|x| reference_gemv(&wt0, x)).collect();
+    let want1: Vec<Vec<f32>> = xs.iter().map(|x| reference_gemv(&wt1_src, x)).collect();
+
+    let pool = Arc::new(WorkerPool::with_policy_mode(4, &NumaPolicy::Off, PoolMode::Steal));
+    let eng = Arc::new(LutGemvEngine::with_pool(wt0, 3, &pool));
+    let stale: Weak<QuantizedMatrix> = Arc::downgrade(&eng.weights());
+    let xs = Arc::new(xs);
+    let want0 = Arc::new(want0);
+    let want1 = Arc::new(want1);
+
+    let readers: Vec<_> = (0..2)
+        .map(|r| {
+            let (eng, pool, xs) = (Arc::clone(&eng), Arc::clone(&pool), Arc::clone(&xs));
+            let (want0, want1) = (Arc::clone(&want0), Arc::clone(&want1));
+            thread::spawn(move || {
+                let mut out = GemvOutput::new();
+                for it in 0..200 {
+                    eng.gemv_batch_into(&xs, &pool, &mut out).unwrap();
+                    let whole_gen = [&want0, &want1].iter().position(|want| {
+                        (0..xs.len()).all(|bi| out.row(bi) == want[bi].as_slice())
+                    });
+                    assert!(
+                        whole_gen.is_some(),
+                        "reader {r} iteration {it}: output is a torn mix of generations"
+                    );
+                }
+            })
+        })
+        .collect();
+
+    for i in 0..PUBLISHES {
+        let (src, _) = if i % 2 == 0 { gemv_problem(78) } else { gemv_problem(77) };
+        eng.publish_weights(src, &pool).unwrap();
+    }
+    for r in readers {
+        r.join().unwrap();
+    }
+    // Readers are gone; one collect pass (piggybacked on a throwaway
+    // GEMV's guard drop) must leave nothing pending.
+    let _ = eng.gemv_batch_into(&xs, &pool, &mut GemvOutput::new()).unwrap();
+    let rs = eng.reclaim_stats();
+    assert_eq!(rs.retired, PUBLISHES as u64, "one retire per publish");
+    assert_eq!(rs.reclaimed, rs.retired, "retired snapshots leaked");
+    assert_eq!((rs.pending, rs.active_pins), (0, 0));
+    assert!(
+        stale.upgrade().is_none(),
+        "the original weight generation is still reachable after {PUBLISHES} publishes"
+    );
+}

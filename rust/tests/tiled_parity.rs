@@ -57,7 +57,7 @@ fn tiled_backend_bit_identical_property() {
             let (serial, serial_stats) = eng.gemv_batch(&xs);
             // Scalar engine vs naive reference, bit-for-bit.
             for (bi, x) in xs.iter().enumerate() {
-                let want = reference_gemv(eng.weights(), x);
+                let want = reference_gemv(&eng.weights(), x);
                 if serial.row(bi) != want.as_slice() {
                     return Err(format!("scalar vs reference mismatch at level={level} nbw={nbw}"));
                 }
